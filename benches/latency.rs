@@ -1,0 +1,69 @@
+//! Bench L1 (DESIGN.md §4): the latency column and the real-time claim —
+//! cycle counts per system (analytic vs simulated), achievable sample
+//! rates at 6/12 MHz, and RTL-simulation wall-time per sample.
+//!
+//! ```text
+//! cargo bench --bench latency
+//! ```
+
+use dimsynth::bench_util::{bench_auto, section};
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::newton::{corpus, load_entry};
+use dimsynth::pisearch::analyze_optimized;
+use dimsynth::rtl::{self, Policy};
+use dimsynth::stim::Lfsr32;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    section("cycle counts and sample rates");
+    println!(
+        "{:<24} {:>8} {:>8} {:>12} {:>12} {:>10}",
+        "system", "analytic", "sim", "rate@6MHz", "rate@12MHz", "paper"
+    );
+    let paper = [
+        ("beam", 115),
+        ("pendulum", 115),
+        ("fluid_pipe", 188),
+        ("unpowered_flight", 81),
+        ("vibrating_string", 183),
+        ("warm_vibrating_string", 269),
+        ("spring_mass", 115),
+    ];
+    for e in corpus() {
+        let model = load_entry(&e)?;
+        let analysis = analyze_optimized(&model, e.target)?;
+        let design = rtl::build(&analysis, Q16_15);
+        let analytic = rtl::module_latency(&design, Policy::ParallelPerPi);
+        let inputs = vec![Q16_15.one(); design.num_inputs()];
+        let sim = rtl::run_once(&design, &inputs);
+        assert_eq!(analytic, sim.cycles, "{}: sim/schedule divergence", e.id);
+        let p = paper.iter().find(|(id, _)| *id == e.id).map(|(_, c)| *c).unwrap();
+        println!(
+            "{:<24} {:>8} {:>8} {:>12.0} {:>12.0} {:>10}",
+            e.id,
+            analytic,
+            sim.cycles,
+            6.0e6 / analytic as f64,
+            12.0e6 / analytic as f64,
+            p
+        );
+        assert!(analytic < 300, "{}: >300 cycles", e.id);
+    }
+
+    section("RTL-simulation wall time per sample (cycle-accurate model)");
+    let budget = Duration::from_millis(400);
+    for e in corpus() {
+        let model = load_entry(&e)?;
+        let analysis = analyze_optimized(&model, e.target)?;
+        let design = rtl::build(&analysis, Q16_15);
+        let mut rng = Lfsr32::new(0xA5);
+        let r = bench_auto(&format!("rtl-sim {}", e.id), budget, || {
+            let inputs: Vec<i64> = (0..design.num_inputs())
+                .map(|_| Q16_15.from_f64(rng.range(0.25, 8.0)))
+                .collect();
+            let _ = rtl::run_once(&design, &inputs);
+        });
+        println!("{r}");
+    }
+    Ok(())
+}

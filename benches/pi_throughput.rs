@@ -1,0 +1,95 @@
+//! Bench P1 (DESIGN.md §4): Π-path throughput — the three bit-identical
+//! Π implementations (native fixed point, AOT Pallas kernel via PJRT,
+//! cycle-accurate RTL simulation) across batch sizes, plus end-to-end
+//! coordinator throughput.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```text
+//! cargo bench --bench pi_throughput
+//! ```
+
+use dimsynth::bench_util::{bench_auto, section};
+use dimsynth::fixedpoint::{self, Q16_15};
+use dimsynth::newton::by_id;
+use dimsynth::report::export::export_system;
+use dimsynth::rtl;
+use dimsynth::runtime::{engine, Engine};
+use dimsynth::stim::Lfsr32;
+use std::time::Duration;
+
+const SYSTEM: &str = "unpowered_flight";
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let export = export_system(SYSTEM, Q16_15)?;
+    let e = by_id(SYSTEM).unwrap();
+    let model = dimsynth::newton::load_entry(&e)?;
+    let analysis = dimsynth::pisearch::analyze_optimized(&model, e.target)?;
+    let design = rtl::build(&analysis, Q16_15);
+    let kp = export.ports.len();
+
+    let mut rng = Lfsr32::new(0xF00D);
+    let batch: Vec<Vec<i64>> = (0..64)
+        .map(|_| (0..kp).map(|_| Q16_15.from_f64(rng.range(0.25, 8.0))).collect())
+        .collect();
+    let budget = Duration::from_millis(500);
+
+    section(&format!("Π computation paths — {SYSTEM} (batch of 64)"));
+    let r = bench_auto("native fixed point (64 samples)", budget, || {
+        for s in &batch {
+            for exps in &export.exponents {
+                std::hint::black_box(fixedpoint::eval_monomial(Q16_15, s, exps));
+            }
+        }
+    });
+    println!("{r}   → {:.2} Msamples/s", 64.0 * r.per_sec() / 1e6);
+
+    let mut eng = Engine::new("artifacts")?;
+    let pi1 = eng.load(&format!("pi_{SYSTEM}_b1"))?;
+    let pi64 = eng.load(&format!("pi_{SYSTEM}_b64"))?;
+    let flat: Vec<i64> = batch.iter().flatten().copied().collect();
+    let lit64 = engine::i32_matrix(64, kp, &flat)?;
+    let r = bench_auto("pallas/PJRT b=64 (64 samples)", budget, || {
+        std::hint::black_box(pi64.run(std::slice::from_ref(&lit64)).unwrap());
+    });
+    println!("{r}   → {:.2} ksamples/s", 64.0 * r.per_sec() / 1e3);
+    let lit1 = engine::i32_matrix(1, kp, &batch[0])?;
+    let r = bench_auto("pallas/PJRT b=1  (1 sample)", budget, || {
+        std::hint::black_box(pi1.run(std::slice::from_ref(&lit1)).unwrap());
+    });
+    println!("{r}   → {:.2} ksamples/s", r.per_sec() / 1e3);
+
+    let r = bench_auto("rtl cycle-accurate sim (1 sample)", budget, || {
+        std::hint::black_box(rtl::run_once(&design, &batch[0]));
+    });
+    let cycles = rtl::module_latency(&design, rtl::Policy::ParallelPerPi);
+    println!(
+        "{r}   → {:.1} ksamples/s ({:.1} Mcycles/s simulated)",
+        r.per_sec() / 1e3,
+        cycles as f64 * r.per_sec() / 1e6
+    );
+
+    section("gate-level sim (power-analysis path, 1 sample)");
+    let mapped = dimsynth::synth::map_design(&design);
+    let r = bench_auto("gate-level netlist sim", Duration::from_millis(800), || {
+        let mut sim = dimsynth::synth::GateSim::new(&mapped.netlist);
+        for (p, v) in design.ports.iter().zip(&batch[0]) {
+            sim.set_bus(&format!("in_{}", p.name), *v);
+        }
+        sim.set_bus("start", 1);
+        sim.step();
+        sim.set_bus("start", 0);
+        while !sim.get_bit("done") {
+            sim.step();
+        }
+    });
+    println!(
+        "{r}   → {:.2} Mcell-cycles/s",
+        (mapped.luts + mapped.dffs) as f64 * cycles as f64 * r.per_sec() / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Bench A1 (DESIGN.md §4): scheduling-policy ablation.
+//!
+//! The paper's design parallelizes across Π products and serializes ops
+//! within each product. This ablation compares it against a fully serial
+//! schedule (one shared datapath) on latency, and quantifies the area
+//! cost of the parallel choice, plus the effect of the cost-directed
+//! basis optimization (pisearch::reduce) on latency.
+//!
+//! ```text
+//! cargo bench --bench sched_ablation
+//! ```
+
+use dimsynth::bench_util::section;
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::newton::{corpus, load_entry};
+use dimsynth::pisearch::{self, CostModel};
+use dimsynth::rtl::{self, Policy};
+use dimsynth::synth;
+
+fn main() -> anyhow::Result<()> {
+    section("scheduling policy: parallel-per-Π (paper) vs fully-serial");
+    println!(
+        "{:<24} {:>4} {:>12} {:>12} {:>10} {:>12}",
+        "system", "N", "par cycles", "ser cycles", "ser/par", "par cells"
+    );
+    for e in corpus() {
+        let model = load_entry(&e)?;
+        let analysis = pisearch::analyze_optimized(&model, e.target)?;
+        let design = rtl::build(&analysis, Q16_15);
+        let par = rtl::module_latency(&design, Policy::ParallelPerPi);
+        let ser = rtl::module_latency(&design, Policy::FullySerial);
+        let cells = synth::map_design(&design).lut4_cells;
+        println!(
+            "{:<24} {:>4} {:>12} {:>12} {:>10.2} {:>12}",
+            e.id,
+            analysis.n(),
+            par,
+            ser,
+            ser as f64 / par as f64,
+            cells
+        );
+        assert!(ser >= par);
+    }
+
+    section("basis optimization: raw Buckingham basis vs cost-directed");
+    println!(
+        "{:<24} {:>14} {:>14} {:>10}",
+        "system", "raw cycles", "optimized", "gain"
+    );
+    for e in corpus() {
+        let model = load_entry(&e)?;
+        let raw = pisearch::analyze(&model, e.target)?;
+        let mut opt = raw.clone();
+        pisearch::optimize(&mut opt, &CostModel::default());
+        let d_raw = rtl::build(&raw, Q16_15);
+        let d_opt = rtl::build(&opt, Q16_15);
+        let l_raw = rtl::module_latency(&d_raw, Policy::ParallelPerPi);
+        let l_opt = rtl::module_latency(&d_opt, Policy::ParallelPerPi);
+        println!(
+            "{:<24} {:>14} {:>14} {:>9.0}%",
+            e.id,
+            l_raw,
+            l_opt,
+            100.0 * (l_raw as f64 - l_opt as f64) / l_raw as f64
+        );
+        assert!(l_opt <= l_raw, "{}: optimization regressed latency", e.id);
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Bench T1 (DESIGN.md §4): regenerate the paper's Table 1 and time each
+//! stage of the synthesis flow.
+//!
+//! ```text
+//! cargo bench --bench table1
+//! ```
+
+use dimsynth::bench_util::{bench_auto, section};
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::newton::{corpus, load_entry};
+use dimsynth::pisearch::analyze_optimized;
+use dimsynth::report;
+use dimsynth::rtl;
+use dimsynth::synth;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    section("Table 1 — reproduced vs paper (measured in parentheses = paper)");
+    let rows = report::generate_table(Q16_15, 4)?;
+    println!("{}", report::render_markdown(&rows));
+
+    section("shape checks (paper §3.A prose)");
+    let get = |id: &str| rows.iter().find(|r| r.id == id).unwrap();
+    let checks: Vec<(&str, bool)> = vec![
+        ("all latencies < 300 cycles", rows.iter().all(|r| r.latency_cycles < 300)),
+        ("all P@12MHz < 6.5 mW", rows.iter().all(|r| r.power_12mhz_mw < 6.5)),
+        ("all P@6MHz ≥ 1.0 mW order", rows.iter().all(|r| r.power_6mhz_mw > 0.3)),
+        (
+            ">10k samples/s at 6 MHz",
+            rows.iter().all(|r| 6.0e6 / r.latency_cycles as f64 > 10_000.0),
+        ),
+        (
+            "flight finishes faster than pendulum (parallel Π datapaths)",
+            get("unpowered_flight").latency_cycles < get("pendulum").latency_cycles,
+        ),
+        (
+            "fluid-in-pipe is the largest design",
+            rows.iter().all(|r| r.lut4_cells <= get("fluid_pipe").lut4_cells),
+        ),
+        (
+            "pendulum and spring-mass are the smallest designs",
+            {
+                let mut cells: Vec<(usize, &str)> =
+                    rows.iter().map(|r| (r.lut4_cells, r.id.as_str())).collect();
+                cells.sort();
+                let low2: Vec<&str> = cells[..2].iter().map(|c| c.1).collect();
+                low2.contains(&"pendulum") && low2.contains(&"spring_mass")
+            },
+        ),
+        (
+            "Fmax in the paper's 15–18 MHz band",
+            rows.iter().all(|r| r.fmax_mhz > 14.0 && r.fmax_mhz < 18.5),
+        ),
+    ];
+    let mut all = true;
+    for (name, ok) in checks {
+        println!("  [{}] {name}", if ok { "PASS" } else { "FAIL" });
+        all &= ok;
+    }
+    assert!(all, "Table-1 shape checks failed");
+
+    section("flow-stage timings (pendulum)");
+    let e = corpus().into_iter().find(|e| e.id == "pendulum").unwrap();
+    let budget = Duration::from_millis(300);
+    let model = load_entry(&e)?;
+    println!("{}", bench_auto("frontend: parse+sema", budget, || {
+        let _ = load_entry(&e).unwrap();
+    }));
+    let analysis = analyze_optimized(&model, e.target)?;
+    println!("{}", bench_auto("pisearch: nullspace+optimize", budget, || {
+        let _ = analyze_optimized(&model, e.target).unwrap();
+    }));
+    let design = rtl::build(&analysis, Q16_15);
+    println!("{}", bench_auto("rtl: build+emit verilog", budget, || {
+        let d = rtl::build(&analysis, Q16_15);
+        let _ = rtl::verilog::emit(&d);
+    }));
+    println!("{}", bench_auto("synth: lower+opt+techmap", budget, || {
+        let _ = synth::map_design(&design);
+    }));
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Bench A2 (DESIGN.md §4): fixed-point width sweep.
+//!
+//! The paper: "The compiler backend is fully parametric with respect to
+//! the length of the fixed point representation … This will allow future
+//! designs to tailor the precision of the compute modules to the
+//! requirements of the inference algorithms." This bench quantifies that
+//! design space on the pendulum and beam systems: cells / Fmax / latency
+//! / Π accuracy (vs f64) as the format sweeps Q8.7 → Q24.23.
+//!
+//! ```text
+//! cargo bench --bench width_sweep
+//! ```
+
+use dimsynth::bench_util::section;
+use dimsynth::fixedpoint::{self, QFormat};
+use dimsynth::newton::{by_id, load_entry};
+use dimsynth::pisearch::analyze_optimized;
+use dimsynth::rtl::{self, Policy};
+use dimsynth::stim::{self, Lfsr32};
+use dimsynth::synth;
+use dimsynth::timing::{self, ICE40_LP};
+
+const FORMATS: [(u32, u32); 5] = [(8, 7), (12, 11), (16, 15), (20, 19), (24, 23)];
+
+fn main() -> anyhow::Result<()> {
+    for sys in ["pendulum", "beam"] {
+        section(&format!("width sweep — {sys}"));
+        println!(
+            "{:<8} {:>7} {:>9} {:>9} {:>9} {:>12} {:>14}",
+            "format", "width", "cells", "Fmax", "latency", "rel err", "range ok %"
+        );
+        let e = by_id(sys).unwrap();
+        let model = load_entry(&e)?;
+        let analysis = analyze_optimized(&model, e.target)?;
+        let mut prev_err = f64::INFINITY;
+        for (i, f) in FORMATS {
+            let q = QFormat::new(i, f);
+            let design = rtl::build(&analysis, q);
+            let mapped = synth::map_design(&design);
+            let t = timing::analyze(&mapped.netlist, &ICE40_LP);
+            let lat = rtl::module_latency(&design, Policy::ParallelPerPi);
+
+            // Π accuracy vs f64 on physical traces.
+            let mut rng = Lfsr32::new(0xFACE);
+            let mut err = 0f64;
+            let mut n = 0usize;
+            let mut in_range = 0usize;
+            let trials = 200;
+            for _ in 0..trials {
+                let s = stim::sample(sys, &mut rng).unwrap();
+                let qv: Vec<i64> = design
+                    .ports
+                    .iter()
+                    .map(|p| q.from_f64(s[p.symbol_index]))
+                    .collect();
+                if design
+                    .ports
+                    .iter()
+                    .all(|p| s[p.symbol_index].abs() < q.max_value() * 0.9)
+                {
+                    in_range += 1;
+                }
+                for u in &design.units {
+                    let fx = q.to_f64(fixedpoint::eval_monomial(q, &qv, &u.exponents));
+                    let fl: f64 = u
+                        .exponents
+                        .iter()
+                        .enumerate()
+                        .map(|(pi, &e)| s[design.ports[pi].symbol_index].powi(e as i32))
+                        .product();
+                    if fl.abs() > 1e-6 {
+                        err += ((fx - fl) / fl).abs();
+                        n += 1;
+                    }
+                }
+            }
+            let rel = err / n.max(1) as f64;
+            println!(
+                "Q{i}.{f:<4} {:>7} {:>9} {:>8.2}M {:>9} {:>12.2e} {:>13.0}%",
+                q.width(),
+                mapped.lut4_cells,
+                t.fmax_mhz,
+                lat,
+                rel,
+                100.0 * in_range as f64 / trials as f64
+            );
+            // Monotonicity within the well-ranged formats: more fraction
+            // bits → better accuracy (Q8.7 can saturate on beam signals,
+            // so only enforce once the dynamic range fits).
+            if in_range == trials && prev_err.is_finite() {
+                assert!(rel <= prev_err * 1.5, "{sys}: accuracy regressed at Q{i}.{f}");
+            }
+            if in_range == trials {
+                prev_err = rel;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Regenerate the paper's Table 1 (the full experimental evaluation) and
+//! print it side by side with the published values.
+//!
+//! ```text
+//! cargo run --release --example fpga_report [-- <power-samples>]
+//! ```
+//!
+//! For every corpus system this runs the complete flow: Newton frontend →
+//! Π-search → RTL generation → gate-level lowering → LUT4 mapping →
+//! STA → LFSR-driven gate-level power simulation.
+
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::report::{self, table1};
+
+fn main() -> anyhow::Result<()> {
+    let samples: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    eprintln!("running the full synthesis flow on 7 systems (power window: {samples} activations)…");
+    let rows = report::generate_table(Q16_15, samples)?;
+    println!("{}", report::render_markdown(&rows));
+
+    // Shape checks the paper's prose makes (§3.A) — fail loudly if the
+    // reproduction drifts.
+    for r in &rows {
+        assert!(r.latency_cycles < 300, "{}: latency claim violated", r.id);
+        assert!(r.power_12mhz_mw < 6.5, "{}: power claim violated", r.id);
+        let rate = r.fmax_mhz.min(12.0) * 1.0e6 / r.latency_cycles as f64;
+        assert!(rate > 10_000.0, "{}: sample-rate claim violated", r.id);
+    }
+    let pendulum = rows.iter().find(|r| r.id == "pendulum").unwrap();
+    let flight = rows.iter().find(|r| r.id == "unpowered_flight").unwrap();
+    assert!(
+        flight.latency_cycles < pendulum.latency_cycles,
+        "parallelism observation violated"
+    );
+    println!("paper §3.A shape checks: all hold ✓");
+
+    // Per-experiment index entry (DESIGN.md §4, T1).
+    let _ = table1::paper_row("pendulum");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Multi-system in-sensor serving (DESIGN.md §4, F4): one coordinator
+//! per physical system, all three Π paths exercised, including
+//! hardware-in-the-loop mode where every served sample runs through the
+//! cycle-accurate simulation of the generated RTL.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example insensor_server [-- <samples>]
+//! ```
+
+use dimsynth::coordinator::{InferenceServer, PiPath, SensorInput, ServerConfig};
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::stim::{self, Lfsr32};
+use dimsynth::train::{self, FeatureKind};
+use std::time::Duration;
+
+fn serve_one(system: &str, n: usize, pi_path: PiPath) -> anyhow::Result<(f64, f64)> {
+    let trained = train::run_training("artifacts", system, FeatureKind::Pi, 500, 0xBEEF)?;
+    let export = trained.dataset.export.clone();
+    let server = InferenceServer::start(
+        ServerConfig {
+            artifacts: "artifacts".into(),
+            system: system.into(),
+            max_batch: 64,
+            linger: Duration::from_micros(200),
+            pi_path,
+        },
+        trained,
+    )?;
+    let mut rng = Lfsr32::new(0x51_5E11);
+    let mut pending = Vec::with_capacity(n);
+    let mut truths = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = stim::sample(system, &mut rng).unwrap();
+        truths.push(s[export.target_index]);
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+        pending.push(server.submit(SensorInput { values_q }));
+    }
+    let mut rel = 0f64;
+    let mut cnt = 0usize;
+    for (rx, truth) in pending.into_iter().zip(truths) {
+        let p = rx.recv().expect("response")?;
+        if p.target_estimate.is_finite() && truth.abs() > 1e-12 {
+            rel += ((p.target_estimate - truth) / truth).abs();
+            cnt += 1;
+        }
+    }
+    let stats = server.shutdown();
+    Ok((stats.throughput(), 100.0 * rel / cnt.max(1) as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    println!(
+        "{:<24} {:>14} {:>14} {:>16}",
+        "system", "path", "samples/s", "mean |rel err| %"
+    );
+    for system in ["pendulum", "beam", "unpowered_flight", "vibrating_string", "spring_mass"] {
+        for (path, label, count) in [
+            (PiPath::Native, "native", n),
+            (PiPath::Hlo, "pallas/pjrt", n),
+            // The RTL-sim path simulates every clock cycle of the
+            // generated hardware — far slower, so a smaller stream.
+            (PiPath::RtlSim, "rtl-sim", n.min(256)),
+        ] {
+            let (thr, err) = serve_one(system, count, path)?;
+            println!("{system:<24} {label:>14} {thr:>14.0} {err:>16.3}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the complete dimensional-circuit-synthesis flow on the
+//! paper's running example (Fig. 2 — a sensor-instrumented unpowered
+//! glider), using only the public library API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks all four steps of Fig. 4: ① the Newton description, ② the
+//! compiler (Π-search + RTL generation + synthesis/timing/power reports),
+//! ③ a glimpse of offline calibration data, ④ executing the generated
+//! design in the cycle-accurate simulator on a quantized observation.
+
+use dimsynth::fixedpoint::{self, Q16_15};
+use dimsynth::newton;
+use dimsynth::pisearch;
+use dimsynth::power;
+use dimsynth::rtl::{self, Policy};
+use dimsynth::stim::{self, Lfsr32};
+use dimsynth::synth;
+use dimsynth::timing;
+
+fn main() -> anyhow::Result<()> {
+    // ── Step 1: the physical-system description ────────────────────────
+    let entry = newton::by_id("unpowered_flight").expect("corpus entry");
+    println!("── Newton specification ({}) ──", entry.display_name);
+    println!("{}", entry.source.trim());
+
+    let model = newton::load_entry(&entry)?;
+    println!("\nresolved {} symbols:", model.k());
+    for s in &model.symbols {
+        println!("  {:<10} : {:<12} [{}]", s.name, s.dimension.si_unit(), s.dimension);
+    }
+
+    // ── Step 2: dimensional circuit synthesis ───────────────────────────
+    let analysis = pisearch::analyze_optimized(&model, entry.target)?;
+    println!("\n── Buckingham Π analysis ──\n{analysis}");
+
+    let design = rtl::build(&analysis, Q16_15);
+    let verilog = rtl::verilog::emit(&design);
+    println!("generated RTL: {} lines of Verilog", verilog.lines().count());
+
+    let mapped = synth::map_design(&design);
+    let t = timing::analyze(&mapped.netlist, &timing::ICE40_LP);
+    let act = power::measure_activity(&mapped.netlist, &design, 4, 0xACE1);
+    println!("\n── implementation report (iCE40 model) ──");
+    println!("  LUT4 cells : {}", mapped.lut4_cells);
+    println!("  gate count : {}", mapped.gate_count);
+    println!("  flip-flops : {}", mapped.dffs);
+    println!("  Fmax       : {:.2} MHz", t.fmax_mhz);
+    println!("  latency    : {} cycles", rtl::module_latency(&design, Policy::ParallelPerPi));
+    println!(
+        "  power      : {:.1} mW @6MHz, {:.1} mW @12MHz",
+        power::average_power_mw(&power::ICE40, &act, 6.0e6),
+        power::average_power_mw(&power::ICE40, &act, 12.0e6)
+    );
+
+    // ── Step 3: what the calibration step would see ─────────────────────
+    let mut rng = Lfsr32::new(0xC0FFEE);
+    let sample = stim::sample("unpowered_flight", &mut rng).expect("trace");
+    println!("\n── one synthetic observation ──");
+    for (s, v) in model.symbols.iter().zip(&sample) {
+        println!("  {:<10} = {:>10.4} {}", s.name, v, s.dimension.si_unit());
+    }
+
+    // ── Step 4: run the synthesized hardware on it ──────────────────────
+    let inputs = design.select_inputs(
+        &sample.iter().map(|&v| Q16_15.from_f64(v)).collect::<Vec<_>>(),
+    );
+    let result = rtl::run_once(&design, &inputs);
+    println!("\n── cycle-accurate execution ──");
+    println!("  finished in {} cycles", result.cycles);
+    for (u, (unit, &pi)) in design.units.iter().zip(&result.outputs).enumerate() {
+        println!("  Π{} = {:<10.5} ({})", u + 1, Q16_15.to_f64(pi), unit.expr);
+    }
+    // Sanity: the software model agrees bit for bit.
+    assert_eq!(result.outputs, rtl::sim::reference_outputs(&design, &inputs));
+    let _ = fixedpoint::Q16_15;
+    println!("\nsoftware model matches the hardware bit-for-bit ✓");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+"""AOT pipeline: lower the Layer-1/Layer-2 computations to HLO text for
+the Rust PJRT runtime.
+
+Inputs:  artifacts/pisearch.json — the Π-search interchange emitted by
+         `dimsynth export-pisearch` (single source of truth for exponent
+         matrices; see rust/src/report/export.rs).
+Outputs: artifacts/<name>.hlo.txt per computation:
+
+    pi_<id>_b{1,64}        quantized signals -> Π products (Pallas kernel)
+    phi_infer_<id>_b{1,64} Π features -> prediction (Φ model)
+    phi_train_<id>         one SGD step on Π features
+    raw_infer_<id>_b64     raw-signal baseline inference
+    raw_train_<id>         raw-signal baseline SGD step
+    pipeline_<id>_b64      fused: quantized signals -> Π -> prediction
+
+HLO *text* is the interchange format: jax ≥ 0.5 serializes HloModuleProto
+with 64-bit instruction ids, which xla_extension 0.5.1 (the version the
+`xla` crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64 lanes in the Π kernel
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.pi_kernel import pi_products  # noqa: E402
+from . import model  # noqa: E402
+
+TRAIN_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, text: str, manifest: list):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(name)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_system(sys_desc: dict, out_dir: str, manifest: list):
+    sid = sys_desc["id"]
+    exps = tuple(tuple(row) for row in sys_desc["exponents"])
+    kp = len(sys_desc["ports"])  # participating signals (hardware ports)
+    k = len(sys_desc["symbols"])  # all signals (raw baseline)
+    n = len(exps)
+    pi_in_dim = max(n - 1, 1)
+    raw_in_dim = k - 1
+    f32 = jnp.float32
+    i32 = jnp.int32
+    print(f"[{sid}] k={k} ports={kp} N={n}")
+
+    # --- Π kernels -----------------------------------------------------------
+    for b in (1, 64):
+        def pi_fn(x, _exps=exps, _b=b):
+            return (pi_products(x, _exps, block_b=min(64, _b)),)
+
+        lowered = jax.jit(pi_fn).lower(spec((b, kp), i32))
+        write(out_dir, f"pi_{sid}_b{b}", to_hlo_text(lowered), manifest)
+
+    # --- Φ model over Π features ----------------------------------------------
+    p_pi = model.param_count(pi_in_dim)
+    for b in (1, 64):
+        def infer_fn(params, x, shift, scale, _d=pi_in_dim):
+            return (model.infer(params, x, shift, scale, _d),)
+
+        lowered = jax.jit(infer_fn).lower(
+            spec((p_pi,), f32), spec((b, pi_in_dim), f32),
+            spec((pi_in_dim,), f32), spec((pi_in_dim,), f32),
+        )
+        write(out_dir, f"phi_infer_{sid}_b{b}", to_hlo_text(lowered), manifest)
+
+    def train_fn(params, x, y, shift, scale, lr, _d=pi_in_dim):
+        return model.train_step(params, x, y, shift, scale, lr, _d)
+
+    lowered = jax.jit(train_fn).lower(
+        spec((p_pi,), f32), spec((TRAIN_BATCH, pi_in_dim), f32),
+        spec((TRAIN_BATCH,), f32), spec((pi_in_dim,), f32),
+        spec((pi_in_dim,), f32), spec((), f32),
+    )
+    write(out_dir, f"phi_train_{sid}", to_hlo_text(lowered), manifest)
+
+    # --- raw-signal baseline ----------------------------------------------------
+    p_raw = model.param_count(raw_in_dim)
+
+    def raw_infer_fn(params, x, shift, scale, _d=raw_in_dim):
+        return (model.infer(params, x, shift, scale, _d),)
+
+    lowered = jax.jit(raw_infer_fn).lower(
+        spec((p_raw,), f32), spec((64, raw_in_dim), f32),
+        spec((raw_in_dim,), f32), spec((raw_in_dim,), f32),
+    )
+    write(out_dir, f"raw_infer_{sid}_b64", to_hlo_text(lowered), manifest)
+
+    def raw_train_fn(params, x, y, shift, scale, lr, _d=raw_in_dim):
+        return model.train_step(params, x, y, shift, scale, lr, _d)
+
+    lowered = jax.jit(raw_train_fn).lower(
+        spec((p_raw,), f32), spec((TRAIN_BATCH, raw_in_dim), f32),
+        spec((TRAIN_BATCH,), f32), spec((raw_in_dim,), f32),
+        spec((raw_in_dim,), f32), spec((), f32),
+    )
+    write(out_dir, f"raw_train_{sid}", to_hlo_text(lowered), manifest)
+
+    # --- fused pipeline (Fig. 3): quantized signals -> Π -> prediction ---------
+    def pipeline_fn(params, x_q, shift, scale, _exps=exps):
+        return (model.pi_then_infer(params, x_q, shift, scale, _exps),)
+
+    lowered = jax.jit(pipeline_fn).lower(
+        spec((p_pi,), f32), spec((64, kp), i32),
+        spec((pi_in_dim,), f32), spec((pi_in_dim,), f32),
+    )
+    write(out_dir, f"pipeline_{sid}_b64", to_hlo_text(lowered), manifest)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pisearch", default="../artifacts/pisearch.json")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--systems", default="", help="comma list; default all")
+    args = ap.parse_args()
+
+    with open(args.pisearch) as f:
+        desc = json.load(f)
+    assert desc["format"]["frac_bits"] == 15, "artifacts assume Q16.15"
+    os.makedirs(args.out, exist_ok=True)
+
+    only = {s for s in args.systems.split(",") if s}
+    manifest = []
+    for sys_desc in desc["systems"]:
+        if only and sys_desc["id"] not in only:
+            continue
+        lower_system(sys_desc, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"{len(manifest)} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernel: batched fixed-point Π-product evaluation.
+
+This is the compute hot-spot of the in-sensor inference engine: given a
+batch of quantized sensor signals (Q-format signed fixed point, int32
+storage) and a static integer exponent matrix from the Buckingham
+Π-search, compute the dimensionless products
+
+    Π_j = prod_i  s_i ** E[j, i]
+
+with *bit-exact* fixed-point semantics matching the generated RTL, the
+Rust software model (`rust/src/fixedpoint`), and the gate-level netlist:
+
+* multiply: full-width product, round half up at the fraction point,
+  saturate to the word width;
+* divide:   sign-magnitude restoring division of (|a| << frac) / |b|
+  (truncating), divide-by-zero saturates toward the dividend's sign;
+* op order: the canonical monomial schedule — numerator factors in symbol
+  order, then denominator factors in symbol order (`monomial_ops` in
+  `rust/src/fixedpoint/ops.rs`). Rounding composes identically everywhere.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+tiny FPGA, not a GPU — there is no warp/tensor-core structure to port.
+The TPU-shaped mapping is: BlockSpec tiles the *batch* dimension into
+VMEM-resident blocks (the analogue of the paper's per-sample parallel Π
+datapaths is lane-level parallelism across the batch), the Π loop and the
+per-Π op chain are fully unrolled at trace time (they are static,
+compiler-known structures — exactly like the generated RTL microprogram),
+and all arithmetic stays in integer lanes on the VPU; the MXU is not used
+because monomial evaluation is elementwise, not a contraction.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom calls, and interpret mode lowers to plain HLO that
+the Rust runtime executes directly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Q16.15 by default; kept in sync with rust/src/fixedpoint/qformat.rs.
+DEFAULT_INT_BITS = 16
+DEFAULT_FRAC_BITS = 15
+
+
+def qparams(int_bits: int = DEFAULT_INT_BITS, frac_bits: int = DEFAULT_FRAC_BITS):
+    """Width-derived constants for a Q(int_bits, frac_bits) format."""
+    width = 1 + int_bits + frac_bits
+    return {
+        "width": width,
+        "frac": frac_bits,
+        "one": 1 << frac_bits,
+        "max_raw": (1 << (width - 1)) - 1,
+        "min_raw": -(1 << (width - 1)),
+    }
+
+
+def _fx_mul(a, b, q):
+    """Bit-exact fixed-point multiply on int64 lanes."""
+    prod = a * b
+    rounded = (prod + (1 << (q["frac"] - 1))) >> q["frac"]
+    return jnp.clip(rounded, q["min_raw"], q["max_raw"])
+
+
+def _fx_div(a, b, q):
+    """Bit-exact fixed-point divide on int64 lanes (sign-magnitude
+    truncating, saturating, dbz saturates by dividend sign)."""
+    na = jnp.abs(a) << q["frac"]
+    nb = jnp.abs(b)
+    safe = jnp.where(nb == 0, jnp.int64(1), nb)
+    quot = na // safe
+    sign = (a < 0) != (b < 0)
+    signed = jnp.where(sign, -quot, quot)
+    sat = jnp.clip(signed, q["min_raw"], q["max_raw"])
+    dbz = jnp.where(a >= 0, jnp.int64(q["max_raw"]), jnp.int64(q["min_raw"]))
+    return jnp.where(b == 0, dbz, sat)
+
+
+def monomial_ops(exponents: Sequence[int]):
+    """Canonical serial op schedule — mirrors `fixedpoint::monomial_ops`.
+
+    Returns a list of ("load"|"load_one"|"mul"|"div", symbol_index).
+    """
+    ops = []
+    loaded = False
+    for i, e in enumerate(exponents):
+        for _ in range(max(e, 0)):
+            if not loaded:
+                ops.append(("load", i))
+                loaded = True
+            else:
+                ops.append(("mul", i))
+    if not loaded:
+        ops.append(("load_one", 0))
+    for i, e in enumerate(exponents):
+        for _ in range(max(-e, 0)):
+            ops.append(("div", i))
+    return ops
+
+
+def _pi_block_kernel(x_ref, o_ref, *, exponents, q):
+    """Pallas kernel body: one batch tile, all Π products unrolled."""
+    x = x_ref[...].astype(jnp.int64)  # [BB, k]
+    outs = []
+    for exps in exponents:
+        acc = None
+        for op, i in monomial_ops(exps):
+            if op == "load":
+                acc = x[:, i]
+            elif op == "load_one":
+                acc = jnp.full(x.shape[:1], q["one"], dtype=jnp.int64)
+            elif op == "mul":
+                acc = _fx_mul(acc, x[:, i], q)
+            else:
+                acc = _fx_div(acc, x[:, i], q)
+        outs.append(acc)
+    o_ref[...] = jnp.stack(outs, axis=-1).astype(jnp.int32)
+
+
+def pi_products(
+    x,
+    exponents: Sequence[Sequence[int]],
+    *,
+    int_bits: int = DEFAULT_INT_BITS,
+    frac_bits: int = DEFAULT_FRAC_BITS,
+    block_b: int = 64,
+):
+    """Compute Π products for a batch of quantized signals.
+
+    Args:
+      x: int32 array [B, k] of Q-format raw values.
+      exponents: static N×k integer exponent matrix.
+      block_b: batch tile size (VMEM block).
+
+    Returns:
+      int32 array [B, N] of Q-format Π values.
+    """
+    b, k = x.shape
+    n = len(exponents)
+    exponents = tuple(tuple(int(e) for e in row) for row in exponents)
+    for row in exponents:
+        assert len(row) == k, "exponent row arity mismatch"
+    q = qparams(int_bits, frac_bits)
+    bb = min(block_b, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    kernel = functools.partial(_pi_block_kernel, exponents=exponents, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x)

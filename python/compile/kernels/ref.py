@@ -1,0 +1,99 @@
+"""Pure-jnp correctness oracle for the Pallas Π kernel.
+
+Implements the identical fixed-point semantics with plain `jnp` ops and no
+Pallas — the reference the kernel is tested against (pytest + hypothesis),
+and an independent re-derivation of the semantics defined in
+`rust/src/fixedpoint/ops.rs`. A scalar python-int implementation is also
+provided as a third, fully independent oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from .pi_kernel import monomial_ops, qparams
+
+
+def fx_mul_ref(a: int, b: int, int_bits: int = 16, frac_bits: int = 15):
+    """Scalar reference multiply (python ints, exact)."""
+    q = qparams(int_bits, frac_bits)
+    rounded = (a * b + (1 << (frac_bits - 1))) >> frac_bits
+    return max(q["min_raw"], min(q["max_raw"], rounded))
+
+
+def fx_div_ref(a: int, b: int, int_bits: int = 16, frac_bits: int = 15):
+    """Scalar reference divide (python ints, exact)."""
+    q = qparams(int_bits, frac_bits)
+    if b == 0:
+        return q["max_raw"] if a >= 0 else q["min_raw"]
+    quot = (abs(a) << frac_bits) // abs(b)
+    signed = -quot if (a < 0) != (b < 0) else quot
+    return max(q["min_raw"], min(q["max_raw"], signed))
+
+
+def pi_products_scalar(
+    values: Sequence[int],
+    exponents: Sequence[Sequence[int]],
+    int_bits: int = 16,
+    frac_bits: int = 15,
+):
+    """Evaluate all Π monomials for one sample with python-int arithmetic."""
+    q = qparams(int_bits, frac_bits)
+    outs = []
+    for exps in exponents:
+        acc = 0
+        for op, i in monomial_ops(exps):
+            if op == "load":
+                acc = values[i]
+            elif op == "load_one":
+                acc = q["one"]
+            elif op == "mul":
+                acc = fx_mul_ref(acc, values[i], int_bits, frac_bits)
+            else:
+                acc = fx_div_ref(acc, values[i], int_bits, frac_bits)
+        outs.append(acc)
+    return outs
+
+
+def pi_products_ref(x, exponents, int_bits: int = 16, frac_bits: int = 15):
+    """Vectorized jnp reference: same semantics, no Pallas.
+
+    Args:
+      x: int32 [B, k].
+    Returns:
+      int32 [B, N].
+    """
+    q = qparams(int_bits, frac_bits)
+    x64 = x.astype(jnp.int64)
+    outs = []
+    for exps in exponents:
+        acc = None
+        for op, i in monomial_ops(exps):
+            if op == "load":
+                acc = x64[:, i]
+            elif op == "load_one":
+                acc = jnp.full(x64.shape[:1], q["one"], dtype=jnp.int64)
+            elif op == "mul":
+                prod = acc * x64[:, i]
+                acc = jnp.clip(
+                    (prod + (1 << (frac_bits - 1))) >> frac_bits,
+                    q["min_raw"],
+                    q["max_raw"],
+                )
+            else:
+                b = x64[:, i]
+                na = jnp.abs(acc) << frac_bits
+                nb = jnp.abs(b)
+                safe = jnp.where(nb == 0, jnp.int64(1), nb)
+                quot = na // safe
+                sign = (acc < 0) != (b < 0)
+                signed = jnp.where(sign, -quot, quot)
+                sat = jnp.clip(signed, q["min_raw"], q["max_raw"])
+                dbz = jnp.where(
+                    acc >= 0, jnp.int64(q["max_raw"]), jnp.int64(q["min_raw"])
+                )
+                acc = jnp.where(b == 0, dbz, sat)
+        outs.append(acc)
+    return jnp.stack(outs, axis=-1).astype(jnp.int32)

@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: the dimensional-function-synthesis calibration model
+Φ and its training step, plus the raw-signal baseline (Wang et al. [5]).
+
+The Φ model is a small MLP trained to predict the target dimensionless
+product Π₀ from the remaining products Π₁…Π_{N−1} (for N = 1 systems the
+input degenerates to a constant feature and the model learns the constant
+of proportionality, e.g. 4π² for the pendulum). The baseline predicts the
+raw target signal from the remaining raw signals — the comparison the
+paper's speedup/accuracy claims rest on.
+
+All functions here are *build-time only*: `aot.py` lowers them to HLO text
+once; the Rust runtime loads and executes the artifacts. Parameters
+travel as a single flat f32 vector so the Rust side needs no pytree
+knowledge.
+
+Layout of the flat parameter vector for `in_dim -> H -> H -> 1`:
+    [W1 (in_dim*H), b1 (H), W2 (H*H), b2 (H), W3 (H), b3 (1)]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pi_kernel import pi_products
+
+HIDDEN = 16
+
+
+def param_count(in_dim: int, hidden: int = HIDDEN) -> int:
+    return in_dim * hidden + hidden + hidden * hidden + hidden + hidden + 1
+
+
+def init_params(key, in_dim: int, hidden: int = HIDDEN):
+    """Glorot-ish init, flattened."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (in_dim, hidden)) * (1.0 / max(in_dim, 1)) ** 0.5
+    w2 = jax.random.normal(k2, (hidden, hidden)) * (1.0 / hidden) ** 0.5
+    w3 = jax.random.normal(k3, (hidden,)) * (1.0 / hidden) ** 0.5
+    return jnp.concatenate(
+        [
+            w1.reshape(-1),
+            jnp.zeros(hidden),
+            w2.reshape(-1),
+            jnp.zeros(hidden),
+            w3,
+            jnp.zeros(1),
+        ]
+    ).astype(jnp.float32)
+
+
+def _unflatten(params, in_dim: int, hidden: int = HIDDEN):
+    o = 0
+    w1 = params[o : o + in_dim * hidden].reshape(in_dim, hidden)
+    o += in_dim * hidden
+    b1 = params[o : o + hidden]
+    o += hidden
+    w2 = params[o : o + hidden * hidden].reshape(hidden, hidden)
+    o += hidden * hidden
+    b2 = params[o : o + hidden]
+    o += hidden
+    w3 = params[o : o + hidden]
+    o += hidden
+    b3 = params[o]
+    return w1, b1, w2, b2, w3, b3
+
+
+def mlp_forward(params, x, in_dim: int, hidden: int = HIDDEN):
+    """MLP over standardized features. x: [B, in_dim] -> [B]."""
+    w1, b1, w2, b2, w3, b3 = _unflatten(params, in_dim, hidden)
+    h = jnp.tanh(x @ w1 + b1)
+    h = jnp.tanh(h @ w2 + b2)
+    return h @ w3 + b3
+
+
+def infer(params, x, shift, scale, in_dim: int):
+    """Inference entry point lowered by aot.py.
+
+    Args:
+      params: [P] f32 flat parameters.
+      x: [B, in_dim] f32 raw features.
+      shift/scale: [in_dim] f32 feature standardization (computed by the
+        trainer on the training set and shipped with the parameters).
+    Returns:
+      [B] f32 predictions in *normalized* target space (the caller holds
+      the target shift/scale).
+    """
+    z = (x - shift) / scale
+    return mlp_forward(params, z, in_dim)
+
+
+def loss_fn(params, x, y, shift, scale, in_dim: int):
+    pred = infer(params, x, shift, scale, in_dim)
+    return jnp.mean((pred - y) ** 2)
+
+
+def train_step(params, x, y, shift, scale, lr, in_dim: int):
+    """One SGD step. Returns (new_params, loss). Lowered by aot.py."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y, shift, scale, in_dim)
+    return params - lr * grads, loss
+
+
+def pi_forward(x, exponents, block_b: int = 64):
+    """Layer-2 wrapper over the Layer-1 Pallas kernel (quantized signals
+    in, Π products out). Lowered per system by aot.py."""
+    return pi_products(x, exponents, block_b=block_b)
+
+
+def pi_then_infer(params, x_q, shift, scale, exponents, frac_bits: int = 15):
+    """Fused preprocessing + inference: quantized signals -> Π (Pallas,
+    bit-exact with the hardware) -> float features -> Φ prediction.
+    This is the full Figure-3 pipeline as one artifact.
+
+    The target-group product Π₀ is *excluded* from the features (it
+    contains the quantity being inferred); for N == 1 the feature
+    degenerates to the constant 1.
+    """
+    pis = pi_forward(x_q, exponents)  # [B, N] int32
+    scale_q = jnp.float32(1 << frac_bits)
+    f = pis.astype(jnp.float32) / scale_q
+    n = len(exponents)
+    feats = f[:, 1:] if n > 1 else jnp.ones_like(f[:, :1])
+    return infer(params, feats, shift, scale, feats.shape[1])

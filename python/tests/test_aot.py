@@ -1,0 +1,142 @@
+"""AOT pipeline tests: HLO-text emission well-formedness and consistency
+with the Π-search interchange (when the Rust export has been generated)."""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.pi_kernel import pi_products
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    exps = ((1, -1),)
+
+    def fn(x):
+        return (pi_products(x, exps),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 2), jnp.int32))
+    text = aot.to_hlo_text(lowered)
+    # HLO text structure: module header + ENTRY computation.
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # Tuple return (the Rust loader unconditionally decomposes tuples).
+    assert "tuple(" in text or "(s32[4,2]" in text
+
+
+def test_hlo_has_no_custom_calls():
+    # interpret=True must lower Pallas to plain HLO: a Mosaic custom-call
+    # would be unexecutable on the CPU PJRT client.
+    exps = ((2, -1, 1), (0, 1, -1))
+
+    def fn(x):
+        return (pi_products(x, exps),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((64, 3), jnp.int32))
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text, "Mosaic custom call leaked into HLO"
+
+
+def test_train_step_lowers_with_tuple_output():
+    in_dim = 2
+    p = model.param_count(in_dim)
+
+    def fn(params, x, y, shift, scale, lr):
+        return model.train_step(params, x, y, shift, scale, lr, in_dim)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((64, in_dim), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32),
+        jax.ShapeDtypeStruct((in_dim,), jnp.float32),
+        jax.ShapeDtypeStruct((in_dim,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert f"f32[{p}]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "pisearch.json")),
+    reason="run `make artifacts` first",
+)
+def test_pisearch_interchange_shape():
+    with open(os.path.join(ART, "pisearch.json")) as f:
+        desc = json.load(f)
+    assert desc["format"] == {"int_bits": 16, "frac_bits": 15}
+    systems = {s["id"]: s for s in desc["systems"]}
+    assert len(systems) == 7
+    pend = systems["pendulum"]
+    assert len(pend["ports"]) == 3
+    assert len(pend["exponents"]) == 1
+    assert pend["latency"] == 115
+    for s in desc["systems"]:
+        k = len(s["ports"])
+        for row in s["exponents"]:
+            assert len(row) == k
+        # Target group isolates the target: exactly one group references
+        # the target port.
+        tp = s["ports"].index(s["target_index"])
+        holders = [g for g in s["exponents"] if g[tp] != 0]
+        assert len(holders) == 1
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_complete():
+    with open(os.path.join(ART, "manifest.txt")) as f:
+        names = set(f.read().split())
+    with open(os.path.join(ART, "pisearch.json")) as f:
+        systems = [s["id"] for s in json.load(f)["systems"]]
+    for sid in systems:
+        for art in [
+            f"pi_{sid}_b1",
+            f"pi_{sid}_b64",
+            f"phi_infer_{sid}_b1",
+            f"phi_infer_{sid}_b64",
+            f"phi_train_{sid}",
+            f"raw_infer_{sid}_b64",
+            f"raw_train_{sid}",
+            f"pipeline_{sid}_b64",
+        ]:
+            assert art in names, f"missing {art}"
+            assert os.path.exists(os.path.join(ART, f"{art}.hlo.txt"))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "pisearch.json")),
+    reason="run `make artifacts` first",
+)
+def test_kernel_agrees_with_exported_exponents_on_traces():
+    """The kernel over the exported exponent matrices produces Π values
+    close to f64 for in-range monomials (mirrors the Rust-side test)."""
+    with open(os.path.join(ART, "pisearch.json")) as f:
+        desc = json.load(f)
+    one = 1 << 15
+    rng = np.random.default_rng(11)
+    for s in desc["systems"]:
+        exps = tuple(tuple(r) for r in s["exponents"])
+        k = len(s["ports"])
+        vals = rng.uniform(0.5, 4.0, size=(8, k))
+        x = jnp.asarray(np.round(vals * one).astype(np.int32))
+        out = np.asarray(pi_products(x, exps)).astype(np.float64) / one
+        for j in range(8):
+            for gi, row in enumerate(exps):
+                truth = float(np.prod(vals[j] ** np.asarray(row)))
+                assert abs(out[j, gi] - truth) < 0.02 * max(abs(truth), 1.0), (
+                    s["id"],
+                    j,
+                    gi,
+                )

@@ -1,0 +1,213 @@
+"""Pallas Π kernel vs the pure-jnp and python-int oracles — the core
+Layer-1 correctness signal, swept with hypothesis over shapes, formats and
+exponent matrices."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pi_kernel import monomial_ops, pi_products, qparams
+from compile.kernels.ref import (
+    fx_div_ref,
+    fx_mul_ref,
+    pi_products_ref,
+    pi_products_scalar,
+)
+
+Q = qparams()
+
+
+def quantize(v: float) -> int:
+    scaled = v * Q["one"]
+    r = np.floor(scaled + 0.5) if scaled >= 0 else np.ceil(scaled - 0.5)
+    return int(max(Q["min_raw"], min(Q["max_raw"], r)))
+
+
+# ---------- scalar semantics ----------------------------------------------------
+
+
+def test_mul_identity():
+    one = Q["one"]
+    for v in [0, 1, -5, 12345, Q["max_raw"], Q["min_raw"] + 1]:
+        assert fx_mul_ref(v, one) == v
+
+
+def test_mul_rounds_half_up():
+    assert fx_mul_ref(16384, 1) == 1  # 0.5 * lsb rounds up
+    assert fx_mul_ref(16383, 1) == 0
+
+
+def test_mul_saturates():
+    big = quantize(30000.0)
+    assert fx_mul_ref(big, big) == Q["max_raw"]
+    assert fx_mul_ref(big, -big) == Q["min_raw"]
+
+
+def test_div_identity_and_truncation():
+    one = Q["one"]
+    for v in [0, 7, -7, 99999]:
+        assert fx_div_ref(v, one) == v
+    assert fx_div_ref(quantize(1.0), quantize(3.0)) == 10922
+    assert fx_div_ref(quantize(-1.0), quantize(3.0)) == -10922
+
+
+def test_div_by_zero_saturates():
+    assert fx_div_ref(5, 0) == Q["max_raw"]
+    assert fx_div_ref(-5, 0) == Q["min_raw"]
+    assert fx_div_ref(0, 0) == Q["max_raw"]
+
+
+def test_monomial_ops_schedule():
+    assert monomial_ops([2, -1, 0, 1]) == [
+        ("load", 0),
+        ("mul", 0),
+        ("mul", 3),
+        ("div", 1),
+    ]
+    assert monomial_ops([-1, -1]) == [("load_one", 0), ("div", 0), ("div", 1)]
+
+
+# ---------- kernel vs oracles ----------------------------------------------------
+
+PENDULUM_EXPS = ((2, -1, 1),)  # period², /length, ×g over ports
+FLIGHT_EXPS = ((-1, 1, 1), (1, -1, 1))  # two groups, 3 ports (example)
+
+
+def run_all(x, exps):
+    """Kernel, jnp oracle and scalar oracle on the same input."""
+    kern = np.asarray(pi_products(x, exps))
+    ref = np.asarray(pi_products_ref(x, exps))
+    scal = np.stack(
+        [
+            np.asarray(pi_products_scalar([int(v) for v in row], exps))
+            for row in np.asarray(x)
+        ]
+    )
+    return kern, ref, scal
+
+
+def test_kernel_matches_oracles_pendulum():
+    rng = np.random.default_rng(42)
+    x = rng.integers(-(1 << 18), 1 << 18, size=(64, 3), dtype=np.int32)
+    kern, ref, scal = run_all(jnp.asarray(x), PENDULUM_EXPS)
+    np.testing.assert_array_equal(kern, ref)
+    np.testing.assert_array_equal(kern, scal)
+
+
+def test_kernel_known_value():
+    # g t²/l with t=2, l=1.5, g=9.81: Π ≈ 26.16.
+    x = jnp.asarray(
+        [[quantize(2.0), quantize(1.5), quantize(9.81)]], dtype=jnp.int32
+    )
+    out = np.asarray(pi_products(x, PENDULUM_EXPS))[0, 0]
+    assert abs(out / Q["one"] - 9.81 * 4 / 1.5) < 0.01
+
+
+def test_kernel_multi_group():
+    rng = np.random.default_rng(7)
+    x = rng.integers(1, 1 << 19, size=(16, 3), dtype=np.int32)
+    kern, ref, scal = run_all(jnp.asarray(x), FLIGHT_EXPS)
+    assert kern.shape == (16, 2)
+    np.testing.assert_array_equal(kern, ref)
+    np.testing.assert_array_equal(kern, scal)
+
+
+def test_kernel_batch_blocking():
+    # B=128 with block 64: two grid steps must agree with one-shot ref.
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(1, 1 << 19, size=(128, 3), dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(pi_products(x, PENDULUM_EXPS, block_b=64)),
+        np.asarray(pi_products_ref(x, PENDULUM_EXPS)),
+    )
+
+
+def test_division_by_zero_in_kernel():
+    x = jnp.asarray([[quantize(2.0), 0, quantize(9.81)]], dtype=jnp.int32)
+    out = np.asarray(pi_products(x, PENDULUM_EXPS))[0, 0]
+    assert out == Q["max_raw"]
+
+
+# ---------- hypothesis sweeps -----------------------------------------------------
+
+
+@st.composite
+def exponent_matrix(draw):
+    k = draw(st.integers(min_value=1, max_value=5))
+    n = draw(st.integers(min_value=1, max_value=3))
+    rows = draw(
+        st.lists(
+            st.lists(st.integers(min_value=-3, max_value=3), min_size=k, max_size=k),
+            min_size=n,
+            max_size=n,
+        )
+    )
+    return tuple(tuple(r) for r in rows)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    exps=exponent_matrix(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    batch=st.sampled_from([1, 2, 8]),
+)
+def test_kernel_matches_scalar_oracle_random(exps, seed, batch):
+    k = len(exps[0])
+    rng = np.random.default_rng(seed)
+    # Mix of magnitudes incl. negatives, zeros and extremes.
+    x = rng.integers(-(1 << 22), 1 << 22, size=(batch, k), dtype=np.int32)
+    x[rng.random(x.shape) < 0.05] = 0
+    kern = np.asarray(pi_products(jnp.asarray(x), exps))
+    scal = np.stack(
+        [np.asarray(pi_products_scalar([int(v) for v in row], exps)) for row in x]
+    )
+    np.testing.assert_array_equal(kern, scal)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    a=st.integers(min_value=Q["min_raw"], max_value=Q["max_raw"]),
+    b=st.integers(min_value=Q["min_raw"], max_value=Q["max_raw"]),
+)
+def test_scalar_mul_within_ulp_of_float(a, b):
+    """Fixed-point multiply approximates real multiplication to 1 ulp
+    (when the true product is representable)."""
+    true = (a / Q["one"]) * (b / Q["one"])
+    got = fx_mul_ref(a, b) / Q["one"]
+    if Q["min_raw"] / Q["one"] < true < Q["max_raw"] / Q["one"]:
+        assert abs(got - true) <= 1.0 / Q["one"] + 1e-12
+    else:
+        assert got in (Q["max_raw"] / Q["one"], Q["min_raw"] / Q["one"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    a=st.integers(min_value=-(1 << 25), max_value=1 << 25),
+    b=st.integers(min_value=1, max_value=1 << 25),
+)
+def test_scalar_div_mul_roundtrip_bound(a, b):
+    """(a / b) * b stays within b ulps of a (truncation error bound)."""
+    q_ = fx_div_ref(a, b)
+    if q_ in (Q["max_raw"], Q["min_raw"]):
+        return
+    back = fx_mul_ref(q_, b)
+    assert abs(back - a) <= b / Q["one"] + 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(frac=st.sampled_from([7, 11, 15, 23]))
+def test_parametric_fraction_widths(frac):
+    """The kernel honours parametric Q formats (paper: 'fully parametric
+    with respect to the length of the fixed point representation')."""
+    int_bits = 30 - frac
+    one = 1 << frac
+    x = jnp.asarray([[2 * one, 3 * one]], dtype=jnp.int32)
+    out = np.asarray(
+        pi_products(x, ((1, 1),), int_bits=int_bits, frac_bits=frac)
+    )[0, 0]
+    assert out == 6 * one

@@ -1,0 +1,118 @@
+"""Layer-2 model tests: MLP forward/backward, train-step descent, the
+fused Π→Φ pipeline, and parameter-layout stability (the Rust trainer
+depends on the flat layout)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.pi_kernel import qparams
+
+Q = qparams()
+
+
+def test_param_count_matches_layout():
+    for in_dim in [1, 2, 5]:
+        p = model.init_params(jax.random.PRNGKey(0), in_dim)
+        assert p.shape == (model.param_count(in_dim),)
+        assert p.dtype == jnp.float32
+
+
+def test_infer_shapes_and_standardization():
+    in_dim = 3
+    p = model.init_params(jax.random.PRNGKey(1), in_dim)
+    x = jnp.ones((8, in_dim), jnp.float32) * 5.0
+    shift = jnp.full((in_dim,), 5.0, jnp.float32)
+    scale = jnp.ones((in_dim,), jnp.float32)
+    out = model.infer(p, x, shift, scale, in_dim)
+    assert out.shape == (8,)
+    # Standardized input is all-zero -> output equals the bias path and is
+    # identical across the batch.
+    assert np.allclose(np.asarray(out), np.asarray(out)[0])
+
+
+def test_train_step_descends_on_linear_problem():
+    in_dim = 2
+    key = jax.random.PRNGKey(42)
+    p = model.init_params(key, in_dim)
+    x = jax.random.normal(key, (64, in_dim), jnp.float32)
+    y = 2.0 * x[:, 0] - 0.7 * x[:, 1] + 0.3
+    shift = jnp.zeros((in_dim,), jnp.float32)
+    scale = jnp.ones((in_dim,), jnp.float32)
+    losses = []
+    for step in range(400):
+        lr = jnp.float32(0.1 * (1.0 - 0.9 * step / 400))  # linear decay
+        p, loss = model.train_step(p, x, y, shift, scale, lr, in_dim)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] / 20, f"{losses[0]} -> {losses[-1]}"
+    assert losses[-1] < 0.15
+
+
+def test_train_step_is_pure_sgd():
+    # params' = params - lr * grad: with lr=0 nothing changes.
+    in_dim = 1
+    p = model.init_params(jax.random.PRNGKey(3), in_dim)
+    x = jnp.ones((4, 1), jnp.float32)
+    y = jnp.zeros((4,), jnp.float32)
+    s = jnp.zeros((1,), jnp.float32)
+    sc = jnp.ones((1,), jnp.float32)
+    p2, _ = model.train_step(p, x, y, s, sc, jnp.float32(0.0), in_dim)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+
+
+def test_pi_then_infer_excludes_target_group():
+    # Two-group system: the fused pipeline must feed only Π₁ (not the
+    # target group Π₀) to the model.
+    exps = ((1, -1, 0), (0, 1, -1))
+    in_dim = 1
+    p = model.init_params(jax.random.PRNGKey(9), in_dim)
+    shift = jnp.zeros((in_dim,), jnp.float32)
+    scale = jnp.ones((in_dim,), jnp.float32)
+    one = Q["one"]
+    # Two inputs differing ONLY in signal 0, which only Π₀ uses.
+    xa = jnp.asarray([[2 * one, one, one]], jnp.int32)
+    xb = jnp.asarray([[7 * one, one, one]], jnp.int32)
+    pa = model.pi_then_infer(p, xa, shift, scale, exps)
+    pb = model.pi_then_infer(p, xb, shift, scale, exps)
+    assert np.allclose(np.asarray(pa), np.asarray(pb))
+
+
+def test_pi_then_infer_single_group_uses_constant_feature():
+    exps = ((2, -1, 1),)
+    in_dim = 1
+    p = model.init_params(jax.random.PRNGKey(11), in_dim)
+    shift = jnp.zeros((in_dim,), jnp.float32)
+    scale = jnp.ones((in_dim,), jnp.float32)
+    one = Q["one"]
+    xa = jnp.asarray([[one, one, one]], jnp.int32)
+    xb = jnp.asarray([[3 * one, 2 * one, one]], jnp.int32)
+    pa = model.pi_then_infer(p, xa, shift, scale, exps)
+    pb = model.pi_then_infer(p, xb, shift, scale, exps)
+    # N=1: features degenerate to the constant 1 → identical predictions.
+    assert np.allclose(np.asarray(pa), np.asarray(pb))
+
+
+def test_mlp_gradient_matches_numeric():
+    in_dim = 2
+    p = model.init_params(jax.random.PRNGKey(5), in_dim)
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, in_dim), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(7), (8,), jnp.float32)
+    s = jnp.zeros((in_dim,), jnp.float32)
+    sc = jnp.ones((in_dim,), jnp.float32)
+    g = jax.grad(model.loss_fn)(p, x, y, s, sc, in_dim)
+    # Spot-check 5 coordinates against central differences.
+    idxs = [0, 7, 33, 100, int(p.shape[0]) - 1]
+    eps = 1e-3
+    for i in idxs:
+        pp = p.at[i].add(eps)
+        pm = p.at[i].add(-eps)
+        num = (
+            model.loss_fn(pp, x, y, s, sc, in_dim)
+            - model.loss_fn(pm, x, y, s, sc, in_dim)
+        ) / (2 * eps)
+        assert abs(float(g[i]) - float(num)) < 5e-3, f"coord {i}"

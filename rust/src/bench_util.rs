@@ -1,0 +1,126 @@
+//! Minimal micro-benchmark harness (no external criterion dependency):
+//! warmup + timed iterations with mean / stddev / min reporting, and a
+//! tiny table printer shared by the `benches/` targets.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.is_zero() {
+            return f64::INFINITY;
+        }
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} mean  {:>12} min  {:>10} sd  ({} iters)",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.min),
+            fmt_duration(self.stddev),
+            self.iters
+        )
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    summarize(name, &times)
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measured
+/// phase takes roughly `budget`.
+pub fn bench_auto<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // One probe run (also serves as warmup).
+    let t = Instant::now();
+    f();
+    let probe = t.elapsed().max(Duration::from_nanos(50));
+    let iters = (budget.as_secs_f64() / probe.as_secs_f64()).clamp(3.0, 10_000.0) as u32;
+    bench(name, 1, iters, f)
+}
+
+fn summarize(name: &str, times: &[Duration]) -> BenchResult {
+    let n = times.len().max(1) as f64;
+    let mean_ns = times.iter().map(|t| t.as_nanos() as f64).sum::<f64>() / n;
+    let var =
+        times.iter().map(|t| (t.as_nanos() as f64 - mean_ns).powi(2)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        iters: times.len() as u32,
+        mean: Duration::from_nanos(mean_ns as u64),
+        min: times.iter().min().copied().unwrap_or_default(),
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+    }
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut calls = 0u32;
+        let r = bench("noop", 2, 10, || calls += 1);
+        assert_eq!(calls, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert!(fmt_duration(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn auto_calibration_runs() {
+        let r = bench_auto("fast", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+}

@@ -1,0 +1,92 @@
+//! Dynamic batching: collect requests from a channel up to a maximum
+//! batch size or a deadline, whichever comes first — the standard
+//! latency/throughput knob of serving systems, applied to sensor samples.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Outcome of one batch collection.
+pub enum BatchOutcome<T> {
+    /// A (possibly partial) batch.
+    Batch(Vec<T>),
+    /// Channel closed and drained: shut down.
+    Closed(Vec<T>),
+}
+
+/// Collect up to `max_batch` items. The first item is awaited without a
+/// deadline (idle server consumes no CPU); once the batch is "open", more
+/// items are accepted until `linger` elapses or the batch fills.
+pub fn collect<T>(rx: &Receiver<T>, max_batch: usize, linger: Duration) -> BatchOutcome<T> {
+    let mut batch = Vec::with_capacity(max_batch);
+    // Blocking wait for the first item.
+    match rx.recv() {
+        Ok(item) => batch.push(item),
+        Err(_) => return BatchOutcome::Closed(batch),
+    }
+    let deadline = Instant::now() + linger;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => return BatchOutcome::Closed(batch),
+        }
+    }
+    BatchOutcome::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn fills_batch_when_items_ready() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        match collect(&rx, 4, Duration::from_millis(50)) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn partial_batch_on_linger() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let got = collect(&rx, 8, Duration::from_millis(10));
+        match got {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![1]),
+            _ => panic!("expected partial batch"),
+        }
+    }
+
+    #[test]
+    fn closed_channel_reports_shutdown() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(matches!(collect(&rx, 4, Duration::from_millis(5)), BatchOutcome::Closed(_)));
+    }
+
+    #[test]
+    fn items_arriving_during_linger_are_included() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(1).unwrap();
+        });
+        // Depending on timing the sender may have hung up by the time the
+        // batch closes; both outcomes must carry the two items.
+        match collect(&rx, 4, Duration::from_millis(100)) {
+            BatchOutcome::Batch(b) | BatchOutcome::Closed(b) => assert_eq!(b.len(), 2),
+        }
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,168 @@
+//! Serving metrics: latency histogram + throughput counters.
+
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (microseconds, power-of-two buckets).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket b counts latencies in [2^b, 2^(b+1)) µs; bucket 0 = <2µs.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let b = (64 - us.max(1).leading_zeros() as u64).min(31) as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (upper bucket bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let threshold = (self.count as f64 * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= threshold {
+                // Upper bucket bound, clamped to the observed maximum.
+                return (1u64 << (b + 1).min(63)).min(self.max_us.max(1));
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub latency: LatencyHistogram,
+    pub batches: u64,
+    pub samples: u64,
+    pub batch_fill_sum: u64,
+    pub wall: Duration,
+}
+
+impl ServeStats {
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.samples as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_fill_sum as f64 / self.batches as f64
+    }
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "samples:     {}", self.samples)?;
+        writeln!(f, "batches:     {} (mean fill {:.1})", self.batches, self.mean_batch_fill())?;
+        writeln!(f, "wall:        {:.3} s", self.wall.as_secs_f64())?;
+        writeln!(f, "throughput:  {:.0} samples/s", self.throughput())?;
+        writeln!(
+            f,
+            "latency µs:  mean {:.0}  p50 {}  p95 {}  p99 {}  max {}",
+            self.latency.mean_us(),
+            self.latency.percentile_us(0.50),
+            self.latency.percentile_us(0.95),
+            self.latency.percentile_us(0.99),
+            self.latency.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 2000.0);
+        assert!(h.percentile_us(0.5) >= 64);
+        assert!(h.percentile_us(0.99) >= 8192);
+        assert_eq!(h.max_us(), 10_000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 500);
+    }
+
+    #[test]
+    fn stats_throughput() {
+        let mut s = ServeStats::default();
+        s.samples = 1000;
+        s.wall = Duration::from_secs(2);
+        s.batches = 20;
+        s.batch_fill_sum = 1000;
+        assert_eq!(s.throughput(), 500.0);
+        assert_eq!(s.mean_batch_fill(), 50.0);
+        let txt = s.to_string();
+        assert!(txt.contains("throughput"));
+    }
+}

@@ -1,0 +1,89 @@
+//! The in-sensor inference engine (Layer 3): request routing, dynamic
+//! batching, the Π→Φ pipeline, and serving metrics.
+//!
+//! Architecture (paper Figs. 3–4): sensor observations are quantized to
+//! the hardware fixed-point format, preprocessed into dimensionless
+//! products (by the synthesized hardware in a real deployment; here by
+//! one of three bit-identical Π paths), and fed to the Φ model executed
+//! as an AOT-compiled XLA artifact. Python never runs at serve time.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use metrics::{LatencyHistogram, ServeStats};
+pub use pipeline::{DatasetStats, Pipeline, PiPath, Prediction, SensorInput};
+pub use server::{InferenceServer, Request, ServerConfig};
+
+use crate::fixedpoint::Q16_15;
+use crate::stim::{self, Lfsr32};
+use crate::train::{self, FeatureKind};
+use std::time::Duration;
+
+/// End-to-end synthetic serve: train Φ, start the server, stream `n`
+/// synthetic sensor observations through it, and return a report.
+///
+/// This is what `dimsynth serve <system>` runs, and the core of the
+/// quickstart example.
+pub fn serve_synthetic(
+    artifacts: &str,
+    system: &str,
+    n: usize,
+    max_batch: usize,
+) -> anyhow::Result<String> {
+    // Offline calibration (Step 3).
+    let trained = train::run_training(artifacts, system, FeatureKind::Pi, 800, 0xD1CE)?;
+    let export = trained.dataset.export.clone();
+
+    // Deployment (Step 4).
+    let server = InferenceServer::start(
+        ServerConfig {
+            artifacts: artifacts.to_string(),
+            system: system.to_string(),
+            max_batch,
+            linger: Duration::from_micros(500),
+            pi_path: PiPath::Native,
+        },
+        trained.clone(),
+    )?;
+
+    // Stream observations and check target recovery online.
+    let mut rng = Lfsr32::new(0xFEED);
+    let mut pending = Vec::with_capacity(n);
+    let mut truths = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sample = stim::sample_noisy(system, &mut rng, 0.0)
+            .ok_or_else(|| anyhow::anyhow!("no trace generator for `{system}`"))?;
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(sample[si])).collect();
+        truths.push(sample[export.target_index]);
+        pending.push(server.submit(SensorInput { values_q }));
+    }
+    let mut err_sum = 0f64;
+    let mut err_n = 0usize;
+    for (rx, truth) in pending.into_iter().zip(truths) {
+        let pred = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped a response"))??;
+        if pred.target_estimate.is_finite() && truth.abs() > 1e-9 {
+            err_sum += ((pred.target_estimate - truth) / truth).abs();
+            err_n += 1;
+        }
+    }
+    let stats = server.shutdown();
+
+    let mut out = String::new();
+    out.push_str(&format!("system:      {system}\n"));
+    out.push_str(&format!(
+        "train loss:  {:.6} ({} steps)\n",
+        trained.final_loss, trained.steps
+    ));
+    out.push_str(&format!("val RMSE:    {:.5} (raw target units)\n", trained.val_rmse));
+    out.push_str(&format!(
+        "mean |rel. target error| online: {:.3}%\n",
+        100.0 * err_sum / err_n.max(1) as f64
+    ));
+    out.push_str(&stats.to_string());
+    Ok(out)
+}

@@ -1,0 +1,226 @@
+//! The per-batch inference pipeline (paper Fig. 3): quantized sensor
+//! signals → Π products → Φ model → target-parameter estimate.
+//!
+//! The Π stage has three interchangeable implementations, all bit-exact
+//! with one another (tested):
+//!
+//! * [`PiPath::Native`] — the Rust fixed-point software model (fastest;
+//!   the production path when no hardware is attached).
+//! * [`PiPath::Hlo`] — the AOT-compiled Pallas kernel through PJRT (the
+//!   same artifact a TPU-class deployment would execute).
+//! * [`PiPath::RtlSim`] — the cycle-accurate simulation of the generated
+//!   hardware (what the physical sensor IC would compute, used for
+//!   hardware-in-the-loop validation and cycle accounting).
+
+use crate::fixedpoint::{self, Q16_15};
+use crate::report::export::SystemExport;
+use crate::rtl::{self, PiModuleDesign};
+use crate::runtime::engine::{self, Engine};
+use crate::train::{Dataset, TrainOutput, TRAIN_BATCH};
+
+/// Π computation implementation choice.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PiPath {
+    Native,
+    Hlo,
+    RtlSim,
+}
+
+/// One sensor observation, already quantized to port order.
+#[derive(Clone, Debug)]
+pub struct SensorInput {
+    /// Q16.15 raw values, one per hardware port.
+    pub values_q: Vec<i64>,
+}
+
+/// The engine's answer for one observation.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Π products (Q16.15 raw), unit order (target group first).
+    pub pis: Vec<i64>,
+    /// Predicted target-group product Π₀ (raw target units after
+    /// denormalization).
+    pub pi0_pred: f32,
+    /// Recovered physical target estimate (e.g. period in seconds).
+    pub target_estimate: f64,
+    /// Cycles the synthesized hardware would spend (RTL-sim path only).
+    pub hw_cycles: Option<u64>,
+}
+
+/// The stateful pipeline owned by the serving worker.
+pub struct Pipeline {
+    pub export: SystemExport,
+    pub design: PiModuleDesign,
+    pub params: Vec<f32>,
+    pub dataset_stats: DatasetStats,
+    pub pi_path: PiPath,
+    system: String,
+    engine: Engine,
+}
+
+/// The standardization constants serving needs from training.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub shift: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub y_shift: f32,
+    pub y_scale: f32,
+    pub dim: usize,
+}
+
+impl From<&Dataset> for DatasetStats {
+    fn from(ds: &Dataset) -> Self {
+        DatasetStats {
+            shift: ds.shift.clone(),
+            scale: ds.scale.clone(),
+            y_shift: ds.y_shift,
+            y_scale: ds.y_scale,
+            dim: ds.dim,
+        }
+    }
+}
+
+impl Pipeline {
+    /// Build a pipeline from a completed training run.
+    pub fn new(
+        artifacts: &str,
+        system: &str,
+        trained: &TrainOutput,
+        pi_path: PiPath,
+    ) -> anyhow::Result<Pipeline> {
+        let engine = Engine::new(artifacts)?;
+        let export = trained.dataset.export.clone();
+        let entry = crate::newton::by_id(system)
+            .ok_or_else(|| anyhow::anyhow!("unknown system `{system}`"))?;
+        let model = crate::newton::load_entry(&entry)?;
+        let analysis = crate::pisearch::analyze_optimized(&model, entry.target)?;
+        let design = rtl::build(&analysis, Q16_15);
+        // Validate the target participates (its port is needed for
+        // monomial inversion).
+        let _ = export.target_port();
+        let mut engine = engine;
+        // Warm the executable cache: artifact compilation must not land
+        // on the first request's latency.
+        engine.load(&format!("phi_infer_{system}_b64"))?;
+        if pi_path == PiPath::Hlo {
+            engine.load(&format!("pi_{system}_b64"))?;
+        }
+        Ok(Pipeline {
+            export,
+            design,
+            params: trained.params.clone(),
+            dataset_stats: DatasetStats::from(&trained.dataset),
+            pi_path,
+            system: system.to_string(),
+            engine,
+        })
+    }
+
+    /// Compute Π products for a batch via the configured path. Returns
+    /// per-sample Π vectors and (for RtlSim) hardware cycles.
+    pub fn compute_pis(
+        &mut self,
+        inputs: &[SensorInput],
+    ) -> anyhow::Result<(Vec<Vec<i64>>, Option<u64>)> {
+        let n = self.export.exponents.len();
+        match self.pi_path {
+            PiPath::Native => {
+                let out = inputs
+                    .iter()
+                    .map(|s| {
+                        self.export
+                            .exponents
+                            .iter()
+                            .map(|e| fixedpoint::eval_monomial(Q16_15, &s.values_q, e))
+                            .collect()
+                    })
+                    .collect();
+                Ok((out, None))
+            }
+            PiPath::RtlSim => {
+                let mut out = Vec::with_capacity(inputs.len());
+                let mut cycles = 0u64;
+                for s in inputs {
+                    let r = rtl::run_once(&self.design, &s.values_q);
+                    cycles += r.cycles;
+                    out.push(r.outputs);
+                }
+                Ok((out, Some(cycles)))
+            }
+            PiPath::Hlo => {
+                let kp = self.export.ports.len();
+                let exe = self.engine.load(&format!("pi_{}_b64", self.system))?;
+                let mut out = Vec::with_capacity(inputs.len());
+                let mut i = 0usize;
+                while i < inputs.len() {
+                    let take = (inputs.len() - i).min(64);
+                    let mut flat = vec![0i64; 64 * kp];
+                    for (j, s) in inputs[i..i + take].iter().enumerate() {
+                        flat[j * kp..(j + 1) * kp].copy_from_slice(&s.values_q);
+                    }
+                    let outs = exe.run(&[engine::i32_matrix(64, kp, &flat)?])?;
+                    let pis = engine::to_i32s(&outs[0])?;
+                    for j in 0..take {
+                        out.push(pis[j * n..(j + 1) * n].iter().map(|&v| v as i64).collect());
+                    }
+                    i += take;
+                }
+                Ok((out, None))
+            }
+        }
+    }
+
+    /// Run Φ inference over the batch's Π features and recover targets.
+    pub fn infer(&mut self, inputs: &[SensorInput]) -> anyhow::Result<Vec<Prediction>> {
+        let (pis, hw_cycles) = self.compute_pis(inputs)?;
+        let n = self.export.exponents.len();
+        let dim = self.dataset_stats.dim;
+        let exe = self.engine.load(&format!("phi_infer_{}_b64", self.system))?;
+
+        let mut preds = Vec::with_capacity(inputs.len());
+        let mut i = 0usize;
+        while i < inputs.len() {
+            let take = (inputs.len() - i).min(TRAIN_BATCH);
+            let mut x = vec![0f32; TRAIN_BATCH * dim];
+            for (j, p) in pis[i..i + take].iter().enumerate() {
+                if n > 1 {
+                    for d in 0..dim {
+                        x[j * dim + d] = Q16_15.to_f64(p[d + 1]) as f32;
+                    }
+                } else {
+                    x[j * dim] = 1.0;
+                }
+            }
+            let outs = exe.run(&[
+                engine::f32_vec(&self.params),
+                engine::f32_matrix(TRAIN_BATCH, dim, &x)?,
+                engine::f32_vec(&self.dataset_stats.shift),
+                engine::f32_vec(&self.dataset_stats.scale),
+            ])?;
+            let y_norm = engine::to_f32s(&outs[0])?;
+            for j in 0..take {
+                let pi0_pred =
+                    y_norm[j] * self.dataset_stats.y_scale + self.dataset_stats.y_shift;
+                let sample = &inputs[i + j];
+                let target = self.recover_target(pi0_pred as f64, &sample.values_q);
+                preds.push(Prediction {
+                    pis: pis[i + j].clone(),
+                    pi0_pred,
+                    target_estimate: target,
+                    hw_cycles: hw_cycles.map(|c| c / inputs.len() as u64),
+                });
+            }
+            i += take;
+        }
+        Ok(preds)
+    }
+
+    /// Invert the target-isolating monomial (delegates to the export).
+    pub fn recover_target(&self, pi0: f64, values_q: &[i64]) -> f64 {
+        self.export.recover_target(pi0, values_q, Q16_15)
+    }
+
+    pub fn system(&self) -> &str {
+        &self.system
+    }
+}

@@ -1,0 +1,132 @@
+//! The in-sensor inference server: a worker thread owning the pipeline
+//! (the PJRT client is not `Send`-safe, so it is created *inside* the
+//! worker), fed through a request channel with dynamic batching.
+
+use super::batcher::{self, BatchOutcome};
+use super::metrics::ServeStats;
+use super::pipeline::{Pipeline, PiPath, Prediction, SensorInput};
+use crate::train::TrainOutput;
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A request in flight: input + response channel + submit timestamp.
+pub struct Request {
+    pub input: SensorInput,
+    pub resp: Sender<anyhow::Result<Prediction>>,
+    pub t_submit: Instant,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts: String,
+    pub system: String,
+    pub max_batch: usize,
+    pub linger: Duration,
+    pub pi_path: PiPath,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<ServeStats>>,
+}
+
+impl InferenceServer {
+    /// Start the worker. `trained` supplies Φ parameters and feature
+    /// statistics (see [`crate::train`]). Blocks until the pipeline is
+    /// initialized (artifact compilation) or fails.
+    pub fn start(config: ServerConfig, trained: TrainOutput) -> anyhow::Result<InferenceServer> {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name(format!("dimsynth-serve-{}", config.system))
+            .spawn(move || worker_loop(config, trained, rx, ready_tx))
+            .expect("spawn worker");
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(InferenceServer { tx: Some(tx), worker: Some(worker) }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow::anyhow!("server worker died during init"))
+            }
+        }
+    }
+
+    /// Submit one observation; returns the response channel.
+    pub fn submit(&self, input: SensorInput) -> Receiver<anyhow::Result<Prediction>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { input, resp: tx, t_submit: Instant::now() };
+        if let Some(q) = &self.tx {
+            // A send failure means the worker is gone; the caller sees a
+            // closed response channel.
+            let _ = q.send(req);
+        }
+        rx
+    }
+
+    /// Close the queue and collect final statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.tx.take(); // close channel
+        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+fn worker_loop(
+    config: ServerConfig,
+    trained: TrainOutput,
+    rx: Receiver<Request>,
+    ready: Sender<anyhow::Result<()>>,
+) -> ServeStats {
+    let mut pipeline =
+        match Pipeline::new(&config.artifacts, &config.system, &trained, config.pi_path) {
+            Ok(p) => {
+                let _ = ready.send(Ok(()));
+                p
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return ServeStats::default();
+            }
+        };
+
+    let mut stats = ServeStats::default();
+    let t0 = Instant::now();
+    loop {
+        let (batch, closing) = match batcher::collect(&rx, config.max_batch, config.linger) {
+            BatchOutcome::Batch(b) => (b, false),
+            BatchOutcome::Closed(b) => (b, true),
+        };
+        if !batch.is_empty() {
+            stats.batches += 1;
+            stats.samples += batch.len() as u64;
+            stats.batch_fill_sum += batch.len() as u64;
+            let inputs: Vec<SensorInput> =
+                batch.iter().map(|r| r.input.clone()).collect();
+            match pipeline.infer(&inputs) {
+                Ok(preds) => {
+                    for (req, pred) in batch.into_iter().zip(preds) {
+                        stats.latency.record(req.t_submit.elapsed());
+                        let _ = req.resp.send(Ok(pred));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e}");
+                    for req in batch {
+                        let _ = req.resp.send(Err(anyhow::anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        if closing {
+            break;
+        }
+    }
+    stats.wall = t0.elapsed();
+    stats
+}

@@ -1,0 +1,10 @@
+//! Signed fixed-point arithmetic: the paper's Q16.15 representation
+//! (parametric in width), with bit-exact multiply/divide semantics shared
+//! by the software model, the RTL simulator, the gate-level netlist, and
+//! the JAX/Pallas kernels.
+
+pub mod ops;
+pub mod qformat;
+
+pub use ops::{div, eval_monomial, monomial_ops, mul, MonOp};
+pub use qformat::{QFormat, Q16_15};

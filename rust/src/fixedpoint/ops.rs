@@ -1,0 +1,241 @@
+//! Bit-exact software model of the RTL fixed-point functional units.
+//!
+//! These functions define the *reference semantics* shared by four
+//! implementations which must agree bit-for-bit:
+//!
+//! 1. this software model (used by tests and the fast native Π path),
+//! 2. the cycle-accurate RTL simulator ([`crate::rtl::sim`]),
+//! 3. the gate-level netlist produced by [`crate::synth::lower()`],
+//! 4. the JAX/Pallas kernel (`python/compile/kernels/pi_kernel.py`),
+//!    whose AOT-compiled artifact the runtime executes.
+//!
+//! Semantics:
+//! * **Multiply** — full-width product, round-half-up at the fraction
+//!   point (`+2^(f-1)` then arithmetic shift right by `f`), saturate to
+//!   the word width. This matches a hardware multiplier with a rounding
+//!   adder on the product.
+//! * **Divide** — sign-magnitude restoring division of `(|a| << f) / |b|`
+//!   (truncating), sign applied afterwards, saturate. Division by zero
+//!   saturates to the signed extremum of the dividend's sign (an explicit
+//!   hardware flag in the RTL).
+
+use super::qformat::QFormat;
+
+/// Fixed-point multiply: `round((a*b) / 2^f)`, saturating.
+pub fn mul(q: QFormat, a: i64, b: i64) -> i64 {
+    let prod = (a as i128) * (b as i128);
+    let round = 1i128 << (q.frac_bits - 1);
+    // Arithmetic shift right after adding the rounding constant: this is
+    // round-half-up (toward +inf at .5), identical to the RTL rounding adder.
+    let shifted = (prod + round) >> q.frac_bits;
+    q.saturate(shifted)
+}
+
+/// Fixed-point divide: `trunc((a << f) / b)` in sign-magnitude, saturating.
+///
+/// Division by zero returns the saturated extremum matching the sign of
+/// the dividend (`max` for `a >= 0`, `min` for `a < 0`), mirroring the
+/// RTL's divide-by-zero flag behaviour.
+pub fn div(q: QFormat, a: i64, b: i64) -> i64 {
+    if b == 0 {
+        return if a >= 0 { q.max_raw() } else { q.min_raw() };
+    }
+    let na = (a as i128).unsigned_abs() << q.frac_bits;
+    let nb = (b as i128).unsigned_abs();
+    let quot = (na / nb) as i128;
+    let signed = if (a < 0) != (b < 0) { -quot } else { quot };
+    q.saturate(signed)
+}
+
+/// One step of a monomial evaluation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MonOp {
+    /// Load symbol `i` into the accumulator (first numerator factor).
+    Load(usize),
+    /// Load the constant 1.0 (monomials with no numerator).
+    LoadOne,
+    /// `acc <- acc * symbol[i]`.
+    Mul(usize),
+    /// `acc <- acc / symbol[i]`.
+    Div(usize),
+}
+
+/// The canonical serial op schedule for a monomial `∏ sᵢ^eᵢ`:
+/// numerator factors first (repeated |e| times), then denominator factors.
+/// All implementations (software, RTL, gates, JAX) follow this order, so
+/// rounding composes identically everywhere.
+pub fn monomial_ops(exponents: &[i64]) -> Vec<MonOp> {
+    let mut ops = Vec::new();
+    let mut loaded = false;
+    for (i, &e) in exponents.iter().enumerate() {
+        for _ in 0..e.max(0) {
+            if !loaded {
+                ops.push(MonOp::Load(i));
+                loaded = true;
+            } else {
+                ops.push(MonOp::Mul(i));
+            }
+        }
+    }
+    if !loaded {
+        ops.push(MonOp::LoadOne);
+    }
+    for (i, &e) in exponents.iter().enumerate() {
+        for _ in 0..(-e).max(0) {
+            ops.push(MonOp::Div(i));
+        }
+    }
+    ops
+}
+
+/// Evaluate a monomial over raw fixed-point symbol values using the
+/// canonical schedule.
+pub fn eval_monomial(q: QFormat, values: &[i64], exponents: &[i64]) -> i64 {
+    assert_eq!(values.len(), exponents.len());
+    let mut acc = 0i64;
+    for op in monomial_ops(exponents) {
+        acc = match op {
+            MonOp::Load(i) => values[i],
+            MonOp::LoadOne => q.one(),
+            MonOp::Mul(i) => mul(q, acc, values[i]),
+            MonOp::Div(i) => div(q, acc, values[i]),
+        };
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::qformat::Q16_15;
+
+    fn q(v: f64) -> i64 {
+        Q16_15.from_f64(v)
+    }
+
+    fn f(raw: i64) -> f64 {
+        Q16_15.to_f64(raw)
+    }
+
+    #[test]
+    fn mul_basics() {
+        assert_eq!(mul(Q16_15, q(2.0), q(3.0)), q(6.0));
+        assert_eq!(mul(Q16_15, q(-2.0), q(3.0)), q(-6.0));
+        assert_eq!(mul(Q16_15, q(0.5), q(0.5)), q(0.25));
+        assert_eq!(mul(Q16_15, 0, q(123.0)), 0);
+        // Identity: x * 1 == x exactly.
+        for v in [0.125, -7.75, 1000.0] {
+            assert_eq!(mul(Q16_15, q(v), Q16_15.one()), q(v));
+        }
+    }
+
+    #[test]
+    fn mul_rounding() {
+        // Smallest positive values: lsb * lsb rounds to lsb/32768 ≈ 0,
+        // but 0.5 (raw 16384) * lsb (raw 1): product raw = 16384,
+        // (16384 + 16384) >> 15 = 1 — rounds up at exactly half.
+        assert_eq!(mul(Q16_15, 16384, 1), 1);
+        // Just below half rounds down.
+        assert_eq!(mul(Q16_15, 16383, 1), 0);
+    }
+
+    #[test]
+    fn mul_saturates() {
+        let big = q(30000.0);
+        assert_eq!(mul(Q16_15, big, big), Q16_15.max_raw());
+        assert_eq!(mul(Q16_15, big, -big), Q16_15.min_raw());
+    }
+
+    #[test]
+    fn div_basics() {
+        assert_eq!(div(Q16_15, q(6.0), q(3.0)), q(2.0));
+        assert_eq!(div(Q16_15, q(-6.0), q(3.0)), q(-2.0));
+        assert_eq!(div(Q16_15, q(6.0), q(-3.0)), q(-2.0));
+        assert_eq!(div(Q16_15, q(1.0), q(2.0)), q(0.5));
+        // Identity: x / 1 == x exactly.
+        for v in [0.125, -7.75, 1000.0] {
+            assert_eq!(div(Q16_15, q(v), Q16_15.one()), q(v));
+        }
+    }
+
+    #[test]
+    fn div_truncates_toward_zero() {
+        // 1/3 in Q16.15: floor(32768*32768 / 32768 / 3)... raw:
+        // (32768 << 15) / 98304 = 10922.67 -> 10922 (truncation).
+        assert_eq!(div(Q16_15, q(1.0), q(3.0)), 10922);
+        // Negative result truncates toward zero (sign-magnitude).
+        assert_eq!(div(Q16_15, q(-1.0), q(3.0)), -10922);
+    }
+
+    #[test]
+    fn div_by_zero_saturates() {
+        assert_eq!(div(Q16_15, q(5.0), 0), Q16_15.max_raw());
+        assert_eq!(div(Q16_15, q(-5.0), 0), Q16_15.min_raw());
+        assert_eq!(div(Q16_15, 0, 0), Q16_15.max_raw());
+    }
+
+    #[test]
+    fn div_saturates_on_overflow() {
+        assert_eq!(div(Q16_15, q(30000.0), 1), Q16_15.max_raw());
+    }
+
+    #[test]
+    fn monomial_schedule_order() {
+        // exponents [2, -1, 0, 1]: load s0, mul s0, mul s3, div s1.
+        let ops = monomial_ops(&[2, -1, 0, 1]);
+        assert_eq!(
+            ops,
+            vec![MonOp::Load(0), MonOp::Mul(0), MonOp::Mul(3), MonOp::Div(1)]
+        );
+    }
+
+    #[test]
+    fn monomial_all_negative_uses_one() {
+        let ops = monomial_ops(&[-1, -1]);
+        assert_eq!(ops, vec![MonOp::LoadOne, MonOp::Div(0), MonOp::Div(1)]);
+    }
+
+    #[test]
+    fn eval_pendulum_pi() {
+        // Π = g t² / l with g=9.81, t=2.0, l=1.5 → 9.81*4/1.5 = 26.16.
+        let vals = vec![q(2.0), q(1.5), q(0.3), q(9.81)];
+        let exps = vec![2, -1, 0, 1];
+        let pi = eval_monomial(Q16_15, &vals, &exps);
+        let expected = 9.81 * 4.0 / 1.5;
+        assert!((f(pi) - expected).abs() < 1e-2, "got {}", f(pi));
+    }
+
+    #[test]
+    fn eval_matches_f64_within_tolerance() {
+        // Pseudorandom-ish sweep with values in a safe range.
+        let exps = vec![1, -2, 1];
+        let mut state = 0x1234_5678u32;
+        for _ in 0..200 {
+            let mut vals = Vec::new();
+            let mut expect = 1.0f64;
+            let mut es = exps.iter();
+            for _ in 0..3 {
+                state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+                let v = 0.5 + (state >> 16) as f64 / 65536.0 * 7.5; // [0.5, 8)
+                let raw = Q16_15.from_f64(v);
+                vals.push(raw);
+                let e = *es.next().unwrap();
+                expect *= Q16_15.to_f64(raw).powi(e as i32);
+            }
+            let got = f(eval_monomial(Q16_15, &vals, &exps));
+            assert!(
+                (got - expect).abs() < 0.01 * expect.abs().max(1.0),
+                "got {got}, expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn parametric_width_q8_7() {
+        let q8 = QFormat::new(8, 7);
+        let a = q8.from_f64(2.0);
+        let b = q8.from_f64(3.0);
+        assert_eq!(mul(q8, a, b), q8.from_f64(6.0));
+        assert_eq!(div(q8, b, a), q8.from_f64(1.5));
+    }
+}

@@ -1,0 +1,158 @@
+//! Signed fixed-point formats.
+//!
+//! The paper uses a Q16.15 representation: 32 bits — 1 sign bit, 16
+//! integer bits, 15 fractional bits — and the compiler backend is "fully
+//! parametric with respect to the length of the fixed point representation
+//! as well as the precision of the fractional part". [`QFormat`] carries
+//! that parameterization through the whole stack: software model, RTL
+//! generation, gate-level lowering, and the JAX/Pallas kernels (which bake
+//! the same constants into the AOT artifacts).
+
+use std::fmt;
+
+/// A signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+/// The paper's default format: Q16.15 (32-bit words).
+pub const Q16_15: QFormat = QFormat { int_bits: 16, frac_bits: 15 };
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> QFormat {
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// Total word width in bits (sign + integer + fraction).
+    pub const fn width(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Scale factor: `2^frac_bits`.
+    pub const fn scale(&self) -> i64 {
+        1i64 << self.frac_bits
+    }
+
+    /// Largest representable raw value: `2^(width-1) - 1`.
+    pub const fn max_raw(&self) -> i64 {
+        (1i64 << (self.width() - 1)) - 1
+    }
+
+    /// Smallest representable raw value: `-2^(width-1)`.
+    pub const fn min_raw(&self) -> i64 {
+        -(1i64 << (self.width() - 1))
+    }
+
+    /// Largest representable real value.
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 / self.scale() as f64
+    }
+
+    /// Smallest representable real value.
+    pub fn min_value(&self) -> f64 {
+        self.min_raw() as f64 / self.scale() as f64
+    }
+
+    /// Resolution (value of one LSB).
+    pub fn epsilon(&self) -> f64 {
+        1.0 / self.scale() as f64
+    }
+
+    /// Saturate a raw (already scaled) integer into range.
+    pub fn saturate(&self, raw: i128) -> i64 {
+        let max = self.max_raw() as i128;
+        let min = self.min_raw() as i128;
+        if raw > max {
+            self.max_raw()
+        } else if raw < min {
+            self.min_raw()
+        } else {
+            raw as i64
+        }
+    }
+
+    /// Quantize a real number to the nearest representable raw value
+    /// (round half away from zero, saturating).
+    pub fn from_f64(&self, v: f64) -> i64 {
+        let scaled = v * self.scale() as f64;
+        let rounded = if scaled >= 0.0 { (scaled + 0.5).floor() } else { (scaled - 0.5).ceil() };
+        if rounded.is_nan() {
+            return 0;
+        }
+        self.saturate(rounded as i128)
+    }
+
+    /// Real value of a raw integer.
+    pub fn to_f64(&self, raw: i64) -> f64 {
+        raw as f64 / self.scale() as f64
+    }
+
+    /// Raw representation of 1.0.
+    pub const fn one(&self) -> i64 {
+        self.scale()
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q16_15_constants() {
+        assert_eq!(Q16_15.width(), 32);
+        assert_eq!(Q16_15.scale(), 32768);
+        assert_eq!(Q16_15.max_raw(), i32::MAX as i64);
+        assert_eq!(Q16_15.min_raw(), i32::MIN as i64);
+        assert_eq!(Q16_15.one(), 32768);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for v in [0.0, 1.0, -1.0, 3.14159, -2.5, 1000.125] {
+            let raw = Q16_15.from_f64(v);
+            let back = Q16_15.to_f64(raw);
+            assert!((back - v).abs() <= Q16_15.epsilon(), "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn rounding_half_away_from_zero() {
+        // 0.5 LSB rounds up in magnitude.
+        let half_lsb = Q16_15.epsilon() / 2.0;
+        assert_eq!(Q16_15.from_f64(half_lsb), 1);
+        assert_eq!(Q16_15.from_f64(-half_lsb), -1);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Q16_15.from_f64(1e9), Q16_15.max_raw());
+        assert_eq!(Q16_15.from_f64(-1e9), Q16_15.min_raw());
+        assert_eq!(Q16_15.saturate(i128::MAX), Q16_15.max_raw());
+        assert_eq!(Q16_15.saturate(i128::MIN), Q16_15.min_raw());
+    }
+
+    #[test]
+    fn parametric_formats() {
+        let q8_7 = QFormat::new(8, 7);
+        assert_eq!(q8_7.width(), 16);
+        assert_eq!(q8_7.scale(), 128);
+        let q24_23 = QFormat::new(24, 23);
+        assert_eq!(q24_23.width(), 48);
+        // Max value grows with int bits.
+        assert!(q24_23.max_value() > Q16_15.max_value());
+        assert!(q8_7.epsilon() > Q16_15.epsilon());
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Q16_15.to_string(), "Q16.15");
+    }
+}

@@ -1,0 +1,43 @@
+//! # dimsynth — Dimensional Circuit Synthesis
+//!
+//! A reproduction of *"Synthesizing Compact Hardware for Accelerating
+//! Inference from Physical Signals in Sensors"* (Tsoutsouras, Vigdorchik,
+//! Stanley-Marbell, 2020): a compiler backend that turns Newton-language
+//! descriptions of physical systems into RTL hardware computing the
+//! Buckingham-Π dimensionless products used as features for in-sensor
+//! machine-learning inference — plus the full evaluation substrate
+//! (synthesis to LUT4s, timing, power, cycle-accurate simulation) and an
+//! in-sensor inference runtime (Π preprocessing + Φ model served via
+//! AOT-compiled XLA executables).
+//!
+//! ## Layers
+//!
+//! * **Frontend** — [`newton`]: lexer/parser/sema for the Newton subset,
+//!   plus the 7-system Table-1 corpus.
+//! * **Analysis** — [`pisearch`]: exact rational nullspace of the
+//!   dimensional matrix, target isolation.
+//! * **Backend** — [`rtl`]: Π datapaths in Q16.15 fixed point
+//!   ([`fixedpoint`]), FSM scheduling, Verilog emission, cycle-accurate
+//!   simulation.
+//! * **Implementation flow** — [`synth`] (gate netlist, optimization,
+//!   LUT4 technology mapping), [`timing`] (STA → Fmax), [`power`]
+//!   (switching-activity power model), [`stim`] (LFSR stimulus).
+//! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
+//!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine),
+//!   [`train`] (offline/in-situ Φ calibration).
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod fixedpoint;
+pub mod newton;
+pub mod pisearch;
+pub mod power;
+pub mod rational;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod stim;
+pub mod synth;
+pub mod train;
+pub mod timing;
+pub mod units;

@@ -1,0 +1,239 @@
+//! `dimsynth` — command-line driver for dimensional circuit synthesis.
+//!
+//! Subcommands (hand-rolled parsing; no external CLI dependency):
+//!
+//! ```text
+//! dimsynth compile <system|file.nt> [--target <sym>] [--format Qi.f] [-o DIR]
+//!     Run the compiler: Π-search report + generated Verilog + resource,
+//!     timing and power reports for one system.
+//! dimsynth table1 [--samples N]
+//!     Regenerate the paper's Table 1 across the 7-system corpus.
+//! dimsynth export-pisearch
+//!     Emit the Π-search interchange JSON consumed by python/compile/aot.py.
+//! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
+//!     Offline Φ calibration via the AOT train-step executable.
+//! dimsynth serve <system> [--samples N] [--batch B] [--artifacts DIR]
+//!     Run the in-sensor inference engine on a synthetic sensor stream.
+//! dimsynth list
+//!     List the corpus systems.
+//! ```
+
+use dimsynth::fixedpoint::{QFormat, Q16_15};
+use dimsynth::newton::{self, corpus};
+use dimsynth::pisearch;
+use dimsynth::report;
+use dimsynth::rtl::{self, Policy};
+use dimsynth::synth;
+use dimsynth::timing::{self, ICE40_LP};
+use dimsynth::{coordinator, power, train};
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else if let Some(name) = a.strip_prefix('-') {
+            if i + 1 < args.len() {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn parse_format(s: &str) -> anyhow::Result<QFormat> {
+    // "Q16.15" or "16.15"
+    let s = s.trim_start_matches(['Q', 'q']);
+    let (i, f) = s
+        .split_once('.')
+        .ok_or_else(|| anyhow::anyhow!("format must look like Q16.15"))?;
+    Ok(QFormat::new(i.parse()?, f.parse()?))
+}
+
+fn cmd_list() {
+    println!("{:<24} {:<18} {:<40}", "id", "target", "description");
+    for e in corpus() {
+        println!("{:<24} {:<18} {:<40}", e.id, e.target, e.description);
+    }
+}
+
+fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let what = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth compile <system|file.nt>"))?;
+    let q = flags
+        .get("format")
+        .map(|s| parse_format(s))
+        .transpose()?
+        .unwrap_or(Q16_15);
+
+    // Resolve: corpus id or a .nt file on disk.
+    let (model, target) = if let Some(e) = newton::by_id(what) {
+        (newton::load_entry(&e)?, e.target.to_string())
+    } else {
+        let src = std::fs::read_to_string(what)?;
+        let models = newton::load(&src)?;
+        let model = models
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no invariant in {what}"))?;
+        let target = flags
+            .get("target")
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("--target required for .nt files"))?;
+        (model, target)
+    };
+
+    let analysis = pisearch::analyze_optimized(&model, &target)?;
+    println!("{analysis}");
+
+    let design = rtl::build(&analysis, q);
+    let verilog = rtl::verilog::emit(&design);
+    let mapped = synth::map_design(&design);
+    let t = timing::analyze(&mapped.netlist, &ICE40_LP);
+    let act = power::measure_activity(&mapped.netlist, &design, 4, 0xACE1);
+
+    println!("format:      {q}");
+    println!("ports:       {}", design.num_inputs());
+    println!("pi outputs:  {}", design.num_outputs());
+    println!("latency:     {} cycles", rtl::module_latency(&design, Policy::ParallelPerPi));
+    println!("LUT4 cells:  {}", mapped.lut4_cells);
+    println!("gates:       {}", mapped.gate_count);
+    println!("DFFs:        {}", mapped.dffs);
+    println!("Fmax:        {:.2} MHz (depth {})", t.fmax_mhz, t.depth);
+    println!(
+        "power:       {:.2} mW @6MHz / {:.2} mW @12MHz",
+        power::average_power_mw(&power::ICE40, &act, 6.0e6),
+        power::average_power_mw(&power::ICE40, &act, 12.0e6)
+    );
+
+    if let Some(dir) = flags.get("o").or_else(|| flags.get("out")) {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.v", design.name);
+        std::fs::write(&path, &verilog)?;
+        println!("wrote {path}");
+        // Self-checking testbench with golden vectors from the bit-exact
+        // software model.
+        let vectors = rtl::golden_vectors(&design, 16, 0x60D);
+        let tb = rtl::emit_testbench(&design, &vectors);
+        let tb_path = format!("{dir}/{}_tb.v", design.name);
+        std::fs::write(&tb_path, tb)?;
+        println!("wrote {tb_path} ({} golden vectors)", vectors.len());
+        // Optional waveform of one gate-level activation.
+        if flags.contains_key("vcd") {
+            let mut sim = synth::GateSim::new(&mapped.netlist);
+            let mut buses: Vec<String> =
+                (0..design.num_outputs()).map(|u| format!("pi_{u}")).collect();
+            buses.push("done".to_string());
+            let bus_refs: Vec<&str> = buses.iter().map(String::as_str).collect();
+            let mut rec = synth::VcdRecorder::new(&mapped.netlist, &bus_refs);
+            for (p, gv) in design.ports.iter().zip(&vectors[1].inputs) {
+                sim.set_bus(&format!("in_{}", p.name), *gv);
+            }
+            sim.set_bus("start", 1);
+            sim.step();
+            rec.capture(&sim);
+            sim.set_bus("start", 0);
+            while !sim.get_bit("done") {
+                sim.step();
+                rec.capture(&sim);
+            }
+            let vcd_path = format!("{dir}/{}.vcd", design.name);
+            std::fs::write(&vcd_path, rec.render(&design.name))?;
+            println!("wrote {vcd_path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let samples: u32 = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let rows = report::generate_table(Q16_15, samples)?;
+    print!("{}", report::render_markdown(&rows));
+    Ok(())
+}
+
+fn cmd_export() -> anyhow::Result<()> {
+    print!("{}", report::export_json(Q16_15)?);
+    Ok(())
+}
+
+fn cmd_train(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let system = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth train <system>"))?;
+    let steps: u32 = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
+    let feats = match flags.get("features").map(String::as_str) {
+        Some("raw") => train::FeatureKind::Raw,
+        _ => train::FeatureKind::Pi,
+    };
+    let artifacts = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let out = train::run_training(&artifacts, system, feats, steps, 0xD1CE)?;
+    println!(
+        "trained {system} on {:?} features: {} steps, final loss {:.6}, val RMSE {:.5} ({} params)",
+        feats,
+        out.steps,
+        out.final_loss,
+        out.val_rmse,
+        out.params.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let system = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth serve <system>"))?;
+    let samples: usize = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(2048);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let artifacts = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let report = coordinator::serve_synthetic(&artifacts, system, samples, batch)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: dimsynth <compile|table1|export-pisearch|train|serve|list> ...");
+        return ExitCode::from(2);
+    };
+    let (pos, flags) = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "list" => {
+            cmd_list();
+            Ok(())
+        }
+        "compile" => cmd_compile(&pos, &flags),
+        "table1" => cmd_table1(&flags),
+        "export-pisearch" => cmd_export(),
+        "train" => cmd_train(&pos, &flags),
+        "serve" => cmd_serve(&pos, &flags),
+        other => Err(anyhow::anyhow!("unknown subcommand `{other}`")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

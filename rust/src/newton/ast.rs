@@ -1,0 +1,197 @@
+//! Abstract syntax for the Newton physical-system description language.
+//!
+//! The subset implemented here covers what dimensional circuit synthesis
+//! consumes (paper Fig. 2): *signal* definitions carrying units of measure,
+//! *constant* definitions, and *invariant* blocks that list the physical
+//! signals of a system and (optionally) proportionality relations between
+//! them.
+//!
+//! ```text
+//! distance : signal = { name = "meter" English; symbol = m; derivation = none; }
+//! g        : constant = 9.80665 * m / (s ** 2);
+//! glider   : invariant(h: distance, v: speed, t: time) = { h ~ v * t }
+//! ```
+
+use std::fmt;
+
+/// Source position (1-based line and column) for diagnostics.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Pos {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Pos {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A unit/dimension expression: products, quotients and integer powers of
+/// named signals, possibly with numeric scale factors.
+#[derive(Clone, PartialEq, Debug)]
+pub enum UnitExpr {
+    /// Reference to a previously defined signal (or builtin).
+    Ident(String, Pos),
+    /// A numeric literal (scale factor; dimensionless).
+    Number(f64, Pos),
+    /// Product of two unit expressions.
+    Mul(Box<UnitExpr>, Box<UnitExpr>),
+    /// Quotient of two unit expressions.
+    Div(Box<UnitExpr>, Box<UnitExpr>),
+    /// Integer power (`expr ** n`).
+    Pow(Box<UnitExpr>, i64),
+    /// The literal `none` (a base signal with its own fresh dimension is
+    /// not supported here; `none` marks a pre-seeded builtin base signal).
+    None(Pos),
+}
+
+impl UnitExpr {
+    pub fn pos(&self) -> Pos {
+        match self {
+            UnitExpr::Ident(_, p) | UnitExpr::Number(_, p) | UnitExpr::None(p) => *p,
+            UnitExpr::Mul(a, _) | UnitExpr::Div(a, _) => a.pos(),
+            UnitExpr::Pow(a, _) => a.pos(),
+        }
+    }
+}
+
+impl fmt::Display for UnitExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UnitExpr::Ident(s, _) => write!(f, "{s}"),
+            UnitExpr::Number(n, _) => write!(f, "{n}"),
+            UnitExpr::Mul(a, b) => write!(f, "({a} * {b})"),
+            UnitExpr::Div(a, b) => write!(f, "({a} / {b})"),
+            UnitExpr::Pow(a, n) => write!(f, "({a} ** {n})"),
+            UnitExpr::None(_) => write!(f, "none"),
+        }
+    }
+}
+
+/// `<name> : signal = { name = "..." <lang>; symbol = <sym>; derivation = <expr>; }`
+#[derive(Clone, Debug)]
+pub struct SignalDecl {
+    pub ident: String,
+    /// Human-readable unit name (`"meter"`), if given.
+    pub unit_name: Option<String>,
+    /// Language tag after the name (`English`), if given.
+    pub language: Option<String>,
+    /// Unit symbol (`m`), if given.
+    pub symbol: Option<String>,
+    /// Derivation expression; `UnitExpr::None` for base signals.
+    pub derivation: UnitExpr,
+    pub pos: Pos,
+}
+
+/// `<name> : constant = <number> * <unitexpr>;`
+#[derive(Clone, Debug)]
+pub struct ConstantDecl {
+    pub ident: String,
+    pub value: f64,
+    /// Unit expression giving the constant's dimension (may be `None` for
+    /// dimensionless constants).
+    pub unit: Option<UnitExpr>,
+    pub pos: Pos,
+}
+
+/// One parameter of an invariant: `h : distance`.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub signal: String,
+    pub pos: Pos,
+}
+
+/// A proportionality/equality relation inside an invariant body, e.g.
+/// `h ~ v * t`. Relations are parsed and dimension-checked but the Π-search
+/// uses only the parameter list (the Buckingham theorem needs only the
+/// dimensions).
+#[derive(Clone, Debug)]
+pub struct Relation {
+    pub lhs: UnitExpr,
+    pub op: RelOp,
+    pub rhs: UnitExpr,
+    pub pos: Pos,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RelOp {
+    /// `~` — proportional to (dimensions must match).
+    Proportional,
+    /// `=` — equal (dimensions must match).
+    Equal,
+}
+
+impl fmt::Display for RelOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RelOp::Proportional => write!(f, "~"),
+            RelOp::Equal => write!(f, "="),
+        }
+    }
+}
+
+/// `<name> : invariant(p1: sig1, ...) = { relations }`
+#[derive(Clone, Debug)]
+pub struct InvariantDecl {
+    pub ident: String,
+    pub params: Vec<Param>,
+    pub relations: Vec<Relation>,
+    pub pos: Pos,
+}
+
+/// Top-level declaration.
+#[derive(Clone, Debug)]
+pub enum Decl {
+    Signal(SignalDecl),
+    Constant(ConstantDecl),
+    Invariant(InvariantDecl),
+}
+
+impl Decl {
+    pub fn ident(&self) -> &str {
+        match self {
+            Decl::Signal(s) => &s.ident,
+            Decl::Constant(c) => &c.ident,
+            Decl::Invariant(i) => &i.ident,
+        }
+    }
+
+    pub fn pos(&self) -> Pos {
+        match self {
+            Decl::Signal(s) => s.pos,
+            Decl::Constant(c) => c.pos,
+            Decl::Invariant(i) => i.pos,
+        }
+    }
+}
+
+/// A parsed Newton source file.
+#[derive(Clone, Debug, Default)]
+pub struct File {
+    pub decls: Vec<Decl>,
+}
+
+impl File {
+    pub fn invariants(&self) -> impl Iterator<Item = &InvariantDecl> {
+        self.decls.iter().filter_map(|d| match d {
+            Decl::Invariant(i) => Some(i),
+            _ => None,
+        })
+    }
+
+    pub fn signals(&self) -> impl Iterator<Item = &SignalDecl> {
+        self.decls.iter().filter_map(|d| match d {
+            Decl::Signal(s) => Some(s),
+            _ => None,
+        })
+    }
+
+    pub fn constants(&self) -> impl Iterator<Item = &ConstantDecl> {
+        self.decls.iter().filter_map(|d| match d {
+            Decl::Constant(c) => Some(c),
+            _ => None,
+        })
+    }
+}

@@ -1,0 +1,251 @@
+//! The evaluation corpus: Newton descriptions of the 7 physical systems
+//! from Table 1 of the paper, with the target parameter used in each
+//! compiler invocation.
+//!
+//! | Name                  | Target parameter |
+//! |-----------------------|------------------|
+//! | Beam                  | beam deflection  |
+//! | Pendulum, static      | oscillation period |
+//! | Fluid in pipe         | fluid velocity   |
+//! | Unpowered flight      | position (height) |
+//! | Vibrating string      | oscillation frequency |
+//! | Warm vibrating string | oscillation frequency |
+//! | Spring-mass system    | spring constant  |
+
+use super::sema::{self, SystemModel};
+
+/// One corpus entry: name, description, Newton source, and the target
+/// parameter the paper uses for that system.
+#[derive(Clone, Debug)]
+pub struct CorpusEntry {
+    /// Short identifier (used for artifact and report names).
+    pub id: &'static str,
+    /// Table-1 display name.
+    pub display_name: &'static str,
+    /// Table-1 description.
+    pub description: &'static str,
+    /// Table-1 target parameter description.
+    pub target_desc: &'static str,
+    /// The invariant parameter that is the inference target.
+    pub target: &'static str,
+    /// Newton source text.
+    pub source: &'static str,
+}
+
+/// Cantilevered beam model, excluding mass of beam. Deflection of the tip
+/// under a point load: δ = F L³ / (3 E I). Because the beam's own mass is
+/// excluded, Young's modulus E and the second moment of area I enter only
+/// through the flexural rigidity E·I (dimension M L³ T⁻²), which is the
+/// signal the sensor system observes.
+pub const BEAM: &str = r#"
+flexural_rigidity : signal = { derivation = force * (distance ** 2); }
+
+beam : invariant(deflection : distance,
+                 load       : force,
+                 length     : distance,
+                 rigidity   : flexural_rigidity) = {
+    deflection * rigidity ~ load * (length ** 3)
+}
+"#;
+
+/// Simple pendulum excluding dynamics and friction: t = 2π sqrt(l/g).
+pub const PENDULUM: &str = r#"
+pendulum : invariant(period  : time,
+                     length  : distance,
+                     bobmass : mass,
+                     g       : kNewtonUnithave_AccelerationDueToGravity) = {
+    (period ** 2) * g ~ length
+}
+"#;
+
+/// Pressure drop of a fluid through a pipe (Darcy–Weisbach regime).
+pub const FLUID_PIPE: &str = r#"
+density   : signal = { derivation = mass / (distance ** 3); }
+viscosity : signal = { derivation = pressure * time; }
+
+fluid_pipe : invariant(pressure_drop : pressure,
+                       rho           : density,
+                       velocity      : speed,
+                       diameter      : distance,
+                       pipe_length   : distance,
+                       mu            : viscosity) = {
+    pressure_drop * diameter ~ rho * (velocity ** 2) * pipe_length
+}
+"#;
+
+/// Unpowered flight (e.g., catapulted drone / glider). Fig. 2 of the paper.
+pub const UNPOWERED_FLIGHT: &str = r#"
+glider : invariant(height   : distance,
+                   airspeed : speed,
+                   flight_t : time,
+                   payload  : mass,
+                   g        : kNewtonUnithave_AccelerationDueToGravity) = {
+    height * g ~ airspeed * airspeed
+}
+"#;
+
+/// Vibrating string: f = (1/2l) sqrt(F/μ).
+pub const VIBRATING_STRING: &str = r#"
+linear_density : signal = { derivation = mass / distance; }
+
+vibrating_string : invariant(freq    : frequency,
+                             tension : force,
+                             length  : distance,
+                             mu      : linear_density) = {
+    (freq ** 2) * (length ** 2) * mu ~ tension
+}
+"#;
+
+/// Vibrating string with temperature dependence (thermal expansion changes
+/// tension with temperature).
+pub const WARM_VIBRATING_STRING: &str = r#"
+linear_density : signal = { derivation = mass / distance; }
+thermal_coeff  : signal = { derivation = temperature ** -1; }
+
+warm_vibrating_string : invariant(freq     : frequency,
+                                  tension  : force,
+                                  length   : distance,
+                                  mu       : linear_density,
+                                  temp     : temperature,
+                                  alpha    : thermal_coeff) = {
+    (freq ** 2) * (length ** 2) * mu ~ tension,
+    alpha * temp ~ 1
+}
+"#;
+
+/// Vertical spring with attached mass: ω² = k/m. Gravity sets the static
+/// operating point but cannot join any dimensionless product here (it is
+/// the only length-bearing signal), which the Π-search detects and
+/// reports — mirroring the pendulum's non-participating bob mass.
+pub const SPRING_MASS: &str = r#"
+stiffness : signal = { derivation = force / distance; }
+
+spring_mass : invariant(springk   : stiffness,
+                        bobmass   : mass,
+                        period    : time,
+                        g         : kNewtonUnithave_AccelerationDueToGravity) = {
+    springk * (period ** 2) ~ bobmass
+}
+"#;
+
+/// The full Table-1 corpus, in paper order.
+pub fn corpus() -> Vec<CorpusEntry> {
+    vec![
+        CorpusEntry {
+            id: "beam",
+            display_name: "Beam",
+            description: "Cantilevered beam model, excluding mass of beam",
+            target_desc: "Beam deflection",
+            target: "deflection",
+            source: BEAM,
+        },
+        CorpusEntry {
+            id: "pendulum",
+            display_name: "Pendulum, static",
+            description: "Simple pendulum excluding dynamics and friction",
+            target_desc: "Osc. period",
+            target: "period",
+            source: PENDULUM,
+        },
+        CorpusEntry {
+            id: "fluid_pipe",
+            display_name: "Fluid in Pipe",
+            description: "Pressure drop of a fluid through a pipe",
+            target_desc: "Fluid velocity",
+            target: "velocity",
+            source: FLUID_PIPE,
+        },
+        CorpusEntry {
+            id: "unpowered_flight",
+            display_name: "Unpowered flight",
+            description: "Unpowered flight (e.g., catapulted drone)",
+            target_desc: "Position (height)",
+            target: "height",
+            source: UNPOWERED_FLIGHT,
+        },
+        CorpusEntry {
+            id: "vibrating_string",
+            display_name: "Vibrating string",
+            description: "Vibrating string",
+            target_desc: "Osc. frequency",
+            target: "freq",
+            source: VIBRATING_STRING,
+        },
+        CorpusEntry {
+            id: "warm_vibrating_string",
+            display_name: "Warm vibrating string",
+            description: "Vibrating string with temperature dependence",
+            target_desc: "Osc. frequency",
+            target: "freq",
+            source: WARM_VIBRATING_STRING,
+        },
+        CorpusEntry {
+            id: "spring_mass",
+            display_name: "Spring-mass system",
+            description: "Vertical spring with attached mass",
+            target_desc: "Spring constant",
+            target: "springk",
+            source: SPRING_MASS,
+        },
+    ]
+}
+
+/// Look up a corpus entry by id.
+pub fn by_id(id: &str) -> Option<CorpusEntry> {
+    corpus().into_iter().find(|e| e.id == id)
+}
+
+/// Parse + analyze a corpus entry, returning its system model.
+pub fn load_entry(entry: &CorpusEntry) -> anyhow::Result<SystemModel> {
+    let models = sema::load(entry.source)?;
+    models
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("corpus entry `{}` has no invariant", entry.id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_seven_systems() {
+        assert_eq!(corpus().len(), 7);
+    }
+
+    #[test]
+    fn all_entries_parse_and_analyze() {
+        for e in corpus() {
+            let m = load_entry(&e).unwrap_or_else(|err| panic!("{}: {err}", e.id));
+            assert!(m.k() >= 4, "{} has too few symbols", e.id);
+            assert!(
+                m.symbol_index(e.target).is_some(),
+                "{}: target `{}` not among symbols",
+                e.id,
+                e.target
+            );
+        }
+    }
+
+    #[test]
+    fn by_id_lookup() {
+        assert!(by_id("pendulum").is_some());
+        assert!(by_id("nonexistent").is_none());
+    }
+
+    #[test]
+    fn pendulum_shape() {
+        let m = load_entry(&by_id("pendulum").unwrap()).unwrap();
+        assert_eq!(m.k(), 4);
+        // g resolves as a constant with a value.
+        let g = &m.symbols[3];
+        assert_eq!(g.name, "g");
+        assert!(g.value.is_some());
+    }
+
+    #[test]
+    fn fluid_pipe_has_six_symbols() {
+        let m = load_entry(&by_id("fluid_pipe").unwrap()).unwrap();
+        assert_eq!(m.k(), 6);
+    }
+}

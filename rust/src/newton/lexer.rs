@@ -1,0 +1,304 @@
+//! Hand-written lexer for the Newton subset.
+//!
+//! Produces a flat token stream with positions. Comments are C-style
+//! (`#` to end of line, or `/* ... */`).
+
+use super::ast::Pos;
+use std::fmt;
+
+#[derive(Clone, PartialEq, Debug)]
+pub enum Tok {
+    Ident(String),
+    Number(f64),
+    Str(String),
+    Colon,
+    Semicolon,
+    Comma,
+    Equals,
+    Tilde,
+    Star,
+    StarStar,
+    Slash,
+    Plus,
+    Minus,
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "identifier `{s}`"),
+            Tok::Number(n) => write!(f, "number `{n}`"),
+            Tok::Str(s) => write!(f, "string \"{s}\""),
+            Tok::Colon => write!(f, "`:`"),
+            Tok::Semicolon => write!(f, "`;`"),
+            Tok::Comma => write!(f, "`,`"),
+            Tok::Equals => write!(f, "`=`"),
+            Tok::Tilde => write!(f, "`~`"),
+            Tok::Star => write!(f, "`*`"),
+            Tok::StarStar => write!(f, "`**`"),
+            Tok::Slash => write!(f, "`/`"),
+            Tok::Plus => write!(f, "`+`"),
+            Tok::Minus => write!(f, "`-`"),
+            Tok::LParen => write!(f, "`(`"),
+            Tok::RParen => write!(f, "`)`"),
+            Tok::LBrace => write!(f, "`{{`"),
+            Tok::RBrace => write!(f, "`}}`"),
+            Tok::Eof => write!(f, "end of input"),
+        }
+    }
+}
+
+/// A token with its source position.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub pos: Pos,
+}
+
+/// Lexer error with position.
+#[derive(Debug, thiserror::Error)]
+#[error("lex error at {pos}: {msg}")]
+pub struct LexError {
+    pub pos: Pos,
+    pub msg: String,
+}
+
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut toks = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    macro_rules! pos {
+        () => {
+            Pos { line, col }
+        };
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        let p = pos!();
+        match c {
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            '#' => {
+                while i < bytes.len() && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                i += 2;
+                col += 2;
+                loop {
+                    if i + 1 >= bytes.len() {
+                        return Err(LexError { pos: p, msg: "unterminated block comment".into() });
+                    }
+                    if bytes[i] == '*' && bytes[i + 1] == '/' {
+                        i += 2;
+                        col += 2;
+                        break;
+                    }
+                    if bytes[i] == '\n' {
+                        line += 1;
+                        col = 1;
+                    } else {
+                        col += 1;
+                    }
+                    i += 1;
+                }
+            }
+            '"' => {
+                i += 1;
+                col += 1;
+                let start = i;
+                while i < bytes.len() && bytes[i] != '"' {
+                    if bytes[i] == '\n' {
+                        return Err(LexError { pos: p, msg: "newline in string literal".into() });
+                    }
+                    i += 1;
+                    col += 1;
+                }
+                if i >= bytes.len() {
+                    return Err(LexError { pos: p, msg: "unterminated string literal".into() });
+                }
+                let s: String = bytes[start..i].iter().collect();
+                i += 1;
+                col += 1;
+                toks.push(Token { tok: Tok::Str(s), pos: p });
+            }
+            '*' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == '*' {
+                    toks.push(Token { tok: Tok::StarStar, pos: p });
+                    i += 2;
+                    col += 2;
+                } else {
+                    toks.push(Token { tok: Tok::Star, pos: p });
+                    i += 1;
+                    col += 1;
+                }
+            }
+            ':' | ';' | ',' | '=' | '~' | '/' | '+' | '-' | '(' | ')' | '{' | '}' => {
+                let tok = match c {
+                    ':' => Tok::Colon,
+                    ';' => Tok::Semicolon,
+                    ',' => Tok::Comma,
+                    '=' => Tok::Equals,
+                    '~' => Tok::Tilde,
+                    '/' => Tok::Slash,
+                    '+' => Tok::Plus,
+                    '-' => Tok::Minus,
+                    '(' => Tok::LParen,
+                    ')' => Tok::RParen,
+                    '{' => Tok::LBrace,
+                    '}' => Tok::RBrace,
+                    _ => unreachable!(),
+                };
+                toks.push(Token { tok, pos: p });
+                i += 1;
+                col += 1;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                let mut seen_dot = false;
+                let mut seen_exp = false;
+                while i < bytes.len() {
+                    let d = bytes[i];
+                    if d.is_ascii_digit() {
+                        i += 1;
+                        col += 1;
+                    } else if d == '.' && !seen_dot && !seen_exp {
+                        seen_dot = true;
+                        i += 1;
+                        col += 1;
+                    } else if (d == 'e' || d == 'E') && !seen_exp {
+                        seen_exp = true;
+                        i += 1;
+                        col += 1;
+                        if i < bytes.len() && (bytes[i] == '+' || bytes[i] == '-') {
+                            i += 1;
+                            col += 1;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                let s: String = bytes[start..i].iter().collect();
+                let n: f64 = s
+                    .parse()
+                    .map_err(|_| LexError { pos: p, msg: format!("bad number literal `{s}`") })?;
+                toks.push(Token { tok: Tok::Number(n), pos: p });
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                    col += 1;
+                }
+                let s: String = bytes[start..i].iter().collect();
+                toks.push(Token { tok: Tok::Ident(s), pos: p });
+            }
+            other => {
+                return Err(LexError { pos: p, msg: format!("unexpected character `{other}`") });
+            }
+        }
+    }
+    toks.push(Token { tok: Tok::Eof, pos: pos!() });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn punctuation_and_idents() {
+        let t = kinds("glider : invariant(h: distance) = { }");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("glider".into()),
+                Tok::Colon,
+                Tok::Ident("invariant".into()),
+                Tok::LParen,
+                Tok::Ident("h".into()),
+                Tok::Colon,
+                Tok::Ident("distance".into()),
+                Tok::RParen,
+                Tok::Equals,
+                Tok::LBrace,
+                Tok::RBrace,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(kinds("9.80665")[0], Tok::Number(9.80665));
+        assert_eq!(kinds("1e-3")[0], Tok::Number(1e-3));
+        assert_eq!(kinds("2.5E+2")[0], Tok::Number(250.0));
+        assert_eq!(kinds("42")[0], Tok::Number(42.0));
+    }
+
+    #[test]
+    fn star_star_vs_star() {
+        assert_eq!(kinds("a ** 2"), vec![
+            Tok::Ident("a".into()),
+            Tok::StarStar,
+            Tok::Number(2.0),
+            Tok::Eof
+        ]);
+        assert_eq!(kinds("a * b")[1], Tok::Star);
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let t = kinds("a # comment\n b /* block\n comment */ c");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Ident("b".into()),
+                Tok::Ident("c".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn strings() {
+        assert_eq!(kinds("\"meter\"")[0], Tok::Str("meter".into()));
+    }
+
+    #[test]
+    fn positions_track_lines() {
+        let toks = lex("a\nbb\n  c").unwrap();
+        assert_eq!(toks[0].pos, Pos { line: 1, col: 1 });
+        assert_eq!(toks[1].pos, Pos { line: 2, col: 1 });
+        assert_eq!(toks[2].pos, Pos { line: 3, col: 3 });
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("@").is_err());
+        assert!(lex("\"unterminated").is_err());
+        assert!(lex("/* unterminated").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Newton-language frontend: lexer, parser, semantic analysis, and the
+//! 7-system evaluation corpus from the paper's Table 1.
+
+pub mod ast;
+pub mod corpus;
+pub mod lexer;
+pub mod parser;
+pub mod sema;
+
+pub use corpus::{by_id, corpus, load_entry, CorpusEntry};
+pub use parser::parse;
+pub use sema::{analyze, load, Symbol, SymbolKind, SystemModel};

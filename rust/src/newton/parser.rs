@@ -1,0 +1,444 @@
+//! Recursive-descent parser for the Newton subset.
+//!
+//! Grammar (EBNF):
+//!
+//! ```text
+//! file       := decl*
+//! decl       := ident ":" "signal" "=" "{" sigfield* "}"
+//!             | ident ":" "constant" "=" constexpr ";"
+//!             | ident ":" "invariant" "(" params ")" "=" "{" relations "}"
+//! sigfield   := "name" "=" STRING ident? ";"
+//!             | "symbol" "=" ident ";"
+//!             | "derivation" "=" unitexpr ";"
+//!             | "derivation" "=" "none" ";"
+//! constexpr  := NUMBER ("*" unitexpr)?
+//! params     := param ("," param)*
+//! param      := ident ":" ident
+//! relations  := relation ("," relation)*
+//! relation   := unitexpr ("~" | "=") unitexpr
+//! unitexpr   := unitterm (("*" | "/") unitterm)*
+//! unitterm   := unitfactor ("**" INT)?
+//! unitfactor := ident | NUMBER | "(" unitexpr ")"
+//! ```
+
+use super::ast::*;
+use super::lexer::{lex, LexError, Tok, Token};
+
+/// Parse error with position and message.
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error(transparent)]
+    Lex(#[from] LexError),
+    #[error("parse error at {pos}: {msg}")]
+    Syntax { pos: Pos, msg: String },
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.toks[self.i]
+    }
+
+    fn next(&mut self) -> Token {
+        let t = self.toks[self.i].clone();
+        if self.i + 1 < self.toks.len() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError::Syntax { pos: self.peek().pos, msg: msg.into() })
+    }
+
+    fn expect(&mut self, tok: Tok) -> Result<Token, ParseError> {
+        if self.peek().tok == tok {
+            Ok(self.next())
+        } else {
+            self.err(format!("expected {}, found {}", tok, self.peek().tok))
+        }
+    }
+
+    fn expect_ident(&mut self) -> Result<(String, Pos), ParseError> {
+        match self.peek().tok.clone() {
+            Tok::Ident(s) => {
+                let p = self.peek().pos;
+                self.next();
+                Ok((s, p))
+            }
+            other => self.err(format!("expected identifier, found {other}")),
+        }
+    }
+
+    fn expect_number(&mut self) -> Result<(f64, Pos), ParseError> {
+        // Allow a leading unary minus on numbers.
+        let neg = if self.peek().tok == Tok::Minus {
+            self.next();
+            true
+        } else {
+            false
+        };
+        match self.peek().tok.clone() {
+            Tok::Number(n) => {
+                let p = self.peek().pos;
+                self.next();
+                Ok((if neg { -n } else { n }, p))
+            }
+            other => self.err(format!("expected number, found {other}")),
+        }
+    }
+
+    fn file(&mut self) -> Result<File, ParseError> {
+        let mut decls = Vec::new();
+        while self.peek().tok != Tok::Eof {
+            decls.push(self.decl()?);
+        }
+        Ok(File { decls })
+    }
+
+    fn decl(&mut self) -> Result<Decl, ParseError> {
+        let (ident, pos) = self.expect_ident()?;
+        self.expect(Tok::Colon)?;
+        let (kind, kpos) = self.expect_ident()?;
+        match kind.as_str() {
+            "signal" => self.signal_decl(ident, pos),
+            "constant" => self.constant_decl(ident, pos),
+            "invariant" => self.invariant_decl(ident, pos),
+            other => Err(ParseError::Syntax {
+                pos: kpos,
+                msg: format!("expected `signal`, `constant` or `invariant`, found `{other}`"),
+            }),
+        }
+    }
+
+    fn signal_decl(&mut self, ident: String, pos: Pos) -> Result<Decl, ParseError> {
+        self.expect(Tok::Equals)?;
+        self.expect(Tok::LBrace)?;
+        let mut unit_name = None;
+        let mut language = None;
+        let mut symbol = None;
+        let mut derivation = None;
+        while self.peek().tok != Tok::RBrace {
+            let (field, fpos) = self.expect_ident()?;
+            self.expect(Tok::Equals)?;
+            match field.as_str() {
+                "name" => {
+                    match self.peek().tok.clone() {
+                        Tok::Str(s) => {
+                            self.next();
+                            unit_name = Some(s);
+                        }
+                        other => return self.err(format!("expected string, found {other}")),
+                    }
+                    // Optional language tag, e.g. `English`.
+                    if let Tok::Ident(lang) = self.peek().tok.clone() {
+                        self.next();
+                        language = Some(lang);
+                    }
+                }
+                "symbol" => {
+                    let (s, _) = self.expect_ident()?;
+                    symbol = Some(s);
+                }
+                "derivation" => {
+                    if let Tok::Ident(id) = self.peek().tok.clone() {
+                        if id == "none" {
+                            let p = self.peek().pos;
+                            self.next();
+                            derivation = Some(UnitExpr::None(p));
+                            self.expect(Tok::Semicolon)?;
+                            continue;
+                        }
+                    }
+                    derivation = Some(self.unit_expr()?);
+                }
+                other => {
+                    return Err(ParseError::Syntax {
+                        pos: fpos,
+                        msg: format!("unknown signal field `{other}`"),
+                    })
+                }
+            }
+            self.expect(Tok::Semicolon)?;
+        }
+        self.expect(Tok::RBrace)?;
+        let derivation = derivation.ok_or(ParseError::Syntax {
+            pos,
+            msg: format!("signal `{ident}` missing `derivation` field"),
+        })?;
+        Ok(Decl::Signal(SignalDecl { ident, unit_name, language, symbol, derivation, pos }))
+    }
+
+    fn constant_decl(&mut self, ident: String, pos: Pos) -> Result<Decl, ParseError> {
+        self.expect(Tok::Equals)?;
+        // Optional parenthesized form: `= (9.8 * m / (s**2));`
+        let parens = self.peek().tok == Tok::LParen;
+        if parens {
+            self.next();
+        }
+        let (value, _) = self.expect_number()?;
+        let unit = if self.peek().tok == Tok::Star {
+            self.next();
+            Some(self.unit_expr()?)
+        } else {
+            None
+        };
+        if parens {
+            self.expect(Tok::RParen)?;
+        }
+        self.expect(Tok::Semicolon)?;
+        Ok(Decl::Constant(ConstantDecl { ident, value, unit, pos }))
+    }
+
+    fn invariant_decl(&mut self, ident: String, pos: Pos) -> Result<Decl, ParseError> {
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        loop {
+            let (name, ppos) = self.expect_ident()?;
+            self.expect(Tok::Colon)?;
+            let (signal, _) = self.expect_ident()?;
+            params.push(Param { name, signal, pos: ppos });
+            if self.peek().tok == Tok::Comma {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Equals)?;
+        self.expect(Tok::LBrace)?;
+        let mut relations = Vec::new();
+        while self.peek().tok != Tok::RBrace {
+            let lhs = self.unit_expr()?;
+            let op = match self.peek().tok {
+                Tok::Tilde => {
+                    self.next();
+                    RelOp::Proportional
+                }
+                Tok::Equals => {
+                    self.next();
+                    RelOp::Equal
+                }
+                _ => return self.err(format!("expected `~` or `=`, found {}", self.peek().tok)),
+            };
+            let rhs_pos = self.peek().pos;
+            let rhs = self.unit_expr()?;
+            relations.push(Relation { lhs, op, rhs, pos: rhs_pos });
+            if self.peek().tok == Tok::Comma {
+                self.next();
+            } else {
+                break;
+            }
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(Decl::Invariant(InvariantDecl { ident, params, relations, pos }))
+    }
+
+    fn unit_expr(&mut self) -> Result<UnitExpr, ParseError> {
+        let mut lhs = self.unit_term()?;
+        loop {
+            match self.peek().tok {
+                Tok::Star => {
+                    self.next();
+                    let rhs = self.unit_term()?;
+                    lhs = UnitExpr::Mul(Box::new(lhs), Box::new(rhs));
+                }
+                Tok::Slash => {
+                    self.next();
+                    let rhs = self.unit_term()?;
+                    lhs = UnitExpr::Div(Box::new(lhs), Box::new(rhs));
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn unit_term(&mut self) -> Result<UnitExpr, ParseError> {
+        let base = self.unit_factor()?;
+        if self.peek().tok == Tok::StarStar {
+            self.next();
+            let neg = if self.peek().tok == Tok::Minus {
+                self.next();
+                true
+            } else {
+                false
+            };
+            match self.peek().tok.clone() {
+                Tok::Number(n) => {
+                    if n.fract() != 0.0 {
+                        return self.err("unit exponent must be an integer");
+                    }
+                    self.next();
+                    let e = n as i64;
+                    return Ok(UnitExpr::Pow(Box::new(base), if neg { -e } else { e }));
+                }
+                other => return self.err(format!("expected integer exponent, found {other}")),
+            }
+        }
+        Ok(base)
+    }
+
+    fn unit_factor(&mut self) -> Result<UnitExpr, ParseError> {
+        let p = self.peek().pos;
+        match self.peek().tok.clone() {
+            Tok::Ident(s) => {
+                self.next();
+                Ok(UnitExpr::Ident(s, p))
+            }
+            Tok::Number(n) => {
+                self.next();
+                Ok(UnitExpr::Number(n, p))
+            }
+            Tok::LParen => {
+                self.next();
+                let e = self.unit_expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            other => self.err(format!("expected unit expression, found {other}")),
+        }
+    }
+}
+
+/// Parse Newton source text.
+pub fn parse(src: &str) -> Result<File, ParseError> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, i: 0 };
+    p.file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_signal_base() {
+        let f = parse(
+            r#"distance : signal = {
+                name = "meter" English;
+                symbol = m;
+                derivation = none;
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(f.decls.len(), 1);
+        match &f.decls[0] {
+            Decl::Signal(s) => {
+                assert_eq!(s.ident, "distance");
+                assert_eq!(s.unit_name.as_deref(), Some("meter"));
+                assert_eq!(s.language.as_deref(), Some("English"));
+                assert_eq!(s.symbol.as_deref(), Some("m"));
+                assert!(matches!(s.derivation, UnitExpr::None(_)));
+            }
+            _ => panic!("expected signal"),
+        }
+    }
+
+    #[test]
+    fn parse_signal_derived() {
+        let f = parse(
+            r#"acceleration : signal = {
+                derivation = distance / (time ** 2);
+            }"#,
+        )
+        .unwrap();
+        match &f.decls[0] {
+            Decl::Signal(s) => {
+                assert_eq!(s.derivation.to_string(), "(distance / (time ** 2))");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_constant() {
+        let f = parse("g : constant = (9.80665 * distance / (time ** 2));").unwrap();
+        match &f.decls[0] {
+            Decl::Constant(c) => {
+                assert_eq!(c.ident, "g");
+                assert!((c.value - 9.80665).abs() < 1e-12);
+                assert!(c.unit.is_some());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_dimensionless_constant() {
+        let f = parse("two_pi : constant = 6.283185;").unwrap();
+        match &f.decls[0] {
+            Decl::Constant(c) => assert!(c.unit.is_none()),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_invariant() {
+        let f = parse(
+            r#"glider : invariant(h: distance, v: speed, t: time) = {
+                h ~ v * t
+            }"#,
+        )
+        .unwrap();
+        match &f.decls[0] {
+            Decl::Invariant(i) => {
+                assert_eq!(i.ident, "glider");
+                assert_eq!(i.params.len(), 3);
+                assert_eq!(i.params[1].name, "v");
+                assert_eq!(i.params[1].signal, "speed");
+                assert_eq!(i.relations.len(), 1);
+                assert_eq!(i.relations[0].op, RelOp::Proportional);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_multiple_relations() {
+        let f = parse(
+            r#"sys : invariant(a: distance, b: distance, t: time) = {
+                a ~ b,
+                a / b = 1
+            }"#,
+        )
+        .unwrap();
+        match &f.decls[0] {
+            Decl::Invariant(i) => assert_eq!(i.relations.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn negative_exponent() {
+        let f = parse("x : signal = { derivation = time ** -2; }").unwrap();
+        match &f.decls[0] {
+            Decl::Signal(s) => match &s.derivation {
+                UnitExpr::Pow(_, e) => assert_eq!(*e, -2),
+                other => panic!("expected pow, got {other:?}"),
+            },
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn error_messages_have_positions() {
+        let e = parse("x : bogus = {}").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("1:5"), "message was: {msg}");
+    }
+
+    #[test]
+    fn rejects_fractional_exponent_literal() {
+        assert!(parse("x : signal = { derivation = time ** 1.5; }").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_derivation() {
+        assert!(parse("x : signal = { symbol = q; }").is_err());
+    }
+}

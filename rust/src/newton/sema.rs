@@ -1,0 +1,306 @@
+//! Semantic analysis: resolve a parsed Newton file to a [`SystemModel`] —
+//! the typed, dimension-checked description that the Π-search consumes.
+//!
+//! Resolution proceeds in declaration order against an environment seeded
+//! with the builtin signals and `kNewtonUnithave_*` constants
+//! ([`crate::units::si`]). Every invariant is checked: its parameter
+//! signals must resolve, and every relation in its body must be
+//! dimensionally homogeneous.
+
+use super::ast::{self, Decl, File, RelOp, UnitExpr};
+use crate::rational::Rational;
+use crate::units::{builtin_constants, builtin_signals, Dimension};
+use std::collections::HashMap;
+
+/// What kind of symbol a system variable is.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SymbolKind {
+    /// A sensor signal: a runtime input to the synthesized circuit.
+    Signal,
+    /// A physical constant: folded into the circuit at configuration time
+    /// (still an input port in the generated RTL so calibration can adjust
+    /// it, but known at compile time for scheduling purposes).
+    Constant,
+}
+
+/// A resolved variable of a physical system.
+#[derive(Clone, Debug)]
+pub struct Symbol {
+    pub name: String,
+    pub dimension: Dimension,
+    pub kind: SymbolKind,
+    /// Numeric value for constants (`None` for signals).
+    pub value: Option<f64>,
+}
+
+/// A dimension-checked invariant: the input to dimensional circuit
+/// synthesis for one physical system.
+#[derive(Clone, Debug)]
+pub struct SystemModel {
+    /// Invariant identifier (e.g. `glider`).
+    pub name: String,
+    /// The k symbols of the system, in declaration order.
+    pub symbols: Vec<Symbol>,
+    /// Human-readable rendering of the body relations.
+    pub relations: Vec<String>,
+}
+
+impl SystemModel {
+    pub fn k(&self) -> usize {
+        self.symbols.len()
+    }
+
+    pub fn symbol_index(&self, name: &str) -> Option<usize> {
+        self.symbols.iter().position(|s| s.name == name)
+    }
+
+    pub fn dimensions(&self) -> Vec<Dimension> {
+        self.symbols.iter().map(|s| s.dimension).collect()
+    }
+}
+
+/// Semantic error.
+#[derive(Debug, thiserror::Error)]
+pub enum SemaError {
+    #[error("{pos}: unknown signal or constant `{name}`")]
+    Unknown { pos: ast::Pos, name: String },
+    #[error("{pos}: duplicate definition of `{name}`")]
+    Duplicate { pos: ast::Pos, name: String },
+    #[error("{pos}: relation is not dimensionally homogeneous: [{lhs}] {op} [{rhs}]")]
+    Inhomogeneous { pos: ast::Pos, lhs: String, op: RelOp, rhs: String },
+    #[error("{pos}: `none` derivation is only valid for builtin base signals; define `{name}` with a unit expression")]
+    BadNone { pos: ast::Pos, name: String },
+    #[error("{pos}: fractional power of a numeric scale factor is not supported")]
+    BadPow { pos: ast::Pos },
+}
+
+/// Environment of resolved names → dimensions (+ values for constants).
+struct Env {
+    dims: HashMap<String, Dimension>,
+    consts: HashMap<String, f64>,
+}
+
+impl Env {
+    fn seeded() -> Env {
+        let mut dims = HashMap::new();
+        let mut consts = HashMap::new();
+        for s in builtin_signals() {
+            dims.insert(s.name.to_string(), s.dimension);
+            // Symbols are also usable as unit names (`m`, `s`, `kg`, ...).
+            dims.insert(s.symbol.to_string(), s.dimension);
+        }
+        for c in builtin_constants() {
+            dims.insert(c.name.to_string(), c.dimension);
+            consts.insert(c.name.to_string(), c.value);
+        }
+        Env { dims, consts }
+    }
+
+    fn eval(&self, e: &UnitExpr) -> Result<Dimension, SemaError> {
+        match e {
+            UnitExpr::Ident(name, pos) => self
+                .dims
+                .get(name)
+                .copied()
+                .ok_or_else(|| SemaError::Unknown { pos: *pos, name: name.clone() }),
+            UnitExpr::Number(_, _) => Ok(Dimension::NONE),
+            UnitExpr::Mul(a, b) => Ok(self.eval(a)? * self.eval(b)?),
+            UnitExpr::Div(a, b) => Ok(self.eval(a)? / self.eval(b)?),
+            UnitExpr::Pow(a, n) => Ok(self.eval(a)?.pow(Rational::from_int(*n))),
+            UnitExpr::None(pos) => Err(SemaError::BadPow { pos: *pos }),
+        }
+    }
+}
+
+/// Resolve a parsed file into one [`SystemModel`] per invariant.
+pub fn analyze(file: &File) -> Result<Vec<SystemModel>, SemaError> {
+    let mut env = Env::seeded();
+    let mut models = Vec::new();
+
+    for decl in &file.decls {
+        match decl {
+            Decl::Signal(s) => {
+                if env.dims.contains_key(&s.ident) && !matches!(s.derivation, UnitExpr::None(_)) {
+                    // Redefinition of a builtin with a derivation is an error;
+                    // re-declaring a builtin base signal with `derivation = none`
+                    // (as real Newton preludes do) is accepted as a no-op.
+                    return Err(SemaError::Duplicate { pos: s.pos, name: s.ident.clone() });
+                }
+                let dim = match &s.derivation {
+                    UnitExpr::None(pos) => {
+                        // Only builtins may use `none`.
+                        env.dims.get(&s.ident).copied().ok_or(SemaError::BadNone {
+                            pos: *pos,
+                            name: s.ident.clone(),
+                        })?
+                    }
+                    e => env.eval(e)?,
+                };
+                env.dims.insert(s.ident.clone(), dim);
+                if let Some(sym) = &s.symbol {
+                    env.dims.entry(sym.clone()).or_insert(dim);
+                }
+            }
+            Decl::Constant(c) => {
+                if env.dims.contains_key(&c.ident) {
+                    return Err(SemaError::Duplicate { pos: c.pos, name: c.ident.clone() });
+                }
+                let dim = match &c.unit {
+                    Some(u) => env.eval(u)?,
+                    None => Dimension::NONE,
+                };
+                env.dims.insert(c.ident.clone(), dim);
+                env.consts.insert(c.ident.clone(), c.value);
+            }
+            Decl::Invariant(inv) => {
+                let mut symbols = Vec::new();
+                let mut local = HashMap::new();
+                for p in &inv.params {
+                    let dim = env.dims.get(&p.signal).copied().ok_or_else(|| {
+                        SemaError::Unknown { pos: p.pos, name: p.signal.clone() }
+                    })?;
+                    let kind = if env.consts.contains_key(&p.signal) {
+                        SymbolKind::Constant
+                    } else {
+                        SymbolKind::Signal
+                    };
+                    if local.contains_key(&p.name) {
+                        return Err(SemaError::Duplicate { pos: p.pos, name: p.name.clone() });
+                    }
+                    local.insert(p.name.clone(), dim);
+                    symbols.push(Symbol {
+                        name: p.name.clone(),
+                        dimension: dim,
+                        kind,
+                        value: env.consts.get(&p.signal).copied(),
+                    });
+                }
+                // Relation checking: parameters shadow globals inside the body.
+                let mut body_env = Env {
+                    dims: env.dims.clone(),
+                    consts: env.consts.clone(),
+                };
+                for (name, dim) in &local {
+                    body_env.dims.insert(name.clone(), *dim);
+                }
+                let mut relations = Vec::new();
+                for r in &inv.relations {
+                    let lhs = body_env.eval(&r.lhs)?;
+                    let rhs = body_env.eval(&r.rhs)?;
+                    if lhs != rhs {
+                        return Err(SemaError::Inhomogeneous {
+                            pos: r.pos,
+                            lhs: lhs.formula(),
+                            op: r.op,
+                            rhs: rhs.formula(),
+                        });
+                    }
+                    relations.push(format!("{} {} {}", r.lhs, r.op, r.rhs));
+                }
+                models.push(SystemModel { name: inv.ident.clone(), symbols, relations });
+            }
+        }
+    }
+    Ok(models)
+}
+
+/// Convenience: parse + analyze in one call.
+pub fn load(src: &str) -> anyhow::Result<Vec<SystemModel>> {
+    let file = super::parser::parse(src)?;
+    Ok(analyze(&file)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::newton::parser::parse;
+    use crate::units::BaseDim;
+
+    const GLIDER: &str = r#"
+        glider : invariant(h: distance,
+                           v: speed,
+                           t: time,
+                           g: kNewtonUnithave_AccelerationDueToGravity) = {
+            h ~ v * t
+        }
+    "#;
+
+    #[test]
+    fn glider_resolves() {
+        let models = analyze(&parse(GLIDER).unwrap()).unwrap();
+        assert_eq!(models.len(), 1);
+        let m = &models[0];
+        assert_eq!(m.name, "glider");
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.symbols[0].dimension, Dimension::base(BaseDim::Length));
+        assert_eq!(m.symbols[3].kind, SymbolKind::Constant);
+        assert!((m.symbols[3].value.unwrap() - 9.80665).abs() < 1e-9);
+        assert_eq!(m.relations.len(), 1);
+    }
+
+    #[test]
+    fn custom_signal_and_constant() {
+        let src = r#"
+            linear_density : signal = { derivation = mass / distance; }
+            k_spring : constant = (120.0 * force / distance);
+            s : invariant(mu: linear_density, k: k_spring) = { }
+        "#;
+        let models = analyze(&parse(src).unwrap()).unwrap();
+        let m = &models[0];
+        assert_eq!(m.symbols[0].dimension.formula(), "M L^-1");
+        assert_eq!(m.symbols[1].dimension.formula(), "M T^-2");
+        assert_eq!(m.symbols[1].kind, SymbolKind::Constant);
+    }
+
+    #[test]
+    fn unknown_signal_rejected() {
+        let src = "s : invariant(x: warpdrive) = { }";
+        assert!(matches!(
+            analyze(&parse(src).unwrap()),
+            Err(SemaError::Unknown { .. })
+        ));
+    }
+
+    #[test]
+    fn inhomogeneous_relation_rejected() {
+        let src = "s : invariant(h: distance, t: time) = { h ~ t }";
+        assert!(matches!(
+            analyze(&parse(src).unwrap()),
+            Err(SemaError::Inhomogeneous { .. })
+        ));
+    }
+
+    #[test]
+    fn homogeneous_relation_with_powers() {
+        let src = r#"
+            s : invariant(h: distance,
+                          g: acceleration,
+                          t: time) = { h ~ g * (t ** 2) }
+        "#;
+        assert!(analyze(&parse(src).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn duplicate_param_rejected() {
+        let src = "s : invariant(x: distance, x: time) = { }";
+        assert!(matches!(
+            analyze(&parse(src).unwrap()),
+            Err(SemaError::Duplicate { .. })
+        ));
+    }
+
+    #[test]
+    fn none_derivation_on_nonbuiltin_rejected() {
+        let src = "weird : signal = { derivation = none; }";
+        assert!(analyze(&parse(src).unwrap()).is_err());
+    }
+
+    #[test]
+    fn builtin_redeclaration_with_none_ok() {
+        let src = r#"
+            time : signal = { name = "second" English; symbol = s; derivation = none; }
+            s2 : invariant(t: time) = { }
+        "#;
+        assert!(analyze(&parse(src).unwrap()).is_ok());
+    }
+}

@@ -1,0 +1,327 @@
+//! Buckingham Π-group construction and target isolation.
+//!
+//! Given a [`SystemModel`] with k symbols, we form the dimensional matrix
+//! D (7 × k) and compute a basis of its nullspace — each basis vector is a
+//! vector of exponents `e` such that `∏ sᵢ^eᵢ` is dimensionless (paper
+//! Eq. 1, Buckingham Π-theorem). The backend then performs a *basis
+//! change* so that the user-selected target parameter appears in exactly
+//! one Π (paper Section 2.A, Step 2), and canonicalizes each group:
+//! smallest integer exponents, target's (or first) exponent positive.
+
+use super::matrix::{integerize, RMatrix};
+use crate::newton::{SystemModel};
+use crate::rational::Rational;
+use std::fmt;
+
+/// One dimensionless product: integer exponents over the system symbols.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct PiGroup {
+    /// Exponent of each system symbol (same order as `SystemModel::symbols`).
+    pub exponents: Vec<i64>,
+}
+
+impl PiGroup {
+    /// Total serial work: Σ|eᵢ| fixed-point operations (each unit power is
+    /// one multiply or divide in the generated datapath).
+    pub fn op_count(&self) -> usize {
+        self.exponents.iter().map(|e| e.unsigned_abs() as usize).sum()
+    }
+
+    /// Number of multiplications (positive-exponent unit powers), counting
+    /// the implicit chaining: the first factor is a load, not a multiply.
+    pub fn is_trivial(&self) -> bool {
+        self.exponents.iter().all(|&e| e == 0)
+    }
+
+    /// Render as a monomial over the given symbol names, e.g. `g·t^2/l`.
+    pub fn render(&self, names: &[String]) -> String {
+        let mut num = Vec::new();
+        let mut den = Vec::new();
+        for (i, &e) in self.exponents.iter().enumerate() {
+            if e > 0 {
+                num.push(if e == 1 { names[i].clone() } else { format!("{}^{}", names[i], e) });
+            } else if e < 0 {
+                den.push(if e == -1 { names[i].clone() } else { format!("{}^{}", names[i], -e) });
+            }
+        }
+        let n = if num.is_empty() { "1".to_string() } else { num.join("·") };
+        if den.is_empty() {
+            n
+        } else {
+            format!("{}/({})", n, den.join("·"))
+        }
+    }
+}
+
+/// The result of Π-group construction for one system.
+#[derive(Clone, Debug)]
+pub struct PiAnalysis {
+    /// System name.
+    pub system: String,
+    /// Symbol names in column order.
+    pub symbols: Vec<String>,
+    /// Index of the target symbol.
+    pub target: usize,
+    /// The Π groups; the target appears (with positive exponent) in
+    /// `groups[target_group]` and nowhere else.
+    pub groups: Vec<PiGroup>,
+    /// Which group contains the target.
+    pub target_group: usize,
+    /// Rank of the dimensional matrix.
+    pub rank: usize,
+    /// Symbols that cannot participate in any dimensionless product (their
+    /// exponent is zero in the whole nullspace), e.g. the bob mass of an
+    /// ideal pendulum.
+    pub nonparticipating: Vec<usize>,
+}
+
+impl PiAnalysis {
+    pub fn n(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Indices of the symbols that actually feed the datapath.
+    pub fn participating(&self) -> Vec<usize> {
+        (0..self.symbols.len())
+            .filter(|i| self.groups.iter().any(|g| g.exponents[*i] != 0))
+            .collect()
+    }
+}
+
+impl fmt::Display for PiAnalysis {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "system `{}`: k={} rank={} N={}", self.system, self.symbols.len(), self.rank, self.n())?;
+        for (i, g) in self.groups.iter().enumerate() {
+            let marker = if i == self.target_group { " (target group)" } else { "" };
+            writeln!(f, "  Π{} = {}{}", i + 1, g.render(&self.symbols), marker)?;
+        }
+        if !self.nonparticipating.is_empty() {
+            let names: Vec<_> = self.nonparticipating.iter().map(|&i| self.symbols[i].as_str()).collect();
+            writeln!(f, "  non-participating: {}", names.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+/// Error cases of the Π search.
+#[derive(Debug, thiserror::Error)]
+pub enum PiError {
+    #[error("system `{0}` has no dimensionless products (nullspace is trivial)")]
+    NoGroups(String),
+    #[error("target `{target}` of system `{system}` cannot appear in any dimensionless product")]
+    TargetNotExpressible { system: String, target: String },
+    #[error("unknown target symbol `{target}` in system `{system}`")]
+    UnknownTarget { system: String, target: String },
+}
+
+/// Run the Π-search for `model` with the given target parameter.
+pub fn analyze(model: &SystemModel, target: &str) -> Result<PiAnalysis, PiError> {
+    let target_idx = model.symbol_index(target).ok_or_else(|| PiError::UnknownTarget {
+        system: model.name.clone(),
+        target: target.to_string(),
+    })?;
+
+    let dims = model.dimensions();
+    let d = RMatrix::dimensional(&dims);
+    let rank = d.rank();
+    let basis = d.nullspace();
+    if basis.is_empty() {
+        return Err(PiError::NoGroups(model.name.clone()));
+    }
+
+    // Non-participating symbols: zero in every nullspace basis vector.
+    let k = model.k();
+    let nonparticipating: Vec<usize> = (0..k)
+        .filter(|&i| basis.iter().all(|x| x[i].is_zero()))
+        .collect();
+    if nonparticipating.contains(&target_idx) {
+        return Err(PiError::TargetNotExpressible {
+            system: model.name.clone(),
+            target: target.to_string(),
+        });
+    }
+
+    // Basis change: make the target appear in exactly one basis vector.
+    // Pick the vector with the "simplest" nonzero target coefficient as
+    // pivot, then eliminate the target coordinate from all others.
+    let mut basis: Vec<Vec<Rational>> = basis;
+    let pivot = basis
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| !x[target_idx].is_zero())
+        .min_by_key(|(_, x)| {
+            // Prefer small exponent magnitudes overall.
+            x.iter().map(|r| (r.abs().to_f64() * 6.0) as i64).sum::<i64>()
+        })
+        .map(|(i, _)| i)
+        .expect("target participates, so some vector has nonzero coefficient");
+    basis.swap(0, pivot);
+    let pivot_vec = basis[0].clone();
+    let pc = pivot_vec[target_idx];
+    for v in basis.iter_mut().skip(1) {
+        if !v[target_idx].is_zero() {
+            let f = v[target_idx] / pc;
+            for (j, x) in v.iter_mut().enumerate() {
+                *x = *x - f * pivot_vec[j];
+            }
+        }
+    }
+
+    // Canonicalize: integer scaling; target group gets positive target
+    // exponent, others get positive first-nonzero exponent.
+    let mut groups = Vec::with_capacity(basis.len());
+    for (gi, v) in basis.iter().enumerate() {
+        let mut ints = integerize(v);
+        let sign_ref = if gi == 0 {
+            ints[target_idx]
+        } else {
+            *ints.iter().find(|&&e| e != 0).unwrap_or(&1)
+        };
+        if sign_ref < 0 {
+            for e in ints.iter_mut() {
+                *e = -*e;
+            }
+        }
+        groups.push(PiGroup { exponents: ints });
+    }
+
+    // Deterministic order: target group first, the rest sorted by
+    // (op_count, exponents) for reproducible RTL generation.
+    let target_g = groups.remove(0);
+    groups.sort_by(|a, b| a.op_count().cmp(&b.op_count()).then(a.exponents.cmp(&b.exponents)));
+    groups.insert(0, target_g);
+
+    Ok(PiAnalysis {
+        system: model.name.clone(),
+        symbols: model.symbols.iter().map(|s| s.name.clone()).collect(),
+        target: target_idx,
+        groups,
+        target_group: 0,
+        rank,
+        nonparticipating,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::newton::corpus;
+    use crate::units::Dimension;
+
+    fn analyze_entry(id: &str) -> PiAnalysis {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        analyze(&m, e.target).unwrap()
+    }
+
+    /// Every Π group must actually be dimensionless.
+    fn assert_dimensionless(id: &str, a: &PiAnalysis) {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        for g in &a.groups {
+            let mut d = Dimension::NONE;
+            for (i, &exp) in g.exponents.iter().enumerate() {
+                d = d * m.symbols[i].dimension.powi(exp);
+            }
+            assert!(d.is_dimensionless(), "{id}: Π {:?} has dimension {}", g.exponents, d);
+        }
+    }
+
+    #[test]
+    fn pendulum_single_group() {
+        let a = analyze_entry("pendulum");
+        assert_eq!(a.n(), 1);
+        assert_dimensionless("pendulum", &a);
+        // Mass cannot participate.
+        assert_eq!(a.nonparticipating.len(), 1);
+        assert_eq!(a.symbols[a.nonparticipating[0]], "bobmass");
+        // Π = g t² / l (up to our canonical ordering): target exponent +2 or +1.
+        let g = &a.groups[0];
+        assert!(g.exponents[a.target] > 0);
+    }
+
+    #[test]
+    fn beam_groups_target_isolated() {
+        // Beam (δ, F, L, EI): M and T appear in fixed ratio across F and
+        // EI, so the dimensional matrix has rank 2 and N = 4 - 2 = 2
+        // groups (δ/L and F·L²/(EI) up to basis choice).
+        let a = analyze_entry("beam");
+        assert_eq!(a.n(), 2);
+        assert_dimensionless("beam", &a);
+        // deflection appears only in the target group.
+        for (i, g) in a.groups.iter().enumerate() {
+            if i != a.target_group {
+                assert_eq!(g.exponents[a.target], 0, "target leaked into Π{}", i + 1);
+            } else {
+                assert!(g.exponents[a.target] > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn fluid_pipe_three_groups() {
+        let a = analyze_entry("fluid_pipe");
+        assert_eq!(a.n(), 3);
+        assert_dimensionless("fluid_pipe", &a);
+        // velocity isolated to one group.
+        let v = a.target;
+        let holders: Vec<_> = a.groups.iter().filter(|g| g.exponents[v] != 0).collect();
+        assert_eq!(holders.len(), 1);
+    }
+
+    #[test]
+    fn all_corpus_systems_analyze() {
+        for e in corpus::corpus() {
+            let m = corpus::load_entry(&e).unwrap();
+            let a = analyze(&m, e.target).unwrap_or_else(|err| panic!("{}: {err}", e.id));
+            assert!(a.n() >= 1);
+            assert_dimensionless(e.id, &a);
+            // Target isolation invariant.
+            for (i, g) in a.groups.iter().enumerate() {
+                if i == a.target_group {
+                    assert!(g.exponents[a.target] > 0, "{}: target exponent not positive", e.id);
+                } else {
+                    assert_eq!(g.exponents[a.target], 0, "{}: target not isolated", e.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_target_errors() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        assert!(matches!(
+            analyze(&m, "nonexistent"),
+            Err(PiError::UnknownTarget { .. })
+        ));
+    }
+
+    #[test]
+    fn nonexpressible_target_errors() {
+        // Pendulum's bob mass cannot form a dimensionless group.
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        assert!(matches!(
+            analyze(&m, "bobmass"),
+            Err(PiError::TargetNotExpressible { .. })
+        ));
+    }
+
+    #[test]
+    fn render_groups() {
+        let a = analyze_entry("pendulum");
+        let s = a.groups[0].render(&a.symbols);
+        // Should mention period and length.
+        assert!(s.contains("period"), "render: {s}");
+        assert!(s.contains("length"), "render: {s}");
+    }
+
+    #[test]
+    fn op_count() {
+        let g = PiGroup { exponents: vec![2, -1, 0, 1] };
+        assert_eq!(g.op_count(), 4);
+        assert!(!g.is_trivial());
+        assert!(PiGroup { exponents: vec![0, 0] }.is_trivial());
+    }
+}

@@ -1,0 +1,282 @@
+//! Exact rational matrices and Gaussian elimination.
+//!
+//! The dimensional matrix of a physical system is tiny (≤ 7 rows, k ≤ ~10
+//! columns) but must be handled exactly — see [`crate::rational`]. This
+//! module provides a dense rational matrix with reduced-row-echelon-form
+//! (RREF) elimination, rank, and nullspace-basis extraction.
+
+use crate::rational::{gcd, lcm, Rational};
+use crate::units::{Dimension, NUM_BASE_DIMS};
+use std::fmt;
+
+/// Dense matrix of exact rationals (row-major).
+#[derive(Clone, PartialEq, Eq)]
+pub struct RMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<Rational>,
+}
+
+impl RMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> RMatrix {
+        RMatrix { rows, cols, data: vec![Rational::ZERO; rows * cols] }
+    }
+
+    /// Build from integer rows (panics if rows are ragged).
+    pub fn from_int_rows(rows: &[Vec<i64>]) -> RMatrix {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = RMatrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, v) in row.iter().enumerate() {
+                m[(i, j)] = Rational::from_int(*v);
+            }
+        }
+        m
+    }
+
+    /// The dimensional matrix of a list of symbol dimensions: one row per
+    /// SI base dimension, one column per symbol.
+    pub fn dimensional(dims: &[Dimension]) -> RMatrix {
+        let mut m = RMatrix::zeros(NUM_BASE_DIMS, dims.len());
+        for (j, d) in dims.iter().enumerate() {
+            for (i, e) in d.exps().iter().enumerate() {
+                m[(i, j)] = *e;
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// In-place reduction to RREF. Returns the pivot columns.
+    pub fn rref(&mut self) -> Vec<usize> {
+        let mut pivots = Vec::new();
+        let mut r = 0usize;
+        for c in 0..self.cols {
+            if r >= self.rows {
+                break;
+            }
+            // Find a pivot row at or below r with nonzero entry in column c.
+            let Some(p) = (r..self.rows).find(|&i| !self[(i, c)].is_zero()) else {
+                continue;
+            };
+            self.swap_rows(r, p);
+            // Normalize pivot row.
+            let inv = self[(r, c)].recip();
+            for j in c..self.cols {
+                self[(r, j)] = self[(r, j)] * inv;
+            }
+            // Eliminate column c from all other rows.
+            for i in 0..self.rows {
+                if i != r && !self[(i, c)].is_zero() {
+                    let f = self[(i, c)];
+                    for j in c..self.cols {
+                        let v = self[(r, j)] * f;
+                        self[(i, j)] = self[(i, j)] - v;
+                    }
+                }
+            }
+            pivots.push(c);
+            r += 1;
+        }
+        pivots
+    }
+
+    /// Rank via RREF on a copy.
+    pub fn rank(&self) -> usize {
+        let mut m = self.clone();
+        m.rref().len()
+    }
+
+    fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for j in 0..self.cols {
+            let ia = a * self.cols + j;
+            let ib = b * self.cols + j;
+            self.data.swap(ia, ib);
+        }
+    }
+
+    /// Basis of the (right) nullspace: vectors `x` with `A x = 0`.
+    ///
+    /// Returned in the standard RREF parameterization: one basis vector per
+    /// free column, with a `1` in the free column's position. The basis
+    /// vectors are rational; see [`integerize`] for integer scaling.
+    pub fn nullspace(&self) -> Vec<Vec<Rational>> {
+        let mut m = self.clone();
+        let pivots = m.rref();
+        let pivot_set: Vec<Option<usize>> = {
+            // pivot_of_col[c] = row index of pivot in column c
+            let mut v = vec![None; self.cols];
+            for (row, &c) in pivots.iter().enumerate() {
+                v[c] = Some(row);
+            }
+            v
+        };
+        let free: Vec<usize> =
+            (0..self.cols).filter(|c| pivot_set[*c].is_none()).collect();
+        let mut basis = Vec::with_capacity(free.len());
+        for &fc in &free {
+            let mut x = vec![Rational::ZERO; self.cols];
+            x[fc] = Rational::ONE;
+            for (c, p) in pivot_set.iter().enumerate() {
+                if let Some(row) = p {
+                    // pivot var = -sum(free coeffs)
+                    x[c] = -m[(*row, fc)];
+                }
+            }
+            basis.push(x);
+        }
+        basis
+    }
+
+    /// Multiply this matrix by a vector.
+    pub fn mul_vec(&self, x: &[Rational]) -> Vec<Rational> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                let mut acc = Rational::ZERO;
+                for j in 0..self.cols {
+                    acc = acc + self[(i, j)] * x[j];
+                }
+                acc
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for RMatrix {
+    type Output = Rational;
+    fn index(&self, (i, j): (usize, usize)) -> &Rational {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for RMatrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut Rational {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for RMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "RMatrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  ")?;
+            for j in 0..self.cols {
+                write!(f, "{:>6} ", self[(i, j)].to_string())?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Scale a rational vector to the smallest integer vector with the same
+/// direction (positive multiple). Returns the integer exponents.
+pub fn integerize(x: &[Rational]) -> Vec<i64> {
+    let mut l = 1i64;
+    for r in x {
+        l = lcm(l, r.den()).max(1);
+    }
+    let ints: Vec<i64> = x.iter().map(|r| r.num() * (l / r.den())).collect();
+    let mut g = 0i64;
+    for v in &ints {
+        g = gcd(g, *v);
+    }
+    if g > 1 {
+        ints.iter().map(|v| v / g).collect()
+    } else {
+        ints
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::BaseDim;
+
+    #[test]
+    fn rref_identity() {
+        let mut m = RMatrix::from_int_rows(&[vec![2, 0], vec![0, 3]]);
+        let p = m.rref();
+        assert_eq!(p, vec![0, 1]);
+        assert_eq!(m[(0, 0)], Rational::ONE);
+        assert_eq!(m[(1, 1)], Rational::ONE);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let m = RMatrix::from_int_rows(&[vec![1, 2, 3], vec![2, 4, 6], vec![1, 1, 1]]);
+        assert_eq!(m.rank(), 2);
+    }
+
+    #[test]
+    fn nullspace_simple() {
+        // x + y + z = 0 → nullity 2.
+        let m = RMatrix::from_int_rows(&[vec![1, 1, 1]]);
+        let ns = m.nullspace();
+        assert_eq!(ns.len(), 2);
+        for x in &ns {
+            let out = m.mul_vec(x);
+            assert!(out.iter().all(|r| r.is_zero()));
+        }
+    }
+
+    #[test]
+    fn nullspace_of_full_rank_is_empty() {
+        let m = RMatrix::from_int_rows(&[vec![1, 0], vec![0, 1]]);
+        assert!(m.nullspace().is_empty());
+    }
+
+    #[test]
+    fn dimensional_matrix_pendulum() {
+        // t(T), l(L), m(M), g(L T^-2)
+        let dims = vec![
+            Dimension::base(BaseDim::Time),
+            Dimension::base(BaseDim::Length),
+            Dimension::base(BaseDim::Mass),
+            Dimension::base(BaseDim::Length) / Dimension::base(BaseDim::Time).powi(2),
+        ];
+        let m = RMatrix::dimensional(&dims);
+        assert_eq!(m.rows(), NUM_BASE_DIMS);
+        assert_eq!(m.cols(), 4);
+        assert_eq!(m.rank(), 3);
+        let ns = m.nullspace();
+        assert_eq!(ns.len(), 1); // N = k - rank = 1
+        // Verify the basis vector is (up to scale) [2, -1, 0, 1]: g t^2 / l.
+        let ints = integerize(&ns[0]);
+        let scaled: Vec<i64> = if ints[0] < 0 { ints.iter().map(|v| -v).collect() } else { ints };
+        assert_eq!(scaled, vec![2, -1, 0, 1]);
+    }
+
+    #[test]
+    fn integerize_scales_fractions() {
+        let v = vec![Rational::new(1, 2), Rational::new(-1, 3), Rational::ONE];
+        assert_eq!(integerize(&v), vec![3, -2, 6]);
+    }
+
+    #[test]
+    fn integerize_reduces_common_factor() {
+        let v = vec![Rational::from_int(4), Rational::from_int(-6)];
+        assert_eq!(integerize(&v), vec![2, -3]);
+    }
+
+    #[test]
+    fn mul_vec() {
+        let m = RMatrix::from_int_rows(&[vec![1, 2], vec![3, 4]]);
+        let x = vec![Rational::from_int(1), Rational::from_int(1)];
+        let y = m.mul_vec(&x);
+        assert_eq!(y, vec![Rational::from_int(3), Rational::from_int(7)]);
+    }
+}

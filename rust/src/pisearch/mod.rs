@@ -1,0 +1,10 @@
+//! Buckingham Π-theorem engine: exact dimensional-matrix nullspace
+//! computation and target-isolating basis change (paper Section 2.A).
+
+pub mod groups;
+pub mod matrix;
+pub mod reduce;
+
+pub use groups::{analyze, PiAnalysis, PiError, PiGroup};
+pub use matrix::{integerize, RMatrix};
+pub use reduce::{analyze_optimized, optimize, CostModel};

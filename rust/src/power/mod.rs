@@ -1,0 +1,7 @@
+//! Switching-activity power estimation (Table-1 "Avg. Power" columns).
+
+pub mod model;
+
+pub use model::{
+    average_power, average_power_mw, measure_activity, ActivityReport, PowerModel, ICE40,
+};

@@ -1,0 +1,288 @@
+//! Exact rational arithmetic over `i64`.
+//!
+//! Dimensional analysis requires *exact* linear algebra: the dimensional
+//! matrix of a physical system has small integer (occasionally fractional)
+//! entries and its nullspace must be computed without floating-point error,
+//! otherwise spurious "almost dimensionless" groups appear. This module
+//! provides the minimal exact-arithmetic substrate used by
+//! [`crate::pisearch`] and [`crate::units`].
+//!
+//! Values are kept in canonical form: `den > 0` and `gcd(num, den) == 1`.
+//! All operations panic on overflow in debug builds and use checked
+//! arithmetic with explicit reduction in release builds; the magnitudes in
+//! dimensional analysis are tiny (exponents of units of measure), so `i64`
+//! headroom is ample.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// Greatest common divisor (always non-negative).
+pub fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple (non-negative; `lcm(0, x) == 0`).
+pub fn lcm(a: i64, b: i64) -> i64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).abs().saturating_mul(b.abs())
+}
+
+/// An exact rational number `num/den` in canonical form.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rational {
+    num: i64,
+    den: i64,
+}
+
+impl Rational {
+    pub const ZERO: Rational = Rational { num: 0, den: 1 };
+    pub const ONE: Rational = Rational { num: 1, den: 1 };
+
+    /// Construct `num/den`, reducing to canonical form.
+    ///
+    /// Panics if `den == 0`.
+    pub fn new(num: i64, den: i64) -> Rational {
+        assert!(den != 0, "Rational with zero denominator");
+        let sign = if den < 0 { -1 } else { 1 };
+        let g = gcd(num, den).max(1);
+        Rational {
+            num: sign * (num / g),
+            den: (den / g).abs(),
+        }
+    }
+
+    /// Construct from an integer.
+    pub const fn from_int(n: i64) -> Rational {
+        Rational { num: n, den: 1 }
+    }
+
+    pub fn num(&self) -> i64 {
+        self.num
+    }
+
+    pub fn den(&self) -> i64 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// The integer value, if this rational is an integer.
+    pub fn as_integer(&self) -> Option<i64> {
+        if self.den == 1 {
+            Some(self.num)
+        } else {
+            None
+        }
+    }
+
+    pub fn abs(&self) -> Rational {
+        Rational {
+            num: self.num.abs(),
+            den: self.den,
+        }
+    }
+
+    pub fn signum(&self) -> i64 {
+        self.num.signum()
+    }
+
+    pub fn recip(&self) -> Rational {
+        assert!(self.num != 0, "reciprocal of zero");
+        Rational::new(self.den, self.num)
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// Checked addition (None on overflow).
+    pub fn checked_add(&self, rhs: &Rational) -> Option<Rational> {
+        let num = self
+            .num
+            .checked_mul(rhs.den)?
+            .checked_add(rhs.num.checked_mul(self.den)?)?;
+        let den = self.den.checked_mul(rhs.den)?;
+        Some(Rational::new(num, den))
+    }
+
+    /// Checked multiplication (None on overflow). Cross-reduces first to
+    /// keep intermediates small.
+    pub fn checked_mul(&self, rhs: &Rational) -> Option<Rational> {
+        let g1 = gcd(self.num, rhs.den).max(1);
+        let g2 = gcd(rhs.num, self.den).max(1);
+        let num = (self.num / g1).checked_mul(rhs.num / g2)?;
+        let den = (self.den / g2).checked_mul(rhs.den / g1)?;
+        Some(Rational::new(num, den))
+    }
+}
+
+impl fmt::Debug for Rational {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)
+    }
+}
+
+impl fmt::Display for Rational {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl From<i64> for Rational {
+    fn from(n: i64) -> Rational {
+        Rational::from_int(n)
+    }
+}
+
+impl Add for Rational {
+    type Output = Rational;
+    fn add(self, rhs: Rational) -> Rational {
+        self.checked_add(&rhs).expect("Rational add overflow")
+    }
+}
+
+impl AddAssign for Rational {
+    fn add_assign(&mut self, rhs: Rational) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for Rational {
+    type Output = Rational;
+    fn sub(self, rhs: Rational) -> Rational {
+        self + (-rhs)
+    }
+}
+
+impl Neg for Rational {
+    type Output = Rational;
+    fn neg(self) -> Rational {
+        Rational {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+}
+
+impl Mul for Rational {
+    type Output = Rational;
+    fn mul(self, rhs: Rational) -> Rational {
+        self.checked_mul(&rhs).expect("Rational mul overflow")
+    }
+}
+
+impl Div for Rational {
+    type Output = Rational;
+    fn div(self, rhs: Rational) -> Rational {
+        self * rhs.recip()
+    }
+}
+
+impl PartialOrd for Rational {
+    fn partial_cmp(&self, other: &Rational) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Rational {
+    fn cmp(&self, other: &Rational) -> Ordering {
+        // num1/den1 ? num2/den2  <=>  num1*den2 ? num2*den1 (dens positive)
+        let lhs = (self.num as i128) * (other.den as i128);
+        let rhs = (other.num as i128) * (self.den as i128);
+        lhs.cmp(&rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(-12, 18), 6);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(0, 0), 0);
+        assert_eq!(gcd(7, 13), 1);
+    }
+
+    #[test]
+    fn lcm_basics() {
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 6), 0);
+        assert_eq!(lcm(-4, 6), 12);
+    }
+
+    #[test]
+    fn canonical_form() {
+        let r = Rational::new(6, -4);
+        assert_eq!(r.num(), -3);
+        assert_eq!(r.den(), 2);
+        assert_eq!(Rational::new(0, -7), Rational::ZERO);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_denominator_panics() {
+        let _ = Rational::new(1, 0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Rational::new(1, 2);
+        let b = Rational::new(1, 3);
+        assert_eq!(a + b, Rational::new(5, 6));
+        assert_eq!(a - b, Rational::new(1, 6));
+        assert_eq!(a * b, Rational::new(1, 6));
+        assert_eq!(a / b, Rational::new(3, 2));
+        assert_eq!(-a, Rational::new(-1, 2));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Rational::new(1, 3) < Rational::new(1, 2));
+        assert!(Rational::new(-1, 2) < Rational::ZERO);
+        assert_eq!(Rational::new(2, 4).cmp(&Rational::new(1, 2)), Ordering::Equal);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Rational::new(3, 1).to_string(), "3");
+        assert_eq!(Rational::new(-3, 6).to_string(), "-1/2");
+    }
+
+    #[test]
+    fn integer_accessors() {
+        assert_eq!(Rational::new(8, 4).as_integer(), Some(2));
+        assert_eq!(Rational::new(1, 2).as_integer(), None);
+        assert!(Rational::from_int(5).is_integer());
+    }
+
+    #[test]
+    fn cross_reduction_avoids_overflow() {
+        // (big/3) * (3/big) == 1 without overflowing i64 intermediates.
+        let big = 1 << 40;
+        let a = Rational::new(big, 3);
+        let b = Rational::new(3, big);
+        assert_eq!(a * b, Rational::ONE);
+    }
+}

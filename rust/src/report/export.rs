@@ -1,0 +1,173 @@
+//! Compiler-interchange export: the Π-search results the Python AOT
+//! pipeline needs, serialized as JSON.
+//!
+//! This is the single source of truth for the exponent matrices: the Rust
+//! Π-search computes them once; the generated RTL, the Pallas kernel and
+//! the reference oracle all consume the same matrices, so a bug cannot
+//! hide in a re-derivation. (No external serde dependency — the structure
+//! is small and flat, emitted by hand.)
+
+use crate::fixedpoint::QFormat;
+use crate::newton::{corpus, load_entry};
+use crate::pisearch::analyze_optimized;
+use crate::rtl::{self, Policy};
+
+/// Exported description of one compiled system.
+#[derive(Clone, Debug)]
+pub struct SystemExport {
+    pub id: String,
+    /// All symbol names, in Newton declaration order.
+    pub symbols: Vec<String>,
+    /// Indices of participating symbols (the hardware port order).
+    pub ports: Vec<usize>,
+    /// Port names (sanitized).
+    pub port_names: Vec<String>,
+    /// N×k' exponent matrix over *ports*.
+    pub exponents: Vec<Vec<i64>>,
+    /// Index of the target symbol (over `symbols`).
+    pub target_index: usize,
+    /// Which Π group isolates the target.
+    pub target_group: usize,
+    /// Module latency in cycles (paper scheduling policy).
+    pub latency: u64,
+}
+
+impl SystemExport {
+    /// Position of the target symbol in port order.
+    pub fn target_port(&self) -> usize {
+        self.ports
+            .iter()
+            .position(|&si| si == self.target_index)
+            .expect("target participates, so it has a port")
+    }
+
+    /// Invert the target-isolating monomial: given a predicted Π₀ and the
+    /// measured non-target port signals, solve for the target parameter.
+    pub fn recover_target(&self, pi0: f64, values_q: &[i64], q: QFormat) -> f64 {
+        let exps = &self.exponents[self.target_group];
+        let tp = self.target_port();
+        let e_t = exps[tp];
+        debug_assert!(e_t != 0);
+        let mut others = 1f64;
+        for (i, &e) in exps.iter().enumerate() {
+            if i != tp && e != 0 {
+                others *= q.to_f64(values_q[i]).powi(e as i32);
+            }
+        }
+        let ratio = pi0 / others;
+        if ratio <= 0.0 {
+            return f64::NAN;
+        }
+        ratio.powf(1.0 / e_t as f64)
+    }
+}
+
+/// Build the export record for one corpus system.
+pub fn export_system(id: &str, q: QFormat) -> anyhow::Result<SystemExport> {
+    let entry = corpus::by_id(id).ok_or_else(|| anyhow::anyhow!("unknown system `{id}`"))?;
+    let model = load_entry(&entry)?;
+    let analysis = analyze_optimized(&model, entry.target)?;
+    let design = rtl::build(&analysis, q);
+    Ok(SystemExport {
+        id: id.to_string(),
+        symbols: analysis.symbols.clone(),
+        ports: design.ports.iter().map(|p| p.symbol_index).collect(),
+        port_names: design.ports.iter().map(|p| p.name.clone()).collect(),
+        exponents: design.units.iter().map(|u| u.exponents.clone()).collect(),
+        target_index: analysis.target,
+        target_group: design.target_unit,
+        latency: rtl::module_latency(&design, Policy::ParallelPerPi),
+    })
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_str_array(items: &[String]) -> String {
+    let inner: Vec<String> = items.iter().map(|s| json_str(s)).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn json_int_array<T: std::fmt::Display>(items: &[T]) -> String {
+    let inner: Vec<String> = items.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+/// Serialize the full corpus export as JSON (plus the fixed-point format).
+pub fn export_json(q: QFormat) -> anyhow::Result<String> {
+    let mut systems = Vec::new();
+    for e in corpus::corpus() {
+        let ex = export_system(e.id, q)?;
+        let exp_rows: Vec<String> = ex.exponents.iter().map(|r| json_int_array(r)).collect();
+        systems.push(format!(
+            "{{\"id\":{},\"symbols\":{},\"ports\":{},\"port_names\":{},\"exponents\":[{}],\"target_index\":{},\"target_group\":{},\"latency\":{}}}",
+            json_str(&ex.id),
+            json_str_array(&ex.symbols),
+            json_int_array(&ex.ports),
+            json_str_array(&ex.port_names),
+            exp_rows.join(","),
+            ex.target_index,
+            ex.target_group,
+            ex.latency,
+        ));
+    }
+    Ok(format!(
+        "{{\"format\":{{\"int_bits\":{},\"frac_bits\":{}}},\"systems\":[{}]}}\n",
+        q.int_bits,
+        q.frac_bits,
+        systems.join(",")
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+
+    #[test]
+    fn export_pendulum_shape() {
+        let ex = export_system("pendulum", Q16_15).unwrap();
+        assert_eq!(ex.symbols.len(), 4);
+        assert_eq!(ex.ports.len(), 3); // bobmass dropped
+        assert_eq!(ex.exponents.len(), 1);
+        assert_eq!(ex.exponents[0].len(), 3);
+        assert_eq!(ex.latency, 115);
+    }
+
+    #[test]
+    fn json_is_parseable_shape() {
+        // No JSON parser in the dependency set: check structural tokens.
+        let j = export_json(Q16_15).unwrap();
+        assert!(j.starts_with('{'));
+        assert!(j.trim_end().ends_with('}'));
+        assert_eq!(j.matches("\"id\":").count(), 7);
+        assert!(j.contains("\"frac_bits\":15"));
+        assert!(j.contains("\"pendulum\""));
+        // Balanced braces/brackets.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        assert_eq!(super::json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+
+    #[test]
+    fn unknown_system_errors() {
+        assert!(export_system("nope", Q16_15).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Report generation: the Table-1 renderer, the compiler-interchange JSON
+//! consumed by `python/compile/aot.py`, and small formatting helpers.
+
+pub mod export;
+pub mod table1;
+
+pub use export::{export_json, SystemExport};
+pub use table1::{generate_row, generate_table, render_markdown, Table1Row};

@@ -1,0 +1,132 @@
+//! Table-1 regeneration: run the full flow (frontend → Π-search → RTL →
+//! synthesis → timing → power) for every corpus system and render the
+//! same columns the paper reports.
+
+use crate::fixedpoint::QFormat;
+use crate::newton::{corpus, load_entry, CorpusEntry};
+use crate::pisearch::analyze_optimized;
+use crate::power::{self, ICE40};
+use crate::rtl::{self, Policy};
+use crate::synth;
+use crate::timing::{self, ICE40_LP};
+
+/// One row of the regenerated Table 1.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub id: String,
+    pub display_name: String,
+    pub description: String,
+    pub target: String,
+    pub lut4_cells: usize,
+    pub gate_count: usize,
+    pub fmax_mhz: f64,
+    pub latency_cycles: u64,
+    pub power_12mhz_mw: f64,
+    pub power_6mhz_mw: f64,
+    /// Number of Π groups (not in the paper's table; useful context).
+    pub n_groups: usize,
+}
+
+/// Paper values for side-by-side comparison (Table 1 of the paper).
+pub fn paper_row(id: &str) -> Option<(usize, usize, f64, u64, f64, f64)> {
+    // (LUT4, gates, Fmax MHz, latency, P@12MHz mW, P@6MHz mW)
+    match id {
+        "beam" => Some((2958, 2590, 16.88, 115, 3.5, 1.8)),
+        "pendulum" => Some((1402, 1239, 17.07, 115, 2.0, 1.1)),
+        "fluid_pipe" => Some((4258, 3752, 15.65, 188, 5.8, 3.0)),
+        "unpowered_flight" => Some((1930, 1865, 16.44, 81, 2.3, 1.2)),
+        "vibrating_string" => Some((2183, 1787, 16.67, 183, 2.5, 1.3)),
+        "warm_vibrating_string" => Some((3137, 2718, 16.77, 269, 1.9, 1.0)),
+        "spring_mass" => Some((1419, 1240, 16.67, 115, 3.4, 1.8)),
+        _ => None,
+    }
+}
+
+/// Run the full flow for one system.
+pub fn generate_row(entry: &CorpusEntry, q: QFormat, power_samples: u32) -> anyhow::Result<Table1Row> {
+    let model = load_entry(entry)?;
+    let analysis = analyze_optimized(&model, entry.target)?;
+    let design = rtl::build(&analysis, q);
+    let mapped = synth::map_design(&design);
+    let t = timing::analyze(&mapped.netlist, &ICE40_LP);
+    let act = power::measure_activity(&mapped.netlist, &design, power_samples, 0xACE1);
+    Ok(Table1Row {
+        id: entry.id.to_string(),
+        display_name: entry.display_name.to_string(),
+        description: entry.description.to_string(),
+        target: entry.target_desc.to_string(),
+        lut4_cells: mapped.lut4_cells,
+        gate_count: mapped.gate_count,
+        fmax_mhz: t.fmax_mhz,
+        latency_cycles: rtl::module_latency(&design, Policy::ParallelPerPi),
+        power_12mhz_mw: power::average_power_mw(&ICE40, &act, 12.0e6),
+        power_6mhz_mw: power::average_power_mw(&ICE40, &act, 6.0e6),
+        n_groups: analysis.n(),
+    })
+}
+
+/// Run the full flow for the whole corpus.
+pub fn generate_table(q: QFormat, power_samples: u32) -> anyhow::Result<Vec<Table1Row>> {
+    corpus().iter().map(|e| generate_row(e, q, power_samples)).collect()
+}
+
+/// Render rows as a Markdown table with paper values side by side.
+pub fn render_markdown(rows: &[Table1Row]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "| Name | Target | LUT4 cells (paper) | Gates (paper) | Fmax MHz (paper) | Latency cyc (paper) | P@12MHz mW (paper) | P@6MHz mW (paper) |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        let p = paper_row(&r.id);
+        let fmt = |m: String, pv: String| format!("{m} ({pv})");
+        let (pl, pg, pf, plat, p12, p6) = p
+            .map(|(a, b, c, d, e, f)| {
+                (a.to_string(), b.to_string(), format!("{c:.2}"), d.to_string(), format!("{e:.1}"), format!("{f:.1}"))
+            })
+            .unwrap_or(("–".into(), "–".into(), "–".into(), "–".into(), "–".into(), "–".into()));
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            r.display_name,
+            r.target,
+            fmt(r.lut4_cells.to_string(), pl),
+            fmt(r.gate_count.to_string(), pg),
+            fmt(format!("{:.2}", r.fmax_mhz), pf),
+            fmt(r.latency_cycles.to_string(), plat),
+            fmt(format!("{:.1}", r.power_12mhz_mw), p12),
+            fmt(format!("{:.1}", r.power_6mhz_mw), p6),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::newton::by_id;
+
+    #[test]
+    fn pendulum_row_matches_paper_latency() {
+        let r = generate_row(&by_id("pendulum").unwrap(), Q16_15, 2).unwrap();
+        assert_eq!(r.latency_cycles, 115);
+        assert_eq!(r.n_groups, 1);
+        assert!(r.lut4_cells > 500);
+    }
+
+    #[test]
+    fn full_table_generates() {
+        let rows = generate_table(Q16_15, 1).unwrap();
+        assert_eq!(rows.len(), 7);
+        let md = render_markdown(&rows);
+        assert!(md.contains("Pendulum, static"));
+        assert_eq!(md.lines().count(), 2 + 7);
+    }
+
+    #[test]
+    fn paper_rows_present_for_all() {
+        for e in corpus() {
+            assert!(paper_row(e.id).is_some(), "{}", e.id);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! RTL intermediate representation for dimensional circuit synthesis.
+//!
+//! A [`PiModuleDesign`] is the backend's description of one generated
+//! hardware module (paper Fig. 3): `k'` signal input ports (participating
+//! symbols only), one parallel datapath unit per Π product, each unit a
+//! microprogrammed FSM driving one sequential multiplier and one
+//! sequential divider, and a `done` handshake when all units finish.
+//!
+//! The same IR feeds four consumers: the Verilog emitter
+//! ([`super::verilog`]), the cycle-accurate simulator ([`super::sim`]),
+//! the analytic scheduler ([`super::sched`]), and the gate-level lowering
+//! ([`mod@crate::synth::lower`]).
+
+use crate::fixedpoint::{monomial_ops, MonOp, QFormat};
+use crate::pisearch::PiAnalysis;
+
+/// One input port of the generated module.
+#[derive(Clone, Debug)]
+pub struct Port {
+    /// Port name (sanitized symbol name).
+    pub name: String,
+    /// Index of the symbol in the originating `SystemModel`.
+    pub symbol_index: usize,
+}
+
+/// One Π datapath unit: a serial microprogram over the module's ports.
+#[derive(Clone, Debug)]
+pub struct PiUnit {
+    /// Unit name (`pi_0`, `pi_1`, ...).
+    pub name: String,
+    /// Exponents over the module's *ports* (not the original symbols).
+    pub exponents: Vec<i64>,
+    /// Canonical serial schedule (op indices refer to ports).
+    pub ops: Vec<MonOp>,
+    /// Human-readable monomial, for reports and Verilog comments.
+    pub expr: String,
+}
+
+/// A complete generated module.
+#[derive(Clone, Debug)]
+pub struct PiModuleDesign {
+    /// Module name (`pi_compute_<system>`).
+    pub name: String,
+    /// System identifier it was generated from.
+    pub system: String,
+    /// Fixed-point format of all ports and datapaths.
+    pub q: QFormat,
+    /// Signal input ports, in order.
+    pub ports: Vec<Port>,
+    /// Parallel Π units, target group first.
+    pub units: Vec<PiUnit>,
+    /// Index of the unit computing the target group.
+    pub target_unit: usize,
+    /// Names of symbols that did not participate (reported, not ported).
+    pub dropped_symbols: Vec<String>,
+}
+
+impl PiModuleDesign {
+    /// Number of signal inputs.
+    pub fn num_inputs(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// Number of Π outputs.
+    pub fn num_outputs(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Map a full symbol-value vector (one entry per system symbol) to the
+    /// module's port order.
+    pub fn select_inputs(&self, symbol_values: &[i64]) -> Vec<i64> {
+        self.ports.iter().map(|p| symbol_values[p.symbol_index]).collect()
+    }
+}
+
+/// Sanitize a symbol name into a Verilog-safe identifier.
+pub fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if s.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+/// Build the RTL design for an analyzed system.
+///
+/// Non-participating symbols are dropped from the port list (they cannot
+/// influence any dimensionless product); exponent vectors are re-indexed
+/// to port positions.
+pub fn build(analysis: &PiAnalysis, q: QFormat) -> PiModuleDesign {
+    let participating = analysis.participating();
+    let ports: Vec<Port> = participating
+        .iter()
+        .map(|&i| Port { name: sanitize(&analysis.symbols[i]), symbol_index: i })
+        .collect();
+    // symbol index -> port index
+    let mut port_of = vec![usize::MAX; analysis.symbols.len()];
+    for (pi, &si) in participating.iter().enumerate() {
+        port_of[si] = pi;
+    }
+
+    let units: Vec<PiUnit> = analysis
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| {
+            let mut exps = vec![0i64; ports.len()];
+            for (si, &e) in g.exponents.iter().enumerate() {
+                if e != 0 {
+                    exps[port_of[si]] = e;
+                }
+            }
+            PiUnit {
+                name: format!("pi_{gi}"),
+                ops: monomial_ops(&exps),
+                expr: g.render(&analysis.symbols),
+                exponents: exps,
+            }
+        })
+        .collect();
+
+    PiModuleDesign {
+        name: format!("pi_compute_{}", sanitize(&analysis.system)),
+        system: analysis.system.clone(),
+        q,
+        ports,
+        units,
+        target_unit: analysis.target_group,
+        dropped_symbols: analysis
+            .nonparticipating
+            .iter()
+            .map(|&i| analysis.symbols[i].clone())
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+
+    fn design(id: &str) -> PiModuleDesign {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        build(&a, Q16_15)
+    }
+
+    #[test]
+    fn pendulum_design_shape() {
+        let d = design("pendulum");
+        // bobmass dropped: 3 ports, 1 unit.
+        assert_eq!(d.num_inputs(), 3);
+        assert_eq!(d.num_outputs(), 1);
+        assert_eq!(d.dropped_symbols, vec!["bobmass".to_string()]);
+        assert_eq!(d.name, "pi_compute_pendulum");
+    }
+
+    #[test]
+    fn all_corpus_designs_build() {
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            assert!(d.num_inputs() >= 2, "{}", e.id);
+            assert!(d.num_outputs() >= 1, "{}", e.id);
+            for u in &d.units {
+                assert!(!u.ops.is_empty());
+                assert_eq!(u.exponents.len(), d.num_inputs());
+            }
+            assert!(d.target_unit < d.num_outputs());
+        }
+    }
+
+    #[test]
+    fn select_inputs_reorders() {
+        let d = design("pendulum");
+        // Symbol order: period, length, bobmass, g. Ports skip bobmass.
+        let vals = vec![10, 20, 30, 40];
+        let sel = d.select_inputs(&vals);
+        assert_eq!(sel.len(), 3);
+        assert!(!sel.contains(&30));
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("abc"), "abc");
+        assert_eq!(sanitize("a-b c"), "a_b_c");
+        assert_eq!(sanitize("2fast"), "_2fast");
+        assert_eq!(sanitize(""), "_");
+    }
+}

@@ -1,0 +1,13 @@
+//! RTL backend: Π-module IR, latency scheduling, Verilog emission, and
+//! cycle-accurate simulation (paper Sections 2.A and 3).
+
+pub mod ir;
+pub mod sched;
+pub mod sim;
+pub mod testbench;
+pub mod verilog;
+
+pub use ir::{build, PiModuleDesign, PiUnit, Port};
+pub use sched::{max_sample_rate, module_latency, OpLatency, Policy};
+pub use sim::{run_cycle_accurate, run_once, run_stream, RtlSim, SimResult};
+pub use testbench::{emit_testbench, golden_vectors, GoldenVector};

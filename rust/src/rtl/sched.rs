@@ -1,0 +1,183 @@
+//! Analytic latency model of the generated RTL (paper Table 1, "Execution
+//! Latency" column).
+//!
+//! In each generated module "the calculation of different Π products is
+//! parallelized but the required operations per Π product are executed
+//! serially" (paper §3.A). The functional-unit latencies follow from the
+//! sequential datapath structure:
+//!
+//! * load: 1 cycle (operand register capture),
+//! * multiply: `width + 1` cycles (shift-add over `width` partial
+//!   products, plus the rounding/saturation cycle),
+//! * divide: `width + frac` cycles (restoring division producing the
+//!   `width + frac`-bit pre-truncation quotient of `(|a| << frac) / |b|`),
+//! * epilogue: 1 cycle (result capture / done assertion).
+//!
+//! For the paper's Q16.15 this gives mul = 33, div = 47 — e.g. the static
+//! pendulum's single group `g·t²/l` costs 1 + 33 + 33 + 47 + 1 = 115
+//! cycles, exactly the paper's figure.
+
+use super::ir::{PiModuleDesign, PiUnit};
+use crate::fixedpoint::{MonOp, QFormat};
+
+/// Cycle costs of the sequential functional units for a given format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpLatency {
+    pub load: u64,
+    pub mul: u64,
+    pub div: u64,
+    /// Final result-capture / done cycle per module activation.
+    pub epilogue: u64,
+}
+
+impl OpLatency {
+    /// Latencies implied by the datapath structure for format `q`.
+    pub fn for_format(q: QFormat) -> OpLatency {
+        OpLatency {
+            load: 1,
+            mul: q.width() as u64 + 1,
+            div: (q.width() + q.frac_bits) as u64,
+            epilogue: 1,
+        }
+    }
+
+    pub fn of(&self, op: &MonOp) -> u64 {
+        match op {
+            MonOp::Load(_) | MonOp::LoadOne => self.load,
+            MonOp::Mul(_) => self.mul,
+            MonOp::Div(_) => self.div,
+        }
+    }
+}
+
+/// Scheduling policy — the paper's design plus ablation alternatives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// One datapath per Π, all running in parallel; ops within a Π serial.
+    /// This is the paper's design. Latency = max over units.
+    ParallelPerPi,
+    /// A single shared datapath executes every Π in sequence.
+    /// Latency = sum over units. Smallest area, worst latency.
+    FullySerial,
+}
+
+/// Latency of one Π unit's serial schedule (excluding module epilogue).
+pub fn unit_latency(unit: &PiUnit, lat: &OpLatency) -> u64 {
+    unit.ops.iter().map(|op| lat.of(op)).sum()
+}
+
+/// Total module latency in cycles under a policy.
+pub fn module_latency(design: &PiModuleDesign, policy: Policy) -> u64 {
+    let lat = OpLatency::for_format(design.q);
+    let per_unit: Vec<u64> = design.units.iter().map(|u| unit_latency(u, &lat)).collect();
+    let body = match policy {
+        Policy::ParallelPerPi => per_unit.iter().copied().max().unwrap_or(0),
+        Policy::FullySerial => per_unit.iter().sum(),
+    };
+    body + lat.epilogue
+}
+
+/// Maximum sustainable sample rate (samples/second) at clock `f_hz`:
+/// the module is not pipelined, so one sample occupies `latency` cycles.
+pub fn max_sample_rate(design: &PiModuleDesign, policy: Policy, f_hz: f64) -> f64 {
+    let cycles = module_latency(design, policy).max(1);
+    f_hz / cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{Q16_15, QFormat};
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+    use crate::rtl::ir;
+
+    fn design(id: &str) -> PiModuleDesign {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        ir::build(&a, Q16_15)
+    }
+
+    #[test]
+    fn q16_15_unit_latencies() {
+        let lat = OpLatency::for_format(Q16_15);
+        assert_eq!(lat.mul, 33);
+        assert_eq!(lat.div, 47);
+        assert_eq!(lat.load, 1);
+    }
+
+    #[test]
+    fn pendulum_latency_matches_paper() {
+        // Paper Table 1: static pendulum = 115 cycles.
+        let d = design("pendulum");
+        assert_eq!(module_latency(&d, Policy::ParallelPerPi), 115);
+    }
+
+    #[test]
+    fn beam_latency_matches_paper() {
+        // Paper Table 1: beam = 115 cycles.
+        let d = design("beam");
+        assert_eq!(module_latency(&d, Policy::ParallelPerPi), 115);
+    }
+
+    #[test]
+    fn spring_mass_latency_matches_paper() {
+        // Paper Table 1: spring-mass = 115 cycles.
+        let d = design("spring_mass");
+        assert_eq!(module_latency(&d, Policy::ParallelPerPi), 115);
+    }
+
+    #[test]
+    fn flight_faster_than_pendulum() {
+        // Paper observation: the unpowered-flight module (more signals,
+        // more parallel units) concludes *faster* than the pendulum.
+        let flight = module_latency(&design("unpowered_flight"), Policy::ParallelPerPi);
+        let pendulum = module_latency(&design("pendulum"), Policy::ParallelPerPi);
+        assert!(flight < pendulum, "flight={flight} pendulum={pendulum}");
+    }
+
+    #[test]
+    fn all_under_300_cycles() {
+        // Paper: "All modules require less than 300 cycles."
+        for e in corpus::corpus() {
+            let cycles = module_latency(&design(e.id), Policy::ParallelPerPi);
+            assert!(cycles < 300, "{}: {} cycles", e.id, cycles);
+        }
+    }
+
+    #[test]
+    fn sample_rate_over_10k() {
+        // Paper: "for both 6 and 12 MHz clocks, the generated hardware can
+        // handle sample rates of over 10k samples/second".
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            let rate6 = max_sample_rate(&d, Policy::ParallelPerPi, 6.0e6);
+            assert!(rate6 > 10_000.0, "{}: {rate6} samples/s @6MHz", e.id);
+        }
+    }
+
+    #[test]
+    fn serial_policy_is_sum() {
+        let d = design("unpowered_flight");
+        let par = module_latency(&d, Policy::ParallelPerPi);
+        let ser = module_latency(&d, Policy::FullySerial);
+        assert!(ser >= par);
+        if d.units.len() > 1 {
+            assert!(ser > par);
+        }
+    }
+
+    #[test]
+    fn latency_scales_with_width() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let narrow = ir::build(&a, QFormat::new(8, 7));
+        let wide = ir::build(&a, QFormat::new(24, 23));
+        assert!(
+            module_latency(&narrow, Policy::ParallelPerPi)
+                < module_latency(&wide, Policy::ParallelPerPi)
+        );
+    }
+}

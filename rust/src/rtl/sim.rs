@@ -1,0 +1,336 @@
+//! Cycle-accurate simulation of generated Π-compute modules.
+//!
+//! The simulator interprets the module's FSM at clock-cycle granularity:
+//! every Π unit steps its microprogram, each micro-op occupying exactly
+//! the number of cycles the sequential functional unit needs
+//! ([`super::sched::OpLatency`]), with the datapath result computed by the
+//! bit-exact software model ([`crate::fixedpoint`]). Two invariants are
+//! enforced by tests:
+//!
+//! * **cycle fidelity** — the observed cycle count equals the analytic
+//!   schedule of [`super::sched::module_latency`];
+//! * **bit fidelity** — outputs equal `fixedpoint::eval_monomial` exactly.
+//!
+//! This simulator stands in for RTL simulation of the emitted Verilog
+//! (the paper simulated its modules with LFSR stimulus to obtain the
+//! Table-1 latency column).
+
+use super::ir::PiModuleDesign;
+use super::sched::OpLatency;
+use crate::fixedpoint::{self, MonOp};
+
+/// Result of simulating one activation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimResult {
+    /// One Π value per unit, in unit order.
+    pub outputs: Vec<i64>,
+    /// Cycles from `start` assertion to `done` assertion.
+    pub cycles: u64,
+}
+
+/// Per-unit FSM state.
+#[derive(Clone, Debug)]
+enum UnitState {
+    /// Executing op `pc`; `remaining` cycles left for it.
+    Busy { pc: usize, remaining: u64 },
+    /// Microprogram complete; accumulator holds the Π value.
+    Done,
+}
+
+/// A simulation instance bound to a design.
+pub struct RtlSim<'d> {
+    design: &'d PiModuleDesign,
+    lat: OpLatency,
+    /// Accumulator register per unit.
+    acc: Vec<i64>,
+    state: Vec<UnitState>,
+    /// Input operand registers (captured at start).
+    inputs: Vec<i64>,
+    /// Epilogue countdown once all units are done.
+    epilogue_left: u64,
+    cycles: u64,
+    done: bool,
+}
+
+impl<'d> RtlSim<'d> {
+    /// Capture inputs (port order) and assert `start`.
+    pub fn start(design: &'d PiModuleDesign, inputs: &[i64]) -> RtlSim<'d> {
+        assert_eq!(
+            inputs.len(),
+            design.num_inputs(),
+            "input vector must match port count"
+        );
+        let lat = OpLatency::for_format(design.q);
+        let state = design
+            .units
+            .iter()
+            .map(|u| UnitState::Busy { pc: 0, remaining: lat.of(&u.ops[0]) })
+            .collect();
+        RtlSim {
+            design,
+            lat,
+            acc: vec![0; design.units.len()],
+            state,
+            inputs: inputs.to_vec(),
+            epilogue_left: lat.epilogue,
+            cycles: 0,
+            done: false,
+        }
+    }
+
+    /// Advance one clock cycle. Returns `true` when `done` asserts.
+    pub fn tick(&mut self) -> bool {
+        if self.done {
+            return true;
+        }
+        self.cycles += 1;
+
+        // Epilogue runs on the cycles *after* the last unit finishes
+        // (result capture then done flip-flop).
+        if self.state.iter().all(|s| matches!(s, UnitState::Done)) {
+            self.epilogue_left -= 1;
+            if self.epilogue_left == 0 {
+                self.done = true;
+            }
+            return self.done;
+        }
+
+        let mut all_done = true;
+        for (ui, unit) in self.design.units.iter().enumerate() {
+            match &mut self.state[ui] {
+                UnitState::Done => {}
+                UnitState::Busy { pc, remaining } => {
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        // Op completes this cycle: commit the datapath result.
+                        let q = self.design.q;
+                        let op = &unit.ops[*pc];
+                        self.acc[ui] = match op {
+                            MonOp::Load(i) => self.inputs[*i],
+                            MonOp::LoadOne => q.one(),
+                            MonOp::Mul(i) => fixedpoint::mul(q, self.acc[ui], self.inputs[*i]),
+                            MonOp::Div(i) => fixedpoint::div(q, self.acc[ui], self.inputs[*i]),
+                        };
+                        let next = *pc + 1;
+                        if next < unit.ops.len() {
+                            self.state[ui] = UnitState::Busy {
+                                pc: next,
+                                remaining: self.lat.of(&unit.ops[next]),
+                            };
+                            all_done = false;
+                        } else {
+                            self.state[ui] = UnitState::Done;
+                        }
+                    } else {
+                        all_done = false;
+                    }
+                }
+            }
+        }
+
+        let _ = all_done;
+        self.done
+    }
+
+    /// Run until `done`; panics after a safety bound (malformed design).
+    pub fn run(mut self) -> SimResult {
+        let bound = 10_000u64
+            + self.design.units.iter().map(|u| u.ops.len() as u64 * 64).sum::<u64>();
+        while !self.tick() {
+            assert!(self.cycles < bound, "simulation did not converge");
+        }
+        SimResult { outputs: self.acc, cycles: self.cycles }
+    }
+}
+
+/// Simulate one activation of `design` on `inputs` (port order).
+///
+/// §Perf: this is the serving hot path, so it *jumps* over the cycles an
+/// op occupies instead of ticking them — the FSM schedule is
+/// deterministic, so the outputs and cycle count are identical to the
+/// tick-by-tick interpreter ([`run_cycle_accurate`]; equality is asserted
+/// by tests for the whole corpus).
+pub fn run_once(design: &PiModuleDesign, inputs: &[i64]) -> SimResult {
+    assert_eq!(
+        inputs.len(),
+        design.num_inputs(),
+        "input vector must match port count"
+    );
+    let lat = OpLatency::for_format(design.q);
+    let q = design.q;
+    let mut cycles = 0u64;
+    let outputs = design
+        .units
+        .iter()
+        .map(|u| {
+            let mut acc = 0i64;
+            let mut c = 0u64;
+            for op in &u.ops {
+                c += lat.of(op);
+                acc = match op {
+                    MonOp::Load(i) => inputs[*i],
+                    MonOp::LoadOne => q.one(),
+                    MonOp::Mul(i) => fixedpoint::mul(q, acc, inputs[*i]),
+                    MonOp::Div(i) => fixedpoint::div(q, acc, inputs[*i]),
+                };
+            }
+            cycles = cycles.max(c);
+            acc
+        })
+        .collect();
+    SimResult { outputs, cycles: cycles + lat.epilogue }
+}
+
+/// Tick-by-tick interpretation of the module FSM (one call to
+/// [`RtlSim::tick`] per clock). Reference semantics for [`run_once`].
+pub fn run_cycle_accurate(design: &PiModuleDesign, inputs: &[i64]) -> SimResult {
+    RtlSim::start(design, inputs).run()
+}
+
+/// Simulate a stream of samples back-to-back (no pipelining: the next
+/// sample starts the cycle after `done`). Returns per-sample outputs and
+/// the total cycle count.
+pub fn run_stream(design: &PiModuleDesign, samples: &[Vec<i64>]) -> (Vec<Vec<i64>>, u64) {
+    let mut outputs = Vec::with_capacity(samples.len());
+    let mut total = 0u64;
+    for s in samples {
+        let r = run_once(design, s);
+        total += r.cycles;
+        outputs.push(r.outputs);
+    }
+    (outputs, total)
+}
+
+/// Reference output for an activation: evaluate every unit's monomial with
+/// the bit-exact software model.
+pub fn reference_outputs(design: &PiModuleDesign, inputs: &[i64]) -> Vec<i64> {
+    design
+        .units
+        .iter()
+        .map(|u| fixedpoint::eval_monomial(design.q, inputs, &u.exponents))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+    use crate::rtl::ir;
+    use crate::rtl::sched::{module_latency, Policy};
+    use crate::stim::Lfsr32;
+
+    fn design(id: &str) -> PiModuleDesign {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        ir::build(&a, Q16_15)
+    }
+
+    /// Draw a "safe" pseudorandom operand in [0.25, 8): avoids saturation
+    /// so outputs stay informative.
+    fn rand_operand(lfsr: &mut Lfsr32) -> i64 {
+        let u = lfsr.next_u32();
+        Q16_15.from_f64(0.25 + (u >> 20) as f64 / 4096.0 * 7.75)
+    }
+
+    #[test]
+    fn fast_path_equals_tick_interpreter() {
+        let mut lfsr = Lfsr32::new(0xFA57);
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            for _ in 0..20 {
+                let inputs: Vec<i64> = (0..d.num_inputs())
+                    .map(|_| {
+                        if lfsr.below(10) == 0 {
+                            0
+                        } else {
+                            Q16_15.from_f64(lfsr.range(-64.0, 64.0))
+                        }
+                    })
+                    .collect();
+                let fast = run_once(&d, &inputs);
+                let slow = run_cycle_accurate(&d, &inputs);
+                assert_eq!(fast, slow, "{}: fast/tick divergence on {inputs:?}", e.id);
+            }
+        }
+    }
+
+    #[test]
+    fn sim_cycles_match_analytic_schedule() {
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            let inputs: Vec<i64> = vec![Q16_15.one(); d.num_inputs()];
+            let r = run_once(&d, &inputs);
+            assert_eq!(
+                r.cycles,
+                module_latency(&d, Policy::ParallelPerPi),
+                "{}: sim vs schedule mismatch",
+                e.id
+            );
+        }
+    }
+
+    #[test]
+    fn sim_outputs_bit_exact_vs_software_model() {
+        let mut lfsr = Lfsr32::new(0xACE1_u32 as u32);
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            for _ in 0..50 {
+                let inputs: Vec<i64> =
+                    (0..d.num_inputs()).map(|_| rand_operand(&mut lfsr)).collect();
+                let r = run_once(&d, &inputs);
+                assert_eq!(
+                    r.outputs,
+                    reference_outputs(&d, &inputs),
+                    "{}: sim output mismatch for {:?}",
+                    e.id,
+                    inputs
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_inputs_give_unity_pis() {
+        // Every Π of all-1.0 signals is exactly 1.0 (mul/div by one are
+        // exact in the fixed-point model).
+        for e in corpus::corpus() {
+            let d = design(e.id);
+            let inputs = vec![Q16_15.one(); d.num_inputs()];
+            let r = run_once(&d, &inputs);
+            for (ui, &o) in r.outputs.iter().enumerate() {
+                assert_eq!(o, Q16_15.one(), "{}: unit {} not unity", e.id, ui);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_totals_accumulate() {
+        let d = design("pendulum");
+        let samples: Vec<Vec<i64>> = (1..=4)
+            .map(|i| vec![Q16_15.from_f64(i as f64); d.num_inputs()])
+            .collect();
+        let (outs, total) = run_stream(&d, &samples);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(total, 4 * module_latency(&d, Policy::ParallelPerPi));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_input_arity_panics() {
+        let d = design("pendulum");
+        let _ = run_once(&d, &[0]);
+    }
+
+    #[test]
+    fn division_by_zero_saturates_in_sim() {
+        let d = design("pendulum");
+        // Zero in every port: whichever port is divided by zero forces
+        // saturation; acc ends at an extremum, never panics.
+        let inputs = vec![0i64; d.num_inputs()];
+        let r = run_once(&d, &inputs);
+        assert_eq!(r.outputs.len(), 1);
+    }
+}

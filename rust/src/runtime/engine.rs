@@ -1,0 +1,126 @@
+//! The executable cache and literal conversion helpers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the decomposed
+    /// output tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: readback failed: {e:?}", self.name))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("{}: tuple decompose failed: {e:?}", self.name))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// A PJRT CPU client plus a cache of compiled artifacts, keyed by name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
+        Ok(Engine { client, dir: artifact_dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) `<dir>/<name>.hlo.txt`, compiling once.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            anyhow::bail!(
+                "artifact `{}` not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("{name}: HLO parse failed: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{name}: compile failed: {e:?}"))?;
+        let exec = Rc::new(Executable { exe, name: name.to_string() });
+        self.cache.insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Whether an artifact file exists (without compiling it).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+// ---- literal helpers --------------------------------------------------------
+
+/// Build an int32 [rows, cols] literal from raw fixed-point values.
+pub fn i32_matrix(rows: usize, cols: usize, vals: &[i64]) -> anyhow::Result<xla::Literal> {
+    assert_eq!(vals.len(), rows * cols);
+    let v32: Vec<i32> = vals.iter().map(|&v| v as i32).collect();
+    xla::Literal::vec1(&v32)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape failed: {e:?}"))
+}
+
+/// Build an f32 [rows, cols] literal.
+pub fn f32_matrix(rows: usize, cols: usize, vals: &[f32]) -> anyhow::Result<xla::Literal> {
+    assert_eq!(vals.len(), rows * cols);
+    xla::Literal::vec1(vals)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape failed: {e:?}"))
+}
+
+/// Build an f32 vector literal.
+pub fn f32_vec(vals: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(vals)
+}
+
+/// Build an f32 scalar literal.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract `Vec<i32>` from a literal.
+pub fn to_i32s(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))
+}
+
+/// Extract `Vec<f32>` from a literal.
+pub fn to_f32s(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec<f32>: {e:?}"))
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them from the Rust request path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire ML-execution surface of the deployed binary. See
+//! /opt/xla-example/load_hlo for the interchange rationale (HLO *text*,
+//! not serialized protos — jax ≥ 0.5 emits 64-bit instruction ids the
+//! bundled XLA rejects).
+
+pub mod engine;
+
+pub use engine::{Engine, Executable};

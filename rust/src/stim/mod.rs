@@ -1,0 +1,9 @@
+//! Stimulus generation: the paper's LFSR pseudorandom input stream plus
+//! physics-based synthetic sensor traces (the substitute for the authors'
+//! physical testbeds — DESIGN.md §2).
+
+pub mod lfsr;
+pub mod traces;
+
+pub use lfsr::Lfsr32;
+pub use traces::{sample, sample_noisy, samples, Sample, G};

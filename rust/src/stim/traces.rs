@@ -1,0 +1,213 @@
+//! Physics-based synthetic sensor traces for the corpus systems.
+//!
+//! The paper's authors had physical testbeds; we substitute closed-form
+//! physics plus measurement noise (DESIGN.md §2). Each generator draws the
+//! free signals of a system uniformly from plausible physical ranges and
+//! computes the dependent (target) signal from the governing equation, so
+//! the traces exercise exactly the relationship the Φ model must learn.
+//!
+//! Signal order matches the corpus invariant parameter order
+//! ([`mod@crate::newton::corpus`]), so a trace row can be fed directly to the
+//! generated hardware / kernels after fixed-point quantization.
+
+use super::lfsr::Lfsr32;
+
+/// Standard gravity, matching the builtin Newton constant.
+pub const G: f64 = 9.80665;
+
+/// One sampled observation: signal values in corpus symbol order.
+pub type Sample = Vec<f64>;
+
+/// Generate one noiseless observation of system `id`. Returns `None` for
+/// unknown ids.
+pub fn sample(id: &str, rng: &mut Lfsr32) -> Option<Sample> {
+    sample_noisy(id, rng, 0.0)
+}
+
+/// Generate one observation with multiplicative Gaussian-ish noise of
+/// relative magnitude `noise` applied to the *measured* (target) signal —
+/// modelling sensor error on the quantity the model must predict from the
+/// others.
+pub fn sample_noisy(id: &str, rng: &mut Lfsr32, noise: f64) -> Option<Sample> {
+    // Approximate standard normal from 4 uniforms (Irwin–Hall, var=1/3 each).
+    let mut normal = |rng: &mut Lfsr32| -> f64 {
+        let s: f64 = (0..4).map(|_| rng.next_f64()).sum::<f64>();
+        (s - 2.0) * (3.0f64).sqrt() / 2.0
+    };
+    let jitter = |v: f64, rng: &mut Lfsr32, normal: &mut dyn FnMut(&mut Lfsr32) -> f64| {
+        v * (1.0 + noise * normal(rng))
+    };
+
+    let s = match id {
+        // (period, length, bobmass, g); t = 2π √(l/g).
+        "pendulum" => {
+            let l = rng.range(0.1, 2.0);
+            let m = rng.range(0.05, 1.0);
+            let t = 2.0 * std::f64::consts::PI * (l / G).sqrt();
+            vec![jitter(t, rng, &mut normal), l, m, G]
+        }
+        // (deflection, load, length, rigidity); δ = F L³ / (3 EI).
+        "beam" => {
+            // Ranges model one beam-monitoring design envelope: the
+            // dimensionless load F·L²/EI spans ~2 decades. (Wider ranges
+            // push both the Q16.15 resolution floor and tanh-feature
+            // saturation — a real deployment of a fixed-point sensor
+            // product would be specified for a bounded envelope too.)
+            let f = rng.range(20.0, 100.0);
+            let l = rng.range(0.8, 1.6);
+            let ei = rng.range(20.0, 100.0);
+            let d = f * l.powi(3) / (3.0 * ei);
+            vec![jitter(d, rng, &mut normal), f, l, ei]
+        }
+        // (pressure_drop, rho, velocity, diameter, pipe_length, mu);
+        // Darcy–Weisbach with a fixed friction factor f_D = 0.02:
+        // Δp = f_D (L/D) ρ v² / 2.
+        "fluid_pipe" => {
+            let rho = rng.range(800.0, 1200.0);
+            let v = rng.range(0.5, 5.0);
+            let d = rng.range(0.05, 0.5);
+            let l = rng.range(1.0, 10.0);
+            let mu = rng.range(0.01, 0.5);
+            let dp = 0.02 * (l / d) * rho * v * v / 2.0;
+            vec![dp, rho, jitter(v, rng, &mut normal), d, l, mu]
+        }
+        // (height, airspeed, flight_t, payload, g); ballistic
+        // h = v t − g t²/2, with t sampled inside the ascent arc.
+        "unpowered_flight" => {
+            let v = rng.range(5.0, 30.0);
+            // Sample the ascent arc away from the apex: at the apex
+            // h → 0 relative to v·t and the dimensionless ratio v·t/h
+            // diverges, which no bounded-feature model can calibrate.
+            let t = rng.range(0.1, 0.8) * (2.0 * v / G);
+            let m = rng.range(0.1, 2.0);
+            let h = (v * t - G * t * t / 2.0).max(0.01);
+            vec![jitter(h, rng, &mut normal), v, t, m, G]
+        }
+        // (freq, tension, length, mu); f = (1/2l) √(F/μ).
+        "vibrating_string" => {
+            let ten = rng.range(10.0, 200.0);
+            let l = rng.range(0.3, 1.5);
+            let mu = rng.range(0.005, 0.05);
+            let f = (ten / mu).sqrt() / (2.0 * l);
+            vec![jitter(f, rng, &mut normal), ten, l, mu]
+        }
+        // (freq, tension, length, mu, temp, alpha); tension relaxes with
+        // temperature: F_eff = F (1 − α ΔT), f = (1/2l) √(F_eff/μ).
+        // α is exaggerated vs. steel so the α·ΔT product stays well above
+        // the Q16.15 resolution (DESIGN.md §2 notes the substitution).
+        "warm_vibrating_string" => {
+            let ten = rng.range(10.0, 200.0);
+            let l = rng.range(0.3, 1.5);
+            let mu = rng.range(0.005, 0.05);
+            let dt = rng.range(10.0, 100.0);
+            let alpha = rng.range(0.001, 0.008);
+            let f_eff = ten * (1.0 - alpha * dt).max(0.05);
+            let f = (f_eff / mu).sqrt() / (2.0 * l);
+            vec![jitter(f, rng, &mut normal), ten, l, mu, dt, alpha]
+        }
+        // (springk, bobmass, period, g); t = 2π √(m/k).
+        "spring_mass" => {
+            let k = rng.range(20.0, 500.0);
+            let m = rng.range(0.1, 2.0);
+            let t = 2.0 * std::f64::consts::PI * (m / k).sqrt();
+            vec![jitter(k, rng, &mut normal), m, t, G]
+        }
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// Generate `n` observations.
+pub fn samples(id: &str, rng: &mut Lfsr32, n: usize, noise: f64) -> Option<Vec<Sample>> {
+    (0..n).map(|_| sample_noisy(id, rng, noise)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::newton::corpus;
+
+    #[test]
+    fn arity_matches_corpus() {
+        let mut rng = Lfsr32::new(1);
+        for e in corpus::corpus() {
+            let m = corpus::load_entry(&e).unwrap();
+            let s = sample(e.id, &mut rng).unwrap();
+            assert_eq!(s.len(), m.k(), "{}: arity mismatch", e.id);
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        let mut rng = Lfsr32::new(1);
+        assert!(sample("no_such_system", &mut rng).is_none());
+    }
+
+    #[test]
+    fn pendulum_pi_is_4pi2() {
+        // Noiseless pendulum: g t² / l = 4π² exactly.
+        let mut rng = Lfsr32::new(7);
+        for _ in 0..50 {
+            let s = sample("pendulum", &mut rng).unwrap();
+            let (t, l, g) = (s[0], s[1], s[3]);
+            let pi = g * t * t / l;
+            assert!((pi - 4.0 * std::f64::consts::PI.powi(2)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn beam_deflection_formula() {
+        let mut rng = Lfsr32::new(9);
+        for _ in 0..50 {
+            let s = sample("beam", &mut rng).unwrap();
+            let (d, f, l, ei) = (s[0], s[1], s[2], s[3]);
+            assert!((d - f * l.powi(3) / (3.0 * ei)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn values_fit_q16_15() {
+        use crate::fixedpoint::Q16_15;
+        let mut rng = Lfsr32::new(11);
+        for e in corpus::corpus() {
+            for _ in 0..100 {
+                let s = sample(e.id, &mut rng).unwrap();
+                for (i, v) in s.iter().enumerate() {
+                    assert!(
+                        *v < Q16_15.max_value() && *v > Q16_15.min_value(),
+                        "{}: signal {i} = {v} out of Q16.15 range",
+                        e.id
+                    );
+                    // Nonzero signals should be comfortably above resolution.
+                    assert!(
+                        v.abs() > 8.0 * Q16_15.epsilon(),
+                        "{}: signal {i} = {v} below Q16.15 resolution",
+                        e.id
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noise_perturbs_target_only_slightly() {
+        let mut a = Lfsr32::new(21);
+        let mut b = Lfsr32::new(21);
+        let clean = sample_noisy("pendulum", &mut a, 0.0).unwrap();
+        let noisy = sample_noisy("pendulum", &mut b, 0.01).unwrap();
+        // Same free signals (same RNG stream consumed in same order for
+        // l, m; the jitter consumes extra draws after the target compute).
+        assert_eq!(clean[1], noisy[1]);
+        let rel = (clean[0] - noisy[0]).abs() / clean[0];
+        assert!(rel < 0.2, "noise too large: {rel}");
+    }
+
+    #[test]
+    fn flight_height_nonnegative() {
+        let mut rng = Lfsr32::new(31);
+        for _ in 0..200 {
+            let s = sample("unpowered_flight", &mut rng).unwrap();
+            assert!(s[0] > 0.0);
+        }
+    }
+}

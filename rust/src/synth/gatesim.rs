@@ -1,0 +1,287 @@
+//! Gate-level (post-synthesis) simulation.
+//!
+//! Evaluates a [`Netlist`] cycle by cycle: combinational LUTs settle in
+//! node-id order (construction order is topological for combinational
+//! logic; flip-flop outputs are state, read from the previous cycle), then
+//! all flip-flops clock simultaneously. The simulator counts toggles per
+//! net, which feeds the switching-activity power model
+//! ([`crate::power`]) — the substitute for the paper's physical current
+//! measurement on the iCE40's core supply rail.
+
+use super::netlist::{NetId, Netlist, Node};
+use std::collections::HashMap;
+
+/// One LUT in the packed evaluation plan (§Perf: the netlist's enum/Vec
+/// representation is flattened once at simulator construction so the
+/// per-cycle loop touches only dense arrays).
+#[derive(Clone, Copy)]
+struct PackedLut {
+    /// Output net index.
+    out: u32,
+    /// Input net indices (unused slots repeat input 0).
+    ins: [u32; 4],
+    tt: u16,
+}
+
+/// Simulation state for one netlist.
+pub struct GateSim<'n> {
+    nl: &'n Netlist,
+    /// Current value of every net.
+    vals: Vec<bool>,
+    /// Per-net toggle counters (combinational + sequential transitions).
+    toggles: Vec<u64>,
+    /// Cycles executed.
+    cycles: u64,
+    /// Input bus name -> bit net ids.
+    bus: HashMap<String, Vec<NetId>>,
+    /// Packed combinational plan in topological order.
+    luts: Vec<PackedLut>,
+    /// (dff net, d net) pairs.
+    dffs: Vec<(u32, u32)>,
+    /// Two-phase clock-edge scratch (sampled D values).
+    scratch: Vec<bool>,
+}
+
+impl<'n> GateSim<'n> {
+    /// Create a simulator with flip-flops at their init values.
+    pub fn new(nl: &'n Netlist) -> GateSim<'n> {
+        let mut vals = vec![false; nl.len()];
+        let mut luts = Vec::new();
+        let mut dffs = Vec::new();
+        for (id, node) in nl.nodes() {
+            match node {
+                Node::Const(v) => vals[id as usize] = *v,
+                Node::Dff { d, init } => {
+                    vals[id as usize] = *init;
+                    dffs.push((id, *d));
+                }
+                Node::Lut { ins, tt } => {
+                    let mut packed = [ins[0]; 4];
+                    for (k, &i) in ins.iter().enumerate() {
+                        packed[k] = i;
+                    }
+                    // Expand the truth table to 4 inputs so the hot loop
+                    // needs no per-LUT width mask (unused index bits
+                    // alias input 0 and the expansion makes them
+                    // don't-cares).
+                    let mask = (1usize << ins.len()) - 1;
+                    let mut tt4 = 0u16;
+                    for idx in 0..16usize {
+                        if tt >> (idx & mask) & 1 == 1 {
+                            tt4 |= 1 << idx;
+                        }
+                    }
+                    luts.push(PackedLut { out: id, ins: packed, tt: tt4 });
+                }
+                Node::Input(_) => {}
+            }
+        }
+        let bus = nl
+            .input_buses
+            .iter()
+            .map(|(n, b)| (n.clone(), b.clone()))
+            .collect();
+        let scratch = vec![false; dffs.len()];
+        GateSim { nl, vals, toggles: vec![0; nl.len()], cycles: 0, bus, luts, dffs, scratch }
+    }
+
+    /// Bind an input bus to an integer value (LSB-first, two's complement
+    /// truncation to the bus width). Values are written straight into the
+    /// net state; they hold until overwritten.
+    pub fn set_bus(&mut self, name: &str, value: i64) {
+        let bits = self
+            .bus
+            .get(name)
+            .unwrap_or_else(|| panic!("no input bus `{name}`"))
+            .clone();
+        for (i, bit) in bits.iter().enumerate() {
+            let idx = *bit as usize;
+            let v = (value >> i) & 1 == 1;
+            if self.vals[idx] != v {
+                self.toggles[idx] += 1;
+                self.vals[idx] = v;
+            }
+        }
+    }
+
+    /// Bind a 1-bit input by bus name.
+    pub fn set_bit(&mut self, name: &str, value: bool) {
+        self.set_bus(name, value as i64);
+    }
+
+    /// Run one clock cycle: settle combinational logic, then clock DFFs.
+    pub fn step(&mut self) {
+        self.cycles += 1;
+        // Combinational settle (construction order is topological).
+        for l in &self.luts {
+            let sel = (self.vals[l.ins[0] as usize] as usize)
+                | (self.vals[l.ins[1] as usize] as usize) << 1
+                | (self.vals[l.ins[2] as usize] as usize) << 2
+                | (self.vals[l.ins[3] as usize] as usize) << 3;
+            let new = l.tt >> sel & 1 == 1;
+            let idx = l.out as usize;
+            if new != self.vals[idx] {
+                self.toggles[idx] += 1;
+                self.vals[idx] = new;
+            }
+        }
+        // Clock edge: sample every D first (a DFF may feed another DFF
+        // directly, so the capture must be two-phase), then commit.
+        for (i, &(_, d)) in self.dffs.iter().enumerate() {
+            self.scratch[i] = self.vals[d as usize];
+        }
+        for (i, &(q, _)) in self.dffs.iter().enumerate() {
+            let idx = q as usize;
+            let v = self.scratch[i];
+            if self.vals[idx] != v {
+                self.toggles[idx] += 1;
+                self.vals[idx] = v;
+            }
+        }
+    }
+
+    /// Synchronous reset: force all DFFs back to init (models the `rst`
+    /// net without burdening every fan-in cone).
+    pub fn reset(&mut self) {
+        for (id, node) in self.nl.nodes() {
+            if let Node::Dff { init, .. } = node {
+                self.vals[id as usize] = *init;
+            }
+        }
+    }
+
+    /// Read an output bus as a sign-extended integer.
+    pub fn get_output(&self, name: &str) -> i64 {
+        let (_, bits) = self
+            .nl
+            .outputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("no output bus `{name}`"));
+        let mut v: i64 = 0;
+        for (i, bit) in bits.iter().enumerate() {
+            if self.vals[*bit as usize] {
+                v |= 1 << i;
+            }
+        }
+        // Sign-extend from the top bit.
+        let w = bits.len();
+        if w < 64 && (v >> (w - 1)) & 1 == 1 {
+            v -= 1 << w;
+        }
+        v
+    }
+
+    /// Read a single-bit output.
+    pub fn get_bit(&self, name: &str) -> bool {
+        self.get_output(name) & 1 == 1
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Total toggles across all nets.
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Mean toggles per net per cycle (the switching-activity factor α).
+    pub fn mean_activity(&self) -> f64 {
+        if self.cycles == 0 || self.nl.len() == 0 {
+            return 0.0;
+        }
+        self.total_toggles() as f64 / (self.cycles as f64 * self.nl.len() as f64)
+    }
+
+    /// Per-net toggle counts.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::netlist::Netlist;
+
+    /// Build a 4-bit counter and check it counts.
+    #[test]
+    fn counter_counts() {
+        let mut nl = Netlist::new();
+        // 4 DFFs; increment: q + 1 via half-adder chain.
+        let q: Vec<NetId> = (0..4).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q.clone());
+
+        let mut sim = GateSim::new(&nl);
+        for expect in 1..=20i64 {
+            sim.step();
+            assert_eq!(sim.get_output("q") & 0xF, expect & 0xF, "at cycle {expect}");
+        }
+    }
+
+    #[test]
+    fn input_bus_drives_logic() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        // Bitwise AND output.
+        let y: Vec<NetId> = a.iter().zip(&b).map(|(&x, &y)| nl.and2(x, y)).collect();
+        nl.add_output("y", y);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", 0b1100);
+        sim.set_bus("b", 0b1010);
+        sim.step();
+        assert_eq!(sim.get_output("y") & 0xF, 0b1000);
+    }
+
+    #[test]
+    fn sign_extension() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        nl.add_output("y", a);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", -3);
+        sim.step();
+        assert_eq!(sim.get_output("y"), -3);
+    }
+
+    #[test]
+    fn toggles_counted() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 1);
+        let na = nl.not(a[0]);
+        nl.add_output("y", vec![na]);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", 0);
+        sim.step();
+        let t0 = sim.total_toggles();
+        sim.set_bus("a", 1);
+        sim.step();
+        assert!(sim.total_toggles() > t0);
+        assert!(sim.mean_activity() > 0.0);
+    }
+
+    #[test]
+    fn reset_restores_init() {
+        let mut nl = Netlist::new();
+        let one = nl.constant(true);
+        let d = nl.dff(one, false);
+        nl.add_output("q", vec![d]);
+        let mut sim = GateSim::new(&nl);
+        sim.step();
+        assert_eq!(sim.get_output("q") & 1, 1);
+        sim.reset();
+        assert_eq!(sim.get_output("q") & 1, 0);
+    }
+}

@@ -1,0 +1,524 @@
+//! RTL → gate-level lowering (the "yosys" stage of the flow).
+//!
+//! Elaborates a [`PiModuleDesign`] into a [`Netlist`] of LUTs and DFFs
+//! with the *same cycle-level behaviour* as the RTL simulator: per-Π
+//! microprogrammed FSMs, a sequential shift-add multiplier and a restoring
+//! divider per unit, operand muxes, and the done handshake. Gate-level
+//! simulation of the lowered netlist must agree with
+//! [`crate::rtl::sim`] bit-for-bit and cycle-for-cycle — this is the
+//! repo's substitute for trusting an external synthesis tool's
+//! equivalence.
+//!
+//! Timing contract (mirrors [`crate::rtl::sched::OpLatency`]):
+//! * the cycle where `start` is sampled high captures control (cycle 0);
+//! * op `k` occupies `lat(op_k)` cycles; its result commits on its last
+//!   cycle; multiplier iterations run on the first `width` cycles of a
+//!   mul op, divider iterations on all `width + frac` cycles of a div op
+//!   (the final iteration is folded combinationally into the commit);
+//! * `done` rises one cycle after the slowest unit's final commit.
+
+use super::netlist::{NetId, Netlist};
+use super::word::*;
+use crate::fixedpoint::MonOp;
+use crate::rtl::ir::PiModuleDesign;
+use crate::rtl::sched::OpLatency;
+
+/// Lower a design to gates.
+pub fn lower(design: &PiModuleDesign) -> Netlist {
+    let mut nl = Netlist::new();
+    let w = design.q.width();
+    let start = nl.input_bus("start", 1)[0];
+    let ports: Vec<Word> = design
+        .ports
+        .iter()
+        .map(|p| nl.input_bus(&format!("in_{}", p.name), w))
+        .collect();
+
+    let mut unit_dones = Vec::new();
+    for (ui, _) in design.units.iter().enumerate() {
+        let (pi, udone) = elaborate_unit(&mut nl, design, ui, start, &ports);
+        nl.add_output(&format!("pi_{ui}"), pi);
+        unit_dones.push(udone);
+    }
+    // Registered done: the epilogue flip-flop of the latency model. A new
+    // `start` clears it on the capture cycle itself (via the !start term)
+    // so back-to-back activations behave.
+    let all_done = and_reduce(&mut nl, &unit_dones);
+    let nstart = nl.not(start);
+    let done_d = nl.and2(all_done, nstart);
+    let done_ff = nl.dff(done_d, false);
+    nl.add_output("done", vec![done_ff]);
+    nl
+}
+
+/// Encoded microprogram entry.
+struct RomEntry {
+    kind: u64, // 0=load 1=mul 2=div 3=load-one
+    sel: u64,  // operand port index
+    lat: u64,  // op latency in cycles
+}
+
+fn encode_ops(design: &PiModuleDesign, ui: usize) -> Vec<RomEntry> {
+    let lat = OpLatency::for_format(design.q);
+    design.units[ui]
+        .ops
+        .iter()
+        .map(|op| match op {
+            MonOp::Load(i) => RomEntry { kind: 0, sel: *i as u64, lat: lat.load },
+            MonOp::Mul(i) => RomEntry { kind: 1, sel: *i as u64, lat: lat.mul },
+            MonOp::Div(i) => RomEntry { kind: 2, sel: *i as u64, lat: lat.div },
+            MonOp::LoadOne => RomEntry { kind: 3, sel: 0, lat: lat.load },
+        })
+        .collect()
+}
+
+/// Build a ROM field: `values[k]` selected by the one-hot pc decode.
+fn rom_field(nl: &mut Netlist, onehot: &[NetId], values: &[u64], width: u32) -> Word {
+    (0..width)
+        .map(|b| {
+            let sels: Vec<NetId> = onehot
+                .iter()
+                .zip(values)
+                .filter(|(_, v)| (**v >> b) & 1 == 1)
+                .map(|(s, _)| *s)
+                .collect();
+            or_reduce(nl, &sels)
+        })
+        .collect()
+}
+
+fn elaborate_unit(
+    nl: &mut Netlist,
+    design: &PiModuleDesign,
+    ui: usize,
+    start: NetId,
+    ports: &[Word],
+) -> (Word, NetId) {
+    let q = design.q;
+    let w = q.width();
+    let f = q.frac_bits;
+    let qw = w + f; // divider quotient width
+    let rom = encode_ops(design, ui);
+    let nops = rom.len();
+    let lat = OpLatency::for_format(q);
+    let max_lat = lat.mul.max(lat.div).max(lat.load);
+    let pcw = bits_for((nops - 1) as u64).max(1);
+    let cw = bits_for(max_lat).max(1);
+
+    // ---- state ----------------------------------------------------------
+    let busy = register(nl, 1);
+    let udone = register(nl, 1);
+    let first = register(nl, 1); // next cycle is an op's first cycle
+    let pc = register(nl, pcw);
+    let cnt = register(nl, cw);
+    let acc = register(nl, w);
+    let psign = register(nl, 1);
+    let asign = register(nl, 1);
+    let dbz = register(nl, 1);
+    let p = register(nl, 2 * w); // multiplier accumulator (magnitude)
+    let mcand = register(nl, w);
+    let mplier = register(nl, w);
+    let rem = register(nl, w + 1);
+    let quot = register(nl, qw);
+    let den = register(nl, w);
+
+    // ---- microprogram ROM -------------------------------------------------
+    let onehot: Vec<NetId> = (0..nops).map(|k| eq_const(nl, &pc, k as i64)).collect();
+    let kinds: Vec<u64> = rom.iter().map(|e| e.kind).collect();
+    let sels: Vec<u64> = rom.iter().map(|e| e.sel).collect();
+    let next_lats: Vec<u64> = (0..nops).map(|k| rom.get(k + 1).map(|e| e.lat).unwrap_or(0)).collect();
+    let kind = rom_field(nl, &onehot, &kinds, 2);
+    let kind_load = {
+        let n1 = nl.not(kind[1]);
+        let n0 = nl.not(kind[0]);
+        nl.and2(n1, n0)
+    };
+    let kind_mul = {
+        let n1 = nl.not(kind[1]);
+        nl.and2(n1, kind[0])
+    };
+    let kind_div = {
+        let n0 = nl.not(kind[0]);
+        nl.and2(kind[1], n0)
+    };
+    let kind_one = nl.and2(kind[1], kind[0]);
+    let next_lat = rom_field(nl, &onehot, &next_lats, cw);
+    let is_last = eq_const(nl, &pc, (nops - 1) as i64);
+
+    // Operand mux: sel -> port. One-hot per port id.
+    let nports = ports.len().max(1);
+    let port_onehot: Vec<NetId> = (0..nports)
+        .map(|pid| {
+            let hits: Vec<NetId> = onehot
+                .iter()
+                .zip(&sels)
+                .filter(|(_, s)| **s == pid as u64)
+                .map(|(h, _)| *h)
+                .collect();
+            or_reduce(nl, &hits)
+        })
+        .collect();
+    let operand: Word = (0..w as usize)
+        .map(|b| {
+            let terms: Vec<NetId> = ports
+                .iter()
+                .zip(&port_onehot)
+                .map(|(pw, &sel)| nl.and2(sel, pw[b]))
+                .collect();
+            or_reduce(nl, &terms)
+        })
+        .collect();
+
+    // ---- control ---------------------------------------------------------
+    let not_busy = nl.not(busy[0]);
+    let do_start = nl.and2(start, not_busy);
+    let is_commit = {
+        let c1 = eq_const(nl, &cnt, 1);
+        nl.and2(busy[0], c1)
+    };
+    let commit_last = nl.and2(is_commit, is_last);
+    let commit_more = {
+        let nl_ = nl.not(is_last);
+        nl.and2(is_commit, nl_)
+    };
+
+    // ---- shared operand preprocessing -------------------------------------
+    let abs_acc = abs(nl, &acc);
+    let abs_op = abs(nl, &operand);
+    let acc_s = acc[w as usize - 1];
+    let op_s = operand[w as usize - 1];
+    let psign_new = nl.xor2(acc_s, op_s);
+    let op_is_zero = is_zero(nl, &operand);
+
+    // ---- multiplier datapath ----------------------------------------------
+    // Effective inputs on the first cycle of a mul op.
+    let mcand_eff = mux_word(nl, first[0], &abs_acc, &mcand);
+    let mplier_eff = mux_word(nl, first[0], &abs_op, &mplier);
+    let zero_2w = word_const(nl, 2 * w, 0);
+    let p_eff = mux_word(nl, first[0], &zero_2w, &p);
+    // High-half add: p_hi + (mplier[0] ? mcand : 0), W+1 bits.
+    let p_hi = slice(&p_eff, w, 2 * w);
+    let zero_w = word_const(nl, w, 0);
+    let addend = mux_word(nl, mplier_eff[0], &mcand_eff, &zero_w);
+    let zero_c = nl.constant(false);
+    let (hi_sum, hi_carry) = add(nl, &p_hi, &addend, zero_c);
+    // p_next = {carry, hi_sum, p_eff[W-1:0]} >> 1 (2W bits kept).
+    let full = {
+        let mut v = slice(&p_eff, 0, w);
+        v.extend_from_slice(&hi_sum);
+        v.push(hi_carry);
+        v
+    };
+    let p_iter: Word = full[1..=(2 * w) as usize].to_vec();
+    let mplier_shift: Word = {
+        let mut v = slice(&mplier_eff, 1, w);
+        v.push(nl.constant(false));
+        v
+    };
+
+    // Mul finalize (commit cycle): signed product, round, shift, saturate.
+    // Negation is folded into the rounding adder via the two's-complement
+    // identity −p + r = (p ⊕ 1…1) + r + 1: conditional XOR plus carry-in,
+    // halving the finalize ripple depth (one 2W adder instead of two).
+    let p_x: Word = p.iter().map(|&b| nl.xor2(b, psign[0])).collect();
+    let round_c = word_const(nl, 2 * w, 1i64 << (f - 1));
+    let rounded = add(nl, &p_x, &round_c, psign[0]).0;
+    // Arithmetic >> f within 2W bits.
+    let shifted = slice(&rounded, f, 2 * w);
+    let sh_sign = *shifted.last().unwrap();
+    // Overflow iff any of shifted[W-1 ..] differs from the sign bit.
+    let ovf_bits: Vec<NetId> = shifted[(w - 1) as usize..]
+        .iter()
+        .map(|&b| nl.xor2(b, sh_sign))
+        .collect();
+    let mul_ovf = or_reduce(nl, &ovf_bits);
+    let max_w = word_const(nl, w, q.max_raw());
+    let min_w = word_const(nl, w, q.min_raw());
+    let sat_val = mux_word(nl, sh_sign, &min_w, &max_w);
+    let sh_low = slice(&shifted, 0, w);
+    let mul_result = mux_word(nl, mul_ovf, &sat_val, &sh_low);
+
+    // ---- divider datapath ---------------------------------------------------
+    // Effective inputs on the first cycle of a div op.
+    let zero_w1 = word_const(nl, w + 1, 0);
+    let rem_eff = mux_word(nl, first[0], &zero_w1, &rem);
+    let dividend: Word = {
+        let mut v = word_const(nl, f, 0);
+        v.extend_from_slice(&abs_acc);
+        v
+    };
+    let quot_eff = mux_word(nl, first[0], &dividend, &quot);
+    let den_eff = mux_word(nl, first[0], &abs_op, &den);
+    // sh = {rem[W-1:0], quot[QW-1]}  (W+1 bits, LSB = incoming quotient bit)
+    let sh: Word = {
+        let mut v = vec![quot_eff[qw as usize - 1]];
+        v.extend_from_slice(&rem_eff[..w as usize]);
+        v
+    };
+    let den_ext = zext(nl, &den_eff, w + 1);
+    let (diff, geq) = sub(nl, &sh, &den_ext);
+    let rem_iter = mux_word(nl, geq, &diff, &sh);
+    let quot_iter: Word = {
+        let mut v = vec![geq];
+        v.extend_from_slice(&quot_eff[..qw as usize - 1]);
+        v
+    };
+
+    // Div finalize (commit cycle): the final iteration is quot_iter itself.
+    let q_mag = &quot_iter;
+    // Positive overflow: any bit at or above W-1.
+    let div_ovf_pos = or_reduce(nl, &q_mag[(w - 1) as usize..]);
+    // Negative overflow: magnitude > 2^(W-1).
+    let hi_any = or_reduce(nl, &q_mag[w as usize..]);
+    let low_any = or_reduce(nl, &q_mag[..(w - 1) as usize]);
+    let edge = nl.and2(q_mag[(w - 1) as usize], low_any);
+    let div_ovf_neg = nl.or2(hi_any, edge);
+    let q_low = q_mag[..w as usize].to_vec();
+    let q_neg = neg(nl, &q_low);
+    let pos_val = mux_word(nl, div_ovf_pos, &max_w, &q_low);
+    let neg_val = mux_word(nl, div_ovf_neg, &min_w, &q_neg);
+    let signed_q = mux_word(nl, psign[0], &neg_val, &pos_val);
+    let dbz_val = mux_word(nl, asign[0], &min_w, &max_w);
+    let div_result = mux_word(nl, dbz[0], &dbz_val, &signed_q);
+
+    // ---- register updates ----------------------------------------------------
+    // acc: at commit, by op kind.
+    let one_w = word_const(nl, w, q.one());
+    let loadish = mux_word(nl, kind_one, &one_w, &operand);
+    let muldiv = mux_word(nl, kind_mul, &mul_result, &div_result);
+    let is_loadish = nl.or2(kind_load, kind_one);
+    let commit_val = mux_word(nl, is_loadish, &loadish, &muldiv);
+    let acc_next = mux_word(nl, is_commit, &commit_val, &acc);
+    connect(nl, &acc, &acc_next);
+
+    // Multiplier registers: iterate while mul op active and not committing.
+    let not_commit = nl.not(is_commit);
+    let mul_busy = nl.and2(busy[0], kind_mul);
+    let mul_iter_en = nl.and2(mul_busy, not_commit);
+    let p_next = mux_word(nl, mul_iter_en, &p_iter, &p);
+    connect(nl, &p, &p_next);
+    let mcand_next = mux_word(nl, mul_iter_en, &mcand_eff, &mcand);
+    connect(nl, &mcand, &mcand_next);
+    let mplier_next = mux_word(nl, mul_iter_en, &mplier_shift, &mplier);
+    connect(nl, &mplier, &mplier_next);
+
+    // Divider registers: iterate on every div cycle except the commit
+    // (whose iteration is folded combinationally).
+    let div_busy = nl.and2(busy[0], kind_div);
+    let div_iter_en = nl.and2(div_busy, not_commit);
+    let rem_next = mux_word(nl, div_iter_en, &rem_iter, &rem);
+    connect(nl, &rem, &rem_next);
+    let quot_next = mux_word(nl, div_iter_en, &quot_iter, &quot);
+    connect(nl, &quot, &quot_next);
+    let den_upd = nl.and2(div_busy, first[0]);
+    let den_next = mux_word(nl, den_upd, &abs_op, &den);
+    connect(nl, &den, &den_next);
+
+    // Sign/zero captures on the first cycle of mul/div ops.
+    let muldiv_busy = nl.or2(mul_busy, div_busy);
+    let sign_upd = nl.and2(muldiv_busy, first[0]);
+    let psign_next = vec![nl.mux(sign_upd, psign_new, psign[0])];
+    connect(nl, &psign, &psign_next);
+    let asign_next = vec![nl.mux(sign_upd, acc_s, asign[0])];
+    connect(nl, &asign, &asign_next);
+    let dbz_upd = nl.and2(div_busy, first[0]);
+    let dbz_next = vec![nl.mux(dbz_upd, op_is_zero, dbz[0])];
+    connect(nl, &dbz, &dbz_next);
+
+    // pc: advance at commit (unless last); reset at start.
+    let pc_inc = inc(nl, &pc);
+    let pc_zero = word_const(nl, pcw, 0);
+    let pc_adv = mux_word(nl, commit_more, &pc_inc, &pc);
+    let pc_next = mux_word(nl, do_start, &pc_zero, &pc_adv);
+    connect(nl, &pc, &pc_next);
+
+    // cnt: load lat(op0) at start; next_lat at commit; else decrement.
+    let lat0 = word_const(nl, cw, rom[0].lat as i64);
+    let cnt_dec = dec(nl, &cnt);
+    let cnt_run = mux_word(nl, is_commit, &next_lat, &cnt_dec);
+    let cnt_hold = mux_word(nl, busy[0], &cnt_run, &cnt);
+    let cnt_next = mux_word(nl, do_start, &lat0, &cnt_hold);
+    connect(nl, &cnt, &cnt_next);
+
+    // busy / done / first flags.
+    let busy_clr = nl.not(commit_last);
+    let busy_run = nl.and2(busy[0], busy_clr);
+    let busy_next = vec![nl.or2(do_start, busy_run)];
+    connect(nl, &busy, &busy_next);
+
+    let udone_keep = {
+        let ns = nl.not(do_start);
+        nl.and2(udone[0], ns)
+    };
+    let udone_next = vec![nl.or2(commit_last, udone_keep)];
+    connect(nl, &udone, &udone_next);
+
+    let first_next = vec![nl.or2(do_start, commit_more)];
+    connect(nl, &first, &first_next);
+
+    (acc, udone[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{Q16_15, QFormat};
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+    use crate::rtl::ir;
+    use crate::rtl::sched::{module_latency, Policy};
+    use crate::rtl::sim as rtlsim;
+    use crate::stim::Lfsr32;
+    use crate::synth::gatesim::GateSim;
+
+    fn design_for(id: &str, q: QFormat) -> PiModuleDesign {
+        let e = corpus::by_id(id).unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        ir::build(&a, q)
+    }
+
+    /// Run the gate-level module once: assert start for one cycle, then
+    /// clock until done; return (pi outputs, cycles after start).
+    fn run_gates(nl: &Netlist, design: &PiModuleDesign, inputs: &[i64]) -> (Vec<i64>, u64) {
+        let mut sim = GateSim::new(nl);
+        for (p, v) in design.ports.iter().zip(inputs) {
+            sim.set_bus(&format!("in_{}", p.name), *v);
+        }
+        sim.set_bus("start", 1);
+        sim.step(); // capture cycle
+        sim.set_bus("start", 0);
+        let mut cycles = 0u64;
+        while !sim.get_bit("done") {
+            sim.step();
+            cycles += 1;
+            assert!(cycles < 5_000, "gate sim did not finish");
+        }
+        let outs = (0..design.units.len())
+            .map(|u| sim.get_output(&format!("pi_{u}")))
+            .collect();
+        (outs, cycles)
+    }
+
+    #[test]
+    fn gate_sim_matches_rtl_sim_pendulum() {
+        let d = design_for("pendulum", Q16_15);
+        let nl = lower(&d);
+        let mut lfsr = Lfsr32::new(0xBEEF);
+        for _ in 0..10 {
+            let inputs: Vec<i64> = (0..d.num_inputs())
+                .map(|_| Q16_15.from_f64(lfsr.range(0.25, 8.0)))
+                .collect();
+            let rtl = rtlsim::run_once(&d, &inputs);
+            let (gates, cycles) = run_gates(&nl, &d, &inputs);
+            assert_eq!(gates, rtl.outputs, "outputs for {inputs:?}");
+            assert_eq!(cycles, rtl.cycles, "cycles for {inputs:?}");
+        }
+    }
+
+    #[test]
+    fn gate_sim_matches_rtl_sim_all_systems() {
+        let mut lfsr = Lfsr32::new(0x5EED);
+        for e in corpus::corpus() {
+            let d = design_for(e.id, Q16_15);
+            let nl = lower(&d);
+            for _ in 0..3 {
+                let inputs: Vec<i64> = (0..d.num_inputs())
+                    .map(|_| Q16_15.from_f64(lfsr.range(0.25, 8.0)))
+                    .collect();
+                let rtl = rtlsim::run_once(&d, &inputs);
+                let (gates, cycles) = run_gates(&nl, &d, &inputs);
+                assert_eq!(gates, rtl.outputs, "{}: outputs for {inputs:?}", e.id);
+                assert_eq!(cycles, rtl.cycles, "{}: cycle count", e.id);
+            }
+        }
+    }
+
+    #[test]
+    fn gate_latency_equals_schedule() {
+        let d = design_for("beam", Q16_15);
+        let nl = lower(&d);
+        let inputs = vec![Q16_15.one(); d.num_inputs()];
+        let (_, cycles) = run_gates(&nl, &d, &inputs);
+        assert_eq!(cycles, module_latency(&d, Policy::ParallelPerPi));
+    }
+
+    #[test]
+    fn saturation_and_dbz_match_software() {
+        let d = design_for("pendulum", Q16_15);
+        let nl = lower(&d);
+        // Zero inputs: exercises divide-by-zero saturation.
+        let inputs = vec![0i64; d.num_inputs()];
+        let rtl = rtlsim::run_once(&d, &inputs);
+        let (gates, _) = run_gates(&nl, &d, &inputs);
+        assert_eq!(gates, rtl.outputs);
+        // Huge inputs: exercises multiplier saturation.
+        let inputs = vec![Q16_15.max_raw(); d.num_inputs()];
+        let rtl = rtlsim::run_once(&d, &inputs);
+        let (gates, _) = run_gates(&nl, &d, &inputs);
+        assert_eq!(gates, rtl.outputs);
+    }
+
+    #[test]
+    fn negative_operands_match() {
+        let d = design_for("pendulum", Q16_15);
+        let nl = lower(&d);
+        let mut lfsr = Lfsr32::new(77);
+        for _ in 0..10 {
+            let inputs: Vec<i64> = (0..d.num_inputs())
+                .map(|_| {
+                    let v = lfsr.range(0.25, 8.0);
+                    Q16_15.from_f64(if lfsr.next_f64() < 0.5 { -v } else { v })
+                })
+                .collect();
+            let rtl = rtlsim::run_once(&d, &inputs);
+            let (gates, _) = run_gates(&nl, &d, &inputs);
+            assert_eq!(gates, rtl.outputs, "inputs {inputs:?}");
+        }
+    }
+
+    #[test]
+    fn narrow_format_matches() {
+        let q = QFormat::new(8, 7);
+        let d = design_for("pendulum", q);
+        let nl = lower(&d);
+        let mut lfsr = Lfsr32::new(3);
+        for _ in 0..10 {
+            let inputs: Vec<i64> =
+                (0..d.num_inputs()).map(|_| q.from_f64(lfsr.range(0.5, 3.0))).collect();
+            let rtl = rtlsim::run_once(&d, &inputs);
+            let (gates, cycles) = run_gates(&nl, &d, &inputs);
+            assert_eq!(gates, rtl.outputs);
+            assert_eq!(cycles, rtl.cycles);
+        }
+    }
+
+    #[test]
+    fn module_reusable_across_activations() {
+        let d = design_for("pendulum", Q16_15);
+        let nl = lower(&d);
+        let mut sim = GateSim::new(&nl);
+        let q = Q16_15;
+        for round in 1..=3i64 {
+            let vals: Vec<i64> = (0..d.num_inputs() as i64)
+                .map(|i| q.from_f64(1.0 + (round + i) as f64 * 0.5))
+                .collect();
+            for (p, v) in d.ports.iter().zip(&vals) {
+                sim.set_bus(&format!("in_{}", p.name), *v);
+            }
+            sim.set_bus("start", 1);
+            sim.step();
+            sim.set_bus("start", 0);
+            let mut n = 0;
+            while !sim.get_bit("done") {
+                sim.step();
+                n += 1;
+                assert!(n < 1000);
+            }
+            let expect = rtlsim::run_once(&d, &vals);
+            let got: Vec<i64> =
+                (0..d.units.len()).map(|u| sim.get_output(&format!("pi_{u}"))).collect();
+            assert_eq!(got, expect.outputs, "round {round}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthesis flow ("yosys/nextpnr-lite"): gate-level netlist, RTL→gate
+//! lowering, optimization passes, LUT4 technology mapping, and gate-level
+//! simulation. Together with [`crate::timing`] and [`crate::power`] this
+//! is the substitute for the paper's iCE40 tool flow (DESIGN.md §2).
+
+pub mod gatesim;
+pub mod lower;
+pub mod netlist;
+pub mod opt;
+pub mod techmap;
+pub mod vcd;
+pub mod word;
+
+pub use gatesim::GateSim;
+pub use lower::lower;
+pub use netlist::{NetId, Netlist, Node};
+pub use techmap::{map_design, MappedDesign};
+pub use vcd::VcdRecorder;

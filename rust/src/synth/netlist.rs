@@ -1,0 +1,426 @@
+//! Gate-level netlist: the target of RTL lowering and the subject of
+//! optimization, technology mapping, timing analysis, power estimation,
+//! and gate-level simulation.
+//!
+//! The netlist is a DAG of LUT nodes (up to 4 inputs, arbitrary truth
+//! table — the iCE40's native combinational primitive), D flip-flops,
+//! constants and primary inputs. Structural hashing at construction time
+//! deduplicates identical nodes (the same CSE yosys performs during
+//! elaboration).
+
+use std::collections::HashMap;
+
+/// Index of a net (node output) in the netlist.
+pub type NetId = u32;
+
+/// A netlist node. The node's output *is* the net with the node's id.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Node {
+    /// Constant 0/1.
+    Const(bool),
+    /// Primary input bit (name, bit index).
+    Input(String),
+    /// K-input LUT: output = tt bit at index formed by input values
+    /// (input 0 = LSB of the index).
+    Lut { ins: Vec<NetId>, tt: u16 },
+    /// D flip-flop (posedge, implicit global clock), with reset-init value.
+    Dff { d: NetId, init: bool },
+}
+
+/// A gate-level netlist.
+#[derive(Clone, Default)]
+pub struct Netlist {
+    nodes: Vec<Node>,
+    /// Named output buses: (name, bits LSB-first).
+    pub outputs: Vec<(String, Vec<NetId>)>,
+    /// Named input buses for simulation binding: (name, bits LSB-first).
+    pub input_buses: Vec<(String, Vec<NetId>)>,
+    /// Structural-hash cache.
+    cache: HashMap<Node, NetId>,
+}
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        Netlist::default()
+    }
+
+    pub fn node(&self, id: NetId) -> &Node {
+        &self.nodes[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NetId, &Node)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (i as NetId, n))
+    }
+
+    fn intern(&mut self, node: Node) -> NetId {
+        // DFFs are stateful: never merged. Everything else is hashed.
+        if matches!(node, Node::Dff { .. }) {
+            let id = self.nodes.len() as NetId;
+            self.nodes.push(node);
+            return id;
+        }
+        if let Some(&id) = self.cache.get(&node) {
+            return id;
+        }
+        let id = self.nodes.len() as NetId;
+        self.nodes.push(node.clone());
+        self.cache.insert(node, id);
+        id
+    }
+
+    // ---- primitives -----------------------------------------------------
+
+    pub fn constant(&mut self, v: bool) -> NetId {
+        self.intern(Node::Const(v))
+    }
+
+    pub fn input(&mut self, name: impl Into<String>) -> NetId {
+        // Inputs are unique by construction; do not hash-merge distinct
+        // declarations with the same name.
+        let id = self.nodes.len() as NetId;
+        self.nodes.push(Node::Input(name.into()));
+        id
+    }
+
+    /// Declare an input bus of `width` bits, registered for simulation.
+    pub fn input_bus(&mut self, name: &str, width: u32) -> Vec<NetId> {
+        let bits: Vec<NetId> = (0..width).map(|b| self.input(format!("{name}[{b}]"))).collect();
+        self.input_buses.push((name.to_string(), bits.clone()));
+        bits
+    }
+
+    /// Generic LUT with canonicalization of constant/duplicate inputs.
+    pub fn lut(&mut self, ins: &[NetId], tt: u16) -> NetId {
+        assert!(!ins.is_empty() && ins.len() <= 4, "LUT arity 1..=4");
+        let n = ins.len();
+        // Constant-fold if all inputs constant.
+        let consts: Vec<Option<bool>> = ins
+            .iter()
+            .map(|&i| match self.nodes[i as usize] {
+                Node::Const(v) => Some(v),
+                _ => None,
+            })
+            .collect();
+        if consts.iter().all(|c| c.is_some()) {
+            let idx = consts
+                .iter()
+                .enumerate()
+                .fold(0usize, |acc, (k, c)| acc | ((c.unwrap() as usize) << k));
+            return self.constant(tt >> idx & 1 == 1);
+        }
+        // Partial constant propagation: cofactor the truth table.
+        if consts.iter().any(|c| c.is_some()) {
+            let mut new_ins = Vec::new();
+            let mut new_tt = 0u16;
+            let free: Vec<usize> = (0..n).filter(|&k| consts[k].is_none()).collect();
+            for (fi, &k) in free.iter().enumerate() {
+                let _ = (fi, k);
+            }
+            for idx in 0..(1usize << free.len()) {
+                // Expand reduced index to full index with constants filled.
+                let mut full = 0usize;
+                for (fi, &k) in free.iter().enumerate() {
+                    if idx >> fi & 1 == 1 {
+                        full |= 1 << k;
+                    }
+                }
+                for (k, c) in consts.iter().enumerate() {
+                    if c == &Some(true) {
+                        full |= 1 << k;
+                    }
+                }
+                if tt >> full & 1 == 1 {
+                    new_tt |= 1 << idx;
+                }
+            }
+            for &k in &free {
+                new_ins.push(ins[k]);
+            }
+            return self.lut(&new_ins, new_tt);
+        }
+        // Vacuous-input elimination: drop inputs the function ignores.
+        for k in 0..n {
+            let mut sensitive = false;
+            for idx in 0..(1usize << n) {
+                if idx >> k & 1 == 0 {
+                    let hi = idx | (1 << k);
+                    if (tt >> idx & 1) != (tt >> hi & 1) {
+                        sensitive = true;
+                        break;
+                    }
+                }
+            }
+            if !sensitive {
+                // Cofactor with input k = 0.
+                let mut new_ins = Vec::with_capacity(n - 1);
+                let mut new_tt = 0u16;
+                let mut out_idx = 0usize;
+                for idx in 0..(1usize << n) {
+                    if idx >> k & 1 == 0 {
+                        if tt >> idx & 1 == 1 {
+                            new_tt |= 1 << out_idx;
+                        }
+                        out_idx += 1;
+                    }
+                }
+                for (j, &i) in ins.iter().enumerate() {
+                    if j != k {
+                        new_ins.push(i);
+                    }
+                }
+                if new_ins.is_empty() {
+                    return self.constant(new_tt & 1 == 1);
+                }
+                return self.lut(&new_ins, new_tt);
+            }
+        }
+        // Duplicate-input merging.
+        for k in 1..n {
+            if let Some(j) = (0..k).find(|&j| ins[j] == ins[k]) {
+                // Restrict tt to assignments where input k == input j.
+                let mut new_ins = Vec::with_capacity(n - 1);
+                let mut new_tt = 0u16;
+                for idx in 0..(1usize << (n - 1)) {
+                    // Expand reduced index (without position k) to full.
+                    let mut full = 0usize;
+                    let mut src = 0usize;
+                    for pos in 0..n {
+                        if pos == k {
+                            continue;
+                        }
+                        if idx >> src & 1 == 1 {
+                            full |= 1 << pos;
+                        }
+                        src += 1;
+                    }
+                    if full >> j & 1 == 1 {
+                        full |= 1 << k;
+                    }
+                    if tt >> full & 1 == 1 {
+                        new_tt |= 1 << idx;
+                    }
+                }
+                for (pos, &i) in ins.iter().enumerate() {
+                    if pos != k {
+                        new_ins.push(i);
+                    }
+                }
+                return self.lut(&new_ins, new_tt);
+            }
+        }
+        // Identity / inverter simplification for 1-input LUTs.
+        if n == 1 {
+            if tt & 0b11 == 0b10 {
+                return ins[0]; // buffer
+            }
+            if tt & 0b11 == 0b00 {
+                return self.constant(false);
+            }
+            if tt & 0b11 == 0b11 {
+                return self.constant(true);
+            }
+        }
+        // Mask truth table to the used width for canonical hashing.
+        let mask = if n == 4 { 0xFFFFu16 } else { (1u16 << (1 << n)) - 1 };
+        self.intern(Node::Lut { ins: ins.to_vec(), tt: tt & mask })
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.lut(&[a], 0b01)
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(&[a, b], 0b1000)
+    }
+
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(&[a, b], 0b1110)
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(&[a, b], 0b0110)
+    }
+
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(&[a, b], 0b0111)
+    }
+
+    /// 2:1 mux: `s ? a : b` (inputs ordered [s, a, b]).
+    pub fn mux(&mut self, s: NetId, a: NetId, b: NetId) -> NetId {
+        // index = s | a<<1 | b<<2 ; out = s ? a : b
+        // idx: s a b -> out
+        // 0: 000 -> b=0 -> 0 ; 1: s=1,a=0 -> 0
+        // 2: a=1,s=0 -> b=0 -> 0 ... enumerate:
+        // out(s,a,b) = s? a : b
+        let mut tt = 0u16;
+        for idx in 0..8u16 {
+            let s_v = idx & 1 == 1;
+            let a_v = idx >> 1 & 1 == 1;
+            let b_v = idx >> 2 & 1 == 1;
+            if (s_v && a_v) || (!s_v && b_v) {
+                tt |= 1 << idx;
+            }
+        }
+        self.lut(&[s, a, b], tt)
+    }
+
+    /// Full adder: returns (sum, carry) as two 3-input LUTs — the natural
+    /// iCE40 mapping of one adder bit.
+    pub fn full_adder(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        // sum = a ^ b ^ c; carry = majority(a, b, c)
+        let mut sum_tt = 0u16;
+        let mut carry_tt = 0u16;
+        for idx in 0..8u16 {
+            let bits = (idx & 1) + (idx >> 1 & 1) + (idx >> 2 & 1);
+            if bits % 2 == 1 {
+                sum_tt |= 1 << idx;
+            }
+            if bits >= 2 {
+                carry_tt |= 1 << idx;
+            }
+        }
+        (self.lut(&[a, b, c], sum_tt), self.lut(&[a, b, c], carry_tt))
+    }
+
+    pub fn dff(&mut self, d: NetId, init: bool) -> NetId {
+        self.intern(Node::Dff { d, init })
+    }
+
+    /// Rewire an existing DFF's data input (used to close sequential
+    /// feedback loops after the combinational logic is built).
+    pub fn set_dff_input(&mut self, dff: NetId, d: NetId) {
+        match &mut self.nodes[dff as usize] {
+            Node::Dff { d: slot, .. } => *slot = d,
+            other => panic!("set_dff_input on non-DFF node {other:?}"),
+        }
+    }
+
+    pub fn add_output(&mut self, name: &str, bits: Vec<NetId>) {
+        self.outputs.push((name.to_string(), bits));
+    }
+
+    // ---- statistics ------------------------------------------------------
+
+    pub fn count_luts(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Lut { .. })).count()
+    }
+
+    pub fn count_dffs(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Dff { .. })).count()
+    }
+
+    pub fn count_inputs(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Input(_))).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structural_hashing_dedupes() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x1 = nl.and2(a, b);
+        let x2 = nl.and2(a, b);
+        assert_eq!(x1, x2);
+        let x3 = nl.and2(b, a); // different input order: not merged (no commutativity canon)
+        let _ = x3;
+        assert_eq!(nl.count_luts(), 2);
+    }
+
+    #[test]
+    fn dffs_never_merge() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let d1 = nl.dff(a, false);
+        let d2 = nl.dff(a, false);
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn constant_folding() {
+        let mut nl = Netlist::new();
+        let t = nl.constant(true);
+        let f = nl.constant(false);
+        assert_eq!(nl.and2(t, f), nl.constant(false));
+        assert_eq!(nl.or2(t, f), nl.constant(true));
+        assert_eq!(nl.xor2(t, t), nl.constant(false));
+        assert_eq!(nl.count_luts(), 0);
+    }
+
+    #[test]
+    fn partial_constant_cofactor() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let t = nl.constant(true);
+        let f = nl.constant(false);
+        // a AND 1 = a (buffer elimination).
+        assert_eq!(nl.and2(a, t), a);
+        // a AND 0 = 0.
+        assert_eq!(nl.and2(a, f), nl.constant(false));
+        // a XOR 1 = NOT a — one LUT.
+        let na = nl.xor2(a, t);
+        assert_eq!(na, nl.not(a));
+    }
+
+    #[test]
+    fn mux_semantics_via_fold() {
+        let mut nl = Netlist::new();
+        let t = nl.constant(true);
+        let f = nl.constant(false);
+        let a = nl.input("a");
+        let b = nl.input("b");
+        // s=1 -> a
+        assert_eq!(nl.mux(t, a, b), a);
+        // s=0 -> b
+        assert_eq!(nl.mux(f, a, b), b);
+    }
+
+    #[test]
+    fn full_adder_truth() {
+        // Validate via constant folding across all 8 input combinations.
+        for idx in 0..8u16 {
+            let mut nl = Netlist::new();
+            let a = nl.constant(idx & 1 == 1);
+            let b = nl.constant(idx >> 1 & 1 == 1);
+            let c = nl.constant(idx >> 2 & 1 == 1);
+            let (s, co) = nl.full_adder(a, b, c);
+            let total = (idx & 1) + (idx >> 1 & 1) + (idx >> 2 & 1);
+            assert_eq!(nl.node(s), &Node::Const(total % 2 == 1));
+            assert_eq!(nl.node(co), &Node::Const(total >= 2));
+        }
+    }
+
+    #[test]
+    fn input_bus_registers_bits() {
+        let mut nl = Netlist::new();
+        let bus = nl.input_bus("x", 8);
+        assert_eq!(bus.len(), 8);
+        assert_eq!(nl.input_buses.len(), 1);
+        assert_eq!(nl.count_inputs(), 8);
+    }
+
+    #[test]
+    fn set_dff_input_rewires() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let d = nl.dff(a, false);
+        nl.set_dff_input(d, b);
+        match nl.node(d) {
+            Node::Dff { d: slot, .. } => assert_eq!(*slot, b),
+            _ => panic!(),
+        }
+    }
+}

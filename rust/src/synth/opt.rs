@@ -1,0 +1,170 @@
+//! Netlist optimization passes.
+//!
+//! Construction-time structural hashing and constant folding live in
+//! [`super::netlist`]; this module adds the global passes that need the
+//! whole graph: dead-code elimination (sweep from outputs and flip-flop
+//! feedback) and netlist statistics used by reports.
+
+use super::netlist::{NetId, Netlist, Node};
+
+/// Dead-code elimination: keep nodes reachable from any output, tracing
+//  through LUT inputs and DFF data inputs. Primary inputs are always kept
+/// (they are the module interface). Returns the pruned netlist and the
+/// number of nodes removed.
+pub fn dce(nl: &Netlist) -> (Netlist, usize) {
+    let n = nl.len();
+    let mut live = vec![false; n];
+    let mut stack: Vec<NetId> = Vec::new();
+    for (_, bits) in &nl.outputs {
+        for &b in bits {
+            if !live[b as usize] {
+                live[b as usize] = true;
+                stack.push(b);
+            }
+        }
+    }
+    while let Some(id) = stack.pop() {
+        match nl.node(id) {
+            Node::Lut { ins, .. } => {
+                for &i in ins {
+                    if !live[i as usize] {
+                        live[i as usize] = true;
+                        stack.push(i);
+                    }
+                }
+            }
+            Node::Dff { d, .. } => {
+                if !live[*d as usize] {
+                    live[*d as usize] = true;
+                    stack.push(*d);
+                }
+            }
+            _ => {}
+        }
+    }
+    // Inputs always survive (interface stability for simulation binding).
+    for (id, node) in nl.nodes() {
+        if matches!(node, Node::Input(_)) {
+            live[id as usize] = true;
+        }
+    }
+
+    // Rebuild with compacted ids.
+    let mut remap = vec![u32::MAX; n];
+    let mut out = Netlist::new();
+    let mut removed = 0usize;
+    for (id, node) in nl.nodes() {
+        if !live[id as usize] {
+            removed += 1;
+            continue;
+        }
+        let new_id = match node {
+            Node::Const(v) => out.constant(*v),
+            Node::Input(name) => out.input(name.clone()),
+            Node::Lut { ins, tt } => {
+                let new_ins: Vec<NetId> = ins.iter().map(|&i| remap[i as usize]).collect();
+                debug_assert!(new_ins.iter().all(|&i| i != u32::MAX));
+                out.lut(&new_ins, *tt)
+            }
+            Node::Dff { init, .. } => {
+                // D input may be a forward reference; patch after.
+                out.dff(0, *init)
+            }
+        };
+        remap[id as usize] = new_id;
+    }
+    // Patch DFF data inputs.
+    for (id, node) in nl.nodes() {
+        if let Node::Dff { d, .. } = node {
+            if live[id as usize] {
+                out.set_dff_input(remap[id as usize], remap[*d as usize]);
+            }
+        }
+    }
+    // Remap interface lists.
+    for (name, bits) in &nl.outputs {
+        out.add_output(name, bits.iter().map(|&b| remap[b as usize]).collect());
+    }
+    out.input_buses = nl
+        .input_buses
+        .iter()
+        .map(|(name, bits)| {
+            (name.clone(), bits.iter().map(|&b| remap[b as usize]).collect())
+        })
+        .collect();
+    (out, removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::gatesim::GateSim;
+
+    #[test]
+    fn dce_removes_unused_logic() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 2);
+        let used = nl.and2(a[0], a[1]);
+        let _dead1 = nl.xor2(a[0], a[1]);
+        let dead2 = nl.or2(a[0], a[1]);
+        let _dead3 = nl.not(dead2);
+        nl.add_output("y", vec![used]);
+        let before = nl.count_luts();
+        let (pruned, removed) = dce(&nl);
+        assert_eq!(pruned.count_luts(), 1);
+        assert_eq!(before - pruned.count_luts(), removed - 0);
+        assert!(removed >= 3);
+    }
+
+    #[test]
+    fn dce_keeps_dff_feedback() {
+        // Toggle FF: q <= not q. The NOT is only reachable via the DFF.
+        let mut nl = Netlist::new();
+        let q = nl.dff(0, false);
+        let nq = nl.not(q);
+        nl.set_dff_input(q, nq);
+        nl.add_output("q", vec![q]);
+        let (pruned, _) = dce(&nl);
+        assert_eq!(pruned.count_dffs(), 1);
+        assert_eq!(pruned.count_luts(), 1);
+        // Still toggles after pruning.
+        let mut sim = GateSim::new(&pruned);
+        sim.step();
+        assert_eq!(sim.get_output("q") & 1, 1);
+        sim.step();
+        assert_eq!(sim.get_output("q") & 1, 0);
+    }
+
+    #[test]
+    fn dce_preserves_behaviour() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let y: Vec<_> = a.iter().zip(&b).map(|(&x, &y)| nl.xor2(x, y)).collect();
+        let _dead: Vec<_> = a.iter().map(|&x| nl.not(x)).collect();
+        nl.add_output("y", y);
+        let (pruned, _) = dce(&nl);
+        let mut s1 = GateSim::new(&nl);
+        let mut s2 = GateSim::new(&pruned);
+        for (av, bv) in [(3, 5), (0xF, 0xF), (0, 9)] {
+            s1.set_bus("a", av);
+            s1.set_bus("b", bv);
+            s1.step();
+            s2.set_bus("a", av);
+            s2.set_bus("b", bv);
+            s2.step();
+            assert_eq!(s1.get_output("y"), s2.get_output("y"));
+        }
+    }
+
+    #[test]
+    fn inputs_survive_dce() {
+        let mut nl = Netlist::new();
+        let _a = nl.input_bus("a", 3);
+        let one = nl.constant(true);
+        nl.add_output("y", vec![one]);
+        let (pruned, _) = dce(&nl);
+        assert_eq!(pruned.count_inputs(), 3);
+        assert_eq!(pruned.input_buses.len(), 1);
+    }
+}

@@ -1,0 +1,431 @@
+//! LUT4 technology mapping and resource accounting (the "nextpnr packing"
+//! stage).
+//!
+//! The lowering stage emits fine-grained LUTs (mostly 2–3 inputs). This
+//! pass greedily collapses single-fanout LUT chains into larger LUTs while
+//! the combined support fits in 4 inputs — the classic cut-based packing
+//! that fills iCE40 LUT4s — then accounts resources the way the paper's
+//! Table 1 does:
+//!
+//! * **LUT4 cells** — logic cells consumed: packed LUTs plus flip-flops
+//!   that cannot share a cell with the LUT driving their D input (an
+//!   iCE40 PLB pairs one LUT4 with one DFF).
+//! * **Gate count** — 2-input-gate equivalents of the mapped logic
+//!   (`arity − 1` per LUT, minimum 1). The paper's exact gate metric is
+//!   not specified; ours is consistent across designs so cross-design
+//!   ordering is meaningful (EXPERIMENTS.md discusses the scale).
+
+use super::netlist::{NetId, Netlist, Node};
+use super::opt::dce;
+use crate::rtl::ir::PiModuleDesign;
+
+/// Result of technology mapping.
+pub struct MappedDesign {
+    /// The packed netlist (valid for simulation, timing and power).
+    pub netlist: Netlist,
+    /// Logic cells (packed LUT4s + unshared DFFs).
+    pub lut4_cells: usize,
+    /// Packed LUT count only.
+    pub luts: usize,
+    /// Flip-flop count.
+    pub dffs: usize,
+    /// 2-input-gate equivalents.
+    pub gate_count: usize,
+}
+
+/// Pack LUT chains into LUT4s. Returns a new netlist.
+pub fn pack_luts(nl: &Netlist) -> Netlist {
+    // Work on mutable copies of the LUT nodes.
+    let n = nl.len();
+    let mut ins: Vec<Vec<NetId>> = vec![Vec::new(); n];
+    let mut tts: Vec<u64> = vec![0; n];
+    let mut is_lut = vec![false; n];
+    for (id, node) in nl.nodes() {
+        if let Node::Lut { ins: i, tt } = node {
+            ins[id as usize] = i.clone();
+            tts[id as usize] = *tt as u64;
+            is_lut[id as usize] = true;
+        }
+    }
+    // Fanout counts (LUT ins + DFF d + outputs).
+    let mut fanout = vec![0u32; n];
+    for (_, node) in nl.nodes() {
+        match node {
+            Node::Lut { ins, .. } => {
+                for &i in ins {
+                    fanout[i as usize] += 1;
+                }
+            }
+            Node::Dff { d, .. } => fanout[*d as usize] += 1,
+            _ => {}
+        }
+    }
+    for (_, bits) in &nl.outputs {
+        for &b in bits {
+            fanout[b as usize] += 1;
+        }
+    }
+
+    // Greedy collapse, processing nodes in order (inputs of a node have
+    // smaller ids, so by the time we process a node its children are
+    // final).
+    let mut absorbed = vec![false; n];
+    for id in 0..n {
+        if !is_lut[id] {
+            continue;
+        }
+        loop {
+            // Find a single-fanout LUT input worth absorbing.
+            let mut cand: Option<usize> = None;
+            for &i in &ins[id] {
+                let ii = i as usize;
+                if is_lut[ii] && !absorbed[ii] && fanout[ii] == 1 {
+                    // Combined support if we absorb `i`.
+                    let mut support: Vec<NetId> =
+                        ins[id].iter().copied().filter(|&x| x != i).collect();
+                    for &ci in &ins[ii] {
+                        if !support.contains(&ci) {
+                            support.push(ci);
+                        }
+                    }
+                    if support.len() <= 4 {
+                        cand = Some(ii);
+                        break;
+                    }
+                }
+            }
+            let Some(child) = cand else { break };
+            // Merge truth tables: new support = parent ins minus child,
+            // plus child ins (deduped, order: remaining parent ins then
+            // new child ins).
+            let child_id = child as NetId;
+            let parent_ins = ins[id].clone();
+            let child_ins = ins[child].clone();
+            let mut support: Vec<NetId> =
+                parent_ins.iter().copied().filter(|&x| x != child_id).collect();
+            for &ci in &child_ins {
+                if !support.contains(&ci) {
+                    support.push(ci);
+                }
+            }
+            let mut new_tt: u64 = 0;
+            for idx in 0..(1usize << support.len()) {
+                let val_of = |net: NetId| -> bool {
+                    let pos = support.iter().position(|&s| s == net).unwrap();
+                    idx >> pos & 1 == 1
+                };
+                // Child output under this assignment.
+                let mut cidx = 0usize;
+                for (k, &ci) in child_ins.iter().enumerate() {
+                    if val_of(ci) {
+                        cidx |= 1 << k;
+                    }
+                }
+                let cval = tts[child] >> cidx & 1 == 1;
+                // Parent output with child substituted.
+                let mut pidx = 0usize;
+                for (k, &pi) in parent_ins.iter().enumerate() {
+                    let v = if pi == child_id { cval } else { val_of(pi) };
+                    if v {
+                        pidx |= 1 << k;
+                    }
+                }
+                if tts[id] >> pidx & 1 == 1 {
+                    new_tt |= 1 << idx;
+                }
+            }
+            // Update fanouts: child's inputs gain a use, child loses one.
+            for &ci in &child_ins {
+                fanout[ci as usize] += 1;
+            }
+            // (child had fanout 1, now absorbed)
+            absorbed[child] = true;
+            is_lut[child] = false;
+            ins[id] = support;
+            tts[id] = new_tt;
+        }
+    }
+
+    // Rebuild the netlist with absorbed nodes dropped.
+    let mut out = Netlist::new();
+    let mut remap = vec![u32::MAX; n];
+    for (id, node) in nl.nodes() {
+        let idu = id as usize;
+        if absorbed[idu] {
+            continue;
+        }
+        let new_id = match node {
+            Node::Const(v) => out.constant(*v),
+            Node::Input(name) => out.input(name.clone()),
+            Node::Lut { .. } => {
+                let new_ins: Vec<NetId> =
+                    ins[idu].iter().map(|&i| remap[i as usize]).collect();
+                out.lut(&new_ins, tts[idu] as u16)
+            }
+            Node::Dff { init, .. } => out.dff(0, *init),
+        };
+        remap[idu] = new_id;
+    }
+    for (id, node) in nl.nodes() {
+        if let Node::Dff { d, .. } = node {
+            if !absorbed[id as usize] {
+                out.set_dff_input(remap[id as usize], remap[*d as usize]);
+            }
+        }
+    }
+    for (name, bits) in &nl.outputs {
+        out.add_output(name, bits.iter().map(|&b| remap[b as usize]).collect());
+    }
+    out.input_buses = nl
+        .input_buses
+        .iter()
+        .map(|(name, bits)| (name.clone(), bits.iter().map(|&b| remap[b as usize]).collect()))
+        .collect();
+    // Absorption can orphan nodes (e.g. constants); sweep.
+    dce(&out).0
+}
+
+/// Standard-cell estimate for one LUT function: how many cells of a
+/// typical CMOS library (INV/NAND/NOR/XOR/MUX/AOI) the function maps to.
+/// MUX-like functions (both cofactors w.r.t. some input are literals or
+/// constants) map to a single MUX cell; parity functions need `n−1` XOR
+/// cells; the general case is estimated at `n−1` two-input cells.
+fn gate_equiv(ins: usize, tt: u16) -> usize {
+    let n = ins;
+    if n <= 2 {
+        return 1;
+    }
+    let size = 1usize << n;
+    // Parity check.
+    let mut is_parity = true;
+    let mut is_nparity = true;
+    for idx in 0..size {
+        let ones = (idx as u32).count_ones() % 2 == 1;
+        let bit = tt >> idx & 1 == 1;
+        if bit != ones {
+            is_parity = false;
+        }
+        if bit == ones {
+            is_nparity = false;
+        }
+    }
+    if is_parity || is_nparity {
+        return n - 1;
+    }
+    // MUX-like: some select input whose two cofactors each depend on at
+    // most one remaining variable.
+    for s in 0..n {
+        let mut dep0 = 0usize; // variables the s=0 cofactor depends on
+        let mut dep1 = 0usize;
+        for v in 0..n {
+            if v == s {
+                continue;
+            }
+            for idx in 0..size {
+                if idx >> v & 1 == 1 {
+                    continue;
+                }
+                let j = idx | (1 << v);
+                if (tt >> idx & 1) != (tt >> j & 1) {
+                    if idx >> s & 1 == 0 {
+                        dep0 |= 1 << v;
+                    } else {
+                        dep1 |= 1 << v;
+                    }
+                }
+            }
+        }
+        if dep0.count_ones() <= 1 && dep1.count_ones() <= 1 {
+            return if n == 3 { 1 } else { 2 };
+        }
+    }
+    n - 1
+}
+
+/// Map a design end to end: lower → DCE → pack → count.
+pub fn map_design(design: &PiModuleDesign) -> MappedDesign {
+    let raw = super::lower::lower(design);
+    let (clean, _) = dce(&raw);
+    let packed = pack_luts(&clean);
+    stats(packed)
+}
+
+/// Compute resource statistics for an already-packed netlist.
+pub fn stats(netlist: Netlist) -> MappedDesign {
+    let luts = netlist.count_luts();
+    let dffs = netlist.count_dffs();
+    // DFF/LUT cell sharing: a DFF packs into the cell of the LUT driving
+    // its D input when that LUT has no other fanout.
+    let mut fanout = vec![0u32; netlist.len()];
+    for (_, node) in netlist.nodes() {
+        match node {
+            Node::Lut { ins, .. } => {
+                for &i in ins {
+                    fanout[i as usize] += 1;
+                }
+            }
+            Node::Dff { d, .. } => fanout[*d as usize] += 1,
+            _ => {}
+        }
+    }
+    for (_, bits) in &netlist.outputs {
+        for &b in bits {
+            fanout[b as usize] += 1;
+        }
+    }
+    let mut shared = 0usize;
+    for (_, node) in netlist.nodes() {
+        if let Node::Dff { d, .. } = node {
+            if matches!(netlist.node(*d), Node::Lut { .. }) && fanout[*d as usize] == 1 {
+                shared += 1;
+            }
+        }
+    }
+    let gate_count: usize = netlist
+        .nodes()
+        .filter_map(|(_, n)| match n {
+            Node::Lut { ins, tt } => Some(gate_equiv(ins.len(), *tt)),
+            _ => None,
+        })
+        .sum();
+    MappedDesign {
+        lut4_cells: luts + dffs.saturating_sub(shared),
+        luts,
+        dffs,
+        gate_count,
+        netlist,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+    use crate::rtl::ir;
+    use crate::synth::gatesim::GateSim;
+    use crate::synth::netlist::Netlist;
+
+    #[test]
+    fn packing_collapses_chains() {
+        // a^b^c^d as a chain of three XOR2s: packs into fewer LUTs.
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let x1 = nl.xor2(a[0], a[1]);
+        let x2 = nl.xor2(x1, a[2]);
+        let x3 = nl.xor2(x2, a[3]);
+        nl.add_output("y", vec![x3]);
+        let packed = pack_luts(&nl);
+        assert_eq!(packed.count_luts(), 1, "should pack into one LUT4");
+    }
+
+    #[test]
+    fn packing_preserves_function() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let x1 = nl.xor2(a[0], a[1]);
+        let a2 = nl.and2(x1, a[2]);
+        let o1 = nl.or2(a2, a[3]);
+        nl.add_output("y", vec![o1]);
+        let packed = pack_luts(&nl);
+        for v in 0..16i64 {
+            let mut s1 = GateSim::new(&nl);
+            let mut s2 = GateSim::new(&packed);
+            s1.set_bus("a", v);
+            s2.set_bus("a", v);
+            s1.step();
+            s2.step();
+            assert_eq!(s1.get_output("y"), s2.get_output("y"), "input {v}");
+        }
+    }
+
+    #[test]
+    fn packing_respects_fanout() {
+        // Shared node must not be absorbed twice.
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 3);
+        let shared = nl.xor2(a[0], a[1]);
+        let y0 = nl.and2(shared, a[2]);
+        let y1 = nl.or2(shared, a[2]);
+        nl.add_output("y0", vec![y0]);
+        nl.add_output("y1", vec![y1]);
+        let packed = pack_luts(&nl);
+        // shared has fanout 2: stays; 3 LUTs total.
+        assert_eq!(packed.count_luts(), 3);
+        for v in 0..8i64 {
+            let mut s1 = GateSim::new(&nl);
+            let mut s2 = GateSim::new(&packed);
+            s1.set_bus("a", v);
+            s2.set_bus("a", v);
+            s1.step();
+            s2.step();
+            assert_eq!(s1.get_output("y0"), s2.get_output("y0"));
+            assert_eq!(s1.get_output("y1"), s2.get_output("y1"));
+        }
+    }
+
+    #[test]
+    fn mapped_designs_have_plausible_counts() {
+        for e in corpus::corpus() {
+            let entry = corpus::by_id(e.id).unwrap();
+            let m = corpus::load_entry(&entry).unwrap();
+            let a = analyze_optimized(&m, entry.target).unwrap();
+            let d = ir::build(&a, Q16_15);
+            let mapped = map_design(&d);
+            // Order-of-magnitude window around the paper's Table 1.
+            assert!(
+                mapped.lut4_cells > 300 && mapped.lut4_cells < 20_000,
+                "{}: {} cells",
+                e.id,
+                mapped.lut4_cells
+            );
+            assert!(mapped.gate_count > 100, "{}: gates", e.id);
+            assert!(mapped.dffs > 100, "{}: dffs", e.id);
+        }
+    }
+
+    #[test]
+    fn packed_pendulum_still_computes() {
+        use crate::rtl::sim as rtlsim;
+        let entry = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&entry).unwrap();
+        let a = analyze_optimized(&m, entry.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let inputs: Vec<i64> = vec![
+            Q16_15.from_f64(2.0),
+            Q16_15.from_f64(1.5),
+            Q16_15.from_f64(9.81),
+        ];
+        let mut sim = GateSim::new(&mapped.netlist);
+        for (p, v) in d.ports.iter().zip(&inputs) {
+            sim.set_bus(&format!("in_{}", p.name), *v);
+        }
+        sim.set_bus("start", 1);
+        sim.step();
+        sim.set_bus("start", 0);
+        let mut n = 0;
+        while !sim.get_bit("done") {
+            sim.step();
+            n += 1;
+            assert!(n < 1000);
+        }
+        let expect = rtlsim::run_once(&d, &inputs);
+        assert_eq!(sim.get_output("pi_0"), expect.outputs[0]);
+        assert_eq!(n, expect.cycles);
+    }
+
+    #[test]
+    fn more_signals_more_cells() {
+        // Fluid-in-pipe (6 signals, 3 units) must use more cells than the
+        // pendulum (3 signals, 1 unit) — the paper's Table-1 ordering.
+        let cells = |id: &str| {
+            let e = corpus::by_id(id).unwrap();
+            let m = corpus::load_entry(&e).unwrap();
+            let a = analyze_optimized(&m, e.target).unwrap();
+            map_design(&ir::build(&a, Q16_15)).lut4_cells
+        };
+        assert!(cells("fluid_pipe") > cells("pendulum"));
+    }
+}

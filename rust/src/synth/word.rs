@@ -1,0 +1,339 @@
+//! Word-level construction helpers over the bit-level netlist: buses,
+//! registers, adders, negation, absolute value, muxes, comparators and
+//! reductions. These are the building blocks [`mod@super::lower`] uses to
+//! elaborate the RTL datapaths into gates.
+
+use super::netlist::{NetId, Netlist};
+
+/// A bus of nets, LSB first.
+pub type Word = Vec<NetId>;
+
+/// Constant word of `width` bits (sign-extended past bit 63 for wide
+/// buses, e.g. the 2W-bit product registers of wide formats).
+pub fn word_const(nl: &mut Netlist, width: u32, value: i64) -> Word {
+    (0..width).map(|b| nl.constant((value >> b.min(63)) & 1 == 1)).collect()
+}
+
+/// A register bank: `width` DFFs with init 0. Returns the Q outputs; data
+/// inputs are closed later with [`connect`].
+pub fn register(nl: &mut Netlist, width: u32) -> Word {
+    (0..width)
+        .map(|_| {
+            // Temporarily self-looped; rewired by `connect`.
+            let placeholder = nl.constant(false);
+            nl.dff(placeholder, false)
+        })
+        .collect()
+}
+
+/// Close register feedback: drive register `q`'s D inputs from `d`.
+pub fn connect(nl: &mut Netlist, q: &Word, d: &Word) {
+    assert_eq!(q.len(), d.len(), "register width mismatch");
+    for (&ff, &din) in q.iter().zip(d.iter()) {
+        nl.set_dff_input(ff, din);
+    }
+}
+
+/// Ripple-carry adder; returns (sum, carry_out).
+pub fn add(nl: &mut Netlist, a: &Word, b: &Word, cin: NetId) -> (Word, NetId) {
+    assert_eq!(a.len(), b.len());
+    let mut carry = cin;
+    let mut sum = Vec::with_capacity(a.len());
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let (s, c) = nl.full_adder(x, y, carry);
+        sum.push(s);
+        carry = c;
+    }
+    (sum, carry)
+}
+
+/// Subtractor `a - b`; returns (difference, borrow-free flag: 1 if a >= b
+/// treating operands as unsigned).
+pub fn sub(nl: &mut Netlist, a: &Word, b: &Word) -> (Word, NetId) {
+    let nb: Word = b.iter().map(|&x| nl.not(x)).collect();
+    let one = nl.constant(true);
+    add(nl, a, &nb, one)
+}
+
+/// Two's-complement negation.
+pub fn neg(nl: &mut Netlist, a: &Word) -> Word {
+    let na: Word = a.iter().map(|&x| nl.not(x)).collect();
+    let zero = word_const(nl, a.len() as u32, 0);
+    let one = nl.constant(true);
+    add(nl, &na, &zero, one).0
+}
+
+/// Absolute value of a two's-complement word (the extremum negates to
+/// itself, as in real hardware).
+pub fn abs(nl: &mut Netlist, a: &Word) -> Word {
+    let sign = *a.last().unwrap();
+    let n = neg(nl, a);
+    mux_word(nl, sign, &n, a)
+}
+
+/// Word-wide 2:1 mux: `s ? a : b`.
+pub fn mux_word(nl: &mut Netlist, s: NetId, a: &Word, b: &Word) -> Word {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| nl.mux(s, x, y)).collect()
+}
+
+/// OR-reduction (balanced tree).
+pub fn or_reduce(nl: &mut Netlist, w: &[NetId]) -> NetId {
+    match w.len() {
+        0 => nl.constant(false),
+        1 => w[0],
+        n => {
+            let (lo, hi) = w.split_at(n / 2);
+            let l = or_reduce(nl, lo);
+            let r = or_reduce(nl, hi);
+            nl.or2(l, r)
+        }
+    }
+}
+
+/// AND-reduction (balanced tree).
+pub fn and_reduce(nl: &mut Netlist, w: &[NetId]) -> NetId {
+    match w.len() {
+        0 => nl.constant(true),
+        1 => w[0],
+        n => {
+            let (lo, hi) = w.split_at(n / 2);
+            let l = and_reduce(nl, lo);
+            let r = and_reduce(nl, hi);
+            nl.and2(l, r)
+        }
+    }
+}
+
+/// Equality with a constant.
+pub fn eq_const(nl: &mut Netlist, w: &Word, k: i64) -> NetId {
+    let bits: Vec<NetId> = w
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| if (k >> i) & 1 == 1 { b } else { nl.not(b) })
+        .collect();
+    and_reduce(nl, &bits)
+}
+
+/// Zero test.
+pub fn is_zero(nl: &mut Netlist, w: &Word) -> NetId {
+    let any = or_reduce(nl, w);
+    nl.not(any)
+}
+
+/// Static left shift (wiring): `w << n` within `width` bits.
+pub fn shl_const(nl: &mut Netlist, w: &Word, n: u32) -> Word {
+    let zero = nl.constant(false);
+    let mut out = vec![zero; n as usize];
+    out.extend_from_slice(w);
+    out.truncate(w.len());
+    out
+}
+
+/// Take a bit range `[lo, hi)` (wiring).
+pub fn slice(w: &Word, lo: u32, hi: u32) -> Word {
+    w[lo as usize..hi as usize].to_vec()
+}
+
+/// Zero-extend to `width`.
+pub fn zext(nl: &mut Netlist, w: &Word, width: u32) -> Word {
+    let zero = nl.constant(false);
+    let mut out = w.clone();
+    while (out.len() as u32) < width {
+        out.push(zero);
+    }
+    out
+}
+
+/// Concatenate (lo word first).
+pub fn concat(lo: &Word, hi: &Word) -> Word {
+    let mut out = lo.clone();
+    out.extend_from_slice(hi);
+    out
+}
+
+/// Incrementer: `w + 1`.
+pub fn inc(nl: &mut Netlist, w: &Word) -> Word {
+    let zero = word_const(nl, w.len() as u32, 0);
+    let one = nl.constant(true);
+    add(nl, w, &zero, one).0
+}
+
+/// Decrementer: `w - 1`.
+pub fn dec(nl: &mut Netlist, w: &Word) -> Word {
+    let ones = word_const(nl, w.len() as u32, -1);
+    let zero_c = nl.constant(false);
+    add(nl, w, &ones, zero_c).0
+}
+
+/// Number of bits needed to hold values `0..=max`.
+pub fn bits_for(max: u64) -> u32 {
+    64 - max.leading_zeros().max(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::gatesim::GateSim;
+
+    /// Helper: build a combinational function of two input buses and
+    /// evaluate it.
+    fn eval2(
+        width: u32,
+        a_val: i64,
+        b_val: i64,
+        f: impl Fn(&mut Netlist, &Word, &Word) -> Word,
+    ) -> i64 {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", width);
+        let b = nl.input_bus("b", width);
+        let y = f(&mut nl, &a, &b);
+        nl.add_output("y", y);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", a_val);
+        sim.set_bus("b", b_val);
+        sim.step();
+        sim.get_output("y")
+    }
+
+    #[test]
+    fn adder_exhaustive_4bit() {
+        for a in -8..8i64 {
+            for b in -8..8i64 {
+                let got = eval2(4, a, b, |nl, x, y| {
+                    let z = nl.constant(false);
+                    add(nl, x, y, z).0
+                });
+                let expect = ((a + b) << 60) >> 60; // wrap to 4 bits signed
+                assert_eq!(got, expect, "{a}+{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn subtractor_exhaustive_4bit() {
+        for a in -8..8i64 {
+            for b in -8..8i64 {
+                let got = eval2(4, a, b, |nl, x, y| sub(nl, x, y).0);
+                let expect = ((a - b) << 60) >> 60;
+                assert_eq!(got, expect, "{a}-{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_borrow_flag_unsigned() {
+        // flag = 1 iff a >= b (unsigned).
+        for a in 0..16i64 {
+            for b in 0..16i64 {
+                let mut nl = Netlist::new();
+                let aw = nl.input_bus("a", 4);
+                let bw = nl.input_bus("b", 4);
+                let (_, ok) = sub(&mut nl, &aw, &bw);
+                nl.add_output("ok", vec![ok]);
+                let mut sim = GateSim::new(&nl);
+                sim.set_bus("a", a);
+                sim.set_bus("b", b);
+                sim.step();
+                assert_eq!(sim.get_bit("ok"), a >= b, "{a} >= {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn neg_abs_8bit() {
+        for v in -128..128i64 {
+            let got_neg = eval2(8, v, 0, |nl, x, _| neg(nl, x));
+            assert_eq!(got_neg, ((-v) << 56) >> 56, "neg {v}");
+            let got_abs = eval2(8, v, 0, |nl, x, _| abs(nl, x));
+            let expect = if v == -128 { -128 } else { v.abs() };
+            assert_eq!(got_abs, expect, "abs {v}");
+        }
+    }
+
+    #[test]
+    fn mux_and_reductions() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let s = nl.input_bus("s", 1);
+        let y = mux_word(&mut nl, s[0], &a, &b);
+        let z = is_zero(&mut nl, &a);
+        let e = eq_const(&mut nl, &a, 5);
+        nl.add_output("y", y);
+        nl.add_output("z", vec![z]);
+        nl.add_output("e", vec![e]);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", 5);
+        sim.set_bus("b", 2);
+        sim.set_bus("s", 1);
+        sim.step();
+        assert_eq!(sim.get_output("y") & 0xF, 5);
+        assert!(!sim.get_bit("z"));
+        assert!(sim.get_bit("e"));
+        sim.set_bus("s", 0);
+        sim.set_bus("a", 0);
+        sim.step();
+        assert_eq!(sim.get_output("y") & 0xF, 2);
+        assert!(sim.get_bit("z"));
+        assert!(!sim.get_bit("e"));
+    }
+
+    #[test]
+    fn inc_dec_roundtrip() {
+        for v in 0..15i64 {
+            let got = eval2(4, v, 0, |nl, x, _| {
+                let i = inc(nl, x);
+                dec(nl, &i)
+            });
+            assert_eq!(got & 0xF, v, "inc/dec {v}");
+        }
+    }
+
+    #[test]
+    fn shifts_and_slices() {
+        let got = eval2(8, 0b0000_0101, 0, |nl, x, _| shl_const(nl, x, 2));
+        assert_eq!(got & 0xFF, 0b0001_0100);
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8);
+        let s = slice(&a, 4, 8);
+        nl.add_output("y", s);
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("a", 0xA5);
+        sim.step();
+        assert_eq!(sim.get_output("y") & 0xF, 0xA);
+    }
+
+    #[test]
+    fn bits_for_widths() {
+        assert_eq!(bits_for(0), 0);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(47), 6);
+        assert_eq!(bits_for(48), 6);
+        assert_eq!(bits_for(63), 6);
+        assert_eq!(bits_for(64), 7);
+    }
+
+    #[test]
+    fn register_connect_cycle() {
+        // Register that doubles each cycle: q <= q + q (i.e. shifts left).
+        let mut nl = Netlist::new();
+        let q = register(&mut nl, 8);
+        // Initialize via mux with a start input.
+        let start = nl.input_bus("start", 1);
+        let one = word_const(&mut nl, 8, 1);
+        let z = nl.constant(false);
+        let doubled = add(&mut nl, &q, &q, z).0;
+        let d = mux_word(&mut nl, start[0], &one, &doubled);
+        connect(&mut nl, &q, &d);
+        nl.add_output("q", q.clone());
+        let mut sim = GateSim::new(&nl);
+        sim.set_bus("start", 1);
+        sim.step();
+        sim.set_bus("start", 0);
+        for expect in [2i64, 4, 8, 16, 32, 64] {
+            sim.step();
+            assert_eq!(sim.get_output("q") & 0xFF, expect);
+        }
+    }
+}

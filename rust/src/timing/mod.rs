@@ -1,0 +1,6 @@
+//! Static timing analysis → maximum clock frequency (Table-1 "Maximum
+//! Frequency" column).
+
+pub mod sta;
+
+pub use sta::{analyze, DelayModel, TimingReport, ICE40_LP};

@@ -1,0 +1,230 @@
+//! Dataset construction for Φ calibration (paper Step 3, following
+//! Wang et al. \[5\]).
+//!
+//! Builds supervised datasets from the physics-based synthetic traces:
+//!
+//! * **Π features** — signals are quantized to the hardware fixed-point
+//!   format and pushed through the *same* monomial schedule the hardware
+//!   executes (`fixedpoint::eval_monomial`), so training sees exactly the
+//!   features the deployed sensor produces. Features are Π₁…Π_{N−1};
+//!   the label is the target-isolating product Π₀.
+//! * **Raw features** — the baseline: all signals except the target, in
+//!   float, label = the raw target signal.
+
+use crate::fixedpoint::{self, Q16_15};
+use crate::report::export::{export_system, SystemExport};
+use crate::stim::{self, Lfsr32};
+
+/// Which feature space to train in.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FeatureKind {
+    /// Dimensionless products from the synthesized hardware (the paper).
+    Pi,
+    /// Raw sensor signals (the baseline the paper improves on).
+    Raw,
+}
+
+/// A standardized supervised dataset (train + validation split).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature dimension.
+    pub dim: usize,
+    /// Row-major features, training split.
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<f32>,
+    /// Row-major features, validation split.
+    pub val_x: Vec<f32>,
+    pub val_y: Vec<f32>,
+    /// Feature standardization (applied inside the AOT graph).
+    pub shift: Vec<f32>,
+    pub scale: Vec<f32>,
+    /// Label standardization (applied by the trainer; labels stored
+    /// normalized).
+    pub y_shift: f32,
+    pub y_scale: f32,
+    /// System export used to build the features.
+    pub export: SystemExport,
+    pub kind: FeatureKind,
+}
+
+impl Dataset {
+    pub fn train_rows(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn val_rows(&self) -> usize {
+        self.val_y.len()
+    }
+}
+
+/// Raw (feature, label) extraction for one sample.
+fn featurize(export: &SystemExport, kind: FeatureKind, sample: &[f64]) -> (Vec<f32>, f32) {
+    match kind {
+        FeatureKind::Pi => {
+            // Quantize the participating signals in port order, run the
+            // hardware-exact monomial schedules.
+            let port_vals: Vec<i64> =
+                export.ports.iter().map(|&si| Q16_15.from_f64(sample[si])).collect();
+            let pis: Vec<i64> = export
+                .exponents
+                .iter()
+                .map(|exps| fixedpoint::eval_monomial(Q16_15, &port_vals, exps))
+                .collect();
+            let y = Q16_15.to_f64(pis[0]) as f32;
+            let feats: Vec<f32> = if pis.len() > 1 {
+                pis[1..].iter().map(|&p| Q16_15.to_f64(p) as f32).collect()
+            } else {
+                vec![1.0]
+            };
+            (feats, y)
+        }
+        FeatureKind::Raw => {
+            let feats: Vec<f32> = sample
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != export.target_index)
+                .map(|(_, v)| *v as f32)
+                .collect();
+            (feats, sample[export.target_index] as f32)
+        }
+    }
+}
+
+/// Build a dataset of `n` samples with `noise` relative target noise and
+/// an 80/20 train/val split.
+pub fn build_dataset(
+    system: &str,
+    kind: FeatureKind,
+    n: usize,
+    noise: f64,
+    seed: u32,
+) -> anyhow::Result<Dataset> {
+    let export = export_system(system, Q16_15)?;
+    let mut rng = Lfsr32::new(seed);
+    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut ys: Vec<f32> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sample = stim::sample_noisy(system, &mut rng, noise)
+            .ok_or_else(|| anyhow::anyhow!("no trace generator for `{system}`"))?;
+        let (x, y) = featurize(&export, kind, &sample);
+        xs.push(x);
+        ys.push(y);
+    }
+    let dim = xs[0].len();
+
+    // Standardize features and labels over the whole set.
+    let mut shift = vec![0f32; dim];
+    let mut scale = vec![0f32; dim];
+    for d in 0..dim {
+        let mean = xs.iter().map(|r| r[d]).sum::<f32>() / n as f32;
+        let var = xs.iter().map(|r| (r[d] - mean).powi(2)).sum::<f32>() / n as f32;
+        shift[d] = mean;
+        scale[d] = var.sqrt().max(1e-6);
+    }
+    let y_mean = ys.iter().sum::<f32>() / n as f32;
+    let y_var = ys.iter().map(|y| (y - y_mean).powi(2)).sum::<f32>() / n as f32;
+    let y_shift = y_mean;
+    let y_scale = y_var.sqrt().max(1e-6);
+
+    let split = n * 4 / 5;
+    let mut train_x = Vec::with_capacity(split * dim);
+    let mut train_y = Vec::with_capacity(split);
+    let mut val_x = Vec::with_capacity((n - split) * dim);
+    let mut val_y = Vec::with_capacity(n - split);
+    for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+        let yn = (y - y_shift) / y_scale;
+        if i < split {
+            train_x.extend_from_slice(x);
+            train_y.push(yn);
+        } else {
+            val_x.extend_from_slice(x);
+            val_y.push(yn);
+        }
+    }
+    Ok(Dataset {
+        dim,
+        train_x,
+        train_y,
+        val_x,
+        val_y,
+        shift,
+        scale,
+        y_shift,
+        y_scale,
+        export,
+        kind,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::newton::corpus;
+
+    #[test]
+    fn pendulum_pi_dataset_labels_are_4pi2() {
+        let ds = build_dataset("pendulum", FeatureKind::Pi, 200, 0.0, 7).unwrap();
+        assert_eq!(ds.dim, 1); // N=1: constant feature
+        // Labels normalized; the raw label mean must be ~4π² (quantized).
+        let raw_mean = ds.y_shift;
+        assert!(
+            (raw_mean - 39.478).abs() < 0.5,
+            "pendulum Π₀ mean = {raw_mean}"
+        );
+        // Variance of Π₀ is tiny (only quantization noise).
+        assert!(ds.y_scale < 0.5, "y_scale {}", ds.y_scale);
+    }
+
+    #[test]
+    fn beam_pi_dataset_is_linear() {
+        // Beam: Π₀ = δ·? vs Π₁ — dimensional analysis makes the relation
+        // linear (δ/L = (1/3)·FL²/EI); check correlation of feature 0
+        // with label is near ±1.
+        let ds = build_dataset("beam", FeatureKind::Pi, 400, 0.0, 9).unwrap();
+        assert_eq!(ds.dim, 1);
+        let n = ds.train_rows();
+        let xs: Vec<f32> = (0..n).map(|i| ds.train_x[i * ds.dim]).collect();
+        let mx = xs.iter().sum::<f32>() / n as f32;
+        let my = ds.train_y.iter().sum::<f32>() / n as f32;
+        let cov: f32 =
+            xs.iter().zip(&ds.train_y).map(|(x, y)| (x - mx) * (y - my)).sum::<f32>();
+        let vx: f32 = xs.iter().map(|x| (x - mx).powi(2)).sum::<f32>();
+        let vy: f32 = ds.train_y.iter().map(|y| (y - my).powi(2)).sum::<f32>();
+        let corr = cov / (vx.sqrt() * vy.sqrt()).max(1e-9);
+        assert!(corr.abs() > 0.999, "correlation {corr}");
+    }
+
+    #[test]
+    fn raw_dataset_dims() {
+        let ds = build_dataset("pendulum", FeatureKind::Raw, 100, 0.0, 3).unwrap();
+        assert_eq!(ds.dim, 3); // 4 symbols minus target
+        assert_eq!(ds.train_rows(), 80);
+        assert_eq!(ds.val_rows(), 20);
+    }
+
+    #[test]
+    fn all_systems_build_both_kinds() {
+        for e in corpus() {
+            for kind in [FeatureKind::Pi, FeatureKind::Raw] {
+                let ds = build_dataset(e.id, kind, 50, 0.01, 11).unwrap();
+                assert!(ds.dim >= 1, "{}", e.id);
+                assert!(ds.train_x.iter().all(|v| v.is_finite()));
+                assert!(ds.train_y.iter().all(|v| v.is_finite()));
+                assert!(ds.scale.iter().all(|s| *s > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn standardization_is_consistent() {
+        let ds = build_dataset("beam", FeatureKind::Raw, 300, 0.0, 5).unwrap();
+        // Standardized training features should have ~zero mean, ~unit std.
+        for d in 0..ds.dim {
+            let vals: Vec<f32> = (0..ds.train_rows())
+                .map(|i| (ds.train_x[i * ds.dim + d] - ds.shift[d]) / ds.scale[d])
+                .collect();
+            let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 0.2, "dim {d} mean {mean}");
+        }
+    }
+}

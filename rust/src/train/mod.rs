@@ -1,0 +1,307 @@
+//! Offline / in-situ Φ calibration (paper Fig. 4, Steps 3–4), driven
+//! entirely from Rust through the AOT train-step executables.
+//!
+//! The training loop lives here; the gradient computation lives in the
+//! `phi_train_<system>` / `raw_train_<system>` artifacts lowered from JAX
+//! (`python/compile/model.py::train_step`). Python is never invoked at
+//! run time.
+
+pub mod data;
+
+pub use data::{build_dataset, Dataset, FeatureKind};
+
+use crate::runtime::engine::{self, Engine};
+use crate::stim::Lfsr32;
+
+/// Hidden width of the Φ MLP — must match `python/compile/model.py`.
+pub const HIDDEN: usize = 16;
+/// Train-step batch size — must match `aot.py::TRAIN_BATCH`.
+pub const TRAIN_BATCH: usize = 64;
+
+/// Flat parameter count for an `in_dim -> 16 -> 16 -> 1` MLP.
+pub fn param_count(in_dim: usize) -> usize {
+    in_dim * HIDDEN + HIDDEN + HIDDEN * HIDDEN + HIDDEN + HIDDEN + 1
+}
+
+/// Initialize flat parameters (layout documented in model.py): scaled
+/// normals for weights, zeros for biases. Uses the repo LFSR (Irwin–Hall
+/// approximate normals) — initialization quality, not bit-compat, is
+/// what matters here.
+pub fn init_params(in_dim: usize, seed: u32) -> Vec<f32> {
+    let mut rng = Lfsr32::new(seed);
+    let mut normal = |scale: f32| -> f32 {
+        let s: f64 = (0..4).map(|_| rng.next_f64()).sum();
+        ((s - 2.0) * (3.0f64).sqrt() / 2.0) as f32 * scale
+    };
+    let mut p = Vec::with_capacity(param_count(in_dim));
+    let s1 = (1.0 / in_dim.max(1) as f32).sqrt();
+    for _ in 0..in_dim * HIDDEN {
+        p.push(normal(s1));
+    }
+    p.extend(std::iter::repeat(0.0).take(HIDDEN));
+    let s2 = (1.0 / HIDDEN as f32).sqrt();
+    for _ in 0..HIDDEN * HIDDEN {
+        p.push(normal(s2));
+    }
+    p.extend(std::iter::repeat(0.0).take(HIDDEN));
+    for _ in 0..HIDDEN {
+        p.push(normal(s2));
+    }
+    p.push(0.0);
+    p
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    /// Final flat parameters.
+    pub params: Vec<f32>,
+    /// Loss after the final step (normalized target space).
+    pub final_loss: f32,
+    /// Validation RMSE in *raw* target units.
+    pub val_rmse: f32,
+    /// Steps executed.
+    pub steps: u32,
+    /// Loss after each step.
+    pub loss_curve: Vec<f32>,
+    /// The dataset the run used (for downstream serving).
+    pub dataset: Dataset,
+}
+
+/// Artifact name for a feature kind.
+pub fn train_artifact(system: &str, kind: FeatureKind) -> String {
+    match kind {
+        FeatureKind::Pi => format!("phi_train_{system}"),
+        FeatureKind::Raw => format!("raw_train_{system}"),
+    }
+}
+
+/// Inference artifact name for a feature kind (batch 64).
+pub fn infer_artifact(system: &str, kind: FeatureKind) -> String {
+    match kind {
+        FeatureKind::Pi => format!("phi_infer_{system}_b64"),
+        FeatureKind::Raw => format!("raw_infer_{system}_b64"),
+    }
+}
+
+/// Draw one training batch (with replacement) from the dataset.
+fn draw_batch(ds: &Dataset, rng: &mut Lfsr32) -> (Vec<f32>, Vec<f32>) {
+    let rows = ds.train_rows();
+    let mut x = Vec::with_capacity(TRAIN_BATCH * ds.dim);
+    let mut y = Vec::with_capacity(TRAIN_BATCH);
+    for _ in 0..TRAIN_BATCH {
+        let i = rng.below(rows);
+        x.extend_from_slice(&ds.train_x[i * ds.dim..(i + 1) * ds.dim]);
+        y.push(ds.train_y[i]);
+    }
+    (x, y)
+}
+
+/// Run `steps` SGD steps on `params` in place, with linear lr decay from
+/// `lr0` to `lr1` across the *global* schedule `[step0, total)`. Appends
+/// per-step losses to `loss_curve`. This is the primitive both
+/// [`train_on`] and checkpointed training loops (benches) build on.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_steps(
+    eng: &mut Engine,
+    ds: &Dataset,
+    system: &str,
+    params: &mut Vec<f32>,
+    step0: u32,
+    steps: u32,
+    total: u32,
+    lr0: f32,
+    lr1: f32,
+    rng: &mut Lfsr32,
+    loss_curve: &mut Vec<f32>,
+) -> anyhow::Result<f32> {
+    let exe = eng.load(&train_artifact(system, ds.kind))?;
+    let shift_l = engine::f32_vec(&ds.shift);
+    let scale_l = engine::f32_vec(&ds.scale);
+    let mut final_loss = f32::NAN;
+    for s in 0..steps {
+        let step = step0 + s;
+        let frac = step as f32 / total.max(1) as f32;
+        let lr_t = lr0 + (lr1 - lr0) * frac;
+        let (bx, by) = draw_batch(ds, rng);
+        let outs = exe.run(&[
+            engine::f32_vec(params),
+            engine::f32_matrix(TRAIN_BATCH, ds.dim, &bx)?,
+            engine::f32_vec(&by),
+            shift_l.clone(),
+            scale_l.clone(),
+            engine::f32_scalar(lr_t),
+        ])?;
+        *params = engine::to_f32s(&outs[0])?;
+        final_loss = engine::to_f32s(&outs[1])?[0];
+        loss_curve.push(final_loss);
+    }
+    Ok(final_loss)
+}
+
+/// Train on a pre-built dataset with an existing engine. Returns the
+/// trained parameters and diagnostics.
+pub fn train_on(
+    eng: &mut Engine,
+    ds: &Dataset,
+    system: &str,
+    steps: u32,
+    lr: f32,
+    seed: u32,
+) -> anyhow::Result<TrainOutput> {
+    let mut rng = Lfsr32::new(seed ^ 0x7A1E);
+    let mut params = init_params(ds.dim, seed);
+    let mut loss_curve = Vec::with_capacity(steps as usize);
+    // Linear decay to 5% of the base rate: large early steps, a quiet
+    // tail so the loss curve settles.
+    let final_loss = sgd_steps(
+        eng, ds, system, &mut params, 0, steps, steps, lr, 0.05 * lr, &mut rng,
+        &mut loss_curve,
+    )?;
+
+    // Validation RMSE through the inference artifact (batch-padded).
+    let val_rmse = validate(eng, ds, system, &params)?;
+    Ok(TrainOutput {
+        params,
+        final_loss,
+        val_rmse,
+        steps,
+        loss_curve,
+        dataset: ds.clone(),
+    })
+}
+
+/// Mean relative error of the *physical target parameter* on freshly
+/// generated traces — the metric that makes Π-feature and raw-feature
+/// models comparable (a Π model predicts Π₀ and inverts the monomial; a
+/// raw model predicts the target directly).
+pub fn eval_target_error(
+    eng: &mut Engine,
+    ds: &Dataset,
+    system: &str,
+    params: &[f32],
+    n: usize,
+    seed: u32,
+) -> anyhow::Result<f64> {
+    use crate::fixedpoint::{self, Q16_15};
+    let exe = eng.load(&infer_artifact(system, ds.kind))?;
+    let export = &ds.export;
+    let mut rng = Lfsr32::new(seed ^ 0xE7A1);
+    // Generate evaluation traces.
+    let mut truths = Vec::with_capacity(n);
+    let mut feats = Vec::with_capacity(n * ds.dim);
+    let mut ports_q = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = crate::stim::sample(system, &mut rng)
+            .ok_or_else(|| anyhow::anyhow!("no traces for `{system}`"))?;
+        truths.push(s[export.target_index]);
+        match ds.kind {
+            FeatureKind::Pi => {
+                let q: Vec<i64> =
+                    export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+                let pis: Vec<i64> = export
+                    .exponents
+                    .iter()
+                    .map(|e| fixedpoint::eval_monomial(Q16_15, &q, e))
+                    .collect();
+                if pis.len() > 1 {
+                    for &p in &pis[1..] {
+                        feats.push(Q16_15.to_f64(p) as f32);
+                    }
+                } else {
+                    feats.push(1.0);
+                }
+                ports_q.push(q);
+            }
+            FeatureKind::Raw => {
+                for (i, v) in s.iter().enumerate() {
+                    if i != export.target_index {
+                        feats.push(*v as f32);
+                    }
+                }
+                ports_q.push(Vec::new());
+            }
+        }
+    }
+    // Batched inference.
+    let mut rel_sum = 0f64;
+    let mut cnt = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(TRAIN_BATCH);
+        let mut x = vec![0f32; TRAIN_BATCH * ds.dim];
+        x[..take * ds.dim].copy_from_slice(&feats[i * ds.dim..(i + take) * ds.dim]);
+        let outs = exe.run(&[
+            engine::f32_vec(params),
+            engine::f32_matrix(TRAIN_BATCH, ds.dim, &x)?,
+            engine::f32_vec(&ds.shift),
+            engine::f32_vec(&ds.scale),
+        ])?;
+        let y_norm = engine::to_f32s(&outs[0])?;
+        for j in 0..take {
+            let pred_raw = (y_norm[j] * ds.y_scale + ds.y_shift) as f64;
+            let est = match ds.kind {
+                FeatureKind::Pi => {
+                    export.recover_target(pred_raw, &ports_q[i + j], Q16_15)
+                }
+                FeatureKind::Raw => pred_raw,
+            };
+            let truth = truths[i + j];
+            if est.is_finite() && truth.abs() > 1e-12 {
+                rel_sum += ((est - truth) / truth).abs();
+                cnt += 1;
+            }
+        }
+        i += take;
+    }
+    Ok(rel_sum / cnt.max(1) as f64)
+}
+
+/// Validation RMSE in raw target units via the inference artifact.
+pub fn validate(
+    eng: &mut Engine,
+    ds: &Dataset,
+    system: &str,
+    params: &[f32],
+) -> anyhow::Result<f32> {
+    let exe = eng.load(&infer_artifact(system, ds.kind))?;
+    let shift_l = engine::f32_vec(&ds.shift);
+    let scale_l = engine::f32_vec(&ds.scale);
+    let rows = ds.val_rows();
+    let mut se = 0f64;
+    let mut i = 0usize;
+    while i < rows {
+        let take = (rows - i).min(TRAIN_BATCH);
+        // Pad to the static batch.
+        let mut x = vec![0f32; TRAIN_BATCH * ds.dim];
+        x[..take * ds.dim]
+            .copy_from_slice(&ds.val_x[i * ds.dim..(i + take) * ds.dim]);
+        let outs = exe.run(&[
+            engine::f32_vec(params),
+            engine::f32_matrix(TRAIN_BATCH, ds.dim, &x)?,
+            shift_l.clone(),
+            scale_l.clone(),
+        ])?;
+        let preds = engine::to_f32s(&outs[0])?;
+        for j in 0..take {
+            let err = (preds[j] - ds.val_y[i + j]) as f64;
+            se += err * err;
+        }
+        i += take;
+    }
+    // Denormalize: labels were standardized by y_scale.
+    Ok(((se / rows as f64).sqrt() as f32) * ds.y_scale)
+}
+
+/// End-to-end convenience: build dataset, train, validate.
+pub fn run_training(
+    artifacts: &str,
+    system: &str,
+    kind: FeatureKind,
+    steps: u32,
+    seed: u32,
+) -> anyhow::Result<TrainOutput> {
+    let mut eng = Engine::new(artifacts)?;
+    let ds = build_dataset(system, kind, 1024, 0.01, seed)?;
+    train_on(&mut eng, &ds, system, steps, 0.2, seed)
+}

@@ -1,0 +1,283 @@
+//! SI dimension algebra.
+//!
+//! A [`Dimension`] is a vector of rational exponents over the seven SI base
+//! dimensions. Units of measure in Newton specifications reduce to
+//! dimensions; the dimensional matrix assembled in [`crate::pisearch`] has
+//! one row per base dimension and one column per signal.
+
+use crate::rational::Rational;
+use std::fmt;
+use std::ops::{Div, Mul};
+
+/// The seven SI base dimensions, in canonical order.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BaseDim {
+    /// T — time (second)
+    Time = 0,
+    /// L — length (metre)
+    Length = 1,
+    /// M — mass (kilogram)
+    Mass = 2,
+    /// I — electric current (ampere)
+    Current = 3,
+    /// Θ — thermodynamic temperature (kelvin)
+    Temperature = 4,
+    /// N — amount of substance (mole)
+    Substance = 5,
+    /// J — luminous intensity (candela)
+    Luminosity = 6,
+}
+
+/// Number of SI base dimensions.
+pub const NUM_BASE_DIMS: usize = 7;
+
+impl BaseDim {
+    pub const ALL: [BaseDim; NUM_BASE_DIMS] = [
+        BaseDim::Time,
+        BaseDim::Length,
+        BaseDim::Mass,
+        BaseDim::Current,
+        BaseDim::Temperature,
+        BaseDim::Substance,
+        BaseDim::Luminosity,
+    ];
+
+    /// Conventional single-letter symbol used in dimensional formulas.
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            BaseDim::Time => "T",
+            BaseDim::Length => "L",
+            BaseDim::Mass => "M",
+            BaseDim::Current => "I",
+            BaseDim::Temperature => "Θ",
+            BaseDim::Substance => "N",
+            BaseDim::Luminosity => "J",
+        }
+    }
+
+    /// SI base-unit symbol.
+    pub fn unit_symbol(&self) -> &'static str {
+        match self {
+            BaseDim::Time => "s",
+            BaseDim::Length => "m",
+            BaseDim::Mass => "kg",
+            BaseDim::Current => "A",
+            BaseDim::Temperature => "K",
+            BaseDim::Substance => "mol",
+            BaseDim::Luminosity => "cd",
+        }
+    }
+}
+
+/// A dimension: rational exponents over the 7 SI base dimensions.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dimension {
+    exps: [Rational; NUM_BASE_DIMS],
+}
+
+impl Dimension {
+    /// The dimensionless dimension (all exponents zero).
+    pub const NONE: Dimension = Dimension {
+        exps: [Rational::ZERO; NUM_BASE_DIMS],
+    };
+
+    /// A single base dimension to the first power.
+    pub fn base(d: BaseDim) -> Dimension {
+        let mut exps = [Rational::ZERO; NUM_BASE_DIMS];
+        exps[d as usize] = Rational::ONE;
+        Dimension { exps }
+    }
+
+    /// Build from integer exponents in canonical order (T, L, M, I, Θ, N, J).
+    pub fn from_ints(exps: [i64; NUM_BASE_DIMS]) -> Dimension {
+        let mut r = [Rational::ZERO; NUM_BASE_DIMS];
+        for (i, e) in exps.iter().enumerate() {
+            r[i] = Rational::from_int(*e);
+        }
+        Dimension { exps: r }
+    }
+
+    /// Exponent of one base dimension.
+    pub fn exp(&self, d: BaseDim) -> Rational {
+        self.exps[d as usize]
+    }
+
+    /// All exponents in canonical order.
+    pub fn exps(&self) -> &[Rational; NUM_BASE_DIMS] {
+        &self.exps
+    }
+
+    pub fn is_dimensionless(&self) -> bool {
+        self.exps.iter().all(|e| e.is_zero())
+    }
+
+    /// Raise to a rational power.
+    pub fn pow(&self, p: Rational) -> Dimension {
+        let mut exps = self.exps;
+        for e in exps.iter_mut() {
+            *e = *e * p;
+        }
+        Dimension { exps }
+    }
+
+    pub fn powi(&self, p: i64) -> Dimension {
+        self.pow(Rational::from_int(p))
+    }
+
+    pub fn recip(&self) -> Dimension {
+        self.powi(-1)
+    }
+
+    /// Dimensional formula, e.g. `L T^-2` for acceleration. Dimensionless
+    /// dimensions render as `1`.
+    pub fn formula(&self) -> String {
+        let mut parts = Vec::new();
+        // Render in the conventional M L T I Θ N J order.
+        let order = [
+            BaseDim::Mass,
+            BaseDim::Length,
+            BaseDim::Time,
+            BaseDim::Current,
+            BaseDim::Temperature,
+            BaseDim::Substance,
+            BaseDim::Luminosity,
+        ];
+        for d in order {
+            let e = self.exp(d);
+            if e.is_zero() {
+                continue;
+            }
+            if e == Rational::ONE {
+                parts.push(d.symbol().to_string());
+            } else {
+                parts.push(format!("{}^{}", d.symbol(), e));
+            }
+        }
+        if parts.is_empty() {
+            "1".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+
+    /// SI unit rendering, e.g. `m s^-2`. Dimensionless renders as `1`.
+    pub fn si_unit(&self) -> String {
+        let mut parts = Vec::new();
+        let order = [
+            BaseDim::Mass,
+            BaseDim::Length,
+            BaseDim::Time,
+            BaseDim::Current,
+            BaseDim::Temperature,
+            BaseDim::Substance,
+            BaseDim::Luminosity,
+        ];
+        for d in order {
+            let e = self.exp(d);
+            if e.is_zero() {
+                continue;
+            }
+            if e == Rational::ONE {
+                parts.push(d.unit_symbol().to_string());
+            } else {
+                parts.push(format!("{}^{}", d.unit_symbol(), e));
+            }
+        }
+        if parts.is_empty() {
+            "1".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+impl Mul for Dimension {
+    type Output = Dimension;
+    fn mul(self, rhs: Dimension) -> Dimension {
+        let mut exps = self.exps;
+        for (i, e) in exps.iter_mut().enumerate() {
+            *e = *e + rhs.exps[i];
+        }
+        Dimension { exps }
+    }
+}
+
+impl Div for Dimension {
+    type Output = Dimension;
+    fn div(self, rhs: Dimension) -> Dimension {
+        self * rhs.recip()
+    }
+}
+
+impl fmt::Debug for Dimension {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Dimension[{}]", self.formula())
+    }
+}
+
+impl fmt::Display for Dimension {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.formula())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accel() -> Dimension {
+        Dimension::base(BaseDim::Length) / Dimension::base(BaseDim::Time).powi(2)
+    }
+
+    #[test]
+    fn base_dimension_exponents() {
+        let t = Dimension::base(BaseDim::Time);
+        assert_eq!(t.exp(BaseDim::Time), Rational::ONE);
+        assert_eq!(t.exp(BaseDim::Length), Rational::ZERO);
+        assert!(!t.is_dimensionless());
+    }
+
+    #[test]
+    fn dimensionless() {
+        assert!(Dimension::NONE.is_dimensionless());
+        let v = Dimension::base(BaseDim::Length) / Dimension::base(BaseDim::Length);
+        assert!(v.is_dimensionless());
+    }
+
+    #[test]
+    fn algebra() {
+        let a = accel();
+        assert_eq!(a.exp(BaseDim::Length), Rational::ONE);
+        assert_eq!(a.exp(BaseDim::Time), Rational::from_int(-2));
+        // force = M * a
+        let f = Dimension::base(BaseDim::Mass) * a;
+        assert_eq!(f.formula(), "M L T^-2");
+        // energy = F * L
+        let e = f * Dimension::base(BaseDim::Length);
+        assert_eq!(e.formula(), "M L^2 T^-2");
+    }
+
+    #[test]
+    fn pow_rational() {
+        // sqrt(L^2) = L
+        let l2 = Dimension::base(BaseDim::Length).powi(2);
+        let l = l2.pow(Rational::new(1, 2));
+        assert_eq!(l, Dimension::base(BaseDim::Length));
+    }
+
+    #[test]
+    fn si_unit_rendering() {
+        assert_eq!(accel().si_unit(), "m s^-2");
+        assert_eq!(Dimension::NONE.si_unit(), "1");
+        let pressure = Dimension::from_ints([-2, -1, 1, 0, 0, 0, 0]);
+        assert_eq!(pressure.formula(), "M L^-1 T^-2");
+    }
+
+    #[test]
+    fn from_ints_roundtrip() {
+        let d = Dimension::from_ints([1, 2, 3, 0, -1, 0, 0]);
+        assert_eq!(d.exp(BaseDim::Time), Rational::from_int(1));
+        assert_eq!(d.exp(BaseDim::Length), Rational::from_int(2));
+        assert_eq!(d.exp(BaseDim::Temperature), Rational::from_int(-1));
+    }
+}

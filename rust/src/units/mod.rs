@@ -1,0 +1,8 @@
+//! Units of measure: SI dimension algebra and the built-in signal/constant
+//! tables used by the Newton frontend.
+
+pub mod dimension;
+pub mod si;
+
+pub use dimension::{BaseDim, Dimension, NUM_BASE_DIMS};
+pub use si::{builtin_constants, builtin_signals, BuiltinConstant, BuiltinSignal};

@@ -1,0 +1,143 @@
+//! Named SI units and physical constants known to the Newton frontend.
+//!
+//! Newton specifications refer to base signals (`time`, `distance`, …) and
+//! derive the rest with unit expressions. This module provides the built-in
+//! signal table the parser seeds its environment with, mirroring the
+//! `NewtonBaseSignals.nt` prelude of the reference Newton implementation,
+//! plus the built-in physical constants (`kNewtonUnithave_*`) that Newton
+//! specifications may reference (Fig. 2 of the paper references
+//! `kNewtonUnithave_AccelerationDueToGravity`).
+
+use super::dimension::{BaseDim, Dimension};
+
+/// A built-in signal: name, symbol, and dimension.
+#[derive(Clone, Debug)]
+pub struct BuiltinSignal {
+    pub name: &'static str,
+    pub symbol: &'static str,
+    pub dimension: Dimension,
+}
+
+/// A built-in physical constant with value and dimension.
+#[derive(Clone, Debug)]
+pub struct BuiltinConstant {
+    pub name: &'static str,
+    pub value: f64,
+    pub dimension: Dimension,
+}
+
+fn dim(t: i64, l: i64, m: i64, i: i64, th: i64, n: i64, j: i64) -> Dimension {
+    Dimension::from_ints([t, l, m, i, th, n, j])
+}
+
+/// The base-signal prelude: the seven SI base quantities under their Newton
+/// names plus common derived quantities used by the corpus specifications.
+pub fn builtin_signals() -> Vec<BuiltinSignal> {
+    vec![
+        // SI base quantities (Newton names).
+        BuiltinSignal { name: "time", symbol: "s", dimension: Dimension::base(BaseDim::Time) },
+        BuiltinSignal { name: "distance", symbol: "m", dimension: Dimension::base(BaseDim::Length) },
+        BuiltinSignal { name: "mass", symbol: "kg", dimension: Dimension::base(BaseDim::Mass) },
+        BuiltinSignal { name: "current", symbol: "A", dimension: Dimension::base(BaseDim::Current) },
+        BuiltinSignal { name: "temperature", symbol: "K", dimension: Dimension::base(BaseDim::Temperature) },
+        BuiltinSignal { name: "substance", symbol: "mol", dimension: Dimension::base(BaseDim::Substance) },
+        BuiltinSignal { name: "luminosity", symbol: "cd", dimension: Dimension::base(BaseDim::Luminosity) },
+        // Common derived quantities.
+        BuiltinSignal { name: "speed", symbol: "mps", dimension: dim(-1, 1, 0, 0, 0, 0, 0) },
+        BuiltinSignal { name: "acceleration", symbol: "mps2", dimension: dim(-2, 1, 0, 0, 0, 0, 0) },
+        BuiltinSignal { name: "force", symbol: "N", dimension: dim(-2, 1, 1, 0, 0, 0, 0) },
+        BuiltinSignal { name: "pressure", symbol: "Pa", dimension: dim(-2, -1, 1, 0, 0, 0, 0) },
+        BuiltinSignal { name: "energy", symbol: "J", dimension: dim(-2, 2, 1, 0, 0, 0, 0) },
+        BuiltinSignal { name: "power", symbol: "W", dimension: dim(-3, 2, 1, 0, 0, 0, 0) },
+        BuiltinSignal { name: "frequency", symbol: "Hz", dimension: dim(-1, 0, 0, 0, 0, 0, 0) },
+        BuiltinSignal { name: "angle", symbol: "rad", dimension: Dimension::NONE },
+    ]
+}
+
+/// Built-in physical constants available as `kNewtonUnithave_*` identifiers.
+pub fn builtin_constants() -> Vec<BuiltinConstant> {
+    vec![
+        BuiltinConstant {
+            name: "kNewtonUnithave_AccelerationDueToGravity",
+            value: 9.80665,
+            dimension: dim(-2, 1, 0, 0, 0, 0, 0),
+        },
+        BuiltinConstant {
+            name: "kNewtonUnithave_SpeedOfLight",
+            value: 299_792_458.0,
+            dimension: dim(-1, 1, 0, 0, 0, 0, 0),
+        },
+        BuiltinConstant {
+            name: "kNewtonUnithave_BoltzmannConstant",
+            value: 1.380_649e-23,
+            dimension: dim(-2, 2, 1, 0, -1, 0, 0),
+        },
+        BuiltinConstant {
+            name: "kNewtonUnithave_PlanckConstant",
+            value: 6.626_070_15e-34,
+            dimension: dim(-1, 2, 1, 0, 0, 0, 0),
+        },
+        BuiltinConstant {
+            name: "kNewtonUnithave_GravitationalConstant",
+            value: 6.674_30e-11,
+            dimension: dim(-2, 3, -1, 0, 0, 0, 0),
+        },
+        BuiltinConstant {
+            name: "kNewtonUnithave_Pi",
+            value: std::f64::consts::PI,
+            dimension: Dimension::NONE,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_signals_present() {
+        let sigs = builtin_signals();
+        let names: Vec<_> = sigs.iter().map(|s| s.name).collect();
+        for base in ["time", "distance", "mass", "temperature"] {
+            assert!(names.contains(&base), "missing base signal {base}");
+        }
+    }
+
+    #[test]
+    fn derived_dimensions_consistent() {
+        let sigs = builtin_signals();
+        let get = |n: &str| sigs.iter().find(|s| s.name == n).unwrap().dimension;
+        // force = mass * acceleration
+        assert_eq!(get("force"), get("mass") * get("acceleration"));
+        // pressure = force / distance^2
+        assert_eq!(get("pressure"), get("force") / get("distance").powi(2));
+        // energy = force * distance
+        assert_eq!(get("energy"), get("force") * get("distance"));
+        // power = energy / time
+        assert_eq!(get("power"), get("energy") / get("time"));
+        // speed = distance / time
+        assert_eq!(get("speed"), get("distance") / get("time"));
+    }
+
+    #[test]
+    fn gravity_constant_has_acceleration_dimension() {
+        let consts = builtin_constants();
+        let g = consts
+            .iter()
+            .find(|c| c.name == "kNewtonUnithave_AccelerationDueToGravity")
+            .unwrap();
+        let sigs = builtin_signals();
+        let accel = sigs.iter().find(|s| s.name == "acceleration").unwrap();
+        assert_eq!(g.dimension, accel.dimension);
+        assert!((g.value - 9.80665).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_duplicate_names() {
+        let sigs = builtin_signals();
+        let mut names: Vec<_> = sigs.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), sigs.len());
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration tests over the compiler surface: Newton source in →
+//! Π analysis → RTL → Verilog → gates, through the public API only.
+
+use dimsynth::fixedpoint::{QFormat, Q16_15};
+use dimsynth::newton::{self, corpus};
+use dimsynth::pisearch;
+use dimsynth::rtl::{self, Policy};
+use dimsynth::synth;
+use dimsynth::timing;
+
+/// A user-authored spec (not from the corpus) exercising custom derived
+/// signals, constants, and target selection end to end.
+const ORIFICE: &str = r#"
+density   : signal = { derivation = mass / (distance ** 3); }
+flow_rate : signal = { derivation = (distance ** 3) / time; }
+area_sig  : signal = { derivation = distance ** 2; }
+
+orifice : invariant(q_flow : flow_rate,
+                    area   : area_sig,
+                    dp     : pressure,
+                    rho    : density) = {
+    (q_flow ** 2) * rho ~ (area ** 2) * dp
+}
+"#;
+
+#[test]
+fn custom_spec_compiles_to_hardware() {
+    let models = newton::load(ORIFICE).unwrap();
+    assert_eq!(models.len(), 1);
+    let analysis = pisearch::analyze_optimized(&models[0], "q_flow").unwrap();
+    assert!(analysis.n() >= 1);
+    // q_flow isolated.
+    for (i, g) in analysis.groups.iter().enumerate() {
+        let e = g.exponents[analysis.target];
+        if i == analysis.target_group {
+            assert_ne!(e, 0);
+        } else {
+            assert_eq!(e, 0);
+        }
+    }
+    let design = rtl::build(&analysis, Q16_15);
+    let v = rtl::verilog::emit(&design);
+    assert!(v.contains("module pi_compute_orifice ("));
+    let mapped = synth::map_design(&design);
+    assert!(mapped.lut4_cells > 100);
+    // The mapped design still computes: all-ones input → all Π = 1.
+    let mut sim = synth::GateSim::new(&mapped.netlist);
+    for p in &design.ports {
+        sim.set_bus(&format!("in_{}", p.name), Q16_15.one());
+    }
+    sim.set_bus("start", 1);
+    sim.step();
+    sim.set_bus("start", 0);
+    let mut guard = 0;
+    while !sim.get_bit("done") {
+        sim.step();
+        guard += 1;
+        assert!(guard < 2000);
+    }
+    for u in 0..design.num_outputs() {
+        assert_eq!(sim.get_output(&format!("pi_{u}")), Q16_15.one());
+    }
+}
+
+#[test]
+fn whole_corpus_verilog_emission_is_stable() {
+    // Emission must be deterministic (same input → same text) and
+    // structurally sane for every system.
+    for e in corpus() {
+        let m = newton::load_entry(&e).unwrap();
+        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
+        let d = rtl::build(&a, Q16_15);
+        let v1 = rtl::verilog::emit(&d);
+        let v2 = rtl::verilog::emit(&d);
+        assert_eq!(v1, v2, "{}: nondeterministic emission", e.id);
+        assert_eq!(
+            v1.matches("\nmodule ").count() + usize::from(v1.starts_with("module")),
+            v1.matches("endmodule").count(),
+            "{}: unbalanced modules",
+            e.id
+        );
+    }
+}
+
+#[test]
+fn format_parametricity_whole_flow() {
+    // The entire flow (analysis → RTL → gates → timing) works at
+    // non-default formats, and resources scale monotonically with width.
+    let e = newton::by_id("vibrating_string").unwrap();
+    let m = newton::load_entry(&e).unwrap();
+    let a = pisearch::analyze_optimized(&m, e.target).unwrap();
+    let mut last_cells = 0usize;
+    for (i, f) in [(8u32, 7u32), (16, 15), (20, 19)] {
+        let q = QFormat::new(i, f);
+        let d = rtl::build(&a, q);
+        let mapped = synth::map_design(&d);
+        assert!(
+            mapped.lut4_cells > last_cells,
+            "cells must grow with width: {} !> {}",
+            mapped.lut4_cells,
+            last_cells
+        );
+        last_cells = mapped.lut4_cells;
+        let t = timing::analyze(&mapped.netlist, &timing::ICE40_LP);
+        assert!(t.fmax_mhz > 5.0);
+        assert_eq!(
+            rtl::module_latency(&d, Policy::ParallelPerPi),
+            rtl::run_once(&d, &vec![q.one(); d.num_inputs()]).cycles
+        );
+    }
+}
+
+#[test]
+fn file_based_specs_compile() {
+    // The shipped .nt examples exercise the electrical (current) and
+    // thermal (temperature) base dimensions through the file flow.
+    for (path, target, expect_n) in [
+        ("examples/systems/rc_circuit.nt", "f_corner", 1usize),
+        ("examples/systems/heat_conduction.nt", "t_inner", 2),
+    ] {
+        let src = std::fs::read_to_string(path).unwrap();
+        let models = newton::load(&src).unwrap();
+        let a = pisearch::analyze_optimized(&models[0], target).unwrap();
+        assert_eq!(a.n(), expect_n, "{path}");
+        let d = rtl::build(&a, Q16_15);
+        let r = rtl::run_once(&d, &vec![Q16_15.one(); d.num_inputs()]);
+        assert!(r.outputs.iter().all(|&o| o == Q16_15.one()), "{path}");
+    }
+}
+
+#[test]
+fn dimensional_error_reporting() {
+    // Inhomogeneous relations and unknown signals produce errors with
+    // positions, not panics.
+    let bad_rel = "s : invariant(h: distance, t: time) = { h ~ t }";
+    let err = newton::load(bad_rel).unwrap_err().to_string();
+    assert!(err.contains("homogeneous"), "{err}");
+
+    let unknown = "s : invariant(x: flux_capacitance) = { }";
+    let err = newton::load(unknown).unwrap_err().to_string();
+    assert!(err.contains("flux_capacitance"), "{err}");
+}
+
+#[test]
+fn nonparticipating_symbols_are_dropped_from_ports() {
+    // Pendulum bob mass and spring-mass gravity cannot join any Π.
+    for (id, dropped) in [("pendulum", "bobmass"), ("spring_mass", "g")] {
+        let e = newton::by_id(id).unwrap();
+        let m = newton::load_entry(&e).unwrap();
+        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
+        let d = rtl::build(&a, Q16_15);
+        assert!(
+            d.dropped_symbols.iter().any(|s| s == dropped),
+            "{id}: expected `{dropped}` dropped, got {:?}",
+            d.dropped_symbols
+        );
+        assert!(d.ports.iter().all(|p| p.name != dropped));
+    }
+}
+
+#[test]
+fn export_roundtrips_through_design() {
+    // The JSON export (consumed by aot.py) must agree with the design the
+    // RTL backend builds.
+    for e in corpus() {
+        let ex = dimsynth::report::export::export_system(e.id, Q16_15).unwrap();
+        let m = newton::load_entry(&e).unwrap();
+        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
+        let d = rtl::build(&a, Q16_15);
+        assert_eq!(ex.ports.len(), d.num_inputs(), "{}", e.id);
+        assert_eq!(ex.exponents.len(), d.num_outputs(), "{}", e.id);
+        for (ue, de) in ex.exponents.iter().zip(d.units.iter()) {
+            assert_eq!(ue, &de.exponents, "{}", e.id);
+        }
+        assert_eq!(ex.latency, rtl::module_latency(&d, Policy::ParallelPerPi));
+    }
+}

@@ -1,0 +1,197 @@
+//! Property-style tests sweeping randomized inputs across layer
+//! boundaries with the repo LFSR (no external proptest dependency):
+//! the same Π semantics must hold at every level of the stack, and the
+//! Π-search invariants must hold for randomized synthetic systems.
+
+use dimsynth::fixedpoint::{self, QFormat, Q16_15};
+use dimsynth::newton::corpus;
+use dimsynth::pisearch::{self, RMatrix};
+use dimsynth::rational::Rational;
+use dimsynth::rtl;
+use dimsynth::stim::Lfsr32;
+use dimsynth::synth;
+use dimsynth::units::{BaseDim, Dimension};
+
+/// Randomized dimensional systems: the nullspace property Π-search relies
+/// on must hold for arbitrary dimension assignments, not just the corpus.
+#[test]
+fn prop_nullspace_vectors_are_dimensionless() {
+    let mut rng = Lfsr32::new(0xA11CE);
+    for trial in 0..200 {
+        let k = 3 + rng.below(5); // 3..=7 symbols
+        let dims: Vec<Dimension> = (0..k)
+            .map(|_| {
+                let t = rng.below(5) as i64 - 2;
+                let l = rng.below(5) as i64 - 2;
+                let m = rng.below(3) as i64 - 1;
+                Dimension::base(BaseDim::Time).powi(t)
+                    * Dimension::base(BaseDim::Length).powi(l)
+                    * Dimension::base(BaseDim::Mass).powi(m)
+            })
+            .collect();
+        let mat = RMatrix::dimensional(&dims);
+        let basis = mat.nullspace();
+        assert_eq!(basis.len(), k - mat.rank(), "trial {trial}: nullity mismatch");
+        for v in &basis {
+            // Exact check: D·v = 0.
+            let out = mat.mul_vec(v);
+            assert!(out.iter().all(Rational::is_zero), "trial {trial}");
+            // Physical check: ∏ dims^v dimensionless (integer-scaled).
+            let ints = pisearch::integerize(v);
+            let mut d = Dimension::NONE;
+            for (i, &e) in ints.iter().enumerate() {
+                d = d * dims[i].powi(e);
+            }
+            assert!(d.is_dimensionless(), "trial {trial}: {d}");
+        }
+    }
+}
+
+/// Fixed-point algebraic properties that the hardware relies on.
+#[test]
+fn prop_fixedpoint_algebra() {
+    let mut rng = Lfsr32::new(0xF1C5);
+    let q = Q16_15;
+    for _ in 0..5_000 {
+        let a = q.from_f64(rng.range(-100.0, 100.0));
+        let b = q.from_f64(rng.range(-100.0, 100.0));
+        // Commutativity of multiply.
+        assert_eq!(fixedpoint::mul(q, a, b), fixedpoint::mul(q, b, a));
+        // Identity.
+        assert_eq!(fixedpoint::mul(q, a, q.one()), a);
+        assert_eq!(fixedpoint::div(q, a, q.one()), a);
+        // Sign symmetry of divide (sign-magnitude semantics).
+        if b != 0 {
+            let d = fixedpoint::div(q, a, b);
+            assert_eq!(fixedpoint::div(q, -a, b), q.saturate(-(d as i128)));
+        }
+        // Multiply result bounded.
+        let m = fixedpoint::mul(q, a, b);
+        assert!(m >= q.min_raw() && m <= q.max_raw());
+    }
+}
+
+/// x/y*y stays within truncation error of x.
+#[test]
+fn prop_div_mul_roundtrip() {
+    let mut rng = Lfsr32::new(0x0DD);
+    let q = Q16_15;
+    for _ in 0..2_000 {
+        let x = q.from_f64(rng.range(0.1, 500.0));
+        let y = q.from_f64(rng.range(0.1, 500.0));
+        let d = fixedpoint::div(q, x, y);
+        if d == q.max_raw() || d == q.min_raw() || d == 0 {
+            continue;
+        }
+        let back = fixedpoint::mul(q, d, y);
+        // Truncation in the divide loses < 1 quotient lsb → after the
+        // multiply the error is bounded by |y| lsb-equivalents + rounding.
+        let bound = (y.abs() >> q.frac_bits) + 2;
+        assert!(
+            (back - x).abs() <= bound,
+            "x={x} y={y} d={d} back={back} bound={bound}"
+        );
+    }
+}
+
+/// The full stack agrees on random vectors for every corpus design:
+/// software model == cycle-accurate RTL sim == packed gate netlist.
+#[test]
+fn prop_three_level_equivalence_randomized() {
+    let mut rng = Lfsr32::new(0x3117);
+    for e in corpus() {
+        let entry = dimsynth::newton::by_id(e.id).unwrap();
+        let m = dimsynth::newton::load_entry(&entry).unwrap();
+        let a = pisearch::analyze_optimized(&m, entry.target).unwrap();
+        let d = rtl::build(&a, Q16_15);
+        let mapped = synth::map_design(&d);
+        for trial in 0..4 {
+            let inputs: Vec<i64> = (0..d.num_inputs())
+                .map(|_| {
+                    // Mix magnitudes, signs, and occasional zeros.
+                    if rng.below(16) == 0 {
+                        0
+                    } else {
+                        Q16_15.from_f64(rng.range(-64.0, 64.0))
+                    }
+                })
+                .collect();
+            let sw = rtl::sim::reference_outputs(&d, &inputs);
+            let hw = rtl::run_once(&d, &inputs);
+            assert_eq!(sw, hw.outputs, "{}: sw vs rtl, trial {trial}", e.id);
+
+            let mut gs = synth::GateSim::new(&mapped.netlist);
+            for (p, v) in d.ports.iter().zip(&inputs) {
+                gs.set_bus(&format!("in_{}", p.name), *v);
+            }
+            gs.set_bus("start", 1);
+            gs.step();
+            gs.set_bus("start", 0);
+            let mut n = 0u32;
+            while !gs.get_bit("done") {
+                gs.step();
+                n += 1;
+                assert!(n < 3000, "{}: gate sim stuck", e.id);
+            }
+            for (u, &expect) in sw.iter().enumerate() {
+                assert_eq!(
+                    gs.get_output(&format!("pi_{u}")),
+                    expect,
+                    "{}: gates vs sw, unit {u}, trial {trial}",
+                    e.id
+                );
+            }
+            assert_eq!(u64::from(n), hw.cycles, "{}: cycle mismatch", e.id);
+        }
+    }
+}
+
+/// Monomial evaluation respects exponent additivity when exact:
+/// eval(e1 + e2) over multiplication-only schedules equals
+/// mul(eval(e1), eval(e2)) up to one rounding step per op.
+#[test]
+fn prop_monomial_compositionality_bound() {
+    let mut rng = Lfsr32::new(0xC0);
+    let q = Q16_15;
+    for _ in 0..500 {
+        let vals: Vec<i64> = (0..3).map(|_| q.from_f64(rng.range(0.5, 4.0))).collect();
+        let e1 = [1i64, 1, 0];
+        let e2 = [0i64, 0, 1];
+        let sum = [1i64, 1, 1];
+        let a = fixedpoint::eval_monomial(q, &vals, &e1);
+        let b = fixedpoint::eval_monomial(q, &vals, &e2);
+        let combined = fixedpoint::eval_monomial(q, &vals, &sum);
+        let product = fixedpoint::mul(q, a, b);
+        // Both compute v0·v1·v2 with different association; rounding can
+        // differ by a couple of lsb.
+        assert!(
+            (combined - product).abs() <= 2,
+            "vals {vals:?}: {combined} vs {product}"
+        );
+    }
+}
+
+/// Parametric-format equivalence: the Rust model and the RTL sim agree
+/// for random formats, not just Q16.15.
+#[test]
+fn prop_random_formats_agree() {
+    let mut rng = Lfsr32::new(0xF0F0);
+    for _ in 0..6 {
+        let frac = 5 + rng.below(18) as u32; // 5..=22
+        let int = 6 + rng.below(10) as u32; // 6..=15
+        let q = QFormat::new(int, frac);
+        let entry = dimsynth::newton::by_id("pendulum").unwrap();
+        let m = dimsynth::newton::load_entry(&entry).unwrap();
+        let a = pisearch::analyze_optimized(&m, entry.target).unwrap();
+        let d = rtl::build(&a, q);
+        for _ in 0..5 {
+            let inputs: Vec<i64> =
+                (0..d.num_inputs()).map(|_| q.from_f64(rng.range(0.3, 5.0))).collect();
+            assert_eq!(
+                rtl::run_once(&d, &inputs).outputs,
+                rtl::sim::reference_outputs(&d, &inputs),
+                "format {q}"
+            );
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! End-to-end serving tests: train → serve → verify online accuracy and
+//! coordinator behaviour (batching, concurrency, shutdown).
+
+use dimsynth::coordinator::{
+    serve_synthetic, InferenceServer, PiPath, SensorInput, ServerConfig,
+};
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::stim::{self, Lfsr32};
+use dimsynth::train::{self, FeatureKind};
+use std::time::Duration;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn start_server(system: &str, pi_path: PiPath) -> (InferenceServer, train::TrainOutput) {
+    let trained =
+        train::run_training("artifacts", system, FeatureKind::Pi, 400, 0x1E57).unwrap();
+    let server = InferenceServer::start(
+        ServerConfig {
+            artifacts: "artifacts".into(),
+            system: system.into(),
+            max_batch: 32,
+            linger: Duration::from_micros(200),
+            pi_path,
+        },
+        trained.clone(),
+    )
+    .unwrap();
+    (server, trained)
+}
+
+#[test]
+fn serve_synthetic_reports() {
+    if !artifacts_ready() {
+        return;
+    }
+    let report = serve_synthetic("artifacts", "pendulum", 256, 32).unwrap();
+    assert!(report.contains("throughput"), "{report}");
+    assert!(report.contains("pendulum"));
+}
+
+#[test]
+fn online_accuracy_beam() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (server, trained) = start_server("beam", PiPath::Native);
+    let export = trained.dataset.export.clone();
+    let mut rng = Lfsr32::new(0xE2E);
+    let mut pending = Vec::new();
+    let mut truths = Vec::new();
+    for _ in 0..300 {
+        let s = stim::sample("beam", &mut rng).unwrap();
+        truths.push(s[export.target_index]);
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+        pending.push(server.submit(SensorInput { values_q }));
+    }
+    let mut rel = 0f64;
+    for (rx, truth) in pending.into_iter().zip(truths) {
+        let p = rx.recv().unwrap().unwrap();
+        assert!(p.target_estimate.is_finite());
+        rel += ((p.target_estimate - truth) / truth).abs();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.samples, 300);
+    let mean_rel = rel / 300.0;
+    assert!(mean_rel < 0.15, "beam online error {mean_rel}");
+}
+
+#[test]
+fn rtl_sim_path_serves_and_reports_cycles() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (server, trained) = start_server("pendulum", PiPath::RtlSim);
+    let export = trained.dataset.export.clone();
+    let mut rng = Lfsr32::new(0x515);
+    let mut pending = Vec::new();
+    for _ in 0..32 {
+        let s = stim::sample("pendulum", &mut rng).unwrap();
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+        pending.push(server.submit(SensorInput { values_q }));
+    }
+    for rx in pending {
+        let p = rx.recv().unwrap().unwrap();
+        // The pendulum module takes 115 cycles per sample.
+        assert_eq!(p.hw_cycles, Some(115));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn hlo_pi_path_agrees_with_native_in_serving() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (native, trained_a) = start_server("unpowered_flight", PiPath::Native);
+    let (hlo, trained_b) = start_server("unpowered_flight", PiPath::Hlo);
+    // Identical training seeds → identical parameters.
+    assert_eq!(trained_a.params, trained_b.params);
+    let export = trained_a.dataset.export.clone();
+    let mut rng = Lfsr32::new(0x777);
+    for _ in 0..16 {
+        let s = stim::sample("unpowered_flight", &mut rng).unwrap();
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+        let pa = native
+            .submit(SensorInput { values_q: values_q.clone() })
+            .recv()
+            .unwrap()
+            .unwrap();
+        let pb = hlo.submit(SensorInput { values_q }).recv().unwrap().unwrap();
+        assert_eq!(pa.pis, pb.pis, "Π mismatch between native and HLO paths");
+        assert!((pa.pi0_pred - pb.pi0_pred).abs() < 1e-5);
+    }
+    native.shutdown();
+    hlo.shutdown();
+}
+
+#[test]
+fn concurrent_submitters() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (server, trained) = start_server("spring_mass", PiPath::Native);
+    let export = trained.dataset.export.clone();
+    let server = std::sync::Arc::new(server);
+    let mut joins = Vec::new();
+    for t in 0..4u32 {
+        let server = server.clone();
+        let export = export.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Lfsr32::new(0x100 + t);
+            let mut ok = 0usize;
+            for _ in 0..64 {
+                let s = stim::sample("spring_mass", &mut rng).unwrap();
+                let values_q: Vec<i64> =
+                    export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+                let p = server.submit(SensorInput { values_q }).recv().unwrap().unwrap();
+                if p.target_estimate.is_finite() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, 4 * 64);
+    let stats = std::sync::Arc::try_unwrap(server)
+        .ok()
+        .expect("all submitters done")
+        .shutdown();
+    assert_eq!(stats.samples, 256);
+    assert!(stats.batches >= 8, "batching too coarse: {}", stats.batches);
+}
+
+#[test]
+fn unknown_system_fails_cleanly() {
+    if !artifacts_ready() {
+        return;
+    }
+    let err = serve_synthetic("artifacts", "warp_core", 8, 4).unwrap_err().to_string();
+    assert!(err.contains("warp_core"), "{err}");
+}

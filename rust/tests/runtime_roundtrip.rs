@@ -1,0 +1,273 @@
+//! Runtime integration: the AOT artifacts (Pallas Π kernel, Φ model)
+//! executed through PJRT must agree with the native implementations.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built; `make test` always builds it first.
+
+use dimsynth::fixedpoint::{self, Q16_15};
+use dimsynth::newton::corpus;
+use dimsynth::report::export::export_system;
+use dimsynth::runtime::{engine, Engine};
+use dimsynth::stim::{self, Lfsr32};
+use dimsynth::train::{self, FeatureKind};
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn pi_artifacts_bit_exact_vs_native_all_systems() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut eng = Engine::new("artifacts").unwrap();
+    let mut rng = Lfsr32::new(0xAB5);
+    for e in corpus() {
+        let ex = export_system(e.id, Q16_15).unwrap();
+        let kp = ex.ports.len();
+        let n = ex.exponents.len();
+        let exe = eng.load(&format!("pi_{}_b64", e.id)).unwrap();
+        // Random physical samples + adversarial rows (zeros, extremes).
+        let mut flat = vec![0i64; 64 * kp];
+        for j in 0..64 {
+            for p in 0..kp {
+                flat[j * kp + p] = match j {
+                    0 => 0,
+                    1 => Q16_15.max_raw(),
+                    2 => Q16_15.min_raw(),
+                    _ => Q16_15.from_f64(rng.range(-16.0, 16.0)),
+                };
+            }
+        }
+        let outs = exe.run(&[engine::i32_matrix(64, kp, &flat).unwrap()]).unwrap();
+        let got = engine::to_i32s(&outs[0]).unwrap();
+        for j in 0..64 {
+            let row = &flat[j * kp..(j + 1) * kp];
+            for (gi, exps) in ex.exponents.iter().enumerate() {
+                let native = fixedpoint::eval_monomial(Q16_15, row, exps);
+                assert_eq!(
+                    got[j * n + gi] as i64,
+                    native,
+                    "{}: sample {j} group {gi} inputs {row:?}",
+                    e.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pi_b1_artifact_matches_b64() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut eng = Engine::new("artifacts").unwrap();
+    let ex = export_system("beam", Q16_15).unwrap();
+    let kp = ex.ports.len();
+    let b1 = eng.load("pi_beam_b1").unwrap();
+    let b64 = eng.load("pi_beam_b64").unwrap();
+    let mut rng = Lfsr32::new(9);
+    let sample: Vec<i64> = (0..kp).map(|_| Q16_15.from_f64(rng.range(0.5, 9.0))).collect();
+    let o1 = b1.run(&[engine::i32_matrix(1, kp, &sample).unwrap()]).unwrap();
+    let mut flat = vec![0i64; 64 * kp];
+    flat[..kp].copy_from_slice(&sample);
+    let o64 = b64.run(&[engine::i32_matrix(64, kp, &flat).unwrap()]).unwrap();
+    let v1 = engine::to_i32s(&o1[0]).unwrap();
+    let v64 = engine::to_i32s(&o64[0]).unwrap();
+    assert_eq!(v1[..ex.exponents.len()], v64[..ex.exponents.len()]);
+}
+
+#[test]
+fn pipeline_artifact_consistent_with_stagewise() {
+    if !artifacts_ready() {
+        return;
+    }
+    // pipeline_<id>_b64 (fused Π + Φ) must equal pi → features → phi_infer.
+    let mut eng = Engine::new("artifacts").unwrap();
+    let system = "unpowered_flight";
+    let ex = export_system(system, Q16_15).unwrap();
+    let kp = ex.ports.len();
+    let n = ex.exponents.len();
+    let dim = (n - 1).max(1);
+    let p = train::param_count(dim);
+    // Arbitrary but fixed parameters/stats.
+    let params = train::init_params(dim, 0x77);
+    let shift = vec![0.5f32; dim];
+    let scale = vec![2.0f32; dim];
+
+    let mut rng = Lfsr32::new(0x42);
+    let mut flat = vec![0i64; 64 * kp];
+    for v in flat.iter_mut() {
+        *v = Q16_15.from_f64(rng.range(0.5, 8.0));
+    }
+
+    let fused = eng.load(&format!("pipeline_{system}_b64")).unwrap();
+    let out_fused = fused
+        .run(&[
+            engine::f32_vec(&params),
+            engine::i32_matrix(64, kp, &flat).unwrap(),
+            engine::f32_vec(&shift),
+            engine::f32_vec(&scale),
+        ])
+        .unwrap();
+    let fused_pred = engine::to_f32s(&out_fused[0]).unwrap();
+
+    // Stagewise.
+    let pi = eng.load(&format!("pi_{system}_b64")).unwrap();
+    let pis =
+        engine::to_i32s(&pi.run(&[engine::i32_matrix(64, kp, &flat).unwrap()]).unwrap()[0])
+            .unwrap();
+    let mut feats = vec![0f32; 64 * dim];
+    for j in 0..64 {
+        for d in 0..dim {
+            feats[j * dim + d] = if n > 1 {
+                Q16_15.to_f64(pis[j * n + d + 1] as i64) as f32
+            } else {
+                1.0
+            };
+        }
+    }
+    let infer = eng.load(&format!("phi_infer_{system}_b64")).unwrap();
+    let staged = engine::to_f32s(
+        &infer
+            .run(&[
+                engine::f32_vec(&params),
+                engine::f32_matrix(64, dim, &feats).unwrap(),
+                engine::f32_vec(&shift),
+                engine::f32_vec(&scale),
+            ])
+            .unwrap()[0],
+    )
+    .unwrap();
+    for j in 0..64 {
+        assert!(
+            (fused_pred[j] - staged[j]).abs() < 1e-5,
+            "sample {j}: fused {} vs staged {}",
+            fused_pred[j],
+            staged[j]
+        );
+    }
+    let _ = p;
+}
+
+#[test]
+fn train_step_descends_on_learnable_problem() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Beam: Π₀ is a clean function of Π₁ — 200 steps must cut the loss by
+    // an order of magnitude from the first recorded value.
+    let mut eng = Engine::new("artifacts").unwrap();
+    let ds = train::build_dataset("beam", FeatureKind::Pi, 512, 0.0, 0xD0E).unwrap();
+    let out = train::train_on(&mut eng, &ds, "beam", 200, 0.2, 0xD0E).unwrap();
+    let first = out.loss_curve[0];
+    assert!(
+        out.final_loss < first / 10.0,
+        "no descent: first {first}, final {}",
+        out.final_loss
+    );
+}
+
+#[test]
+fn target_recovery_error_small_after_training() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut eng = Engine::new("artifacts").unwrap();
+    let ds = train::build_dataset("spring_mass", FeatureKind::Pi, 512, 0.0, 0xF0).unwrap();
+    let out = train::train_on(&mut eng, &ds, "spring_mass", 300, 0.2, 0xF0).unwrap();
+    let err =
+        train::eval_target_error(&mut eng, &ds, "spring_mass", &out.params, 128, 3).unwrap();
+    assert!(err < 0.02, "spring-constant recovery error {err}");
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let mut eng = Engine::new("artifacts").unwrap();
+    let err = match eng.load("no_such_artifact") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected an error"),
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn engine_caches_compilations() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut eng = Engine::new("artifacts").unwrap();
+    let t0 = std::time::Instant::now();
+    let _ = eng.load("pi_pendulum_b1").unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _ = eng.load("pi_pendulum_b1").unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold / 10, "cache ineffective: cold {cold:?}, warm {warm:?}");
+}
+
+#[test]
+fn quantized_trace_pis_match_f64_within_tolerance() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Physical sanity across the runtime path: Π from quantized signals
+    // through the artifact ≈ Π from f64 math.
+    let mut eng = Engine::new("artifacts").unwrap();
+    let mut rng = Lfsr32::new(0xC4);
+    for e in corpus() {
+        let ex = export_system(e.id, Q16_15).unwrap();
+        let kp = ex.ports.len();
+        let n = ex.exponents.len();
+        let exe = eng.load(&format!("pi_{}_b64", e.id)).unwrap();
+        let mut flat = vec![0i64; 64 * kp];
+        let mut f64rows = Vec::new();
+        for j in 0..64 {
+            let s = stim::sample(e.id, &mut rng).unwrap();
+            let row: Vec<f64> = ex.ports.iter().map(|&si| s[si]).collect();
+            for (p, v) in row.iter().enumerate() {
+                flat[j * kp + p] = Q16_15.from_f64(*v);
+            }
+            f64rows.push(row);
+        }
+        let outs = exe.run(&[engine::i32_matrix(64, kp, &flat).unwrap()]).unwrap();
+        let got = engine::to_i32s(&outs[0]).unwrap();
+        let limit = 0.8 * Q16_15.max_value();
+        for (j, row) in f64rows.iter().enumerate() {
+            for (gi, exps) in ex.exponents.iter().enumerate() {
+                // Follow the serial schedule in f64 and skip groups whose
+                // intermediates leave the representable range — there the
+                // hardware saturates by design (e.g. the fluid-pipe
+                // μ⁻² group with water-like signals).
+                let mut acc = f64::NAN;
+                let mut in_range = true;
+                for op in fixedpoint::monomial_ops(exps) {
+                    acc = match op {
+                        fixedpoint::MonOp::Load(i) => row[i],
+                        fixedpoint::MonOp::LoadOne => 1.0,
+                        fixedpoint::MonOp::Mul(i) => acc * row[i],
+                        fixedpoint::MonOp::Div(i) => acc / row[i],
+                    };
+                    if acc.abs() > limit {
+                        in_range = false;
+                        break;
+                    }
+                }
+                if !in_range {
+                    continue;
+                }
+                let truth = acc;
+                let fx = Q16_15.to_f64(got[j * n + gi] as i64);
+                assert!(
+                    (fx - truth).abs() < 0.02 * truth.abs().max(1.0),
+                    "{}: group {gi} fx {fx} vs f64 {truth}",
+                    e.id
+                );
+            }
+        }
+    }
+}
