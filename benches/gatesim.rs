@@ -1,0 +1,144 @@
+//! Gate-level simulator throughput: scalar `GateSim` vs the bit-parallel
+//! 64-lane `WordSim`, on the largest corpus netlist, under the same
+//! power-analysis LFSR stimulus. Emits `BENCH_gatesim.json` so CI can
+//! track the perf trajectory (simulated cycles × lanes per wall-second).
+//!
+//! Needs no artifacts — this is the pure synthesis/power path.
+//!
+//! ```text
+//! cargo bench --bench gatesim
+//! GATESIM_BENCH_ACTIVATIONS=2000 cargo bench --bench gatesim
+//! ```
+
+use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::newton::corpus;
+use dimsynth::pisearch::analyze_optimized;
+use dimsynth::power;
+use dimsynth::rtl::ir;
+use dimsynth::stim::LfsrBank64;
+use dimsynth::synth::{self, LANES};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let activations: u32 = std::env::var("GATESIM_BENCH_ACTIVATIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500);
+
+    // Largest corpus netlist = the throughput-critical case.
+    let mut largest: Option<(String, ir::PiModuleDesign, synth::MappedDesign)> = None;
+    for e in corpus::corpus() {
+        let m = corpus::load_entry(&e)?;
+        let a = analyze_optimized(&m, e.target)?;
+        let d = ir::build(&a, Q16_15);
+        let mapped = synth::map_design(&d);
+        let bigger = match &largest {
+            None => true,
+            Some((_, _, big)) => mapped.netlist.len() > big.netlist.len(),
+        };
+        if bigger {
+            largest = Some((e.id.to_string(), d, mapped));
+        }
+    }
+    let (id, design, mapped) = largest.expect("corpus is non-empty");
+    let nets = mapped.netlist.len();
+    section(&format!(
+        "gate-level sim throughput — {id} ({nets} nets, {} LUTs, {} DFFs, {activations} activations)",
+        mapped.luts, mapped.dffs
+    ));
+
+    // Scalar baseline (the reference oracle), lane 0's stimulus.
+    let seeds = LfsrBank64::lane_seeds(0xACE1);
+    let t = Instant::now();
+    let scalar_act = power::measure_activity(&mapped.netlist, &design, activations, seeds[0]);
+    let scalar_dt = t.elapsed();
+    let scalar_cps = scalar_act.cycles as f64 / scalar_dt.as_secs_f64();
+    println!(
+        "scalar GateSim      {:>12}  {} cycles  -> {:.3} Mcycles/s",
+        fmt_duration(scalar_dt),
+        scalar_act.cycles,
+        scalar_cps / 1e6
+    );
+
+    // Word-parallel engine: 64 independent streams in one pass.
+    let t = Instant::now();
+    let word_act = power::measure_activity_batch(&mapped.netlist, &design, activations, &seeds);
+    let word_dt = t.elapsed();
+    let word_cps = word_act.cycles as f64 / word_dt.as_secs_f64();
+    let word_lane_cps = word_cps * LANES as f64;
+    println!(
+        "word-parallel (64)  {:>12}  {} cycles x {LANES} lanes  -> {:.3} Mlane-cycles/s",
+        fmt_duration(word_dt),
+        word_act.cycles,
+        word_lane_cps / 1e6
+    );
+
+    let speedup = word_lane_cps / scalar_cps;
+    println!(
+        "speedup: {speedup:.1}x (activity mean {:.1} toggles/cycle, spread {:.2})",
+        word_act.mean(),
+        word_act.spread()
+    );
+
+    // Raw free-running LFSR bitstream stimulus (the paper's "pseudorandom
+    // signal input stream"), driven word-parallel from `LfsrBank64`: one
+    // independent 64-lane bitstream per input-bus bit, no start/done
+    // protocol — the pure netlist-throughput figure.
+    let raw_cycles: u64 = 64 * activations as u64;
+    let mut banks: Vec<Vec<LfsrBank64>> = mapped
+        .netlist
+        .input_buses
+        .iter()
+        .enumerate()
+        .map(|(bi, (_, bits))| {
+            (0..bits.len())
+                .map(|k| LfsrBank64::new(0xB175_EED ^ (bi * 131 + k) as u32))
+                .collect()
+        })
+        .collect();
+    let bus_names: Vec<String> =
+        mapped.netlist.input_buses.iter().map(|(n, _)| n.clone()).collect();
+    let t = Instant::now();
+    let mut wsim = dimsynth::synth::WordSim::new(&mapped.netlist);
+    for _ in 0..raw_cycles {
+        for (bi, name) in bus_names.iter().enumerate() {
+            let mut vals = [0i64; LANES];
+            for (k, bank) in banks[bi].iter_mut().enumerate() {
+                let word = bank.next_bit_word();
+                for (lane, v) in vals.iter_mut().enumerate() {
+                    *v |= ((word >> lane & 1) as i64) << k;
+                }
+            }
+            wsim.set_bus_lanes(name, &vals);
+        }
+        wsim.step();
+    }
+    let raw_dt = t.elapsed();
+    let raw_lane_cps = raw_cycles as f64 * LANES as f64 / raw_dt.as_secs_f64();
+    println!(
+        "raw bitstream (64)  {:>12}  {raw_cycles} cycles x {LANES} lanes  -> {:.3} Mlane-cycles/s",
+        fmt_duration(raw_dt),
+        raw_lane_cps / 1e6
+    );
+
+    write_metrics_json(
+        "BENCH_gatesim.json",
+        &[("design", &id), ("engine", "wordsim-64")],
+        &[
+            ("nets", nets as f64),
+            ("luts", mapped.luts as f64),
+            ("dffs", mapped.dffs as f64),
+            ("activations", activations as f64),
+            ("scalar_cycles_per_sec", scalar_cps),
+            ("word_cycles_per_sec", word_cps),
+            ("word_lane_cycles_per_sec", word_lane_cps),
+            ("raw_bitstream_lane_cycles_per_sec", raw_lane_cps),
+            ("speedup", speedup),
+            ("toggles_per_cycle_mean", word_act.mean()),
+            ("toggles_per_cycle_spread", word_act.spread()),
+        ],
+    )?;
+    println!("wrote BENCH_gatesim.json");
+    Ok(())
+}

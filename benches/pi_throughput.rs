@@ -73,9 +73,9 @@ fn main() -> anyhow::Result<()> {
         cycles as f64 * r.per_sec() / 1e6
     );
 
-    section("gate-level sim (power-analysis path, 1 sample)");
+    section("gate-level sim (power-analysis path)");
     let mapped = dimsynth::synth::map_design(&design);
-    let r = bench_auto("gate-level netlist sim", Duration::from_millis(800), || {
+    let r = bench_auto("scalar GateSim (1 activation)", Duration::from_millis(800), || {
         let mut sim = dimsynth::synth::GateSim::new(&mapped.netlist);
         for (p, v) in design.ports.iter().zip(&batch[0]) {
             sim.set_bus(&format!("in_{}", p.name), *v);
@@ -90,6 +90,27 @@ fn main() -> anyhow::Result<()> {
     println!(
         "{r}   → {:.2} Mcell-cycles/s",
         (mapped.luts + mapped.dffs) as f64 * cycles as f64 * r.per_sec() / 1e6
+    );
+
+    // Word-parallel engine: 64 independent activations per pass.
+    let seeds = dimsynth::stim::LfsrBank64::lane_seeds(0xF00D);
+    let r64 = bench_auto(
+        "word-parallel WordSim (64 lanes, 1 activation each)",
+        Duration::from_millis(800),
+        || {
+            std::hint::black_box(dimsynth::power::measure_activity_batch(
+                &mapped.netlist,
+                &design,
+                1,
+                &seeds,
+            ));
+        },
+    );
+    let lanes = dimsynth::synth::LANES as f64;
+    println!(
+        "{r64}   → {:.2} Mcell-cycles/s ({:.1}x scalar activation throughput)",
+        lanes * (mapped.luts + mapped.dffs) as f64 * cycles as f64 * r64.per_sec() / 1e6,
+        lanes * r64.per_sec() / r.per_sec()
     );
     Ok(())
 }

@@ -95,6 +95,28 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a flat JSON object of bench metrics (hand-rolled; no serde
+/// dependency). String fields first, then numeric fields; non-finite
+/// numbers are emitted as `null` to keep the file valid JSON.
+pub fn write_metrics_json(
+    path: &str,
+    strings: &[(&str, &str)],
+    numbers: &[(&str, f64)],
+) -> std::io::Result<()> {
+    let mut fields: Vec<String> = Vec::with_capacity(strings.len() + numbers.len());
+    for (k, v) in strings {
+        fields.push(format!("  \"{k}\": \"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")));
+    }
+    for (k, v) in numbers {
+        if v.is_finite() {
+            fields.push(format!("  \"{k}\": {v}"));
+        } else {
+            fields.push(format!("  \"{k}\": null"));
+        }
+    }
+    std::fs::write(path, format!("{{\n{}\n}}\n", fields.join(",\n")))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +136,24 @@ mod tests {
         assert!(fmt_duration(Duration::from_micros(5)).contains("µs"));
         assert!(fmt_duration(Duration::from_millis(5)).contains("ms"));
         assert!(fmt_duration(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn metrics_json_roundtrip_shape() {
+        let path = std::env::temp_dir().join("dimsynth_bench_util_metrics.json");
+        let path = path.to_str().unwrap();
+        write_metrics_json(
+            path,
+            &[("design", "pend\"ulum")],
+            &[("cycles_per_sec", 1.5e6), ("bad", f64::INFINITY)],
+        )
+        .unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
+        assert!(body.contains("\"design\": \"pend\\\"ulum\""));
+        assert!(body.contains("\"cycles_per_sec\": 1500000"));
+        assert!(body.contains("\"bad\": null"));
     }
 
     #[test]

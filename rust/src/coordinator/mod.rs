@@ -13,7 +13,10 @@ pub mod pipeline;
 pub mod server;
 
 pub use metrics::{LatencyHistogram, ServeStats};
-pub use pipeline::{DatasetStats, Pipeline, PiPath, Prediction, SensorInput};
+pub use pipeline::{
+    estimate_power_requests, DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest,
+    Prediction, SensorInput,
+};
 pub use server::{InferenceServer, Request, ServerConfig};
 
 use crate::fixedpoint::Q16_15;

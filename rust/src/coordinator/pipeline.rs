@@ -13,9 +13,11 @@
 //!   hardware-in-the-loop validation and cycle accounting).
 
 use crate::fixedpoint::{self, Q16_15};
+use crate::power;
 use crate::report::export::SystemExport;
 use crate::rtl::{self, PiModuleDesign};
 use crate::runtime::engine::{self, Engine};
+use crate::synth;
 use crate::train::{Dataset, TrainOutput, TRAIN_BATCH};
 
 /// Π computation implementation choice.
@@ -47,6 +49,27 @@ pub struct Prediction {
     pub hw_cycles: Option<u64>,
 }
 
+/// A power-estimation request: predict the synthesized hardware's power
+/// under one pseudorandom stimulus stream at one clock frequency.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerRequest {
+    /// LFSR seed of the request's stimulus stream.
+    pub seed: u32,
+    /// Clock frequency to evaluate at (Hz).
+    pub f_hz: f64,
+}
+
+/// The engine's answer to one [`PowerRequest`].
+#[derive(Clone, Copy, Debug)]
+pub struct PowerEstimate {
+    /// Predicted average power (milliwatts).
+    pub mw: f64,
+    /// Measured mean net toggles per cycle under the request's stimulus.
+    pub toggles_per_cycle: f64,
+    /// Gate-level cycles simulated for the estimate.
+    pub cycles: u64,
+}
+
 /// The stateful pipeline owned by the serving worker.
 pub struct Pipeline {
     pub export: SystemExport,
@@ -56,6 +79,8 @@ pub struct Pipeline {
     pub pi_path: PiPath,
     system: String,
     engine: Engine,
+    /// Lazily technology-mapped netlist for power estimation.
+    mapped: Option<synth::MappedDesign>,
 }
 
 /// The standardization constants serving needs from training.
@@ -113,7 +138,22 @@ impl Pipeline {
             pi_path,
             system: system.to_string(),
             engine,
+            mapped: None,
         })
+    }
+
+    /// Serve power-estimation requests in 64-wide batches: requests are
+    /// packed into the lanes of one word-parallel gate-level simulation
+    /// pass ([`power::measure_activity_batch`]), so 64 independent
+    /// stimulus streams cost one netlist traversal per cycle.
+    pub fn estimate_power_batch(
+        &mut self,
+        requests: &[PowerRequest],
+        activations: u32,
+    ) -> Vec<PowerEstimate> {
+        let mapped =
+            self.mapped.get_or_insert_with(|| synth::map_design(&self.design));
+        estimate_power_requests(&mapped.netlist, &self.design, requests, activations)
     }
 
     /// Compute Π products for a batch via the configured path. Returns
@@ -138,33 +178,17 @@ impl Pipeline {
                 Ok((out, None))
             }
             PiPath::RtlSim => {
-                let mut out = Vec::with_capacity(inputs.len());
-                let mut cycles = 0u64;
-                for s in inputs {
-                    let r = rtl::run_once(&self.design, &s.values_q);
-                    cycles += r.cycles;
-                    out.push(r.outputs);
-                }
-                Ok((out, Some(cycles)))
+                let samples: Vec<&[i64]> =
+                    inputs.iter().map(|s| s.values_q.as_slice()).collect();
+                let batch = rtl::run_batch(&self.design, &samples);
+                Ok((batch.outputs, Some(batch.total_cycles)))
             }
             PiPath::Hlo => {
                 let kp = self.export.ports.len();
                 let exe = self.engine.load(&format!("pi_{}_b64", self.system))?;
-                let mut out = Vec::with_capacity(inputs.len());
-                let mut i = 0usize;
-                while i < inputs.len() {
-                    let take = (inputs.len() - i).min(64);
-                    let mut flat = vec![0i64; 64 * kp];
-                    for (j, s) in inputs[i..i + take].iter().enumerate() {
-                        flat[j * kp..(j + 1) * kp].copy_from_slice(&s.values_q);
-                    }
-                    let outs = exe.run(&[engine::i32_matrix(64, kp, &flat)?])?;
-                    let pis = engine::to_i32s(&outs[0])?;
-                    for j in 0..take {
-                        out.push(pis[j * n..(j + 1) * n].iter().map(|&v| v as i64).collect());
-                    }
-                    i += take;
-                }
+                let samples: Vec<&[i64]> =
+                    inputs.iter().map(|s| s.values_q.as_slice()).collect();
+                let out = exe.run_batched_i32(64, kp, n, &samples)?;
                 Ok((out, None))
             }
         }
@@ -222,5 +246,87 @@ impl Pipeline {
 
     pub fn system(&self) -> &str {
         &self.system
+    }
+}
+
+/// Dispatch power-estimation requests against a mapped netlist in
+/// 64-wide batches (the engine-independent core of
+/// [`Pipeline::estimate_power_batch`], unit-testable without artifacts).
+/// Unfilled lanes of the last batch simulate padding streams whose
+/// results are dropped.
+pub fn estimate_power_requests(
+    netlist: &crate::synth::Netlist,
+    design: &PiModuleDesign,
+    requests: &[PowerRequest],
+    activations: u32,
+) -> Vec<PowerEstimate> {
+    let mut out = Vec::with_capacity(requests.len());
+    for chunk in requests.chunks(synth::LANES) {
+        let mut seeds = [0u32; synth::LANES];
+        for (lane, slot) in seeds.iter_mut().enumerate() {
+            *slot = match chunk.get(lane) {
+                Some(r) => r.seed,
+                // Padding lanes: any seed works, results are dropped.
+                None => 0x9E37_79B9 ^ lane as u32,
+            };
+        }
+        let act = power::measure_activity_batch(netlist, design, activations, &seeds);
+        for (lane, req) in chunk.iter().enumerate() {
+            let lane_act = act.lane(lane);
+            out.push(PowerEstimate {
+                mw: power::average_power_mw(&power::ICE40, &lane_act, req.f_hz),
+                toggles_per_cycle: lane_act.toggles_per_cycle,
+                cycles: act.cycles,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::newton::corpus;
+    use crate::pisearch::analyze_optimized;
+
+    /// A 65-request batch (two 64-lane chunks, the second padded) must
+    /// agree with scalar measure_activity + average_power_mw per request.
+    #[test]
+    fn power_requests_match_scalar_path_across_chunks() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let design = rtl::build(&a, Q16_15);
+        let mapped = synth::map_design(&design);
+        let requests: Vec<PowerRequest> = (0..65)
+            .map(|i| PowerRequest { seed: 0x1000 + i as u32, f_hz: 6.0e6 })
+            .collect();
+        let got = estimate_power_requests(&mapped.netlist, &design, &requests, 2);
+        assert_eq!(got.len(), 65);
+        // Spot-check both chunks, including the chunk boundary and the
+        // padded tail chunk's only real lane.
+        for &i in &[0usize, 17, 63, 64] {
+            let act = power::measure_activity(
+                &mapped.netlist,
+                &design,
+                2,
+                requests[i].seed,
+            );
+            let want = power::average_power_mw(&power::ICE40, &act, requests[i].f_hz);
+            assert_eq!(got[i].toggles_per_cycle, act.toggles_per_cycle, "request {i}");
+            assert_eq!(got[i].cycles, act.cycles, "request {i}");
+            assert!((got[i].mw - want).abs() < 1e-12, "request {i}");
+        }
+    }
+
+    #[test]
+    fn empty_request_batch_is_empty() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let design = rtl::build(&a, Q16_15);
+        let mapped = synth::map_design(&design);
+        assert!(estimate_power_requests(&mapped.netlist, &design, &[], 1).is_empty());
     }
 }

@@ -20,8 +20,10 @@
 //!   ([`fixedpoint`]), FSM scheduling, Verilog emission, cycle-accurate
 //!   simulation.
 //! * **Implementation flow** — [`synth`] (gate netlist, optimization,
-//!   LUT4 technology mapping), [`timing`] (STA → Fmax), [`power`]
-//!   (switching-activity power model), [`stim`] (LFSR stimulus).
+//!   LUT4 technology mapping, scalar + bit-parallel 64-lane gate-level
+//!   simulation), [`timing`] (STA → Fmax), [`power`]
+//!   (switching-activity power model, 64 estimates per simulation pass),
+//!   [`stim`] (LFSR stimulus, scalar and 64-lane).
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
 //!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine),
 //!   [`train`] (offline/in-situ Φ calibration).

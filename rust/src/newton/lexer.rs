@@ -61,12 +61,19 @@ pub struct Token {
 }
 
 /// Lexer error with position.
-#[derive(Debug, thiserror::Error)]
-#[error("lex error at {pos}: {msg}")]
+#[derive(Debug)]
 pub struct LexError {
     pub pos: Pos,
     pub msg: String,
 }
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
 
 pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
     let mut toks = Vec::new();

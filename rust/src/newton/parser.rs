@@ -25,12 +25,37 @@ use super::ast::*;
 use super::lexer::{lex, LexError, Tok, Token};
 
 /// Parse error with position and message.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ParseError {
-    #[error(transparent)]
-    Lex(#[from] LexError),
-    #[error("parse error at {pos}: {msg}")]
+    Lex(LexError),
     Syntax { pos: Pos, msg: String },
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Lex(e) => write!(f, "{e}"),
+            ParseError::Syntax { pos, msg } => write!(f, "parse error at {pos}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        // `Lex` is transparent: its Display *is* the inner error's, so
+        // exposing the inner error as a source would duplicate the
+        // message in flattened chains.
+        match self {
+            ParseError::Lex(e) => std::error::Error::source(e),
+            ParseError::Syntax { .. } => None,
+        }
+    }
+}
+
+impl From<LexError> for ParseError {
+    fn from(e: LexError) -> ParseError {
+        ParseError::Lex(e)
+    }
 }
 
 struct Parser {

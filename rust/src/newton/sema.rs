@@ -60,19 +60,41 @@ impl SystemModel {
 }
 
 /// Semantic error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SemaError {
-    #[error("{pos}: unknown signal or constant `{name}`")]
     Unknown { pos: ast::Pos, name: String },
-    #[error("{pos}: duplicate definition of `{name}`")]
     Duplicate { pos: ast::Pos, name: String },
-    #[error("{pos}: relation is not dimensionally homogeneous: [{lhs}] {op} [{rhs}]")]
     Inhomogeneous { pos: ast::Pos, lhs: String, op: RelOp, rhs: String },
-    #[error("{pos}: `none` derivation is only valid for builtin base signals; define `{name}` with a unit expression")]
     BadNone { pos: ast::Pos, name: String },
-    #[error("{pos}: fractional power of a numeric scale factor is not supported")]
     BadPow { pos: ast::Pos },
 }
+
+impl std::fmt::Display for SemaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SemaError::Unknown { pos, name } => {
+                write!(f, "{pos}: unknown signal or constant `{name}`")
+            }
+            SemaError::Duplicate { pos, name } => {
+                write!(f, "{pos}: duplicate definition of `{name}`")
+            }
+            SemaError::Inhomogeneous { pos, lhs, op, rhs } => write!(
+                f,
+                "{pos}: relation is not dimensionally homogeneous: [{lhs}] {op} [{rhs}]"
+            ),
+            SemaError::BadNone { pos, name } => write!(
+                f,
+                "{pos}: `none` derivation is only valid for builtin base signals; define `{name}` with a unit expression"
+            ),
+            SemaError::BadPow { pos } => write!(
+                f,
+                "{pos}: fractional power of a numeric scale factor is not supported"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SemaError {}
 
 /// Environment of resolved names → dimensions (+ values for constants).
 struct Env {

@@ -104,15 +104,32 @@ impl fmt::Display for PiAnalysis {
 }
 
 /// Error cases of the Π search.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PiError {
-    #[error("system `{0}` has no dimensionless products (nullspace is trivial)")]
     NoGroups(String),
-    #[error("target `{target}` of system `{system}` cannot appear in any dimensionless product")]
     TargetNotExpressible { system: String, target: String },
-    #[error("unknown target symbol `{target}` in system `{system}`")]
     UnknownTarget { system: String, target: String },
 }
+
+impl fmt::Display for PiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PiError::NoGroups(system) => write!(
+                f,
+                "system `{system}` has no dimensionless products (nullspace is trivial)"
+            ),
+            PiError::TargetNotExpressible { system, target } => write!(
+                f,
+                "target `{target}` of system `{system}` cannot appear in any dimensionless product"
+            ),
+            PiError::UnknownTarget { system, target } => {
+                write!(f, "unknown target symbol `{target}` in system `{system}`")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PiError {}
 
 /// Run the Π-search for `model` with the given target parameter.
 pub fn analyze(model: &SystemModel, target: &str) -> Result<PiAnalysis, PiError> {
@@ -156,9 +173,11 @@ pub fn analyze(model: &SystemModel, target: &str) -> Result<PiAnalysis, PiError>
         .map(|(i, _)| i)
         .expect("target participates, so some vector has nonzero coefficient");
     basis.swap(0, pivot);
-    let pivot_vec = basis[0].clone();
+    // Split-borrow: the pivot row is read while the rest are eliminated,
+    // so no clone of the pivot vector is needed.
+    let (pivot_vec, rest) = basis.split_first_mut().expect("basis is non-empty");
     let pc = pivot_vec[target_idx];
-    for v in basis.iter_mut().skip(1) {
+    for v in rest {
         if !v[target_idx].is_zero() {
             let f = v[target_idx] / pc;
             for (j, x) in v.iter_mut().enumerate() {

@@ -3,5 +3,7 @@
 pub mod model;
 
 pub use model::{
-    average_power, average_power_mw, measure_activity, ActivityReport, PowerModel, ICE40,
+    average_power, average_power_mw, measure_activity, measure_activity_batch,
+    measure_activity_spread, power_spread_mw, ActivityReport, LaneActivityReport,
+    PowerModel, PowerSpread, ICE40,
 };

@@ -18,8 +18,8 @@
 
 use crate::fixedpoint::QFormat;
 use crate::rtl::ir::PiModuleDesign;
-use crate::stim::Lfsr32;
-use crate::synth::{GateSim, Netlist};
+use crate::stim::{Lfsr32, LfsrBank64};
+use crate::synth::{GateSim, Netlist, WordSim, LANES};
 
 /// Power model constants.
 #[derive(Clone, Copy, Debug)]
@@ -93,6 +93,108 @@ pub fn measure_activity(
     }
 }
 
+/// Switching activity of 64 independent stimulus streams, measured in
+/// one word-parallel simulation pass ([`measure_activity_batch`]).
+#[derive(Clone, Copy, Debug)]
+pub struct LaneActivityReport {
+    /// Mean net toggles per clock cycle, one per lane.
+    pub lanes: [f64; LANES],
+    /// Cycles simulated (shared by all lanes — the corpus FSMs have
+    /// data-independent latency, asserted during measurement).
+    pub cycles: u64,
+    /// Activations per lane.
+    pub activations: u32,
+}
+
+impl LaneActivityReport {
+    /// Mean toggles-per-cycle across lanes.
+    pub fn mean(&self) -> f64 {
+        self.lanes.iter().sum::<f64>() / LANES as f64
+    }
+
+    /// Population standard deviation of toggles-per-cycle across lanes
+    /// (the stimulus-induced spread of the activity estimate).
+    pub fn spread(&self) -> f64 {
+        let m = self.mean();
+        (self.lanes.iter().map(|a| (a - m).powi(2)).sum::<f64>() / LANES as f64).sqrt()
+    }
+
+    /// View one lane as a scalar [`ActivityReport`].
+    pub fn lane(&self, lane: usize) -> ActivityReport {
+        ActivityReport {
+            toggles_per_cycle: self.lanes[lane],
+            cycles: self.cycles,
+            activations: self.activations,
+        }
+    }
+}
+
+/// Drive the mapped netlist with 64 independent pseudorandom stimulus
+/// streams at once and measure per-lane toggle activity — the
+/// word-parallel counterpart of [`measure_activity`], yielding 64 power
+/// estimates (mean + spread) from one simulation pass.
+///
+/// Lane *l* sees exactly the operand stream `Lfsr32::new(seeds[l])`
+/// would produce, so each lane is bit-identical to a scalar
+/// `measure_activity` run with that seed.
+pub fn measure_activity_batch(
+    netlist: &Netlist,
+    design: &PiModuleDesign,
+    activations: u32,
+    seeds: &[u32; LANES],
+) -> LaneActivityReport {
+    let q: QFormat = design.q;
+    let mut lfsrs: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+    let mut sim = WordSim::new(netlist);
+    let mut cycles = 0u64;
+    for _ in 0..activations {
+        for p in &design.ports {
+            let mut values = [0i64; LANES];
+            for (v, lfsr) in values.iter_mut().zip(lfsrs.iter_mut()) {
+                *v = q.from_f64(lfsr.range(0.25, 12.0));
+            }
+            sim.set_bus_lanes(&format!("in_{}", p.name), &values);
+        }
+        sim.set_bus("start", 1);
+        sim.step();
+        cycles += 1;
+        sim.set_bus("start", 0);
+        let mut guard = 0u32;
+        loop {
+            let done = sim.get_bit_word("done");
+            if done == u64::MAX {
+                break;
+            }
+            // The generated FSMs have data-independent latency, so all
+            // lanes must finish on the same cycle; a mixed done word
+            // would silently skew the shared cycle denominator.
+            assert_eq!(done, 0, "lanes diverged on `done` (data-dependent latency?)");
+            sim.step();
+            cycles += 1;
+            guard += 1;
+            assert!(guard < 5_000, "activation did not finish");
+        }
+    }
+    let lane_toggles = sim.lane_total_toggles();
+    let mut lanes = [0f64; LANES];
+    for (a, &t) in lanes.iter_mut().zip(lane_toggles.iter()) {
+        *a = t as f64 / cycles.max(1) as f64;
+    }
+    LaneActivityReport { lanes, cycles, activations }
+}
+
+/// Convenience: measure 64 lanes with seeds derived from one master seed
+/// (lane seeds are [`LfsrBank64::lane_seeds`], so scalar reference runs
+/// can reproduce any lane).
+pub fn measure_activity_spread(
+    netlist: &Netlist,
+    design: &PiModuleDesign,
+    activations: u32,
+    seed: u32,
+) -> LaneActivityReport {
+    measure_activity_batch(netlist, design, activations, &LfsrBank64::lane_seeds(seed))
+}
+
 /// Average power (watts) at clock `f_hz` for measured activity.
 pub fn average_power(model: &PowerModel, activity: &ActivityReport, f_hz: f64) -> f64 {
     model.p_static + model.c_eff * model.vdd * model.vdd * f_hz * activity.toggles_per_cycle
@@ -101,6 +203,42 @@ pub fn average_power(model: &PowerModel, activity: &ActivityReport, f_hz: f64) -
 /// Convenience: milliwatts.
 pub fn average_power_mw(model: &PowerModel, activity: &ActivityReport, f_hz: f64) -> f64 {
     average_power(model, activity, f_hz) * 1e3
+}
+
+/// 64 independent power estimates from one word-parallel activity
+/// measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerSpread {
+    /// Per-lane power (milliwatts).
+    pub lanes_mw: [f64; LANES],
+    /// Mean across lanes (milliwatts).
+    pub mean_mw: f64,
+    /// Population standard deviation across lanes (milliwatts).
+    pub std_mw: f64,
+    /// Extremes across lanes (milliwatts).
+    pub min_mw: f64,
+    pub max_mw: f64,
+}
+
+/// Evaluate the power model on every lane of a batched activity
+/// measurement at clock `f_hz`.
+pub fn power_spread_mw(
+    model: &PowerModel,
+    activity: &LaneActivityReport,
+    f_hz: f64,
+) -> PowerSpread {
+    let mut lanes_mw = [0f64; LANES];
+    for (lane, p) in lanes_mw.iter_mut().enumerate() {
+        *p = average_power_mw(model, &activity.lane(lane), f_hz);
+    }
+    let mean_mw = lanes_mw.iter().sum::<f64>() / LANES as f64;
+    let var = lanes_mw.iter().map(|p| (p - mean_mw).powi(2)).sum::<f64>() / LANES as f64;
+    let (mut min_mw, mut max_mw) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &p in &lanes_mw {
+        min_mw = min_mw.min(p);
+        max_mw = max_mw.max(p);
+    }
+    PowerSpread { lanes_mw, mean_mw, std_mw: var.sqrt(), min_mw, max_mw }
 }
 
 #[cfg(test)]
@@ -158,6 +296,51 @@ mod tests {
         let (small, _) = activity("pendulum", 3);
         let (big, _) = activity("fluid_pipe", 3);
         assert!(big.toggles_per_cycle > small.toggles_per_cycle);
+    }
+
+    #[test]
+    fn batch_lane_equals_scalar_run() {
+        // Lane l of the batched measurement must reproduce a scalar
+        // measure_activity run seeded with lane l's seed, exactly.
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let seeds = crate::stim::LfsrBank64::lane_seeds(0x5EED);
+        let batch = measure_activity_batch(&mapped.netlist, &d, 3, &seeds);
+        for &lane in &[0usize, 1, 31, 63] {
+            let scalar = measure_activity(&mapped.netlist, &d, 3, seeds[lane]);
+            assert_eq!(batch.cycles, scalar.cycles, "lane {lane}");
+            assert_eq!(
+                batch.lanes[lane], scalar.toggles_per_cycle,
+                "lane {lane} activity"
+            );
+        }
+        assert!(batch.spread() >= 0.0);
+        assert!(batch.mean() > 0.0);
+    }
+
+    #[test]
+    fn power_spread_brackets_mean() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let act = measure_activity_spread(&mapped.netlist, &d, 3, 0xACE1);
+        let spread = power_spread_mw(&ICE40, &act, 6.0e6);
+        assert!(spread.min_mw <= spread.mean_mw && spread.mean_mw <= spread.max_mw);
+        assert!(spread.std_mw >= 0.0);
+        assert!((0.2..10.0).contains(&spread.mean_mw), "{}", spread.mean_mw);
+        // Mean over lanes equals the model applied to the mean activity.
+        let mean_act = ActivityReport {
+            toggles_per_cycle: act.mean(),
+            cycles: act.cycles,
+            activations: act.activations,
+        };
+        let direct = average_power_mw(&ICE40, &mean_act, 6.0e6);
+        assert!((spread.mean_mw - direct).abs() < 1e-9);
     }
 
     #[test]

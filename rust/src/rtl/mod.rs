@@ -9,5 +9,5 @@ pub mod verilog;
 
 pub use ir::{build, PiModuleDesign, PiUnit, Port};
 pub use sched::{max_sample_rate, module_latency, OpLatency, Policy};
-pub use sim::{run_cycle_accurate, run_once, run_stream, RtlSim, SimResult};
+pub use sim::{run_batch, run_cycle_accurate, run_once, run_stream, BatchResult, RtlSim, SimResult};
 pub use testbench::{emit_testbench, golden_vectors, GoldenVector};

@@ -187,6 +187,46 @@ pub fn run_cycle_accurate(design: &PiModuleDesign, inputs: &[i64]) -> SimResult 
     RtlSim::start(design, inputs).run()
 }
 
+/// Result of simulating one batch of activations ([`run_batch`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchResult {
+    /// Per-sample Π outputs, in submission order.
+    pub outputs: Vec<Vec<i64>>,
+    /// Cycles per activation (the corpus FSMs have data-independent
+    /// latency, validated here).
+    pub cycles_per_sample: u64,
+    /// Total hardware cycles for the batch, back-to-back.
+    pub total_cycles: u64,
+}
+
+/// Batched entry point: simulate up to a whole serving batch of samples
+/// (each a port-order input vector) through the module, asserting the
+/// schedule's data-independent latency so callers can account cycles
+/// per-sample without per-sample bookkeeping. This is the RTL-sim
+/// counterpart of the 64-wide dispatch in
+/// [`crate::coordinator::Pipeline`].
+pub fn run_batch(design: &PiModuleDesign, samples: &[impl AsRef<[i64]>]) -> BatchResult {
+    let mut outputs = Vec::with_capacity(samples.len());
+    let mut per_sample = 0u64;
+    for s in samples {
+        let r = run_once(design, s.as_ref());
+        if per_sample == 0 {
+            per_sample = r.cycles;
+        } else {
+            assert_eq!(
+                per_sample, r.cycles,
+                "data-dependent latency in a fixed-schedule module"
+            );
+        }
+        outputs.push(r.outputs);
+    }
+    BatchResult {
+        outputs,
+        cycles_per_sample: per_sample,
+        total_cycles: per_sample * samples.len() as u64,
+    }
+}
+
 /// Simulate a stream of samples back-to-back (no pipelining: the next
 /// sample starts the cycle after `done`). Returns per-sample outputs and
 /// the total cycle count.
@@ -304,6 +344,30 @@ mod tests {
                 assert_eq!(o, Q16_15.one(), "{}: unit {} not unity", e.id, ui);
             }
         }
+    }
+
+    #[test]
+    fn batch_matches_run_once() {
+        let d = design("pendulum");
+        let mut lfsr = Lfsr32::new(0xBA7C);
+        let samples: Vec<Vec<i64>> = (0..9)
+            .map(|_| (0..d.num_inputs()).map(|_| rand_operand(&mut lfsr)).collect())
+            .collect();
+        let batch = run_batch(&d, &samples);
+        assert_eq!(batch.outputs.len(), 9);
+        assert_eq!(batch.cycles_per_sample, module_latency(&d, Policy::ParallelPerPi));
+        assert_eq!(batch.total_cycles, 9 * batch.cycles_per_sample);
+        for (s, out) in samples.iter().zip(&batch.outputs) {
+            assert_eq!(out, &run_once(&d, s).outputs);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_zero_cycles() {
+        let d = design("pendulum");
+        let batch = run_batch(&d, &Vec::<Vec<i64>>::new());
+        assert!(batch.outputs.is_empty());
+        assert_eq!(batch.total_cycles, 0);
     }
 
     #[test]

@@ -28,6 +28,49 @@ impl Executable {
     pub fn name(&self) -> &str {
         &self.name
     }
+
+    /// Batched entry point: run a fixed-batch-size executable over any
+    /// number of samples by chunking into `batch_rows`-row windows
+    /// (zero-padded tail), reading `out_width` int32 values per sample
+    /// from output 0. This is the executable-side counterpart of the
+    /// 64-wide dispatch in [`crate::coordinator::Pipeline`].
+    pub fn run_batched_i32(
+        &self,
+        batch_rows: usize,
+        cols: usize,
+        out_width: usize,
+        samples: &[&[i64]],
+    ) -> anyhow::Result<Vec<Vec<i64>>> {
+        let mut out = Vec::with_capacity(samples.len());
+        let mut i = 0usize;
+        while i < samples.len() {
+            let take = (samples.len() - i).min(batch_rows);
+            let mut flat = vec![0i64; batch_rows * cols];
+            for (j, s) in samples[i..i + take].iter().enumerate() {
+                if s.len() != cols {
+                    anyhow::bail!(
+                        "{}: sample {} has {} values, expected {cols}",
+                        self.name,
+                        i + j,
+                        s.len()
+                    );
+                }
+                flat[j * cols..(j + 1) * cols].copy_from_slice(s);
+            }
+            let outs = self.run(&[i32_matrix(batch_rows, cols, &flat)?])?;
+            let vals = to_i32s(&outs[0])?;
+            for j in 0..take {
+                out.push(
+                    vals[j * out_width..(j + 1) * out_width]
+                        .iter()
+                        .map(|&v| v as i64)
+                        .collect(),
+                );
+            }
+            i += take;
+        }
+        Ok(out)
+    }
 }
 
 /// A PJRT CPU client plus a cache of compiled artifacts, keyed by name.

@@ -59,6 +59,73 @@ impl Lfsr32 {
     }
 }
 
+/// 64 independent [`Lfsr32`] streams advanced word-parallel, for the
+/// bit-parallel gate-level simulator ([`crate::synth::WordSim`]).
+///
+/// The 64 registers are stored **bit-sliced**: `planes[k]` holds bit *k*
+/// of every lane's shift register (bit *l* of the plane = lane *l*), so
+/// one [`LfsrBank64::next_bit_word`] computes the feedback of all 64
+/// lanes with three XOR word ops and a plane rotation — the same
+/// transposition the simulator uses for net values. Lane *l* of the bank
+/// is bit-compatible with `Lfsr32::new(seeds[l])` (tested).
+#[derive(Clone, Debug)]
+pub struct LfsrBank64 {
+    planes: [u64; 32],
+}
+
+impl LfsrBank64 {
+    /// Create from 64 explicit lane seeds (zero seeds are remapped like
+    /// [`Lfsr32::new`]).
+    pub fn from_seeds(seeds: &[u32; 64]) -> LfsrBank64 {
+        let mut planes = [0u64; 32];
+        for (lane, &seed) in seeds.iter().enumerate() {
+            let s = if seed == 0 { 0xACE1_u32 } else { seed };
+            for (k, plane) in planes.iter_mut().enumerate() {
+                *plane |= u64::from(s >> k & 1) << lane;
+            }
+        }
+        LfsrBank64 { planes }
+    }
+
+    /// Create with 64 distinct lane seeds derived from one master seed.
+    pub fn new(seed: u32) -> LfsrBank64 {
+        LfsrBank64::from_seeds(&Self::lane_seeds(seed))
+    }
+
+    /// The 64 per-lane seeds [`LfsrBank64::new`] derives from a master
+    /// seed (all nonzero: an LFSR state stream never visits zero). Useful
+    /// for constructing bit-compatible scalar references.
+    pub fn lane_seeds(seed: u32) -> [u32; 64] {
+        let mut gen = Lfsr32::new(seed);
+        let mut seeds = [0u32; 64];
+        for s in seeds.iter_mut() {
+            *s = gen.next_u32();
+        }
+        seeds
+    }
+
+    /// Advance every lane one bit; returns the 64 output bits as a word
+    /// (bit *l* = lane *l*).
+    pub fn next_bit_word(&mut self) -> u64 {
+        // Same taps as Lfsr32::next_bit, evaluated across all lanes at
+        // once: bit = s0 ^ s10 ^ s30 ^ s31.
+        let bits = self.planes[0] ^ self.planes[10] ^ self.planes[30] ^ self.planes[31];
+        self.planes.copy_within(1.., 0);
+        self.planes[31] = bits;
+        bits
+    }
+
+    /// Current register state of one lane (for tests and checkpointing).
+    pub fn lane_state(&self, lane: usize) -> u32 {
+        assert!(lane < 64, "lane out of range");
+        let mut s = 0u32;
+        for (k, plane) in self.planes.iter().enumerate() {
+            s |= ((plane >> lane & 1) as u32) << k;
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +181,43 @@ mod tests {
             let v = l.range(0.5, 8.0);
             assert!((0.5..8.0).contains(&v));
         }
+    }
+
+    #[test]
+    fn bank_matches_scalar_lanes() {
+        let seeds = LfsrBank64::lane_seeds(0xBEEF);
+        let mut bank = LfsrBank64::from_seeds(&seeds);
+        let mut scalars: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+        for step in 0..2_000 {
+            let w = bank.next_bit_word();
+            for (lane, s) in scalars.iter_mut().enumerate() {
+                assert_eq!(w >> lane & 1, u64::from(s.next_bit()), "step {step} lane {lane}");
+            }
+        }
+        for (lane, s) in scalars.iter().enumerate() {
+            assert_eq!(bank.lane_state(lane), s.state(), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn bank_zero_seed_remapped() {
+        let mut seeds = [7u32; 64];
+        seeds[5] = 0;
+        let mut bank = LfsrBank64::from_seeds(&seeds);
+        assert_eq!(bank.lane_state(5), 0xACE1);
+        // Must not lock up.
+        for _ in 0..64 {
+            bank.next_bit_word();
+        }
+        assert_ne!(bank.lane_state(5), 0);
+    }
+
+    #[test]
+    fn bank_lane_seeds_distinct_and_nonzero() {
+        let seeds = LfsrBank64::lane_seeds(42);
+        let uniq: HashSet<u32> = seeds.iter().copied().collect();
+        assert_eq!(uniq.len(), 64);
+        assert!(seeds.iter().all(|&s| s != 0));
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! net, which feeds the switching-activity power model
 //! ([`crate::power`]) — the substitute for the paper's physical current
 //! measurement on the iCE40's core supply rail.
+//!
+//! This scalar engine is the **reference oracle** for the bit-parallel
+//! 64-lane engine ([`super::wordsim::WordSim`]), which is the production
+//! path for long stimulus runs. `tests/wordsim_differential.rs` asserts
+//! lane-by-lane identity between the two on the whole corpus; keep their
+//! semantics in lock-step when changing either.
 
 use super::netlist::{NetId, Netlist, Node};
 use std::collections::HashMap;
@@ -89,17 +95,16 @@ impl<'n> GateSim<'n> {
     /// truncation to the bus width). Values are written straight into the
     /// net state; they hold until overwritten.
     pub fn set_bus(&mut self, name: &str, value: i64) {
-        let bits = self
-            .bus
-            .get(name)
-            .unwrap_or_else(|| panic!("no input bus `{name}`"))
-            .clone();
+        // Split-borrow the fields so the bus lookup needs no clone (this
+        // runs once per port per activation on the power-analysis path).
+        let GateSim { bus, vals, toggles, .. } = self;
+        let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
         for (i, bit) in bits.iter().enumerate() {
             let idx = *bit as usize;
             let v = (value >> i) & 1 == 1;
-            if self.vals[idx] != v {
-                self.toggles[idx] += 1;
-                self.vals[idx] = v;
+            if vals[idx] != v {
+                toggles[idx] += 1;
+                vals[idx] = v;
             }
         }
     }

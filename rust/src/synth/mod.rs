@@ -10,9 +10,11 @@ pub mod opt;
 pub mod techmap;
 pub mod vcd;
 pub mod word;
+pub mod wordsim;
 
 pub use gatesim::GateSim;
 pub use lower::lower;
-pub use netlist::{NetId, Netlist, Node};
+pub use netlist::{Levelization, NetId, Netlist, Node};
 pub use techmap::{map_design, MappedDesign};
 pub use vcd::VcdRecorder;
+pub use wordsim::{WordSim, LANES};

@@ -7,6 +7,14 @@
 //! constants and primary inputs. Structural hashing at construction time
 //! deduplicates identical nodes (the same CSE yosys performs during
 //! elaboration).
+//!
+//! **Topological invariant:** every LUT's inputs have smaller net ids than
+//! the LUT itself. This holds by construction (a LUT can only reference
+//! nets that already exist) and is preserved by the rebuild passes
+//! ([`super::opt::dce`], [`super::techmap::pack_luts`]), which emit nodes
+//! in id order. Only DFF data inputs may point forward (sequential
+//! feedback). [`Netlist::levelize`] validates the invariant and derives
+//! the per-level evaluation schedule the simulators iterate.
 
 use std::collections::HashMap;
 
@@ -25,6 +33,32 @@ pub enum Node {
     Lut { ins: Vec<NetId>, tt: u16 },
     /// D flip-flop (posedge, implicit global clock), with reset-init value.
     Dff { d: NetId, init: bool },
+}
+
+/// Topological levelization of a netlist's combinational logic
+/// (see [`Netlist::levelize`]).
+#[derive(Clone, Debug)]
+pub struct Levelization {
+    /// Combinational level per net (0 for constants, inputs and DFFs).
+    pub level: Vec<u32>,
+    /// LUT ids sorted by level, ascending id within a level.
+    pub order: Vec<NetId>,
+    /// Half-open `(start, end)` ranges into `order`, one per level,
+    /// starting at level 1. `bounds.len()` is the combinational depth.
+    pub bounds: Vec<(u32, u32)>,
+}
+
+impl Levelization {
+    /// Combinational depth (maximum LUT level).
+    pub fn depth(&self) -> u32 {
+        self.bounds.len() as u32
+    }
+
+    /// The LUT ids of one level (1-based, matching `level` values).
+    pub fn level_luts(&self, level: u32) -> &[NetId] {
+        let (s, e) = self.bounds[level as usize - 1];
+        &self.order[s as usize..e as usize]
+    }
 }
 
 /// A gate-level netlist.
@@ -307,6 +341,60 @@ impl Netlist {
         self.outputs.push((name.to_string(), bits));
     }
 
+    // ---- levelization ----------------------------------------------------
+
+    /// Compute topological levels for the combinational logic and a dense
+    /// per-level evaluation schedule.
+    ///
+    /// Constants, primary inputs and DFF outputs (state, read from the
+    /// previous cycle) are level 0; a LUT's level is one more than the
+    /// maximum level of its inputs. The module-level topological invariant
+    /// is validated here: a LUT input with an id not smaller than the LUT
+    /// itself is a construction bug and panics.
+    pub fn levelize(&self) -> Levelization {
+        let n = self.nodes.len();
+        let mut level = vec![0u32; n];
+        let mut depth = 0u32;
+        for (id, node) in self.nodes.iter().enumerate() {
+            if let Node::Lut { ins, .. } = node {
+                let mut l = 0u32;
+                for &i in ins {
+                    assert!(
+                        (i as usize) < id,
+                        "netlist not topological: LUT {id} reads net {i}"
+                    );
+                    l = l.max(level[i as usize]);
+                }
+                level[id] = l + 1;
+                depth = depth.max(l + 1);
+            }
+        }
+        // Counting sort of LUT ids by level (stable: ascending id within a
+        // level), yielding dense per-level slices for the simulators.
+        let mut counts = vec![0u32; depth as usize + 1];
+        for (id, node) in self.nodes.iter().enumerate() {
+            if matches!(node, Node::Lut { .. }) {
+                counts[level[id] as usize] += 1;
+            }
+        }
+        let mut bounds = Vec::with_capacity(depth as usize);
+        let mut start = 0u32;
+        for lv in 1..=depth as usize {
+            bounds.push((start, start + counts[lv]));
+            start += counts[lv];
+        }
+        let mut next: Vec<u32> = bounds.iter().map(|&(s, _)| s).collect();
+        let mut order = vec![0 as NetId; start as usize];
+        for (id, node) in self.nodes.iter().enumerate() {
+            if matches!(node, Node::Lut { .. }) {
+                let slot = &mut next[level[id] as usize - 1];
+                order[*slot as usize] = id as NetId;
+                *slot += 1;
+            }
+        }
+        Levelization { level, order, bounds }
+    }
+
     // ---- statistics ------------------------------------------------------
 
     pub fn count_luts(&self) -> usize {
@@ -409,6 +497,52 @@ mod tests {
         assert_eq!(bus.len(), 8);
         assert_eq!(nl.input_buses.len(), 1);
         assert_eq!(nl.count_inputs(), 8);
+    }
+
+    #[test]
+    fn levelize_orders_by_depth() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x = nl.and2(a, b); // level 1
+        let y = nl.xor2(x, a); // level 2
+        let z = nl.or2(y, x); // level 3
+        let lv = nl.levelize();
+        assert_eq!(lv.level[a as usize], 0);
+        assert_eq!(lv.level[x as usize], 1);
+        assert_eq!(lv.level[y as usize], 2);
+        assert_eq!(lv.level[z as usize], 3);
+        assert_eq!(lv.depth(), 3);
+        assert_eq!(lv.level_luts(1), &[x]);
+        assert_eq!(lv.level_luts(2), &[y]);
+        assert_eq!(lv.level_luts(3), &[z]);
+        assert_eq!(lv.order.len(), nl.count_luts());
+    }
+
+    #[test]
+    fn levelize_dff_breaks_cycles() {
+        // q feeds its own next-state logic; the DFF output is level 0 so
+        // the combinational logic still levelizes.
+        let mut nl = Netlist::new();
+        let q = nl.dff(0, false);
+        let nq = nl.not(q);
+        nl.set_dff_input(q, nq);
+        let lv = nl.levelize();
+        assert_eq!(lv.level[q as usize], 0);
+        assert_eq!(lv.level[nq as usize], 1);
+        assert_eq!(lv.depth(), 1);
+    }
+
+    #[test]
+    fn levelize_empty_and_sequential_only() {
+        let nl = Netlist::new();
+        assert_eq!(nl.levelize().depth(), 0);
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let _ = nl.dff(a, false);
+        let lv = nl.levelize();
+        assert_eq!(lv.depth(), 0);
+        assert!(lv.order.is_empty());
     }
 
     #[test]

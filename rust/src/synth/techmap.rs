@@ -99,8 +99,11 @@ pub fn pack_luts(nl: &Netlist) -> Netlist {
             // plus child ins (deduped, order: remaining parent ins then
             // new child ins).
             let child_id = child as NetId;
-            let parent_ins = ins[id].clone();
-            let child_ins = ins[child].clone();
+            // Take both input lists instead of cloning: the parent's is
+            // replaced by `support` below, and the child is absorbed
+            // (never read again).
+            let parent_ins = std::mem::take(&mut ins[id]);
+            let child_ins = std::mem::take(&mut ins[child]);
             let mut support: Vec<NetId> =
                 parent_ins.iter().copied().filter(|&x| x != child_id).collect();
             for &ci in &child_ins {

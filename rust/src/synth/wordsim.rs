@@ -1,0 +1,631 @@
+//! Bit-parallel (64-wide) gate-level simulation.
+//!
+//! # Lane model
+//!
+//! [`WordSim`] advances **64 independent stimulus streams per machine
+//! word**: every net holds a `u64` whose bit *l* is the net's boolean
+//! value in lane *l*. One [`WordSim::step`] therefore simulates one clock
+//! cycle of 64 independent copies of the design at once — the classic
+//! compiled-code / emulation-engine trick that turns the power-analysis
+//! workload (long LFSR stimulus runs, see [`crate::power`]) from one
+//! boolean per net per cycle into one word op per net per cycle.
+//!
+//! Lanes never interact: lane *l* of every net evolves exactly as a
+//! scalar [`super::GateSim`] run would with lane *l*'s inputs. The scalar
+//! simulator is kept as the reference oracle; the differential test suite
+//! (`tests/wordsim_differential.rs`) asserts lane-by-lane identity of
+//! outputs and per-net toggle counts on the whole corpus.
+//!
+//! # LUT evaluation
+//!
+//! At pack time each LUT's truth table is expanded to 4 inputs and
+//! compiled into an 8-leaf Shannon mux tree over the input words: the two
+//! cofactor bits of each leaf collapse into per-leaf `sel`/`inv` masks
+//! (leaf = `(a & sel) ^ inv`, each mask all-ones or all-zero), and the
+//! remaining three variables are resolved with the branch-free word mux
+//! `x0 ^ (s & (x0 ^ x1))`. The hot loop is straight-line AND/XOR word
+//! ops — no per-bit truth-table indexing, no branches, no hash lookups.
+//!
+//! # Levelization
+//!
+//! The evaluation plan is grouped by the combinational levels computed by
+//! [`Netlist::levelize`] (validated topological order). Iterating dense
+//! per-level slices keeps the schedule correct under any future
+//! within-level reordering or parallel evaluation, and documents the
+//! data-dependence structure explicitly.
+//!
+//! # Toggle counting
+//!
+//! Toggles are counted word-parallel: `count_ones` of `old ^ new` updates
+//! the per-net counter for all 64 lanes at once, and the same XOR word is
+//! accumulated into per-lane totals through a 32-deep bit-plane
+//! carry-save counter (amortized ~2 word ops per toggled net), so one
+//! simulation pass yields 64 independent switching-activity estimates.
+
+use super::netlist::{NetId, Netlist, Node};
+use std::collections::HashMap;
+
+/// Number of independent simulation lanes per machine word.
+pub const LANES: usize = 64;
+
+/// Bit-planes of the per-lane toggle accumulator (counts up to 2³² − 1
+/// toggles per lane between flushes).
+const PLANES: usize = 32;
+
+/// One LUT in the packed word-parallel evaluation plan.
+#[derive(Clone, Copy)]
+struct PackedWordLut {
+    /// Output net index.
+    out: u32,
+    /// Input net indices (unused slots repeat input 0; the truth-table
+    /// expansion makes them don't-cares).
+    ins: [u32; 4],
+    /// Leaf-select mask: bit j set ⇒ leaf j depends on input 0.
+    sel: u8,
+    /// Leaf-invert mask: bit j set ⇒ leaf j is complemented.
+    inv: u8,
+}
+
+/// All-ones word if bit `i` of `byte` is set, else zero (branch-free).
+#[inline(always)]
+fn spread(byte: u8, i: u32) -> u64 {
+    0u64.wrapping_sub(u64::from((byte >> i) & 1))
+}
+
+/// Straight-line Shannon mux-tree evaluation of a packed LUT over four
+/// input words. ~30 word ops for 64 lanes.
+#[inline(always)]
+fn eval_lut(sel: u8, inv: u8, a: u64, b: u64, c: u64, d: u64) -> u64 {
+    let l0 = (a & spread(sel, 0)) ^ spread(inv, 0);
+    let l1 = (a & spread(sel, 1)) ^ spread(inv, 1);
+    let l2 = (a & spread(sel, 2)) ^ spread(inv, 2);
+    let l3 = (a & spread(sel, 3)) ^ spread(inv, 3);
+    let l4 = (a & spread(sel, 4)) ^ spread(inv, 4);
+    let l5 = (a & spread(sel, 5)) ^ spread(inv, 5);
+    let l6 = (a & spread(sel, 6)) ^ spread(inv, 6);
+    let l7 = (a & spread(sel, 7)) ^ spread(inv, 7);
+    let m0 = l0 ^ (b & (l0 ^ l1));
+    let m1 = l2 ^ (b & (l2 ^ l3));
+    let m2 = l4 ^ (b & (l4 ^ l5));
+    let m3 = l6 ^ (b & (l6 ^ l7));
+    let n0 = m0 ^ (c & (m0 ^ m1));
+    let n1 = m2 ^ (c & (m2 ^ m3));
+    n0 ^ (d & (n0 ^ n1))
+}
+
+/// Expand a truth table of the given arity to 4 inputs (index bits beyond
+/// the arity are don't-cares), then derive the 8 mux-tree leaf masks.
+fn compile_tt(tt: u16, arity: usize) -> (u8, u8) {
+    let mask = (1usize << arity) - 1;
+    let mut tt4 = 0u16;
+    for idx in 0..16usize {
+        if tt >> (idx & mask) & 1 == 1 {
+            tt4 |= 1 << idx;
+        }
+    }
+    let mut sel = 0u8;
+    let mut inv = 0u8;
+    for j in 0..8 {
+        let lo = tt4 >> (2 * j) & 1;
+        let hi = tt4 >> (2 * j + 1) & 1;
+        if lo ^ hi == 1 {
+            sel |= 1 << j;
+        }
+        if lo == 1 {
+            inv |= 1 << j;
+        }
+    }
+    (sel, inv)
+}
+
+/// 64-lane word-parallel simulation state for one netlist.
+pub struct WordSim<'n> {
+    nl: &'n Netlist,
+    /// Current value word of every net (bit l = lane l).
+    vals: Vec<u64>,
+    /// Per-net toggle counters, summed across lanes.
+    toggles: Vec<u64>,
+    /// Bit-plane carry-save accumulator of per-lane toggle totals.
+    lane_planes: [u64; PLANES],
+    /// Flushed per-lane toggle totals.
+    lane_flushed: [u64; LANES],
+    /// Accumulator adds since the last flush (overflow guard).
+    plane_adds: u64,
+    /// Optional exact per-net per-lane counters (`net * LANES + lane`),
+    /// for differential testing; costs one pass over set toggle bits.
+    lane_net_toggles: Option<Vec<u64>>,
+    /// Cycles executed.
+    cycles: u64,
+    /// Input bus name -> bit net ids.
+    bus: HashMap<String, Vec<NetId>>,
+    /// Packed combinational plan, grouped by level.
+    luts: Vec<PackedWordLut>,
+    /// Half-open ranges into `luts`, one per combinational level.
+    level_bounds: Vec<(u32, u32)>,
+    /// (dff net, d net) pairs.
+    dffs: Vec<(u32, u32)>,
+    /// Two-phase clock-edge scratch (sampled D words).
+    scratch: Vec<u64>,
+}
+
+impl<'n> WordSim<'n> {
+    /// Create a simulator with flip-flops at their init values in every
+    /// lane.
+    pub fn new(nl: &'n Netlist) -> WordSim<'n> {
+        let lv = nl.levelize();
+        let mut vals = vec![0u64; nl.len()];
+        let mut dffs = Vec::new();
+        for (id, node) in nl.nodes() {
+            match node {
+                Node::Const(true) => vals[id as usize] = !0,
+                Node::Dff { d, init } => {
+                    if *init {
+                        vals[id as usize] = !0;
+                    }
+                    dffs.push((id, *d));
+                }
+                _ => {}
+            }
+        }
+        let mut luts = Vec::with_capacity(lv.order.len());
+        let mut level_bounds = Vec::with_capacity(lv.bounds.len());
+        for level in 1..=lv.depth() {
+            let start = luts.len() as u32;
+            for &id in lv.level_luts(level) {
+                let Node::Lut { ins, tt } = nl.node(id) else {
+                    unreachable!("levelization order contains only LUTs")
+                };
+                let mut packed = [ins[0]; 4];
+                for (k, &i) in ins.iter().enumerate() {
+                    packed[k] = i;
+                }
+                let (sel, inv) = compile_tt(*tt, ins.len());
+                luts.push(PackedWordLut { out: id, ins: packed, sel, inv });
+            }
+            level_bounds.push((start, luts.len() as u32));
+        }
+        let bus = nl
+            .input_buses
+            .iter()
+            .map(|(n, b)| (n.clone(), b.clone()))
+            .collect();
+        let scratch = vec![0u64; dffs.len()];
+        WordSim {
+            nl,
+            vals,
+            toggles: vec![0; nl.len()],
+            lane_planes: [0; PLANES],
+            lane_flushed: [0; LANES],
+            plane_adds: 0,
+            lane_net_toggles: None,
+            cycles: 0,
+            bus,
+            luts,
+            level_bounds,
+            dffs,
+            scratch,
+        }
+    }
+
+    /// Enable exact per-net per-lane toggle tracking (slower; meant for
+    /// differential testing against the scalar oracle).
+    pub fn with_lane_net_toggles(mut self) -> WordSim<'n> {
+        self.lane_net_toggles = Some(vec![0u64; self.nl.len() * LANES]);
+        self
+    }
+
+    /// Record a toggle word `t` (bit l = lane l toggled) for net `idx`.
+    #[inline(always)]
+    fn bump(
+        toggles: &mut [u64],
+        lane_planes: &mut [u64; PLANES],
+        plane_adds: &mut u64,
+        lane_net_toggles: &mut Option<Vec<u64>>,
+        idx: usize,
+        t: u64,
+    ) {
+        toggles[idx] += u64::from(t.count_ones());
+        *plane_adds += 1;
+        let mut carry = t;
+        for p in lane_planes.iter_mut() {
+            if carry == 0 {
+                break;
+            }
+            let s = *p ^ carry;
+            carry &= *p;
+            *p = s;
+        }
+        debug_assert_eq!(carry, 0, "lane-toggle accumulator overflow");
+        if let Some(exact) = lane_net_toggles {
+            let mut rest = t;
+            while rest != 0 {
+                let lane = rest.trailing_zeros() as usize;
+                exact[idx * LANES + lane] += 1;
+                rest &= rest - 1;
+            }
+        }
+    }
+
+    /// Move the bit-plane accumulator into the flushed per-lane totals.
+    fn flush_lanes(&mut self) {
+        for (lane, total) in self.lane_flushed.iter_mut().enumerate() {
+            let mut acc = 0u64;
+            for (k, plane) in self.lane_planes.iter().enumerate() {
+                acc |= (plane >> lane & 1) << k;
+            }
+            *total += acc;
+        }
+        self.lane_planes = [0; PLANES];
+        self.plane_adds = 0;
+    }
+
+    /// Bind an input bus to 64 per-lane integer values (LSB-first, two's
+    /// complement truncation to the bus width). Values hold until
+    /// overwritten.
+    pub fn set_bus_lanes(&mut self, name: &str, values: &[i64; LANES]) {
+        let WordSim {
+            bus, vals, toggles, lane_planes, plane_adds, lane_net_toggles, ..
+        } = self;
+        let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
+        for (i, bit) in bits.iter().enumerate() {
+            let mut w = 0u64;
+            for (lane, v) in values.iter().enumerate() {
+                w |= ((*v >> i) as u64 & 1) << lane;
+            }
+            let idx = *bit as usize;
+            let t = vals[idx] ^ w;
+            if t != 0 {
+                Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
+                vals[idx] = w;
+            }
+        }
+    }
+
+    /// Bind an input bus to the same integer value in every lane.
+    pub fn set_bus(&mut self, name: &str, value: i64) {
+        self.set_bus_lanes(name, &[value; LANES]);
+    }
+
+    /// Bind a 1-bit input by bus name, one bit per lane.
+    pub fn set_bit_word(&mut self, name: &str, word: u64) {
+        let WordSim {
+            bus, vals, toggles, lane_planes, plane_adds, lane_net_toggles, ..
+        } = self;
+        let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
+        let idx = bits[0] as usize;
+        let t = vals[idx] ^ word;
+        if t != 0 {
+            Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
+            vals[idx] = word;
+        }
+    }
+
+    /// Bind a 1-bit input to the same value in every lane.
+    pub fn set_bit(&mut self, name: &str, value: bool) {
+        self.set_bit_word(name, if value { !0 } else { 0 });
+    }
+
+    /// Run one clock cycle for all 64 lanes: settle combinational logic
+    /// level by level, then clock DFFs.
+    pub fn step(&mut self) {
+        self.cycles += 1;
+        // Overflow guard: one step can add at most one count per net per
+        // lane (plus input rebinds between steps, bounded by net count).
+        if self.plane_adds + 2 * self.nl.len() as u64 >= u32::MAX as u64 {
+            self.flush_lanes();
+        }
+        let WordSim {
+            vals,
+            toggles,
+            lane_planes,
+            plane_adds,
+            lane_net_toggles,
+            luts,
+            level_bounds,
+            dffs,
+            scratch,
+            ..
+        } = self;
+        for &(s, e) in level_bounds.iter() {
+            for l in &luts[s as usize..e as usize] {
+                let a = vals[l.ins[0] as usize];
+                let b = vals[l.ins[1] as usize];
+                let c = vals[l.ins[2] as usize];
+                let d = vals[l.ins[3] as usize];
+                let new = eval_lut(l.sel, l.inv, a, b, c, d);
+                let idx = l.out as usize;
+                let t = vals[idx] ^ new;
+                if t != 0 {
+                    Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
+                    vals[idx] = new;
+                }
+            }
+        }
+        // Clock edge: sample every D first (a DFF may feed another DFF
+        // directly), then commit.
+        for (i, &(_, d)) in dffs.iter().enumerate() {
+            scratch[i] = vals[d as usize];
+        }
+        for (i, &(q, _)) in dffs.iter().enumerate() {
+            let idx = q as usize;
+            let t = vals[idx] ^ scratch[i];
+            if t != 0 {
+                Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
+                vals[idx] = scratch[i];
+            }
+        }
+    }
+
+    /// Synchronous reset: force all DFFs back to init in every lane
+    /// (mirrors [`super::GateSim::reset`]; does not count toggles).
+    pub fn reset(&mut self) {
+        for (id, node) in self.nl.nodes() {
+            if let Node::Dff { init, .. } = node {
+                self.vals[id as usize] = if *init { !0 } else { 0 };
+            }
+        }
+    }
+
+    /// Read an output bus in one lane as a sign-extended integer.
+    pub fn get_output_lane(&self, name: &str, lane: usize) -> i64 {
+        assert!(lane < LANES, "lane out of range");
+        let bits = self.output_bits(name);
+        let mut v: i64 = 0;
+        for (i, bit) in bits.iter().enumerate() {
+            if self.vals[*bit as usize] >> lane & 1 == 1 {
+                v |= 1 << i;
+            }
+        }
+        let w = bits.len();
+        if w < 64 && (v >> (w - 1)) & 1 == 1 {
+            v -= 1 << w;
+        }
+        v
+    }
+
+    /// Read an output bus in all lanes.
+    pub fn get_output_lanes(&self, name: &str) -> [i64; LANES] {
+        let mut out = [0i64; LANES];
+        for (lane, slot) in out.iter_mut().enumerate() {
+            *slot = self.get_output_lane(name, lane);
+        }
+        out
+    }
+
+    /// Read a single-bit output as a lane word (bit l = lane l).
+    pub fn get_bit_word(&self, name: &str) -> u64 {
+        let bits = self.output_bits(name);
+        self.vals[bits[0] as usize]
+    }
+
+    fn output_bits(&self, name: &str) -> &[NetId] {
+        let (_, bits) = self
+            .nl
+            .outputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("no output bus `{name}`"));
+        bits
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Per-net toggle counts, summed across all lanes.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    /// Total toggles across all nets and lanes.
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Total toggles per lane (across all nets).
+    pub fn lane_total_toggles(&mut self) -> [u64; LANES] {
+        self.flush_lanes();
+        self.lane_flushed
+    }
+
+    /// Per-lane mean toggles per net per cycle (64 independent switching
+    /// activity factors α from one simulation pass).
+    pub fn lane_mean_activity(&mut self) -> [f64; LANES] {
+        let totals = self.lane_total_toggles();
+        let denom = self.cycles as f64 * self.nl.len() as f64;
+        let mut out = [0f64; LANES];
+        if denom > 0.0 {
+            for (o, t) in out.iter_mut().zip(totals.iter()) {
+                *o = *t as f64 / denom;
+            }
+        }
+        out
+    }
+
+    /// Mean toggles per net per cycle per lane, averaged over lanes
+    /// (comparable to [`super::GateSim::mean_activity`]).
+    pub fn mean_activity(&self) -> f64 {
+        if self.cycles == 0 || self.nl.is_empty() {
+            return 0.0;
+        }
+        self.total_toggles() as f64
+            / (self.cycles as f64 * self.nl.len() as f64 * LANES as f64)
+    }
+
+    /// Exact per-net toggle counts for one lane (requires
+    /// [`WordSim::with_lane_net_toggles`]).
+    pub fn lane_net_toggles(&self, lane: usize) -> Vec<u64> {
+        assert!(lane < LANES, "lane out of range");
+        let exact = self
+            .lane_net_toggles
+            .as_ref()
+            .expect("enable with_lane_net_toggles() first");
+        (0..self.nl.len()).map(|net| exact[net * LANES + lane]).collect()
+    }
+
+    /// Combinational depth of the packed plan (levels iterated per step).
+    pub fn depth(&self) -> u32 {
+        self.level_bounds.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::gatesim::GateSim;
+    use crate::synth::netlist::Netlist;
+
+    /// 4-bit counter netlist (same as the scalar GateSim test).
+    fn counter() -> Netlist {
+        let mut nl = Netlist::new();
+        let q: Vec<NetId> = (0..4).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q);
+        nl
+    }
+
+    #[test]
+    fn counter_counts_in_every_lane() {
+        let nl = counter();
+        let mut sim = WordSim::new(&nl);
+        for expect in 1..=20i64 {
+            sim.step();
+            let lanes = sim.get_output_lanes("q");
+            for (lane, v) in lanes.iter().enumerate() {
+                assert_eq!(v & 0xF, expect & 0xF, "lane {lane} cycle {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let y: Vec<NetId> = a.iter().zip(&b).map(|(&x, &y)| nl.and2(x, y)).collect();
+        nl.add_output("y", y);
+        let mut sim = WordSim::new(&nl);
+        let mut av = [0i64; LANES];
+        let mut bv = [0i64; LANES];
+        for lane in 0..LANES {
+            av[lane] = (lane as i64) & 0xF;
+            bv[lane] = ((lane as i64) >> 2) & 0xF;
+        }
+        sim.set_bus_lanes("a", &av);
+        sim.set_bus_lanes("b", &bv);
+        sim.step();
+        let got = sim.get_output_lanes("y");
+        for lane in 0..LANES {
+            assert_eq!(got[lane] & 0xF, av[lane] & bv[lane], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn broadcast_matches_scalar_oracle() {
+        let nl = counter();
+        let mut word = WordSim::new(&nl);
+        let mut scalar = GateSim::new(&nl);
+        for _ in 0..50 {
+            word.step();
+            scalar.step();
+            assert_eq!(word.get_output_lane("q", 0), scalar.get_output("q"));
+            assert_eq!(word.get_output_lane("q", 63), scalar.get_output("q"));
+        }
+        // Broadcast lanes toggle identically, so per-net totals are 64×.
+        for (net, &t) in scalar.toggles().iter().enumerate() {
+            assert_eq!(word.toggles()[net], t * LANES as u64, "net {net}");
+        }
+        let lanes = word.lane_total_toggles();
+        for (lane, &t) in lanes.iter().enumerate() {
+            assert_eq!(t, scalar.total_toggles(), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn sign_extension_per_lane() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        nl.add_output("y", a);
+        let mut sim = WordSim::new(&nl);
+        let mut av = [0i64; LANES];
+        av[3] = -3;
+        av[17] = 5;
+        sim.set_bus_lanes("a", &av);
+        sim.step();
+        assert_eq!(sim.get_output_lane("y", 3), -3);
+        assert_eq!(sim.get_output_lane("y", 17), 5);
+        assert_eq!(sim.get_output_lane("y", 0), 0);
+    }
+
+    #[test]
+    fn exact_lane_net_toggles_match_aggregates() {
+        let nl = counter();
+        let mut sim = WordSim::new(&nl).with_lane_net_toggles();
+        for _ in 0..37 {
+            sim.step();
+        }
+        // Sum of exact per-lane counts equals the word-parallel per-net
+        // counters, for every net.
+        for net in 0..nl.len() {
+            let sum: u64 = (0..LANES).map(|l| sim.lane_net_toggles(l)[net]).sum();
+            assert_eq!(sum, sim.toggles()[net], "net {net}");
+        }
+        // And per-lane totals agree with the bit-plane accumulator.
+        let plane_totals = sim.lane_total_toggles();
+        for lane in 0..LANES {
+            let exact: u64 = sim.lane_net_toggles(lane).iter().sum();
+            assert_eq!(exact, plane_totals[lane], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn reset_restores_init_all_lanes() {
+        let mut nl = Netlist::new();
+        let one = nl.constant(true);
+        let d = nl.dff(one, false);
+        nl.add_output("q", vec![d]);
+        let mut sim = WordSim::new(&nl);
+        sim.step();
+        assert_eq!(sim.get_bit_word("q"), !0);
+        sim.reset();
+        assert_eq!(sim.get_bit_word("q"), 0);
+    }
+
+    #[test]
+    fn mux_tree_matches_truth_table_indexing() {
+        // Exhaustive over arities and random truth tables: the compiled
+        // sel/inv plan equals per-bit truth-table lookup.
+        let mut rng = crate::stim::Lfsr32::new(0x7AB1E);
+        for _ in 0..500 {
+            let arity = 1 + rng.below(4);
+            let tt = (rng.next_u32() & 0xFFFF) as u16;
+            let (sel, inv) = compile_tt(tt, arity);
+            let words: Vec<u64> = (0..4)
+                .map(|_| (rng.next_u32() as u64) << 32 | rng.next_u32() as u64)
+                .collect();
+            let mut ins = [words[0]; 4];
+            for (k, slot) in ins.iter_mut().enumerate().take(arity) {
+                *slot = words[k];
+            }
+            let got = eval_lut(sel, inv, ins[0], ins[1], ins[2], ins[3]);
+            let mask = (1usize << arity) - 1;
+            for lane in 0..LANES {
+                let mut idx = 0usize;
+                for (k, w) in words.iter().enumerate().take(arity) {
+                    idx |= ((w >> lane & 1) as usize) << k;
+                }
+                let want = tt >> (idx & mask) & 1 == 1;
+                assert_eq!(got >> lane & 1 == 1, want, "arity {arity} tt {tt:#x} lane {lane}");
+            }
+        }
+    }
+}

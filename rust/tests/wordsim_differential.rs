@@ -1,0 +1,176 @@
+//! Differential validation of the bit-parallel 64-lane gate-level engine
+//! ([`dimsynth::synth::WordSim`]) against the scalar reference oracle
+//! ([`dimsynth::synth::GateSim`]).
+//!
+//! For every corpus design, one word-parallel run carrying 64 independent
+//! LFSR stimulus streams (≥10k simulated cycles) is replayed lane by lane
+//! through the scalar simulator, asserting bit-identical per-activation
+//! outputs, cycle counts, and exact per-net toggle counts for each lane.
+
+use dimsynth::fixedpoint::Q16_15;
+use dimsynth::newton::corpus;
+use dimsynth::pisearch::analyze_optimized;
+use dimsynth::rtl::ir;
+use dimsynth::stim::{Lfsr32, LfsrBank64};
+use dimsynth::synth::{self, GateSim, WordSim, LANES};
+
+/// Minimum simulated cycles per design (per lane).
+const MIN_CYCLES: u64 = 10_000;
+
+#[test]
+fn word_engine_matches_scalar_oracle_lane_by_lane() {
+    for e in corpus::corpus() {
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let design = ir::build(&a, Q16_15);
+        let mapped = synth::map_design(&design);
+        let nl = &mapped.netlist;
+        let q = design.q;
+        let seeds = LfsrBank64::lane_seeds(0xD1FF);
+
+        // One word-parallel run: 64 lanes of power-analysis stimulus,
+        // recording every activation's outputs for lane-by-lane replay.
+        let mut word = WordSim::new(nl).with_lane_net_toggles();
+        let mut lfsrs: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+        let mut word_outputs: Vec<Vec<[i64; LANES]>> = Vec::new();
+        while word.cycles() < MIN_CYCLES {
+            for p in &design.ports {
+                let mut vals = [0i64; LANES];
+                for (v, l) in vals.iter_mut().zip(lfsrs.iter_mut()) {
+                    *v = q.from_f64(l.range(0.25, 12.0));
+                }
+                word.set_bus_lanes(&format!("in_{}", p.name), &vals);
+            }
+            word.set_bus("start", 1);
+            word.step();
+            word.set_bus("start", 0);
+            let mut guard = 0u32;
+            loop {
+                let done = word.get_bit_word("done");
+                if done == u64::MAX {
+                    break;
+                }
+                assert_eq!(done, 0, "{}: lanes diverged on `done`", e.id);
+                word.step();
+                guard += 1;
+                assert!(guard < 5_000, "{}: activation did not finish", e.id);
+            }
+            let outs: Vec<[i64; LANES]> = (0..design.num_outputs())
+                .map(|u| word.get_output_lanes(&format!("pi_{u}")))
+                .collect();
+            word_outputs.push(outs);
+        }
+        let activations = word_outputs.len();
+
+        // 64 scalar oracle runs, one per lane, with the identical
+        // per-lane stimulus stream.
+        for lane in 0..LANES {
+            let mut scalar = GateSim::new(nl);
+            let mut lfsr = Lfsr32::new(seeds[lane]);
+            for (act, outs) in word_outputs.iter().enumerate() {
+                for p in &design.ports {
+                    let v = q.from_f64(lfsr.range(0.25, 12.0));
+                    scalar.set_bus(&format!("in_{}", p.name), v);
+                }
+                scalar.set_bus("start", 1);
+                scalar.step();
+                scalar.set_bus("start", 0);
+                while !scalar.get_bit("done") {
+                    scalar.step();
+                }
+                for (u, lanes) in outs.iter().enumerate() {
+                    assert_eq!(
+                        lanes[lane],
+                        scalar.get_output(&format!("pi_{u}")),
+                        "{}: lane {lane} activation {act} output pi_{u}",
+                        e.id
+                    );
+                }
+            }
+            assert_eq!(
+                scalar.cycles(),
+                word.cycles(),
+                "{}: lane {lane} cycle count",
+                e.id
+            );
+            assert_eq!(
+                word.lane_net_toggles(lane).as_slice(),
+                scalar.toggles(),
+                "{}: lane {lane} per-net toggle counts",
+                e.id
+            );
+        }
+        assert!(
+            word.cycles() >= MIN_CYCLES,
+            "{}: only {} cycles simulated",
+            e.id,
+            word.cycles()
+        );
+        eprintln!(
+            "{}: {} activations, {} cycles x {LANES} lanes, {} nets: lane-exact",
+            e.id,
+            activations,
+            word.cycles(),
+            nl.len()
+        );
+    }
+}
+
+#[test]
+fn word_engine_aggregates_match_scalar_sums() {
+    // Cross-check the word-parallel aggregate counters (popcount per-net
+    // totals and the bit-plane per-lane totals) against scalar sums on
+    // one design — these are the counters the power model consumes.
+    let e = corpus::by_id("pendulum").unwrap();
+    let m = corpus::load_entry(&e).unwrap();
+    let a = analyze_optimized(&m, e.target).unwrap();
+    let design = ir::build(&a, Q16_15);
+    let mapped = synth::map_design(&design);
+    let seeds = LfsrBank64::lane_seeds(0xA66A);
+
+    let mut word = WordSim::new(&mapped.netlist);
+    let mut lfsrs: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+    for _ in 0..3 {
+        for p in &design.ports {
+            let mut vals = [0i64; LANES];
+            for (v, l) in vals.iter_mut().zip(lfsrs.iter_mut()) {
+                *v = q_from(l);
+            }
+            word.set_bus_lanes(&format!("in_{}", p.name), &vals);
+        }
+        word.set_bus("start", 1);
+        word.step();
+        word.set_bus("start", 0);
+        while word.get_bit_word("done") != u64::MAX {
+            word.step();
+        }
+    }
+
+    let mut per_net_sum = vec![0u64; mapped.netlist.len()];
+    let mut lane_totals = [0u64; LANES];
+    for lane in 0..LANES {
+        let mut scalar = GateSim::new(&mapped.netlist);
+        let mut lfsr = Lfsr32::new(seeds[lane]);
+        for _ in 0..3 {
+            for p in &design.ports {
+                scalar.set_bus(&format!("in_{}", p.name), q_from(&mut lfsr));
+            }
+            scalar.set_bus("start", 1);
+            scalar.step();
+            scalar.set_bus("start", 0);
+            while !scalar.get_bit("done") {
+                scalar.step();
+            }
+        }
+        for (net, &t) in scalar.toggles().iter().enumerate() {
+            per_net_sum[net] += t;
+        }
+        lane_totals[lane] = scalar.total_toggles();
+    }
+    assert_eq!(word.toggles(), per_net_sum.as_slice());
+    assert_eq!(word.lane_total_toggles(), lane_totals);
+}
+
+fn q_from(lfsr: &mut Lfsr32) -> i64 {
+    Q16_15.from_f64(lfsr.range(0.25, 12.0))
+}

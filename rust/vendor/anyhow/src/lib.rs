@@ -1,0 +1,97 @@
+//! Minimal in-tree shim of the `anyhow` error-handling API.
+//!
+//! Provides exactly the subset this repository uses — [`Result`],
+//! [`Error`], [`anyhow!`], [`bail!`], and a blanket `From` for standard
+//! error types — with no external dependencies. The real crate is a
+//! drop-in replacement (see `rust/vendor/README.md`).
+
+use std::fmt;
+
+/// A string-backed error value (the shim drops `anyhow`'s source chain;
+/// the chain is flattened into the message at conversion time).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Flatten a standard error (and its source chain) into an [`Error`].
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn display_and_debug_are_the_message() {
+        let e = crate::anyhow!("thing {} failed", 7);
+        assert_eq!(e.to_string(), "thing 7 failed");
+        assert_eq!(format!("{e:?}"), "thing 7 failed");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> crate::Result<u32> {
+            if flag {
+                crate::bail!("flagged: {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged: true");
+    }
+}

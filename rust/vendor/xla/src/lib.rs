@@ -1,0 +1,213 @@
+//! In-tree stub of the PJRT/XLA binding surface used by
+//! [`dimsynth`](../../../src/lib.rs)'s runtime engine.
+//!
+//! The build environment has no native XLA runtime, so this crate keeps
+//! the *API* compilable while making the capability boundary explicit:
+//!
+//! * [`Literal`] construction, reshape and readback are real (pure
+//!   host-side buffers) — the conversion helpers and their tests work.
+//! * [`PjRtClient::cpu`] succeeds, so artifact-presence checks and
+//!   missing-artifact error paths behave exactly as with the real
+//!   binding.
+//! * Parsing or *executing* an HLO artifact returns [`Error`] with a
+//!   clear "stub build" message. All artifact-dependent tests gate on
+//!   `artifacts/manifest.txt` and skip cleanly.
+//!
+//! Swap the `xla` path dependency in the root `Cargo.toml` for a real
+//! XLA binding crate to enable the PJRT runtime.
+
+/// Error type mirroring the binding crate's (printable via `{:?}`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    pub msg: String,
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err(what: &str) -> Error {
+    Error { msg: format!("{what}: XLA runtime not available in this build (vendored stub — see rust/vendor/README.md)") }
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Typed host-side buffer backing a [`Literal`].
+#[derive(Debug, Clone)]
+enum Buf {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: a typed buffer plus a shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    buf: Buf,
+    dims: Vec<i64>,
+}
+
+/// Element types [`Literal`] can store in this stub.
+pub trait NativeType: Copy + Sized {
+    fn wrap(vals: Vec<Self>) -> Buf;
+    fn unwrap(buf: &Buf) -> Option<Vec<Self>>;
+}
+
+impl NativeType for i32 {
+    fn wrap(vals: Vec<i32>) -> Buf {
+        Buf::I32(vals)
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<i32>> {
+        match buf {
+            Buf::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(vals: Vec<f32>) -> Buf {
+        Buf::F32(vals)
+    }
+    fn unwrap(buf: &Buf) -> Option<Vec<f32>> {
+        match buf {
+            Buf::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        Literal { dims: vec![vals.len() as i64], buf: T::wrap(vals.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(val: T) -> Literal {
+        Literal { dims: vec![], buf: T::wrap(vec![val]) }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = match &self.buf {
+            Buf::I32(v) => v.len(),
+            Buf::F32(v) => v.len(),
+            Buf::Tuple(_) => {
+                return Err(Error { msg: "reshape of tuple literal".into() })
+            }
+        };
+        if n as usize != have {
+            return Err(Error { msg: format!("reshape: {have} elements into {dims:?}") });
+        }
+        Ok(Literal { buf: self.buf.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read the buffer back as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.buf).ok_or_else(|| Error { msg: "to_vec: element type mismatch".into() })
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.buf {
+            Buf::Tuple(elems) => Ok(elems),
+            _ => Ok(vec![self]),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err("HLO parse"))
+    }
+}
+
+/// Computation wrapper (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("buffer readback"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("execute"))
+    }
+}
+
+/// PJRT client. Creation succeeds (host metadata only); compilation is
+/// where the stub reports the missing runtime.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1.0f32, 2.0]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn client_creates_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
