@@ -11,13 +11,10 @@
 //! ```
 
 use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
-use dimsynth::fixedpoint::Q16_15;
-use dimsynth::newton::corpus;
-use dimsynth::pisearch::analyze_optimized;
+use dimsynth::flow::{FlowConfig, FlowSet};
 use dimsynth::power;
-use dimsynth::rtl::ir;
 use dimsynth::stim::LfsrBank64;
-use dimsynth::synth::{self, LANES};
+use dimsynth::synth::LANES;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -26,22 +23,23 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(500);
 
-    // Largest corpus netlist = the throughput-critical case.
-    let mut largest: Option<(String, ir::PiModuleDesign, synth::MappedDesign)> = None;
-    for e in corpus::corpus() {
-        let m = corpus::load_entry(&e)?;
-        let a = analyze_optimized(&m, e.target)?;
-        let d = ir::build(&a, Q16_15);
-        let mapped = synth::map_design(&d);
-        let bigger = match &largest {
-            None => true,
-            Some((_, _, big)) => mapped.netlist.len() > big.netlist.len(),
-        };
-        if bigger {
-            largest = Some((e.id.to_string(), d, mapped));
-        }
-    }
-    let (id, design, mapped) = largest.expect("corpus is non-empty");
+    // Largest corpus netlist = the throughput-critical case. The whole
+    // corpus synthesizes in parallel through the FlowSet driver.
+    let mut flows = FlowSet::corpus(FlowConfig::default());
+    let sizes: Vec<usize> = flows
+        .run_parallel(|f| f.netlist().map(|m| m.netlist.len()))
+        .into_iter()
+        .collect::<anyhow::Result<_>>()?;
+    let biggest = sizes
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &n)| n)
+        .map(|(i, _)| i)
+        .expect("corpus is non-empty");
+    let flow = &mut flows.flows_mut()[biggest];
+    let id = flow.id().to_string();
+    let design = flow.rtl()?.clone();
+    let mapped = flow.netlist()?;
     let nets = mapped.netlist.len();
     section(&format!(
         "gate-level sim throughput — {id} ({nets} nets, {} LUTs, {} DFFs, {activations} activations)",

@@ -1,6 +1,7 @@
 //! Bench L1 (DESIGN.md §4): the latency column and the real-time claim —
 //! cycle counts per system (analytic vs simulated), achievable sample
-//! rates at 6/12 MHz, and RTL-simulation wall-time per sample.
+//! rates at 6/12 MHz, and RTL-simulation wall-time per sample. The
+//! corpus compiles through one [`FlowSet`] across all cores.
 //!
 //! ```text
 //! cargo bench --bench latency
@@ -8,9 +9,8 @@
 
 use dimsynth::bench_util::{bench_auto, section};
 use dimsynth::fixedpoint::Q16_15;
-use dimsynth::newton::{corpus, load_entry};
-use dimsynth::pisearch::analyze_optimized;
-use dimsynth::rtl::{self, Policy};
+use dimsynth::flow::{FlowConfig, FlowSet};
+use dimsynth::rtl;
 use dimsynth::stim::Lfsr32;
 use std::time::Duration;
 
@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         "system", "analytic", "sim", "rate@6MHz", "rate@12MHz", "paper"
     );
     let paper = [
-        ("beam", 115),
+        ("beam", 115u64),
         ("pendulum", 115),
         ("fluid_pipe", 188),
         ("unpowered_flight", 81),
@@ -29,35 +29,37 @@ fn main() -> anyhow::Result<()> {
         ("warm_vibrating_string", 269),
         ("spring_mass", 115),
     ];
-    for e in corpus() {
-        let model = load_entry(&e)?;
-        let analysis = analyze_optimized(&model, e.target)?;
-        let design = rtl::build(&analysis, Q16_15);
-        let analytic = rtl::module_latency(&design, Policy::ParallelPerPi);
+    let mut flows = FlowSet::corpus(FlowConfig::default());
+    let rows: Vec<anyhow::Result<(String, u64, u64)>> = flows.run_parallel(|f| {
+        let analytic = f.latency()?;
+        let design = f.rtl()?;
         let inputs = vec![Q16_15.one(); design.num_inputs()];
-        let sim = rtl::run_once(&design, &inputs);
-        assert_eq!(analytic, sim.cycles, "{}: sim/schedule divergence", e.id);
-        let p = paper.iter().find(|(id, _)| *id == e.id).map(|(_, c)| *c).unwrap();
+        let sim = rtl::run_once(design, &inputs);
+        Ok((f.id().to_string(), analytic, sim.cycles))
+    });
+    for row in rows {
+        let (id, analytic, sim_cycles) = row?;
+        assert_eq!(analytic, sim_cycles, "{id}: sim/schedule divergence");
+        let p = paper.iter().find(|(pid, _)| *pid == id).map(|(_, c)| *c).unwrap();
         println!(
             "{:<24} {:>8} {:>8} {:>12.0} {:>12.0} {:>10}",
-            e.id,
+            id,
             analytic,
-            sim.cycles,
+            sim_cycles,
             6.0e6 / analytic as f64,
             12.0e6 / analytic as f64,
             p
         );
-        assert!(analytic < 300, "{}: >300 cycles", e.id);
+        assert!(analytic < 300, "{id}: >300 cycles");
     }
 
     section("RTL-simulation wall time per sample (cycle-accurate model)");
     let budget = Duration::from_millis(400);
-    for e in corpus() {
-        let model = load_entry(&e)?;
-        let analysis = analyze_optimized(&model, e.target)?;
-        let design = rtl::build(&analysis, Q16_15);
+    for f in flows.flows_mut() {
+        let id = f.id().to_string();
+        let design = f.rtl()?.clone();
         let mut rng = Lfsr32::new(0xA5);
-        let r = bench_auto(&format!("rtl-sim {}", e.id), budget, || {
+        let r = bench_auto(&format!("rtl-sim {id}"), budget, || {
             let inputs: Vec<i64> = (0..design.num_inputs())
                 .map(|_| Q16_15.from_f64(rng.range(0.25, 8.0)))
                 .collect();

@@ -11,8 +11,8 @@
 
 use dimsynth::bench_util::{bench_auto, section};
 use dimsynth::fixedpoint::{self, Q16_15};
-use dimsynth::newton::by_id;
-use dimsynth::report::export::export_system;
+use dimsynth::flow::{Flow, FlowConfig};
+use dimsynth::report::export::export_from_flow;
 use dimsynth::rtl;
 use dimsynth::runtime::{engine, Engine};
 use dimsynth::stim::Lfsr32;
@@ -25,11 +25,10 @@ fn main() -> anyhow::Result<()> {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(2);
     }
-    let export = export_system(SYSTEM, Q16_15)?;
-    let e = by_id(SYSTEM).unwrap();
-    let model = dimsynth::newton::load_entry(&e)?;
-    let analysis = dimsynth::pisearch::analyze_optimized(&model, e.target)?;
-    let design = rtl::build(&analysis, Q16_15);
+    let mut flow = Flow::for_system(SYSTEM, FlowConfig::default())?;
+    let export = export_from_flow(&mut flow)?;
+    let design = flow.rtl()?.clone();
+    let cycles = flow.latency()?;
     let kp = export.ports.len();
 
     let mut rng = Lfsr32::new(0xF00D);
@@ -66,7 +65,6 @@ fn main() -> anyhow::Result<()> {
     let r = bench_auto("rtl cycle-accurate sim (1 sample)", budget, || {
         std::hint::black_box(rtl::run_once(&design, &batch[0]));
     });
-    let cycles = rtl::module_latency(&design, rtl::Policy::ParallelPerPi);
     println!(
         "{r}   → {:.1} ksamples/s ({:.1} Mcycles/s simulated)",
         r.per_sec() / 1e3,
@@ -74,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     section("gate-level sim (power-analysis path)");
-    let mapped = dimsynth::synth::map_design(&design);
+    let mapped = flow.netlist()?;
     let r = bench_auto("scalar GateSim (1 activation)", Duration::from_millis(800), || {
         let mut sim = dimsynth::synth::GateSim::new(&mapped.netlist);
         for (p, v) in design.ports.iter().zip(&batch[0]) {

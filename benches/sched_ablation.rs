@@ -4,18 +4,18 @@
 //! within each product. This ablation compares it against a fully serial
 //! schedule (one shared datapath) on latency, and quantifies the area
 //! cost of the parallel choice, plus the effect of the cost-directed
-//! basis optimization (pisearch::reduce) on latency.
+//! basis optimization (pisearch::reduce) on latency. Both ablation axes
+//! are [`FlowConfig`] knobs — `policy` and `optimize_basis` — so each
+//! comparison is two queries against sessions differing in one knob.
 //!
 //! ```text
 //! cargo bench --bench sched_ablation
 //! ```
 
 use dimsynth::bench_util::section;
-use dimsynth::fixedpoint::Q16_15;
-use dimsynth::newton::{corpus, load_entry};
-use dimsynth::pisearch::{self, CostModel};
-use dimsynth::rtl::{self, Policy};
-use dimsynth::synth;
+use dimsynth::flow::{Flow, FlowConfig};
+use dimsynth::newton::corpus;
+use dimsynth::rtl::Policy;
 
 fn main() -> anyhow::Result<()> {
     section("scheduling policy: parallel-per-Π (paper) vs fully-serial");
@@ -24,16 +24,16 @@ fn main() -> anyhow::Result<()> {
         "system", "N", "par cycles", "ser cycles", "ser/par", "par cells"
     );
     for e in corpus() {
-        let model = load_entry(&e)?;
-        let analysis = pisearch::analyze_optimized(&model, e.target)?;
-        let design = rtl::build(&analysis, Q16_15);
-        let par = rtl::module_latency(&design, Policy::ParallelPerPi);
-        let ser = rtl::module_latency(&design, Policy::FullySerial);
-        let cells = synth::map_design(&design).lut4_cells;
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        let n = flow.pis()?.n();
+        let par = flow.latency()?;
+        flow.set_policy(Policy::FullySerial);
+        let ser = flow.latency()?;
+        let cells = flow.netlist()?.lut4_cells;
         println!(
             "{:<24} {:>4} {:>12} {:>12} {:>10.2} {:>12}",
             e.id,
-            analysis.n(),
+            n,
             par,
             ser,
             ser as f64 / par as f64,
@@ -48,14 +48,13 @@ fn main() -> anyhow::Result<()> {
         "system", "raw cycles", "optimized", "gain"
     );
     for e in corpus() {
-        let model = load_entry(&e)?;
-        let raw = pisearch::analyze(&model, e.target)?;
-        let mut opt = raw.clone();
-        pisearch::optimize(&mut opt, &CostModel::default());
-        let d_raw = rtl::build(&raw, Q16_15);
-        let d_opt = rtl::build(&opt, Q16_15);
-        let l_raw = rtl::module_latency(&d_raw, Policy::ParallelPerPi);
-        let l_opt = rtl::module_latency(&d_opt, Policy::ParallelPerPi);
+        let mut raw = Flow::for_entry(
+            e.clone(),
+            FlowConfig { optimize_basis: false, ..FlowConfig::default() },
+        );
+        let mut opt = Flow::for_entry(e.clone(), FlowConfig::default());
+        let l_raw = raw.latency()?;
+        let l_opt = opt.latency()?;
         println!(
             "{:<24} {:>14} {:>14} {:>9.0}%",
             e.id,

@@ -7,11 +7,9 @@
 
 use dimsynth::bench_util::{bench_auto, section};
 use dimsynth::fixedpoint::Q16_15;
-use dimsynth::newton::{corpus, load_entry};
-use dimsynth::pisearch::analyze_optimized;
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::report;
 use dimsynth::rtl;
-use dimsynth::synth;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
@@ -60,23 +58,28 @@ fn main() -> anyhow::Result<()> {
     assert!(all, "Table-1 shape checks failed");
 
     section("flow-stage timings (pendulum)");
-    let e = corpus().into_iter().find(|e| e.id == "pendulum").unwrap();
+    // A warm session provides each stage's input artifact; the timed
+    // closures then run exactly one stage's compute kernel, so the
+    // figures are per-stage costs, not cumulative pipeline costs.
     let budget = Duration::from_millis(300);
-    let model = load_entry(&e)?;
+    let mut warm = Flow::for_system("pendulum", FlowConfig::default())?;
+    let model = warm.parsed()?.clone();
+    let target = warm.target().to_string();
+    let analysis = warm.pis()?.clone();
+    let design = warm.rtl()?.clone();
     println!("{}", bench_auto("frontend: parse+sema", budget, || {
-        let _ = load_entry(&e).unwrap();
+        let mut f = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+        let _ = f.parsed().unwrap();
     }));
-    let analysis = analyze_optimized(&model, e.target)?;
     println!("{}", bench_auto("pisearch: nullspace+optimize", budget, || {
-        let _ = analyze_optimized(&model, e.target).unwrap();
+        let _ = dimsynth::pisearch::analyze_optimized(&model, &target).unwrap();
     }));
-    let design = rtl::build(&analysis, Q16_15);
     println!("{}", bench_auto("rtl: build+emit verilog", budget, || {
         let d = rtl::build(&analysis, Q16_15);
         let _ = rtl::verilog::emit(&d);
     }));
     println!("{}", bench_auto("synth: lower+opt+techmap", budget, || {
-        let _ = synth::map_design(&design);
+        let _ = dimsynth::synth::map_design(&design);
     }));
     Ok(())
 }

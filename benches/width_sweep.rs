@@ -13,12 +13,8 @@
 
 use dimsynth::bench_util::section;
 use dimsynth::fixedpoint::{self, QFormat};
-use dimsynth::newton::{by_id, load_entry};
-use dimsynth::pisearch::analyze_optimized;
-use dimsynth::rtl::{self, Policy};
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::stim::{self, Lfsr32};
-use dimsynth::synth;
-use dimsynth::timing::{self, ICE40_LP};
 
 const FORMATS: [(u32, u32); 5] = [(8, 7), (12, 11), (16, 15), (20, 19), (24, 23)];
 
@@ -29,16 +25,17 @@ fn main() -> anyhow::Result<()> {
             "{:<8} {:>7} {:>9} {:>9} {:>9} {:>12} {:>14}",
             "format", "width", "cells", "Fmax", "latency", "rel err", "range ok %"
         );
-        let e = by_id(sys).unwrap();
-        let model = load_entry(&e)?;
-        let analysis = analyze_optimized(&model, e.target)?;
+        // One session per system: the sweep only invalidates RTL and
+        // downstream; parse and Π-search run once for all five formats.
+        let mut flow = Flow::for_system(sys, FlowConfig::default())?;
         let mut prev_err = f64::INFINITY;
         for (i, f) in FORMATS {
             let q = QFormat::new(i, f);
-            let design = rtl::build(&analysis, q);
-            let mapped = synth::map_design(&design);
-            let t = timing::analyze(&mapped.netlist, &ICE40_LP);
-            let lat = rtl::module_latency(&design, Policy::ParallelPerPi);
+            flow.set_qformat(q);
+            let cells = flow.netlist()?.lut4_cells;
+            let t = flow.timing()?;
+            let lat = flow.latency()?;
+            let design = flow.rtl()?;
 
             // Π accuracy vs f64 on physical traces.
             let mut rng = Lfsr32::new(0xFACE);
@@ -78,7 +75,7 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "Q{i}.{f:<4} {:>7} {:>9} {:>8.2}M {:>9} {:>12.2e} {:>13.0}%",
                 q.width(),
-                mapped.lut4_cells,
+                cells,
                 t.fmax_mhz,
                 lat,
                 rel,

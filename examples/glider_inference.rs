@@ -17,11 +17,13 @@
 
 use dimsynth::coordinator::{InferenceServer, PiPath, SensorInput, ServerConfig};
 use dimsynth::fixedpoint::Q16_15;
+use dimsynth::flow::{Flow, FlowConfig};
+use dimsynth::report::export::export_from_flow;
+use dimsynth::rtl;
 use dimsynth::runtime::engine;
 use dimsynth::runtime::Engine;
 use dimsynth::stim::{self, Lfsr32};
 use dimsynth::train::{self, FeatureKind};
-use dimsynth::{newton, pisearch, rtl};
 use std::time::Duration;
 
 const SYSTEM: &str = "unpowered_flight";
@@ -29,11 +31,9 @@ const ARTIFACTS: &str = "artifacts";
 
 fn main() -> anyhow::Result<()> {
     // ── 1. three bit-identical Π paths ─────────────────────────────────
-    let entry = newton::by_id(SYSTEM).unwrap();
-    let model = newton::load_entry(&entry)?;
-    let analysis = pisearch::analyze_optimized(&model, entry.target)?;
-    let design = rtl::build(&analysis, Q16_15);
-    let export = dimsynth::report::export::export_system(SYSTEM, Q16_15)?;
+    let mut flow = Flow::for_system(SYSTEM, FlowConfig::default())?;
+    let export = export_from_flow(&mut flow)?;
+    let design = flow.rtl()?.clone();
 
     let mut eng = Engine::new(ARTIFACTS)?;
     println!("PJRT platform: {}", eng.platform());

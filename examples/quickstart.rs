@@ -12,13 +12,10 @@
 //! design in the cycle-accurate simulator on a quantized observation.
 
 use dimsynth::fixedpoint::{self, Q16_15};
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::newton;
-use dimsynth::pisearch;
-use dimsynth::power;
-use dimsynth::rtl::{self, Policy};
+use dimsynth::rtl;
 use dimsynth::stim::{self, Lfsr32};
-use dimsynth::synth;
-use dimsynth::timing;
 
 fn main() -> anyhow::Result<()> {
     // ── Step 1: the physical-system description ────────────────────────
@@ -26,34 +23,34 @@ fn main() -> anyhow::Result<()> {
     println!("── Newton specification ({}) ──", entry.display_name);
     println!("{}", entry.source.trim());
 
-    let model = newton::load_entry(&entry)?;
+    // One compilation session drives every stage below; each stage
+    // computes on first demand and is memoized.
+    let mut flow = Flow::for_entry(entry.clone(), FlowConfig::default());
+
+    let model = flow.parsed()?.clone();
     println!("\nresolved {} symbols:", model.k());
     for s in &model.symbols {
         println!("  {:<10} : {:<12} [{}]", s.name, s.dimension.si_unit(), s.dimension);
     }
 
     // ── Step 2: dimensional circuit synthesis ───────────────────────────
-    let analysis = pisearch::analyze_optimized(&model, entry.target)?;
-    println!("\n── Buckingham Π analysis ──\n{analysis}");
+    println!("\n── Buckingham Π analysis ──\n{}", flow.pis()?);
+    println!("generated RTL: {} lines of Verilog", flow.verilog()?.lines().count());
 
-    let design = rtl::build(&analysis, Q16_15);
-    let verilog = rtl::verilog::emit(&design);
-    println!("generated RTL: {} lines of Verilog", verilog.lines().count());
-
-    let mapped = synth::map_design(&design);
-    let t = timing::analyze(&mapped.netlist, &timing::ICE40_LP);
-    let act = power::measure_activity(&mapped.netlist, &design, 4, 0xACE1);
+    let (lut4_cells, gate_count, dffs) = {
+        let mapped = flow.netlist()?;
+        (mapped.lut4_cells, mapped.gate_count, mapped.dffs)
+    };
+    let t = flow.timing()?;
+    let p = flow.power()?;
     println!("\n── implementation report (iCE40 model) ──");
-    println!("  LUT4 cells : {}", mapped.lut4_cells);
-    println!("  gate count : {}", mapped.gate_count);
-    println!("  flip-flops : {}", mapped.dffs);
+    println!("  LUT4 cells : {lut4_cells}");
+    println!("  gate count : {gate_count}");
+    println!("  flip-flops : {dffs}");
     println!("  Fmax       : {:.2} MHz", t.fmax_mhz);
-    println!("  latency    : {} cycles", rtl::module_latency(&design, Policy::ParallelPerPi));
-    println!(
-        "  power      : {:.1} mW @6MHz, {:.1} mW @12MHz",
-        power::average_power_mw(&power::ICE40, &act, 6.0e6),
-        power::average_power_mw(&power::ICE40, &act, 12.0e6)
-    );
+    println!("  latency    : {} cycles", flow.latency()?);
+    println!("  power      : {:.1} mW @6MHz, {:.1} mW @12MHz", p.mw_6mhz, p.mw_12mhz);
+    let design = flow.rtl()?.clone();
 
     // ── Step 3: what the calibration step would see ─────────────────────
     let mut rng = Lfsr32::new(0xC0FFEE);

@@ -13,6 +13,7 @@
 //!   hardware-in-the-loop validation and cycle accounting).
 
 use crate::fixedpoint::{self, Q16_15};
+use crate::flow::{worker, Flow, FlowConfig};
 use crate::power;
 use crate::report::export::SystemExport;
 use crate::rtl::{self, PiModuleDesign};
@@ -79,8 +80,9 @@ pub struct Pipeline {
     pub pi_path: PiPath,
     system: String,
     engine: Engine,
-    /// Lazily technology-mapped netlist for power estimation.
-    mapped: Option<synth::MappedDesign>,
+    /// The compilation session the design came from; keeps the lazily
+    /// technology-mapped netlist memoized for power estimation.
+    flow: Flow,
 }
 
 /// The standardization constants serving needs from training.
@@ -115,11 +117,8 @@ impl Pipeline {
     ) -> anyhow::Result<Pipeline> {
         let engine = Engine::new(artifacts)?;
         let export = trained.dataset.export.clone();
-        let entry = crate::newton::by_id(system)
-            .ok_or_else(|| anyhow::anyhow!("unknown system `{system}`"))?;
-        let model = crate::newton::load_entry(&entry)?;
-        let analysis = crate::pisearch::analyze_optimized(&model, entry.target)?;
-        let design = rtl::build(&analysis, Q16_15);
+        let mut flow = Flow::for_system(system, FlowConfig::default())?;
+        let design = flow.rtl()?.clone();
         // Validate the target participates (its port is needed for
         // monomial inversion).
         let _ = export.target_port();
@@ -138,7 +137,7 @@ impl Pipeline {
             pi_path,
             system: system.to_string(),
             engine,
-            mapped: None,
+            flow,
         })
     }
 
@@ -151,9 +150,13 @@ impl Pipeline {
         requests: &[PowerRequest],
         activations: u32,
     ) -> Vec<PowerEstimate> {
-        let mapped =
-            self.mapped.get_or_insert_with(|| synth::map_design(&self.design));
-        estimate_power_requests(&mapped.netlist, &self.design, requests, activations)
+        // Design and netlist come from the same session generation, so
+        // they can never diverge even if the flow's config were edited.
+        let (design, mapped) = self
+            .flow
+            .rtl_and_netlist()
+            .expect("netlist derivation cannot fail once the design is built");
+        estimate_power_requests(&mapped.netlist, design, requests, activations)
     }
 
     /// Compute Π products for a batch via the configured path. Returns
@@ -254,14 +257,19 @@ impl Pipeline {
 /// [`Pipeline::estimate_power_batch`], unit-testable without artifacts).
 /// Unfilled lanes of the last batch simulate padding streams whose
 /// results are dropped.
+///
+/// Each 64-lane chunk is one independent word-parallel simulation pass,
+/// so chunks fan out across all cores on scoped worker threads
+/// ([`worker::parallel_map_chunks`]); request floods use every core on
+/// top of the 64× lane win. Results are returned in request order,
+/// bit-identical to a sequential dispatch.
 pub fn estimate_power_requests(
     netlist: &crate::synth::Netlist,
     design: &PiModuleDesign,
     requests: &[PowerRequest],
     activations: u32,
 ) -> Vec<PowerEstimate> {
-    let mut out = Vec::with_capacity(requests.len());
-    for chunk in requests.chunks(synth::LANES) {
+    worker::parallel_map_chunks(requests, synth::LANES, |_, chunk| {
         let mut seeds = [0u32; synth::LANES];
         for (lane, slot) in seeds.iter_mut().enumerate() {
             *slot = match chunk.get(lane) {
@@ -271,48 +279,46 @@ pub fn estimate_power_requests(
             };
         }
         let act = power::measure_activity_batch(netlist, design, activations, &seeds);
-        for (lane, req) in chunk.iter().enumerate() {
-            let lane_act = act.lane(lane);
-            out.push(PowerEstimate {
-                mw: power::average_power_mw(&power::ICE40, &lane_act, req.f_hz),
-                toggles_per_cycle: lane_act.toggles_per_cycle,
-                cycles: act.cycles,
-            });
-        }
-    }
-    out
+        chunk
+            .iter()
+            .enumerate()
+            .map(|(lane, req)| {
+                let lane_act = act.lane(lane);
+                PowerEstimate {
+                    mw: power::average_power_mw(&power::ICE40, &lane_act, req.f_hz),
+                    toggles_per_cycle: lane_act.toggles_per_cycle,
+                    cycles: act.cycles,
+                }
+            })
+            .collect()
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fixedpoint::Q16_15;
-    use crate::newton::corpus;
-    use crate::pisearch::analyze_optimized;
 
-    /// A 65-request batch (two 64-lane chunks, the second padded) must
-    /// agree with scalar measure_activity + average_power_mw per request.
+    fn pendulum_flow() -> Flow {
+        Flow::for_system("pendulum", FlowConfig::default()).unwrap()
+    }
+
+    /// A 65-request batch (two 64-lane chunks, the second padded,
+    /// dispatched across worker threads) must agree with scalar
+    /// measure_activity + average_power_mw per request.
     #[test]
     fn power_requests_match_scalar_path_across_chunks() {
-        let e = corpus::by_id("pendulum").unwrap();
-        let m = corpus::load_entry(&e).unwrap();
-        let a = analyze_optimized(&m, e.target).unwrap();
-        let design = rtl::build(&a, Q16_15);
-        let mapped = synth::map_design(&design);
+        let mut flow = pendulum_flow();
+        let design = flow.rtl().unwrap().clone();
+        let netlist = &flow.netlist().unwrap().netlist;
         let requests: Vec<PowerRequest> = (0..65)
             .map(|i| PowerRequest { seed: 0x1000 + i as u32, f_hz: 6.0e6 })
             .collect();
-        let got = estimate_power_requests(&mapped.netlist, &design, &requests, 2);
+        let got = estimate_power_requests(netlist, &design, &requests, 2);
         assert_eq!(got.len(), 65);
         // Spot-check both chunks, including the chunk boundary and the
         // padded tail chunk's only real lane.
         for &i in &[0usize, 17, 63, 64] {
-            let act = power::measure_activity(
-                &mapped.netlist,
-                &design,
-                2,
-                requests[i].seed,
-            );
+            let act = power::measure_activity(netlist, &design, 2, requests[i].seed);
             let want = power::average_power_mw(&power::ICE40, &act, requests[i].f_hz);
             assert_eq!(got[i].toggles_per_cycle, act.toggles_per_cycle, "request {i}");
             assert_eq!(got[i].cycles, act.cycles, "request {i}");
@@ -322,11 +328,9 @@ mod tests {
 
     #[test]
     fn empty_request_batch_is_empty() {
-        let e = corpus::by_id("pendulum").unwrap();
-        let m = corpus::load_entry(&e).unwrap();
-        let a = analyze_optimized(&m, e.target).unwrap();
-        let design = rtl::build(&a, Q16_15);
-        let mapped = synth::map_design(&design);
-        assert!(estimate_power_requests(&mapped.netlist, &design, &[], 1).is_empty());
+        let mut flow = pendulum_flow();
+        let design = flow.rtl().unwrap().clone();
+        let netlist = &flow.netlist().unwrap().netlist;
+        assert!(estimate_power_requests(netlist, &design, &[], 1).is_empty());
     }
 }

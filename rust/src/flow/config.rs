@@ -1,0 +1,117 @@
+//! Flow configuration and stage fingerprinting.
+//!
+//! A [`FlowConfig`] carries every knob the compilation flow consumes —
+//! fixed-point format, target override, basis optimization, scheduling
+//! policy, timing library, power model, and stimulus parameters. Each
+//! stage of a [`super::Flow`] caches its artifact keyed on a *fingerprint*
+//! that mixes the stage's own config inputs with the upstream stage's
+//! fingerprint, so editing the config invalidates exactly the stages
+//! downstream of the change and nothing upstream of it.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use crate::fixedpoint::{QFormat, Q16_15};
+use crate::power::{PowerModel, ICE40};
+use crate::rtl::Policy;
+use crate::timing::{DelayModel, ICE40_LP};
+
+/// Configuration for one compilation session.
+///
+/// Every field has a sensible paper default ([`FlowConfig::default`]);
+/// construct with struct-update syntax to override a subset:
+///
+/// ```
+/// use dimsynth::flow::FlowConfig;
+/// use dimsynth::fixedpoint::QFormat;
+///
+/// let cfg = FlowConfig { qformat: QFormat::new(12, 11), ..FlowConfig::default() };
+/// assert!(cfg.optimize_basis);
+/// ```
+#[derive(Clone, Debug)]
+pub struct FlowConfig {
+    /// Fixed-point format of all datapaths (default Q16.15).
+    pub qformat: QFormat,
+    /// Target-symbol override. `None` uses the corpus entry's target (or
+    /// the target given to [`super::Flow::from_source`]).
+    pub target: Option<String>,
+    /// Run the cost-directed basis optimization after the raw Π search
+    /// (default true; disable for ablations against the raw basis).
+    pub optimize_basis: bool,
+    /// Scheduling policy used for latency queries.
+    pub policy: Policy,
+    /// Timing library for STA.
+    pub delay: DelayModel,
+    /// Power model for power queries.
+    pub power: PowerModel,
+    /// Stimulus activations per power measurement.
+    pub power_samples: u32,
+    /// LFSR seed of the power-measurement stimulus stream.
+    pub power_seed: u32,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            qformat: Q16_15,
+            target: None,
+            optimize_basis: true,
+            policy: Policy::ParallelPerPi,
+            delay: ICE40_LP,
+            power: ICE40,
+            power_samples: 4,
+            power_seed: 0xACE1,
+        }
+    }
+}
+
+/// Hash one value into a 64-bit fingerprint.
+pub(crate) fn fingerprint<T: Hash>(value: &T) -> u64 {
+    let mut h = DefaultHasher::new();
+    value.hash(&mut h);
+    h.finish()
+}
+
+/// Mix an upstream fingerprint with a stage tag and the stage's own
+/// config fingerprint.
+pub(crate) fn mix(stage_tag: u64, upstream: u64, own: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    stage_tag.hash(&mut h);
+    upstream.hash(&mut h);
+    own.hash(&mut h);
+    h.finish()
+}
+
+/// Hash a slice of `f64` model constants bit-exactly.
+pub(crate) fn fingerprint_f64s(values: &[f64]) -> u64 {
+    let bits: Vec<u64> = values.iter().map(|v| v.to_bits()).collect();
+    fingerprint(&bits)
+}
+
+impl FlowConfig {
+    /// Fingerprint of the inputs the Π-search stage consumes.
+    pub(crate) fn pis_inputs_fp(&self, effective_target: &str) -> u64 {
+        fingerprint(&(effective_target, self.optimize_basis))
+    }
+
+    /// Fingerprint of the inputs the RTL stage consumes.
+    pub(crate) fn rtl_inputs_fp(&self) -> u64 {
+        fingerprint(&self.qformat)
+    }
+
+    /// Fingerprint of the inputs the timing stage consumes.
+    pub(crate) fn timing_inputs_fp(&self) -> u64 {
+        fingerprint_f64s(&[
+            self.delay.t_lut_ns,
+            self.delay.t_route_ns,
+            self.delay.t_reg_ns,
+            self.delay.congestion,
+        ])
+    }
+
+    /// Fingerprint of the inputs the power stage consumes.
+    pub(crate) fn power_inputs_fp(&self) -> u64 {
+        let model = fingerprint_f64s(&[self.power.vdd, self.power.c_eff, self.power.p_static]);
+        fingerprint(&(self.power_samples, self.power_seed, model))
+    }
+}

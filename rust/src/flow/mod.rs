@@ -1,0 +1,45 @@
+//! The unified compilation-session API — the front door to the paper's
+//! pipeline.
+//!
+//! The flow Newton description → dimensional Π-search → RTL → LUT4
+//! netlist → timing/power is one dependency graph; this module exposes
+//! it as one object instead of hand-stitched stage calls:
+//!
+//! * [`Flow`] — a compilation session for one system: a [`FlowConfig`]
+//!   plus a memoized artifact graph with typed stage handles
+//!   ([`Flow::parsed`], [`Flow::pis`], [`Flow::rtl`], [`Flow::netlist`],
+//!   [`Flow::timing`], [`Flow::power`], [`Flow::verilog`]). Each stage
+//!   computes on first demand and is cached keyed on the config and the
+//!   upstream stage fingerprints, so a config edit recomputes only the
+//!   stages downstream of the change.
+//! * [`FlowSet`] — a corpus-wide driver running independent sessions
+//!   across all cores with scoped threads (each `Flow` owns its netlist,
+//!   so the fan-out is lock-free and deterministic).
+//! * [`worker`] — the scoped-thread chunk fan-out shared by `FlowSet`
+//!   and the coordinator's 64-lane power-request dispatch.
+//!
+//! ```
+//! use dimsynth::flow::{Flow, FlowConfig};
+//! use dimsynth::fixedpoint::QFormat;
+//!
+//! let mut flow = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+//! let n_groups = flow.pis().unwrap().n();        // Π-search runs here...
+//! let cells = flow.netlist().unwrap().lut4_cells; // ...netlist on first demand...
+//! let fmax = flow.timing().unwrap().fmax_mhz;
+//! assert!(n_groups >= 1 && cells > 500 && fmax > 5.0);
+//! assert_eq!(flow.counts().pis, 1);               // ...and every stage is memoized.
+//!
+//! flow.set_qformat(QFormat::new(12, 11));         // invalidates RTL and downstream
+//! let smaller = flow.netlist().unwrap().lut4_cells;
+//! assert!(smaller < cells);
+//! assert_eq!(flow.counts().pis, 1);               // ...but not the Π-search.
+//! ```
+
+pub mod config;
+pub mod session;
+pub mod set;
+pub mod worker;
+
+pub use config::FlowConfig;
+pub use session::{Flow, PowerReport, StageCounts};
+pub use set::FlowSet;

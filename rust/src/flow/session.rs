@@ -1,0 +1,408 @@
+//! The [`Flow`] compilation session: one system, one config, a memoized
+//! graph of typed stage artifacts.
+
+use super::config::{fingerprint, mix, FlowConfig};
+use crate::newton::{self, CorpusEntry, SystemModel};
+use crate::pisearch::{self, CostModel, PiAnalysis};
+use crate::power::{self, ActivityReport, PowerModel};
+use crate::rtl::{self, PiModuleDesign};
+use crate::synth::{self, MappedDesign};
+use crate::timing::{self, TimingReport};
+
+// Stage tags keep fingerprints of different stages disjoint even when
+// their config inputs coincide.
+const TAG_PARSE: u64 = 0x01;
+const TAG_PIS: u64 = 0x02;
+const TAG_RTL: u64 = 0x03;
+const TAG_NETLIST: u64 = 0x04;
+const TAG_TIMING: u64 = 0x05;
+const TAG_POWER: u64 = 0x06;
+const TAG_VERILOG: u64 = 0x07;
+
+/// Where a flow's Newton description comes from.
+#[derive(Clone, Debug)]
+enum FlowSource {
+    /// A corpus system (carries the paper's target symbol and the
+    /// Table-1 metadata).
+    Corpus(CorpusEntry),
+    /// Inline Newton source (e.g. a user-authored `.nt` file).
+    Inline { name: String, source: String, target: String },
+}
+
+impl FlowSource {
+    fn id(&self) -> &str {
+        match self {
+            FlowSource::Corpus(e) => e.id,
+            FlowSource::Inline { name, .. } => name,
+        }
+    }
+
+    fn default_target(&self) -> &str {
+        match self {
+            FlowSource::Corpus(e) => e.target,
+            FlowSource::Inline { target, .. } => target,
+        }
+    }
+
+    fn fingerprint(&self) -> u64 {
+        match self {
+            FlowSource::Corpus(e) => fingerprint(&("corpus", e.id, e.source)),
+            FlowSource::Inline { name, source, .. } => {
+                fingerprint(&("inline", name.as_str(), source.as_str()))
+            }
+        }
+    }
+
+    fn load(&self) -> anyhow::Result<SystemModel> {
+        match self {
+            FlowSource::Corpus(e) => newton::load_entry(e),
+            FlowSource::Inline { name, source, .. } => {
+                let models = newton::load(source)?;
+                models
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("no invariant in `{name}`"))
+            }
+        }
+    }
+}
+
+/// One memoized stage slot: the artifact plus the fingerprint it was
+/// computed under.
+#[derive(Clone, Debug)]
+struct Stage<T> {
+    slot: Option<(u64, T)>,
+}
+
+impl<T> Stage<T> {
+    const fn new() -> Stage<T> {
+        Stage { slot: None }
+    }
+
+    fn is_fresh(&self, fp: u64) -> bool {
+        matches!(&self.slot, Some((cached, _)) if *cached == fp)
+    }
+
+    fn store(&mut self, fp: u64, value: T) {
+        self.slot = Some((fp, value));
+    }
+
+    fn value(&self) -> &T {
+        self.slot.as_ref().map(|(_, v)| v).expect("stage was just ensured")
+    }
+}
+
+/// How many times each stage has actually computed (cache misses). Used
+/// by tests and the memoization bench; repeated queries of an unchanged
+/// config must not grow these.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct StageCounts {
+    pub parsed: u32,
+    pub pis: u32,
+    pub rtl: u32,
+    pub netlist: u32,
+    pub timing: u32,
+    pub power: u32,
+    pub verilog: u32,
+}
+
+/// A power query answer: the measured activity plus the model it was
+/// priced under and the paper's two reference operating points.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerReport {
+    /// Switching activity under the configured LFSR stimulus.
+    pub activity: ActivityReport,
+    /// Power model the milliwatt figures were computed with.
+    pub model: PowerModel,
+    /// Average power at 6 MHz (mW).
+    pub mw_6mhz: f64,
+    /// Average power at 12 MHz (mW).
+    pub mw_12mhz: f64,
+}
+
+impl PowerReport {
+    /// Average power (mW) at an arbitrary clock frequency.
+    pub fn mw_at(&self, f_hz: f64) -> f64 {
+        power::average_power_mw(&self.model, &self.activity, f_hz)
+    }
+}
+
+/// A compilation session for one physical system.
+///
+/// `Flow` is the front door to the whole paper pipeline: Newton
+/// description → dimensional Π-search → RTL → LUT4 netlist →
+/// timing/power. Each stage is computed on first demand and cached keyed
+/// on the config and the upstream stage fingerprints, so re-queries are
+/// free and a config edit (e.g. [`Flow::set_qformat`]) recomputes only
+/// the stages downstream of the change.
+pub struct Flow {
+    source: FlowSource,
+    /// Fingerprint of the (immutable) source, computed once at
+    /// construction so deep stage queries don't re-hash the Newton text.
+    source_fp: u64,
+    config: FlowConfig,
+    parsed: Stage<SystemModel>,
+    pis: Stage<PiAnalysis>,
+    rtl: Stage<PiModuleDesign>,
+    netlist: Stage<MappedDesign>,
+    timing: Stage<TimingReport>,
+    power: Stage<PowerReport>,
+    verilog: Stage<String>,
+    counts: StageCounts,
+}
+
+impl Flow {
+    fn new(source: FlowSource, config: FlowConfig) -> Flow {
+        Flow {
+            source_fp: source.fingerprint(),
+            source,
+            config,
+            parsed: Stage::new(),
+            pis: Stage::new(),
+            rtl: Stage::new(),
+            netlist: Stage::new(),
+            timing: Stage::new(),
+            power: Stage::new(),
+            verilog: Stage::new(),
+            counts: StageCounts::default(),
+        }
+    }
+
+    /// Session for one corpus entry.
+    pub fn for_entry(entry: CorpusEntry, config: FlowConfig) -> Flow {
+        Flow::new(FlowSource::Corpus(entry), config)
+    }
+
+    /// Session for a corpus system by id.
+    pub fn for_system(id: &str, config: FlowConfig) -> anyhow::Result<Flow> {
+        let entry = newton::by_id(id).ok_or_else(|| anyhow::anyhow!("unknown system `{id}`"))?;
+        Ok(Flow::for_entry(entry, config))
+    }
+
+    /// Session for inline Newton source (e.g. a `.nt` file's contents).
+    /// `name` labels reports; `target` is the inference target symbol.
+    pub fn from_source(name: &str, source: &str, target: &str, config: FlowConfig) -> Flow {
+        Flow::new(
+            FlowSource::Inline {
+                name: name.to_string(),
+                source: source.to_string(),
+                target: target.to_string(),
+            },
+            config,
+        )
+    }
+
+    /// The system identifier this session compiles.
+    pub fn id(&self) -> &str {
+        self.source.id()
+    }
+
+    /// The corpus entry, when this session compiles a corpus system.
+    pub fn corpus_entry(&self) -> Option<&CorpusEntry> {
+        match &self.source {
+            FlowSource::Corpus(e) => Some(e),
+            FlowSource::Inline { .. } => None,
+        }
+    }
+
+    /// The effective target symbol (config override, else the source's).
+    pub fn target(&self) -> &str {
+        self.config.target.as_deref().unwrap_or_else(|| self.source.default_target())
+    }
+
+    /// Current configuration.
+    pub fn config(&self) -> &FlowConfig {
+        &self.config
+    }
+
+    /// Replace the whole configuration. Cached stages whose inputs did
+    /// not change stay valid; the rest recompute on next demand.
+    pub fn set_config(&mut self, config: FlowConfig) {
+        self.config = config;
+    }
+
+    /// Change the fixed-point format (invalidates RTL and downstream;
+    /// parse and Π-search stay cached).
+    pub fn set_qformat(&mut self, q: crate::fixedpoint::QFormat) {
+        self.config.qformat = q;
+    }
+
+    /// Change the scheduling policy (latency queries only; no cached
+    /// stage depends on it).
+    pub fn set_policy(&mut self, policy: rtl::Policy) {
+        self.config.policy = policy;
+    }
+
+    /// Change the power stimulus (invalidates only the power stage).
+    pub fn set_power_stimulus(&mut self, samples: u32, seed: u32) {
+        self.config.power_samples = samples;
+        self.config.power_seed = seed;
+    }
+
+    /// Per-stage compute counts (cache misses so far).
+    pub fn counts(&self) -> StageCounts {
+        self.counts
+    }
+
+    // ---- stage graph -----------------------------------------------------
+    //
+    // Each `ensure_*` returns the stage's fingerprint after guaranteeing
+    // the cached artifact matches it; the public accessors borrow the
+    // cached value afterwards. Fingerprints chain upstream→downstream, so
+    // freshness checks pull the whole prefix of the pipeline on demand.
+
+    fn ensure_parsed(&mut self) -> anyhow::Result<u64> {
+        let fp = mix(TAG_PARSE, self.source_fp, 0);
+        if !self.parsed.is_fresh(fp) {
+            let model = self.source.load()?;
+            self.counts.parsed += 1;
+            self.parsed.store(fp, model);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_pis(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_parsed()?;
+        let own = self.config.pis_inputs_fp(self.target());
+        let fp = mix(TAG_PIS, upstream, own);
+        if !self.pis.is_fresh(fp) {
+            let target = self.target().to_string();
+            let model = self.parsed.value();
+            let mut analysis = pisearch::analyze(model, &target)?;
+            if self.config.optimize_basis {
+                pisearch::optimize(&mut analysis, &CostModel::default());
+            }
+            self.counts.pis += 1;
+            self.pis.store(fp, analysis);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_rtl(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_pis()?;
+        let fp = mix(TAG_RTL, upstream, self.config.rtl_inputs_fp());
+        if !self.rtl.is_fresh(fp) {
+            let design = rtl::build(self.pis.value(), self.config.qformat);
+            self.counts.rtl += 1;
+            self.rtl.store(fp, design);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_netlist(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_rtl()?;
+        let fp = mix(TAG_NETLIST, upstream, 0);
+        if !self.netlist.is_fresh(fp) {
+            let mapped = synth::map_design(self.rtl.value());
+            self.counts.netlist += 1;
+            self.netlist.store(fp, mapped);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_timing(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_netlist()?;
+        let fp = mix(TAG_TIMING, upstream, self.config.timing_inputs_fp());
+        if !self.timing.is_fresh(fp) {
+            let report = timing::analyze(&self.netlist.value().netlist, &self.config.delay);
+            self.counts.timing += 1;
+            self.timing.store(fp, report);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_power(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_netlist()?;
+        let fp = mix(TAG_POWER, upstream, self.config.power_inputs_fp());
+        if !self.power.is_fresh(fp) {
+            let activity = power::measure_activity(
+                &self.netlist.value().netlist,
+                self.rtl.value(),
+                self.config.power_samples,
+                self.config.power_seed,
+            );
+            let model = self.config.power;
+            let report = PowerReport {
+                activity,
+                model,
+                mw_6mhz: power::average_power_mw(&model, &activity, 6.0e6),
+                mw_12mhz: power::average_power_mw(&model, &activity, 12.0e6),
+            };
+            self.counts.power += 1;
+            self.power.store(fp, report);
+        }
+        Ok(fp)
+    }
+
+    fn ensure_verilog(&mut self) -> anyhow::Result<u64> {
+        let upstream = self.ensure_rtl()?;
+        let fp = mix(TAG_VERILOG, upstream, 0);
+        if !self.verilog.is_fresh(fp) {
+            let text = rtl::verilog::emit(self.rtl.value());
+            self.counts.verilog += 1;
+            self.verilog.store(fp, text);
+        }
+        Ok(fp)
+    }
+
+    // ---- typed stage handles ---------------------------------------------
+
+    /// The dimension-checked system model (frontend stage).
+    pub fn parsed(&mut self) -> anyhow::Result<&SystemModel> {
+        self.ensure_parsed()?;
+        Ok(self.parsed.value())
+    }
+
+    /// The (optimized) Π-search result (analysis stage).
+    pub fn pis(&mut self) -> anyhow::Result<&PiAnalysis> {
+        self.ensure_pis()?;
+        Ok(self.pis.value())
+    }
+
+    /// The generated RTL module (backend stage).
+    pub fn rtl(&mut self) -> anyhow::Result<&PiModuleDesign> {
+        self.ensure_rtl()?;
+        Ok(self.rtl.value())
+    }
+
+    /// The LUT4-mapped netlist with resource accounting (implementation
+    /// stage).
+    pub fn netlist(&mut self) -> anyhow::Result<&MappedDesign> {
+        self.ensure_netlist()?;
+        Ok(self.netlist.value())
+    }
+
+    /// The RTL design together with its mapped netlist, from one
+    /// consistent cache generation — for consumers (like gate-level
+    /// simulation) that must never pair a stale design with a fresh
+    /// netlist across a config change.
+    pub fn rtl_and_netlist(&mut self) -> anyhow::Result<(&PiModuleDesign, &MappedDesign)> {
+        self.ensure_netlist()?;
+        Ok((self.rtl.value(), self.netlist.value()))
+    }
+
+    /// Static timing of the mapped netlist under the configured library.
+    pub fn timing(&mut self) -> anyhow::Result<TimingReport> {
+        self.ensure_timing()?;
+        Ok(*self.timing.value())
+    }
+
+    /// Switching-activity power estimate under the configured stimulus.
+    pub fn power(&mut self) -> anyhow::Result<PowerReport> {
+        self.ensure_power()?;
+        Ok(*self.power.value())
+    }
+
+    /// The emitted Verilog text.
+    pub fn verilog(&mut self) -> anyhow::Result<&str> {
+        self.ensure_verilog()?;
+        Ok(self.verilog.value().as_str())
+    }
+
+    /// Module latency in cycles under the configured scheduling policy
+    /// (derived from the RTL stage; cheap, not cached).
+    pub fn latency(&mut self) -> anyhow::Result<u64> {
+        let policy = self.config.policy;
+        Ok(rtl::module_latency(self.rtl()?, policy))
+    }
+}

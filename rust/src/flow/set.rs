@@ -1,0 +1,88 @@
+//! [`FlowSet`]: a corpus-wide driver running many independent [`Flow`]
+//! sessions across all cores.
+//!
+//! Each `Flow` owns its netlist and stage caches, so systems never share
+//! mutable state and the fan-out needs no locks: the set hands disjoint
+//! `&mut Flow` slices to scoped worker threads via
+//! [`super::worker::parallel_map_chunks_mut`]. Results come back in
+//! corpus order, so parallel and sequential runs are interchangeable.
+
+use super::session::Flow;
+use super::worker;
+use super::FlowConfig;
+use crate::newton;
+
+/// A set of independent compilation sessions (typically the 7-system
+/// Table-1 corpus).
+pub struct FlowSet {
+    flows: Vec<Flow>,
+}
+
+impl FlowSet {
+    /// One session per corpus system, all sharing one config.
+    pub fn corpus(config: FlowConfig) -> FlowSet {
+        let flows = newton::corpus()
+            .into_iter()
+            .map(|e| Flow::for_entry(e, config.clone()))
+            .collect();
+        FlowSet { flows }
+    }
+
+    /// A set over explicit sessions.
+    pub fn from_flows(flows: Vec<Flow>) -> FlowSet {
+        FlowSet { flows }
+    }
+
+    pub fn len(&self) -> usize {
+        self.flows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flows.is_empty()
+    }
+
+    /// The sessions, for direct iteration.
+    pub fn flows_mut(&mut self) -> &mut [Flow] {
+        &mut self.flows
+    }
+
+    /// Consume the set, returning its sessions.
+    pub fn into_flows(self) -> Vec<Flow> {
+        self.flows
+    }
+
+    /// Run `f` over every session on the calling thread, in order.
+    pub fn run_sequential<R>(&mut self, mut f: impl FnMut(&mut Flow) -> R) -> Vec<R> {
+        self.flows.iter_mut().map(&mut f).collect()
+    }
+
+    /// Run `f` over every session across all cores (one scoped worker
+    /// thread per core, whole sessions per worker). Output order matches
+    /// session order, identical to [`FlowSet::run_sequential`].
+    pub fn run_parallel<R: Send>(&mut self, f: impl Fn(&mut Flow) -> R + Sync) -> Vec<R> {
+        worker::parallel_map_chunks_mut(&mut self.flows, 1, |_, flows| {
+            flows.iter_mut().map(&f).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_set_has_seven_sessions() {
+        let set = FlowSet::corpus(FlowConfig::default());
+        assert_eq!(set.len(), 7);
+        assert!(!set.is_empty());
+    }
+
+    #[test]
+    fn parallel_ids_match_sequential_order() {
+        let mut a = FlowSet::corpus(FlowConfig::default());
+        let mut b = FlowSet::corpus(FlowConfig::default());
+        let seq: Vec<String> = a.run_sequential(|f| f.id().to_string());
+        let par: Vec<String> = b.run_parallel(|f| f.id().to_string());
+        assert_eq!(seq, par);
+    }
+}

@@ -1,0 +1,154 @@
+//! Scoped-thread fan-out helpers shared by [`super::FlowSet`] and the
+//! coordinator's power-request dispatch.
+//!
+//! Work is split into fixed-size chunks (e.g. 64-lane power batches, or
+//! one flow per chunk) and consecutive chunks are grouped into one band
+//! per worker thread, so thread count is bounded by the core count while
+//! chunk boundaries — which often carry semantic meaning, like the 64
+//! lanes of one word-parallel simulation pass — are never split. Output
+//! order always matches input order, so parallel and sequential runs are
+//! interchangeable.
+
+use std::thread;
+
+/// Worker threads to use for `units` independent units of work: one per
+/// core, never more than the units themselves, at least one.
+pub fn worker_count(units: usize) -> usize {
+    let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min(units).max(1)
+}
+
+/// Map read-only chunks of `items` (each at most `chunk` long) through
+/// `f` on scoped worker threads. `f` receives the global chunk index and
+/// the chunk slice; the concatenated outputs preserve item order.
+///
+/// Falls back to a plain loop when one worker (or one chunk) suffices.
+pub fn parallel_map_chunks<I, R, F>(items: &[I], chunk: usize, f: F) -> Vec<R>
+where
+    I: Sync,
+    R: Send,
+    F: Fn(usize, &[I]) -> Vec<R> + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let n_chunks = items.len().div_ceil(chunk);
+    let workers = worker_count(n_chunks);
+    if workers <= 1 {
+        let mut out = Vec::with_capacity(items.len());
+        for (ci, slice) in items.chunks(chunk).enumerate() {
+            out.extend(f(ci, slice));
+        }
+        return out;
+    }
+    let chunks_per_band = n_chunks.div_ceil(workers);
+    let band = chunks_per_band * chunk;
+    let f = &f;
+    let bands: Vec<Vec<R>> = thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(band)
+            .enumerate()
+            .map(|(bi, slice)| {
+                s.spawn(move || {
+                    let mut out = Vec::with_capacity(slice.len());
+                    for (cj, ch) in slice.chunks(chunk).enumerate() {
+                        out.extend(f(bi * chunks_per_band + cj, ch));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("flow worker panicked")).collect()
+    });
+    bands.into_iter().flatten().collect()
+}
+
+/// Like [`parallel_map_chunks`] but over mutable chunks, for workers
+/// that own per-item state (e.g. [`super::Flow`] sessions memoizing
+/// their stage caches in place).
+pub fn parallel_map_chunks_mut<I, R, F>(items: &mut [I], chunk: usize, f: F) -> Vec<R>
+where
+    I: Send,
+    R: Send,
+    F: Fn(usize, &mut [I]) -> Vec<R> + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let n_chunks = items.len().div_ceil(chunk);
+    let workers = worker_count(n_chunks);
+    if workers <= 1 {
+        let mut out = Vec::with_capacity(items.len());
+        for (ci, slice) in items.chunks_mut(chunk).enumerate() {
+            out.extend(f(ci, slice));
+        }
+        return out;
+    }
+    let chunks_per_band = n_chunks.div_ceil(workers);
+    let band = chunks_per_band * chunk;
+    let f = &f;
+    let bands: Vec<Vec<R>> = thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(band)
+            .enumerate()
+            .map(|(bi, slice)| {
+                s.spawn(move || {
+                    let mut out = Vec::with_capacity(slice.len());
+                    for (cj, ch) in slice.chunks_mut(chunk).enumerate() {
+                        out.extend(f(bi * chunks_per_band + cj, ch));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("flow worker panicked")).collect()
+    });
+    bands.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_chunk_indices() {
+        let items: Vec<u32> = (0..103).collect();
+        for chunk in [1usize, 7, 64, 200] {
+            let got = parallel_map_chunks(&items, chunk, |ci, slice| {
+                // Verify the chunk index locates the slice.
+                assert_eq!(slice[0] as usize, ci * chunk);
+                slice.iter().map(|&v| v * 2).collect()
+            });
+            let want: Vec<u32> = items.iter().map(|&v| v * 2).collect();
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn mutable_variant_mutates_every_item_once() {
+        let mut items = vec![0u32; 257];
+        let got = parallel_map_chunks_mut(&mut items, 64, |_, slice| {
+            slice.iter_mut().map(|v| {
+                *v += 1;
+                *v
+            }).collect()
+        });
+        assert_eq!(got, vec![1u32; 257]);
+        assert!(items.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        let got: Vec<u32> = parallel_map_chunks(&[] as &[u32], 8, |_, _| vec![1]);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn worker_count_bounds() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        assert!(worker_count(1024) >= 1);
+    }
+}

@@ -10,8 +10,28 @@
 //! in-sensor inference runtime (Π preprocessing + Φ model served via
 //! AOT-compiled XLA executables).
 //!
+//! ## Front door: the [`flow`] compilation-session API
+//!
+//! The whole pipeline hangs off one session object: a [`flow::Flow`]
+//! holds a [`flow::FlowConfig`] and a memoized artifact graph with typed
+//! stage handles, and a [`flow::FlowSet`] drives the full corpus across
+//! all cores. Stages compute on first demand and re-queries are free:
+//!
+//! ```
+//! use dimsynth::flow::{Flow, FlowConfig};
+//!
+//! let mut flow = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+//! println!("{}", flow.pis().unwrap());              // Π groups
+//! let cells = flow.netlist().unwrap().lut4_cells;   // LUT4 resources
+//! let fmax = flow.timing().unwrap().fmax_mhz;       // STA
+//! assert!(cells > 500 && fmax > 5.0);
+//! assert_eq!(flow.counts().netlist, 1);             // memoized: computed once
+//! ```
+//!
 //! ## Layers
 //!
+//! * **Session** — [`flow`]: the unified compilation API; everything
+//!   below is reachable through it.
 //! * **Frontend** — [`newton`]: lexer/parser/sema for the Newton subset,
 //!   plus the 7-system Table-1 corpus.
 //! * **Analysis** — [`pisearch`]: exact rational nullspace of the
@@ -31,6 +51,7 @@
 pub mod bench_util;
 pub mod coordinator;
 pub mod fixedpoint;
+pub mod flow;
 pub mod newton;
 pub mod pisearch;
 pub mod power;

@@ -3,11 +3,12 @@
 //! Subcommands (hand-rolled parsing; no external CLI dependency):
 //!
 //! ```text
-//! dimsynth compile <system|file.nt> [--target <sym>] [--format Qi.f] [-o DIR]
+//! dimsynth compile <system|file.nt> [--target <sym>] [--format Qi.f] [-o DIR] [--vcd]
 //!     Run the compiler: Π-search report + generated Verilog + resource,
 //!     timing and power reports for one system.
-//! dimsynth table1 [--samples N]
-//!     Regenerate the paper's Table 1 across the 7-system corpus.
+//! dimsynth table1 [--samples N] [--sequential]
+//!     Regenerate the paper's Table 1 across the 7-system corpus
+//!     (parallel across all cores by default).
 //! dimsynth export-pisearch
 //!     Emit the Π-search interchange JSON consumed by python/compile/aot.py.
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
@@ -17,46 +18,92 @@
 //! dimsynth list
 //!     List the corpus systems.
 //! ```
+//!
+//! Every compilation subcommand drives the pipeline through the
+//! [`dimsynth::flow`] session API; no stage-to-stage wiring lives here.
 
 use dimsynth::fixedpoint::{QFormat, Q16_15};
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::newton::{self, corpus};
-use dimsynth::pisearch;
 use dimsynth::report;
-use dimsynth::rtl::{self, Policy};
 use dimsynth::synth;
-use dimsynth::timing::{self, ICE40_LP};
-use dimsynth::{coordinator, power, train};
+use dimsynth::{coordinator, train};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// Flags one subcommand accepts: `(name, takes_value)`. Flags are
+/// validated against this allowlist so a typo errors instead of being
+/// silently collected.
+type FlagSpec = &'static [(&'static str, bool)];
+
+const COMPILE_FLAGS: FlagSpec =
+    &[("target", true), ("format", true), ("o", true), ("out", true), ("vcd", false)];
+const TABLE1_FLAGS: FlagSpec = &[("samples", true), ("sequential", false)];
+const TRAIN_FLAGS: FlagSpec = &[("steps", true), ("features", true), ("artifacts", true)];
+const SERVE_FLAGS: FlagSpec = &[("samples", true), ("batch", true), ("artifacts", true)];
+const NO_FLAGS: FlagSpec = &[];
+
+/// The flag name `arg` introduces, if any. Negative numerics (`-1`,
+/// `-3.5`) and a bare `-` are positionals, not flags.
+fn flag_name_of(arg: &str) -> Option<&str> {
+    if let Some(name) = arg.strip_prefix("--") {
+        return Some(name);
+    }
+    let name = arg.strip_prefix('-')?;
+    match name.chars().next() {
+        Some(c) if c.is_ascii_digit() || c == '.' => None,
+        Some(_) => Some(name),
+        None => None,
+    }
+}
+
+/// Parse `args` into positionals and flags against a per-subcommand
+/// allowlist. Unknown flags and value-flags missing their value are
+/// errors; `--` ends flag parsing. A value-taking flag consumes the next
+/// argument verbatim (so `--samples -1` is an argument, later rejected
+/// by the numeric parse, rather than a swallowed flag).
+fn parse_args(
+    args: &[String],
+    spec: FlagSpec,
+) -> anyhow::Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
+    let mut only_positionals = false;
     let mut i = 0;
     while i < args.len() {
-        let a = &args[i];
-        if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(name.to_string(), "true".to_string());
-                i += 1;
+        let arg = &args[i];
+        if !only_positionals && arg == "--" {
+            only_positionals = true;
+            i += 1;
+            continue;
+        }
+        let name = if only_positionals { None } else { flag_name_of(arg) };
+        let Some(name) = name else {
+            pos.push(arg.clone());
+            i += 1;
+            continue;
+        };
+        let Some(&(canonical, takes_value)) = spec.iter().find(|(f, _)| *f == name) else {
+            let allowed: Vec<String> =
+                spec.iter().map(|(f, _)| format!("--{f}")).collect();
+            if allowed.is_empty() {
+                anyhow::bail!("unknown flag `{arg}` (this subcommand takes no flags)");
             }
-        } else if let Some(name) = a.strip_prefix('-') {
-            if i + 1 < args.len() {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                i += 1;
-            }
+            anyhow::bail!("unknown flag `{arg}` (allowed: {})", allowed.join(", "));
+        };
+        if takes_value {
+            let Some(value) = args.get(i + 1) else {
+                anyhow::bail!("flag `{arg}` requires a value");
+            };
+            flags.insert(canonical.to_string(), value.clone());
+            i += 2;
         } else {
-            pos.push(a.clone());
+            flags.insert(canonical.to_string(), "true".to_string());
             i += 1;
         }
     }
-    (pos, flags)
+    Ok((pos, flags))
 }
 
 fn parse_format(s: &str) -> anyhow::Result<QFormat> {
@@ -84,61 +131,68 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
         .map(|s| parse_format(s))
         .transpose()?
         .unwrap_or(Q16_15);
+    // `--target` overrides a corpus entry's default target and is
+    // mandatory for .nt files (they carry no default).
+    let config = FlowConfig {
+        qformat: q,
+        target: flags.get("target").cloned(),
+        ..FlowConfig::default()
+    };
 
     // Resolve: corpus id or a .nt file on disk.
-    let (model, target) = if let Some(e) = newton::by_id(what) {
-        (newton::load_entry(&e)?, e.target.to_string())
+    let mut flow = if let Some(e) = newton::by_id(what) {
+        Flow::for_entry(e, config)
     } else {
         let src = std::fs::read_to_string(what)?;
-        let models = newton::load(&src)?;
-        let model = models
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("no invariant in {what}"))?;
         let target = flags
             .get("target")
             .cloned()
             .ok_or_else(|| anyhow::anyhow!("--target required for .nt files"))?;
-        (model, target)
+        Flow::from_source(what, &src, &target, config)
     };
 
-    let analysis = pisearch::analyze_optimized(&model, &target)?;
-    println!("{analysis}");
+    println!("{}", flow.pis()?);
 
-    let design = rtl::build(&analysis, q);
-    let verilog = rtl::verilog::emit(&design);
-    let mapped = synth::map_design(&design);
-    let t = timing::analyze(&mapped.netlist, &ICE40_LP);
-    let act = power::measure_activity(&mapped.netlist, &design, 4, 0xACE1);
+    let (n_inputs, n_outputs, module_name) = {
+        let design = flow.rtl()?;
+        (design.num_inputs(), design.num_outputs(), design.name.clone())
+    };
+    let (lut4_cells, gate_count, dffs) = {
+        let mapped = flow.netlist()?;
+        (mapped.lut4_cells, mapped.gate_count, mapped.dffs)
+    };
+    let timing = flow.timing()?;
+    let power = flow.power()?;
 
     println!("format:      {q}");
-    println!("ports:       {}", design.num_inputs());
-    println!("pi outputs:  {}", design.num_outputs());
-    println!("latency:     {} cycles", rtl::module_latency(&design, Policy::ParallelPerPi));
-    println!("LUT4 cells:  {}", mapped.lut4_cells);
-    println!("gates:       {}", mapped.gate_count);
-    println!("DFFs:        {}", mapped.dffs);
-    println!("Fmax:        {:.2} MHz (depth {})", t.fmax_mhz, t.depth);
+    println!("ports:       {n_inputs}");
+    println!("pi outputs:  {n_outputs}");
+    println!("latency:     {} cycles", flow.latency()?);
+    println!("LUT4 cells:  {lut4_cells}");
+    println!("gates:       {gate_count}");
+    println!("DFFs:        {dffs}");
+    println!("Fmax:        {:.2} MHz (depth {})", timing.fmax_mhz, timing.depth);
     println!(
         "power:       {:.2} mW @6MHz / {:.2} mW @12MHz",
-        power::average_power_mw(&power::ICE40, &act, 6.0e6),
-        power::average_power_mw(&power::ICE40, &act, 12.0e6)
+        power.mw_6mhz, power.mw_12mhz
     );
 
     if let Some(dir) = flags.get("o").or_else(|| flags.get("out")) {
         std::fs::create_dir_all(dir)?;
-        let path = format!("{dir}/{}.v", design.name);
-        std::fs::write(&path, &verilog)?;
+        let path = format!("{dir}/{module_name}.v");
+        std::fs::write(&path, flow.verilog()?)?;
         println!("wrote {path}");
         // Self-checking testbench with golden vectors from the bit-exact
         // software model.
-        let vectors = rtl::golden_vectors(&design, 16, 0x60D);
-        let tb = rtl::emit_testbench(&design, &vectors);
-        let tb_path = format!("{dir}/{}_tb.v", design.name);
+        let design = flow.rtl()?.clone();
+        let vectors = dimsynth::rtl::golden_vectors(&design, 16, 0x60D);
+        let tb = dimsynth::rtl::emit_testbench(&design, &vectors);
+        let tb_path = format!("{dir}/{module_name}_tb.v");
         std::fs::write(&tb_path, tb)?;
         println!("wrote {tb_path} ({} golden vectors)", vectors.len());
         // Optional waveform of one gate-level activation.
         if flags.contains_key("vcd") {
+            let mapped = flow.netlist()?;
             let mut sim = synth::GateSim::new(&mapped.netlist);
             let mut buses: Vec<String> =
                 (0..design.num_outputs()).map(|u| format!("pi_{u}")).collect();
@@ -156,8 +210,8 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
                 sim.step();
                 rec.capture(&sim);
             }
-            let vcd_path = format!("{dir}/{}.vcd", design.name);
-            std::fs::write(&vcd_path, rec.render(&design.name))?;
+            let vcd_path = format!("{dir}/{module_name}.vcd");
+            std::fs::write(&vcd_path, rec.render(&module_name))?;
             println!("wrote {vcd_path}");
         }
     }
@@ -166,7 +220,11 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
 
 fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let samples: u32 = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let rows = report::generate_table(Q16_15, samples)?;
+    let rows = if flags.contains_key("sequential") {
+        report::generate_table_sequential(Q16_15, samples)?
+    } else {
+        report::generate_table(Q16_15, samples)?
+    };
     print!("{}", report::render_markdown(&rows));
     Ok(())
 }
@@ -216,18 +274,30 @@ fn main() -> ExitCode {
         eprintln!("usage: dimsynth <compile|table1|export-pisearch|train|serve|list> ...");
         return ExitCode::from(2);
     };
-    let (pos, flags) = parse_flags(&args[1..]);
-    let result = match cmd.as_str() {
-        "list" => {
-            cmd_list();
-            Ok(())
-        }
-        "compile" => cmd_compile(&pos, &flags),
-        "table1" => cmd_table1(&flags),
-        "export-pisearch" => cmd_export(),
-        "train" => cmd_train(&pos, &flags),
-        "serve" => cmd_serve(&pos, &flags),
-        other => Err(anyhow::anyhow!("unknown subcommand `{other}`")),
+    // Validate the subcommand before flag parsing, so a typo'd command
+    // reports "unknown subcommand", not a misleading flag error.
+    let spec = match cmd.as_str() {
+        "compile" => Some(COMPILE_FLAGS),
+        "table1" => Some(TABLE1_FLAGS),
+        "train" => Some(TRAIN_FLAGS),
+        "serve" => Some(SERVE_FLAGS),
+        "list" | "export-pisearch" => Some(NO_FLAGS),
+        _ => None,
+    };
+    let result = match spec {
+        None => Err(anyhow::anyhow!("unknown subcommand `{cmd}`")),
+        Some(spec) => parse_args(&args[1..], spec).and_then(|(pos, flags)| match cmd.as_str() {
+            "list" => {
+                cmd_list();
+                Ok(())
+            }
+            "compile" => cmd_compile(&pos, &flags),
+            "table1" => cmd_table1(&flags),
+            "export-pisearch" => cmd_export(),
+            "train" => cmd_train(&pos, &flags),
+            "serve" => cmd_serve(&pos, &flags),
+            _ => unreachable!("subcommand validated above"),
+        }),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,

@@ -8,9 +8,8 @@
 //! is small and flat, emitted by hand.)
 
 use crate::fixedpoint::QFormat;
-use crate::newton::{corpus, load_entry};
-use crate::pisearch::analyze_optimized;
-use crate::rtl::{self, Policy};
+use crate::flow::{Flow, FlowConfig};
+use crate::newton::corpus;
 
 /// Exported description of one compiled system.
 #[derive(Clone, Debug)]
@@ -64,19 +63,30 @@ impl SystemExport {
 
 /// Build the export record for one corpus system.
 pub fn export_system(id: &str, q: QFormat) -> anyhow::Result<SystemExport> {
-    let entry = corpus::by_id(id).ok_or_else(|| anyhow::anyhow!("unknown system `{id}`"))?;
-    let model = load_entry(&entry)?;
-    let analysis = analyze_optimized(&model, entry.target)?;
-    let design = rtl::build(&analysis, q);
+    let mut flow =
+        Flow::for_system(id, FlowConfig { qformat: q, ..FlowConfig::default() })?;
+    export_from_flow(&mut flow)
+}
+
+/// Build the export record from an existing compilation session (stage
+/// results are reused from the session's cache).
+pub fn export_from_flow(flow: &mut Flow) -> anyhow::Result<SystemExport> {
+    let id = flow.id().to_string();
+    let (symbols, target_index) = {
+        let analysis = flow.pis()?;
+        (analysis.symbols.clone(), analysis.target)
+    };
+    let latency = flow.latency()?;
+    let design = flow.rtl()?;
     Ok(SystemExport {
-        id: id.to_string(),
-        symbols: analysis.symbols.clone(),
+        id,
+        symbols,
         ports: design.ports.iter().map(|p| p.symbol_index).collect(),
         port_names: design.ports.iter().map(|p| p.name.clone()).collect(),
         exponents: design.units.iter().map(|u| u.exponents.clone()).collect(),
-        target_index: analysis.target,
+        target_index,
         target_group: design.target_unit,
-        latency: rtl::module_latency(&design, Policy::ParallelPerPi),
+        latency,
     })
 }
 

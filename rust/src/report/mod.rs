@@ -4,5 +4,8 @@
 pub mod export;
 pub mod table1;
 
-pub use export::{export_json, SystemExport};
-pub use table1::{generate_row, generate_table, render_markdown, Table1Row};
+pub use export::{export_from_flow, export_json, export_system, SystemExport};
+pub use table1::{
+    generate_row, generate_table, generate_table_sequential, render_markdown, row_from_flow,
+    Table1Row,
+};

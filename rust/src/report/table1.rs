@@ -1,14 +1,12 @@
 //! Table-1 regeneration: run the full flow (frontend → Π-search → RTL →
-//! synthesis → timing → power) for every corpus system and render the
-//! same columns the paper reports.
+//! synthesis → timing → power) for every corpus system through the
+//! [`crate::flow`] session API and render the same columns the paper
+//! reports. The corpus sweep runs one [`Flow`] per system across all
+//! cores via [`FlowSet`].
 
 use crate::fixedpoint::QFormat;
-use crate::newton::{corpus, load_entry, CorpusEntry};
-use crate::pisearch::analyze_optimized;
-use crate::power::{self, ICE40};
-use crate::rtl::{self, Policy};
-use crate::synth;
-use crate::timing::{self, ICE40_LP};
+use crate::flow::{Flow, FlowConfig, FlowSet};
+use crate::newton::CorpusEntry;
 
 /// One row of the regenerated Table 1.
 #[derive(Clone, Debug)]
@@ -42,32 +40,63 @@ pub fn paper_row(id: &str) -> Option<(usize, usize, f64, u64, f64, f64)> {
     }
 }
 
-/// Run the full flow for one system.
-pub fn generate_row(entry: &CorpusEntry, q: QFormat, power_samples: u32) -> anyhow::Result<Table1Row> {
-    let model = load_entry(entry)?;
-    let analysis = analyze_optimized(&model, entry.target)?;
-    let design = rtl::build(&analysis, q);
-    let mapped = synth::map_design(&design);
-    let t = timing::analyze(&mapped.netlist, &ICE40_LP);
-    let act = power::measure_activity(&mapped.netlist, &design, power_samples, 0xACE1);
+/// The flow config a Table-1 run uses.
+fn table_config(q: QFormat, power_samples: u32) -> FlowConfig {
+    FlowConfig { qformat: q, power_samples, ..FlowConfig::default() }
+}
+
+/// Extract one table row from a (corpus) compilation session. All stage
+/// results are served from the session's cache when already computed.
+pub fn row_from_flow(flow: &mut Flow) -> anyhow::Result<Table1Row> {
+    let entry = flow
+        .corpus_entry()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("table rows require corpus flows"))?;
+    let n_groups = flow.pis()?.n();
+    let (lut4_cells, gate_count) = {
+        let mapped = flow.netlist()?;
+        (mapped.lut4_cells, mapped.gate_count)
+    };
+    let timing = flow.timing()?;
+    let power = flow.power()?;
+    let latency_cycles = flow.latency()?;
     Ok(Table1Row {
         id: entry.id.to_string(),
         display_name: entry.display_name.to_string(),
         description: entry.description.to_string(),
         target: entry.target_desc.to_string(),
-        lut4_cells: mapped.lut4_cells,
-        gate_count: mapped.gate_count,
-        fmax_mhz: t.fmax_mhz,
-        latency_cycles: rtl::module_latency(&design, Policy::ParallelPerPi),
-        power_12mhz_mw: power::average_power_mw(&ICE40, &act, 12.0e6),
-        power_6mhz_mw: power::average_power_mw(&ICE40, &act, 6.0e6),
-        n_groups: analysis.n(),
+        lut4_cells,
+        gate_count,
+        fmax_mhz: timing.fmax_mhz,
+        latency_cycles,
+        power_12mhz_mw: power.mw_12mhz,
+        power_6mhz_mw: power.mw_6mhz,
+        n_groups,
     })
 }
 
-/// Run the full flow for the whole corpus.
+/// Run the full flow for one system.
+pub fn generate_row(entry: &CorpusEntry, q: QFormat, power_samples: u32) -> anyhow::Result<Table1Row> {
+    let mut flow = Flow::for_entry(entry.clone(), table_config(q, power_samples));
+    row_from_flow(&mut flow)
+}
+
+/// Run the full flow for the whole corpus, one session per system across
+/// all cores.
 pub fn generate_table(q: QFormat, power_samples: u32) -> anyhow::Result<Vec<Table1Row>> {
-    corpus().iter().map(|e| generate_row(e, q, power_samples)).collect()
+    FlowSet::corpus(table_config(q, power_samples))
+        .run_parallel(row_from_flow)
+        .into_iter()
+        .collect()
+}
+
+/// Sequential variant of [`generate_table`] (same rows, same order; used
+/// for determinism checks and single-core baselines).
+pub fn generate_table_sequential(q: QFormat, power_samples: u32) -> anyhow::Result<Vec<Table1Row>> {
+    FlowSet::corpus(table_config(q, power_samples))
+        .run_sequential(row_from_flow)
+        .into_iter()
+        .collect()
 }
 
 /// Render rows as a Markdown table with paper values side by side.
@@ -104,7 +133,7 @@ pub fn render_markdown(rows: &[Table1Row]) -> String {
 mod tests {
     use super::*;
     use crate::fixedpoint::Q16_15;
-    use crate::newton::by_id;
+    use crate::newton::{by_id, corpus};
 
     #[test]
     fn pendulum_row_matches_paper_latency() {

@@ -1,12 +1,12 @@
 //! Integration tests over the compiler surface: Newton source in →
-//! Π analysis → RTL → Verilog → gates, through the public API only.
+//! Π analysis → RTL → Verilog → gates, driven through the [`Flow`]
+//! compilation-session API (the public front door).
 
 use dimsynth::fixedpoint::{QFormat, Q16_15};
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::newton::{self, corpus};
-use dimsynth::pisearch;
-use dimsynth::rtl::{self, Policy};
+use dimsynth::rtl;
 use dimsynth::synth;
-use dimsynth::timing;
 
 /// A user-authored spec (not from the corpus) exercising custom derived
 /// signals, constants, and target selection end to end.
@@ -25,23 +25,23 @@ orifice : invariant(q_flow : flow_rate,
 
 #[test]
 fn custom_spec_compiles_to_hardware() {
-    let models = newton::load(ORIFICE).unwrap();
-    assert_eq!(models.len(), 1);
-    let analysis = pisearch::analyze_optimized(&models[0], "q_flow").unwrap();
-    assert!(analysis.n() >= 1);
-    // q_flow isolated.
-    for (i, g) in analysis.groups.iter().enumerate() {
-        let e = g.exponents[analysis.target];
-        if i == analysis.target_group {
-            assert_ne!(e, 0);
-        } else {
-            assert_eq!(e, 0);
+    let mut flow = Flow::from_source("orifice", ORIFICE, "q_flow", FlowConfig::default());
+    {
+        let analysis = flow.pis().unwrap();
+        assert!(analysis.n() >= 1);
+        // q_flow isolated.
+        for (i, g) in analysis.groups.iter().enumerate() {
+            let e = g.exponents[analysis.target];
+            if i == analysis.target_group {
+                assert_ne!(e, 0);
+            } else {
+                assert_eq!(e, 0);
+            }
         }
     }
-    let design = rtl::build(&analysis, Q16_15);
-    let v = rtl::verilog::emit(&design);
-    assert!(v.contains("module pi_compute_orifice ("));
-    let mapped = synth::map_design(&design);
+    assert!(flow.verilog().unwrap().contains("module pi_compute_orifice ("));
+    let design = flow.rtl().unwrap().clone();
+    let mapped = flow.netlist().unwrap();
     assert!(mapped.lut4_cells > 100);
     // The mapped design still computes: all-ones input → all Π = 1.
     let mut sim = synth::GateSim::new(&mapped.netlist);
@@ -65,13 +65,13 @@ fn custom_spec_compiles_to_hardware() {
 #[test]
 fn whole_corpus_verilog_emission_is_stable() {
     // Emission must be deterministic (same input → same text) and
-    // structurally sane for every system.
+    // structurally sane for every system. The second emission goes
+    // through `rtl::verilog` directly so the comparison is against a
+    // fresh render, not the session's memoized copy.
     for e in corpus() {
-        let m = newton::load_entry(&e).unwrap();
-        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
-        let d = rtl::build(&a, Q16_15);
-        let v1 = rtl::verilog::emit(&d);
-        let v2 = rtl::verilog::emit(&d);
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        let v1 = flow.verilog().unwrap().to_string();
+        let v2 = rtl::verilog::emit(flow.rtl().unwrap());
         assert_eq!(v1, v2, "{}: nondeterministic emission", e.id);
         assert_eq!(
             v1.matches("\nmodule ").count() + usize::from(v1.starts_with("module")),
@@ -86,28 +86,30 @@ fn whole_corpus_verilog_emission_is_stable() {
 fn format_parametricity_whole_flow() {
     // The entire flow (analysis → RTL → gates → timing) works at
     // non-default formats, and resources scale monotonically with width.
-    let e = newton::by_id("vibrating_string").unwrap();
-    let m = newton::load_entry(&e).unwrap();
-    let a = pisearch::analyze_optimized(&m, e.target).unwrap();
+    // One session serves all formats: the parse and Π-search stages stay
+    // cached while `set_qformat` invalidates RTL and downstream.
+    let mut flow = Flow::for_system("vibrating_string", FlowConfig::default()).unwrap();
     let mut last_cells = 0usize;
     for (i, f) in [(8u32, 7u32), (16, 15), (20, 19)] {
         let q = QFormat::new(i, f);
-        let d = rtl::build(&a, q);
-        let mapped = synth::map_design(&d);
+        flow.set_qformat(q);
+        let cells = flow.netlist().unwrap().lut4_cells;
         assert!(
-            mapped.lut4_cells > last_cells,
-            "cells must grow with width: {} !> {}",
-            mapped.lut4_cells,
-            last_cells
+            cells > last_cells,
+            "cells must grow with width: {cells} !> {last_cells}"
         );
-        last_cells = mapped.lut4_cells;
-        let t = timing::analyze(&mapped.netlist, &timing::ICE40_LP);
+        last_cells = cells;
+        let t = flow.timing().unwrap();
         assert!(t.fmax_mhz > 5.0);
-        assert_eq!(
-            rtl::module_latency(&d, Policy::ParallelPerPi),
-            rtl::run_once(&d, &vec![q.one(); d.num_inputs()]).cycles
-        );
+        let expected = {
+            let d = flow.rtl().unwrap();
+            rtl::run_once(d, &vec![q.one(); d.num_inputs()]).cycles
+        };
+        assert_eq!(flow.latency().unwrap(), expected);
     }
+    let counts = flow.counts();
+    assert_eq!((counts.parsed, counts.pis), (1, 1), "upstream stages must stay cached");
+    assert_eq!(counts.rtl, 3, "each format rebuilds RTL once");
 }
 
 #[test]
@@ -119,11 +121,10 @@ fn file_based_specs_compile() {
         ("examples/systems/heat_conduction.nt", "t_inner", 2),
     ] {
         let src = std::fs::read_to_string(path).unwrap();
-        let models = newton::load(&src).unwrap();
-        let a = pisearch::analyze_optimized(&models[0], target).unwrap();
-        assert_eq!(a.n(), expect_n, "{path}");
-        let d = rtl::build(&a, Q16_15);
-        let r = rtl::run_once(&d, &vec![Q16_15.one(); d.num_inputs()]);
+        let mut flow = Flow::from_source(path, &src, target, FlowConfig::default());
+        assert_eq!(flow.pis().unwrap().n(), expect_n, "{path}");
+        let d = flow.rtl().unwrap();
+        let r = rtl::run_once(d, &vec![Q16_15.one(); d.num_inputs()]);
         assert!(r.outputs.iter().all(|&o| o == Q16_15.one()), "{path}");
     }
 }
@@ -131,10 +132,13 @@ fn file_based_specs_compile() {
 #[test]
 fn dimensional_error_reporting() {
     // Inhomogeneous relations and unknown signals produce errors with
-    // positions, not panics.
+    // positions, not panics — through the session API as well as the
+    // frontend directly.
     let bad_rel = "s : invariant(h: distance, t: time) = { h ~ t }";
     let err = newton::load(bad_rel).unwrap_err().to_string();
     assert!(err.contains("homogeneous"), "{err}");
+    let mut flow = Flow::from_source("bad", bad_rel, "h", FlowConfig::default());
+    assert!(flow.parsed().is_err());
 
     let unknown = "s : invariant(x: flux_capacitance) = { }";
     let err = newton::load(unknown).unwrap_err().to_string();
@@ -145,10 +149,8 @@ fn dimensional_error_reporting() {
 fn nonparticipating_symbols_are_dropped_from_ports() {
     // Pendulum bob mass and spring-mass gravity cannot join any Π.
     for (id, dropped) in [("pendulum", "bobmass"), ("spring_mass", "g")] {
-        let e = newton::by_id(id).unwrap();
-        let m = newton::load_entry(&e).unwrap();
-        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
-        let d = rtl::build(&a, Q16_15);
+        let mut flow = Flow::for_system(id, FlowConfig::default()).unwrap();
+        let d = flow.rtl().unwrap();
         assert!(
             d.dropped_symbols.iter().any(|s| s == dropped),
             "{id}: expected `{dropped}` dropped, got {:?}",
@@ -164,14 +166,14 @@ fn export_roundtrips_through_design() {
     // RTL backend builds.
     for e in corpus() {
         let ex = dimsynth::report::export::export_system(e.id, Q16_15).unwrap();
-        let m = newton::load_entry(&e).unwrap();
-        let a = pisearch::analyze_optimized(&m, e.target).unwrap();
-        let d = rtl::build(&a, Q16_15);
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        let latency = flow.latency().unwrap();
+        let d = flow.rtl().unwrap();
         assert_eq!(ex.ports.len(), d.num_inputs(), "{}", e.id);
         assert_eq!(ex.exponents.len(), d.num_outputs(), "{}", e.id);
         for (ue, de) in ex.exponents.iter().zip(d.units.iter()) {
             assert_eq!(ue, &de.exponents, "{}", e.id);
         }
-        assert_eq!(ex.latency, rtl::module_latency(&d, Policy::ParallelPerPi));
+        assert_eq!(ex.latency, latency);
     }
 }

@@ -4,6 +4,7 @@
 //! Π-search invariants must hold for randomized synthetic systems.
 
 use dimsynth::fixedpoint::{self, QFormat, Q16_15};
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::newton::corpus;
 use dimsynth::pisearch::{self, RMatrix};
 use dimsynth::rational::Rational;
@@ -100,11 +101,9 @@ fn prop_div_mul_roundtrip() {
 fn prop_three_level_equivalence_randomized() {
     let mut rng = Lfsr32::new(0x3117);
     for e in corpus() {
-        let entry = dimsynth::newton::by_id(e.id).unwrap();
-        let m = dimsynth::newton::load_entry(&entry).unwrap();
-        let a = pisearch::analyze_optimized(&m, entry.target).unwrap();
-        let d = rtl::build(&a, Q16_15);
-        let mapped = synth::map_design(&d);
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        let d = flow.rtl().unwrap().clone();
+        let mapped = flow.netlist().unwrap();
         for trial in 0..4 {
             let inputs: Vec<i64> = (0..d.num_inputs())
                 .map(|_| {
@@ -176,22 +175,24 @@ fn prop_monomial_compositionality_bound() {
 #[test]
 fn prop_random_formats_agree() {
     let mut rng = Lfsr32::new(0xF0F0);
+    // One session across all random formats: parse/Π-search stay cached,
+    // `set_qformat` rebuilds only the RTL stage.
+    let mut flow = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
     for _ in 0..6 {
         let frac = 5 + rng.below(18) as u32; // 5..=22
         let int = 6 + rng.below(10) as u32; // 6..=15
         let q = QFormat::new(int, frac);
-        let entry = dimsynth::newton::by_id("pendulum").unwrap();
-        let m = dimsynth::newton::load_entry(&entry).unwrap();
-        let a = pisearch::analyze_optimized(&m, entry.target).unwrap();
-        let d = rtl::build(&a, q);
+        flow.set_qformat(q);
+        let d = flow.rtl().unwrap();
         for _ in 0..5 {
             let inputs: Vec<i64> =
                 (0..d.num_inputs()).map(|_| q.from_f64(rng.range(0.3, 5.0))).collect();
             assert_eq!(
-                rtl::run_once(&d, &inputs).outputs,
-                rtl::sim::reference_outputs(&d, &inputs),
+                rtl::run_once(d, &inputs).outputs,
+                rtl::sim::reference_outputs(d, &inputs),
                 "format {q}"
             );
         }
     }
+    assert_eq!(flow.counts().pis, 1, "Π-search must not recompute per format");
 }

@@ -1,0 +1,132 @@
+//! Memoization semantics of the [`Flow`] compilation-session API:
+//! per-stage recompute counts, downstream-only invalidation on config
+//! change, and parallel/sequential equivalence of the [`FlowSet`]
+//! corpus driver.
+
+use dimsynth::fixedpoint::QFormat;
+use dimsynth::flow::{Flow, FlowConfig, FlowSet, StageCounts};
+
+fn small_config() -> FlowConfig {
+    FlowConfig { power_samples: 2, ..FlowConfig::default() }
+}
+
+#[test]
+fn every_stage_computes_once_across_repeated_queries() {
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    // Query the deepest stage repeatedly: the whole upstream chain must
+    // compute exactly once.
+    let first = flow.power().unwrap();
+    let again = flow.power().unwrap();
+    assert_eq!(first.mw_6mhz, again.mw_6mhz);
+    assert_eq!(first.activity.cycles, again.activity.cycles);
+
+    // Re-query every stage; nothing recomputes.
+    flow.parsed().unwrap();
+    flow.pis().unwrap();
+    flow.rtl().unwrap();
+    flow.netlist().unwrap();
+    flow.timing().unwrap();
+    flow.power().unwrap();
+    flow.verilog().unwrap();
+    flow.latency().unwrap();
+
+    let c = flow.counts();
+    assert_eq!(
+        c,
+        StageCounts {
+            parsed: 1,
+            pis: 1,
+            rtl: 1,
+            netlist: 1,
+            timing: 1,
+            power: 1,
+            verilog: 1,
+        },
+        "each stage must compute exactly once"
+    );
+}
+
+#[test]
+fn qformat_change_invalidates_rtl_downstream_but_not_parse_or_pis() {
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    flow.timing().unwrap();
+    flow.power().unwrap();
+    let before = flow.counts();
+
+    flow.set_qformat(QFormat::new(12, 11));
+    flow.timing().unwrap();
+    flow.power().unwrap();
+    let after = flow.counts();
+
+    assert_eq!(after.parsed, before.parsed, "parse must stay cached");
+    assert_eq!(after.pis, before.pis, "Π-search must stay cached");
+    assert_eq!(after.rtl, before.rtl + 1, "RTL must rebuild");
+    assert_eq!(after.netlist, before.netlist + 1, "netlist must remap");
+    assert_eq!(after.timing, before.timing + 1, "timing must rerun");
+    assert_eq!(after.power, before.power + 1, "power must remeasure");
+}
+
+#[test]
+fn power_stimulus_change_invalidates_only_the_power_stage() {
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    flow.timing().unwrap();
+    let p1 = flow.power().unwrap();
+    let before = flow.counts();
+
+    flow.set_power_stimulus(2, 0xBEEF);
+    let p2 = flow.power().unwrap();
+    flow.timing().unwrap();
+    let after = flow.counts();
+
+    assert_eq!(after.parsed, before.parsed);
+    assert_eq!(after.pis, before.pis);
+    assert_eq!(after.rtl, before.rtl);
+    assert_eq!(after.netlist, before.netlist);
+    assert_eq!(after.timing, before.timing, "timing does not depend on stimulus");
+    assert_eq!(after.power, before.power + 1);
+    // Different seed → different measured activity (overwhelmingly).
+    assert_ne!(p1.activity.toggles_per_cycle, p2.activity.toggles_per_cycle);
+}
+
+#[test]
+fn cached_results_match_fresh_sessions_after_invalidation() {
+    // A session that sweeps away from a config and back must agree with
+    // a fresh session at the final config (cache depth is one, so the
+    // return trip recomputes — but bit-exactly).
+    let mut swept = Flow::for_system("beam", small_config()).unwrap();
+    let cells_q16 = swept.netlist().unwrap().lut4_cells;
+    swept.set_qformat(QFormat::new(8, 7));
+    let cells_q8 = swept.netlist().unwrap().lut4_cells;
+    assert!(cells_q8 < cells_q16);
+    swept.set_qformat(QFormat::new(16, 15));
+    assert_eq!(swept.netlist().unwrap().lut4_cells, cells_q16);
+
+    let mut fresh = Flow::for_system("beam", small_config()).unwrap();
+    assert_eq!(fresh.netlist().unwrap().lut4_cells, cells_q16);
+}
+
+#[test]
+fn flowset_parallel_results_are_identical_to_sequential() {
+    type Row = (String, usize, usize, u64, f64, f64, u32);
+    let summarize = |f: &mut Flow| -> Row {
+        let (cells, gates) = {
+            let m = f.netlist().unwrap();
+            (m.lut4_cells, m.gate_count)
+        };
+        let timing = f.timing().unwrap();
+        let power = f.power().unwrap();
+        (
+            f.id().to_string(),
+            cells,
+            gates,
+            f.latency().unwrap(),
+            timing.fmax_mhz,
+            power.activity.toggles_per_cycle,
+            power.activity.activations,
+        )
+    };
+    let sequential: Vec<Row> = FlowSet::corpus(small_config()).run_sequential(summarize);
+    let parallel: Vec<Row> = FlowSet::corpus(small_config()).run_parallel(summarize);
+    assert_eq!(sequential.len(), 7);
+    assert_eq!(sequential, parallel, "parallel corpus run must be bit-identical");
+}

@@ -8,11 +8,10 @@
 //! outputs, cycle counts, and exact per-net toggle counts for each lane.
 
 use dimsynth::fixedpoint::Q16_15;
+use dimsynth::flow::{Flow, FlowConfig};
 use dimsynth::newton::corpus;
-use dimsynth::pisearch::analyze_optimized;
-use dimsynth::rtl::ir;
 use dimsynth::stim::{Lfsr32, LfsrBank64};
-use dimsynth::synth::{self, GateSim, WordSim, LANES};
+use dimsynth::synth::{GateSim, WordSim, LANES};
 
 /// Minimum simulated cycles per design (per lane).
 const MIN_CYCLES: u64 = 10_000;
@@ -20,10 +19,9 @@ const MIN_CYCLES: u64 = 10_000;
 #[test]
 fn word_engine_matches_scalar_oracle_lane_by_lane() {
     for e in corpus::corpus() {
-        let m = corpus::load_entry(&e).unwrap();
-        let a = analyze_optimized(&m, e.target).unwrap();
-        let design = ir::build(&a, Q16_15);
-        let mapped = synth::map_design(&design);
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        let design = flow.rtl().unwrap().clone();
+        let mapped = flow.netlist().unwrap();
         let nl = &mapped.netlist;
         let q = design.q;
         let seeds = LfsrBank64::lane_seeds(0xD1FF);
@@ -121,11 +119,9 @@ fn word_engine_aggregates_match_scalar_sums() {
     // Cross-check the word-parallel aggregate counters (popcount per-net
     // totals and the bit-plane per-lane totals) against scalar sums on
     // one design — these are the counters the power model consumes.
-    let e = corpus::by_id("pendulum").unwrap();
-    let m = corpus::load_entry(&e).unwrap();
-    let a = analyze_optimized(&m, e.target).unwrap();
-    let design = ir::build(&a, Q16_15);
-    let mapped = synth::map_design(&design);
+    let mut flow = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+    let design = flow.rtl().unwrap().clone();
+    let mapped = flow.netlist().unwrap();
     let seeds = LfsrBank64::lane_seeds(0xA66A);
 
     let mut word = WordSim::new(&mapped.netlist);
