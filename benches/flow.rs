@@ -1,5 +1,6 @@
 //! Bench F1: compilation-session throughput — cold vs memoized full-corpus
-//! flow, and sequential vs parallel [`FlowSet`] driving. Emits
+//! flow, sequential vs parallel [`FlowSet`] driving, and disk-cold vs
+//! disk-warm runs against the persistent artifact store. Emits
 //! `BENCH_flow.json` so CI can track the session API's perf trajectory.
 //!
 //! Needs no artifacts — this is the pure compilation path.
@@ -10,7 +11,8 @@
 //! ```
 
 use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
-use dimsynth::flow::{worker, Flow, FlowConfig, FlowSet};
+use dimsynth::flow::{worker, ArtifactStore, Flow, FlowConfig, FlowSet};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Query every stage of one session (the full Table-1 workload).
@@ -50,13 +52,48 @@ fn main() -> anyhow::Result<()> {
     println!("memoized re-query   {:>12}  ({memo_speedup:.0}x faster)", fmt_duration(warm));
 
     // Cold parallel: fresh sessions, one flow per scoped worker.
-    let mut pset = FlowSet::corpus(config);
+    let mut pset = FlowSet::corpus(config.clone());
     let t = Instant::now();
     let par_rows = pset.run_parallel(drive);
     let par = t.elapsed().max(Duration::from_nanos(1));
     assert_eq!(cold_rows, par_rows, "parallel results must be identical");
     let par_speedup = cold.as_secs_f64() / par.as_secs_f64();
     println!("cold parallel       {:>12}  ({par_speedup:.2}x vs sequential)", fmt_duration(par));
+
+    // Persistent store: disk-cold populates, then a disk-warm restart
+    // (fresh sessions, re-opened store — what a second process sees)
+    // must serve every stage from disk with zero recomputes.
+    let cache_dir =
+        std::env::temp_dir().join(format!("dimsynth-flow-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let store = Arc::new(ArtifactStore::open(&cache_dir)?);
+    let mut dset = FlowSet::corpus(config.clone()).with_store(store);
+    let t = Instant::now();
+    let disk_cold_rows = dset.run_sequential(drive);
+    let disk_cold = t.elapsed();
+    assert_eq!(cold_rows, disk_cold_rows, "store write-back must not change results");
+    drop(dset);
+
+    let store = Arc::new(ArtifactStore::open(&cache_dir)?);
+    let mut wset = FlowSet::corpus(config).with_store(store);
+    let t = Instant::now();
+    let disk_warm_rows = wset.run_sequential(drive);
+    let disk_warm = t.elapsed().max(Duration::from_nanos(1));
+    assert_eq!(cold_rows, disk_warm_rows, "disk-warm results must be bit-identical");
+    let warm_counts = wset.total_counts();
+    assert_eq!(warm_counts.recomputes(), 0, "disk-warm run recomputed: {warm_counts:?}");
+    let disk_speedup = cold.as_secs_f64() / disk_warm.as_secs_f64();
+    println!(
+        "disk-cold populate  {:>12}  (store at {})",
+        fmt_duration(disk_cold),
+        cache_dir.display()
+    );
+    println!(
+        "disk-warm restart   {:>12}  ({disk_speedup:.1}x vs cold, {} disk hits, 0 recomputes)",
+        fmt_duration(disk_warm),
+        warm_counts.disk_hits
+    );
+    let _ = std::fs::remove_dir_all(&cache_dir);
 
     write_metrics_json(
         "BENCH_flow.json",
@@ -68,8 +105,12 @@ fn main() -> anyhow::Result<()> {
             ("cold_sequential_ms", cold.as_secs_f64() * 1e3),
             ("memoized_requery_ms", warm.as_secs_f64() * 1e3),
             ("cold_parallel_ms", par.as_secs_f64() * 1e3),
+            ("disk_cold_ms", disk_cold.as_secs_f64() * 1e3),
+            ("disk_warm_ms", disk_warm.as_secs_f64() * 1e3),
+            ("disk_warm_hits", warm_counts.disk_hits as f64),
             ("memoized_speedup", memo_speedup),
             ("parallel_speedup", par_speedup),
+            ("disk_warm_speedup", disk_speedup),
         ],
     )?;
     println!("wrote BENCH_flow.json");

@@ -91,6 +91,26 @@ fn main() -> anyhow::Result<()> {
                 prev_err = rel;
             }
         }
+
+        // Return trip: revisit every format in reverse. The per-stage
+        // LRU (deeper than the 5-format sweep) must serve all of them —
+        // zero additional recomputes.
+        let counts_after_sweep = flow.counts();
+        for (i, f) in FORMATS.iter().rev() {
+            flow.set_qformat(QFormat::new(*i, *f));
+            flow.netlist()?;
+            flow.timing()?;
+        }
+        let counts_after_return = flow.counts();
+        assert_eq!(
+            counts_after_return.recomputes(),
+            counts_after_sweep.recomputes(),
+            "{sys}: return trips must hit the per-stage LRU, not recompute"
+        );
+        println!(
+            "return trip: 0 recomputes ({} LRU promotions)",
+            counts_after_return.memory_hits - counts_after_sweep.memory_hits
+        );
     }
     Ok(())
 }

@@ -1,4 +1,4 @@
-//! Flow configuration and stage fingerprinting.
+//! Flow configuration and stable stage fingerprinting.
 //!
 //! A [`FlowConfig`] carries every knob the compilation flow consumes —
 //! fixed-point format, target override, basis optimization, scheduling
@@ -7,9 +7,26 @@
 //! that mixes the stage's own config inputs with the upstream stage's
 //! fingerprint, so editing the config invalidates exactly the stages
 //! downstream of the change and nothing upstream of it.
-
-use std::collections::hash_map::DefaultHasher;
-use std::hash::{Hash, Hasher};
+//!
+//! ## Stability guarantee
+//!
+//! Fingerprints are persisted by the on-disk artifact store
+//! ([`super::store`]), so the key function must be *stable*: the same
+//! inputs must hash to the same 64-bit value on every process, platform,
+//! and Rust release. `std::hash::DefaultHasher` guarantees none of that
+//! (its algorithm is explicitly unspecified and has changed between
+//! releases), which would silently poison or invalidate a persisted
+//! cache. [`StableHasher`] is therefore a hand-rolled FNV-1a 64 over a
+//! canonical byte encoding:
+//!
+//! * integers are encoded little-endian at fixed width;
+//! * strings are length-prefixed (so `("ab","c")` ≠ `("a","bc")`);
+//! * `f64`s are encoded by IEEE-754 bit pattern after canonicalizing
+//!   `-0.0` to `0.0` and all NaNs to one bit pattern, so numerically
+//!   equal configs share a fingerprint.
+//!
+//! Changing any of these rules is a cache-format change and must bump
+//! [`super::store::STORE_FORMAT_VERSION`].
 
 use crate::fixedpoint::{QFormat, Q16_15};
 use crate::power::{PowerModel, ICE40};
@@ -65,38 +82,117 @@ impl Default for FlowConfig {
     }
 }
 
-/// Hash one value into a 64-bit fingerprint.
-pub(crate) fn fingerprint<T: Hash>(value: &T) -> u64 {
-    let mut h = DefaultHasher::new();
-    value.hash(&mut h);
-    h.finish()
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit hasher over a canonical byte encoding.
+///
+/// Unlike `std::hash::DefaultHasher`, the output is fully specified and
+/// stable across processes, platforms, and Rust releases — the property
+/// the persistent artifact store ([`super::store`]) depends on. Methods
+/// consume and return the hasher so fingerprints chain fluently:
+///
+/// ```
+/// use dimsynth::flow::config::StableHasher;
+///
+/// let a = StableHasher::new().str("corpus").str("pendulum").finish();
+/// let b = StableHasher::new().str("corpus").str("pendulum").finish();
+/// assert_eq!(a, b);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher { state: FNV_OFFSET }
+    }
+
+    /// Fold raw bytes into the state (FNV-1a: XOR then multiply).
+    pub fn bytes(mut self, bytes: &[u8]) -> StableHasher {
+        for &b in bytes {
+            self.state = (self.state ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn u8(self, v: u8) -> StableHasher {
+        self.bytes(&[v])
+    }
+
+    pub fn bool(self, v: bool) -> StableHasher {
+        self.u8(v as u8)
+    }
+
+    pub fn u32(self, v: u32) -> StableHasher {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    pub fn u64(self, v: u64) -> StableHasher {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    /// IEEE-754 bits after [`canonical_f64_bits`] normalization.
+    pub fn f64(self, v: f64) -> StableHasher {
+        self.u64(canonical_f64_bits(v))
+    }
+
+    /// Length-prefixed UTF-8 bytes, so adjacent strings cannot alias.
+    pub fn str(self, s: &str) -> StableHasher {
+        self.u64(s.len() as u64).bytes(s.as_bytes())
+    }
+
+    pub fn finish(self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> StableHasher {
+        StableHasher::new()
+    }
+}
+
+/// The canonical bit pattern of an `f64` for hashing: `-0.0` maps to
+/// `0.0` (they compare equal, so numerically identical configs — e.g.
+/// `vdd: -0.0` vs `0.0` — must share a fingerprint) and every NaN maps
+/// to one pattern.
+pub fn canonical_f64_bits(v: f64) -> u64 {
+    if v == 0.0 {
+        0.0f64.to_bits()
+    } else if v.is_nan() {
+        f64::NAN.to_bits()
+    } else {
+        v.to_bits()
+    }
 }
 
 /// Mix an upstream fingerprint with a stage tag and the stage's own
 /// config fingerprint.
 pub(crate) fn mix(stage_tag: u64, upstream: u64, own: u64) -> u64 {
-    let mut h = DefaultHasher::new();
-    stage_tag.hash(&mut h);
-    upstream.hash(&mut h);
-    own.hash(&mut h);
-    h.finish()
+    StableHasher::new().u64(stage_tag).u64(upstream).u64(own).finish()
 }
 
-/// Hash a slice of `f64` model constants bit-exactly.
+/// Hash a slice of `f64` model constants (canonical bits, length
+/// prefixed).
 pub(crate) fn fingerprint_f64s(values: &[f64]) -> u64 {
-    let bits: Vec<u64> = values.iter().map(|v| v.to_bits()).collect();
-    fingerprint(&bits)
+    let mut h = StableHasher::new().u64(values.len() as u64);
+    for &v in values {
+        h = h.f64(v);
+    }
+    h.finish()
 }
 
 impl FlowConfig {
     /// Fingerprint of the inputs the Π-search stage consumes.
     pub(crate) fn pis_inputs_fp(&self, effective_target: &str) -> u64 {
-        fingerprint(&(effective_target, self.optimize_basis))
+        StableHasher::new().str(effective_target).bool(self.optimize_basis).finish()
     }
 
     /// Fingerprint of the inputs the RTL stage consumes.
     pub(crate) fn rtl_inputs_fp(&self) -> u64 {
-        fingerprint(&self.qformat)
+        StableHasher::new().u32(self.qformat.int_bits).u32(self.qformat.frac_bits).finish()
     }
 
     /// Fingerprint of the inputs the timing stage consumes.
@@ -112,6 +208,72 @@ impl FlowConfig {
     /// Fingerprint of the inputs the power stage consumes.
     pub(crate) fn power_inputs_fp(&self) -> u64 {
         let model = fingerprint_f64s(&[self.power.vdd, self.power.c_eff, self.power.p_static]);
-        fingerprint(&(self.power_samples, self.power_seed, model))
+        StableHasher::new().u32(self.power_samples).u32(self.power_seed).u64(model).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_fnv1a_vectors() {
+        // Published FNV-1a 64 test vectors: the empty string hashes to
+        // the offset basis; "a" and "foobar" to the classic values. This
+        // pins the algorithm — if it ever drifts, persisted caches break.
+        assert_eq!(StableHasher::new().finish(), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(StableHasher::new().bytes(b"a").finish(), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(StableHasher::new().bytes(b"foobar").finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn length_prefix_prevents_string_aliasing() {
+        let ab_c = StableHasher::new().str("ab").str("c").finish();
+        let a_bc = StableHasher::new().str("a").str("bc").finish();
+        assert_ne!(ab_c, a_bc);
+    }
+
+    #[test]
+    fn negative_zero_and_nan_canonicalize() {
+        assert_eq!(canonical_f64_bits(-0.0), canonical_f64_bits(0.0));
+        assert_eq!(canonical_f64_bits(f64::NAN), canonical_f64_bits(-f64::NAN));
+        assert_ne!(canonical_f64_bits(1.0), canonical_f64_bits(-1.0));
+        assert_eq!(fingerprint_f64s(&[-0.0, 1.5]), fingerprint_f64s(&[0.0, 1.5]));
+    }
+
+    #[test]
+    fn negative_zero_vdd_shares_power_fingerprint() {
+        // `vdd: -0.0` vs `0.0` used to spuriously invalidate the power
+        // stage (bit-pattern hashing without canonicalization).
+        let a = FlowConfig {
+            power: PowerModel { vdd: 0.0, ..ICE40 },
+            ..FlowConfig::default()
+        };
+        let b = FlowConfig {
+            power: PowerModel { vdd: -0.0, ..ICE40 },
+            ..FlowConfig::default()
+        };
+        assert_eq!(a.power_inputs_fp(), b.power_inputs_fp());
+    }
+
+    #[test]
+    fn stage_input_fingerprints_react_to_their_inputs_only() {
+        let base = FlowConfig::default();
+        let q = FlowConfig { qformat: QFormat::new(12, 11), ..FlowConfig::default() };
+        assert_ne!(base.rtl_inputs_fp(), q.rtl_inputs_fp());
+        assert_eq!(base.timing_inputs_fp(), q.timing_inputs_fp());
+        assert_eq!(base.power_inputs_fp(), q.power_inputs_fp());
+
+        let p = FlowConfig { power_seed: 0xBEEF, ..FlowConfig::default() };
+        assert_ne!(base.power_inputs_fp(), p.power_inputs_fp());
+        assert_eq!(base.rtl_inputs_fp(), p.rtl_inputs_fp());
+    }
+
+    #[test]
+    fn mix_separates_stages_and_chains_upstream() {
+        assert_ne!(mix(1, 7, 9), mix(2, 7, 9));
+        assert_ne!(mix(1, 7, 9), mix(1, 8, 9));
+        assert_ne!(mix(1, 7, 9), mix(1, 7, 10));
+        assert_eq!(mix(3, 5, 11), mix(3, 5, 11));
     }
 }

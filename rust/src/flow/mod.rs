@@ -15,8 +15,35 @@
 //! * [`FlowSet`] — a corpus-wide driver running independent sessions
 //!   across all cores with scoped threads (each `Flow` owns its netlist,
 //!   so the fan-out is lock-free and deterministic).
+//! * [`ArtifactStore`] — the persistent, fingerprint-keyed artifact
+//!   store ([`store`]) that carries memoization across processes.
 //! * [`worker`] — the scoped-thread chunk fan-out shared by `FlowSet`
 //!   and the coordinator's 64-lane power-request dispatch.
+//!
+//! ## Caching model
+//!
+//! Every stage query resolves in lookup order:
+//!
+//! 1. **per-stage LRU** — each stage of each `Flow` keeps a small
+//!    in-memory LRU of recent artifacts, so A/B sweeps (e.g. the width
+//!    sweep's return trips) revisit warm entries for free;
+//! 2. **disk store** — when an [`ArtifactStore`] is attached
+//!    ([`Flow::set_store`], [`FlowSet::with_store`]), missing stages
+//!    are deserialized from the fingerprint-keyed on-disk store, which
+//!    is what makes a second process's warm start recompute nothing;
+//! 3. **compute** — and write back to the store (best-effort).
+//!
+//! [`StageCounts`] reports all three outcomes (per-stage compute
+//! counts, `memory_hits`, `disk_hits`).
+//!
+//! Stage fingerprints are produced by [`config::StableHasher`], a fully
+//! specified FNV-1a 64 over a canonical byte encoding — stable across
+//! processes, platforms, and Rust releases, which is the correctness
+//! foundation of the persistent store (a `DefaultHasher` key would
+//! silently invalidate or poison it). The on-disk entry format is
+//! versioned by [`store::STORE_FORMAT_VERSION`]; entries with a
+//! mismatched version, failed checksum, or any structural corruption
+//! are treated as clean misses and recomputed, never a crash.
 //!
 //! ```
 //! use dimsynth::flow::{Flow, FlowConfig};
@@ -38,8 +65,10 @@
 pub mod config;
 pub mod session;
 pub mod set;
+pub mod store;
 pub mod worker;
 
 pub use config::FlowConfig;
 pub use session::{Flow, PowerReport, StageCounts};
 pub use set::FlowSet;
+pub use store::{ArtifactStore, StageStats, StoreStats, STORE_FORMAT_VERSION};

@@ -1,7 +1,15 @@
 //! The [`Flow`] compilation session: one system, one config, a memoized
 //! graph of typed stage artifacts.
+//!
+//! Every stage query resolves in lookup order **per-stage LRU → disk
+//! store → compute** (steps 2–3 only when a persistent store is
+//! attached via [`Flow::set_store`]); [`StageCounts`] distinguishes the
+//! three outcomes.
 
-use super::config::{fingerprint, mix, FlowConfig};
+use std::sync::Arc;
+
+use super::config::{mix, FlowConfig, StableHasher};
+use super::store::{Artifact, ArtifactStore, Lru, LruHit};
 use crate::newton::{self, CorpusEntry, SystemModel};
 use crate::pisearch::{self, CostModel, PiAnalysis};
 use crate::power::{self, ActivityReport, PowerModel};
@@ -18,6 +26,11 @@ const TAG_NETLIST: u64 = 0x04;
 const TAG_TIMING: u64 = 0x05;
 const TAG_POWER: u64 = 0x06;
 const TAG_VERILOG: u64 = 0x07;
+
+/// Depth of each per-stage in-memory LRU: deep enough that an A/B sweep
+/// like the width sweep (5 formats) returns to warm entries instead of
+/// recomputing.
+const STAGE_LRU_DEPTH: usize = 8;
 
 /// Where a flow's Newton description comes from.
 #[derive(Clone, Debug)]
@@ -44,11 +57,15 @@ impl FlowSource {
         }
     }
 
+    /// Stable content fingerprint of the Newton source (hashes the text,
+    /// so the same system keys the same artifacts in every process).
     fn fingerprint(&self) -> u64 {
         match self {
-            FlowSource::Corpus(e) => fingerprint(&("corpus", e.id, e.source)),
+            FlowSource::Corpus(e) => {
+                StableHasher::new().str("corpus").str(e.id).str(e.source).finish()
+            }
             FlowSource::Inline { name, source, .. } => {
-                fingerprint(&("inline", name.as_str(), source.as_str()))
+                StableHasher::new().str("inline").str(name).str(source).finish()
             }
         }
     }
@@ -67,34 +84,12 @@ impl FlowSource {
     }
 }
 
-/// One memoized stage slot: the artifact plus the fingerprint it was
-/// computed under.
-#[derive(Clone, Debug)]
-struct Stage<T> {
-    slot: Option<(u64, T)>,
-}
-
-impl<T> Stage<T> {
-    const fn new() -> Stage<T> {
-        Stage { slot: None }
-    }
-
-    fn is_fresh(&self, fp: u64) -> bool {
-        matches!(&self.slot, Some((cached, _)) if *cached == fp)
-    }
-
-    fn store(&mut self, fp: u64, value: T) {
-        self.slot = Some((fp, value));
-    }
-
-    fn value(&self) -> &T {
-        self.slot.as_ref().map(|(_, v)| v).expect("stage was just ensured")
-    }
-}
-
-/// How many times each stage has actually computed (cache misses). Used
-/// by tests and the memoization bench; repeated queries of an unchanged
-/// config must not grow these.
+/// Per-stage cache telemetry: how often each stage actually computed
+/// (cache misses, one counter per stage), plus how many stage queries
+/// were served without computing — from a deeper entry of the in-memory
+/// LRU (`memory_hits`, e.g. a sweep's return trip) or deserialized from
+/// the persistent store (`disk_hits`, e.g. a warm process start).
+/// Repeated queries of an unchanged config touch no counter at all.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
 pub struct StageCounts {
     pub parsed: u32,
@@ -104,6 +99,35 @@ pub struct StageCounts {
     pub timing: u32,
     pub power: u32,
     pub verilog: u32,
+    /// Stage queries served by promoting a non-front LRU entry.
+    pub memory_hits: u32,
+    /// Stage artifacts loaded from the persistent on-disk store.
+    pub disk_hits: u32,
+}
+
+impl StageCounts {
+    /// Total stage computations (cache misses) across all stages.
+    pub fn recomputes(&self) -> u32 {
+        self.parsed + self.pis + self.rtl + self.netlist + self.timing + self.power + self.verilog
+    }
+}
+
+impl std::ops::Add for StageCounts {
+    type Output = StageCounts;
+
+    fn add(self, rhs: StageCounts) -> StageCounts {
+        StageCounts {
+            parsed: self.parsed + rhs.parsed,
+            pis: self.pis + rhs.pis,
+            rtl: self.rtl + rhs.rtl,
+            netlist: self.netlist + rhs.netlist,
+            timing: self.timing + rhs.timing,
+            power: self.power + rhs.power,
+            verilog: self.verilog + rhs.verilog,
+            memory_hits: self.memory_hits + rhs.memory_hits,
+            disk_hits: self.disk_hits + rhs.disk_hits,
+        }
+    }
 }
 
 /// A power query answer: the measured activity plus the model it was
@@ -134,20 +158,24 @@ impl PowerReport {
 /// timing/power. Each stage is computed on first demand and cached keyed
 /// on the config and the upstream stage fingerprints, so re-queries are
 /// free and a config edit (e.g. [`Flow::set_qformat`]) recomputes only
-/// the stages downstream of the change.
+/// the stages downstream of the change. Each stage keeps a small LRU of
+/// recent artifacts (sweep return trips are free), and an optional
+/// shared [`ArtifactStore`] carries artifacts across processes.
 pub struct Flow {
     source: FlowSource,
     /// Fingerprint of the (immutable) source, computed once at
     /// construction so deep stage queries don't re-hash the Newton text.
     source_fp: u64,
     config: FlowConfig,
-    parsed: Stage<SystemModel>,
-    pis: Stage<PiAnalysis>,
-    rtl: Stage<PiModuleDesign>,
-    netlist: Stage<MappedDesign>,
-    timing: Stage<TimingReport>,
-    power: Stage<PowerReport>,
-    verilog: Stage<String>,
+    /// Persistent artifact store consulted between the LRU and compute.
+    store: Option<Arc<ArtifactStore>>,
+    parsed: Lru<SystemModel>,
+    pis: Lru<PiAnalysis>,
+    rtl: Lru<PiModuleDesign>,
+    netlist: Lru<MappedDesign>,
+    timing: Lru<TimingReport>,
+    power: Lru<PowerReport>,
+    verilog: Lru<String>,
     counts: StageCounts,
 }
 
@@ -157,13 +185,14 @@ impl Flow {
             source_fp: source.fingerprint(),
             source,
             config,
-            parsed: Stage::new(),
-            pis: Stage::new(),
-            rtl: Stage::new(),
-            netlist: Stage::new(),
-            timing: Stage::new(),
-            power: Stage::new(),
-            verilog: Stage::new(),
+            store: None,
+            parsed: Lru::new(STAGE_LRU_DEPTH),
+            pis: Lru::new(STAGE_LRU_DEPTH),
+            rtl: Lru::new(STAGE_LRU_DEPTH),
+            netlist: Lru::new(STAGE_LRU_DEPTH),
+            timing: Lru::new(STAGE_LRU_DEPTH),
+            power: Lru::new(STAGE_LRU_DEPTH),
+            verilog: Lru::new(STAGE_LRU_DEPTH),
             counts: StageCounts::default(),
         }
     }
@@ -190,6 +219,24 @@ impl Flow {
             },
             config,
         )
+    }
+
+    /// Attach a persistent artifact store: stage lookups then go LRU →
+    /// disk → compute, and computed artifacts are written back
+    /// (best-effort — storage failures never fail compilation).
+    pub fn set_store(&mut self, store: Arc<ArtifactStore>) {
+        self.store = Some(store);
+    }
+
+    /// Builder-style [`Flow::set_store`].
+    pub fn with_store(mut self, store: Arc<ArtifactStore>) -> Flow {
+        self.set_store(store);
+        self
+    }
+
+    /// The attached persistent store, if any.
+    pub fn store(&self) -> Option<&Arc<ArtifactStore>> {
+        self.store.as_ref()
     }
 
     /// The system identifier this session compiles.
@@ -239,24 +286,54 @@ impl Flow {
         self.config.power_seed = seed;
     }
 
-    /// Per-stage compute counts (cache misses so far).
+    /// Per-stage cache telemetry (compute counts and hit sources).
     pub fn counts(&self) -> StageCounts {
         self.counts
+    }
+
+    /// Best-effort write-back to the attached store.
+    fn save_artifact<A: Artifact>(&self, fp: u64, artifact: &A) {
+        if let Some(store) = &self.store {
+            if let Err(e) = store.save(fp, artifact) {
+                eprintln!(
+                    "warning: flow store write failed for stage `{}`: {e}",
+                    A::STAGE.dir_name()
+                );
+            }
+        }
+    }
+
+    /// Disk half of the lookup order (`None` when no store is attached
+    /// or the entry is absent/invalid).
+    fn load_artifact<A: Artifact>(&self, fp: u64) -> Option<A> {
+        self.store.as_ref()?.load(fp)
     }
 
     // ---- stage graph -----------------------------------------------------
     //
     // Each `ensure_*` returns the stage's fingerprint after guaranteeing
-    // the cached artifact matches it; the public accessors borrow the
-    // cached value afterwards. Fingerprints chain upstream→downstream, so
-    // freshness checks pull the whole prefix of the pipeline on demand.
+    // the front of the stage's LRU holds the matching artifact; the
+    // public accessors borrow that front value afterwards. Fingerprints
+    // chain upstream→downstream, so freshness checks pull the whole
+    // prefix of the pipeline on demand, and the lookup order at every
+    // stage is LRU → disk store → compute.
 
     fn ensure_parsed(&mut self) -> anyhow::Result<u64> {
         let fp = mix(TAG_PARSE, self.source_fp, 0);
-        if !self.parsed.is_fresh(fp) {
-            let model = self.source.load()?;
-            self.counts.parsed += 1;
-            self.parsed.store(fp, model);
+        match self.parsed.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(model) = self.load_artifact::<SystemModel>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.parsed.insert(fp, model);
+                } else {
+                    let model = self.source.load()?;
+                    self.counts.parsed += 1;
+                    self.save_artifact(fp, &model);
+                    self.parsed.insert(fp, model);
+                }
+            }
         }
         Ok(fp)
     }
@@ -265,15 +342,25 @@ impl Flow {
         let upstream = self.ensure_parsed()?;
         let own = self.config.pis_inputs_fp(self.target());
         let fp = mix(TAG_PIS, upstream, own);
-        if !self.pis.is_fresh(fp) {
-            let target = self.target().to_string();
-            let model = self.parsed.value();
-            let mut analysis = pisearch::analyze(model, &target)?;
-            if self.config.optimize_basis {
-                pisearch::optimize(&mut analysis, &CostModel::default());
+        match self.pis.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(analysis) = self.load_artifact::<PiAnalysis>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.pis.insert(fp, analysis);
+                } else {
+                    let target = self.target().to_string();
+                    let model = self.parsed.value();
+                    let mut analysis = pisearch::analyze(model, &target)?;
+                    if self.config.optimize_basis {
+                        pisearch::optimize(&mut analysis, &CostModel::default());
+                    }
+                    self.counts.pis += 1;
+                    self.save_artifact(fp, &analysis);
+                    self.pis.insert(fp, analysis);
+                }
             }
-            self.counts.pis += 1;
-            self.pis.store(fp, analysis);
         }
         Ok(fp)
     }
@@ -281,10 +368,20 @@ impl Flow {
     fn ensure_rtl(&mut self) -> anyhow::Result<u64> {
         let upstream = self.ensure_pis()?;
         let fp = mix(TAG_RTL, upstream, self.config.rtl_inputs_fp());
-        if !self.rtl.is_fresh(fp) {
-            let design = rtl::build(self.pis.value(), self.config.qformat);
-            self.counts.rtl += 1;
-            self.rtl.store(fp, design);
+        match self.rtl.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(design) = self.load_artifact::<PiModuleDesign>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.rtl.insert(fp, design);
+                } else {
+                    let design = rtl::build(self.pis.value(), self.config.qformat);
+                    self.counts.rtl += 1;
+                    self.save_artifact(fp, &design);
+                    self.rtl.insert(fp, design);
+                }
+            }
         }
         Ok(fp)
     }
@@ -292,10 +389,20 @@ impl Flow {
     fn ensure_netlist(&mut self) -> anyhow::Result<u64> {
         let upstream = self.ensure_rtl()?;
         let fp = mix(TAG_NETLIST, upstream, 0);
-        if !self.netlist.is_fresh(fp) {
-            let mapped = synth::map_design(self.rtl.value());
-            self.counts.netlist += 1;
-            self.netlist.store(fp, mapped);
+        match self.netlist.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(mapped) = self.load_artifact::<MappedDesign>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.netlist.insert(fp, mapped);
+                } else {
+                    let mapped = synth::map_design(self.rtl.value());
+                    self.counts.netlist += 1;
+                    self.save_artifact(fp, &mapped);
+                    self.netlist.insert(fp, mapped);
+                }
+            }
         }
         Ok(fp)
     }
@@ -303,10 +410,21 @@ impl Flow {
     fn ensure_timing(&mut self) -> anyhow::Result<u64> {
         let upstream = self.ensure_netlist()?;
         let fp = mix(TAG_TIMING, upstream, self.config.timing_inputs_fp());
-        if !self.timing.is_fresh(fp) {
-            let report = timing::analyze(&self.netlist.value().netlist, &self.config.delay);
-            self.counts.timing += 1;
-            self.timing.store(fp, report);
+        match self.timing.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(report) = self.load_artifact::<TimingReport>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.timing.insert(fp, report);
+                } else {
+                    let report =
+                        timing::analyze(&self.netlist.value().netlist, &self.config.delay);
+                    self.counts.timing += 1;
+                    self.save_artifact(fp, &report);
+                    self.timing.insert(fp, report);
+                }
+            }
         }
         Ok(fp)
     }
@@ -314,22 +432,32 @@ impl Flow {
     fn ensure_power(&mut self) -> anyhow::Result<u64> {
         let upstream = self.ensure_netlist()?;
         let fp = mix(TAG_POWER, upstream, self.config.power_inputs_fp());
-        if !self.power.is_fresh(fp) {
-            let activity = power::measure_activity(
-                &self.netlist.value().netlist,
-                self.rtl.value(),
-                self.config.power_samples,
-                self.config.power_seed,
-            );
-            let model = self.config.power;
-            let report = PowerReport {
-                activity,
-                model,
-                mw_6mhz: power::average_power_mw(&model, &activity, 6.0e6),
-                mw_12mhz: power::average_power_mw(&model, &activity, 12.0e6),
-            };
-            self.counts.power += 1;
-            self.power.store(fp, report);
+        match self.power.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(report) = self.load_artifact::<PowerReport>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.power.insert(fp, report);
+                } else {
+                    let activity = power::measure_activity(
+                        &self.netlist.value().netlist,
+                        self.rtl.value(),
+                        self.config.power_samples,
+                        self.config.power_seed,
+                    );
+                    let model = self.config.power;
+                    let report = PowerReport {
+                        activity,
+                        model,
+                        mw_6mhz: power::average_power_mw(&model, &activity, 6.0e6),
+                        mw_12mhz: power::average_power_mw(&model, &activity, 12.0e6),
+                    };
+                    self.counts.power += 1;
+                    self.save_artifact(fp, &report);
+                    self.power.insert(fp, report);
+                }
+            }
         }
         Ok(fp)
     }
@@ -337,10 +465,20 @@ impl Flow {
     fn ensure_verilog(&mut self) -> anyhow::Result<u64> {
         let upstream = self.ensure_rtl()?;
         let fp = mix(TAG_VERILOG, upstream, 0);
-        if !self.verilog.is_fresh(fp) {
-            let text = rtl::verilog::emit(self.rtl.value());
-            self.counts.verilog += 1;
-            self.verilog.store(fp, text);
+        match self.verilog.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(text) = self.load_artifact::<String>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.verilog.insert(fp, text);
+                } else {
+                    let text = rtl::verilog::emit(self.rtl.value());
+                    self.counts.verilog += 1;
+                    self.save_artifact(fp, &text);
+                    self.verilog.insert(fp, text);
+                }
+            }
         }
         Ok(fp)
     }

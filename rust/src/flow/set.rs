@@ -7,7 +7,10 @@
 //! [`super::worker::parallel_map_chunks_mut`]. Results come back in
 //! corpus order, so parallel and sequential runs are interchangeable.
 
-use super::session::Flow;
+use std::sync::Arc;
+
+use super::session::{Flow, StageCounts};
+use super::store::ArtifactStore;
 use super::worker;
 use super::FlowConfig;
 use crate::newton;
@@ -31,6 +34,22 @@ impl FlowSet {
     /// A set over explicit sessions.
     pub fn from_flows(flows: Vec<Flow>) -> FlowSet {
         FlowSet { flows }
+    }
+
+    /// Attach one shared persistent [`ArtifactStore`] to every session.
+    /// The store is concurrent-writer safe (temp file + atomic rename),
+    /// so [`FlowSet::run_parallel`] workers — and entirely separate
+    /// processes — can populate one root simultaneously.
+    pub fn with_store(mut self, store: Arc<ArtifactStore>) -> FlowSet {
+        for flow in &mut self.flows {
+            flow.set_store(Arc::clone(&store));
+        }
+        self
+    }
+
+    /// Sum of the per-stage cache telemetry across all sessions.
+    pub fn total_counts(&self) -> StageCounts {
+        self.flows.iter().fold(StageCounts::default(), |acc, f| acc + f.counts())
     }
 
     pub fn len(&self) -> usize {

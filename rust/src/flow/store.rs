@@ -1,0 +1,999 @@
+//! Persistent, fingerprint-keyed artifact store and the per-stage
+//! in-memory LRU — what carries [`super::Flow`] memoization across
+//! processes.
+//!
+//! A stage lookup consults, in order:
+//!
+//! 1. the **per-stage LRU** ([`Lru`], one per stage per `Flow`) — covers
+//!    A/B sweeps whose return trips revisit a recent config;
+//! 2. the **on-disk store** ([`ArtifactStore`], shared via `Arc` across
+//!    sessions and threads) — covers warm starts of a new process;
+//! 3. **compute**, followed by a best-effort write-back to the store.
+//!
+//! ## On-disk format (version [`STORE_FORMAT_VERSION`])
+//!
+//! One file per artifact at `<root>/<stage>/<fingerprint:016x>.art`:
+//!
+//! ```text
+//! magic "DSARTFT\0" · u32 version · stage name · u64 fingerprint
+//! · u64 FNV-1a checksum of payload · u64 payload length · payload
+//! ```
+//!
+//! All integers are little-endian; strings are length-prefixed UTF-8;
+//! `f64`s are raw IEEE-754 bits (artifacts round-trip *bit-exactly* —
+//! canonicalization applies to fingerprints, not to stored values). The
+//! payload is the stage artifact serialized by its [`Artifact`] impl.
+//!
+//! The store is a cache, so it is **corruption-tolerant by design**:
+//! any header mismatch, failed checksum, truncation, or structural
+//! validation error makes [`ArtifactStore::load`] return `None` and the
+//! stage recomputes (and overwrites the bad entry) — it never panics or
+//! fails the flow. Writers are concurrency-safe: entries are written to
+//! a process-unique temp file and atomically renamed into place, so
+//! parallel corpus drivers (and separate processes) can share one root.
+
+use std::collections::VecDeque;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::config::StableHasher;
+use super::session::PowerReport;
+use crate::fixedpoint::{MonOp, QFormat};
+use crate::newton::{Symbol, SymbolKind, SystemModel};
+use crate::pisearch::{PiAnalysis, PiGroup};
+use crate::power::{ActivityReport, PowerModel};
+use crate::rational::Rational;
+use crate::rtl::{PiModuleDesign, PiUnit, Port};
+use crate::synth::{NetId, Netlist, Node};
+use crate::synth::techmap::MappedDesign;
+use crate::timing::TimingReport;
+use crate::units::{Dimension, NUM_BASE_DIMS};
+
+/// Version of the on-disk entry format. Bump on any change to the header
+/// layout, the payload encodings below, or the fingerprint function
+/// ([`super::config::StableHasher`] canonicalization rules) — version
+/// mismatch makes every old entry a clean miss.
+pub const STORE_FORMAT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"DSARTFT\0";
+
+/// The seven cached stages of a [`super::Flow`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StageKind {
+    Parsed,
+    Pis,
+    Rtl,
+    Netlist,
+    Timing,
+    Power,
+    Verilog,
+}
+
+impl StageKind {
+    pub const ALL: [StageKind; 7] = [
+        StageKind::Parsed,
+        StageKind::Pis,
+        StageKind::Rtl,
+        StageKind::Netlist,
+        StageKind::Timing,
+        StageKind::Power,
+        StageKind::Verilog,
+    ];
+
+    /// Subdirectory (and header stage label) of this stage's entries.
+    pub fn dir_name(self) -> &'static str {
+        match self {
+            StageKind::Parsed => "parsed",
+            StageKind::Pis => "pis",
+            StageKind::Rtl => "rtl",
+            StageKind::Netlist => "netlist",
+            StageKind::Timing => "timing",
+            StageKind::Power => "power",
+            StageKind::Verilog => "verilog",
+        }
+    }
+}
+
+// ---- canonical byte codec ------------------------------------------------
+
+/// Append-only encoder for the canonical byte format.
+#[derive(Default)]
+pub(crate) struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    fn put_u16(&mut self, v: u16) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    fn put_u32(&mut self, v: u32) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    fn put_i64(&mut self, v: i64) {
+        self.put_bytes(&v.to_le_bytes());
+    }
+
+    /// Raw IEEE-754 bits: stored artifacts round-trip bit-exactly.
+    fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Bounds-checked decoder; every read can fail cleanly on truncation.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow::anyhow!("artifact truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_bool(&mut self) -> anyhow::Result<bool> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(anyhow::anyhow!("bad bool byte {v}")),
+        }
+    }
+
+    fn take_u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn take_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn take_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_i64(&mut self) -> anyhow::Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_usize(&mut self) -> anyhow::Result<usize> {
+        let v = self.take_u64()?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("length {v} does not fit usize"))
+    }
+
+    /// A sequence length whose `len` elements (each at least
+    /// `elem_floor` bytes) must fit in the remaining input — rejects
+    /// corrupt lengths before any allocation sized by them.
+    fn take_len(&mut self, elem_floor: usize) -> anyhow::Result<usize> {
+        let len = self.take_usize()?;
+        let remaining = self.buf.len() - self.pos;
+        anyhow::ensure!(
+            len <= remaining / elem_floor.max(1),
+            "corrupt sequence length {len}"
+        );
+        Ok(len)
+    }
+
+    fn take_str(&mut self) -> anyhow::Result<String> {
+        let len = self.take_len(1)?;
+        Ok(std::str::from_utf8(self.take(len)?)?.to_string())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---- per-type encodings --------------------------------------------------
+
+/// A stage artifact the store can persist. The encoding is hand-rolled
+/// (no serde dependency) and versioned as a whole by
+/// [`STORE_FORMAT_VERSION`].
+pub(crate) trait Artifact: Sized {
+    const STAGE: StageKind;
+    fn encode(&self, w: &mut Writer);
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<Self>;
+}
+
+fn put_rational(w: &mut Writer, v: Rational) {
+    w.put_i64(v.num());
+    w.put_i64(v.den());
+}
+
+fn take_rational(r: &mut Reader<'_>) -> anyhow::Result<Rational> {
+    let num = r.take_i64()?;
+    let den = r.take_i64()?;
+    anyhow::ensure!(den > 0, "corrupt rational denominator {den}");
+    Ok(Rational::new(num, den))
+}
+
+fn put_dimension(w: &mut Writer, d: &Dimension) {
+    for &e in d.exps() {
+        put_rational(w, e);
+    }
+}
+
+fn take_dimension(r: &mut Reader<'_>) -> anyhow::Result<Dimension> {
+    let mut exps = [Rational::ZERO; NUM_BASE_DIMS];
+    for e in exps.iter_mut() {
+        *e = take_rational(r)?;
+    }
+    Ok(Dimension::from_exps(exps))
+}
+
+fn put_str_vec(w: &mut Writer, items: &[String]) {
+    w.put_usize(items.len());
+    for s in items {
+        w.put_str(s);
+    }
+}
+
+fn take_str_vec(r: &mut Reader<'_>) -> anyhow::Result<Vec<String>> {
+    let n = r.take_len(8)?;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        items.push(r.take_str()?);
+    }
+    Ok(items)
+}
+
+fn put_i64_vec(w: &mut Writer, items: &[i64]) {
+    w.put_usize(items.len());
+    for &v in items {
+        w.put_i64(v);
+    }
+}
+
+fn take_i64_vec(r: &mut Reader<'_>) -> anyhow::Result<Vec<i64>> {
+    let n = r.take_len(8)?;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        items.push(r.take_i64()?);
+    }
+    Ok(items)
+}
+
+impl Artifact for SystemModel {
+    const STAGE: StageKind = StageKind::Parsed;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_usize(self.symbols.len());
+        for s in &self.symbols {
+            w.put_str(&s.name);
+            put_dimension(w, &s.dimension);
+            w.put_u8(match s.kind {
+                SymbolKind::Signal => 0,
+                SymbolKind::Constant => 1,
+            });
+            match s.value {
+                Some(v) => {
+                    w.put_bool(true);
+                    w.put_f64(v);
+                }
+                None => w.put_bool(false),
+            }
+        }
+        put_str_vec(w, &self.relations);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<SystemModel> {
+        let name = r.take_str()?;
+        let n = r.take_len(1)?;
+        let mut symbols = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sym_name = r.take_str()?;
+            let dimension = take_dimension(r)?;
+            let kind = match r.take_u8()? {
+                0 => SymbolKind::Signal,
+                1 => SymbolKind::Constant,
+                v => anyhow::bail!("bad symbol kind {v}"),
+            };
+            let value = if r.take_bool()? { Some(r.take_f64()?) } else { None };
+            symbols.push(Symbol { name: sym_name, dimension, kind, value });
+        }
+        let relations = take_str_vec(r)?;
+        Ok(SystemModel { name, symbols, relations })
+    }
+}
+
+impl Artifact for PiAnalysis {
+    const STAGE: StageKind = StageKind::Pis;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.system);
+        put_str_vec(w, &self.symbols);
+        w.put_usize(self.target);
+        w.put_usize(self.groups.len());
+        for g in &self.groups {
+            put_i64_vec(w, &g.exponents);
+        }
+        w.put_usize(self.target_group);
+        w.put_usize(self.rank);
+        w.put_usize(self.nonparticipating.len());
+        for &i in &self.nonparticipating {
+            w.put_usize(i);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<PiAnalysis> {
+        let system = r.take_str()?;
+        let symbols = take_str_vec(r)?;
+        let k = symbols.len();
+        let target = r.take_usize()?;
+        anyhow::ensure!(target < k, "target index {target} out of range");
+        let n_groups = r.take_len(8)?;
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let exponents = take_i64_vec(r)?;
+            anyhow::ensure!(exponents.len() == k, "group arity mismatch");
+            groups.push(PiGroup { exponents });
+        }
+        let target_group = r.take_usize()?;
+        anyhow::ensure!(target_group < groups.len(), "target group out of range");
+        let rank = r.take_usize()?;
+        let n_np = r.take_len(8)?;
+        let mut nonparticipating = Vec::with_capacity(n_np);
+        for _ in 0..n_np {
+            let i = r.take_usize()?;
+            anyhow::ensure!(i < k, "non-participating index {i} out of range");
+            nonparticipating.push(i);
+        }
+        Ok(PiAnalysis { system, symbols, target, groups, target_group, rank, nonparticipating })
+    }
+}
+
+fn put_monop(w: &mut Writer, op: &MonOp) {
+    match op {
+        MonOp::Load(i) => {
+            w.put_u8(0);
+            w.put_usize(*i);
+        }
+        MonOp::LoadOne => w.put_u8(1),
+        MonOp::Mul(i) => {
+            w.put_u8(2);
+            w.put_usize(*i);
+        }
+        MonOp::Div(i) => {
+            w.put_u8(3);
+            w.put_usize(*i);
+        }
+    }
+}
+
+fn take_monop(r: &mut Reader<'_>, n_ports: usize) -> anyhow::Result<MonOp> {
+    // LoadOne references no port, so only the indexed ops are
+    // bounds-checked.
+    let op = match r.take_u8()? {
+        0 => MonOp::Load(r.take_usize()?),
+        1 => return Ok(MonOp::LoadOne),
+        2 => MonOp::Mul(r.take_usize()?),
+        3 => MonOp::Div(r.take_usize()?),
+        t => anyhow::bail!("bad monomial op tag {t}"),
+    };
+    if let MonOp::Load(i) | MonOp::Mul(i) | MonOp::Div(i) = &op {
+        anyhow::ensure!(*i < n_ports, "monomial op index {i} out of range");
+    }
+    Ok(op)
+}
+
+impl Artifact for PiModuleDesign {
+    const STAGE: StageKind = StageKind::Rtl;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_str(&self.system);
+        w.put_u32(self.q.int_bits);
+        w.put_u32(self.q.frac_bits);
+        w.put_usize(self.ports.len());
+        for p in &self.ports {
+            w.put_str(&p.name);
+            w.put_usize(p.symbol_index);
+        }
+        w.put_usize(self.units.len());
+        for u in &self.units {
+            w.put_str(&u.name);
+            put_i64_vec(w, &u.exponents);
+            w.put_usize(u.ops.len());
+            for op in &u.ops {
+                put_monop(w, op);
+            }
+            w.put_str(&u.expr);
+        }
+        w.put_usize(self.target_unit);
+        put_str_vec(w, &self.dropped_symbols);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<PiModuleDesign> {
+        let name = r.take_str()?;
+        let system = r.take_str()?;
+        let int_bits = r.take_u32()?;
+        let frac_bits = r.take_u32()?;
+        let n_ports = r.take_len(8)?;
+        let mut ports = Vec::with_capacity(n_ports);
+        for _ in 0..n_ports {
+            ports.push(Port { name: r.take_str()?, symbol_index: r.take_usize()? });
+        }
+        let n_units = r.take_len(8)?;
+        let mut units = Vec::with_capacity(n_units);
+        for _ in 0..n_units {
+            let unit_name = r.take_str()?;
+            let exponents = take_i64_vec(r)?;
+            anyhow::ensure!(exponents.len() == n_ports, "unit arity mismatch");
+            let n_ops = r.take_len(1)?;
+            let mut ops = Vec::with_capacity(n_ops);
+            for _ in 0..n_ops {
+                ops.push(take_monop(r, n_ports)?);
+            }
+            let expr = r.take_str()?;
+            units.push(PiUnit { name: unit_name, exponents, ops, expr });
+        }
+        let target_unit = r.take_usize()?;
+        anyhow::ensure!(target_unit < units.len(), "target unit out of range");
+        let dropped_symbols = take_str_vec(r)?;
+        Ok(PiModuleDesign {
+            name,
+            system,
+            q: QFormat::new(int_bits, frac_bits),
+            ports,
+            units,
+            target_unit,
+            dropped_symbols,
+        })
+    }
+}
+
+fn put_buses(w: &mut Writer, buses: &[(String, Vec<NetId>)]) {
+    w.put_usize(buses.len());
+    for (name, bits) in buses {
+        w.put_str(name);
+        w.put_usize(bits.len());
+        for &b in bits {
+            w.put_u32(b);
+        }
+    }
+}
+
+fn take_buses(r: &mut Reader<'_>, n_nodes: usize) -> anyhow::Result<Vec<(String, Vec<NetId>)>> {
+    let n = r.take_len(8)?;
+    let mut buses = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.take_str()?;
+        let n_bits = r.take_len(4)?;
+        let mut bits = Vec::with_capacity(n_bits);
+        for _ in 0..n_bits {
+            let b = r.take_u32()?;
+            anyhow::ensure!((b as usize) < n_nodes, "bus bit {b} out of range");
+            bits.push(b);
+        }
+        buses.push((name, bits));
+    }
+    Ok(buses)
+}
+
+fn put_netlist(w: &mut Writer, nl: &Netlist) {
+    w.put_usize(nl.len());
+    for (_, node) in nl.nodes() {
+        match node {
+            Node::Const(v) => {
+                w.put_u8(0);
+                w.put_bool(*v);
+            }
+            Node::Input(name) => {
+                w.put_u8(1);
+                w.put_str(name);
+            }
+            Node::Lut { ins, tt } => {
+                w.put_u8(2);
+                w.put_usize(ins.len());
+                for &i in ins {
+                    w.put_u32(i);
+                }
+                w.put_u16(*tt);
+            }
+            Node::Dff { d, init } => {
+                w.put_u8(3);
+                w.put_u32(*d);
+                w.put_bool(*init);
+            }
+        }
+    }
+    put_buses(w, &nl.outputs);
+    put_buses(w, &nl.input_buses);
+}
+
+fn take_netlist(r: &mut Reader<'_>) -> anyhow::Result<Netlist> {
+    let n = r.take_len(1)?;
+    let mut nodes = Vec::with_capacity(n);
+    for id in 0..n {
+        let node = match r.take_u8()? {
+            0 => Node::Const(r.take_bool()?),
+            1 => Node::Input(r.take_str()?),
+            2 => {
+                let arity = r.take_len(4)?;
+                anyhow::ensure!((1..=4).contains(&arity), "bad LUT arity {arity}");
+                let mut ins = Vec::with_capacity(arity);
+                for _ in 0..arity {
+                    let i = r.take_u32()?;
+                    // The topological invariant the simulators rely on.
+                    anyhow::ensure!((i as usize) < id, "LUT {id} reads forward net {i}");
+                    ins.push(i);
+                }
+                Node::Lut { ins, tt: r.take_u16()? }
+            }
+            3 => Node::Dff { d: r.take_u32()?, init: r.take_bool()? },
+            t => anyhow::bail!("bad node tag {t}"),
+        };
+        nodes.push(node);
+    }
+    // DFF data inputs may legally point forward; validate after the fact.
+    for node in &nodes {
+        if let Node::Dff { d, .. } = node {
+            anyhow::ensure!((*d as usize) < n, "DFF input {d} out of range");
+        }
+    }
+    let outputs = take_buses(r, n)?;
+    let input_buses = take_buses(r, n)?;
+    Ok(Netlist::from_parts(nodes, outputs, input_buses))
+}
+
+impl Artifact for MappedDesign {
+    const STAGE: StageKind = StageKind::Netlist;
+
+    fn encode(&self, w: &mut Writer) {
+        put_netlist(w, &self.netlist);
+        w.put_usize(self.lut4_cells);
+        w.put_usize(self.luts);
+        w.put_usize(self.dffs);
+        w.put_usize(self.gate_count);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<MappedDesign> {
+        Ok(MappedDesign {
+            netlist: take_netlist(r)?,
+            lut4_cells: r.take_usize()?,
+            luts: r.take_usize()?,
+            dffs: r.take_usize()?,
+            gate_count: r.take_usize()?,
+        })
+    }
+}
+
+impl Artifact for TimingReport {
+    const STAGE: StageKind = StageKind::Timing;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_u32(self.depth);
+        w.put_f64(self.period_ns);
+        w.put_f64(self.fmax_mhz);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<TimingReport> {
+        Ok(TimingReport {
+            depth: r.take_u32()?,
+            period_ns: r.take_f64()?,
+            fmax_mhz: r.take_f64()?,
+        })
+    }
+}
+
+impl Artifact for PowerReport {
+    const STAGE: StageKind = StageKind::Power;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_f64(self.activity.toggles_per_cycle);
+        w.put_u64(self.activity.cycles);
+        w.put_u32(self.activity.activations);
+        w.put_f64(self.model.vdd);
+        w.put_f64(self.model.c_eff);
+        w.put_f64(self.model.p_static);
+        w.put_f64(self.mw_6mhz);
+        w.put_f64(self.mw_12mhz);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<PowerReport> {
+        Ok(PowerReport {
+            activity: ActivityReport {
+                toggles_per_cycle: r.take_f64()?,
+                cycles: r.take_u64()?,
+                activations: r.take_u32()?,
+            },
+            model: PowerModel {
+                vdd: r.take_f64()?,
+                c_eff: r.take_f64()?,
+                p_static: r.take_f64()?,
+            },
+            mw_6mhz: r.take_f64()?,
+            mw_12mhz: r.take_f64()?,
+        })
+    }
+}
+
+impl Artifact for String {
+    const STAGE: StageKind = StageKind::Verilog;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(self);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<String> {
+        r.take_str()
+    }
+}
+
+// ---- entry framing -------------------------------------------------------
+
+fn encode_entry<A: Artifact>(fp: u64, artifact: &A) -> Vec<u8> {
+    let mut payload = Writer::default();
+    artifact.encode(&mut payload);
+    let payload = payload.into_bytes();
+    let checksum = StableHasher::new().bytes(&payload).finish();
+    let mut w = Writer::default();
+    w.put_bytes(MAGIC);
+    w.put_u32(STORE_FORMAT_VERSION);
+    w.put_str(A::STAGE.dir_name());
+    w.put_u64(fp);
+    w.put_u64(checksum);
+    w.put_usize(payload.len());
+    w.put_bytes(&payload);
+    w.into_bytes()
+}
+
+fn decode_entry<A: Artifact>(fp: u64, bytes: &[u8]) -> anyhow::Result<A> {
+    let mut r = Reader::new(bytes);
+    anyhow::ensure!(r.take(MAGIC.len())? == &MAGIC[..], "bad magic");
+    let version = r.take_u32()?;
+    anyhow::ensure!(version == STORE_FORMAT_VERSION, "format version {version}");
+    let stage = r.take_str()?;
+    anyhow::ensure!(stage == A::STAGE.dir_name(), "stage mismatch `{stage}`");
+    let entry_fp = r.take_u64()?;
+    anyhow::ensure!(entry_fp == fp, "fingerprint mismatch");
+    let checksum = r.take_u64()?;
+    let len = r.take_len(1)?;
+    let payload = r.take(len)?;
+    anyhow::ensure!(r.done(), "trailing bytes after payload");
+    anyhow::ensure!(
+        StableHasher::new().bytes(payload).finish() == checksum,
+        "checksum mismatch"
+    );
+    let mut pr = Reader::new(payload);
+    let artifact = A::decode(&mut pr)?;
+    anyhow::ensure!(pr.done(), "trailing bytes in payload");
+    Ok(artifact)
+}
+
+// ---- the store -----------------------------------------------------------
+
+/// Per-stage entry/byte counts of a store root (see
+/// [`ArtifactStore::stats`]).
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub stage: &'static str,
+    pub entries: u64,
+    pub bytes: u64,
+}
+
+/// Aggregate statistics of an [`ArtifactStore`].
+#[derive(Clone, Debug)]
+pub struct StoreStats {
+    pub stages: Vec<StageStats>,
+}
+
+impl StoreStats {
+    pub fn total_entries(&self) -> u64 {
+        self.stages.iter().map(|s| s.entries).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// The persistent, fingerprint-keyed artifact store (see module docs for
+/// the on-disk format and the corruption/concurrency contract). Shared
+/// across sessions and worker threads via `Arc`.
+pub struct ArtifactStore {
+    root: PathBuf,
+    /// Distinguishes concurrent temp files within one process (the pid
+    /// distinguishes processes).
+    seq: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> anyhow::Result<ArtifactStore> {
+        let root = root.as_ref().to_path_buf();
+        for stage in StageKind::ALL {
+            fs::create_dir_all(root.join(stage.dir_name()))?;
+        }
+        Ok(ArtifactStore { root, seq: AtomicU64::new(0) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_path(&self, stage: StageKind, fp: u64) -> PathBuf {
+        self.root.join(stage.dir_name()).join(format!("{fp:016x}.art"))
+    }
+
+    /// Load the artifact stored under `fp`, or `None` when the entry is
+    /// absent, unreadable, or fails any validation — a cache miss, never
+    /// an error.
+    pub(crate) fn load<A: Artifact>(&self, fp: u64) -> Option<A> {
+        let bytes = fs::read(self.entry_path(A::STAGE, fp)).ok()?;
+        decode_entry::<A>(fp, &bytes).ok()
+    }
+
+    /// Persist an artifact under `fp` via temp-file + atomic rename, so
+    /// concurrent writers (threads or processes) never expose a torn
+    /// entry.
+    pub(crate) fn save<A: Artifact>(&self, fp: u64, artifact: &A) -> anyhow::Result<()> {
+        let bytes = encode_entry(fp, artifact);
+        let path = self.entry_path(A::STAGE, fp);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, &bytes)?;
+        match fs::rename(&tmp, &path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e.into())
+            }
+        }
+    }
+
+    /// Per-stage entry counts and byte sizes.
+    pub fn stats(&self) -> anyhow::Result<StoreStats> {
+        let mut stages = Vec::with_capacity(StageKind::ALL.len());
+        for stage in StageKind::ALL {
+            let mut entries = 0u64;
+            let mut bytes = 0u64;
+            if let Ok(rd) = fs::read_dir(self.root.join(stage.dir_name())) {
+                for de in rd.flatten() {
+                    let path = de.path();
+                    if path.extension().map(|e| e == "art").unwrap_or(false) {
+                        entries += 1;
+                        bytes += de.metadata().map(|m| m.len()).unwrap_or(0);
+                    }
+                }
+            }
+            stages.push(StageStats { stage: stage.dir_name(), entries, bytes });
+        }
+        Ok(StoreStats { stages })
+    }
+
+    /// Delete every entry (and stray temp file); returns how many files
+    /// were removed.
+    pub fn clear(&self) -> anyhow::Result<u64> {
+        let mut removed = 0u64;
+        for stage in StageKind::ALL {
+            if let Ok(rd) = fs::read_dir(self.root.join(stage.dir_name())) {
+                for de in rd.flatten() {
+                    let path = de.path();
+                    if path.is_file() && fs::remove_file(&path).is_ok() {
+                        removed += 1;
+                    }
+                }
+            }
+        }
+        Ok(removed)
+    }
+}
+
+// ---- per-stage LRU -------------------------------------------------------
+
+/// Outcome of promoting a fingerprint in a per-stage [`Lru`].
+pub(crate) enum LruHit {
+    /// The front entry already matched (repeat query, no state change).
+    Fresh,
+    /// Found deeper in the cache and moved to the front (e.g. a sweep's
+    /// return trip).
+    Promoted,
+    /// Not cached.
+    Miss,
+}
+
+/// A small per-stage LRU keyed on stage fingerprints. The front entry is
+/// always the artifact of the most recently ensured fingerprint — the
+/// one the stage accessors borrow.
+pub(crate) struct Lru<T> {
+    entries: VecDeque<(u64, T)>,
+    cap: usize,
+}
+
+impl<T> Lru<T> {
+    pub fn new(cap: usize) -> Lru<T> {
+        assert!(cap >= 1, "LRU capacity must be positive");
+        Lru { entries: VecDeque::new(), cap }
+    }
+
+    /// Move the entry for `fp` (if cached) to the front.
+    pub fn promote(&mut self, fp: u64) -> LruHit {
+        match self.entries.iter().position(|(k, _)| *k == fp) {
+            Some(0) => LruHit::Fresh,
+            Some(i) => {
+                let entry = self.entries.remove(i).expect("position is in range");
+                self.entries.push_front(entry);
+                LruHit::Promoted
+            }
+            None => LruHit::Miss,
+        }
+    }
+
+    /// Insert at the front, evicting the least recently used entry
+    /// beyond capacity.
+    pub fn insert(&mut self, fp: u64, value: T) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == fp) {
+            self.entries.remove(i);
+        }
+        self.entries.push_front((fp, value));
+        self.entries.truncate(self.cap);
+    }
+
+    /// The most recently ensured artifact.
+    pub fn value(&self) -> &T {
+        self.entries.front().map(|(_, v)| v).expect("stage was just ensured")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dimsynth-store-unit-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn timing_report_roundtrips_bit_exactly() {
+        let dir = tmpdir("timing");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let report = TimingReport { depth: 42, period_ns: 17.25, fmax_mhz: 57.971 };
+        store.save(0xFEED, &report).unwrap();
+        let back: TimingReport = store.load(0xFEED).unwrap();
+        assert_eq!(back.depth, 42);
+        assert_eq!(back.period_ns.to_bits(), report.period_ns.to_bits());
+        assert_eq!(back.fmax_mhz.to_bits(), report.fmax_mhz.to_bits());
+        assert!(store.load::<TimingReport>(0xBEEF).is_none(), "absent fp must miss");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stage_and_fingerprint_mismatches_are_misses() {
+        let dir = tmpdir("mismatch");
+        let store = ArtifactStore::open(&dir).unwrap();
+        store.save(1, &"module m; endmodule".to_string()).unwrap();
+        assert!(store.load::<String>(1).is_some());
+        // A verilog entry must not decode as a timing artifact even when
+        // a file with the right name exists.
+        fs::copy(
+            store.entry_path(StageKind::Verilog, 1),
+            store.entry_path(StageKind::Timing, 1),
+        )
+        .unwrap();
+        assert!(store.load::<TimingReport>(1).is_none());
+        // Nor under a renamed (wrong) fingerprint.
+        fs::copy(
+            store.entry_path(StageKind::Verilog, 1),
+            store.entry_path(StageKind::Verilog, 2),
+        )
+        .unwrap();
+        assert!(store.load::<String>(2).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_bytes_are_misses_not_panics() {
+        let dir = tmpdir("corrupt");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let text = "x".repeat(256);
+        store.save(9, &text).unwrap();
+        let path = store.entry_path(StageKind::Verilog, 9);
+        let pristine = fs::read(&path).unwrap();
+
+        let mut flipped = pristine.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x5A;
+        fs::write(&path, &flipped).unwrap();
+        assert!(store.load::<String>(9).is_none(), "bit flip must fail the checksum");
+
+        fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+        assert!(store.load::<String>(9).is_none(), "truncation must miss");
+
+        fs::write(&path, b"").unwrap();
+        assert!(store.load::<String>(9).is_none(), "empty file must miss");
+
+        fs::write(&path, &pristine).unwrap();
+        assert_eq!(store.load::<String>(9).unwrap(), text);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_and_clear_cover_all_stages() {
+        let dir = tmpdir("stats");
+        let store = ArtifactStore::open(&dir).unwrap();
+        store.save(1, &"a".to_string()).unwrap();
+        store.save(2, &"b".to_string()).unwrap();
+        store
+            .save(3, &TimingReport { depth: 1, period_ns: 2.0, fmax_mhz: 500.0 })
+            .unwrap();
+        let stats = store.stats().unwrap();
+        assert_eq!(stats.total_entries(), 3);
+        assert!(stats.total_bytes() > 0);
+        assert_eq!(stats.stages.len(), StageKind::ALL.len());
+        assert_eq!(store.clear().unwrap(), 3);
+        assert_eq!(store.stats().unwrap().total_entries(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_promotes_and_evicts() {
+        let mut lru: Lru<u32> = Lru::new(2);
+        assert!(matches!(lru.promote(1), LruHit::Miss));
+        lru.insert(1, 10);
+        assert!(matches!(lru.promote(1), LruHit::Fresh));
+        lru.insert(2, 20);
+        assert!(matches!(lru.promote(1), LruHit::Promoted));
+        assert_eq!(lru.value(), &10);
+        lru.insert(3, 30); // evicts 2, the least recently used
+        assert!(matches!(lru.promote(2), LruHit::Miss));
+        assert!(matches!(lru.promote(1), LruHit::Promoted));
+        assert!(matches!(lru.promote(3), LruHit::Promoted));
+    }
+}

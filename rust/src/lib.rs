@@ -15,7 +15,14 @@
 //! The whole pipeline hangs off one session object: a [`flow::Flow`]
 //! holds a [`flow::FlowConfig`] and a memoized artifact graph with typed
 //! stage handles, and a [`flow::FlowSet`] drives the full corpus across
-//! all cores. Stages compute on first demand and re-queries are free:
+//! all cores. Stages compute on first demand and re-queries are free.
+//! Every stage lookup goes **per-stage LRU → disk store → compute**:
+//! stage artifacts are keyed on stable content fingerprints
+//! ([`flow::config::StableHasher`], specified FNV-1a — identical in
+//! every process and Rust release), so attaching a persistent
+//! [`flow::ArtifactStore`] (CLI: `--cache-dir`) carries the whole
+//! memoized graph across processes — a warm restart recomputes nothing
+//! (versioned on-disk format, corrupt entries degrade to recomputes):
 //!
 //! ```
 //! use dimsynth::flow::{Flow, FlowConfig};
@@ -31,7 +38,9 @@
 //! ## Layers
 //!
 //! * **Session** — [`flow`]: the unified compilation API; everything
-//!   below is reachable through it.
+//!   below is reachable through it. Includes the caching substrate:
+//!   stable fingerprints ([`flow::config`]), per-stage LRUs and the
+//!   persistent fingerprint-keyed artifact store ([`flow::store`]).
 //! * **Frontend** — [`newton`]: lexer/parser/sema for the Newton subset,
 //!   plus the 7-system Table-1 corpus.
 //! * **Analysis** — [`pisearch`]: exact rational nullspace of the

@@ -4,11 +4,14 @@
 //!
 //! ```text
 //! dimsynth compile <system|file.nt> [--target <sym>] [--format Qi.f] [-o DIR] [--vcd]
+//!                  [--cache-dir DIR]
 //!     Run the compiler: Π-search report + generated Verilog + resource,
 //!     timing and power reports for one system.
-//! dimsynth table1 [--samples N] [--sequential]
+//! dimsynth table1 [--samples N] [--sequential] [--cache-dir DIR]
 //!     Regenerate the paper's Table 1 across the 7-system corpus
 //!     (parallel across all cores by default).
+//! dimsynth cache <stats|clear> --cache-dir DIR
+//!     Inspect or clear a persistent artifact store.
 //! dimsynth export-pisearch
 //!     Emit the Π-search interchange JSON consumed by python/compile/aot.py.
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
@@ -19,11 +22,17 @@
 //!     List the corpus systems.
 //! ```
 //!
+//! `--cache-dir DIR` attaches the persistent artifact store: compiled
+//! stage artifacts are written to (and served from) `DIR`, so a second
+//! invocation — even from another process — recomputes nothing. The
+//! cache telemetry line goes to stderr (`cache: recomputes=… …`) so
+//! stdout reports stay byte-identical between cold and warm runs.
+//!
 //! Every compilation subcommand drives the pipeline through the
 //! [`dimsynth::flow`] session API; no stage-to-stage wiring lives here.
 
 use dimsynth::fixedpoint::{QFormat, Q16_15};
-use dimsynth::flow::{Flow, FlowConfig};
+use dimsynth::flow::{ArtifactStore, Flow, FlowConfig, StageCounts, STORE_FORMAT_VERSION};
 use dimsynth::newton::{self, corpus};
 use dimsynth::report;
 use dimsynth::synth;
@@ -31,18 +40,43 @@ use dimsynth::{coordinator, train};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 /// Flags one subcommand accepts: `(name, takes_value)`. Flags are
 /// validated against this allowlist so a typo errors instead of being
 /// silently collected.
 type FlagSpec = &'static [(&'static str, bool)];
 
-const COMPILE_FLAGS: FlagSpec =
-    &[("target", true), ("format", true), ("o", true), ("out", true), ("vcd", false)];
-const TABLE1_FLAGS: FlagSpec = &[("samples", true), ("sequential", false)];
+const COMPILE_FLAGS: FlagSpec = &[
+    ("target", true),
+    ("format", true),
+    ("o", true),
+    ("out", true),
+    ("vcd", false),
+    ("cache-dir", true),
+];
+const TABLE1_FLAGS: FlagSpec =
+    &[("samples", true), ("sequential", false), ("cache-dir", true)];
+const CACHE_FLAGS: FlagSpec = &[("cache-dir", true)];
 const TRAIN_FLAGS: FlagSpec = &[("steps", true), ("features", true), ("artifacts", true)];
 const SERVE_FLAGS: FlagSpec = &[("samples", true), ("batch", true), ("artifacts", true)];
 const NO_FLAGS: FlagSpec = &[];
+
+/// Open the persistent artifact store named by `--cache-dir`, if given.
+fn open_store(flags: &HashMap<String, String>) -> anyhow::Result<Option<Arc<ArtifactStore>>> {
+    flags.get("cache-dir").map(|dir| ArtifactStore::open(dir).map(Arc::new)).transpose()
+}
+
+/// Cache telemetry on stderr (stdout reports stay byte-identical between
+/// cold and warm runs; CI greps this line for `recomputes=0`).
+fn print_cache_line(counts: StageCounts) {
+    eprintln!(
+        "cache: recomputes={} disk_hits={} memory_hits={}",
+        counts.recomputes(),
+        counts.disk_hits,
+        counts.memory_hits
+    );
+}
 
 /// The flag name `arg` introduces, if any. Negative numerics (`-1`,
 /// `-3.5`) and a bare `-` are positionals, not flags.
@@ -150,6 +184,9 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
             .ok_or_else(|| anyhow::anyhow!("--target required for .nt files"))?;
         Flow::from_source(what, &src, &target, config)
     };
+    if let Some(store) = open_store(flags)? {
+        flow.set_store(store);
+    }
 
     println!("{}", flow.pis()?);
 
@@ -215,17 +252,54 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
             println!("wrote {vcd_path}");
         }
     }
+    if flags.contains_key("cache-dir") {
+        print_cache_line(flow.counts());
+    }
     Ok(())
 }
 
 fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let samples: u32 = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let rows = if flags.contains_key("sequential") {
-        report::generate_table_sequential(Q16_15, samples)?
-    } else {
-        report::generate_table(Q16_15, samples)?
-    };
+    let store = open_store(flags)?;
+    let (rows, counts) =
+        report::generate_table_opts(Q16_15, samples, store, flags.contains_key("sequential"))?;
     print!("{}", report::render_markdown(&rows));
+    if flags.contains_key("cache-dir") {
+        print_cache_line(counts);
+    }
+    Ok(())
+}
+
+fn cmd_cache(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let action = pos.first().map(String::as_str).unwrap_or("stats");
+    let dir = flags.get("cache-dir").ok_or_else(|| {
+        anyhow::anyhow!("usage: dimsynth cache <stats|clear> --cache-dir DIR")
+    })?;
+    let store = ArtifactStore::open(dir)?;
+    match action {
+        "stats" => {
+            let stats = store.stats()?;
+            println!("{:<10} {:>8} {:>12}", "stage", "entries", "bytes");
+            for s in &stats.stages {
+                println!("{:<10} {:>8} {:>12}", s.stage, s.entries, s.bytes);
+            }
+            println!(
+                "{:<10} {:>8} {:>12}",
+                "total",
+                stats.total_entries(),
+                stats.total_bytes()
+            );
+            println!(
+                "format version {STORE_FORMAT_VERSION} at {}",
+                store.root().display()
+            );
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!("cleared {removed} entries from {}", store.root().display());
+        }
+        other => anyhow::bail!("unknown cache action `{other}` (use stats or clear)"),
+    }
     Ok(())
 }
 
@@ -271,7 +345,7 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        eprintln!("usage: dimsynth <compile|table1|export-pisearch|train|serve|list> ...");
+        eprintln!("usage: dimsynth <compile|table1|cache|export-pisearch|train|serve|list> ...");
         return ExitCode::from(2);
     };
     // Validate the subcommand before flag parsing, so a typo'd command
@@ -279,6 +353,7 @@ fn main() -> ExitCode {
     let spec = match cmd.as_str() {
         "compile" => Some(COMPILE_FLAGS),
         "table1" => Some(TABLE1_FLAGS),
+        "cache" => Some(CACHE_FLAGS),
         "train" => Some(TRAIN_FLAGS),
         "serve" => Some(SERVE_FLAGS),
         "list" | "export-pisearch" => Some(NO_FLAGS),
@@ -293,6 +368,7 @@ fn main() -> ExitCode {
             }
             "compile" => cmd_compile(&pos, &flags),
             "table1" => cmd_table1(&flags),
+            "cache" => cmd_cache(&pos, &flags),
             "export-pisearch" => cmd_export(),
             "train" => cmd_train(&pos, &flags),
             "serve" => cmd_serve(&pos, &flags),

@@ -17,9 +17,7 @@ use std::cmp::Ordering;
 use std::fmt;
 use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
 
-/// Greatest common divisor (always non-negative).
-pub fn gcd(a: i64, b: i64) -> i64 {
-    let (mut a, mut b) = (a.abs(), b.abs());
+fn gcd_u64(mut a: u64, mut b: u64) -> u64 {
     while b != 0 {
         let t = a % b;
         a = b;
@@ -28,12 +26,30 @@ pub fn gcd(a: i64, b: i64) -> i64 {
     a
 }
 
-/// Least common multiple (non-negative; `lcm(0, x) == 0`).
+/// Greatest common divisor (always non-negative).
+///
+/// Computed over `unsigned_abs`, so `i64::MIN` inputs are handled
+/// exactly (`abs()` would overflow and panic in debug builds). The one
+/// unrepresentable result — `gcd(i64::MIN, 0)` and
+/// `gcd(i64::MIN, i64::MIN)` are 2⁶³ — saturates to `i64::MAX`,
+/// consistent with [`lcm`]'s saturation.
+pub fn gcd(a: i64, b: i64) -> i64 {
+    i64::try_from(gcd_u64(a.unsigned_abs(), b.unsigned_abs())).unwrap_or(i64::MAX)
+}
+
+/// Least common multiple (non-negative; `lcm(0, x) == 0`; saturates at
+/// `i64::MAX` when the true value exceeds the `i64` range).
+///
+/// The whole computation runs in `u64`: the old
+/// `(a / gcd(a, b)).abs()` overflowed (panicking in debug builds) when
+/// the quotient was `i64::MIN`, e.g. `lcm(i64::MIN, 1)`.
 pub fn lcm(a: i64, b: i64) -> i64 {
     if a == 0 || b == 0 {
         return 0;
     }
-    (a / gcd(a, b)).abs().saturating_mul(b.abs())
+    let (ua, ub) = (a.unsigned_abs(), b.unsigned_abs());
+    let l = (ua / gcd_u64(ua, ub)).checked_mul(ub).unwrap_or(u64::MAX);
+    i64::try_from(l).unwrap_or(i64::MAX)
 }
 
 /// An exact rational number `num/den` in canonical form.
@@ -230,6 +246,33 @@ mod tests {
         assert_eq!(lcm(4, 6), 12);
         assert_eq!(lcm(0, 6), 0);
         assert_eq!(lcm(-4, 6), 12);
+    }
+
+    #[test]
+    fn gcd_i64_min_regression() {
+        // `i64::MIN.abs()` panics in debug builds; `unsigned_abs` must
+        // give the exact answer wherever it is representable.
+        assert_eq!(gcd(i64::MIN, 12), 4);
+        assert_eq!(gcd(12, i64::MIN), 4);
+        assert_eq!(gcd(i64::MIN, 3), 1);
+        assert_eq!(gcd(i64::MIN, i64::MIN + 1), 1); // 2^63 and 2^63-1 are coprime
+        assert_eq!(gcd(i64::MIN, 1 << 40), 1 << 40);
+        // 2^63 itself does not fit i64: documented saturation.
+        assert_eq!(gcd(i64::MIN, 0), i64::MAX);
+        assert_eq!(gcd(i64::MIN, i64::MIN), i64::MAX);
+    }
+
+    #[test]
+    fn lcm_i64_min_quotient_saturates() {
+        // The old `(a / gcd).abs()` overflowed when the quotient was
+        // `i64::MIN`; the u64 form saturates instead of panicking.
+        assert_eq!(lcm(i64::MIN, 1), i64::MAX);
+        assert_eq!(lcm(1, i64::MIN), i64::MAX);
+        assert_eq!(lcm(i64::MIN, i64::MIN), i64::MAX);
+        assert_eq!(lcm(i64::MIN, 0), 0);
+        // Exact whenever the true value is representable.
+        assert_eq!(lcm(1 << 62, 2), 1 << 62);
+        assert_eq!(lcm(i64::MIN + 1, 1), i64::MAX); // |MIN+1| == MAX exactly
     }
 
     #[test]

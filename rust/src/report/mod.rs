@@ -6,6 +6,6 @@ pub mod table1;
 
 pub use export::{export_from_flow, export_json, export_system, SystemExport};
 pub use table1::{
-    generate_row, generate_table, generate_table_sequential, render_markdown, row_from_flow,
-    Table1Row,
+    generate_row, generate_table, generate_table_opts, generate_table_sequential,
+    render_markdown, row_from_flow, Table1Row,
 };

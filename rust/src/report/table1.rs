@@ -4,8 +4,10 @@
 //! reports. The corpus sweep runs one [`Flow`] per system across all
 //! cores via [`FlowSet`].
 
+use std::sync::Arc;
+
 use crate::fixedpoint::QFormat;
-use crate::flow::{Flow, FlowConfig, FlowSet};
+use crate::flow::{ArtifactStore, Flow, FlowConfig, FlowSet, StageCounts};
 use crate::newton::CorpusEntry;
 
 /// One row of the regenerated Table 1.
@@ -81,22 +83,39 @@ pub fn generate_row(entry: &CorpusEntry, q: QFormat, power_samples: u32) -> anyh
     row_from_flow(&mut flow)
 }
 
+/// Full-control corpus sweep: optional shared persistent store and
+/// sequential/parallel driver choice. Returns the rows plus the summed
+/// per-stage cache telemetry (so callers can verify a warm `--cache-dir`
+/// run recomputed nothing).
+pub fn generate_table_opts(
+    q: QFormat,
+    power_samples: u32,
+    store: Option<Arc<ArtifactStore>>,
+    sequential: bool,
+) -> anyhow::Result<(Vec<Table1Row>, StageCounts)> {
+    let mut set = FlowSet::corpus(table_config(q, power_samples));
+    if let Some(store) = store {
+        set = set.with_store(store);
+    }
+    let rows = if sequential {
+        set.run_sequential(row_from_flow)
+    } else {
+        set.run_parallel(row_from_flow)
+    };
+    let rows: anyhow::Result<Vec<Table1Row>> = rows.into_iter().collect();
+    Ok((rows?, set.total_counts()))
+}
+
 /// Run the full flow for the whole corpus, one session per system across
 /// all cores.
 pub fn generate_table(q: QFormat, power_samples: u32) -> anyhow::Result<Vec<Table1Row>> {
-    FlowSet::corpus(table_config(q, power_samples))
-        .run_parallel(row_from_flow)
-        .into_iter()
-        .collect()
+    Ok(generate_table_opts(q, power_samples, None, false)?.0)
 }
 
 /// Sequential variant of [`generate_table`] (same rows, same order; used
 /// for determinism checks and single-core baselines).
 pub fn generate_table_sequential(q: QFormat, power_samples: u32) -> anyhow::Result<Vec<Table1Row>> {
-    FlowSet::corpus(table_config(q, power_samples))
-        .run_sequential(row_from_flow)
-        .into_iter()
-        .collect()
+    Ok(generate_table_opts(q, power_samples, None, true)?.0)
 }
 
 /// Render rows as a Markdown table with paper values side by side.

@@ -67,19 +67,36 @@ impl Lfsr32 {
 /// one [`LfsrBank64::next_bit_word`] computes the feedback of all 64
 /// lanes with three XOR word ops and a plane rotation — the same
 /// transposition the simulator uses for net values. Lane *l* of the bank
-/// is bit-compatible with `Lfsr32::new(seeds[l])` (tested).
+/// is bit-compatible with `Lfsr32::new(seeds[l])` for nonzero seeds
+/// (tested); zero seeds are remapped to *distinct per-lane* states —
+/// unlike `Lfsr32::new`'s single constant — so no two lanes can share a
+/// stream.
 #[derive(Clone, Debug)]
 pub struct LfsrBank64 {
     planes: [u64; 32],
 }
 
 impl LfsrBank64 {
-    /// Create from 64 explicit lane seeds (zero seeds are remapped like
-    /// [`Lfsr32::new`]).
+    /// The nonzero replacement state for a zero-seeded lane.
+    ///
+    /// Remapping every zero seed to one shared constant (as
+    /// [`Lfsr32::new`] does for its single stream) would give two
+    /// zero-seeded lanes *identical* streams, silently correlating the
+    /// power samples they drive. Instead each lane gets a distinct
+    /// value: bits 16..23 encode `lane + 1` (so the value is provably
+    /// nonzero — the low bits keep the classic `0xACE1` pattern — and
+    /// pairwise distinct across all 64 lanes).
+    fn zero_seed_replacement(lane: usize) -> u32 {
+        0xACE1 ^ ((lane as u32 + 1) << 16)
+    }
+
+    /// Create from 64 explicit lane seeds. Zero seeds (the LFSR lock-up
+    /// state) are remapped to distinct per-lane nonzero states, so no
+    /// two lanes ever share a stream.
     pub fn from_seeds(seeds: &[u32; 64]) -> LfsrBank64 {
         let mut planes = [0u64; 32];
         for (lane, &seed) in seeds.iter().enumerate() {
-            let s = if seed == 0 { 0xACE1_u32 } else { seed };
+            let s = if seed == 0 { Self::zero_seed_replacement(lane) } else { seed };
             for (k, plane) in planes.iter_mut().enumerate() {
                 *plane |= u64::from(s >> k & 1) << lane;
             }
@@ -204,12 +221,53 @@ mod tests {
         let mut seeds = [7u32; 64];
         seeds[5] = 0;
         let mut bank = LfsrBank64::from_seeds(&seeds);
-        assert_eq!(bank.lane_state(5), 0xACE1);
+        assert_ne!(bank.lane_state(5), 0);
         // Must not lock up.
         for _ in 0..64 {
             bank.next_bit_word();
         }
         assert_ne!(bank.lane_state(5), 0);
+    }
+
+    #[test]
+    fn bank_zero_seeds_get_distinct_lanes() {
+        // Two zero-seeded lanes used to both remap to 0xACE1, silently
+        // producing identical stimulus streams.
+        let mut seeds = [7u32; 64];
+        seeds[3] = 0;
+        seeds[5] = 0;
+        let mut bank = LfsrBank64::from_seeds(&seeds);
+        assert_ne!(bank.lane_state(3), bank.lane_state(5), "zero lanes must not share a stream");
+        // And the streams diverge, not just the initial states.
+        let mut agree = 0u32;
+        for _ in 0..512 {
+            let w = bank.next_bit_word();
+            if (w >> 3) & 1 == (w >> 5) & 1 {
+                agree += 1;
+            }
+        }
+        assert!(agree < 400, "lanes 3 and 5 correlated: {agree}/512 equal bits");
+    }
+
+    #[test]
+    fn bank_all_zero_seeds_pairwise_distinct_and_nonzero() {
+        let bank = LfsrBank64::from_seeds(&[0u32; 64]);
+        let states: HashSet<u32> = (0..64).map(|l| bank.lane_state(l)).collect();
+        assert_eq!(states.len(), 64, "zero-seed remapping collided lanes");
+        assert!(!states.contains(&0), "a lane landed in the lock-up state");
+    }
+
+    #[test]
+    fn bank_master_seed_lanes_pairwise_distinct() {
+        // For any master seed, all 64 lane states must be pairwise
+        // distinct and nonzero (an LFSR state stream never revisits a
+        // state within its period and never visits zero).
+        for seed in [0u32, 1, 42, 0xACE1, 0xDEAD_BEEF, u32::MAX] {
+            let bank = LfsrBank64::new(seed);
+            let states: HashSet<u32> = (0..64).map(|l| bank.lane_state(l)).collect();
+            assert_eq!(states.len(), 64, "master seed {seed:#x} collided lanes");
+            assert!(!states.contains(&0), "master seed {seed:#x} locked up a lane");
+        }
     }
 
     #[test]

@@ -78,6 +78,27 @@ impl Netlist {
         Netlist::default()
     }
 
+    /// Rebuild a netlist from its raw parts — the decode path of the
+    /// persistent artifact store ([`crate::flow::store`]). The caller is
+    /// responsible for the topological invariant (store decoding
+    /// validates it); the structural-hash cache is reconstructed so
+    /// further construction on the restored netlist keeps deduplicating.
+    pub fn from_parts(
+        nodes: Vec<Node>,
+        outputs: Vec<(String, Vec<NetId>)>,
+        input_buses: Vec<(String, Vec<NetId>)>,
+    ) -> Netlist {
+        let mut cache = HashMap::new();
+        for (id, node) in nodes.iter().enumerate() {
+            // Mirror `intern`: DFFs are stateful and inputs are unique by
+            // construction, so neither participates in structural hashing.
+            if !matches!(node, Node::Dff { .. } | Node::Input(_)) {
+                cache.entry(node.clone()).or_insert(id as NetId);
+            }
+        }
+        Netlist { nodes, outputs, input_buses, cache }
+    }
+
     pub fn node(&self, id: NetId) -> &Node {
         &self.nodes[id as usize]
     }
@@ -425,6 +446,23 @@ mod tests {
         let x3 = nl.and2(b, a); // different input order: not merged (no commutativity canon)
         let _ = x3;
         assert_eq!(nl.count_luts(), 2);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_rebuilds_cache() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x = nl.and2(a, b);
+        let d = nl.dff(x, false);
+        nl.add_output("q", vec![d]);
+        let nodes: Vec<Node> = nl.nodes().map(|(_, n)| n.clone()).collect();
+        let mut rebuilt = Netlist::from_parts(nodes, nl.outputs.clone(), nl.input_buses.clone());
+        assert_eq!(rebuilt.len(), nl.len());
+        assert_eq!(rebuilt.count_luts(), nl.count_luts());
+        // Structural hashing still dedupes against restored nodes.
+        assert_eq!(rebuilt.and2(a, b), x);
+        assert_eq!(rebuilt.len(), nl.len());
     }
 
     #[test]

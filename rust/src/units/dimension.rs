@@ -97,6 +97,13 @@ impl Dimension {
         Dimension { exps: r }
     }
 
+    /// Build from explicit rational exponents in canonical order — the
+    /// decode path of the persistent artifact store
+    /// ([`crate::flow::store`]).
+    pub fn from_exps(exps: [Rational; NUM_BASE_DIMS]) -> Dimension {
+        Dimension { exps }
+    }
+
     /// Exponent of one base dimension.
     pub fn exp(&self, d: BaseDim) -> Rational {
         self.exps[d as usize]

@@ -41,8 +41,9 @@ fn every_stage_computes_once_across_repeated_queries() {
             timing: 1,
             power: 1,
             verilog: 1,
+            ..StageCounts::default()
         },
-        "each stage must compute exactly once"
+        "each stage must compute exactly once, with no hits counted"
     );
 }
 
@@ -91,8 +92,8 @@ fn power_stimulus_change_invalidates_only_the_power_stage() {
 #[test]
 fn cached_results_match_fresh_sessions_after_invalidation() {
     // A session that sweeps away from a config and back must agree with
-    // a fresh session at the final config (cache depth is one, so the
-    // return trip recomputes — but bit-exactly).
+    // a fresh session at the final config (the return trip is served by
+    // the per-stage LRU, bit-exactly).
     let mut swept = Flow::for_system("beam", small_config()).unwrap();
     let cells_q16 = swept.netlist().unwrap().lut4_cells;
     swept.set_qformat(QFormat::new(8, 7));
@@ -103,6 +104,37 @@ fn cached_results_match_fresh_sessions_after_invalidation() {
 
     let mut fresh = Flow::for_system("beam", small_config()).unwrap();
     assert_eq!(fresh.netlist().unwrap().lut4_cells, cells_q16);
+}
+
+#[test]
+fn sweep_return_trips_hit_the_per_stage_lru() {
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    let cells_q16 = flow.netlist().unwrap().lut4_cells;
+    let fmax_q16 = flow.timing().unwrap().fmax_mhz;
+
+    flow.set_qformat(QFormat::new(12, 11));
+    flow.netlist().unwrap();
+    flow.timing().unwrap();
+    let mid = flow.counts();
+    assert_eq!(mid.rtl, 2, "second format must rebuild RTL once");
+
+    // Return trip: every revisited stage must come from the in-memory
+    // LRU — zero recomputes, bit-identical results.
+    flow.set_qformat(QFormat::new(16, 15));
+    assert_eq!(flow.netlist().unwrap().lut4_cells, cells_q16);
+    assert_eq!(flow.timing().unwrap().fmax_mhz.to_bits(), fmax_q16.to_bits());
+    let after = flow.counts();
+    assert_eq!(
+        (after.parsed, after.pis, after.rtl, after.netlist, after.timing),
+        (mid.parsed, mid.pis, mid.rtl, mid.netlist, mid.timing),
+        "return trip must not recompute any stage"
+    );
+    assert!(
+        after.memory_hits > mid.memory_hits,
+        "return trip must be served by LRU promotion ({} -> {})",
+        mid.memory_hits,
+        after.memory_hits
+    );
 }
 
 #[test]

@@ -1,0 +1,171 @@
+//! Persistence semantics of the flow artifact store: warm starts across
+//! store re-opens and across real processes must reproduce every artifact
+//! bit-identically with zero stage recomputes, and corrupt entries must
+//! degrade to clean recomputes.
+
+use dimsynth::flow::{ArtifactStore, Flow, FlowConfig, FlowSet};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_store_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dimsynth-flowstore-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_config() -> FlowConfig {
+    FlowConfig { power_samples: 2, ..FlowConfig::default() }
+}
+
+/// Bit-exact summary of every stage of one session (f64s compared by
+/// bit pattern, Verilog by full text).
+type Row = (String, usize, usize, u32, u64, u64, u64, u64, String);
+
+fn summarize(f: &mut Flow) -> Row {
+    let (cells, gates) = {
+        let m = f.netlist().unwrap();
+        (m.lut4_cells, m.gate_count)
+    };
+    let t = f.timing().unwrap();
+    let p = f.power().unwrap();
+    (
+        f.id().to_string(),
+        cells,
+        gates,
+        t.depth,
+        t.fmax_mhz.to_bits(),
+        p.mw_6mhz.to_bits(),
+        p.activity.toggles_per_cycle.to_bits(),
+        f.latency().unwrap(),
+        f.verilog().unwrap().to_string(),
+    )
+}
+
+#[test]
+fn warm_start_reproduces_corpus_with_zero_recomputes() {
+    let dir = temp_store_dir("warm");
+
+    // Cold run: compute everything, populating the store.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut cold = FlowSet::corpus(small_config()).with_store(store);
+    let cold_rows: Vec<Row> = cold.run_sequential(summarize);
+    let cold_counts = cold.total_counts();
+    assert_eq!(cold_counts.recomputes(), 7 * 7, "cold run computes all 7 stages x 7 systems");
+    assert_eq!(cold_counts.disk_hits, 0);
+    drop(cold);
+
+    // Warm start: fresh sessions against a re-opened store — exactly
+    // what a second process sees. Nothing may recompute, and every
+    // artifact must be bit-identical.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut warm = FlowSet::corpus(small_config()).with_store(store);
+    let warm_rows: Vec<Row> = warm.run_sequential(summarize);
+    let counts = warm.total_counts();
+    assert_eq!(counts.recomputes(), 0, "warm start must serve every stage from disk: {counts:?}");
+    assert_eq!(counts.disk_hits, 7 * 7, "all 7 stages x 7 systems from disk");
+    assert_eq!(cold_rows, warm_rows, "artifacts must be bit-identical across processes");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parallel_driver_shares_the_store_safely() {
+    let dir = temp_store_dir("parallel");
+
+    // Populate concurrently (concurrent writers, atomic renames)...
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut cold = FlowSet::corpus(small_config()).with_store(store);
+    let cold_rows: Vec<Row> = cold.run_parallel(summarize);
+    drop(cold);
+
+    // ...then a warm parallel run must be hit-only and identical.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut warm = FlowSet::corpus(small_config()).with_store(store);
+    let warm_rows: Vec<Row> = warm.run_parallel(summarize);
+    assert_eq!(warm.total_counts().recomputes(), 0);
+    assert_eq!(cold_rows, warm_rows);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_entries_recompute_gracefully() {
+    let dir = temp_store_dir("corrupt");
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut flow =
+        Flow::for_system("pendulum", small_config()).unwrap().with_store(Arc::clone(&store));
+    let cells = flow.netlist().unwrap().lut4_cells;
+    let verilog = flow.verilog().unwrap().to_string();
+    drop(flow);
+
+    // Truncate every netlist entry; flip a byte in every verilog entry.
+    let mut mangled = 0;
+    for (stage, truncate) in [("netlist", true), ("verilog", false)] {
+        for de in std::fs::read_dir(dir.join(stage)).unwrap().flatten() {
+            let path = de.path();
+            let bytes = std::fs::read(&path).unwrap();
+            if truncate {
+                std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+            } else {
+                let mut b = bytes;
+                let mid = b.len() / 2;
+                b[mid] ^= 0xFF;
+                std::fs::write(&path, &b).unwrap();
+            }
+            mangled += 1;
+        }
+    }
+    assert!(mangled >= 2, "expected stored netlist and verilog entries");
+
+    // A fresh session must detect the damage, recompute those two
+    // stages, and still serve the intact upstream stages from disk.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap().with_store(store);
+    assert_eq!(flow.netlist().unwrap().lut4_cells, cells);
+    assert_eq!(flow.verilog().unwrap(), verilog);
+    let c = flow.counts();
+    assert_eq!((c.netlist, c.verilog), (1, 1), "corrupt entries must recompute: {c:?}");
+    assert_eq!((c.parsed, c.pis, c.rtl), (0, 0, 0), "intact entries must come from disk: {c:?}");
+
+    // The recompute healed the store: one more re-open is hit-only.
+    let healed = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let mut again = Flow::for_system("pendulum", small_config()).unwrap().with_store(healed);
+    again.netlist().unwrap();
+    again.verilog().unwrap();
+    assert_eq!(again.counts().recomputes(), 0, "{:?}", again.counts());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cross_process_warm_start_via_cli() {
+    let dir = temp_store_dir("xproc");
+    let exe = env!("CARGO_BIN_EXE_dimsynth");
+    let run = |label: &str| {
+        let out = std::process::Command::new(exe)
+            .args(["compile", "pendulum", "--cache-dir"])
+            .arg(&dir)
+            .output()
+            .expect("spawn dimsynth");
+        assert!(
+            out.status.success(),
+            "{label} run failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (
+            String::from_utf8_lossy(&out.stdout).to_string(),
+            String::from_utf8_lossy(&out.stderr).to_string(),
+        )
+    };
+
+    let (cold_out, cold_err) = run("cold");
+    let (warm_out, warm_err) = run("warm");
+    assert_eq!(cold_out, warm_out, "stdout reports must be identical across processes");
+    assert!(cold_err.contains("cache: recomputes="), "missing cache line: {cold_err}");
+    assert!(
+        warm_err.contains("recomputes=0 "),
+        "second process must recompute nothing: {warm_err}"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -65,6 +65,17 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] built from a format string unless the
+/// condition holds (the message-carrying subset of `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
@@ -81,6 +92,16 @@ mod tests {
         }
         assert_eq!(parse("17").unwrap(), 17);
         assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(v: u32) -> crate::Result<u32> {
+            crate::ensure!(v < 10, "too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
     }
 
     #[test]
