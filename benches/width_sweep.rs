@@ -14,9 +14,32 @@
 use dimsynth::bench_util::section;
 use dimsynth::fixedpoint::{self, QFormat};
 use dimsynth::flow::{Flow, FlowConfig};
-use dimsynth::stim::{self, Lfsr32};
+use dimsynth::power;
+use dimsynth::stim::{self, Lfsr32, LfsrBank};
+use dimsynth::synth::{LaneWord, W256};
+use std::time::Instant;
 
 const FORMATS: [(u32, u32); 5] = [(8, 7), (12, 11), (16, 15), (20, 19), (24, 23)];
+
+/// Streams-simulated-per-second of one batched power measurement at lane
+/// width `W` (the lane-width axis of the sweep; the format axis is the
+/// table above).
+fn streams_per_sec<W: LaneWord>(flow: &mut Flow, activations: u32) -> anyhow::Result<f64> {
+    let design = flow.rtl()?.clone();
+    let mapped = flow.netlist()?;
+    let seeds = LfsrBank::<W>::lane_seeds(0xACE1);
+    let t = Instant::now();
+    let act = power::measure_activity_batch_wide::<W>(
+        &mapped.netlist,
+        &design,
+        activations,
+        &seeds,
+        None,
+    );
+    let dt = t.elapsed().as_secs_f64();
+    assert!(act.cycles > 0);
+    Ok(W::LANES as f64 / dt)
+}
 
 fn main() -> anyhow::Result<()> {
     for sys in ["pendulum", "beam"] {
@@ -110,6 +133,18 @@ fn main() -> anyhow::Result<()> {
         println!(
             "return trip: 0 recomputes ({} LRU promotions)",
             counts_after_return.memory_hits - counts_after_sweep.memory_hits
+        );
+
+        // Lane-width axis at the paper format: simulation throughput in
+        // independent stimulus streams per second, 64 vs 256 lanes (the
+        // gatesim bench owns the JSON series; this prints the per-system
+        // comparison alongside the format sweep).
+        flow.set_qformat(QFormat::new(16, 15));
+        let s64 = streams_per_sec::<u64>(&mut flow, 8)?;
+        let s256 = streams_per_sec::<W256>(&mut flow, 8)?;
+        println!(
+            "lane width @Q16.15: {s64:.1} streams/s at 64 lanes, {s256:.1} at 256 ({:.2}x)",
+            s256 / s64
         );
     }
     Ok(())

@@ -141,22 +141,26 @@ impl Pipeline {
         })
     }
 
-    /// Serve power-estimation requests in 64-wide batches: requests are
-    /// packed into the lanes of one word-parallel gate-level simulation
-    /// pass ([`power::measure_activity_batch`]), so 64 independent
-    /// stimulus streams cost one netlist traversal per cycle.
+    /// Serve power-estimation requests in lane-width-wide batches:
+    /// requests are packed into the lanes of one word-parallel
+    /// gate-level simulation pass
+    /// ([`power::measure_activity_batch_wide`]), so 64 or 256
+    /// independent stimulus streams (the flow config's
+    /// [`LaneWidth`](crate::synth::LaneWidth)) cost one netlist
+    /// traversal per cycle.
     pub fn estimate_power_batch(
         &mut self,
         requests: &[PowerRequest],
         activations: u32,
     ) -> Vec<PowerEstimate> {
+        let width = self.flow.config().lane_width;
         // Design and netlist come from the same session generation, so
         // they can never diverge even if the flow's config were edited.
         let (design, mapped) = self
             .flow
             .rtl_and_netlist()
             .expect("netlist derivation cannot fail once the design is built");
-        estimate_power_requests(&mapped.netlist, design, requests, activations)
+        estimate_power_requests(&mapped.netlist, design, requests, activations, width)
     }
 
     /// Compute Π products for a batch via the configured path. Returns
@@ -253,24 +257,44 @@ impl Pipeline {
 }
 
 /// Dispatch power-estimation requests against a mapped netlist in
-/// 64-wide batches (the engine-independent core of
+/// lane-width-wide batches (the engine-independent core of
 /// [`Pipeline::estimate_power_batch`], unit-testable without artifacts).
 /// Unfilled lanes of the last batch simulate padding streams whose
 /// results are dropped.
 ///
-/// Each 64-lane chunk is one independent word-parallel simulation pass,
-/// so chunks fan out across all cores on scoped worker threads
-/// ([`worker::parallel_map_chunks`]); request floods use every core on
-/// top of the 64× lane win. Results are returned in request order,
-/// bit-identical to a sequential dispatch.
+/// Each chunk of `width.lanes()` requests is one independent
+/// word-parallel simulation pass, so chunks fan out across all cores on
+/// scoped worker threads ([`worker::parallel_map_chunks`]); request
+/// floods use every core on top of the 64×/256× lane win. Results are
+/// returned in request order, bit-identical to a sequential dispatch —
+/// and to either lane width, since each lane's stimulus stream depends
+/// only on its own seed.
 pub fn estimate_power_requests(
     netlist: &crate::synth::Netlist,
     design: &PiModuleDesign,
     requests: &[PowerRequest],
     activations: u32,
+    width: synth::LaneWidth,
 ) -> Vec<PowerEstimate> {
-    worker::parallel_map_chunks(requests, synth::LANES, |_, chunk| {
-        let mut seeds = [0u32; synth::LANES];
+    match width {
+        synth::LaneWidth::W64 => {
+            estimate_power_requests_w::<u64>(netlist, design, requests, activations)
+        }
+        synth::LaneWidth::W256 => {
+            estimate_power_requests_w::<synth::W256>(netlist, design, requests, activations)
+        }
+    }
+}
+
+/// Monomorphized core of [`estimate_power_requests`].
+fn estimate_power_requests_w<W: synth::LaneWord>(
+    netlist: &crate::synth::Netlist,
+    design: &PiModuleDesign,
+    requests: &[PowerRequest],
+    activations: u32,
+) -> Vec<PowerEstimate> {
+    worker::parallel_map_chunks(requests, W::LANES, |_, chunk| {
+        let mut seeds = vec![0u32; W::LANES];
         for (lane, slot) in seeds.iter_mut().enumerate() {
             *slot = match chunk.get(lane) {
                 Some(r) => r.seed,
@@ -278,7 +302,8 @@ pub fn estimate_power_requests(
                 None => 0x9E37_79B9 ^ lane as u32,
             };
         }
-        let act = power::measure_activity_batch(netlist, design, activations, &seeds);
+        let act =
+            power::measure_activity_batch_wide::<W>(netlist, design, activations, &seeds, None);
         chunk
             .iter()
             .enumerate()
@@ -313,7 +338,7 @@ mod tests {
         let requests: Vec<PowerRequest> = (0..65)
             .map(|i| PowerRequest { seed: 0x1000 + i as u32, f_hz: 6.0e6 })
             .collect();
-        let got = estimate_power_requests(netlist, &design, &requests, 2);
+        let got = estimate_power_requests(netlist, &design, &requests, 2, synth::LaneWidth::W64);
         assert_eq!(got.len(), 65);
         // Spot-check both chunks, including the chunk boundary and the
         // padded tail chunk's only real lane.
@@ -326,11 +351,36 @@ mod tests {
         }
     }
 
+    /// Each lane's stimulus depends only on its own seed, so the same
+    /// request batch dispatched at 64 and 256 lanes must produce
+    /// bit-identical estimates (256 just packs more requests per pass).
+    #[test]
+    fn power_requests_identical_across_lane_widths() {
+        let mut flow = pendulum_flow();
+        let design = flow.rtl().unwrap().clone();
+        let netlist = &flow.netlist().unwrap().netlist;
+        let requests: Vec<PowerRequest> = (0..70)
+            .map(|i| PowerRequest { seed: 0x2000 + i as u32, f_hz: 12.0e6 })
+            .collect();
+        let narrow =
+            estimate_power_requests(netlist, &design, &requests, 2, synth::LaneWidth::W64);
+        let wide =
+            estimate_power_requests(netlist, &design, &requests, 2, synth::LaneWidth::W256);
+        assert_eq!(narrow.len(), wide.len());
+        for (i, (n, w)) in narrow.iter().zip(&wide).enumerate() {
+            assert_eq!(n.toggles_per_cycle, w.toggles_per_cycle, "request {i}");
+            assert_eq!(n.cycles, w.cycles, "request {i}");
+            assert_eq!(n.mw, w.mw, "request {i}");
+        }
+    }
+
     #[test]
     fn empty_request_batch_is_empty() {
         let mut flow = pendulum_flow();
         let design = flow.rtl().unwrap().clone();
         let netlist = &flow.netlist().unwrap().netlist;
-        assert!(estimate_power_requests(netlist, &design, &[], 1).is_empty());
+        assert!(
+            estimate_power_requests(netlist, &design, &[], 1, synth::LaneWidth::W64).is_empty()
+        );
     }
 }

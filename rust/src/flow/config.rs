@@ -31,6 +31,7 @@
 use crate::fixedpoint::{QFormat, Q16_15};
 use crate::power::{PowerModel, ICE40};
 use crate::rtl::Policy;
+use crate::synth::LaneWidth;
 use crate::timing::{DelayModel, ICE40_LP};
 
 /// Configuration for one compilation session.
@@ -65,6 +66,12 @@ pub struct FlowConfig {
     pub power_samples: u32,
     /// LFSR seed of the power-measurement stimulus stream.
     pub power_seed: u32,
+    /// SIMD lane width of word-parallel simulation passes (64 or 256
+    /// stimulus streams per pass). Enters the power-stage fingerprint:
+    /// per-lane artifacts (activity spreads, batched power estimates)
+    /// are width-shaped, so artifacts produced under one width must not
+    /// serve a session configured for the other.
+    pub lane_width: LaneWidth,
 }
 
 impl Default for FlowConfig {
@@ -78,6 +85,7 @@ impl Default for FlowConfig {
             power: ICE40,
             power_samples: 4,
             power_seed: 0xACE1,
+            lane_width: LaneWidth::W64,
         }
     }
 }
@@ -205,10 +213,21 @@ impl FlowConfig {
         ])
     }
 
-    /// Fingerprint of the inputs the power stage consumes.
+    /// Fingerprint of the inputs the power stage consumes. Lane width is
+    /// included because the cached artifact's `PowerReport::spread` is
+    /// measured across `lane_width.lanes()` stimulus streams — a 64-lane
+    /// artifact must not serve a 256-lane config (the scalar `activity`
+    /// half is lane-0-identical either way). Widening the fingerprint
+    /// domain is a cache-format change, covered by the PR-4 bump of
+    /// [`super::store::STORE_FORMAT_VERSION`].
     pub(crate) fn power_inputs_fp(&self) -> u64 {
         let model = fingerprint_f64s(&[self.power.vdd, self.power.c_eff, self.power.p_static]);
-        StableHasher::new().u32(self.power_samples).u32(self.power_seed).u64(model).finish()
+        StableHasher::new()
+            .u32(self.power_samples)
+            .u32(self.power_seed)
+            .u32(self.lane_width.lanes() as u32)
+            .u64(model)
+            .finish()
     }
 }
 
@@ -267,6 +286,13 @@ mod tests {
         let p = FlowConfig { power_seed: 0xBEEF, ..FlowConfig::default() };
         assert_ne!(base.power_inputs_fp(), p.power_inputs_fp());
         assert_eq!(base.rtl_inputs_fp(), p.rtl_inputs_fp());
+
+        // Lane width shapes per-lane power artifacts: it must invalidate
+        // the power stage and nothing upstream.
+        let w = FlowConfig { lane_width: LaneWidth::W256, ..FlowConfig::default() };
+        assert_ne!(base.power_inputs_fp(), w.power_inputs_fp());
+        assert_eq!(base.rtl_inputs_fp(), w.rtl_inputs_fp());
+        assert_eq!(base.timing_inputs_fp(), w.timing_inputs_fp());
     }
 
     #[test]

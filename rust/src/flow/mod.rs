@@ -71,4 +71,4 @@ pub mod worker;
 pub use config::FlowConfig;
 pub use session::{Flow, PowerReport, StageCounts};
 pub use set::FlowSet;
-pub use store::{ArtifactStore, StageStats, StoreStats, STORE_FORMAT_VERSION};
+pub use store::{ArtifactStore, GcReport, StageStats, StoreStats, STORE_FORMAT_VERSION};

@@ -12,10 +12,11 @@ use super::config::{mix, FlowConfig, StableHasher};
 use super::store::{Artifact, ArtifactStore, Lru, LruHit};
 use crate::newton::{self, CorpusEntry, SystemModel};
 use crate::pisearch::{self, CostModel, PiAnalysis};
-use crate::power::{self, ActivityReport, PowerModel};
-use crate::rtl::{self, PiModuleDesign};
-use crate::synth::{self, MappedDesign};
+use crate::power::{self, ActivityReport, ActivitySpread, PowerModel};
+use crate::stim::LfsrBank;
+use crate::synth::{self, LaneWidth, MappedDesign, W256};
 use crate::timing::{self, TimingReport};
+use crate::rtl::{self, PiModuleDesign};
 
 // Stage tags keep fingerprints of different stages disjoint even when
 // their config inputs coincide.
@@ -132,10 +133,21 @@ impl std::ops::Add for StageCounts {
 
 /// A power query answer: the measured activity plus the model it was
 /// priced under and the paper's two reference operating points.
+///
+/// The measurement runs word-parallel at the config's
+/// [`FlowConfig::lane_width`]: lane 0 is seeded with `power_seed`, so
+/// `activity` (and the mW figures derived from it) is bit-identical to
+/// the scalar single-stream measurement this stage historically ran,
+/// while the remaining lanes yield the width-shaped `spread` from the
+/// same pass — which is why the lane width is part of this stage's
+/// cache fingerprint.
 #[derive(Clone, Copy, Debug)]
 pub struct PowerReport {
-    /// Switching activity under the configured LFSR stimulus.
+    /// Switching activity under the configured LFSR stimulus (lane 0 of
+    /// the batched measurement; width-independent).
     pub activity: ActivityReport,
+    /// Per-lane activity statistics across the full lane width.
+    pub spread: ActivitySpread,
     /// Power model the milliwatt figures were computed with.
     pub model: PowerModel,
     /// Average power at 6 MHz (mW).
@@ -284,6 +296,13 @@ impl Flow {
     pub fn set_power_stimulus(&mut self, samples: u32, seed: u32) {
         self.config.power_samples = samples;
         self.config.power_seed = seed;
+    }
+
+    /// Change the SIMD lane width of word-parallel simulation passes
+    /// (invalidates only the power stage — per-lane artifacts are
+    /// width-shaped).
+    pub fn set_lane_width(&mut self, width: crate::synth::LaneWidth) {
+        self.config.lane_width = width;
     }
 
     /// Per-stage cache telemetry (compute counts and hit sources).
@@ -440,15 +459,37 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.power.insert(fp, report);
                 } else {
-                    let activity = power::measure_activity(
-                        &self.netlist.value().netlist,
-                        self.rtl.value(),
-                        self.config.power_samples,
-                        self.config.power_seed,
-                    );
+                    // One word-parallel pass at the configured lane
+                    // width. Lane 0 carries `power_seed` itself —
+                    // bit-identical to the scalar single-stream
+                    // measurement — and the derived tail seeds turn the
+                    // same pass into the width-shaped spread.
+                    let netlist = &self.netlist.value().netlist;
+                    let design = self.rtl.value();
+                    let samples = self.config.power_samples;
+                    let seed = self.config.power_seed;
+                    let batch = match self.config.lane_width {
+                        LaneWidth::W64 => {
+                            let mut seeds = LfsrBank::<u64>::lane_seeds(seed);
+                            seeds[0] = seed;
+                            power::measure_activity_batch_wide::<u64>(
+                                netlist, design, samples, &seeds, None,
+                            )
+                        }
+                        LaneWidth::W256 => {
+                            let mut seeds = LfsrBank::<W256>::lane_seeds(seed);
+                            seeds[0] = seed;
+                            power::measure_activity_batch_wide::<W256>(
+                                netlist, design, samples, &seeds, None,
+                            )
+                        }
+                    };
+                    let activity = batch.lane(0);
+                    let spread = ActivitySpread::of(&batch);
                     let model = self.config.power;
                     let report = PowerReport {
                         activity,
+                        spread,
                         model,
                         mw_6mhz: power::average_power_mw(&model, &activity, 6.0e6),
                         mw_12mhz: power::average_power_mw(&model, &activity, 12.0e6),
@@ -542,5 +583,12 @@ impl Flow {
     pub fn latency(&mut self) -> anyhow::Result<u64> {
         let policy = self.config.policy;
         Ok(rtl::module_latency(self.rtl()?, policy))
+    }
+
+    /// The width-shaped per-lane activity statistics of the power stage
+    /// (cached with it — see [`PowerReport::spread`]); convert to mW at
+    /// any clock with [`ActivitySpread`]'s model helpers.
+    pub fn power_spread(&mut self) -> anyhow::Result<ActivitySpread> {
+        Ok(self.power()?.spread)
     }
 }

@@ -42,7 +42,7 @@ use super::session::PowerReport;
 use crate::fixedpoint::{MonOp, QFormat};
 use crate::newton::{Symbol, SymbolKind, SystemModel};
 use crate::pisearch::{PiAnalysis, PiGroup};
-use crate::power::{ActivityReport, PowerModel};
+use crate::power::{ActivityReport, ActivitySpread, PowerModel};
 use crate::rational::Rational;
 use crate::rtl::{PiModuleDesign, PiUnit, Port};
 use crate::synth::{NetId, Netlist, Node};
@@ -52,9 +52,15 @@ use crate::units::{Dimension, NUM_BASE_DIMS};
 
 /// Version of the on-disk entry format. Bump on any change to the header
 /// layout, the payload encodings below, or the fingerprint function
-/// ([`super::config::StableHasher`] canonicalization rules) — version
-/// mismatch makes every old entry a clean miss.
-pub const STORE_FORMAT_VERSION: u32 = 1;
+/// ([`super::config::StableHasher`] canonicalization rules and the
+/// fingerprint *domain* — which config fields feed each stage key) —
+/// version mismatch makes every old entry a clean miss.
+///
+/// v2: the power artifact gained the width-shaped [`ActivitySpread`]
+/// (and its fingerprint the SIMD lane width, `FlowConfig::lane_width`),
+/// so v1 power entries have both a different payload layout and a
+/// narrower key domain.
+pub const STORE_FORMAT_VERSION: u32 = 2;
 
 const MAGIC: &[u8; 8] = b"DSARTFT\0";
 
@@ -633,6 +639,11 @@ impl Artifact for PowerReport {
         w.put_f64(self.activity.toggles_per_cycle);
         w.put_u64(self.activity.cycles);
         w.put_u32(self.activity.activations);
+        w.put_u32(self.spread.lanes);
+        w.put_f64(self.spread.mean_tpc);
+        w.put_f64(self.spread.std_tpc);
+        w.put_f64(self.spread.min_tpc);
+        w.put_f64(self.spread.max_tpc);
         w.put_f64(self.model.vdd);
         w.put_f64(self.model.c_eff);
         w.put_f64(self.model.p_static);
@@ -646,6 +657,13 @@ impl Artifact for PowerReport {
                 toggles_per_cycle: r.take_f64()?,
                 cycles: r.take_u64()?,
                 activations: r.take_u32()?,
+            },
+            spread: ActivitySpread {
+                lanes: r.take_u32()?,
+                mean_tpc: r.take_f64()?,
+                std_tpc: r.take_f64()?,
+                min_tpc: r.take_f64()?,
+                max_tpc: r.take_f64()?,
             },
             model: PowerModel {
                 vdd: r.take_f64()?,
@@ -728,6 +746,21 @@ pub struct StoreStats {
     pub stages: Vec<StageStats>,
 }
 
+/// Outcome of one [`ArtifactStore::gc`] pass.
+#[derive(Clone, Copy, Debug)]
+pub struct GcReport {
+    /// Entries deleted, oldest-first.
+    pub removed_entries: u64,
+    /// Bytes those entries occupied.
+    pub removed_bytes: u64,
+    /// Entries remaining after the pass.
+    pub kept_entries: u64,
+    /// Bytes remaining after the pass (≤ the requested cap unless the
+    /// cap is smaller than the newest single entry set that survived
+    /// deletion failures).
+    pub kept_bytes: u64,
+}
+
 impl StoreStats {
     pub fn total_entries(&self) -> u64 {
         self.stages.iter().map(|s| s.entries).sum()
@@ -768,10 +801,18 @@ impl ArtifactStore {
 
     /// Load the artifact stored under `fp`, or `None` when the entry is
     /// absent, unreadable, or fails any validation — a cache miss, never
-    /// an error.
+    /// an error. A successful load touches the entry's mtime so
+    /// [`ArtifactStore::gc`] sees last *use*, not last write — atime is
+    /// unreliable under the common `relatime`/`noatime` mounts.
     pub(crate) fn load<A: Artifact>(&self, fp: u64) -> Option<A> {
-        let bytes = fs::read(self.entry_path(A::STAGE, fp)).ok()?;
-        decode_entry::<A>(fp, &bytes).ok()
+        let path = self.entry_path(A::STAGE, fp);
+        let bytes = fs::read(&path).ok()?;
+        let artifact = decode_entry::<A>(fp, &bytes).ok()?;
+        let _ = fs::File::options()
+            .write(true)
+            .open(&path)
+            .and_then(|f| f.set_modified(std::time::SystemTime::now()));
+        Some(artifact)
     }
 
     /// Persist an artifact under `fp` via temp-file + atomic rename, so
@@ -813,6 +854,65 @@ impl ArtifactStore {
             stages.push(StageStats { stage: stage.dir_name(), entries, bytes });
         }
         Ok(StoreStats { stages })
+    }
+
+    /// Size-capped pruning: delete entries **least-recently-used first**
+    /// until the store's total entry bytes fit under `max_bytes`. "Use"
+    /// is the entry's mtime — bumped by [`ArtifactStore::load`] on every
+    /// successful read precisely because atime is stale under `relatime`
+    /// and frozen under `noatime` mounts. The store is a cache, so
+    /// eviction is always safe — evicted artifacts recompute on next
+    /// demand. Returns what was removed and what remains.
+    pub fn gc(&self, max_bytes: u64) -> anyhow::Result<GcReport> {
+        // Stale temp files (a writer that died between write and rename)
+        // are invisible to `load` but still occupy disk; sweep any older
+        // than an hour — no live writer holds a temp file that long —
+        // so the byte cap governs actual directory usage.
+        const TMP_MAX_AGE: std::time::Duration = std::time::Duration::from_secs(3600);
+        let now = std::time::SystemTime::now();
+        let mut entries: Vec<(std::time::SystemTime, u64, PathBuf)> = Vec::new();
+        let mut kept_bytes = 0u64;
+        for stage in StageKind::ALL {
+            if let Ok(rd) = fs::read_dir(self.root.join(stage.dir_name())) {
+                for de in rd.flatten() {
+                    let path = de.path();
+                    let Ok(md) = de.metadata() else { continue };
+                    let stamp = md
+                        .modified()
+                        .or_else(|_| md.accessed())
+                        .unwrap_or(std::time::UNIX_EPOCH);
+                    if !path.extension().map(|e| e == "art").unwrap_or(false) {
+                        if path.is_file()
+                            && now.duration_since(stamp).map(|a| a > TMP_MAX_AGE).unwrap_or(false)
+                        {
+                            let _ = fs::remove_file(&path);
+                        }
+                        continue;
+                    }
+                    kept_bytes += md.len();
+                    entries.push((stamp, md.len(), path));
+                }
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut report = GcReport {
+            removed_entries: 0,
+            removed_bytes: 0,
+            kept_entries: entries.len() as u64,
+            kept_bytes,
+        };
+        for (_, len, path) in entries {
+            if report.kept_bytes <= max_bytes {
+                break;
+            }
+            if fs::remove_file(&path).is_ok() {
+                report.removed_entries += 1;
+                report.removed_bytes += len;
+                report.kept_entries -= 1;
+                report.kept_bytes -= len;
+            }
+        }
+        Ok(report)
     }
 
     /// Delete every entry (and stray temp file); returns how many files
@@ -978,6 +1078,57 @@ mod tests {
         assert!(stats.total_bytes() > 0);
         assert_eq!(stats.stages.len(), StageKind::ALL.len());
         assert_eq!(store.clear().unwrap(), 3);
+        assert_eq!(store.stats().unwrap().total_entries(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Pin an entry's mtime to a precise instant (the test must not
+    /// depend on real sleeps or filesystem timestamp granularity).
+    fn stamp(store: &ArtifactStore, stage: StageKind, fp: u64, t: std::time::SystemTime) {
+        fs::File::options()
+            .write(true)
+            .open(store.entry_path(stage, fp))
+            .and_then(|f| f.set_modified(t))
+            .unwrap();
+    }
+
+    #[test]
+    fn gc_prunes_least_recently_used_to_byte_cap() {
+        let dir = tmpdir("gc");
+        let store = ArtifactStore::open(&dir).unwrap();
+        // Three entries with explicitly spaced last-use stamps, oldest
+        // first (save order is irrelevant).
+        let base = std::time::SystemTime::now() - std::time::Duration::from_secs(100);
+        for (fp, text) in [(1u64, "a"), (2, "b"), (3, "c")] {
+            store.save(fp, &text.repeat(200)).unwrap();
+            stamp(&store, StageKind::Verilog, fp, base + std::time::Duration::from_secs(fp));
+        }
+        // Re-reading the oldest entry marks it as recently used (load
+        // touches mtime — atime would be stale under relatime mounts);
+        // it becomes the newest stamp of the three.
+        assert!(store.load::<String>(1).is_some());
+        let total = store.stats().unwrap().total_bytes();
+        let one = total / 3;
+
+        // Cap that fits roughly one entry: the two least recently USED
+        // entries go; the just-read oldest-written entry survives.
+        let report = store.gc(one).unwrap();
+        assert_eq!(report.removed_entries, 2, "{report:?}");
+        assert_eq!(report.kept_entries, 1, "{report:?}");
+        assert!(report.kept_bytes <= one, "{report:?}");
+        assert!(store.load::<String>(1).is_some(), "recently used entry must survive");
+        assert!(store.load::<String>(2).is_none());
+        assert!(store.load::<String>(3).is_none());
+
+        // A cap larger than the store is a no-op.
+        let report = store.gc(u64::MAX).unwrap();
+        assert_eq!(report.removed_entries, 0);
+        assert_eq!(report.kept_entries, 1);
+
+        // Zero cap empties the store entirely.
+        let report = store.gc(0).unwrap();
+        assert_eq!(report.kept_entries, 0);
+        assert_eq!(report.kept_bytes, 0);
         assert_eq!(store.stats().unwrap().total_entries(), 0);
         let _ = fs::remove_dir_all(&dir);
     }

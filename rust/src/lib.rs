@@ -49,10 +49,15 @@
 //!   ([`fixedpoint`]), FSM scheduling, Verilog emission, cycle-accurate
 //!   simulation.
 //! * **Implementation flow** — [`synth`] (gate netlist, optimization,
-//!   LUT4 technology mapping, scalar + bit-parallel 64-lane gate-level
-//!   simulation), [`timing`] (STA → Fmax), [`power`]
-//!   (switching-activity power model, 64 estimates per simulation pass),
-//!   [`stim`] (LFSR stimulus, scalar and 64-lane).
+//!   LUT4 technology mapping, scalar + bit-parallel gate-level
+//!   simulation generic over the SIMD lane word: [`synth::LaneWord`]
+//!   with `u64` = 64 and [`synth::W256`] = 256 stimulus streams per
+//!   pass, plus opt-in intra-level parallel evaluation of wide
+//!   combinational levels across worker threads), [`timing`] (STA →
+//!   Fmax), [`power`] (switching-activity power model, one estimate per
+//!   lane per simulation pass at the configured
+//!   [`synth::LaneWidth`]), [`stim`] (LFSR stimulus, scalar and
+//!   lane-bank [`stim::LfsrBank`] at either width).
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
 //!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine),
 //!   [`train`] (offline/in-situ Φ calibration).

@@ -1,25 +1,20 @@
 //! `dimsynth` — command-line driver for dimensional circuit synthesis.
 //!
-//! Subcommands (hand-rolled parsing; no external CLI dependency):
+//! Subcommand names, positional signatures, flag allowlists, and help
+//! text all live in one spec table ([`SUBCOMMANDS`]); `dimsynth help`
+//! (or `--help`/`-h`) renders usage from it, and flag parsing validates
+//! against it so a typo errors instead of being silently collected.
+//! Run `dimsynth help` for the full generated reference; in short:
 //!
 //! ```text
-//! dimsynth compile <system|file.nt> [--target <sym>] [--format Qi.f] [-o DIR] [--vcd]
-//!                  [--cache-dir DIR]
-//!     Run the compiler: Π-search report + generated Verilog + resource,
-//!     timing and power reports for one system.
+//! dimsynth compile <system|file.nt> [--target SYM] [--format Qi.f] [--lanes N]
+//!                  [-o DIR] [--vcd] [--cache-dir DIR]
 //! dimsynth table1 [--samples N] [--sequential] [--cache-dir DIR]
-//!     Regenerate the paper's Table 1 across the 7-system corpus
-//!     (parallel across all cores by default).
-//! dimsynth cache <stats|clear> --cache-dir DIR
-//!     Inspect or clear a persistent artifact store.
+//! dimsynth cache <stats|gc|clear> --cache-dir DIR [--max-bytes N]
 //! dimsynth export-pisearch
-//!     Emit the Π-search interchange JSON consumed by python/compile/aot.py.
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
-//!     Offline Φ calibration via the AOT train-step executable.
 //! dimsynth serve <system> [--samples N] [--batch B] [--artifacts DIR]
-//!     Run the in-sensor inference engine on a synthetic sensor stream.
 //! dimsynth list
-//!     List the corpus systems.
 //! ```
 //!
 //! `--cache-dir DIR` attaches the persistent artifact store: compiled
@@ -27,6 +22,11 @@
 //! invocation — even from another process — recomputes nothing. The
 //! cache telemetry line goes to stderr (`cache: recomputes=… …`) so
 //! stdout reports stay byte-identical between cold and warm runs.
+//! `cache gc --max-bytes N` prunes the store oldest-first to a byte cap.
+//!
+//! `--lanes <64|256>` selects the SIMD lane width of word-parallel
+//! simulation passes (see `synth::LaneWidth`); it enters the flow
+//! config, and with it the power-stage cache fingerprint.
 //!
 //! Every compilation subcommand drives the pipeline through the
 //! [`dimsynth::flow`] session API; no stage-to-stage wiring lives here.
@@ -35,32 +35,160 @@ use dimsynth::fixedpoint::{QFormat, Q16_15};
 use dimsynth::flow::{ArtifactStore, Flow, FlowConfig, StageCounts, STORE_FORMAT_VERSION};
 use dimsynth::newton::{self, corpus};
 use dimsynth::report;
-use dimsynth::synth;
+use dimsynth::synth::{self, LaneWidth};
 use dimsynth::{coordinator, train};
 
 use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-/// Flags one subcommand accepts: `(name, takes_value)`. Flags are
-/// validated against this allowlist so a typo errors instead of being
-/// silently collected.
-type FlagSpec = &'static [(&'static str, bool)];
+/// One flag a subcommand accepts.
+struct FlagDef {
+    name: &'static str,
+    takes_value: bool,
+    /// Metavariable shown in help (empty for boolean flags).
+    value_name: &'static str,
+    help: &'static str,
+}
 
-const COMPILE_FLAGS: FlagSpec = &[
-    ("target", true),
-    ("format", true),
-    ("o", true),
-    ("out", true),
-    ("vcd", false),
-    ("cache-dir", true),
+const fn flag(name: &'static str, value_name: &'static str, help: &'static str) -> FlagDef {
+    FlagDef { name, takes_value: true, value_name, help }
+}
+
+const fn switch(name: &'static str, help: &'static str) -> FlagDef {
+    FlagDef { name, takes_value: false, value_name: "", help }
+}
+
+/// One subcommand: its name, positional signature, one-line summary, and
+/// flag allowlist. `--help` is generated from this table, and the parser
+/// validates flags against it — one source of truth.
+struct SubSpec {
+    name: &'static str,
+    /// Positional part of the usage line (e.g. `"<system|file.nt>"`).
+    args: &'static str,
+    summary: &'static str,
+    flags: &'static [FlagDef],
+}
+
+const SUBCOMMANDS: &[SubSpec] = &[
+    SubSpec {
+        name: "compile",
+        args: "<system|file.nt>",
+        summary: "Π-search report + generated Verilog + resource/timing/power reports",
+        flags: &[
+            flag("target", "SYM", "target-symbol override (mandatory for .nt files)"),
+            flag("format", "Qi.f", "fixed-point format, e.g. Q16.15"),
+            flag("lanes", "N", "SIMD lane width for word-parallel simulation (64 or 256)"),
+            flag("o", "DIR", "write Verilog + self-checking testbench to DIR"),
+            flag("out", "DIR", "alias of -o"),
+            switch("vcd", "also record a gate-level waveform (needs -o)"),
+            flag("cache-dir", "DIR", "attach the persistent artifact store at DIR"),
+        ],
+    },
+    SubSpec {
+        name: "table1",
+        args: "",
+        summary: "regenerate the paper's Table 1 across the 7-system corpus",
+        flags: &[
+            flag("samples", "N", "stimulus activations per power measurement (default 4)"),
+            switch("sequential", "drive the corpus on one thread (default: all cores)"),
+            flag("cache-dir", "DIR", "attach the persistent artifact store at DIR"),
+        ],
+    },
+    SubSpec {
+        name: "cache",
+        args: "<stats|gc|clear>",
+        summary: "inspect, size-cap (gc), or clear a persistent artifact store",
+        flags: &[
+            flag("cache-dir", "DIR", "store root (required)"),
+            flag("max-bytes", "N", "gc: prune oldest entries until the store fits N bytes"),
+        ],
+    },
+    SubSpec {
+        name: "export-pisearch",
+        args: "",
+        summary: "emit the Π-search interchange JSON consumed by python/compile/aot.py",
+        flags: &[],
+    },
+    SubSpec {
+        name: "train",
+        args: "<system>",
+        summary: "offline Φ calibration via the AOT train-step executable",
+        flags: &[
+            flag("steps", "N", "gradient steps (default 300)"),
+            flag("features", "pi|raw", "feature kind (default pi)"),
+            flag("artifacts", "DIR", "AOT artifact directory (default artifacts)"),
+        ],
+    },
+    SubSpec {
+        name: "serve",
+        args: "<system>",
+        summary: "run the in-sensor inference engine on a synthetic sensor stream",
+        flags: &[
+            flag("samples", "N", "stream length (default 2048)"),
+            flag("batch", "B", "serving batch size (default 64)"),
+            flag("artifacts", "DIR", "AOT artifact directory (default artifacts)"),
+        ],
+    },
+    SubSpec {
+        name: "list",
+        args: "",
+        summary: "list the corpus systems",
+        flags: &[],
+    },
 ];
-const TABLE1_FLAGS: FlagSpec =
-    &[("samples", true), ("sequential", false), ("cache-dir", true)];
-const CACHE_FLAGS: FlagSpec = &[("cache-dir", true)];
-const TRAIN_FLAGS: FlagSpec = &[("steps", true), ("features", true), ("artifacts", true)];
-const SERVE_FLAGS: FlagSpec = &[("samples", true), ("batch", true), ("artifacts", true)];
-const NO_FLAGS: FlagSpec = &[];
+
+fn spec_of(cmd: &str) -> Option<&'static SubSpec> {
+    SUBCOMMANDS.iter().find(|s| s.name == cmd)
+}
+
+/// Conventional rendering of a flag name: single-character names are
+/// short flags (`-o`), the rest long (`--target`). The parser accepts
+/// either dash count for any name.
+fn flag_display(name: &str) -> String {
+    if name.chars().count() == 1 {
+        format!("-{name}")
+    } else {
+        format!("--{name}")
+    }
+}
+
+/// One-line usage string of a subcommand, generated from its spec.
+fn usage_line(spec: &SubSpec) -> String {
+    let mut line = format!("dimsynth {}", spec.name);
+    if !spec.args.is_empty() {
+        line.push(' ');
+        line.push_str(spec.args);
+    }
+    for f in spec.flags {
+        if f.takes_value {
+            line.push_str(&format!(" [{} {}]", flag_display(f.name), f.value_name));
+        } else {
+            line.push_str(&format!(" [{}]", flag_display(f.name)));
+        }
+    }
+    line
+}
+
+/// The full `--help` text, generated from [`SUBCOMMANDS`].
+fn render_help() -> String {
+    let mut out = String::from(
+        "dimsynth — dimensional circuit synthesis (Buckingham-Π hardware compiler)\n\nusage:\n",
+    );
+    for spec in SUBCOMMANDS {
+        out.push_str(&format!("  {}\n      {}\n", usage_line(spec), spec.summary));
+        for f in spec.flags {
+            let head = if f.takes_value {
+                format!("{} {}", flag_display(f.name), f.value_name)
+            } else {
+                flag_display(f.name)
+            };
+            out.push_str(&format!("      {head:<22} {}\n", f.help));
+        }
+    }
+    out.push_str("  dimsynth help\n      print this reference\n");
+    out
+}
 
 /// Open the persistent artifact store named by `--cache-dir`, if given.
 fn open_store(flags: &HashMap<String, String>) -> anyhow::Result<Option<Arc<ArtifactStore>>> {
@@ -92,14 +220,14 @@ fn flag_name_of(arg: &str) -> Option<&str> {
     }
 }
 
-/// Parse `args` into positionals and flags against a per-subcommand
-/// allowlist. Unknown flags and value-flags missing their value are
-/// errors; `--` ends flag parsing. A value-taking flag consumes the next
-/// argument verbatim (so `--samples -1` is an argument, later rejected
-/// by the numeric parse, rather than a swallowed flag).
+/// Parse `args` into positionals and flags against the subcommand's spec.
+/// Unknown flags and value-flags missing their value are errors; `--`
+/// ends flag parsing. A value-taking flag consumes the next argument
+/// verbatim (so `--samples -1` is an argument, later rejected by the
+/// numeric parse, rather than a swallowed flag).
 fn parse_args(
     args: &[String],
-    spec: FlagSpec,
+    spec: &SubSpec,
 ) -> anyhow::Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
@@ -118,22 +246,22 @@ fn parse_args(
             i += 1;
             continue;
         };
-        let Some(&(canonical, takes_value)) = spec.iter().find(|(f, _)| *f == name) else {
-            let allowed: Vec<String> =
-                spec.iter().map(|(f, _)| format!("--{f}")).collect();
-            if allowed.is_empty() {
+        let Some(def) = spec.flags.iter().find(|f| f.name == name) else {
+            if spec.flags.is_empty() {
                 anyhow::bail!("unknown flag `{arg}` (this subcommand takes no flags)");
             }
+            let allowed: Vec<String> =
+                spec.flags.iter().map(|f| flag_display(f.name)).collect();
             anyhow::bail!("unknown flag `{arg}` (allowed: {})", allowed.join(", "));
         };
-        if takes_value {
+        if def.takes_value {
             let Some(value) = args.get(i + 1) else {
                 anyhow::bail!("flag `{arg}` requires a value");
             };
-            flags.insert(canonical.to_string(), value.clone());
+            flags.insert(def.name.to_string(), value.clone());
             i += 2;
         } else {
-            flags.insert(canonical.to_string(), "true".to_string());
+            flags.insert(def.name.to_string(), "true".to_string());
             i += 1;
         }
     }
@@ -159,17 +287,23 @@ fn cmd_list() {
 fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let what = pos
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth compile <system|file.nt>"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("compile").unwrap())))?;
     let q = flags
         .get("format")
         .map(|s| parse_format(s))
         .transpose()?
         .unwrap_or(Q16_15);
+    let lane_width = flags
+        .get("lanes")
+        .map(|s| LaneWidth::parse(s))
+        .transpose()?
+        .unwrap_or_default();
     // `--target` overrides a corpus entry's default target and is
     // mandatory for .nt files (they carry no default).
     let config = FlowConfig {
         qformat: q,
         target: flags.get("target").cloned(),
+        lane_width,
         ..FlowConfig::default()
     };
 
@@ -212,6 +346,17 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
     println!(
         "power:       {:.2} mW @6MHz / {:.2} mW @12MHz",
         power.mw_6mhz, power.mw_12mhz
+    );
+    // Spread comes from the same cached word-parallel pass as the power
+    // figures (lane 0 = the headline stimulus stream), so a warm
+    // --cache-dir run prints it without simulating anything.
+    let s = power.spread;
+    println!(
+        "power spread: {:.2}..{:.2} mW @6MHz over {} stimulus lanes (σ {:.3} mW)",
+        s.min_mw(&power.model, 6.0e6),
+        s.max_mw(&power.model, 6.0e6),
+        s.lanes,
+        s.std_mw(&power.model, 6.0e6)
     );
 
     if let Some(dir) = flags.get("o").or_else(|| flags.get("out")) {
@@ -273,8 +418,14 @@ fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_cache(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let action = pos.first().map(String::as_str).unwrap_or("stats");
     let dir = flags.get("cache-dir").ok_or_else(|| {
-        anyhow::anyhow!("usage: dimsynth cache <stats|clear> --cache-dir DIR")
+        anyhow::anyhow!("usage: {}", usage_line(spec_of("cache").unwrap()))
     })?;
+    // The spec-table allowlist is shared by all cache actions; reject
+    // action/flag combinations that would otherwise be silently ignored
+    // (e.g. `cache clear --max-bytes N` from a user who meant `gc`).
+    if action != "gc" && flags.contains_key("max-bytes") {
+        anyhow::bail!("--max-bytes only applies to `cache gc` (got action `{action}`)");
+    }
     let store = ArtifactStore::open(dir)?;
     match action {
         "stats" => {
@@ -294,11 +445,26 @@ fn cmd_cache(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
                 store.root().display()
             );
         }
+        "gc" => {
+            let max_bytes: u64 = flags
+                .get("max-bytes")
+                .ok_or_else(|| anyhow::anyhow!("cache gc requires --max-bytes N"))?
+                .parse()?;
+            let report = store.gc(max_bytes)?;
+            println!(
+                "gc: removed {} entries ({} bytes), kept {} entries ({} bytes) under cap {max_bytes} at {}",
+                report.removed_entries,
+                report.removed_bytes,
+                report.kept_entries,
+                report.kept_bytes,
+                store.root().display()
+            );
+        }
         "clear" => {
             let removed = store.clear()?;
             println!("cleared {removed} entries from {}", store.root().display());
         }
-        other => anyhow::bail!("unknown cache action `{other}` (use stats or clear)"),
+        other => anyhow::bail!("unknown cache action `{other}` (use stats, gc, or clear)"),
     }
     Ok(())
 }
@@ -311,7 +477,7 @@ fn cmd_export() -> anyhow::Result<()> {
 fn cmd_train(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let system = pos
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth train <system>"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("train").unwrap())))?;
     let steps: u32 = flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(300);
     let feats = match flags.get("features").map(String::as_str) {
         Some("raw") => train::FeatureKind::Raw,
@@ -333,7 +499,7 @@ fn cmd_train(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
 fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let system = pos
         .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: dimsynth serve <system>"))?;
+        .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("serve").unwrap())))?;
     let samples: usize = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(2048);
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let artifacts = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
@@ -345,23 +511,19 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        eprintln!("usage: dimsynth <compile|table1|cache|export-pisearch|train|serve|list> ...");
+        let names: Vec<&str> = SUBCOMMANDS.iter().map(|s| s.name).collect();
+        eprintln!("usage: dimsynth <{}> ... (dimsynth help for details)", names.join("|"));
         return ExitCode::from(2);
     };
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print!("{}", render_help());
+        return ExitCode::SUCCESS;
+    }
     // Validate the subcommand before flag parsing, so a typo'd command
     // reports "unknown subcommand", not a misleading flag error.
-    let spec = match cmd.as_str() {
-        "compile" => Some(COMPILE_FLAGS),
-        "table1" => Some(TABLE1_FLAGS),
-        "cache" => Some(CACHE_FLAGS),
-        "train" => Some(TRAIN_FLAGS),
-        "serve" => Some(SERVE_FLAGS),
-        "list" | "export-pisearch" => Some(NO_FLAGS),
-        _ => None,
-    };
-    let result = match spec {
-        None => Err(anyhow::anyhow!("unknown subcommand `{cmd}`")),
-        Some(spec) => parse_args(&args[1..], spec).and_then(|(pos, flags)| match cmd.as_str() {
+    let result = match spec_of(cmd) {
+        None => Err(anyhow::anyhow!("unknown subcommand `{cmd}` (dimsynth help for details)")),
+        Some(spec) => parse_args(&args[1..], spec).and_then(|(pos, flags)| match spec.name {
             "list" => {
                 cmd_list();
                 Ok(())

@@ -4,6 +4,7 @@ pub mod model;
 
 pub use model::{
     average_power, average_power_mw, measure_activity, measure_activity_batch,
-    measure_activity_spread, power_spread_mw, ActivityReport, LaneActivityReport,
-    PowerModel, PowerSpread, ICE40,
+    measure_activity_batch_wide, measure_activity_spread, measure_activity_spread_width,
+    power_spread_mw, ActivityReport, ActivitySpread, LaneActivityReport, PowerModel,
+    PowerSpread, ICE40,
 };

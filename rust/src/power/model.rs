@@ -18,8 +18,9 @@
 
 use crate::fixedpoint::QFormat;
 use crate::rtl::ir::PiModuleDesign;
-use crate::stim::{Lfsr32, LfsrBank64};
-use crate::synth::{GateSim, Netlist, WordSim, LANES};
+use crate::stim::{Lfsr32, LfsrBank, LfsrBank64};
+use crate::synth::wordsim::ParSession;
+use crate::synth::{GateSim, LaneWidth, LaneWord, Netlist, WordSim, W256};
 
 /// Power model constants.
 #[derive(Clone, Copy, Debug)]
@@ -93,12 +94,14 @@ pub fn measure_activity(
     }
 }
 
-/// Switching activity of 64 independent stimulus streams, measured in
-/// one word-parallel simulation pass ([`measure_activity_batch`]).
-#[derive(Clone, Copy, Debug)]
+/// Switching activity of `lanes.len()` independent stimulus streams,
+/// measured in one word-parallel simulation pass
+/// ([`measure_activity_batch`] / [`measure_activity_batch_wide`]).
+#[derive(Clone, Debug)]
 pub struct LaneActivityReport {
-    /// Mean net toggles per clock cycle, one per lane.
-    pub lanes: [f64; LANES],
+    /// Mean net toggles per clock cycle, one per lane (64 or 256
+    /// entries, matching the engine's lane width).
+    pub lanes: Vec<f64>,
     /// Cycles simulated (shared by all lanes — the corpus FSMs have
     /// data-independent latency, asserted during measurement).
     pub cycles: u64,
@@ -109,14 +112,16 @@ pub struct LaneActivityReport {
 impl LaneActivityReport {
     /// Mean toggles-per-cycle across lanes.
     pub fn mean(&self) -> f64 {
-        self.lanes.iter().sum::<f64>() / LANES as f64
+        self.lanes.iter().sum::<f64>() / self.lanes.len().max(1) as f64
     }
 
     /// Population standard deviation of toggles-per-cycle across lanes
     /// (the stimulus-induced spread of the activity estimate).
     pub fn spread(&self) -> f64 {
         let m = self.mean();
-        (self.lanes.iter().map(|a| (a - m).powi(2)).sum::<f64>() / LANES as f64).sqrt()
+        (self.lanes.iter().map(|a| (a - m).powi(2)).sum::<f64>()
+            / self.lanes.len().max(1) as f64)
+            .sqrt()
     }
 
     /// View one lane as a scalar [`ActivityReport`].
@@ -129,27 +134,123 @@ impl LaneActivityReport {
     }
 }
 
-/// Drive the mapped netlist with 64 independent pseudorandom stimulus
-/// streams at once and measure per-lane toggle activity — the
-/// word-parallel counterpart of [`measure_activity`], yielding 64 power
-/// estimates (mean + spread) from one simulation pass.
-///
-/// Lane *l* sees exactly the operand stream `Lfsr32::new(seeds[l])`
-/// would produce, so each lane is bit-identical to a scalar
-/// `measure_activity` run with that seed.
-pub fn measure_activity_batch(
-    netlist: &Netlist,
+/// Width-shaped summary of a batched activity measurement: per-lane
+/// toggles-per-cycle statistics at the lane width the measurement ran
+/// at. This is the form the flow power stage persists — the summary is
+/// what reports consume, and it keeps the full per-lane vector out of
+/// the stored artifact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActivitySpread {
+    /// Stimulus lanes measured (64 or 256).
+    pub lanes: u32,
+    /// Mean toggles-per-cycle across lanes.
+    pub mean_tpc: f64,
+    /// Population standard deviation across lanes.
+    pub std_tpc: f64,
+    /// Extremes across lanes.
+    pub min_tpc: f64,
+    pub max_tpc: f64,
+}
+
+impl ActivitySpread {
+    /// Summarize a batched measurement.
+    pub fn of(report: &LaneActivityReport) -> ActivitySpread {
+        let (mut min_tpc, mut max_tpc) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &a in &report.lanes {
+            min_tpc = min_tpc.min(a);
+            max_tpc = max_tpc.max(a);
+        }
+        if report.lanes.is_empty() {
+            min_tpc = 0.0;
+            max_tpc = 0.0;
+        }
+        ActivitySpread {
+            lanes: report.lanes.len() as u32,
+            mean_tpc: report.mean(),
+            std_tpc: report.spread(),
+            min_tpc,
+            max_tpc,
+        }
+    }
+
+    fn tpc_to_mw(model: &PowerModel, f_hz: f64, tpc: f64) -> f64 {
+        (model.p_static + model.c_eff * model.vdd * model.vdd * f_hz * tpc) * 1e3
+    }
+
+    /// Minimum per-lane power (mW) under `model` at `f_hz`.
+    pub fn min_mw(&self, model: &PowerModel, f_hz: f64) -> f64 {
+        Self::tpc_to_mw(model, f_hz, self.min_tpc)
+    }
+
+    /// Mean per-lane power (mW).
+    pub fn mean_mw(&self, model: &PowerModel, f_hz: f64) -> f64 {
+        Self::tpc_to_mw(model, f_hz, self.mean_tpc)
+    }
+
+    /// Maximum per-lane power (mW).
+    pub fn max_mw(&self, model: &PowerModel, f_hz: f64) -> f64 {
+        Self::tpc_to_mw(model, f_hz, self.max_tpc)
+    }
+
+    /// Standard deviation of per-lane power (mW): power is affine in
+    /// toggles-per-cycle, so the deviation scales by the slope.
+    pub fn std_mw(&self, model: &PowerModel, f_hz: f64) -> f64 {
+        model.c_eff * model.vdd * model.vdd * f_hz * 1e3 * self.std_tpc
+    }
+}
+
+/// The stimulus/readback surface shared by the plain word simulator and
+/// its intra-level parallel session, so one drive loop serves both.
+trait BatchSim<W: LaneWord> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]);
+    fn set_bus(&mut self, name: &str, value: i64);
+    fn get_bit_word(&self, name: &str) -> W;
+    fn step(&mut self);
+}
+
+impl<W: LaneWord> BatchSim<W> for WordSim<'_, W> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        WordSim::set_bus_lanes(self, name, values);
+    }
+    fn set_bus(&mut self, name: &str, value: i64) {
+        WordSim::set_bus(self, name, value);
+    }
+    fn get_bit_word(&self, name: &str) -> W {
+        WordSim::get_bit_word(self, name)
+    }
+    fn step(&mut self) {
+        WordSim::step(self);
+    }
+}
+
+impl<W: LaneWord> BatchSim<W> for ParSession<'_, W> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        ParSession::set_bus_lanes(self, name, values);
+    }
+    fn set_bus(&mut self, name: &str, value: i64) {
+        ParSession::set_bus(self, name, value);
+    }
+    fn get_bit_word(&self, name: &str) -> W {
+        ParSession::get_bit_word(self, name)
+    }
+    fn step(&mut self) {
+        ParSession::step(self);
+    }
+}
+
+/// The activation loop of the batched measurement: per-lane LFSR operand
+/// draws, start pulse, run to `done`. Returns cycles simulated.
+fn drive_activations<W: LaneWord>(
+    sim: &mut impl BatchSim<W>,
     design: &PiModuleDesign,
     activations: u32,
-    seeds: &[u32; LANES],
-) -> LaneActivityReport {
-    let q: QFormat = design.q;
-    let mut lfsrs: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
-    let mut sim = WordSim::new(netlist);
+    lfsrs: &mut [Lfsr32],
+    q: QFormat,
+) -> u64 {
     let mut cycles = 0u64;
+    let mut values = vec![0i64; W::LANES];
     for _ in 0..activations {
         for p in &design.ports {
-            let mut values = [0i64; LANES];
             for (v, lfsr) in values.iter_mut().zip(lfsrs.iter_mut()) {
                 *v = q.from_f64(lfsr.range(0.25, 12.0));
             }
@@ -162,25 +263,78 @@ pub fn measure_activity_batch(
         let mut guard = 0u32;
         loop {
             let done = sim.get_bit_word("done");
-            if done == u64::MAX {
+            if done == W::ones() {
                 break;
             }
             // The generated FSMs have data-independent latency, so all
             // lanes must finish on the same cycle; a mixed done word
             // would silently skew the shared cycle denominator.
-            assert_eq!(done, 0, "lanes diverged on `done` (data-dependent latency?)");
+            assert!(
+                done.is_zero(),
+                "lanes diverged on `done` (data-dependent latency?)"
+            );
             sim.step();
             cycles += 1;
             guard += 1;
             assert!(guard < 5_000, "activation did not finish");
         }
     }
-    let lane_toggles = sim.lane_total_toggles();
-    let mut lanes = [0f64; LANES];
-    for (a, &t) in lanes.iter_mut().zip(lane_toggles.iter()) {
-        *a = t as f64 / cycles.max(1) as f64;
+    cycles
+}
+
+/// Drive the mapped netlist with `W::LANES` independent pseudorandom
+/// stimulus streams at once and measure per-lane toggle activity — the
+/// word-parallel counterpart of [`measure_activity`], yielding `W::LANES`
+/// power estimates (mean + spread) from one simulation pass.
+///
+/// Lane *l* sees exactly the operand stream `Lfsr32::new(seeds[l])`
+/// would produce, so each lane is bit-identical to a scalar
+/// `measure_activity` run with that seed, at either lane width.
+///
+/// `level_par_threshold` additionally fans each combinational level at
+/// least that many packed LUTs wide out across worker threads
+/// ([`WordSim::with_level_parallelism`]); results are bit-identical to
+/// the sequential engine.
+pub fn measure_activity_batch_wide<W: LaneWord>(
+    netlist: &Netlist,
+    design: &PiModuleDesign,
+    activations: u32,
+    seeds: &[u32],
+    level_par_threshold: Option<usize>,
+) -> LaneActivityReport {
+    assert_eq!(seeds.len(), W::LANES, "expected one seed per lane");
+    let q: QFormat = design.q;
+    let mut lfsrs: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+    let mut sim = WordSim::<W>::new(netlist);
+    if let Some(t) = level_par_threshold {
+        sim = sim.with_level_parallelism(t);
     }
+    // The session path carries per-step bookkeeping (toggle-word scratch,
+    // deferred plane accounting); only take it when the plan actually
+    // armed — on narrow netlists or single-core machines the plain
+    // engine is strictly cheaper.
+    let cycles = if sim.level_parallelism_active() {
+        sim.parallel_session(|s| drive_activations(s, design, activations, &mut lfsrs, q))
+    } else {
+        drive_activations(&mut sim, design, activations, &mut lfsrs, q)
+    };
+    let lane_toggles = sim.lane_total_toggles();
+    let lanes = lane_toggles
+        .iter()
+        .map(|&t| t as f64 / cycles.max(1) as f64)
+        .collect();
     LaneActivityReport { lanes, cycles, activations }
+}
+
+/// The 64-lane batched measurement ([`measure_activity_batch_wide`] with
+/// the default `u64` engine, no intra-level fan-out).
+pub fn measure_activity_batch(
+    netlist: &Netlist,
+    design: &PiModuleDesign,
+    activations: u32,
+    seeds: &[u32],
+) -> LaneActivityReport {
+    measure_activity_batch_wide::<u64>(netlist, design, activations, seeds, None)
 }
 
 /// Convenience: measure 64 lanes with seeds derived from one master seed
@@ -195,6 +349,36 @@ pub fn measure_activity_spread(
     measure_activity_batch(netlist, design, activations, &LfsrBank64::lane_seeds(seed))
 }
 
+/// [`measure_activity_spread`] at a runtime-selected lane width: one
+/// pass yields 64 or 256 independent activity estimates. Seeds derive
+/// from the master seed exactly as the fixed-width entry points do (the
+/// 64-lane seed list is a prefix of the 256-lane one).
+pub fn measure_activity_spread_width(
+    netlist: &Netlist,
+    design: &PiModuleDesign,
+    activations: u32,
+    seed: u32,
+    width: LaneWidth,
+    level_par_threshold: Option<usize>,
+) -> LaneActivityReport {
+    match width {
+        LaneWidth::W64 => measure_activity_batch_wide::<u64>(
+            netlist,
+            design,
+            activations,
+            &LfsrBank::<u64>::lane_seeds(seed),
+            level_par_threshold,
+        ),
+        LaneWidth::W256 => measure_activity_batch_wide::<W256>(
+            netlist,
+            design,
+            activations,
+            &LfsrBank::<W256>::lane_seeds(seed),
+            level_par_threshold,
+        ),
+    }
+}
+
 /// Average power (watts) at clock `f_hz` for measured activity.
 pub fn average_power(model: &PowerModel, activity: &ActivityReport, f_hz: f64) -> f64 {
     model.p_static + model.c_eff * model.vdd * model.vdd * f_hz * activity.toggles_per_cycle
@@ -205,12 +389,12 @@ pub fn average_power_mw(model: &PowerModel, activity: &ActivityReport, f_hz: f64
     average_power(model, activity, f_hz) * 1e3
 }
 
-/// 64 independent power estimates from one word-parallel activity
-/// measurement.
-#[derive(Clone, Copy, Debug)]
+/// Per-lane power estimates (64 or 256, matching the measurement's lane
+/// width) from one word-parallel activity measurement.
+#[derive(Clone, Debug)]
 pub struct PowerSpread {
     /// Per-lane power (milliwatts).
-    pub lanes_mw: [f64; LANES],
+    pub lanes_mw: Vec<f64>,
     /// Mean across lanes (milliwatts).
     pub mean_mw: f64,
     /// Population standard deviation across lanes (milliwatts).
@@ -227,12 +411,12 @@ pub fn power_spread_mw(
     activity: &LaneActivityReport,
     f_hz: f64,
 ) -> PowerSpread {
-    let mut lanes_mw = [0f64; LANES];
-    for (lane, p) in lanes_mw.iter_mut().enumerate() {
-        *p = average_power_mw(model, &activity.lane(lane), f_hz);
-    }
-    let mean_mw = lanes_mw.iter().sum::<f64>() / LANES as f64;
-    let var = lanes_mw.iter().map(|p| (p - mean_mw).powi(2)).sum::<f64>() / LANES as f64;
+    let lanes_mw: Vec<f64> = (0..activity.lanes.len())
+        .map(|lane| average_power_mw(model, &activity.lane(lane), f_hz))
+        .collect();
+    let n = lanes_mw.len().max(1) as f64;
+    let mean_mw = lanes_mw.iter().sum::<f64>() / n;
+    let var = lanes_mw.iter().map(|p| (p - mean_mw).powi(2)).sum::<f64>() / n;
     let (mut min_mw, mut max_mw) = (f64::INFINITY, f64::NEG_INFINITY);
     for &p in &lanes_mw {
         min_mw = min_mw.min(p);
@@ -319,6 +503,90 @@ mod tests {
         }
         assert!(batch.spread() >= 0.0);
         assert!(batch.mean() > 0.0);
+    }
+
+    #[test]
+    fn wide_batch_matches_narrow_and_scalar() {
+        // The 256-lane engine must agree lane-for-lane with the 64-lane
+        // engine on the shared seed prefix, and with the scalar oracle
+        // on upper lanes the narrow engine cannot reach.
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let seeds256 = LfsrBank::<W256>::lane_seeds(0x5EED);
+        let wide =
+            measure_activity_batch_wide::<W256>(&mapped.netlist, &d, 2, &seeds256, None);
+        assert_eq!(wide.lanes.len(), 256);
+        let narrow = measure_activity_batch(&mapped.netlist, &d, 2, &seeds256[..64]);
+        assert_eq!(wide.cycles, narrow.cycles);
+        assert_eq!(&wide.lanes[..64], &narrow.lanes[..]);
+        for &lane in &[77usize, 255] {
+            let scalar = measure_activity(&mapped.netlist, &d, 2, seeds256[lane]);
+            assert_eq!(wide.lanes[lane], scalar.toggles_per_cycle, "lane {lane}");
+            assert_eq!(wide.cycles, scalar.cycles, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn intra_level_parallel_batch_is_bit_identical() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let seeds = LfsrBank::<u64>::lane_seeds(0xCAFE);
+        let seq =
+            measure_activity_batch_wide::<u64>(&mapped.netlist, &d, 2, &seeds, None);
+        // A small threshold forces the fan-out path on every wide level.
+        let par =
+            measure_activity_batch_wide::<u64>(&mapped.netlist, &d, 2, &seeds, Some(32));
+        assert_eq!(seq.cycles, par.cycles);
+        assert_eq!(seq.lanes, par.lanes);
+    }
+
+    #[test]
+    fn spread_width_dispatch_is_prefix_consistent() {
+        let e = corpus::by_id("pendulum").unwrap();
+        let m = corpus::load_entry(&e).unwrap();
+        let a = analyze_optimized(&m, e.target).unwrap();
+        let d = ir::build(&a, Q16_15);
+        let mapped = map_design(&d);
+        let narrow = measure_activity_spread_width(
+            &mapped.netlist, &d, 2, 0xACE1, LaneWidth::W64, None,
+        );
+        let wide = measure_activity_spread_width(
+            &mapped.netlist, &d, 2, 0xACE1, LaneWidth::W256, None,
+        );
+        assert_eq!(narrow.lanes.len(), 64);
+        assert_eq!(wide.lanes.len(), 256);
+        assert_eq!(&wide.lanes[..64], &narrow.lanes[..]);
+    }
+
+    #[test]
+    fn activity_spread_summary_matches_report() {
+        let r = LaneActivityReport { lanes: vec![1.0, 3.0, 2.0], cycles: 10, activations: 1 };
+        let s = ActivitySpread::of(&r);
+        assert_eq!(s.lanes, 3);
+        assert_eq!(s.min_tpc, 1.0);
+        assert_eq!(s.max_tpc, 3.0);
+        assert!((s.mean_tpc - 2.0).abs() < 1e-12);
+        assert!((s.std_tpc - r.spread()).abs() < 1e-12);
+        // The mW helpers are the power model applied to the tpc stats.
+        let mean_act =
+            ActivityReport { toggles_per_cycle: s.mean_tpc, cycles: 10, activations: 1 };
+        let direct = average_power_mw(&ICE40, &mean_act, 6.0e6);
+        assert!((s.mean_mw(&ICE40, 6.0e6) - direct).abs() < 1e-12);
+        assert!(s.min_mw(&ICE40, 6.0e6) <= s.max_mw(&ICE40, 6.0e6));
+        assert!(s.std_mw(&ICE40, 6.0e6) >= 0.0);
+        // Empty report degrades to zeros, not infinities.
+        let empty = ActivitySpread::of(&LaneActivityReport {
+            lanes: Vec::new(),
+            cycles: 0,
+            activations: 0,
+        });
+        assert_eq!((empty.lanes, empty.min_tpc, empty.max_tpc), (0, 0.0, 0.0));
     }
 
     #[test]

@@ -203,8 +203,10 @@ pub struct BatchResult {
 /// (each a port-order input vector) through the module, asserting the
 /// schedule's data-independent latency so callers can account cycles
 /// per-sample without per-sample bookkeeping. This is the RTL-sim
-/// counterpart of the 64-wide dispatch in
-/// [`crate::coordinator::Pipeline`].
+/// counterpart of the lane-wide power dispatch in
+/// [`crate::coordinator::Pipeline`]; unlike the gate-level engine it
+/// has no SIMD lane word — batching here is a plain loop, so it is
+/// width-agnostic by construction.
 pub fn run_batch(design: &PiModuleDesign, samples: &[impl AsRef<[i64]>]) -> BatchResult {
     let mut outputs = Vec::with_capacity(samples.len());
     let mut per_sample = 0u64;

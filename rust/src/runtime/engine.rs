@@ -33,7 +33,10 @@ impl Executable {
     /// number of samples by chunking into `batch_rows`-row windows
     /// (zero-padded tail), reading `out_width` int32 values per sample
     /// from output 0. This is the executable-side counterpart of the
-    /// 64-wide dispatch in [`crate::coordinator::Pipeline`].
+    /// lane-wide dispatch in [`crate::coordinator::Pipeline`];
+    /// `batch_rows` is baked into the AOT artifact's input shape (the
+    /// `*_b64` executables are 64-row), independent of the gate-level
+    /// simulator's runtime-selected SIMD lane width.
     pub fn run_batched_i32(
         &self,
         batch_rows: usize,

@@ -6,6 +6,8 @@
 //! power-analysis stimulus, simulation inputs, and as the repo-wide
 //! deterministic PRNG (no external `rand` dependency).
 
+use crate::synth::lane::{LaneWord, W256};
+
 /// 32-bit maximal-length Fibonacci LFSR (taps 32, 22, 2, 1).
 #[derive(Clone, Debug)]
 pub struct Lfsr32 {
@@ -59,71 +61,79 @@ impl Lfsr32 {
     }
 }
 
-/// 64 independent [`Lfsr32`] streams advanced word-parallel, for the
-/// bit-parallel gate-level simulator ([`crate::synth::WordSim`]).
+/// `W::LANES` independent [`Lfsr32`] streams advanced word-parallel, for
+/// the bit-parallel gate-level simulator ([`crate::synth::WordSim`]).
+/// [`LfsrBank64`] (64 lanes in a `u64`) and [`LfsrBank256`] (256 lanes
+/// in a [`W256`]) are the two instantiations.
 ///
-/// The 64 registers are stored **bit-sliced**: `planes[k]` holds bit *k*
-/// of every lane's shift register (bit *l* of the plane = lane *l*), so
-/// one [`LfsrBank64::next_bit_word`] computes the feedback of all 64
-/// lanes with three XOR word ops and a plane rotation — the same
-/// transposition the simulator uses for net values. Lane *l* of the bank
-/// is bit-compatible with `Lfsr32::new(seeds[l])` for nonzero seeds
+/// The lane registers are stored **bit-sliced**: `planes[k]` holds bit
+/// *k* of every lane's shift register (bit *l* of the plane = lane *l*),
+/// so one [`LfsrBank::next_bit_word`] computes the feedback of all lanes
+/// with three XOR word ops and a plane rotation — the same transposition
+/// the simulator uses for net values. Lane *l* of the bank is
+/// bit-compatible with `Lfsr32::new(seeds[l])` for nonzero seeds
 /// (tested); zero seeds are remapped to *distinct per-lane* states —
 /// unlike `Lfsr32::new`'s single constant — so no two lanes can share a
 /// stream.
 #[derive(Clone, Debug)]
-pub struct LfsrBank64 {
-    planes: [u64; 32],
+pub struct LfsrBank<W: LaneWord> {
+    planes: [W; 32],
 }
 
-impl LfsrBank64 {
+/// The original 64-lane bank (one `u64` per plane).
+pub type LfsrBank64 = LfsrBank<u64>;
+
+/// The 256-lane bank feeding the `WordSim<W256>` engine.
+pub type LfsrBank256 = LfsrBank<W256>;
+
+impl<W: LaneWord> LfsrBank<W> {
     /// The nonzero replacement state for a zero-seeded lane.
     ///
     /// Remapping every zero seed to one shared constant (as
     /// [`Lfsr32::new`] does for its single stream) would give two
     /// zero-seeded lanes *identical* streams, silently correlating the
     /// power samples they drive. Instead each lane gets a distinct
-    /// value: bits 16..23 encode `lane + 1` (so the value is provably
+    /// value: bits 16..25 encode `lane + 1` (so the value is provably
     /// nonzero — the low bits keep the classic `0xACE1` pattern — and
-    /// pairwise distinct across all 64 lanes).
+    /// pairwise distinct across all lanes of the widest bank).
     fn zero_seed_replacement(lane: usize) -> u32 {
         0xACE1 ^ ((lane as u32 + 1) << 16)
     }
 
-    /// Create from 64 explicit lane seeds. Zero seeds (the LFSR lock-up
-    /// state) are remapped to distinct per-lane nonzero states, so no
-    /// two lanes ever share a stream.
-    pub fn from_seeds(seeds: &[u32; 64]) -> LfsrBank64 {
-        let mut planes = [0u64; 32];
+    /// Create from `W::LANES` explicit lane seeds. Zero seeds (the LFSR
+    /// lock-up state) are remapped to distinct per-lane nonzero states,
+    /// so no two lanes ever share a stream.
+    pub fn from_seeds(seeds: &[u32]) -> LfsrBank<W> {
+        assert_eq!(seeds.len(), W::LANES, "expected one seed per lane");
+        let mut planes = [W::zero(); 32];
         for (lane, &seed) in seeds.iter().enumerate() {
             let s = if seed == 0 { Self::zero_seed_replacement(lane) } else { seed };
             for (k, plane) in planes.iter_mut().enumerate() {
-                *plane |= u64::from(s >> k & 1) << lane;
+                plane.set_lane(lane, s >> k & 1 == 1);
             }
         }
-        LfsrBank64 { planes }
+        LfsrBank { planes }
     }
 
-    /// Create with 64 distinct lane seeds derived from one master seed.
-    pub fn new(seed: u32) -> LfsrBank64 {
-        LfsrBank64::from_seeds(&Self::lane_seeds(seed))
+    /// Create with `W::LANES` distinct lane seeds derived from one
+    /// master seed.
+    pub fn new(seed: u32) -> LfsrBank<W> {
+        LfsrBank::from_seeds(&Self::lane_seeds(seed))
     }
 
-    /// The 64 per-lane seeds [`LfsrBank64::new`] derives from a master
-    /// seed (all nonzero: an LFSR state stream never visits zero). Useful
-    /// for constructing bit-compatible scalar references.
-    pub fn lane_seeds(seed: u32) -> [u32; 64] {
+    /// The per-lane seeds [`LfsrBank::new`] derives from a master seed
+    /// (all nonzero: an LFSR state stream never visits zero). Useful for
+    /// constructing bit-compatible scalar references. The first 64 seeds
+    /// of a 256-lane bank equal a 64-lane bank's seeds for the same
+    /// master, so narrow runs are a lane-prefix of wide ones.
+    pub fn lane_seeds(seed: u32) -> Vec<u32> {
         let mut gen = Lfsr32::new(seed);
-        let mut seeds = [0u32; 64];
-        for s in seeds.iter_mut() {
-            *s = gen.next_u32();
-        }
-        seeds
+        (0..W::LANES).map(|_| gen.next_u32()).collect()
     }
 
-    /// Advance every lane one bit; returns the 64 output bits as a word
-    /// (bit *l* = lane *l*).
-    pub fn next_bit_word(&mut self) -> u64 {
+    /// Advance every lane one bit; returns the output bits as a lane
+    /// word (bit *l* = lane *l*).
+    pub fn next_bit_word(&mut self) -> W {
         // Same taps as Lfsr32::next_bit, evaluated across all lanes at
         // once: bit = s0 ^ s10 ^ s30 ^ s31.
         let bits = self.planes[0] ^ self.planes[10] ^ self.planes[30] ^ self.planes[31];
@@ -134,10 +144,10 @@ impl LfsrBank64 {
 
     /// Current register state of one lane (for tests and checkpointing).
     pub fn lane_state(&self, lane: usize) -> u32 {
-        assert!(lane < 64, "lane out of range");
+        assert!(lane < W::LANES, "lane out of range");
         let mut s = 0u32;
         for (k, plane) in self.planes.iter().enumerate() {
-            s |= ((plane >> lane & 1) as u32) << k;
+            s |= u32::from(plane.lane(lane)) << k;
         }
         s
     }
@@ -276,6 +286,40 @@ mod tests {
         let uniq: HashSet<u32> = seeds.iter().copied().collect();
         assert_eq!(uniq.len(), 64);
         assert!(seeds.iter().all(|&s| s != 0));
+    }
+
+    #[test]
+    fn bank256_matches_scalar_lanes() {
+        let seeds = LfsrBank256::lane_seeds(0xBEEF);
+        let mut bank = LfsrBank256::from_seeds(&seeds);
+        let mut scalars: Vec<Lfsr32> = seeds.iter().map(|&s| Lfsr32::new(s)).collect();
+        for step in 0..500 {
+            let w = bank.next_bit_word();
+            for (lane, s) in scalars.iter_mut().enumerate() {
+                assert_eq!(w.lane(lane), s.next_bit() == 1, "step {step} lane {lane}");
+            }
+        }
+        for (lane, s) in scalars.iter().enumerate() {
+            assert_eq!(bank.lane_state(lane), s.state(), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn wide_bank_seeds_extend_narrow_bank() {
+        // A 256-lane bank's first 64 seeds equal the 64-lane bank's for
+        // the same master seed, so narrow runs are lane-prefixes of wide
+        // ones (relied on by the cross-width differential tests).
+        let narrow = LfsrBank64::lane_seeds(0x5EED);
+        let wide = LfsrBank256::lane_seeds(0x5EED);
+        assert_eq!(&wide[..64], &narrow[..]);
+    }
+
+    #[test]
+    fn bank256_zero_seeds_pairwise_distinct_and_nonzero() {
+        let bank = LfsrBank256::from_seeds(&[0u32; 256]);
+        let states: HashSet<u32> = (0..256).map(|l| bank.lane_state(l)).collect();
+        assert_eq!(states.len(), 256, "zero-seed remapping collided lanes");
+        assert!(!states.contains(&0), "a lane landed in the lock-up state");
     }
 
     #[test]

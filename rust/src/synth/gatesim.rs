@@ -40,6 +40,9 @@ pub struct GateSim<'n> {
     cycles: u64,
     /// Input bus name -> bit net ids.
     bus: HashMap<String, Vec<NetId>>,
+    /// Output bus name -> bit net ids (prebuilt: output reads are hot in
+    /// testbench-driven loops polling `done` every cycle).
+    out_bus: HashMap<String, Vec<NetId>>,
     /// Packed combinational plan in topological order.
     luts: Vec<PackedLut>,
     /// (dff net, d net) pairs.
@@ -87,8 +90,23 @@ impl<'n> GateSim<'n> {
             .iter()
             .map(|(n, b)| (n.clone(), b.clone()))
             .collect();
+        let out_bus = nl
+            .outputs
+            .iter()
+            .map(|(n, b)| (n.clone(), b.clone()))
+            .collect();
         let scratch = vec![false; dffs.len()];
-        GateSim { nl, vals, toggles: vec![0; nl.len()], cycles: 0, bus, luts, dffs, scratch }
+        GateSim {
+            nl,
+            vals,
+            toggles: vec![0; nl.len()],
+            cycles: 0,
+            bus,
+            out_bus,
+            luts,
+            dffs,
+            scratch,
+        }
     }
 
     /// Bind an input bus to an integer value (LSB-first, two's complement
@@ -157,11 +175,9 @@ impl<'n> GateSim<'n> {
 
     /// Read an output bus as a sign-extended integer.
     pub fn get_output(&self, name: &str) -> i64 {
-        let (_, bits) = self
-            .nl
-            .outputs
-            .iter()
-            .find(|(n, _)| n == name)
+        let bits = self
+            .out_bus
+            .get(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"));
         let mut v: i64 = 0;
         for (i, bit) in bits.iter().enumerate() {

@@ -4,6 +4,7 @@
 //! is the substitute for the paper's iCE40 tool flow (DESIGN.md §2).
 
 pub mod gatesim;
+pub mod lane;
 pub mod lower;
 pub mod netlist;
 pub mod opt;
@@ -13,8 +14,9 @@ pub mod word;
 pub mod wordsim;
 
 pub use gatesim::GateSim;
+pub use lane::{LaneWidth, LaneWord, W256};
 pub use lower::lower;
 pub use netlist::{Levelization, NetId, Netlist, Node};
 pub use techmap::{map_design, MappedDesign};
 pub use vcd::VcdRecorder;
-pub use wordsim::{WordSim, LANES};
+pub use wordsim::{ParSession, WordSim, LANES, LEVEL_PAR_THRESHOLD};

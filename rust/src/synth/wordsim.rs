@@ -1,20 +1,27 @@
-//! Bit-parallel (64-wide) gate-level simulation.
+//! Bit-parallel (lane-word wide) gate-level simulation.
 //!
 //! # Lane model
 //!
-//! [`WordSim`] advances **64 independent stimulus streams per machine
-//! word**: every net holds a `u64` whose bit *l* is the net's boolean
-//! value in lane *l*. One [`WordSim::step`] therefore simulates one clock
-//! cycle of 64 independent copies of the design at once — the classic
-//! compiled-code / emulation-engine trick that turns the power-analysis
-//! workload (long LFSR stimulus runs, see [`crate::power`]) from one
-//! boolean per net per cycle into one word op per net per cycle.
+//! [`WordSim`] advances **one independent stimulus stream per bit of a
+//! SIMD lane word** ([`LaneWord`]): every net holds a word whose bit *l*
+//! is the net's boolean value in lane *l*. One [`WordSim::step`]
+//! therefore simulates one clock cycle of `W::LANES` independent copies
+//! of the design at once — the classic compiled-code / emulation-engine
+//! trick that turns the power-analysis workload (long LFSR stimulus
+//! runs, see [`crate::power`]) from one boolean per net per cycle into
+//! one word op per net per cycle. Two lane words are provided:
+//!
+//! * `WordSim<'_, u64>` (the default) — 64 streams per pass;
+//! * `WordSim<'_, W256>` — 256 streams per pass; the same straight-line
+//!   word ops auto-vectorize to AVX2/NEON, so the 4× lane count costs
+//!   far less than 4× the wall time.
 //!
 //! Lanes never interact: lane *l* of every net evolves exactly as a
 //! scalar [`super::GateSim`] run would with lane *l*'s inputs. The scalar
 //! simulator is kept as the reference oracle; the differential test suite
 //! (`tests/wordsim_differential.rs`) asserts lane-by-lane identity of
-//! outputs and per-net toggle counts on the whole corpus.
+//! outputs and per-net toggle counts on the whole corpus, at both lane
+//! widths.
 //!
 //! # LUT evaluation
 //!
@@ -26,31 +33,44 @@
 //! `x0 ^ (s & (x0 ^ x1))`. The hot loop is straight-line AND/XOR word
 //! ops — no per-bit truth-table indexing, no branches, no hash lookups.
 //!
-//! # Levelization
+//! # Levelization and intra-level parallelism
 //!
 //! The evaluation plan is grouped by the combinational levels computed by
-//! [`Netlist::levelize`] (validated topological order). Iterating dense
-//! per-level slices keeps the schedule correct under any future
-//! within-level reordering or parallel evaluation, and documents the
-//! data-dependence structure explicitly.
+//! [`Netlist::levelize`] (validated topological order). Levels are a hard
+//! dependence barrier, but *within* a level every LUT reads only earlier
+//! levels and writes its own output net — embarrassingly parallel. When
+//! enabled ([`WordSim::with_level_parallelism`]) and driven through a
+//! [`WordSim::parallel_session`], levels wider than a threshold are split
+//! across persistent worker threads (spin-joined per level); narrower
+//! levels and all toggle bookkeeping stay on the driving thread, so
+//! parallel results are **bit-identical** to sequential ones.
 //!
 //! # Toggle counting
 //!
 //! Toggles are counted word-parallel: `count_ones` of `old ^ new` updates
-//! the per-net counter for all 64 lanes at once, and the same XOR word is
+//! the per-net counter for all lanes at once, and the same XOR word is
 //! accumulated into per-lane totals through a 32-deep bit-plane
 //! carry-save counter (amortized ~2 word ops per toggled net), so one
-//! simulation pass yields 64 independent switching-activity estimates.
+//! simulation pass yields `W::LANES` independent switching-activity
+//! estimates.
 
+use super::lane::LaneWord;
 use super::netlist::{NetId, Netlist, Node};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of independent simulation lanes per machine word.
+/// Number of independent simulation lanes per `u64` machine word (the
+/// default engine width; generic code should use `W::LANES`).
 pub const LANES: usize = 64;
 
 /// Bit-planes of the per-lane toggle accumulator (counts up to 2³² − 1
 /// toggles per lane between flushes).
 const PLANES: usize = 32;
+
+/// Default minimum level width (packed LUTs in one combinational level)
+/// for fanning a level out across worker threads; below it the
+/// synchronization costs more than the evaluation.
+pub const LEVEL_PAR_THRESHOLD: usize = 128;
 
 /// One LUT in the packed word-parallel evaluation plan.
 #[derive(Clone, Copy)]
@@ -68,14 +88,14 @@ struct PackedWordLut {
 
 /// All-ones word if bit `i` of `byte` is set, else zero (branch-free).
 #[inline(always)]
-fn spread(byte: u8, i: u32) -> u64 {
-    0u64.wrapping_sub(u64::from((byte >> i) & 1))
+fn spread<W: LaneWord>(byte: u8, i: u32) -> W {
+    W::splat((byte >> i) & 1 == 1)
 }
 
 /// Straight-line Shannon mux-tree evaluation of a packed LUT over four
-/// input words. ~30 word ops for 64 lanes.
+/// input words. ~30 word ops for `W::LANES` lanes.
 #[inline(always)]
-fn eval_lut(sel: u8, inv: u8, a: u64, b: u64, c: u64, d: u64) -> u64 {
+fn eval_lut<W: LaneWord>(sel: u8, inv: u8, a: W, b: W, c: W, d: W) -> W {
     let l0 = (a & spread(sel, 0)) ^ spread(inv, 0);
     let l1 = (a & spread(sel, 1)) ^ spread(inv, 1);
     let l2 = (a & spread(sel, 2)) ^ spread(inv, 2);
@@ -118,26 +138,78 @@ fn compile_tt(tt: u16, arity: usize) -> (u8, u8) {
     (sel, inv)
 }
 
-/// 64-lane word-parallel simulation state for one netlist.
-pub struct WordSim<'n> {
+/// Carry-save add of toggle word `t` into the bit-plane accumulator.
+/// Returns the leftover carry (must be zero below the flush threshold).
+#[inline(always)]
+fn plane_accumulate<W: LaneWord>(planes: &mut [W; PLANES], t: W) -> W {
+    let mut carry = t;
+    for p in planes.iter_mut() {
+        if carry.is_zero() {
+            break;
+        }
+        let sum = *p ^ carry;
+        let next_carry = carry & *p;
+        *p = sum;
+        carry = next_carry;
+    }
+    carry
+}
+
+/// Move a bit-plane accumulator into flushed per-lane totals.
+fn flush_planes_into<W: LaneWord>(planes: &mut [W; PLANES], flushed: &mut [u64], adds: &mut u64) {
+    for (lane, total) in flushed.iter_mut().enumerate() {
+        let mut acc = 0u64;
+        for (k, plane) in planes.iter().enumerate() {
+            acc |= u64::from(plane.lane(lane)) << k;
+        }
+        *total += acc;
+    }
+    *planes = [W::zero(); PLANES];
+    *adds = 0;
+}
+
+/// Intra-level fan-out plan: which levels split across workers, and how.
+#[derive(Clone, Debug)]
+struct ParPlan {
+    /// Worker-thread count (including the driving thread).
+    workers: usize,
+    /// Per level: index into `par_splits` when the level fans out.
+    level_par: Vec<Option<u32>>,
+    /// Chunk bounds into the packed plan, `workers` entries per parallel
+    /// level, visited in level order every step.
+    par_splits: Vec<Vec<(u32, u32)>>,
+}
+
+/// Word-parallel simulation state for one netlist, carrying `W::LANES`
+/// independent stimulus streams.
+pub struct WordSim<'n, W: LaneWord = u64> {
     nl: &'n Netlist,
     /// Current value word of every net (bit l = lane l).
-    vals: Vec<u64>,
+    vals: Vec<W>,
     /// Per-net toggle counters, summed across lanes.
     toggles: Vec<u64>,
     /// Bit-plane carry-save accumulator of per-lane toggle totals.
-    lane_planes: [u64; PLANES],
-    /// Flushed per-lane toggle totals.
-    lane_flushed: [u64; LANES],
+    lane_planes: [W; PLANES],
+    /// Flushed per-lane toggle totals (`W::LANES` entries).
+    lane_flushed: Vec<u64>,
     /// Accumulator adds since the last flush (overflow guard).
     plane_adds: u64,
-    /// Optional exact per-net per-lane counters (`net * LANES + lane`),
-    /// for differential testing; costs one pass over set toggle bits.
+    /// Adds at which the accumulator must flush. Production value is
+    /// `u32::MAX` (the plane depth); tests lower it to exercise the
+    /// overflow-flush path cheaply.
+    flush_threshold: u64,
+    /// Optional exact per-net per-lane counters (`net * W::LANES +
+    /// lane`), for differential testing; costs one pass over set toggle
+    /// bits.
     lane_net_toggles: Option<Vec<u64>>,
     /// Cycles executed.
     cycles: u64,
     /// Input bus name -> bit net ids.
     bus: HashMap<String, Vec<NetId>>,
+    /// Output bus name -> bit net ids (prebuilt: output reads are hot in
+    /// testbench-driven loops polling `done` every cycle, and the
+    /// netlist's output list would otherwise be scanned linearly).
+    out_bus: HashMap<String, Vec<NetId>>,
     /// Packed combinational plan, grouped by level.
     luts: Vec<PackedWordLut>,
     /// Half-open ranges into `luts`, one per combinational level.
@@ -145,22 +217,24 @@ pub struct WordSim<'n> {
     /// (dff net, d net) pairs.
     dffs: Vec<(u32, u32)>,
     /// Two-phase clock-edge scratch (sampled D words).
-    scratch: Vec<u64>,
+    scratch: Vec<W>,
+    /// Intra-level fan-out plan, when enabled and worthwhile.
+    par: Option<ParPlan>,
 }
 
-impl<'n> WordSim<'n> {
+impl<'n, W: LaneWord> WordSim<'n, W> {
     /// Create a simulator with flip-flops at their init values in every
     /// lane.
-    pub fn new(nl: &'n Netlist) -> WordSim<'n> {
+    pub fn new(nl: &'n Netlist) -> WordSim<'n, W> {
         let lv = nl.levelize();
-        let mut vals = vec![0u64; nl.len()];
+        let mut vals = vec![W::zero(); nl.len()];
         let mut dffs = Vec::new();
         for (id, node) in nl.nodes() {
             match node {
-                Node::Const(true) => vals[id as usize] = !0,
+                Node::Const(true) => vals[id as usize] = W::ones(),
                 Node::Dff { d, init } => {
                     if *init {
-                        vals[id as usize] = !0;
+                        vals[id as usize] = W::ones();
                     }
                     dffs.push((id, *d));
                 }
@@ -189,129 +263,215 @@ impl<'n> WordSim<'n> {
             .iter()
             .map(|(n, b)| (n.clone(), b.clone()))
             .collect();
-        let scratch = vec![0u64; dffs.len()];
+        let out_bus = nl
+            .outputs
+            .iter()
+            .map(|(n, b)| (n.clone(), b.clone()))
+            .collect();
+        let scratch = vec![W::zero(); dffs.len()];
         WordSim {
             nl,
             vals,
             toggles: vec![0; nl.len()],
-            lane_planes: [0; PLANES],
-            lane_flushed: [0; LANES],
+            lane_planes: [W::zero(); PLANES],
+            lane_flushed: vec![0; W::LANES],
             plane_adds: 0,
+            flush_threshold: u64::from(u32::MAX),
             lane_net_toggles: None,
             cycles: 0,
             bus,
+            out_bus,
             luts,
             level_bounds,
             dffs,
             scratch,
+            par: None,
         }
     }
 
     /// Enable exact per-net per-lane toggle tracking (slower; meant for
     /// differential testing against the scalar oracle).
-    pub fn with_lane_net_toggles(mut self) -> WordSim<'n> {
-        self.lane_net_toggles = Some(vec![0u64; self.nl.len() * LANES]);
+    pub fn with_lane_net_toggles(mut self) -> WordSim<'n, W> {
+        self.lane_net_toggles = Some(vec![0u64; self.nl.len() * W::LANES]);
         self
+    }
+
+    /// Lower the bit-plane flush threshold (default `u32::MAX` adds).
+    /// Test hook: a small threshold forces the overflow-flush path to
+    /// run constantly, proving flushes never lose counts. Values above
+    /// the 32-plane accumulator capacity are clamped to it — beyond
+    /// `u32::MAX` adds the carry-save planes would silently overflow.
+    pub fn with_plane_flush_threshold(mut self, adds: u64) -> WordSim<'n, W> {
+        self.flush_threshold = adds.min(u64::from(u32::MAX));
+        self
+    }
+
+    /// Enable intra-level parallel evaluation for sessions
+    /// ([`WordSim::parallel_session`]): levels with at least `threshold`
+    /// packed LUTs are split evenly across one worker per core (capped).
+    /// A no-op (sequential fallback) when no level is wide enough or
+    /// only one core is available.
+    pub fn with_level_parallelism(mut self, threshold: usize) -> WordSim<'n, W> {
+        let threshold = threshold.max(2);
+        let max_width = self
+            .level_bounds
+            .iter()
+            .map(|&(s, e)| (e - s) as usize)
+            .max()
+            .unwrap_or(0);
+        if max_width < threshold {
+            self.par = None;
+            return self;
+        }
+        // Chunks below ~half the threshold cost more in join latency
+        // than they save; size the worker pool so every worker gets a
+        // worthwhile slice of the widest level. (Computed from the core
+        // count directly — `synth` sits below `flow` in the layer map
+        // and must not reach up into `flow::worker`.)
+        let chunk_min = (threshold / 2).max(1);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = cores.min(max_width / chunk_min).max(1).min(8);
+        if workers < 2 {
+            self.par = None;
+            return self;
+        }
+        let mut level_par = Vec::with_capacity(self.level_bounds.len());
+        let mut par_splits = Vec::new();
+        for &(s, e) in &self.level_bounds {
+            let width = (e - s) as usize;
+            if width >= threshold {
+                let mut splits = Vec::with_capacity(workers);
+                let per = width.div_ceil(workers);
+                for w in 0..workers {
+                    let cs = s as usize + (w * per).min(width);
+                    let ce = s as usize + ((w + 1) * per).min(width);
+                    splits.push((cs as u32, ce as u32));
+                }
+                level_par.push(Some(par_splits.len() as u32));
+                par_splits.push(splits);
+            } else {
+                level_par.push(None);
+            }
+        }
+        self.par = if par_splits.is_empty() {
+            None
+        } else {
+            Some(ParPlan { workers, level_par, par_splits })
+        };
+        self
+    }
+
+    /// Whether a parallel session would actually fan levels out (false
+    /// when the netlist has no sufficiently wide level or the machine
+    /// has one core).
+    pub fn level_parallelism_active(&self) -> bool {
+        self.par.is_some()
     }
 
     /// Record a toggle word `t` (bit l = lane l toggled) for net `idx`.
     #[inline(always)]
     fn bump(
         toggles: &mut [u64],
-        lane_planes: &mut [u64; PLANES],
+        lane_planes: &mut [W; PLANES],
         plane_adds: &mut u64,
         lane_net_toggles: &mut Option<Vec<u64>>,
         idx: usize,
-        t: u64,
+        t: W,
     ) {
         toggles[idx] += u64::from(t.count_ones());
         *plane_adds += 1;
-        let mut carry = t;
-        for p in lane_planes.iter_mut() {
-            if carry == 0 {
-                break;
-            }
-            let s = *p ^ carry;
-            carry &= *p;
-            *p = s;
-        }
-        debug_assert_eq!(carry, 0, "lane-toggle accumulator overflow");
+        let carry = plane_accumulate(lane_planes, t);
+        debug_assert!(carry.is_zero(), "lane-toggle accumulator overflow");
         if let Some(exact) = lane_net_toggles {
-            let mut rest = t;
-            while rest != 0 {
-                let lane = rest.trailing_zeros() as usize;
-                exact[idx * LANES + lane] += 1;
-                rest &= rest - 1;
-            }
+            t.for_each_set_lane(|lane| exact[idx * W::LANES + lane] += 1);
         }
     }
 
     /// Move the bit-plane accumulator into the flushed per-lane totals.
     fn flush_lanes(&mut self) {
-        for (lane, total) in self.lane_flushed.iter_mut().enumerate() {
-            let mut acc = 0u64;
-            for (k, plane) in self.lane_planes.iter().enumerate() {
-                acc |= (plane >> lane & 1) << k;
-            }
-            *total += acc;
-        }
-        self.lane_planes = [0; PLANES];
-        self.plane_adds = 0;
+        flush_planes_into(&mut self.lane_planes, &mut self.lane_flushed, &mut self.plane_adds);
     }
 
-    /// Bind an input bus to 64 per-lane integer values (LSB-first, two's
-    /// complement truncation to the bus width). Values hold until
-    /// overwritten.
-    pub fn set_bus_lanes(&mut self, name: &str, values: &[i64; LANES]) {
+    /// Compare-bump-store one input net's word — the single copy of the
+    /// input-write path (mirrors `ParSession::write_input_word`).
+    /// Borrows are passed split so the callers' bus lookup stays alive.
+    #[inline(always)]
+    fn write_input_word(
+        vals: &mut [W],
+        toggles: &mut [u64],
+        lane_planes: &mut [W; PLANES],
+        plane_adds: &mut u64,
+        lane_net_toggles: &mut Option<Vec<u64>>,
+        idx: usize,
+        w: W,
+    ) {
+        let t = vals[idx] ^ w;
+        if !t.is_zero() {
+            Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
+            vals[idx] = w;
+        }
+    }
+
+    /// Bind an input bus to `W::LANES` per-lane integer values
+    /// (LSB-first, two's complement truncation to the bus width). Values
+    /// hold until overwritten.
+    pub fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        assert_eq!(values.len(), W::LANES, "expected one value per lane");
         let WordSim {
             bus, vals, toggles, lane_planes, plane_adds, lane_net_toggles, ..
         } = self;
         let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
         for (i, bit) in bits.iter().enumerate() {
-            let mut w = 0u64;
+            let mut w = W::zero();
             for (lane, v) in values.iter().enumerate() {
-                w |= ((*v >> i) as u64 & 1) << lane;
+                w.set_lane(lane, (*v >> i) & 1 == 1);
             }
-            let idx = *bit as usize;
-            let t = vals[idx] ^ w;
-            if t != 0 {
-                Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
-                vals[idx] = w;
-            }
+            Self::write_input_word(
+                vals, toggles, lane_planes, plane_adds, lane_net_toggles,
+                *bit as usize, w,
+            );
         }
     }
 
     /// Bind an input bus to the same integer value in every lane.
     pub fn set_bus(&mut self, name: &str, value: i64) {
-        self.set_bus_lanes(name, &[value; LANES]);
-    }
-
-    /// Bind a 1-bit input by bus name, one bit per lane.
-    pub fn set_bit_word(&mut self, name: &str, word: u64) {
         let WordSim {
             bus, vals, toggles, lane_planes, plane_adds, lane_net_toggles, ..
         } = self;
         let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
-        let idx = bits[0] as usize;
-        let t = vals[idx] ^ word;
-        if t != 0 {
-            Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
-            vals[idx] = word;
+        for (i, bit) in bits.iter().enumerate() {
+            let w = W::splat((value >> i) & 1 == 1);
+            Self::write_input_word(
+                vals, toggles, lane_planes, plane_adds, lane_net_toggles,
+                *bit as usize, w,
+            );
         }
+    }
+
+    /// Bind a 1-bit input by bus name, one bit per lane.
+    pub fn set_bit_word(&mut self, name: &str, word: W) {
+        let WordSim {
+            bus, vals, toggles, lane_planes, plane_adds, lane_net_toggles, ..
+        } = self;
+        let bits = bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"));
+        Self::write_input_word(
+            vals, toggles, lane_planes, plane_adds, lane_net_toggles,
+            bits[0] as usize, word,
+        );
     }
 
     /// Bind a 1-bit input to the same value in every lane.
     pub fn set_bit(&mut self, name: &str, value: bool) {
-        self.set_bit_word(name, if value { !0 } else { 0 });
+        self.set_bit_word(name, W::splat(value));
     }
 
-    /// Run one clock cycle for all 64 lanes: settle combinational logic
+    /// Run one clock cycle for all lanes: settle combinational logic
     /// level by level, then clock DFFs.
     pub fn step(&mut self) {
         self.cycles += 1;
         // Overflow guard: one step can add at most one count per net per
         // lane (plus input rebinds between steps, bounded by net count).
-        if self.plane_adds + 2 * self.nl.len() as u64 >= u32::MAX as u64 {
+        if self.plane_adds + 2 * self.nl.len() as u64 >= self.flush_threshold {
             self.flush_lanes();
         }
         let WordSim {
@@ -335,7 +495,7 @@ impl<'n> WordSim<'n> {
                 let new = eval_lut(l.sel, l.inv, a, b, c, d);
                 let idx = l.out as usize;
                 let t = vals[idx] ^ new;
-                if t != 0 {
+                if !t.is_zero() {
                     Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
                     vals[idx] = new;
                 }
@@ -349,7 +509,7 @@ impl<'n> WordSim<'n> {
         for (i, &(q, _)) in dffs.iter().enumerate() {
             let idx = q as usize;
             let t = vals[idx] ^ scratch[i];
-            if t != 0 {
+            if !t.is_zero() {
                 Self::bump(toggles, lane_planes, plane_adds, lane_net_toggles, idx, t);
                 vals[idx] = scratch[i];
             }
@@ -361,18 +521,18 @@ impl<'n> WordSim<'n> {
     pub fn reset(&mut self) {
         for (id, node) in self.nl.nodes() {
             if let Node::Dff { init, .. } = node {
-                self.vals[id as usize] = if *init { !0 } else { 0 };
+                self.vals[id as usize] = W::splat(*init);
             }
         }
     }
 
     /// Read an output bus in one lane as a sign-extended integer.
     pub fn get_output_lane(&self, name: &str, lane: usize) -> i64 {
-        assert!(lane < LANES, "lane out of range");
+        assert!(lane < W::LANES, "lane out of range");
         let bits = self.output_bits(name);
         let mut v: i64 = 0;
         for (i, bit) in bits.iter().enumerate() {
-            if self.vals[*bit as usize] >> lane & 1 == 1 {
+            if self.vals[*bit as usize].lane(lane) {
                 v |= 1 << i;
             }
         }
@@ -384,28 +544,20 @@ impl<'n> WordSim<'n> {
     }
 
     /// Read an output bus in all lanes.
-    pub fn get_output_lanes(&self, name: &str) -> [i64; LANES] {
-        let mut out = [0i64; LANES];
-        for (lane, slot) in out.iter_mut().enumerate() {
-            *slot = self.get_output_lane(name, lane);
-        }
-        out
+    pub fn get_output_lanes(&self, name: &str) -> Vec<i64> {
+        (0..W::LANES).map(|lane| self.get_output_lane(name, lane)).collect()
     }
 
     /// Read a single-bit output as a lane word (bit l = lane l).
-    pub fn get_bit_word(&self, name: &str) -> u64 {
+    pub fn get_bit_word(&self, name: &str) -> W {
         let bits = self.output_bits(name);
         self.vals[bits[0] as usize]
     }
 
     fn output_bits(&self, name: &str) -> &[NetId] {
-        let (_, bits) = self
-            .nl
-            .outputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("no output bus `{name}`"));
-        bits
+        self.out_bus
+            .get(name)
+            .unwrap_or_else(|| panic!("no output bus `{name}`"))
     }
 
     pub fn cycles(&self) -> u64 {
@@ -422,24 +574,22 @@ impl<'n> WordSim<'n> {
         self.toggles.iter().sum()
     }
 
-    /// Total toggles per lane (across all nets).
-    pub fn lane_total_toggles(&mut self) -> [u64; LANES] {
+    /// Total toggles per lane (across all nets); `W::LANES` entries.
+    pub fn lane_total_toggles(&mut self) -> Vec<u64> {
         self.flush_lanes();
-        self.lane_flushed
+        self.lane_flushed.clone()
     }
 
-    /// Per-lane mean toggles per net per cycle (64 independent switching
-    /// activity factors α from one simulation pass).
-    pub fn lane_mean_activity(&mut self) -> [f64; LANES] {
+    /// Per-lane mean toggles per net per cycle (`W::LANES` independent
+    /// switching activity factors α from one simulation pass).
+    pub fn lane_mean_activity(&mut self) -> Vec<f64> {
         let totals = self.lane_total_toggles();
         let denom = self.cycles as f64 * self.nl.len() as f64;
-        let mut out = [0f64; LANES];
         if denom > 0.0 {
-            for (o, t) in out.iter_mut().zip(totals.iter()) {
-                *o = *t as f64 / denom;
-            }
+            totals.iter().map(|&t| t as f64 / denom).collect()
+        } else {
+            vec![0.0; W::LANES]
         }
-        out
     }
 
     /// Mean toggles per net per cycle per lane, averaged over lanes
@@ -449,23 +599,434 @@ impl<'n> WordSim<'n> {
             return 0.0;
         }
         self.total_toggles() as f64
-            / (self.cycles as f64 * self.nl.len() as f64 * LANES as f64)
+            / (self.cycles as f64 * self.nl.len() as f64 * W::LANES as f64)
     }
 
     /// Exact per-net toggle counts for one lane (requires
     /// [`WordSim::with_lane_net_toggles`]).
     pub fn lane_net_toggles(&self, lane: usize) -> Vec<u64> {
-        assert!(lane < LANES, "lane out of range");
+        assert!(lane < W::LANES, "lane out of range");
         let exact = self
             .lane_net_toggles
             .as_ref()
             .expect("enable with_lane_net_toggles() first");
-        (0..self.nl.len()).map(|net| exact[net * LANES + lane]).collect()
+        (0..self.nl.len()).map(|net| exact[net * W::LANES + lane]).collect()
     }
 
     /// Combinational depth of the packed plan (levels iterated per step).
     pub fn depth(&self) -> u32 {
         self.level_bounds.len() as u32
+    }
+
+    /// Run `f` against a [`ParSession`] over this simulator: worker
+    /// threads (when [`WordSim::with_level_parallelism`] armed a plan)
+    /// are spawned once for the whole session and spin-joined at every
+    /// wide level, so their cost amortizes over arbitrarily many steps.
+    /// Without a plan the session degenerates to the sequential engine.
+    /// All counters (cycles, toggles, lane planes) live in `self` and
+    /// remain valid after the session ends; results are bit-identical to
+    /// driving [`WordSim::step`] directly.
+    pub fn parallel_session<R>(
+        &mut self,
+        f: impl FnOnce(&mut ParSession<'_, W>) -> R,
+    ) -> R {
+        let degenerate = ParPlan {
+            workers: 1,
+            level_par: vec![None; self.level_bounds.len()],
+            par_splits: Vec::new(),
+        };
+        let plan = self.par.clone().unwrap_or(degenerate);
+        let nets = self.nl.len();
+        let WordSim {
+            vals,
+            toggles,
+            lane_planes,
+            lane_flushed,
+            plane_adds,
+            flush_threshold,
+            lane_net_toggles,
+            cycles,
+            bus,
+            out_bus,
+            luts,
+            level_bounds,
+            dffs,
+            scratch,
+            ..
+        } = self;
+        let mut tword = vec![W::zero(); luts.len()];
+        // Shared raw views: created once from the exclusive borrows and
+        // used (by all threads, under the phase protocol) for the whole
+        // session; the original borrows are not touched again until the
+        // scope ends.
+        let vals_raw = RawSlice::new(vals.as_mut_slice());
+        let toggles_raw = RawSlice::new(toggles.as_mut_slice());
+        let tword_raw = RawSlice::new(tword.as_mut_slice());
+        let ctrl = ParCtrl { phase: AtomicUsize::new(0), done: AtomicUsize::new(0) };
+        let luts: &[PackedWordLut] = luts;
+        let plan_ref = &plan;
+        let ctrl_ref = &ctrl;
+        std::thread::scope(|s| {
+            for w in 1..plan.workers {
+                s.spawn(move || {
+                    let n_par = plan_ref.par_splits.len();
+                    let mut last = 0usize;
+                    loop {
+                        let p = wait_phase(ctrl_ref, last);
+                        if p == PHASE_STOP {
+                            break;
+                        }
+                        last = p;
+                        let (cs, ce) = plan_ref.par_splits[(p - 1) % n_par][w];
+                        // Safety: this worker's chunk owns its LUTs' out
+                        // nets and tword slots exclusively for the phase
+                        // (chunks are disjoint); all reads target nets
+                        // of earlier levels, finished in earlier phases
+                        // (Release/Acquire on phase/done orders them).
+                        unsafe {
+                            eval_chunk(
+                                luts,
+                                vals_raw,
+                                toggles_raw,
+                                tword_raw,
+                                cs as usize,
+                                ce as usize,
+                            );
+                        }
+                        ctrl_ref.done.fetch_add(1, Ordering::Release);
+                    }
+                });
+            }
+            // Workers spin on `phase` until told to stop; a panic in `f`
+            // (e.g. a failed assertion in a test drive loop) must still
+            // release them or the scope would join forever.
+            struct StopGuard<'c>(&'c ParCtrl);
+            impl Drop for StopGuard<'_> {
+                fn drop(&mut self) {
+                    self.0.phase.store(PHASE_STOP, Ordering::Release);
+                }
+            }
+            let _stop = StopGuard(ctrl_ref);
+            let mut session = ParSession {
+                nets,
+                vals: vals_raw,
+                toggles: toggles_raw,
+                tword: tword_raw,
+                lane_planes,
+                lane_flushed,
+                plane_adds,
+                flush_threshold: *flush_threshold,
+                lane_net_toggles,
+                cycles,
+                bus,
+                out_bus,
+                luts,
+                level_bounds,
+                dffs,
+                scratch,
+                plan: plan_ref,
+                ctrl: ctrl_ref,
+                next_phase: 1,
+                expected_done: 0,
+            };
+            // `_stop`'s Drop releases the workers on return and unwind
+            // alike.
+            f(&mut session)
+        })
+    }
+}
+
+// ---- intra-level parallel session ----------------------------------------
+
+const PHASE_STOP: usize = usize::MAX;
+
+/// Spin-phase control shared between the driving thread and the level
+/// workers. `phase` increments once per fanned-out level (monotonic
+/// across steps); `done` counts worker completions.
+struct ParCtrl {
+    phase: AtomicUsize,
+    done: AtomicUsize,
+}
+
+/// Spin until `phase` moves past `last`, with escalating backoff: pure
+/// spin for the common fast path (the next fanned level is typically
+/// microseconds away), then yields, then short sleeps — so workers
+/// don't burn whole cores while the driving thread is in a long
+/// sequential stretch (stimulus packing, narrow levels, inter-step
+/// work).
+fn wait_phase(ctrl: &ParCtrl, last: usize) -> usize {
+    let mut spins = 0u32;
+    loop {
+        let p = ctrl.phase.load(Ordering::Acquire);
+        if p != last {
+            return p;
+        }
+        spins = spins.saturating_add(1);
+        if spins < 1 << 12 {
+            std::hint::spin_loop();
+        } else if spins < 1 << 16 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+}
+
+/// A raw shared view of a slice, for the phase-protocol fork-join. All
+/// accesses are `unsafe`; callers uphold disjointness + ordering (see
+/// [`WordSim::parallel_session`]).
+struct RawSlice<T> {
+    ptr: *mut T,
+    #[cfg(debug_assertions)]
+    len: usize,
+}
+
+impl<T: Copy> RawSlice<T> {
+    fn new(s: &mut [T]) -> RawSlice<T> {
+        RawSlice {
+            ptr: s.as_mut_ptr(),
+            #[cfg(debug_assertions)]
+            len: s.len(),
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn get(&self, i: usize) -> T {
+        #[cfg(debug_assertions)]
+        assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    #[inline(always)]
+    unsafe fn set(&self, i: usize, v: T) {
+        #[cfg(debug_assertions)]
+        assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> RawSlice<T> {
+        *self
+    }
+}
+
+impl<T> Copy for RawSlice<T> {}
+
+// Safety: the phase protocol serializes all conflicting accesses; the
+// wrapper itself only carries the pointer.
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+/// Evaluate packed LUTs `[s, e)`: write new value words, per-net toggle
+/// counts, and the per-slot toggle word (consumed by the driving
+/// thread's plane accounting).
+///
+/// Safety: the caller guarantees (a) exclusive ownership of the out nets
+/// and `tword` slots in the range for the duration of the call, and (b)
+/// that every input net read is not concurrently written (levelization:
+/// inputs live in strictly earlier levels).
+unsafe fn eval_chunk<W: LaneWord>(
+    luts: &[PackedWordLut],
+    vals: RawSlice<W>,
+    toggles: RawSlice<u64>,
+    tword: RawSlice<W>,
+    s: usize,
+    e: usize,
+) {
+    for (i, l) in luts[s..e].iter().enumerate() {
+        let a = vals.get(l.ins[0] as usize);
+        let b = vals.get(l.ins[1] as usize);
+        let c = vals.get(l.ins[2] as usize);
+        let d = vals.get(l.ins[3] as usize);
+        let new = eval_lut(l.sel, l.inv, a, b, c, d);
+        let idx = l.out as usize;
+        let t = vals.get(idx) ^ new;
+        tword.set(s + i, t);
+        if !t.is_zero() {
+            vals.set(idx, new);
+            toggles.set(idx, toggles.get(idx) + u64::from(t.count_ones()));
+        }
+    }
+}
+
+/// A driving handle over a [`WordSim`] whose wide levels fan out across
+/// the session's worker threads. Mirrors the simulator's stimulus and
+/// readback surface; stepping through it produces results bit-identical
+/// to [`WordSim::step`].
+pub struct ParSession<'a, W: LaneWord> {
+    nets: usize,
+    vals: RawSlice<W>,
+    toggles: RawSlice<u64>,
+    tword: RawSlice<W>,
+    lane_planes: &'a mut [W; PLANES],
+    lane_flushed: &'a mut Vec<u64>,
+    plane_adds: &'a mut u64,
+    flush_threshold: u64,
+    lane_net_toggles: &'a mut Option<Vec<u64>>,
+    cycles: &'a mut u64,
+    bus: &'a HashMap<String, Vec<NetId>>,
+    out_bus: &'a HashMap<String, Vec<NetId>>,
+    luts: &'a [PackedWordLut],
+    level_bounds: &'a [(u32, u32)],
+    dffs: &'a [(u32, u32)],
+    scratch: &'a mut Vec<W>,
+    plan: &'a ParPlan,
+    ctrl: &'a ParCtrl,
+    next_phase: usize,
+    expected_done: usize,
+}
+
+impl<'a, W: LaneWord> ParSession<'a, W> {
+    /// Compare-bump-store one input word (main thread; workers idle).
+    #[inline]
+    fn write_input_word(&mut self, idx: usize, w: W) {
+        // Safety: outside a phase the driving thread has exclusive
+        // access to every shared buffer.
+        unsafe {
+            let t = self.vals.get(idx) ^ w;
+            if !t.is_zero() {
+                self.bump(idx, t);
+                self.vals.set(idx, w);
+            }
+        }
+    }
+
+    /// Full toggle accounting for one net (counter + planes + exact).
+    #[inline]
+    unsafe fn bump(&mut self, idx: usize, t: W) {
+        self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        self.bump_planes(idx, t);
+    }
+
+    /// Plane + exact-counter half of toggle accounting (the per-net
+    /// counter was already updated by [`eval_chunk`]).
+    #[inline]
+    fn bump_planes(&mut self, idx: usize, t: W) {
+        *self.plane_adds += 1;
+        let carry = plane_accumulate(self.lane_planes, t);
+        debug_assert!(carry.is_zero(), "lane-toggle accumulator overflow");
+        if let Some(exact) = self.lane_net_toggles {
+            t.for_each_set_lane(|lane| exact[idx * W::LANES + lane] += 1);
+        }
+    }
+
+    fn input_bits(&self, name: &str) -> &'a [NetId] {
+        self.bus
+            .get(name)
+            .unwrap_or_else(|| panic!("no input bus `{name}`"))
+    }
+
+    /// See [`WordSim::set_bus_lanes`].
+    pub fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        assert_eq!(values.len(), W::LANES, "expected one value per lane");
+        let bits = self.input_bits(name);
+        for (i, bit) in bits.iter().enumerate() {
+            let mut w = W::zero();
+            for (lane, v) in values.iter().enumerate() {
+                w.set_lane(lane, (*v >> i) & 1 == 1);
+            }
+            self.write_input_word(*bit as usize, w);
+        }
+    }
+
+    /// See [`WordSim::set_bus`].
+    pub fn set_bus(&mut self, name: &str, value: i64) {
+        let bits = self.input_bits(name);
+        for (i, bit) in bits.iter().enumerate() {
+            let w = W::splat((value >> i) & 1 == 1);
+            self.write_input_word(*bit as usize, w);
+        }
+    }
+
+    /// See [`WordSim::set_bit_word`].
+    pub fn set_bit_word(&mut self, name: &str, word: W) {
+        let bits = self.input_bits(name);
+        self.write_input_word(bits[0] as usize, word);
+    }
+
+    /// See [`WordSim::get_bit_word`].
+    pub fn get_bit_word(&self, name: &str) -> W {
+        let bits = self
+            .out_bus
+            .get(name)
+            .unwrap_or_else(|| panic!("no output bus `{name}`"));
+        // Safety: read outside any phase; main thread exclusive.
+        unsafe { self.vals.get(bits[0] as usize) }
+    }
+
+    /// One clock cycle for all lanes, wide levels fanned out across the
+    /// session workers.
+    pub fn step(&mut self) {
+        *self.cycles += 1;
+        if *self.plane_adds + 2 * self.nets as u64 >= self.flush_threshold {
+            flush_planes_into(self.lane_planes, self.lane_flushed, self.plane_adds);
+        }
+        for (lvl, &(s, e)) in self.level_bounds.iter().enumerate() {
+            let (s, e) = (s as usize, e as usize);
+            if s == e {
+                continue;
+            }
+            match self.plan.level_par[lvl] {
+                Some(pi) => {
+                    let splits = &self.plan.par_splits[pi as usize];
+                    self.ctrl.phase.store(self.next_phase, Ordering::Release);
+                    self.next_phase += 1;
+                    let (cs, ce) = splits[0];
+                    // Safety: chunk 0 is the driving thread's; see the
+                    // worker-side comment for the disjointness argument.
+                    unsafe {
+                        eval_chunk(
+                            self.luts,
+                            self.vals,
+                            self.toggles,
+                            self.tword,
+                            cs as usize,
+                            ce as usize,
+                        );
+                    }
+                    self.expected_done += self.plan.workers - 1;
+                    let mut spins = 0u32;
+                    while self.ctrl.done.load(Ordering::Acquire) < self.expected_done {
+                        spins = spins.wrapping_add(1);
+                        if spins % 4096 == 0 {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+                None => unsafe {
+                    eval_chunk(self.luts, self.vals, self.toggles, self.tword, s, e);
+                },
+            }
+            // Plane accounting for the level, on the driving thread, in
+            // plan order — bit-identical to the sequential engine.
+            for i in s..e {
+                // Safety: workers are joined (or never ran); exclusive.
+                let t = unsafe { self.tword.get(i) };
+                if !t.is_zero() {
+                    let idx = self.luts[i].out as usize;
+                    self.bump_planes(idx, t);
+                }
+            }
+        }
+        // Clock edge: sample every D first, then commit (main thread).
+        for (i, &(_, d)) in self.dffs.iter().enumerate() {
+            // Safety: exclusive outside phases.
+            self.scratch[i] = unsafe { self.vals.get(d as usize) };
+        }
+        for (i, &(q, _)) in self.dffs.iter().enumerate() {
+            let idx = q as usize;
+            let sampled = self.scratch[i];
+            unsafe {
+                let t = self.vals.get(idx) ^ sampled;
+                if !t.is_zero() {
+                    self.bump(idx, t);
+                    self.vals.set(idx, sampled);
+                }
+            }
+        }
     }
 }
 
@@ -473,6 +1034,7 @@ impl<'n> WordSim<'n> {
 mod tests {
     use super::*;
     use crate::synth::gatesim::GateSim;
+    use crate::synth::lane::W256;
     use crate::synth::netlist::Netlist;
 
     /// 4-bit counter netlist (same as the scalar GateSim test).
@@ -493,13 +1055,13 @@ mod tests {
         nl
     }
 
-    #[test]
-    fn counter_counts_in_every_lane() {
+    fn counter_counts_in_every_lane_impl<W: LaneWord>() {
         let nl = counter();
-        let mut sim = WordSim::new(&nl);
+        let mut sim = WordSim::<W>::new(&nl);
         for expect in 1..=20i64 {
             sim.step();
             let lanes = sim.get_output_lanes("q");
+            assert_eq!(lanes.len(), W::LANES);
             for (lane, v) in lanes.iter().enumerate() {
                 assert_eq!(v & 0xF, expect & 0xF, "lane {lane} cycle {expect}");
             }
@@ -507,16 +1069,21 @@ mod tests {
     }
 
     #[test]
-    fn lanes_are_independent() {
+    fn counter_counts_in_every_lane() {
+        counter_counts_in_every_lane_impl::<u64>();
+        counter_counts_in_every_lane_impl::<W256>();
+    }
+
+    fn lanes_are_independent_impl<W: LaneWord>() {
         let mut nl = Netlist::new();
         let a = nl.input_bus("a", 4);
         let b = nl.input_bus("b", 4);
         let y: Vec<NetId> = a.iter().zip(&b).map(|(&x, &y)| nl.and2(x, y)).collect();
         nl.add_output("y", y);
-        let mut sim = WordSim::new(&nl);
-        let mut av = [0i64; LANES];
-        let mut bv = [0i64; LANES];
-        for lane in 0..LANES {
+        let mut sim = WordSim::<W>::new(&nl);
+        let mut av = vec![0i64; W::LANES];
+        let mut bv = vec![0i64; W::LANES];
+        for lane in 0..W::LANES {
             av[lane] = (lane as i64) & 0xF;
             bv[lane] = ((lane as i64) >> 2) & 0xF;
         }
@@ -524,30 +1091,46 @@ mod tests {
         sim.set_bus_lanes("b", &bv);
         sim.step();
         let got = sim.get_output_lanes("y");
-        for lane in 0..LANES {
+        for lane in 0..W::LANES {
             assert_eq!(got[lane] & 0xF, av[lane] & bv[lane], "lane {lane}");
         }
     }
 
     #[test]
-    fn broadcast_matches_scalar_oracle() {
+    fn lanes_are_independent() {
+        lanes_are_independent_impl::<u64>();
+        lanes_are_independent_impl::<W256>();
+    }
+
+    fn broadcast_matches_scalar_oracle_impl<W: LaneWord>() {
         let nl = counter();
-        let mut word = WordSim::new(&nl);
+        let mut word = WordSim::<W>::new(&nl);
         let mut scalar = GateSim::new(&nl);
         for _ in 0..50 {
             word.step();
             scalar.step();
             assert_eq!(word.get_output_lane("q", 0), scalar.get_output("q"));
-            assert_eq!(word.get_output_lane("q", 63), scalar.get_output("q"));
+            assert_eq!(
+                word.get_output_lane("q", W::LANES - 1),
+                scalar.get_output("q")
+            );
         }
-        // Broadcast lanes toggle identically, so per-net totals are 64×.
+        // Broadcast lanes toggle identically, so per-net totals are
+        // LANES×.
         for (net, &t) in scalar.toggles().iter().enumerate() {
-            assert_eq!(word.toggles()[net], t * LANES as u64, "net {net}");
+            assert_eq!(word.toggles()[net], t * W::LANES as u64, "net {net}");
         }
         let lanes = word.lane_total_toggles();
+        assert_eq!(lanes.len(), W::LANES);
         for (lane, &t) in lanes.iter().enumerate() {
             assert_eq!(t, scalar.total_toggles(), "lane {lane}");
         }
+    }
+
+    #[test]
+    fn broadcast_matches_scalar_oracle() {
+        broadcast_matches_scalar_oracle_impl::<u64>();
+        broadcast_matches_scalar_oracle_impl::<W256>();
     }
 
     #[test]
@@ -555,7 +1138,7 @@ mod tests {
         let mut nl = Netlist::new();
         let a = nl.input_bus("a", 4);
         nl.add_output("y", a);
-        let mut sim = WordSim::new(&nl);
+        let mut sim = WordSim::<u64>::new(&nl);
         let mut av = [0i64; LANES];
         av[3] = -3;
         av[17] = 5;
@@ -566,25 +1149,30 @@ mod tests {
         assert_eq!(sim.get_output_lane("y", 0), 0);
     }
 
-    #[test]
-    fn exact_lane_net_toggles_match_aggregates() {
+    fn exact_lane_net_toggles_impl<W: LaneWord>() {
         let nl = counter();
-        let mut sim = WordSim::new(&nl).with_lane_net_toggles();
+        let mut sim = WordSim::<W>::new(&nl).with_lane_net_toggles();
         for _ in 0..37 {
             sim.step();
         }
         // Sum of exact per-lane counts equals the word-parallel per-net
         // counters, for every net.
         for net in 0..nl.len() {
-            let sum: u64 = (0..LANES).map(|l| sim.lane_net_toggles(l)[net]).sum();
+            let sum: u64 = (0..W::LANES).map(|l| sim.lane_net_toggles(l)[net]).sum();
             assert_eq!(sum, sim.toggles()[net], "net {net}");
         }
         // And per-lane totals agree with the bit-plane accumulator.
         let plane_totals = sim.lane_total_toggles();
-        for lane in 0..LANES {
+        for lane in 0..W::LANES {
             let exact: u64 = sim.lane_net_toggles(lane).iter().sum();
             assert_eq!(exact, plane_totals[lane], "lane {lane}");
         }
+    }
+
+    #[test]
+    fn exact_lane_net_toggles_match_aggregates() {
+        exact_lane_net_toggles_impl::<u64>();
+        exact_lane_net_toggles_impl::<W256>();
     }
 
     #[test]
@@ -593,24 +1181,29 @@ mod tests {
         let one = nl.constant(true);
         let d = nl.dff(one, false);
         nl.add_output("q", vec![d]);
-        let mut sim = WordSim::new(&nl);
+        let mut sim = WordSim::<u64>::new(&nl);
         sim.step();
         assert_eq!(sim.get_bit_word("q"), !0);
         sim.reset();
         assert_eq!(sim.get_bit_word("q"), 0);
     }
 
-    #[test]
-    fn mux_tree_matches_truth_table_indexing() {
+    fn mux_tree_impl<W: LaneWord>() {
         // Exhaustive over arities and random truth tables: the compiled
         // sel/inv plan equals per-bit truth-table lookup.
         let mut rng = crate::stim::Lfsr32::new(0x7AB1E);
-        for _ in 0..500 {
+        for _ in 0..200 {
             let arity = 1 + rng.below(4);
             let tt = (rng.next_u32() & 0xFFFF) as u16;
             let (sel, inv) = compile_tt(tt, arity);
-            let words: Vec<u64> = (0..4)
-                .map(|_| (rng.next_u32() as u64) << 32 | rng.next_u32() as u64)
+            let words: Vec<W> = (0..4)
+                .map(|_| {
+                    let mut w = W::zero();
+                    for lane in 0..W::LANES {
+                        w.set_lane(lane, rng.next_u32() & 1 == 1);
+                    }
+                    w
+                })
                 .collect();
             let mut ins = [words[0]; 4];
             for (k, slot) in ins.iter_mut().enumerate().take(arity) {
@@ -618,14 +1211,136 @@ mod tests {
             }
             let got = eval_lut(sel, inv, ins[0], ins[1], ins[2], ins[3]);
             let mask = (1usize << arity) - 1;
-            for lane in 0..LANES {
+            for lane in 0..W::LANES {
                 let mut idx = 0usize;
                 for (k, w) in words.iter().enumerate().take(arity) {
-                    idx |= ((w >> lane & 1) as usize) << k;
+                    idx |= usize::from(w.lane(lane)) << k;
                 }
                 let want = tt >> (idx & mask) & 1 == 1;
-                assert_eq!(got >> lane & 1 == 1, want, "arity {arity} tt {tt:#x} lane {lane}");
+                assert_eq!(got.lane(lane), want, "arity {arity} tt {tt:#x} lane {lane}");
             }
         }
+    }
+
+    #[test]
+    fn mux_tree_matches_truth_table_indexing() {
+        mux_tree_impl::<u64>();
+        mux_tree_impl::<W256>();
+    }
+
+    fn tiny_flush_threshold_impl<W: LaneWord>() {
+        // A minuscule flush threshold forces the overflow-flush path on
+        // virtually every step; totals must be identical to a run that
+        // never flushes before the final read.
+        let nl = counter();
+        let mut tiny = WordSim::<W>::new(&nl)
+            .with_lane_net_toggles()
+            .with_plane_flush_threshold(2 * nl.len() as u64 + 1);
+        let mut big = WordSim::<W>::new(&nl).with_lane_net_toggles();
+        for _ in 0..123 {
+            tiny.step();
+            big.step();
+        }
+        assert_eq!(tiny.lane_total_toggles(), big.lane_total_toggles());
+        assert_eq!(tiny.toggles(), big.toggles());
+        for lane in [0usize, 1, W::LANES - 1] {
+            assert_eq!(tiny.lane_net_toggles(lane), big.lane_net_toggles(lane));
+        }
+    }
+
+    #[test]
+    fn tiny_flush_threshold_loses_no_counts() {
+        tiny_flush_threshold_impl::<u64>();
+        tiny_flush_threshold_impl::<W256>();
+    }
+
+    /// A netlist with one very wide combinational level: `n` independent
+    /// AND gates off two input buses, all at level 1, plus a register
+    /// layer to exercise the clock edge.
+    fn wide_level_netlist(n: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8);
+        let b = nl.input_bus("b", 8);
+        let mut outs = Vec::new();
+        for i in 0..n {
+            let x = a[i % a.len()];
+            let y = b[(i / a.len()) % b.len()];
+            let g = match i % 3 {
+                0 => nl.and2(x, y),
+                1 => nl.xor2(x, y),
+                _ => nl.or2(x, y),
+            };
+            outs.push(nl.dff(g, false));
+        }
+        // Observe a slice of the register outputs.
+        nl.add_output("y", outs[..8.min(outs.len())].to_vec());
+        nl
+    }
+
+    fn parallel_session_matches_sequential_impl<W: LaneWord>() {
+        let nl = wide_level_netlist(512);
+        let mut rng = crate::stim::Lfsr32::new(0x9A11);
+        let stim: Vec<(i64, i64)> = (0..40)
+            .map(|_| (rng.next_u32() as i64 & 0xFF, rng.next_u32() as i64 & 0xFF))
+            .collect();
+
+        let mut seq = WordSim::<W>::new(&nl).with_lane_net_toggles();
+        for &(a, b) in &stim {
+            seq.set_bus("a", a);
+            seq.set_bus("b", b);
+            seq.step();
+        }
+
+        let mut par = WordSim::<W>::new(&nl)
+            .with_lane_net_toggles()
+            .with_level_parallelism(64);
+        par.parallel_session(|s| {
+            for &(a, b) in &stim {
+                s.set_bus("a", a);
+                s.set_bus("b", b);
+                s.step();
+            }
+        });
+
+        assert_eq!(par.cycles(), seq.cycles());
+        assert_eq!(par.toggles(), seq.toggles());
+        assert_eq!(par.get_output_lanes("y"), seq.get_output_lanes("y"));
+        assert_eq!(par.lane_total_toggles(), seq.lane_total_toggles());
+        for lane in [0usize, W::LANES / 2, W::LANES - 1] {
+            assert_eq!(par.lane_net_toggles(lane), seq.lane_net_toggles(lane), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn parallel_session_matches_sequential() {
+        parallel_session_matches_sequential_impl::<u64>();
+        parallel_session_matches_sequential_impl::<W256>();
+    }
+
+    #[test]
+    fn parallel_session_without_plan_is_sequential() {
+        // No with_level_parallelism: the session must degenerate cleanly
+        // (no workers) and still be exact.
+        let nl = counter();
+        let mut a = WordSim::<u64>::new(&nl);
+        a.parallel_session(|s| {
+            for _ in 0..10 {
+                s.step();
+            }
+        });
+        let mut b = WordSim::<u64>::new(&nl);
+        for _ in 0..10 {
+            b.step();
+        }
+        assert!(!a.level_parallelism_active());
+        assert_eq!(a.toggles(), b.toggles());
+        assert_eq!(a.get_output_lanes("q"), b.get_output_lanes("q"));
+    }
+
+    #[test]
+    fn narrow_levels_do_not_arm_parallelism() {
+        let nl = counter();
+        let sim = WordSim::<u64>::new(&nl).with_level_parallelism(LEVEL_PAR_THRESHOLD);
+        assert!(!sim.level_parallelism_active());
     }
 }

@@ -5,9 +5,45 @@
 
 use dimsynth::fixedpoint::QFormat;
 use dimsynth::flow::{Flow, FlowConfig, FlowSet, StageCounts};
+use dimsynth::synth::LaneWidth;
 
 fn small_config() -> FlowConfig {
     FlowConfig { power_samples: 2, ..FlowConfig::default() }
+}
+
+/// Changing the lane width re-measures only the power stage, reshapes
+/// its spread (64 → 256 lanes), and leaves the headline figures —
+/// lane 0 carries the same `power_seed` stream at either width —
+/// bit-identical.
+#[test]
+fn lane_width_shapes_power_spread_but_not_headline_figures() {
+    let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    let p64 = flow.power().unwrap();
+    assert_eq!(p64.spread.lanes, 64);
+    assert!(p64.spread.min_tpc <= p64.spread.mean_tpc);
+    assert!(p64.spread.mean_tpc <= p64.spread.max_tpc);
+
+    flow.set_lane_width(LaneWidth::W256);
+    let p256 = flow.power().unwrap();
+    assert_eq!(p256.spread.lanes, 256);
+    assert_eq!(p64.activity.toggles_per_cycle, p256.activity.toggles_per_cycle);
+    assert_eq!(p64.activity.cycles, p256.activity.cycles);
+    assert_eq!(p64.mw_6mhz, p256.mw_6mhz);
+    assert_eq!(p64.mw_12mhz, p256.mw_12mhz);
+
+    let c = flow.counts();
+    assert_eq!(c.power, 2, "width change must re-measure power: {c:?}");
+    assert_eq!(
+        (c.parsed, c.pis, c.rtl, c.netlist, c.timing),
+        (1, 1, 1, 1, 0),
+        "width change must not invalidate upstream stages: {c:?}"
+    );
+
+    // Return trip: the 64-lane artifact is still in the stage LRU.
+    flow.set_lane_width(LaneWidth::W64);
+    let back = flow.power().unwrap();
+    assert_eq!(back.spread.lanes, 64);
+    assert_eq!(flow.counts().power, 2, "return trip must hit the LRU");
 }
 
 #[test]
