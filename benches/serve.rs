@@ -1,0 +1,156 @@
+//! Bench F6: the multi-system serving path — cold vs warm [`ServeSet`]
+//! boot against a persistent artifact store, and cross-system vs
+//! per-system power-flood dispatch. Emits `BENCH_serve.json` so CI can
+//! track the serving front half's perf trajectory; CI also gates the
+//! warm boot at zero stage recomputes.
+//!
+//! Needs no AOT artifacts — boot is pure compilation and the flood is
+//! pure gate-level simulation.
+//!
+//! ```text
+//! cargo bench --bench serve
+//! SERVE_BENCH_ACTIVATIONS=4 cargo bench --bench serve
+//! ```
+
+use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
+use dimsynth::coordinator::{
+    estimate_power_requests, PowerRequest, ServeSet, SystemPowerRequest,
+};
+use dimsynth::flow::{ArtifactStore, FlowConfig};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const SYSTEMS: [&str; 3] = ["pendulum", "beam", "spring_mass"];
+
+fn main() -> anyhow::Result<()> {
+    let activations: u32 = std::env::var("SERVE_BENCH_ACTIVATIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let config =
+        FlowConfig { power_samples: activations, ..FlowConfig::default() };
+
+    section(&format!(
+        "multi-system serving: {} systems on one warm FlowSet ({activations} activations)",
+        SYSTEMS.len()
+    ));
+
+    // Cold boot populates the store; warm boot is what a restarted
+    // serve process pays.
+    let cache_dir =
+        std::env::temp_dir().join(format!("dimsynth-serve-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let store = Arc::new(ArtifactStore::open(&cache_dir)?);
+    let t = Instant::now();
+    let cold = ServeSet::boot(&SYSTEMS, config.clone(), Some(store))?;
+    let cold_boot = t.elapsed();
+    println!(
+        "cold serve boot     {:>12}  ({} recomputes)",
+        fmt_duration(cold_boot),
+        cold.total_counts().recomputes()
+    );
+    drop(cold);
+
+    let store = Arc::new(ArtifactStore::open(&cache_dir)?);
+    let t = Instant::now();
+    let set = ServeSet::boot(&SYSTEMS, config, Some(store))?;
+    let warm_boot = t.elapsed().max(Duration::from_nanos(1));
+    let warm_counts = set.total_counts();
+    assert_eq!(
+        warm_counts.recomputes(),
+        0,
+        "warm serve boot must recompute nothing: {warm_counts:?}"
+    );
+    let boot_speedup = cold_boot.as_secs_f64() / warm_boot.as_secs_f64();
+    println!(
+        "warm serve boot     {:>12}  ({boot_speedup:.1}x faster, {} disk hits, 0 recomputes)",
+        fmt_duration(warm_boot),
+        warm_counts.disk_hits
+    );
+
+    // Mixed flood, round-robin across systems: cross-system dispatch
+    // (all chunks share one worker fan-out) vs the per-system shape the
+    // coordinator had before (each system's flood dispatched on its
+    // own).
+    let flood: Vec<SystemPowerRequest> = (0..(3 * set.lane_width().lanes()))
+        .map(|i| SystemPowerRequest {
+            system: i % SYSTEMS.len(),
+            request: PowerRequest { seed: 0xF10_0D ^ i as u32, f_hz: 6.0e6 },
+        })
+        .collect();
+
+    let t = Instant::now();
+    let cross = set.estimate_power_flood(&flood, activations)?;
+    let cross_dt = t.elapsed().max(Duration::from_nanos(1));
+    let cross_rps = flood.len() as f64 / cross_dt.as_secs_f64();
+    println!(
+        "cross-system flood  {:>12}  ({} requests, {cross_rps:.0} req/s)",
+        fmt_duration(cross_dt),
+        flood.len()
+    );
+
+    let t = Instant::now();
+    let mut per_system = vec![
+        dimsynth::coordinator::PowerEstimate { mw: 0.0, toggles_per_cycle: 0.0, cycles: 0 };
+        flood.len()
+    ];
+    for sys in 0..SYSTEMS.len() {
+        let handle = set.handle_at(sys);
+        let positions: Vec<usize> =
+            (0..flood.len()).filter(|&i| flood[i].system == sys).collect();
+        let own: Vec<PowerRequest> = positions.iter().map(|&i| flood[i].request).collect();
+        let solo = estimate_power_requests(
+            handle.netlist(),
+            handle.design(),
+            &own,
+            activations,
+            set.lane_width(),
+        );
+        for (&pos, est) in positions.iter().zip(solo) {
+            per_system[pos] = est;
+        }
+    }
+    let per_dt = t.elapsed().max(Duration::from_nanos(1));
+    let per_rps = flood.len() as f64 / per_dt.as_secs_f64();
+    let flood_speedup = per_dt.as_secs_f64() / cross_dt.as_secs_f64();
+    println!(
+        "per-system floods   {:>12}  ({per_rps:.0} req/s; cross-system is {flood_speedup:.2}x)",
+        fmt_duration(per_dt)
+    );
+
+    // The whole point of the shared batcher: same answers, one fan-out.
+    for (i, (a, b)) in cross.iter().zip(&per_system).enumerate() {
+        assert_eq!(a.mw, b.mw, "request {i}");
+        assert_eq!(a.toggles_per_cycle, b.toggles_per_cycle, "request {i}");
+        assert_eq!(a.cycles, b.cycles, "request {i}");
+    }
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    write_metrics_json(
+        "BENCH_serve.json",
+        &[("driver", "serveset"), ("systems", "pendulum+beam+spring_mass")],
+        &[
+            ("systems", SYSTEMS.len() as f64),
+            ("activations", activations as f64),
+            ("lanes", set.lane_width().lanes() as f64),
+            ("flood_requests", flood.len() as f64),
+            ("cold_boot_ms", cold_boot.as_secs_f64() * 1e3),
+            ("warm_boot_ms", warm_boot.as_secs_f64() * 1e3),
+            ("warm_boot_speedup", boot_speedup),
+            ("warm_disk_hits", warm_counts.disk_hits as f64),
+            ("warm_recomputes", warm_counts.recomputes() as f64),
+            ("cross_flood_rps", cross_rps),
+            ("per_system_flood_rps", per_rps),
+            ("cross_vs_per_system_speedup", flood_speedup),
+        ],
+    )?;
+    println!("wrote BENCH_serve.json");
+
+    // Wall-clock ratios on shared runners are noisy; the boot speedup
+    // is the structural one (disk load vs full compile) and must hold.
+    assert!(
+        boot_speedup >= 2.0,
+        "warm serve boot must be much faster than cold (got {boot_speedup:.1}x)"
+    );
+    Ok(())
+}

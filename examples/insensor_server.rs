@@ -1,22 +1,36 @@
-//! Multi-system in-sensor serving (DESIGN.md §4, F4): one coordinator
-//! per physical system, all three Π paths exercised, including
-//! hardware-in-the-loop mode where every served sample runs through the
-//! cycle-accurate simulation of the generated RTL.
+//! Multi-system in-sensor serving (DESIGN.md §4, F4): every coordinator
+//! endpoint serves from **one warm `ServeSet`** (shared compiled
+//! artifact graph — no per-endpoint cold compile), all three Π paths
+//! exercised, including hardware-in-the-loop mode where every served
+//! sample runs through the cycle-accurate simulation of the generated
+//! RTL. A mixed-system power-request flood exercises the cross-system
+//! batcher at the end.
 //!
 //! ```text
 //! make artifacts && cargo run --release --example insensor_server [-- <samples>]
 //! ```
 
-use dimsynth::coordinator::{InferenceServer, PiPath, SensorInput, ServerConfig};
+use dimsynth::coordinator::{
+    InferenceServer, PiPath, PowerRequest, SensorInput, ServeSet, ServerConfig,
+};
 use dimsynth::fixedpoint::Q16_15;
+use dimsynth::flow::FlowConfig;
 use dimsynth::stim::{self, Lfsr32};
 use dimsynth::train::{self, FeatureKind};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-fn serve_one(system: &str, n: usize, pi_path: PiPath) -> anyhow::Result<(f64, f64)> {
+const SYSTEMS: [&str; 5] =
+    ["pendulum", "beam", "unpowered_flight", "vibrating_string", "spring_mass"];
+
+fn serve_one(
+    set: &ServeSet,
+    system: &str,
+    n: usize,
+    pi_path: PiPath,
+) -> anyhow::Result<(f64, f64)> {
     let trained = train::run_training("artifacts", system, FeatureKind::Pi, 500, 0xBEEF)?;
     let export = trained.dataset.export.clone();
-    let server = InferenceServer::start(
+    let server = InferenceServer::start_shared(
         ServerConfig {
             artifacts: "artifacts".into(),
             system: system.into(),
@@ -25,6 +39,7 @@ fn serve_one(system: &str, n: usize, pi_path: PiPath) -> anyhow::Result<(f64, f6
             pi_path,
         },
         trained,
+        set.handle(system).expect("system is in the serve set"),
     )?;
     let mut rng = Lfsr32::new(0x51_5E11);
     let mut pending = Vec::with_capacity(n);
@@ -51,11 +66,21 @@ fn serve_one(system: &str, n: usize, pi_path: PiPath) -> anyhow::Result<(f64, f6
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
+
+    // One shared compilation boot for every endpoint below.
+    let t = Instant::now();
+    let set = ServeSet::boot(&SYSTEMS, FlowConfig::default(), None)?;
+    println!(
+        "booted {} systems on one warm FlowSet in {:.0} ms\n",
+        set.len(),
+        t.elapsed().as_secs_f64() * 1e3
+    );
+
     println!(
         "{:<24} {:>14} {:>14} {:>16}",
         "system", "path", "samples/s", "mean |rel err| %"
     );
-    for system in ["pendulum", "beam", "unpowered_flight", "vibrating_string", "spring_mass"] {
+    for system in SYSTEMS {
         for (path, label, count) in [
             (PiPath::Native, "native", n),
             (PiPath::Hlo, "pallas/pjrt", n),
@@ -63,9 +88,35 @@ fn main() -> anyhow::Result<()> {
             // generated hardware — far slower, so a smaller stream.
             (PiPath::RtlSim, "rtl-sim", n.min(256)),
         ] {
-            let (thr, err) = serve_one(system, count, path)?;
+            let (thr, err) = serve_one(&set, system, count, path)?;
             println!("{system:<24} {label:>14} {thr:>14.0} {err:>16.3}");
         }
     }
+
+    // Mixed-system power-request flood through the global batcher.
+    let flood = 512usize;
+    let batcher = set.power_batcher(Duration::ZERO, 2);
+    let t = Instant::now();
+    let pending: Vec<_> = (0..flood)
+        .map(|i| {
+            batcher.submit(
+                i % set.len(),
+                PowerRequest { seed: 0xF10_0D ^ i as u32, f_hz: 6.0e6 },
+            )
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().expect("estimate")?;
+    }
+    let dt = t.elapsed();
+    let stats = batcher.shutdown();
+    println!(
+        "\npower flood: {} mixed-system requests in {:.0} ms ({:.0} req/s, {} batches, {} cross-system)",
+        stats.requests,
+        dt.as_secs_f64() * 1e3,
+        stats.requests as f64 / dt.as_secs_f64(),
+        stats.batches,
+        stats.mixed_batches
+    );
     Ok(())
 }

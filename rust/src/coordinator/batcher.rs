@@ -2,7 +2,7 @@
 //! batch size or a deadline, whichever comes first — the standard
 //! latency/throughput knob of serving systems, applied to sensor samples.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Outcome of one batch collection.
@@ -14,14 +14,30 @@ pub enum BatchOutcome<T> {
 }
 
 /// Collect up to `max_batch` items. The first item is awaited without a
-/// deadline (idle server consumes no CPU); once the batch is "open", more
-/// items are accepted until `linger` elapses or the batch fills.
+/// deadline (idle server consumes no CPU); once the batch is "open",
+/// items already sitting in the channel are drained for free, and more
+/// are accepted until `linger` elapses or the batch fills.
+///
+/// `linger` bounds *waiting*, not batching: with `linger == 0` (or an
+/// already-expired deadline) a flood that queued `max_batch` items still
+/// comes back as one full batch — zero linger means "don't wait", never
+/// "don't batch".
 pub fn collect<T>(rx: &Receiver<T>, max_batch: usize, linger: Duration) -> BatchOutcome<T> {
     let mut batch = Vec::with_capacity(max_batch);
     // Blocking wait for the first item.
     match rx.recv() {
         Ok(item) => batch.push(item),
         Err(_) => return BatchOutcome::Closed(batch),
+    }
+    // Free drain of items that are already queued — before looking at
+    // the clock, so an expired deadline cannot degrade ready work into
+    // batches of one.
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => return BatchOutcome::Closed(batch),
+        }
     }
     let deadline = Instant::now() + linger;
     while batch.len() < max_batch {
@@ -64,6 +80,28 @@ mod tests {
         match got {
             BatchOutcome::Batch(b) => assert_eq!(b, vec![1]),
             _ => panic!("expected partial batch"),
+        }
+    }
+
+    /// Regression: zero linger (an already-expired deadline) must still
+    /// drain everything the channel already holds — "no waiting" must
+    /// not mean "no batching".
+    #[test]
+    fn zero_linger_still_fills_from_ready_items() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        match collect(&rx, 4, Duration::ZERO) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            _ => panic!("expected a full batch"),
+        }
+        // And a partially-filled channel comes back whole, not 1-by-1.
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        match collect(&rx, 4, Duration::ZERO) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![7, 8]),
+            _ => panic!("expected the ready pair"),
         }
     }
 

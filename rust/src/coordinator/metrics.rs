@@ -80,8 +80,11 @@ pub struct ServeStats {
     pub latency: LatencyHistogram,
     pub batches: u64,
     pub samples: u64,
-    pub batch_fill_sum: u64,
     pub wall: Duration,
+    /// The serving worker died by panic: whatever it had counted is
+    /// lost, so these stats must not be read as a clean zero-traffic
+    /// run.
+    pub worker_panicked: bool,
 }
 
 impl ServeStats {
@@ -92,16 +95,22 @@ impl ServeStats {
         self.samples as f64 / self.wall.as_secs_f64()
     }
 
+    /// Mean samples per batch. Every sample is a member of exactly one
+    /// batch, so the fill follows from the two counters — no separate
+    /// fill accumulator to keep in sync.
     pub fn mean_batch_fill(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
         }
-        self.batch_fill_sum as f64 / self.batches as f64
+        self.samples as f64 / self.batches as f64
     }
 }
 
 impl std::fmt::Display for ServeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.worker_panicked {
+            writeln!(f, "worker:      PANICKED (stats below are lost/partial)")?;
+        }
         writeln!(f, "samples:     {}", self.samples)?;
         writeln!(f, "batches:     {} (mean fill {:.1})", self.batches, self.mean_batch_fill())?;
         writeln!(f, "wall:        {:.3} s", self.wall.as_secs_f64())?;
@@ -159,10 +168,17 @@ mod tests {
         s.samples = 1000;
         s.wall = Duration::from_secs(2);
         s.batches = 20;
-        s.batch_fill_sum = 1000;
         assert_eq!(s.throughput(), 500.0);
         assert_eq!(s.mean_batch_fill(), 50.0);
         let txt = s.to_string();
         assert!(txt.contains("throughput"));
+        assert!(!txt.contains("PANICKED"));
+    }
+
+    #[test]
+    fn panicked_worker_is_loud_not_zero() {
+        let s = ServeStats { worker_panicked: true, ..ServeStats::default() };
+        assert!(s.to_string().contains("PANICKED"));
+        assert!(!ServeStats::default().worker_panicked);
     }
 }

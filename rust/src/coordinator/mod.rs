@@ -6,23 +6,71 @@
 //! products (by the synthesized hardware in a real deployment; here by
 //! one of three bit-identical Π paths), and fed to the Φ model executed
 //! as an AOT-compiled XLA artifact. Python never runs at serve time.
+//!
+//! Multi-system deployments serve from **one warm [`ServeSet`]**: a
+//! shared [`flow::FlowSet`](crate::flow::FlowSet) (optionally backed by
+//! a persistent artifact store, so restarts boot with zero recomputes)
+//! hands each per-system [`InferenceServer`] a [`SystemHandle`] view of
+//! its compiled state, and [`PowerRequest`] floods from every system
+//! run through one global width-aware [`PowerBatcher`] that packs
+//! word-parallel lanes across systems.
 
 pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
+pub mod serveset;
 
 pub use metrics::{LatencyHistogram, ServeStats};
 pub use pipeline::{
-    estimate_power_requests, DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest,
-    Prediction, SensorInput,
+    estimate_power_requests, estimate_power_requests_grouped, DatasetStats, Pipeline, PiPath,
+    PowerEstimate, PowerRequest, Prediction, SensorInput, SystemPowerRequest,
 };
 pub use server::{InferenceServer, Request, ServerConfig};
+pub use serveset::{FloodStats, PowerBatcher, ServeSet, SystemHandle};
 
 use crate::fixedpoint::Q16_15;
+use crate::flow::{ArtifactStore, FlowConfig, StageCounts};
+use crate::report::export::SystemExport;
 use crate::stim::{self, Lfsr32};
-use crate::train::{self, FeatureKind};
-use std::time::Duration;
+use crate::train::{self, FeatureKind, TrainOutput};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Stream `n` synthetic observations through a running server and
+/// return (mean relative target error over valid samples, valid-sample
+/// count). Shared by the single- and multi-system synthetic drivers.
+fn stream_synthetic(
+    server: &InferenceServer,
+    export: &SystemExport,
+    system: &str,
+    n: usize,
+    stream_seed: u32,
+) -> anyhow::Result<(f64, usize)> {
+    let mut rng = Lfsr32::new(stream_seed);
+    let mut pending = Vec::with_capacity(n);
+    let mut truths = Vec::with_capacity(n);
+    for _ in 0..n {
+        let sample = stim::sample_noisy(system, &mut rng, 0.0)
+            .ok_or_else(|| anyhow::anyhow!("no trace generator for `{system}`"))?;
+        let values_q: Vec<i64> =
+            export.ports.iter().map(|&si| Q16_15.from_f64(sample[si])).collect();
+        truths.push(sample[export.target_index]);
+        pending.push(server.submit(SensorInput { values_q }));
+    }
+    let mut err_sum = 0f64;
+    let mut err_n = 0usize;
+    for (rx, truth) in pending.into_iter().zip(truths) {
+        let pred = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped a response"))??;
+        if pred.target_estimate.is_finite() && truth.abs() > 1e-9 {
+            err_sum += ((pred.target_estimate - truth) / truth).abs();
+            err_n += 1;
+        }
+    }
+    Ok((err_sum / err_n.max(1) as f64, err_n))
+}
 
 /// End-to-end synthetic serve: train Φ, start the server, stream `n`
 /// synthetic sensor observations through it, and return a report.
@@ -52,28 +100,7 @@ pub fn serve_synthetic(
     )?;
 
     // Stream observations and check target recovery online.
-    let mut rng = Lfsr32::new(0xFEED);
-    let mut pending = Vec::with_capacity(n);
-    let mut truths = Vec::with_capacity(n);
-    for _ in 0..n {
-        let sample = stim::sample_noisy(system, &mut rng, 0.0)
-            .ok_or_else(|| anyhow::anyhow!("no trace generator for `{system}`"))?;
-        let values_q: Vec<i64> =
-            export.ports.iter().map(|&si| Q16_15.from_f64(sample[si])).collect();
-        truths.push(sample[export.target_index]);
-        pending.push(server.submit(SensorInput { values_q }));
-    }
-    let mut err_sum = 0f64;
-    let mut err_n = 0usize;
-    for (rx, truth) in pending.into_iter().zip(truths) {
-        let pred = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped a response"))??;
-        if pred.target_estimate.is_finite() && truth.abs() > 1e-9 {
-            err_sum += ((pred.target_estimate - truth) / truth).abs();
-            err_n += 1;
-        }
-    }
+    let (mean_rel, _) = stream_synthetic(&server, &export, system, n, 0xFEED)?;
     let stats = server.shutdown();
 
     let mut out = String::new();
@@ -83,10 +110,124 @@ pub fn serve_synthetic(
         trained.final_loss, trained.steps
     ));
     out.push_str(&format!("val RMSE:    {:.5} (raw target units)\n", trained.val_rmse));
-    out.push_str(&format!(
-        "mean |rel. target error| online: {:.3}%\n",
-        100.0 * err_sum / err_n.max(1) as f64
-    ));
+    out.push_str(&format!("mean |rel. target error| online: {:.3}%\n", 100.0 * mean_rel));
     out.push_str(&stats.to_string());
     Ok(out)
+}
+
+/// Multi-system synthetic serve on one warm [`ServeSet`] — what
+/// `dimsynth serve --systems a,b,c [--cache-dir DIR]` runs.
+///
+/// Boots the shared flow graph (warm from `store` when given), floods
+/// the cross-system [`PowerBatcher`] with `flood` requests spread
+/// round-robin over the systems, and — when the AOT artifacts exist and
+/// `samples > 0` — trains and serves a synthetic stream per system
+/// through [`InferenceServer::start_shared`]. Returns the report text
+/// and the set's stage-cache telemetry (`recomputes() == 0` on a warm
+/// reboot — the acceptance gate CI greps for).
+pub fn serve_multi(
+    artifacts: &str,
+    systems: &[&str],
+    samples: usize,
+    max_batch: usize,
+    flood: usize,
+    config: FlowConfig,
+    store: Option<Arc<ArtifactStore>>,
+) -> anyhow::Result<(String, StageCounts)> {
+    let activations = config.power_samples;
+    let t0 = Instant::now();
+    let set = ServeSet::boot(systems, config, store)?;
+    let boot = t0.elapsed();
+    let counts = set.total_counts();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "serve set:   {} systems ({}) on one warm FlowSet\n",
+        set.len(),
+        set.systems().join(", ")
+    ));
+    out.push_str(&format!(
+        "boot:        {:.1} ms ({} recomputes, {} disk hits, {} lanes/pass)\n",
+        boot.as_secs_f64() * 1e3,
+        counts.recomputes(),
+        counts.disk_hits,
+        set.lane_width().lanes()
+    ));
+
+    if flood > 0 {
+        // Mixed-system power-request flood through the global batcher:
+        // zero linger — the flood is already queued, so batches fill
+        // without waiting.
+        let batcher = set.power_batcher(Duration::ZERO, activations);
+        let t = Instant::now();
+        let pending: Vec<_> = (0..flood)
+            .map(|i| {
+                let request = PowerRequest {
+                    seed: 0xF10_0D ^ i as u32,
+                    f_hz: if i % 2 == 0 { 6.0e6 } else { 12.0e6 },
+                };
+                batcher.submit(i % set.len(), request)
+            })
+            .collect();
+        let mut mw_sum = 0f64;
+        for rx in pending {
+            mw_sum += rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("power batcher dropped a response"))??
+                .mw;
+        }
+        let dt = t.elapsed().max(Duration::from_nanos(1));
+        let stats = batcher.shutdown();
+        anyhow::ensure!(!stats.worker_panicked, "power batcher worker panicked");
+        out.push_str(&format!(
+            "power flood: {} requests over {} systems in {:.1} ms ({:.0} req/s, {} batches, mean fill {:.1}, {} cross-system)\n",
+            stats.requests,
+            set.len(),
+            dt.as_secs_f64() * 1e3,
+            stats.requests as f64 / dt.as_secs_f64(),
+            stats.batches,
+            stats.mean_batch_fill(),
+            stats.mixed_batches,
+        ));
+        out.push_str(&format!(
+            "             mean estimate {:.2} mW over the flood\n",
+            mw_sum / flood as f64
+        ));
+    }
+
+    if samples > 0 {
+        if !std::path::Path::new(artifacts).join("manifest.txt").exists() {
+            out.push_str(&format!(
+                "Φ serving:   skipped — no AOT artifacts at `{artifacts}` (run `make artifacts`)\n"
+            ));
+        } else {
+            for system in set.systems() {
+                let trained: TrainOutput =
+                    train::run_training(artifacts, system, FeatureKind::Pi, 800, 0xD1CE)?;
+                let export = trained.dataset.export.clone();
+                let server = InferenceServer::start_shared(
+                    ServerConfig {
+                        artifacts: artifacts.to_string(),
+                        system: system.to_string(),
+                        max_batch,
+                        linger: Duration::from_micros(500),
+                        pi_path: PiPath::Native,
+                    },
+                    trained,
+                    set.handle(system).expect("system is in the set"),
+                )?;
+                let (mean_rel, _) = stream_synthetic(&server, &export, system, samples, 0xFEED)?;
+                let stats = server.shutdown();
+                anyhow::ensure!(!stats.worker_panicked, "serving worker for `{system}` panicked");
+                out.push_str(&format!(
+                    "{system:<24} {samples} samples, {:.0}/s, mean |rel err| {:.3}%, p99 {} µs\n",
+                    stats.throughput(),
+                    100.0 * mean_rel,
+                    stats.latency.percentile_us(0.99),
+                ));
+            }
+        }
+    }
+
+    Ok((out, counts))
 }

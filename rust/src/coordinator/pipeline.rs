@@ -12,6 +12,7 @@
 //!   hardware (what the physical sensor IC would compute, used for
 //!   hardware-in-the-loop validation and cycle accounting).
 
+use super::serveset::SystemHandle;
 use crate::fixedpoint::{self, Q16_15};
 use crate::flow::{worker, Flow, FlowConfig};
 use crate::power;
@@ -71,18 +72,27 @@ pub struct PowerEstimate {
     pub cycles: u64,
 }
 
+/// A [`PowerRequest`] aimed at one system of a multi-system serve set
+/// (`system` indexes the set's boot-order system list).
+#[derive(Clone, Copy, Debug)]
+pub struct SystemPowerRequest {
+    pub system: usize,
+    pub request: PowerRequest,
+}
+
 /// The stateful pipeline owned by the serving worker.
 pub struct Pipeline {
     pub export: SystemExport,
-    pub design: PiModuleDesign,
     pub params: Vec<f32>,
     pub dataset_stats: DatasetStats,
     pub pi_path: PiPath,
     system: String,
     engine: Engine,
-    /// The compilation session the design came from; keeps the lazily
-    /// technology-mapped netlist memoized for power estimation.
-    flow: Flow,
+    /// Warm compiled hardware state — the design and its mapped netlist
+    /// from one consistent flow generation. Shared (`Arc`) with the
+    /// owning [`super::ServeSet`] when the pipeline was built through
+    /// [`Pipeline::from_handle`]; private otherwise.
+    handle: SystemHandle,
 }
 
 /// The standardization constants serving needs from training.
@@ -108,21 +118,35 @@ impl From<&Dataset> for DatasetStats {
 }
 
 impl Pipeline {
-    /// Build a pipeline from a completed training run.
+    /// Build a standalone pipeline from a completed training run,
+    /// compiling a private flow session for its hardware state. Serving
+    /// deployments with more than one system should boot a
+    /// [`super::ServeSet`] and use [`Pipeline::from_handle`] so all
+    /// endpoints share one warm artifact graph.
     pub fn new(
         artifacts: &str,
         system: &str,
         trained: &TrainOutput,
         pi_path: PiPath,
     ) -> anyhow::Result<Pipeline> {
-        let engine = Engine::new(artifacts)?;
-        let export = trained.dataset.export.clone();
         let mut flow = Flow::for_system(system, FlowConfig::default())?;
-        let design = flow.rtl()?.clone();
+        Pipeline::from_handle(artifacts, trained, pi_path, SystemHandle::from_flow(&mut flow)?)
+    }
+
+    /// Build a pipeline on shared warm compiled state (no compilation
+    /// happens here — the handle already carries the design + netlist).
+    pub fn from_handle(
+        artifacts: &str,
+        trained: &TrainOutput,
+        pi_path: PiPath,
+        handle: SystemHandle,
+    ) -> anyhow::Result<Pipeline> {
+        let mut engine = Engine::new(artifacts)?;
+        let export = trained.dataset.export.clone();
         // Validate the target participates (its port is needed for
         // monomial inversion).
         let _ = export.target_port();
-        let mut engine = engine;
+        let system = handle.system().to_string();
         // Warm the executable cache: artifact compilation must not land
         // on the first request's latency.
         engine.load(&format!("phi_infer_{system}_b64"))?;
@@ -131,14 +155,18 @@ impl Pipeline {
         }
         Ok(Pipeline {
             export,
-            design,
             params: trained.params.clone(),
             dataset_stats: DatasetStats::from(&trained.dataset),
             pi_path,
-            system: system.to_string(),
+            system,
             engine,
-            flow,
+            handle,
         })
+    }
+
+    /// The generated RTL design this pipeline serves.
+    pub fn design(&self) -> &PiModuleDesign {
+        self.handle.design()
     }
 
     /// Serve power-estimation requests in lane-width-wide batches:
@@ -149,18 +177,17 @@ impl Pipeline {
     /// [`LaneWidth`](crate::synth::LaneWidth)) cost one netlist
     /// traversal per cycle.
     pub fn estimate_power_batch(
-        &mut self,
+        &self,
         requests: &[PowerRequest],
         activations: u32,
     ) -> Vec<PowerEstimate> {
-        let width = self.flow.config().lane_width;
-        // Design and netlist come from the same session generation, so
-        // they can never diverge even if the flow's config were edited.
-        let (design, mapped) = self
-            .flow
-            .rtl_and_netlist()
-            .expect("netlist derivation cannot fail once the design is built");
-        estimate_power_requests(&mapped.netlist, design, requests, activations, width)
+        estimate_power_requests(
+            self.handle.netlist(),
+            self.handle.design(),
+            requests,
+            activations,
+            self.handle.lane_width(),
+        )
     }
 
     /// Compute Π products for a batch via the configured path. Returns
@@ -187,7 +214,7 @@ impl Pipeline {
             PiPath::RtlSim => {
                 let samples: Vec<&[i64]> =
                     inputs.iter().map(|s| s.values_q.as_slice()).collect();
-                let batch = rtl::run_batch(&self.design, &samples);
+                let batch = rtl::run_batch(self.handle.design(), &samples);
                 Ok((batch.outputs, Some(batch.total_cycles)))
             }
             PiPath::Hlo => {
@@ -256,19 +283,15 @@ impl Pipeline {
     }
 }
 
-/// Dispatch power-estimation requests against a mapped netlist in
+/// Dispatch power-estimation requests against one mapped netlist in
 /// lane-width-wide batches (the engine-independent core of
 /// [`Pipeline::estimate_power_batch`], unit-testable without artifacts).
-/// Unfilled lanes of the last batch simulate padding streams whose
-/// results are dropped.
 ///
-/// Each chunk of `width.lanes()` requests is one independent
-/// word-parallel simulation pass, so chunks fan out across all cores on
-/// scoped worker threads ([`worker::parallel_map_chunks`]); request
-/// floods use every core on top of the 64×/256× lane win. Results are
-/// returned in request order, bit-identical to a sequential dispatch —
-/// and to either lane width, since each lane's stimulus stream depends
-/// only on its own seed.
+/// This is the single-system view of
+/// [`estimate_power_requests_grouped`]: results are returned in request
+/// order, bit-identical to a sequential dispatch — and to either lane
+/// width, since each lane's stimulus stream depends only on its own
+/// seed.
 pub fn estimate_power_requests(
     netlist: &crate::synth::Netlist,
     design: &PiModuleDesign,
@@ -276,47 +299,109 @@ pub fn estimate_power_requests(
     activations: u32,
     width: synth::LaneWidth,
 ) -> Vec<PowerEstimate> {
+    let tagged: Vec<SystemPowerRequest> = requests
+        .iter()
+        .map(|&request| SystemPowerRequest { system: 0, request })
+        .collect();
+    estimate_power_requests_grouped(&[(netlist, design)], &tagged, activations, width)
+}
+
+/// Dispatch a mixed-system flood of power requests: requests are
+/// **grouped by netlist** (each request's `system` indexes `targets`),
+/// each group is cut into `width.lanes()`-wide chunks — one independent
+/// word-parallel simulation pass per chunk, unfilled tail lanes
+/// simulate padding streams whose results are dropped — and the chunks
+/// of *all* systems fan out over one scoped worker pool
+/// ([`worker::parallel_map_chunks`]). A flood skewed across any number
+/// of systems therefore saturates every core on top of the 64×/256×
+/// lane win.
+///
+/// Results come back in request order. Because a lane's stimulus
+/// depends only on its own seed, every estimate is bit-identical to
+/// per-system (or fully sequential, or other-width) dispatch of the
+/// same requests.
+///
+/// Panics if a request's `system` index is out of range of `targets`
+/// (serving frontends validate indices at the submission boundary).
+pub fn estimate_power_requests_grouped(
+    targets: &[(&crate::synth::Netlist, &PiModuleDesign)],
+    requests: &[SystemPowerRequest],
+    activations: u32,
+    width: synth::LaneWidth,
+) -> Vec<PowerEstimate> {
     match width {
         synth::LaneWidth::W64 => {
-            estimate_power_requests_w::<u64>(netlist, design, requests, activations)
+            estimate_power_requests_grouped_w::<u64>(targets, requests, activations)
         }
         synth::LaneWidth::W256 => {
-            estimate_power_requests_w::<synth::W256>(netlist, design, requests, activations)
+            estimate_power_requests_grouped_w::<synth::W256>(targets, requests, activations)
         }
     }
 }
 
-/// Monomorphized core of [`estimate_power_requests`].
-fn estimate_power_requests_w<W: synth::LaneWord>(
-    netlist: &crate::synth::Netlist,
-    design: &PiModuleDesign,
-    requests: &[PowerRequest],
+/// Monomorphized core of [`estimate_power_requests_grouped`].
+fn estimate_power_requests_grouped_w<W: synth::LaneWord>(
+    targets: &[(&crate::synth::Netlist, &PiModuleDesign)],
+    requests: &[SystemPowerRequest],
     activations: u32,
 ) -> Vec<PowerEstimate> {
-    worker::parallel_map_chunks(requests, W::LANES, |_, chunk| {
+    // Group request positions by target, preserving arrival order
+    // within each group (order inside a group decides lane packing, so
+    // it must be deterministic for bit-identical re-dispatch).
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); targets.len()];
+    for (pos, r) in requests.iter().enumerate() {
+        assert!(
+            r.system < targets.len(),
+            "request {pos} targets system {} of {}",
+            r.system,
+            targets.len()
+        );
+        groups[r.system].push(pos as u32);
+    }
+    // One task per lane-width chunk of one group; tasks from every
+    // system share the worker fan-out below.
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for (target, group) in groups.iter().enumerate() {
+        for start in (0..group.len()).step_by(W::LANES) {
+            tasks.push((target, start, group.len().min(start + W::LANES)));
+        }
+    }
+    let answers: Vec<(u32, PowerEstimate)> = worker::parallel_map_chunks(&tasks, 1, |_, task| {
+        let &(target, start, end) = &task[0];
+        let (netlist, design) = targets[target];
+        let positions = &groups[target][start..end];
         let mut seeds = vec![0u32; W::LANES];
         for (lane, slot) in seeds.iter_mut().enumerate() {
-            *slot = match chunk.get(lane) {
-                Some(r) => r.seed,
+            *slot = match positions.get(lane) {
+                Some(&p) => requests[p as usize].request.seed,
                 // Padding lanes: any seed works, results are dropped.
                 None => 0x9E37_79B9 ^ lane as u32,
             };
         }
         let act =
             power::measure_activity_batch_wide::<W>(netlist, design, activations, &seeds, None);
-        chunk
+        positions
             .iter()
             .enumerate()
-            .map(|(lane, req)| {
+            .map(|(lane, &p)| {
                 let lane_act = act.lane(lane);
-                PowerEstimate {
-                    mw: power::average_power_mw(&power::ICE40, &lane_act, req.f_hz),
+                let f_hz = requests[p as usize].request.f_hz;
+                let estimate = PowerEstimate {
+                    mw: power::average_power_mw(&power::ICE40, &lane_act, f_hz),
                     toggles_per_cycle: lane_act.toggles_per_cycle,
                     cycles: act.cycles,
-                }
+                };
+                (p, estimate)
             })
             .collect()
-    })
+    });
+    // Scatter back to request order.
+    let mut out =
+        vec![PowerEstimate { mw: 0.0, toggles_per_cycle: 0.0, cycles: 0 }; requests.len()];
+    for (pos, estimate) in answers {
+        out[pos as usize] = estimate;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -382,5 +467,59 @@ mod tests {
         assert!(
             estimate_power_requests(netlist, &design, &[], 1, synth::LaneWidth::W64).is_empty()
         );
+    }
+
+    /// A mixed-system flood grouped by netlist must answer every
+    /// request bit-identically to dispatching each system's requests on
+    /// its own — packing order across systems cannot leak between
+    /// lanes.
+    #[test]
+    fn grouped_dispatch_matches_per_system_dispatch() {
+        let mut pendulum = pendulum_flow();
+        let mut spring = Flow::for_system("spring_mass", FlowConfig::default()).unwrap();
+        let p_design = pendulum.rtl().unwrap().clone();
+        let s_design = spring.rtl().unwrap().clone();
+        let p_netlist = pendulum.netlist().unwrap().netlist.clone();
+        let s_netlist = &spring.netlist().unwrap().netlist;
+        let targets: Vec<(&crate::synth::Netlist, &PiModuleDesign)> =
+            vec![(&p_netlist, &p_design), (s_netlist, &s_design)];
+
+        // Unevenly interleaved: system 0 gets 2 of every 3 requests.
+        let requests: Vec<SystemPowerRequest> = (0..75u32)
+            .map(|i| SystemPowerRequest {
+                system: (i % 3 == 2) as usize,
+                request: PowerRequest { seed: 0x4000 + i, f_hz: 6.0e6 + 1.0e6 * (i % 2) as f64 },
+            })
+            .collect();
+        let grouped =
+            estimate_power_requests_grouped(&targets, &requests, 2, synth::LaneWidth::W64);
+        assert_eq!(grouped.len(), requests.len());
+
+        for sys in 0..targets.len() {
+            let own: Vec<PowerRequest> = requests
+                .iter()
+                .filter(|r| r.system == sys)
+                .map(|r| r.request)
+                .collect();
+            let solo = estimate_power_requests(
+                targets[sys].0,
+                targets[sys].1,
+                &own,
+                2,
+                synth::LaneWidth::W64,
+            );
+            let mixed: Vec<&PowerEstimate> = requests
+                .iter()
+                .zip(&grouped)
+                .filter(|(r, _)| r.system == sys)
+                .map(|(_, e)| e)
+                .collect();
+            assert_eq!(solo.len(), mixed.len());
+            for (i, (a, b)) in solo.iter().zip(mixed).enumerate() {
+                assert_eq!(a.mw, b.mw, "system {sys} request {i}");
+                assert_eq!(a.toggles_per_cycle, b.toggles_per_cycle, "system {sys} request {i}");
+                assert_eq!(a.cycles, b.cycles, "system {sys} request {i}");
+            }
+        }
     }
 }

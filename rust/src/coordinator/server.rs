@@ -1,10 +1,17 @@
 //! The in-sensor inference server: a worker thread owning the pipeline
 //! (the PJRT client is not `Send`-safe, so it is created *inside* the
 //! worker), fed through a request channel with dynamic batching.
+//!
+//! A server can stand alone ([`InferenceServer::start`], which compiles
+//! its own hardware state) or serve as one tenant of a multi-system
+//! [`super::ServeSet`] ([`InferenceServer::start_shared`], which reuses
+//! the set's warm compiled artifacts instead of building a cold session
+//! per endpoint).
 
 use super::batcher::{self, BatchOutcome};
 use super::metrics::ServeStats;
 use super::pipeline::{Pipeline, PiPath, Prediction, SensorInput};
+use super::serveset::SystemHandle;
 use crate::train::TrainOutput;
 
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -35,15 +42,41 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start the worker. `trained` supplies Φ parameters and feature
-    /// statistics (see [`crate::train`]). Blocks until the pipeline is
-    /// initialized (artifact compilation) or fails.
+    /// Start a standalone worker that compiles its own hardware state.
+    /// `trained` supplies Φ parameters and feature statistics (see
+    /// [`crate::train`]). Blocks until the pipeline is initialized
+    /// (artifact compilation) or fails.
     pub fn start(config: ServerConfig, trained: TrainOutput) -> anyhow::Result<InferenceServer> {
+        InferenceServer::launch(config, trained, None)
+    }
+
+    /// Start a worker serving from a [`super::ServeSet`]'s shared warm
+    /// compiled state: the handle's design/netlist are reused, so no
+    /// per-endpoint compilation happens at all.
+    pub fn start_shared(
+        config: ServerConfig,
+        trained: TrainOutput,
+        handle: SystemHandle,
+    ) -> anyhow::Result<InferenceServer> {
+        anyhow::ensure!(
+            handle.system() == config.system,
+            "handle compiled for `{}` cannot serve system `{}`",
+            handle.system(),
+            config.system
+        );
+        InferenceServer::launch(config, trained, Some(handle))
+    }
+
+    fn launch(
+        config: ServerConfig,
+        trained: TrainOutput,
+        handle: Option<SystemHandle>,
+    ) -> anyhow::Result<InferenceServer> {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = mpsc::channel();
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
         let worker = std::thread::Builder::new()
             .name(format!("dimsynth-serve-{}", config.system))
-            .spawn(move || worker_loop(config, trained, rx, ready_tx))
+            .spawn(move || worker_loop(config, trained, handle, rx, ready_tx))
             .expect("spawn worker");
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(InferenceServer { tx: Some(tx), worker: Some(worker) }),
@@ -70,30 +103,40 @@ impl InferenceServer {
         rx
     }
 
-    /// Close the queue and collect final statistics.
+    /// Close the queue and collect final statistics. A worker that died
+    /// by panic is reported as such ([`ServeStats::worker_panicked`]) —
+    /// it must not masquerade as a clean zero-traffic run.
     pub fn shutdown(mut self) -> ServeStats {
         self.tx.take(); // close channel
-        self.worker.take().map(|w| w.join().unwrap_or_default()).unwrap_or_default()
+        match self.worker.take().map(JoinHandle::join) {
+            Some(Ok(stats)) => stats,
+            Some(Err(_)) => ServeStats { worker_panicked: true, ..ServeStats::default() },
+            None => ServeStats::default(),
+        }
     }
 }
 
 fn worker_loop(
     config: ServerConfig,
     trained: TrainOutput,
+    handle: Option<SystemHandle>,
     rx: Receiver<Request>,
     ready: Sender<anyhow::Result<()>>,
 ) -> ServeStats {
-    let mut pipeline =
-        match Pipeline::new(&config.artifacts, &config.system, &trained, config.pi_path) {
-            Ok(p) => {
-                let _ = ready.send(Ok(()));
-                p
-            }
-            Err(e) => {
-                let _ = ready.send(Err(e));
-                return ServeStats::default();
-            }
-        };
+    let built = match handle {
+        Some(h) => Pipeline::from_handle(&config.artifacts, &trained, config.pi_path, h),
+        None => Pipeline::new(&config.artifacts, &config.system, &trained, config.pi_path),
+    };
+    let mut pipeline = match built {
+        Ok(p) => {
+            let _ = ready.send(Ok(()));
+            p
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return ServeStats::default();
+        }
+    };
 
     let mut stats = ServeStats::default();
     let t0 = Instant::now();
@@ -105,7 +148,6 @@ fn worker_loop(
         if !batch.is_empty() {
             stats.batches += 1;
             stats.samples += batch.len() as u64;
-            stats.batch_fill_sum += batch.len() as u64;
             let inputs: Vec<SensorInput> =
                 batch.iter().map(|r| r.input.clone()).collect();
             match pipeline.infer(&inputs) {

@@ -1,0 +1,394 @@
+//! [`ServeSet`]: one warm compiled artifact graph behind every serving
+//! endpoint, plus the global cross-system power batcher.
+//!
+//! The single-system coordinator compiles one isolated flow per
+//! [`super::Pipeline`], so an N-system deployment pays N cold compiles
+//! and can never batch work across endpoints. A `ServeSet` inverts that
+//! shape, the way Clipper-style serving frontends share model state
+//! across endpoints:
+//!
+//! * it owns **one [`FlowSet`]** (one [`Flow`] session per served
+//!   system) optionally backed by **one shared [`ArtifactStore`]**, so
+//!   a restarted serve process boots warm — `recomputes() == 0` on
+//!   [`ServeSet::total_counts`] for every previously compiled system;
+//! * each per-system worker gets a [`SystemHandle`] — a cheap `Arc`
+//!   view of its flow's memoized design + mapped netlist — instead of
+//!   compiling a private copy ([`super::InferenceServer::start_shared`]);
+//! * [`PowerRequest`] floods from *all* systems funnel through one
+//!   width-aware [`PowerBatcher`]: requests are grouped by netlist and
+//!   the resulting 64/256-lane chunks from every system share one
+//!   worker fan-out ([`super::pipeline::estimate_power_requests_grouped`]),
+//!   so a mixed flood saturates all cores regardless of how it is
+//!   skewed across systems. Results are bit-identical to per-system
+//!   dispatch — each lane's stimulus depends only on its own seed.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::batcher::{self, BatchOutcome};
+use super::pipeline::{
+    estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
+};
+use crate::flow::{ArtifactStore, Flow, FlowConfig, FlowSet, StageCounts};
+use crate::rtl::PiModuleDesign;
+use crate::synth::techmap::MappedDesign;
+use crate::synth::{LaneWidth, Netlist};
+
+/// A cheap, cloneable view of one system's warm compiled state: the RTL
+/// design and its mapped netlist from one consistent cache generation
+/// of the owning [`Flow`], shared by reference with every consumer
+/// (serving workers, the power batcher, benches).
+#[derive(Clone)]
+pub struct SystemHandle {
+    system: String,
+    design: Arc<PiModuleDesign>,
+    mapped: Arc<MappedDesign>,
+    lane_width: LaneWidth,
+}
+
+impl SystemHandle {
+    /// Snapshot a flow's design + netlist (compiling or cache-loading
+    /// them on demand) into a shareable handle.
+    pub fn from_flow(flow: &mut Flow) -> anyhow::Result<SystemHandle> {
+        let system = flow.id().to_string();
+        let lane_width = flow.config().lane_width;
+        let (design, mapped) = flow.rtl_and_netlist()?;
+        Ok(SystemHandle {
+            system,
+            design: Arc::new(design.clone()),
+            mapped: Arc::new(mapped.clone()),
+            lane_width,
+        })
+    }
+
+    /// The corpus system this handle serves.
+    pub fn system(&self) -> &str {
+        &self.system
+    }
+
+    /// The generated RTL design.
+    pub fn design(&self) -> &PiModuleDesign {
+        &self.design
+    }
+
+    /// The LUT4-mapped netlist (simulation/power substrate).
+    pub fn netlist(&self) -> &Netlist {
+        &self.mapped.netlist
+    }
+
+    /// The mapped design with resource accounting.
+    pub fn mapped(&self) -> &MappedDesign {
+        &self.mapped
+    }
+
+    /// SIMD lane width of the owning flow's word-parallel passes.
+    pub fn lane_width(&self) -> LaneWidth {
+        self.lane_width
+    }
+}
+
+/// The shared serving substrate: one warm [`FlowSet`] fronting every
+/// per-system endpoint (see module docs).
+pub struct ServeSet {
+    set: FlowSet,
+    handles: Vec<SystemHandle>,
+    lane_width: LaneWidth,
+}
+
+impl ServeSet {
+    /// Compile (or warm-load, when `store` carries a previous run's
+    /// artifacts) every named system and snapshot a [`SystemHandle`]
+    /// per system. Systems compile in parallel across all cores; the
+    /// store is shared by every session, so a restarted serve process
+    /// boots with zero recomputes ([`ServeSet::total_counts`]).
+    pub fn boot(
+        systems: &[&str],
+        config: FlowConfig,
+        store: Option<Arc<ArtifactStore>>,
+    ) -> anyhow::Result<ServeSet> {
+        anyhow::ensure!(!systems.is_empty(), "serve set needs at least one system");
+        for (i, id) in systems.iter().enumerate() {
+            anyhow::ensure!(
+                !systems[..i].contains(id),
+                "duplicate system `{id}` in serve set"
+            );
+        }
+        let lane_width = config.lane_width;
+        let mut set = FlowSet::for_systems(systems, config)?;
+        if let Some(store) = store {
+            set = set.with_store(store);
+        }
+        let handles = set
+            .run_parallel(SystemHandle::from_flow)
+            .into_iter()
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ServeSet { set, handles, lane_width })
+    }
+
+    /// Number of served systems.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Served system ids, in boot order (the `system` index space of
+    /// [`SystemPowerRequest`]).
+    pub fn systems(&self) -> Vec<&str> {
+        self.handles.iter().map(SystemHandle::system).collect()
+    }
+
+    /// Index of a system in boot order.
+    pub fn system_index(&self, system: &str) -> Option<usize> {
+        self.handles.iter().position(|h| h.system() == system)
+    }
+
+    /// The shared handle for one served system.
+    pub fn handle(&self, system: &str) -> Option<SystemHandle> {
+        self.system_index(system).map(|i| self.handles[i].clone())
+    }
+
+    /// The shared handle at a boot-order index.
+    pub fn handle_at(&self, index: usize) -> &SystemHandle {
+        &self.handles[index]
+    }
+
+    /// SIMD lane width every batched power pass runs at.
+    pub fn lane_width(&self) -> LaneWidth {
+        self.lane_width
+    }
+
+    /// Aggregated stage-cache telemetry across all sessions — after a
+    /// warm boot from a populated `--cache-dir`, `recomputes()` is 0.
+    pub fn total_counts(&self) -> StageCounts {
+        self.set.total_counts()
+    }
+
+    /// The underlying sessions, for deeper queries (timing, Verilog …).
+    pub fn flows_mut(&mut self) -> &mut [Flow] {
+        self.set.flows_mut()
+    }
+
+    /// Answer a mixed-system flood of power requests synchronously:
+    /// requests are grouped by netlist, packed into lane-width chunks,
+    /// and every chunk — across all systems — shares one worker
+    /// fan-out. Results come back in request order, bit-identical to
+    /// per-system dispatch at either lane width. A request with an
+    /// out-of-range system index is an error (like
+    /// [`PowerBatcher::submit`]), not a panic.
+    pub fn estimate_power_flood(
+        &self,
+        requests: &[SystemPowerRequest],
+        activations: u32,
+    ) -> anyhow::Result<Vec<PowerEstimate>> {
+        for (i, r) in requests.iter().enumerate() {
+            anyhow::ensure!(
+                r.system < self.handles.len(),
+                "request {i} targets system index {} but this serve set has {} systems",
+                r.system,
+                self.handles.len()
+            );
+        }
+        let targets: Vec<(&Netlist, &PiModuleDesign)> =
+            self.handles.iter().map(|h| (h.netlist(), h.design())).collect();
+        Ok(estimate_power_requests_grouped(&targets, requests, activations, self.lane_width))
+    }
+
+    /// Start the global power batcher: a worker thread that collects
+    /// [`PowerRequest`]s from every system behind one channel and
+    /// answers each batch through the cross-system grouped dispatch.
+    /// The batch cap is width-aware — `lanes × systems`, one full
+    /// word-parallel pass per system per batch; `linger` bounds waiting
+    /// only (zero linger still drains ready floods whole).
+    pub fn power_batcher(&self, linger: Duration, activations: u32) -> PowerBatcher {
+        let handles = self.handles.clone();
+        let width = self.lane_width;
+        let max_batch = width.lanes() * handles.len();
+        let (tx, rx) = mpsc::channel::<PowerJob>();
+        let worker = std::thread::Builder::new()
+            .name("dimsynth-power-batcher".to_string())
+            .spawn(move || batcher_loop(&handles, width, max_batch, linger, activations, rx))
+            .expect("spawn power batcher");
+        PowerBatcher { tx: Some(tx), worker: Some(worker) }
+    }
+}
+
+/// One in-flight power request: target system index + stimulus request
+/// + reply channel.
+struct PowerJob {
+    system: usize,
+    request: PowerRequest,
+    resp: Sender<anyhow::Result<PowerEstimate>>,
+}
+
+/// Counters of one [`PowerBatcher`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FloodStats {
+    /// Requests answered successfully.
+    pub requests: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Batches that mixed more than one system — the cross-system
+    /// packing the shared frontend exists for.
+    pub mixed_batches: u64,
+    /// The batcher worker died by panic; counters are partial.
+    pub worker_panicked: bool,
+}
+
+impl FloodStats {
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+}
+
+/// Handle to the running cross-system power batcher
+/// ([`ServeSet::power_batcher`]).
+pub struct PowerBatcher {
+    tx: Option<Sender<PowerJob>>,
+    worker: Option<JoinHandle<FloodStats>>,
+}
+
+impl PowerBatcher {
+    /// Submit one request against the serve set's `system` index (boot
+    /// order); returns the response channel. An out-of-range index is
+    /// answered with an error, not a crash.
+    pub fn submit(
+        &self,
+        system: usize,
+        request: PowerRequest,
+    ) -> Receiver<anyhow::Result<PowerEstimate>> {
+        let (tx, rx) = mpsc::channel();
+        if let Some(q) = &self.tx {
+            let _ = q.send(PowerJob { system, request, resp: tx });
+        }
+        rx
+    }
+
+    /// Close the queue and collect final statistics; a panicked worker
+    /// is surfaced via [`FloodStats::worker_panicked`].
+    pub fn shutdown(mut self) -> FloodStats {
+        self.tx.take();
+        match self.worker.take().map(JoinHandle::join) {
+            Some(Ok(stats)) => stats,
+            Some(Err(_)) => FloodStats { worker_panicked: true, ..FloodStats::default() },
+            None => FloodStats::default(),
+        }
+    }
+}
+
+fn batcher_loop(
+    handles: &[SystemHandle],
+    width: LaneWidth,
+    max_batch: usize,
+    linger: Duration,
+    activations: u32,
+    rx: Receiver<PowerJob>,
+) -> FloodStats {
+    let targets: Vec<(&Netlist, &PiModuleDesign)> =
+        handles.iter().map(|h| (h.netlist(), h.design())).collect();
+    let mut stats = FloodStats::default();
+    loop {
+        let (batch, closing) = match batcher::collect(&rx, max_batch, linger) {
+            BatchOutcome::Batch(b) => (b, false),
+            BatchOutcome::Closed(b) => (b, true),
+        };
+        let mut jobs = Vec::with_capacity(batch.len());
+        for job in batch {
+            if job.system >= targets.len() {
+                let _ = job.resp.send(Err(anyhow::anyhow!(
+                    "no system index {} in this serve set ({} systems)",
+                    job.system,
+                    targets.len()
+                )));
+            } else {
+                jobs.push(job);
+            }
+        }
+        if !jobs.is_empty() {
+            stats.batches += 1;
+            stats.requests += jobs.len() as u64;
+            if jobs.iter().any(|j| j.system != jobs[0].system) {
+                stats.mixed_batches += 1;
+            }
+            let tagged: Vec<SystemPowerRequest> = jobs
+                .iter()
+                .map(|j| SystemPowerRequest { system: j.system, request: j.request })
+                .collect();
+            let estimates =
+                estimate_power_requests_grouped(&targets, &tagged, activations, width);
+            for (job, estimate) in jobs.into_iter().zip(estimates) {
+                let _ = job.resp.send(Ok(estimate));
+            }
+        }
+        if closing {
+            break;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boot_rejects_empty_duplicate_and_unknown_sets() {
+        let err = ServeSet::boot(&[], FlowConfig::default(), None).unwrap_err().to_string();
+        assert!(err.contains("at least one"), "{err}");
+        let err = ServeSet::boot(&["pendulum", "pendulum"], FlowConfig::default(), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        let err = ServeSet::boot(&["warp_core"], FlowConfig::default(), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("warp_core"), "{err}");
+    }
+
+    #[test]
+    fn boot_hands_out_per_system_handles() {
+        let set = ServeSet::boot(&["spring_mass", "pendulum"], FlowConfig::default(), None)
+            .unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.systems(), ["spring_mass", "pendulum"]);
+        assert_eq!(set.system_index("pendulum"), Some(1));
+        assert!(set.handle("beam").is_none());
+        let h = set.handle("pendulum").unwrap();
+        assert_eq!(h.system(), "pendulum");
+        assert_eq!(h.design().system, "pendulum");
+        assert!(h.mapped().lut4_cells > 0);
+        assert_eq!(h.lane_width(), LaneWidth::W64);
+        // Handles are views of the same warm state, not copies per
+        // caller.
+        let again = set.handle("pendulum").unwrap();
+        assert!(Arc::ptr_eq(&h.mapped, &again.mapped));
+    }
+
+    #[test]
+    fn batcher_rejects_out_of_range_system_index() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        // The synchronous flood errors (not panics) on a bad index too.
+        let bad_flood = [SystemPowerRequest {
+            system: 5,
+            request: PowerRequest { seed: 1, f_hz: 6.0e6 },
+        }];
+        let err = set.estimate_power_flood(&bad_flood, 1).unwrap_err().to_string();
+        assert!(err.contains("system index 5"), "{err}");
+        let batcher = set.power_batcher(Duration::ZERO, 1);
+        let bad = batcher.submit(5, PowerRequest { seed: 1, f_hz: 6.0e6 });
+        let ok = batcher.submit(0, PowerRequest { seed: 1, f_hz: 6.0e6 });
+        assert!(bad.recv().unwrap().is_err());
+        assert!(ok.recv().unwrap().is_ok());
+        let stats = batcher.shutdown();
+        assert_eq!(stats.requests, 1, "{stats:?}");
+        assert!(!stats.worker_panicked);
+    }
+}

@@ -33,6 +33,11 @@
 //!    is what makes a second process's warm start recompute nothing;
 //! 3. **compute** — and write back to the store (best-effort).
 //!
+//! Lookups are lazy: fingerprints derive from the source text and the
+//! config alone, so a warm deep-stage query (e.g. `timing()`) loads
+//! exactly one artifact — upstream stages materialize only on the
+//! compute path that reads them.
+//!
 //! [`StageCounts`] reports all three outcomes (per-stage compute
 //! counts, `memory_hits`, `disk_hits`).
 //!

@@ -2,9 +2,12 @@
 //! graph of typed stage artifacts.
 //!
 //! Every stage query resolves in lookup order **per-stage LRU → disk
-//! store → compute** (steps 2–3 only when a persistent store is
-//! attached via [`Flow::set_store`]); [`StageCounts`] distinguishes the
-//! three outcomes.
+//! store → compute** (step 2 only when a persistent store is attached
+//! via [`Flow::set_store`]); [`StageCounts`] distinguishes the three
+//! outcomes. Lookups are *lazy*: stage fingerprints derive from the
+//! source fingerprint and the config alone, so a warm `timing()` or
+//! `power()` query loads exactly its own artifact — upstream stages
+//! materialize only when a stage actually computes.
 
 use std::sync::Arc;
 
@@ -328,17 +331,53 @@ impl Flow {
         self.store.as_ref()?.load(fp)
     }
 
+    // ---- fingerprint chain -----------------------------------------------
+    //
+    // Stage fingerprints derive from the (precomputed) source fingerprint
+    // and the config alone — no artifact is needed to decide whether a
+    // cached stage is fresh. That makes warm queries *lazy*: a `timing()`
+    // hit in the LRU or on disk answers without deserializing the
+    // parse/Π/RTL/netlist artifacts it was derived from. Upstream stages
+    // materialize only on the compute path, which actually reads them.
+
+    fn fp_parsed(&self) -> u64 {
+        mix(TAG_PARSE, self.source_fp, 0)
+    }
+
+    fn fp_pis(&self) -> u64 {
+        mix(TAG_PIS, self.fp_parsed(), self.config.pis_inputs_fp(self.target()))
+    }
+
+    fn fp_rtl(&self) -> u64 {
+        mix(TAG_RTL, self.fp_pis(), self.config.rtl_inputs_fp())
+    }
+
+    fn fp_netlist(&self) -> u64 {
+        mix(TAG_NETLIST, self.fp_rtl(), 0)
+    }
+
+    fn fp_timing(&self) -> u64 {
+        mix(TAG_TIMING, self.fp_netlist(), self.config.timing_inputs_fp())
+    }
+
+    fn fp_power(&self) -> u64 {
+        mix(TAG_POWER, self.fp_netlist(), self.config.power_inputs_fp())
+    }
+
+    fn fp_verilog(&self) -> u64 {
+        mix(TAG_VERILOG, self.fp_rtl(), 0)
+    }
+
     // ---- stage graph -----------------------------------------------------
     //
     // Each `ensure_*` returns the stage's fingerprint after guaranteeing
     // the front of the stage's LRU holds the matching artifact; the
-    // public accessors borrow that front value afterwards. Fingerprints
-    // chain upstream→downstream, so freshness checks pull the whole
-    // prefix of the pipeline on demand, and the lookup order at every
-    // stage is LRU → disk store → compute.
+    // public accessors borrow that front value afterwards. The lookup
+    // order at every stage is LRU → disk store → compute; only the
+    // compute branch ensures the upstream stages it reads.
 
     fn ensure_parsed(&mut self) -> anyhow::Result<u64> {
-        let fp = mix(TAG_PARSE, self.source_fp, 0);
+        let fp = self.fp_parsed();
         match self.parsed.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -358,9 +397,7 @@ impl Flow {
     }
 
     fn ensure_pis(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_parsed()?;
-        let own = self.config.pis_inputs_fp(self.target());
-        let fp = mix(TAG_PIS, upstream, own);
+        let fp = self.fp_pis();
         match self.pis.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -369,6 +406,7 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.pis.insert(fp, analysis);
                 } else {
+                    self.ensure_parsed()?;
                     let target = self.target().to_string();
                     let model = self.parsed.value();
                     let mut analysis = pisearch::analyze(model, &target)?;
@@ -385,8 +423,7 @@ impl Flow {
     }
 
     fn ensure_rtl(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_pis()?;
-        let fp = mix(TAG_RTL, upstream, self.config.rtl_inputs_fp());
+        let fp = self.fp_rtl();
         match self.rtl.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -395,6 +432,7 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.rtl.insert(fp, design);
                 } else {
+                    self.ensure_pis()?;
                     let design = rtl::build(self.pis.value(), self.config.qformat);
                     self.counts.rtl += 1;
                     self.save_artifact(fp, &design);
@@ -406,8 +444,7 @@ impl Flow {
     }
 
     fn ensure_netlist(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_rtl()?;
-        let fp = mix(TAG_NETLIST, upstream, 0);
+        let fp = self.fp_netlist();
         match self.netlist.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -416,6 +453,7 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.netlist.insert(fp, mapped);
                 } else {
+                    self.ensure_rtl()?;
                     let mapped = synth::map_design(self.rtl.value());
                     self.counts.netlist += 1;
                     self.save_artifact(fp, &mapped);
@@ -427,8 +465,7 @@ impl Flow {
     }
 
     fn ensure_timing(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_netlist()?;
-        let fp = mix(TAG_TIMING, upstream, self.config.timing_inputs_fp());
+        let fp = self.fp_timing();
         match self.timing.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -437,6 +474,7 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.timing.insert(fp, report);
                 } else {
+                    self.ensure_netlist()?;
                     let report =
                         timing::analyze(&self.netlist.value().netlist, &self.config.delay);
                     self.counts.timing += 1;
@@ -449,8 +487,7 @@ impl Flow {
     }
 
     fn ensure_power(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_netlist()?;
-        let fp = mix(TAG_POWER, upstream, self.config.power_inputs_fp());
+        let fp = self.fp_power();
         match self.power.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -459,6 +496,10 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.power.insert(fp, report);
                 } else {
+                    // Measuring reads both the design and the netlist;
+                    // materialize them only on this compute path.
+                    self.ensure_rtl()?;
+                    self.ensure_netlist()?;
                     // One word-parallel pass at the configured lane
                     // width. Lane 0 carries `power_seed` itself —
                     // bit-identical to the scalar single-stream
@@ -504,8 +545,7 @@ impl Flow {
     }
 
     fn ensure_verilog(&mut self) -> anyhow::Result<u64> {
-        let upstream = self.ensure_rtl()?;
-        let fp = mix(TAG_VERILOG, upstream, 0);
+        let fp = self.fp_verilog();
         match self.verilog.promote(fp) {
             LruHit::Fresh => {}
             LruHit::Promoted => self.counts.memory_hits += 1,
@@ -514,6 +554,7 @@ impl Flow {
                     self.counts.disk_hits += 1;
                     self.verilog.insert(fp, text);
                 } else {
+                    self.ensure_rtl()?;
                     let text = rtl::verilog::emit(self.rtl.value());
                     self.counts.verilog += 1;
                     self.save_artifact(fp, &text);
@@ -556,6 +597,9 @@ impl Flow {
     /// simulation) that must never pair a stale design with a fresh
     /// netlist across a config change.
     pub fn rtl_and_netlist(&mut self) -> anyhow::Result<(&PiModuleDesign, &MappedDesign)> {
+        // Both stages must be ensured explicitly: a warm netlist query is
+        // lazy and does not materialize the RTL it was derived from.
+        self.ensure_rtl()?;
         self.ensure_netlist()?;
         Ok((self.rtl.value(), self.netlist.value()))
     }

@@ -36,6 +36,17 @@ impl FlowSet {
         FlowSet { flows }
     }
 
+    /// One session per named corpus system, all sharing one config —
+    /// the shape a multi-system serving deployment asks for (a subset
+    /// of the corpus, order preserved). Unknown ids error up front.
+    pub fn for_systems(ids: &[&str], config: FlowConfig) -> anyhow::Result<FlowSet> {
+        let flows = ids
+            .iter()
+            .map(|id| Flow::for_system(id, config.clone()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(FlowSet { flows })
+    }
+
     /// Attach one shared persistent [`ArtifactStore`] to every session.
     /// The store is concurrent-writer safe (temp file + atomic rename),
     /// so [`FlowSet::run_parallel`] workers — and entirely separate
@@ -94,6 +105,18 @@ mod tests {
         let set = FlowSet::corpus(FlowConfig::default());
         assert_eq!(set.len(), 7);
         assert!(!set.is_empty());
+    }
+
+    #[test]
+    fn for_systems_preserves_order_and_rejects_unknown_ids() {
+        let mut set =
+            FlowSet::for_systems(&["spring_mass", "pendulum"], FlowConfig::default()).unwrap();
+        let ids: Vec<String> = set.run_sequential(|f| f.id().to_string());
+        assert_eq!(ids, ["spring_mass", "pendulum"]);
+        assert!(FlowSet::for_systems(&["warp_core"], FlowConfig::default())
+            .unwrap_err()
+            .to_string()
+            .contains("warp_core"));
     }
 
     #[test]

@@ -553,7 +553,7 @@ fn put_netlist(w: &mut Writer, nl: &Netlist) {
             }
         }
     }
-    put_buses(w, &nl.outputs);
+    put_buses(w, nl.outputs());
     put_buses(w, &nl.input_buses);
 }
 

@@ -59,8 +59,13 @@
 //!   [`synth::LaneWidth`]), [`stim`] (LFSR stimulus, scalar and
 //!   lane-bank [`stim::LfsrBank`] at either width).
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
-//!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine),
-//!   [`train`] (offline/in-situ Φ calibration).
+//!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine;
+//!   multi-system deployments front the [`flow`] layer through one warm
+//!   [`coordinator::ServeSet`] — a shared `FlowSet` + artifact store
+//!   behind every endpoint, handing each serving worker an `Arc` view
+//!   of its compiled state and batching power-request floods **across
+//!   systems** at the configured SIMD lane width), [`train`]
+//!   (offline/in-situ Φ calibration).
 
 pub mod bench_util;
 pub mod coordinator;

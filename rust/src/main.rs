@@ -14,8 +14,15 @@
 //! dimsynth export-pisearch
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
 //! dimsynth serve <system> [--samples N] [--batch B] [--artifacts DIR]
+//! dimsynth serve --systems a,b,c [--cache-dir DIR] [--lanes N] [--power-flood N]
 //! dimsynth list
 //! ```
+//!
+//! `serve --systems a,b,c` serves every named system from **one warm
+//! `FlowSet`** behind the coordinator (`coordinator::ServeSet`): with
+//! `--cache-dir` a restarted serve process boots with `recomputes=0`,
+//! and power-request floods batch **across systems** through one
+//! width-aware batcher.
 //!
 //! `--cache-dir DIR` attaches the persistent artifact store: compiled
 //! stage artifacts are written to (and served from) `DIR`, so a second
@@ -125,9 +132,13 @@ const SUBCOMMANDS: &[SubSpec] = &[
         args: "<system>",
         summary: "run the in-sensor inference engine on a synthetic sensor stream",
         flags: &[
-            flag("samples", "N", "stream length (default 2048)"),
+            flag("samples", "N", "stream length per system (default 2048; 0 skips Φ serving)"),
             flag("batch", "B", "serving batch size (default 64)"),
             flag("artifacts", "DIR", "AOT artifact directory (default artifacts)"),
+            flag("systems", "a,b,c", "serve many systems from one warm FlowSet (no positional)"),
+            flag("cache-dir", "DIR", "multi-system: boot the FlowSet warm from this store"),
+            flag("lanes", "N", "multi-system: SIMD lane width of power batches (64 or 256)"),
+            flag("power-flood", "N", "multi-system: cross-system power requests (default 256)"),
         ],
     },
     SubSpec {
@@ -497,12 +508,46 @@ fn cmd_train(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
 }
 
 fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let system = pos
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("serve").unwrap())))?;
     let samples: usize = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(2048);
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
     let artifacts = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+
+    // Multi-system mode: every endpoint serves from one warm FlowSet
+    // (shared artifact graph + cross-system power batching).
+    if let Some(csv) = flags.get("systems") {
+        let systems: Vec<&str> = csv.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        anyhow::ensure!(!systems.is_empty(), "--systems needs at least one system id");
+        anyhow::ensure!(
+            pos.is_empty(),
+            "--systems replaces the positional system argument"
+        );
+        let lane_width = flags
+            .get("lanes")
+            .map(|s| LaneWidth::parse(s))
+            .transpose()?
+            .unwrap_or_default();
+        let flood: usize =
+            flags.get("power-flood").map(|s| s.parse()).transpose()?.unwrap_or(256);
+        let config = FlowConfig { lane_width, ..FlowConfig::default() };
+        let store = open_store(flags)?;
+        let (report, counts) =
+            coordinator::serve_multi(&artifacts, &systems, samples, batch, flood, config, store)?;
+        print!("{report}");
+        if flags.contains_key("cache-dir") {
+            print_cache_line(counts);
+        }
+        return Ok(());
+    }
+
+    for multi_only in ["cache-dir", "lanes", "power-flood"] {
+        anyhow::ensure!(
+            !flags.contains_key(multi_only),
+            "--{multi_only} requires --systems (multi-system serving)"
+        );
+    }
+    let system = pos
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("serve").unwrap())))?;
     let report = coordinator::serve_synthetic(&artifacts, system, samples, batch)?;
     println!("{report}");
     Ok(())

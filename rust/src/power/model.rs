@@ -19,8 +19,7 @@
 use crate::fixedpoint::QFormat;
 use crate::rtl::ir::PiModuleDesign;
 use crate::stim::{Lfsr32, LfsrBank, LfsrBank64};
-use crate::synth::wordsim::ParSession;
-use crate::synth::{GateSim, LaneWidth, LaneWord, Netlist, WordSim, W256};
+use crate::synth::{Drive, GateSim, LaneWidth, LaneWord, Netlist, WordSim, W256};
 
 /// Power model constants.
 #[derive(Clone, Copy, Debug)]
@@ -199,49 +198,12 @@ impl ActivitySpread {
     }
 }
 
-/// The stimulus/readback surface shared by the plain word simulator and
-/// its intra-level parallel session, so one drive loop serves both.
-trait BatchSim<W: LaneWord> {
-    fn set_bus_lanes(&mut self, name: &str, values: &[i64]);
-    fn set_bus(&mut self, name: &str, value: i64);
-    fn get_bit_word(&self, name: &str) -> W;
-    fn step(&mut self);
-}
-
-impl<W: LaneWord> BatchSim<W> for WordSim<'_, W> {
-    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
-        WordSim::set_bus_lanes(self, name, values);
-    }
-    fn set_bus(&mut self, name: &str, value: i64) {
-        WordSim::set_bus(self, name, value);
-    }
-    fn get_bit_word(&self, name: &str) -> W {
-        WordSim::get_bit_word(self, name)
-    }
-    fn step(&mut self) {
-        WordSim::step(self);
-    }
-}
-
-impl<W: LaneWord> BatchSim<W> for ParSession<'_, W> {
-    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
-        ParSession::set_bus_lanes(self, name, values);
-    }
-    fn set_bus(&mut self, name: &str, value: i64) {
-        ParSession::set_bus(self, name, value);
-    }
-    fn get_bit_word(&self, name: &str) -> W {
-        ParSession::get_bit_word(self, name)
-    }
-    fn step(&mut self) {
-        ParSession::step(self);
-    }
-}
-
 /// The activation loop of the batched measurement: per-lane LFSR operand
-/// draws, start pulse, run to `done`. Returns cycles simulated.
+/// draws, start pulse, run to `done`. Generic over the public
+/// [`Drive`] surface, so the same loop serves the plain word simulator
+/// and its intra-level parallel session. Returns cycles simulated.
 fn drive_activations<W: LaneWord>(
-    sim: &mut impl BatchSim<W>,
+    sim: &mut impl Drive<W>,
     design: &PiModuleDesign,
     activations: u32,
     lfsrs: &mut [Lfsr32],

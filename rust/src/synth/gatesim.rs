@@ -40,9 +40,6 @@ pub struct GateSim<'n> {
     cycles: u64,
     /// Input bus name -> bit net ids.
     bus: HashMap<String, Vec<NetId>>,
-    /// Output bus name -> bit net ids (prebuilt: output reads are hot in
-    /// testbench-driven loops polling `done` every cycle).
-    out_bus: HashMap<String, Vec<NetId>>,
     /// Packed combinational plan in topological order.
     luts: Vec<PackedLut>,
     /// (dff net, d net) pairs.
@@ -90,11 +87,6 @@ impl<'n> GateSim<'n> {
             .iter()
             .map(|(n, b)| (n.clone(), b.clone()))
             .collect();
-        let out_bus = nl
-            .outputs
-            .iter()
-            .map(|(n, b)| (n.clone(), b.clone()))
-            .collect();
         let scratch = vec![false; dffs.len()];
         GateSim {
             nl,
@@ -102,7 +94,6 @@ impl<'n> GateSim<'n> {
             toggles: vec![0; nl.len()],
             cycles: 0,
             bus,
-            out_bus,
             luts,
             dffs,
             scratch,
@@ -173,11 +164,13 @@ impl<'n> GateSim<'n> {
         }
     }
 
-    /// Read an output bus as a sign-extended integer.
+    /// Read an output bus as a sign-extended integer. Output reads are
+    /// hot in testbench-driven loops polling `done` every cycle; the
+    /// lookup goes through the netlist's prebuilt name index.
     pub fn get_output(&self, name: &str) -> i64 {
         let bits = self
-            .out_bus
-            .get(name)
+            .nl
+            .output_bits(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"));
         let mut v: i64 = 0;
         for (i, bit) in bits.iter().enumerate() {

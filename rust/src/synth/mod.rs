@@ -19,4 +19,4 @@ pub use lower::lower;
 pub use netlist::{Levelization, NetId, Netlist, Node};
 pub use techmap::{map_design, MappedDesign};
 pub use vcd::VcdRecorder;
-pub use wordsim::{ParSession, WordSim, LANES, LEVEL_PAR_THRESHOLD};
+pub use wordsim::{Drive, ParSession, WordSim, LANES, LEVEL_PAR_THRESHOLD};

@@ -65,12 +65,19 @@ impl Levelization {
 #[derive(Clone, Default)]
 pub struct Netlist {
     nodes: Vec<Node>,
-    /// Named output buses: (name, bits LSB-first).
-    pub outputs: Vec<(String, Vec<NetId>)>,
+    /// Named output buses: (name, bits LSB-first). Private so every
+    /// declaration goes through [`Netlist::add_output`], which keeps
+    /// the name index below in sync; read via [`Netlist::outputs`].
+    outputs: Vec<(String, Vec<NetId>)>,
     /// Named input buses for simulation binding: (name, bits LSB-first).
     pub input_buses: Vec<(String, Vec<NetId>)>,
     /// Structural-hash cache.
     cache: HashMap<Node, NetId>,
+    /// Output name → index into `outputs`, built once here so every
+    /// consumer (gate/word simulators, recorders) resolves hot output
+    /// reads in O(1) instead of scanning `outputs` or keeping a private
+    /// copy of this map.
+    out_index: HashMap<String, usize>,
 }
 
 impl Netlist {
@@ -96,7 +103,11 @@ impl Netlist {
                 cache.entry(node.clone()).or_insert(id as NetId);
             }
         }
-        Netlist { nodes, outputs, input_buses, cache }
+        // Rebuild the output index (re-declarations: latest wins, like
+        // `add_output`).
+        let out_index =
+            outputs.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
+        Netlist { nodes, outputs, input_buses, cache, out_index }
     }
 
     pub fn node(&self, id: NetId) -> &Node {
@@ -359,7 +370,22 @@ impl Netlist {
     }
 
     pub fn add_output(&mut self, name: &str, bits: Vec<NetId>) {
+        // Re-declaring a name points the index at the latest declaration.
+        self.out_index.insert(name.to_string(), self.outputs.len());
         self.outputs.push((name.to_string(), bits));
+    }
+
+    /// The bit nets of a named output bus (LSB-first), or `None` when no
+    /// such output was declared. O(1): backed by the prebuilt name index
+    /// — this is the hot lookup of testbench-style drive loops polling
+    /// `done` every cycle.
+    pub fn output_bits(&self, name: &str) -> Option<&[NetId]> {
+        self.out_index.get(name).map(|&i| self.outputs[i].1.as_slice())
+    }
+
+    /// The declared output buses, in declaration order.
+    pub fn outputs(&self) -> &[(String, Vec<NetId>)] {
+        &self.outputs
     }
 
     // ---- levelization ----------------------------------------------------
@@ -457,7 +483,8 @@ mod tests {
         let d = nl.dff(x, false);
         nl.add_output("q", vec![d]);
         let nodes: Vec<Node> = nl.nodes().map(|(_, n)| n.clone()).collect();
-        let mut rebuilt = Netlist::from_parts(nodes, nl.outputs.clone(), nl.input_buses.clone());
+        let mut rebuilt =
+            Netlist::from_parts(nodes, nl.outputs().to_vec(), nl.input_buses.clone());
         assert_eq!(rebuilt.len(), nl.len());
         assert_eq!(rebuilt.count_luts(), nl.count_luts());
         // Structural hashing still dedupes against restored nodes.

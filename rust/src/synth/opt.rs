@@ -15,7 +15,7 @@ pub fn dce(nl: &Netlist) -> (Netlist, usize) {
     let n = nl.len();
     let mut live = vec![false; n];
     let mut stack: Vec<NetId> = Vec::new();
-    for (_, bits) in &nl.outputs {
+    for (_, bits) in nl.outputs() {
         for &b in bits {
             if !live[b as usize] {
                 live[b as usize] = true;
@@ -82,7 +82,7 @@ pub fn dce(nl: &Netlist) -> (Netlist, usize) {
         }
     }
     // Remap interface lists.
-    for (name, bits) in &nl.outputs {
+    for (name, bits) in nl.outputs() {
         out.add_output(name, bits.iter().map(|&b| remap[b as usize]).collect());
     }
     out.input_buses = nl

@@ -60,7 +60,7 @@ pub fn pack_luts(nl: &Netlist) -> Netlist {
             _ => {}
         }
     }
-    for (_, bits) in &nl.outputs {
+    for (_, bits) in nl.outputs() {
         for &b in bits {
             fanout[b as usize] += 1;
         }
@@ -176,7 +176,7 @@ pub fn pack_luts(nl: &Netlist) -> Netlist {
             }
         }
     }
-    for (name, bits) in &nl.outputs {
+    for (name, bits) in nl.outputs() {
         out.add_output(name, bits.iter().map(|&b| remap[b as usize]).collect());
     }
     out.input_buses = nl
@@ -271,7 +271,7 @@ pub fn stats(netlist: Netlist) -> MappedDesign {
             _ => {}
         }
     }
-    for (_, bits) in &netlist.outputs {
+    for (_, bits) in netlist.outputs() {
         for &b in bits {
             fanout[b as usize] += 1;
         }

@@ -20,10 +20,8 @@ impl VcdRecorder {
             .iter()
             .map(|b| {
                 let width = nl
-                    .outputs
-                    .iter()
-                    .find(|(n, _)| n == b)
-                    .map(|(_, bits)| bits.len())
+                    .output_bits(b)
+                    .map(<[_]>::len)
                     .unwrap_or_else(|| panic!("no output bus `{b}`"));
                 (b.to_string(), width, Vec::new())
             })

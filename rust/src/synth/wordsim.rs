@@ -206,10 +206,6 @@ pub struct WordSim<'n, W: LaneWord = u64> {
     cycles: u64,
     /// Input bus name -> bit net ids.
     bus: HashMap<String, Vec<NetId>>,
-    /// Output bus name -> bit net ids (prebuilt: output reads are hot in
-    /// testbench-driven loops polling `done` every cycle, and the
-    /// netlist's output list would otherwise be scanned linearly).
-    out_bus: HashMap<String, Vec<NetId>>,
     /// Packed combinational plan, grouped by level.
     luts: Vec<PackedWordLut>,
     /// Half-open ranges into `luts`, one per combinational level.
@@ -263,11 +259,6 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             .iter()
             .map(|(n, b)| (n.clone(), b.clone()))
             .collect();
-        let out_bus = nl
-            .outputs
-            .iter()
-            .map(|(n, b)| (n.clone(), b.clone()))
-            .collect();
         let scratch = vec![W::zero(); dffs.len()];
         WordSim {
             nl,
@@ -280,7 +271,6 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             lane_net_toggles: None,
             cycles: 0,
             bus,
-            out_bus,
             luts,
             level_bounds,
             dffs,
@@ -555,8 +545,10 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
     }
 
     fn output_bits(&self, name: &str) -> &[NetId] {
-        self.out_bus
-            .get(name)
+        // Hot in done-polling drive loops; O(1) via the netlist's
+        // prebuilt name index.
+        self.nl
+            .output_bits(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"))
     }
 
@@ -636,7 +628,8 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             par_splits: Vec::new(),
         };
         let plan = self.par.clone().unwrap_or(degenerate);
-        let nets = self.nl.len();
+        let nl = self.nl;
+        let nets = nl.len();
         let WordSim {
             vals,
             toggles,
@@ -647,7 +640,6 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             lane_net_toggles,
             cycles,
             bus,
-            out_bus,
             luts,
             level_bounds,
             dffs,
@@ -708,6 +700,7 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             }
             let _stop = StopGuard(ctrl_ref);
             let mut session = ParSession {
+                nl,
                 nets,
                 vals: vals_raw,
                 toggles: toggles_raw,
@@ -719,7 +712,6 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
                 lane_net_toggles,
                 cycles,
                 bus,
-                out_bus,
                 luts,
                 level_bounds,
                 dffs,
@@ -733,6 +725,53 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
             // alike.
             f(&mut session)
         })
+    }
+}
+
+/// The stimulus/readback drive surface of the lane-parallel engines.
+///
+/// [`WordSim`] and [`ParSession`] implement it bit-identically, so one
+/// drive loop — a testbench harness, the power-measurement loop in
+/// [`crate::power`], a serving batcher — runs unmodified against either
+/// the sequential engine or an intra-level parallel session. This trait
+/// is the single public copy of the surface (it replaces the former
+/// `WordSim`-method / `ParSession`-mirror / private-`power`-trait
+/// triplication).
+pub trait Drive<W: LaneWord> {
+    /// Bind an input bus to `W::LANES` per-lane integer values
+    /// (LSB-first, two's complement truncation to the bus width).
+    /// Values hold until overwritten.
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]);
+    /// Bind an input bus to the same integer value in every lane.
+    fn set_bus(&mut self, name: &str, value: i64);
+    /// Bind a 1-bit input by bus name, one bit per lane.
+    fn set_bit_word(&mut self, name: &str, word: W);
+    /// Read a single-bit output as a lane word (bit l = lane l).
+    fn get_bit_word(&self, name: &str) -> W;
+    /// Run one clock cycle for all lanes.
+    fn step(&mut self);
+
+    /// Bind a 1-bit input to the same value in every lane.
+    fn set_bit(&mut self, name: &str, value: bool) {
+        self.set_bit_word(name, W::splat(value));
+    }
+}
+
+impl<W: LaneWord> Drive<W> for WordSim<'_, W> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        WordSim::set_bus_lanes(self, name, values);
+    }
+    fn set_bus(&mut self, name: &str, value: i64) {
+        WordSim::set_bus(self, name, value);
+    }
+    fn set_bit_word(&mut self, name: &str, word: W) {
+        WordSim::set_bit_word(self, name, word);
+    }
+    fn get_bit_word(&self, name: &str) -> W {
+        WordSim::get_bit_word(self, name)
+    }
+    fn step(&mut self) {
+        WordSim::step(self);
     }
 }
 
@@ -851,10 +890,11 @@ unsafe fn eval_chunk<W: LaneWord>(
 }
 
 /// A driving handle over a [`WordSim`] whose wide levels fan out across
-/// the session's worker threads. Mirrors the simulator's stimulus and
-/// readback surface; stepping through it produces results bit-identical
-/// to [`WordSim::step`].
+/// the session's worker threads. Its whole stimulus/readback surface is
+/// the shared [`Drive`] trait; stepping through it produces results
+/// bit-identical to [`WordSim::step`].
 pub struct ParSession<'a, W: LaneWord> {
+    nl: &'a Netlist,
     nets: usize,
     vals: RawSlice<W>,
     toggles: RawSlice<u64>,
@@ -866,7 +906,6 @@ pub struct ParSession<'a, W: LaneWord> {
     lane_net_toggles: &'a mut Option<Vec<u64>>,
     cycles: &'a mut u64,
     bus: &'a HashMap<String, Vec<NetId>>,
-    out_bus: &'a HashMap<String, Vec<NetId>>,
     luts: &'a [PackedWordLut],
     level_bounds: &'a [(u32, u32)],
     dffs: &'a [(u32, u32)],
@@ -916,9 +955,10 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
             .get(name)
             .unwrap_or_else(|| panic!("no input bus `{name}`"))
     }
+}
 
-    /// See [`WordSim::set_bus_lanes`].
-    pub fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+impl<W: LaneWord> Drive<W> for ParSession<'_, W> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
         assert_eq!(values.len(), W::LANES, "expected one value per lane");
         let bits = self.input_bits(name);
         for (i, bit) in bits.iter().enumerate() {
@@ -930,8 +970,7 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
         }
     }
 
-    /// See [`WordSim::set_bus`].
-    pub fn set_bus(&mut self, name: &str, value: i64) {
+    fn set_bus(&mut self, name: &str, value: i64) {
         let bits = self.input_bits(name);
         for (i, bit) in bits.iter().enumerate() {
             let w = W::splat((value >> i) & 1 == 1);
@@ -939,17 +978,15 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
         }
     }
 
-    /// See [`WordSim::set_bit_word`].
-    pub fn set_bit_word(&mut self, name: &str, word: W) {
+    fn set_bit_word(&mut self, name: &str, word: W) {
         let bits = self.input_bits(name);
         self.write_input_word(bits[0] as usize, word);
     }
 
-    /// See [`WordSim::get_bit_word`].
-    pub fn get_bit_word(&self, name: &str) -> W {
+    fn get_bit_word(&self, name: &str) -> W {
         let bits = self
-            .out_bus
-            .get(name)
+            .nl
+            .output_bits(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"));
         // Safety: read outside any phase; main thread exclusive.
         unsafe { self.vals.get(bits[0] as usize) }
@@ -957,7 +994,7 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
 
     /// One clock cycle for all lanes, wide levels fanned out across the
     /// session workers.
-    pub fn step(&mut self) {
+    fn step(&mut self) {
         *self.cycles += 1;
         if *self.plane_adds + 2 * self.nets as u64 >= self.flush_threshold {
             flush_planes_into(self.lane_planes, self.lane_flushed, self.plane_adds);

@@ -1,12 +1,23 @@
 //! End-to-end serving tests: train → serve → verify online accuracy and
-//! coordinator behaviour (batching, concurrency, shutdown).
+//! coordinator behaviour (batching, concurrency, shutdown), plus the
+//! multi-system path — many endpoints on one warm [`ServeSet`], warm
+//! reboots from a shared artifact store, and cross-system power
+//! batching that is bit-identical to per-system dispatch.
+//!
+//! The Φ-inference tests need the AOT artifacts (`make artifacts`) and
+//! skip without them; the serve-set boot and power-flood tests are pure
+//! compilation + gate-level simulation and always run.
 
 use dimsynth::coordinator::{
-    serve_synthetic, InferenceServer, PiPath, SensorInput, ServerConfig,
+    estimate_power_requests, serve_synthetic, InferenceServer, PiPath, PowerEstimate,
+    PowerRequest, SensorInput, ServeSet, ServerConfig, SystemPowerRequest,
 };
 use dimsynth::fixedpoint::Q16_15;
+use dimsynth::flow::{ArtifactStore, FlowConfig};
 use dimsynth::stim::{self, Lfsr32};
+use dimsynth::synth::LaneWidth;
 use dimsynth::train::{self, FeatureKind};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn artifacts_ready() -> bool {
@@ -168,4 +179,194 @@ fn unknown_system_fails_cleanly() {
     }
     let err = serve_synthetic("artifacts", "warp_core", 8, 4).unwrap_err().to_string();
     assert!(err.contains("warp_core"), "{err}");
+}
+
+// ---- multi-system serving on one warm ServeSet ---------------------------
+
+fn small_config(width: LaneWidth) -> FlowConfig {
+    FlowConfig { power_samples: 2, lane_width: width, ..FlowConfig::default() }
+}
+
+/// A restarted serve process pointed at the same `--cache-dir` must
+/// boot every previously compiled system warm: zero recomputes, and
+/// lazily — only the design + netlist artifacts each endpoint actually
+/// serves from are deserialized.
+#[test]
+fn serveset_reboots_warm_with_zero_recomputes() {
+    let dir = std::env::temp_dir()
+        .join(format!("dimsynth-serveset-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let systems = ["pendulum", "spring_mass"];
+
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let cold = ServeSet::boot(&systems, small_config(LaneWidth::W64), Some(store)).unwrap();
+    let cold_counts = cold.total_counts();
+    assert!(cold_counts.recomputes() > 0, "cold boot must compile: {cold_counts:?}");
+    let cold_cells: Vec<usize> =
+        (0..cold.len()).map(|i| cold.handle_at(i).mapped().lut4_cells).collect();
+    drop(cold);
+
+    // Fresh process shape: new sessions, re-opened store.
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let warm = ServeSet::boot(&systems, small_config(LaneWidth::W64), Some(store)).unwrap();
+    let counts = warm.total_counts();
+    assert_eq!(counts.recomputes(), 0, "warm serve boot must recompute nothing: {counts:?}");
+    // Lazy boot: exactly the rtl + netlist artifact per system, nothing
+    // upstream.
+    assert_eq!(
+        counts.disk_hits,
+        2 * systems.len() as u32,
+        "warm boot must load only what serving needs: {counts:?}"
+    );
+    let warm_cells: Vec<usize> =
+        (0..warm.len()).map(|i| warm.handle_at(i).mapped().lut4_cells).collect();
+    assert_eq!(cold_cells, warm_cells, "warm handles must carry identical hardware");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cross-system power floods must preserve every per-request result
+/// bit-exactly versus single-system dispatch, at both lane widths.
+#[test]
+fn cross_system_flood_matches_per_system_dispatch_at_both_widths() {
+    for width in [LaneWidth::W64, LaneWidth::W256] {
+        let set = ServeSet::boot(&["pendulum", "spring_mass"], small_config(width), None)
+            .unwrap();
+        // Unevenly interleaved flood across the two systems (more than
+        // one 64-lane chunk per system at the narrow width).
+        let requests: Vec<SystemPowerRequest> = (0..150u32)
+            .map(|i| SystemPowerRequest {
+                system: (i % 3 == 1) as usize,
+                request: PowerRequest {
+                    seed: 0x7000 + i,
+                    f_hz: if i % 2 == 0 { 6.0e6 } else { 12.0e6 },
+                },
+            })
+            .collect();
+        let flood = set.estimate_power_flood(&requests, 2).unwrap();
+        assert_eq!(flood.len(), requests.len());
+
+        for sys in 0..set.len() {
+            let handle = set.handle_at(sys);
+            let own: Vec<PowerRequest> = requests
+                .iter()
+                .filter(|r| r.system == sys)
+                .map(|r| r.request)
+                .collect();
+            let solo =
+                estimate_power_requests(handle.netlist(), handle.design(), &own, 2, width);
+            let mixed: Vec<&PowerEstimate> = requests
+                .iter()
+                .zip(&flood)
+                .filter(|(r, _)| r.system == sys)
+                .map(|(_, e)| e)
+                .collect();
+            assert_eq!(solo.len(), mixed.len());
+            for (i, (a, b)) in solo.iter().zip(mixed).enumerate() {
+                assert_eq!(a.mw, b.mw, "{width:?} system {sys} request {i}");
+                assert_eq!(
+                    a.toggles_per_cycle, b.toggles_per_cycle,
+                    "{width:?} system {sys} request {i}"
+                );
+                assert_eq!(a.cycles, b.cycles, "{width:?} system {sys} request {i}");
+            }
+        }
+    }
+}
+
+/// The asynchronous batcher (channel + linger + cross-system grouped
+/// dispatch) must answer a mixed flood with the same estimates as the
+/// synchronous path, regardless of how requests landed in batches.
+#[test]
+fn power_batcher_preserves_per_request_results() {
+    let set =
+        ServeSet::boot(&["pendulum", "spring_mass"], small_config(LaneWidth::W64), None)
+            .unwrap();
+    let requests: Vec<SystemPowerRequest> = (0..96u32)
+        .map(|i| SystemPowerRequest {
+            system: (i % 2) as usize,
+            request: PowerRequest { seed: 0x9100 + i, f_hz: 6.0e6 },
+        })
+        .collect();
+    let want = set.estimate_power_flood(&requests, 2).unwrap();
+
+    let batcher = set.power_batcher(Duration::from_micros(200), 2);
+    let pending: Vec<_> =
+        requests.iter().map(|r| batcher.submit(r.system, r.request)).collect();
+    for (i, (rx, want)) in pending.into_iter().zip(&want).enumerate() {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.mw, want.mw, "request {i}");
+        assert_eq!(got.toggles_per_cycle, want.toggles_per_cycle, "request {i}");
+        assert_eq!(got.cycles, want.cycles, "request {i}");
+    }
+    let stats = batcher.shutdown();
+    assert_eq!(stats.requests, requests.len() as u64, "{stats:?}");
+    assert!(!stats.worker_panicked);
+    assert!(stats.batches >= 1);
+}
+
+/// Two inference servers on one ServeSet must produce predictions
+/// bit-identical to standalone single-system servers, while a mixed
+/// power flood runs through the shared batcher.
+#[test]
+fn shared_serveset_inference_matches_single_system_baseline() {
+    if !artifacts_ready() {
+        return;
+    }
+    let systems = ["pendulum", "beam"];
+    let set = ServeSet::boot(&systems, FlowConfig::default(), None).unwrap();
+    let batcher = set.power_batcher(Duration::from_micros(200), 2);
+    let mut flood = Vec::new();
+    for system in systems {
+        let trained =
+            train::run_training("artifacts", system, FeatureKind::Pi, 400, 0x1E57).unwrap();
+        let config = |sys: &str| ServerConfig {
+            artifacts: "artifacts".into(),
+            system: sys.into(),
+            max_batch: 32,
+            linger: Duration::from_micros(200),
+            pi_path: PiPath::Native,
+        };
+        let shared =
+            InferenceServer::start_shared(config(system), trained.clone(), set.handle(system).unwrap())
+                .unwrap();
+        let solo = InferenceServer::start(config(system), trained.clone()).unwrap();
+
+        let export = trained.dataset.export.clone();
+        let mut rng = Lfsr32::new(0xE2E2);
+        for i in 0..48 {
+            let s = stim::sample(system, &mut rng).unwrap();
+            let values_q: Vec<i64> =
+                export.ports.iter().map(|&si| Q16_15.from_f64(s[si])).collect();
+            let a = shared
+                .submit(SensorInput { values_q: values_q.clone() })
+                .recv()
+                .unwrap()
+                .unwrap();
+            let b = solo.submit(SensorInput { values_q }).recv().unwrap().unwrap();
+            assert_eq!(a.pis, b.pis, "{system} sample {i}: Π mismatch");
+            assert_eq!(a.pi0_pred.to_bits(), b.pi0_pred.to_bits(), "{system} sample {i}");
+            assert_eq!(
+                a.target_estimate.to_bits(),
+                b.target_estimate.to_bits(),
+                "{system} sample {i}"
+            );
+            // Interleave power requests with the inference stream.
+            let sys_index = set.system_index(system).unwrap();
+            flood.push(batcher.submit(
+                sys_index,
+                PowerRequest { seed: 0xAB00 + i as u32, f_hz: 6.0e6 },
+            ));
+        }
+        let shared_stats = shared.shutdown();
+        let solo_stats = solo.shutdown();
+        assert_eq!(shared_stats.samples, 48);
+        assert_eq!(solo_stats.samples, 48);
+        assert!(!shared_stats.worker_panicked);
+    }
+    for rx in flood {
+        assert!(rx.recv().unwrap().unwrap().mw > 0.0);
+    }
+    let stats = batcher.shutdown();
+    assert_eq!(stats.requests, 96, "{stats:?}");
 }
