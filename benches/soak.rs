@@ -1,0 +1,215 @@
+//! Soak bench: replay ~1M mixed Π/power requests from concurrent
+//! tenants — two steady streams, one flooder, one light tenant —
+//! through the real TCP serving stack (net → admission → dispatch) on
+//! one warm [`ServeSet`], and gate the things a soak exists to catch:
+//! tail-latency collapse and starvation. Emits `BENCH_soak.json`.
+//!
+//! Always asserted, any size: every request gets exactly one typed
+//! answer, the flooder is shed (not hung), the light tenant sees zero
+//! shed (no starvation under trivial load), and graceful drain leaves
+//! `terminal == admitted` for every tenant.
+//!
+//! ```text
+//! cargo bench --bench soak                      # full ~1M-request soak
+//! SOAK_REQUESTS=20000 cargo bench --bench soak  # scaled-down smoke
+//! SOAK_REQUIRE_TAIL=1 ...                       # also gate steady p99
+//! SOAK_P99_BUDGET_US=2000000 ...                # custom p99 budget
+//! ```
+
+use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
+use dimsynth::coordinator::net::run_driver;
+use dimsynth::coordinator::{
+    AdmissionConfig, DriverConfig, DriverReport, EngineConfig, FaultPlan, NetServer,
+    ServeSet, TenantSpec, TrafficEngine,
+};
+use dimsynth::flow::FlowConfig;
+use dimsynth::synth::LaneWidth;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let total = env_u64("SOAK_REQUESTS", 1_000_000) as usize;
+    let require_tail = std::env::var("SOAK_REQUIRE_TAIL").is_ok_and(|v| v == "1");
+    let p99_budget_us = env_u64("SOAK_P99_BUDGET_US", 2_000_000);
+
+    // Light tenant stays light at every scale; the flooder offers ~20%
+    // of traffic against a rate limit sized to shed most of it; the two
+    // steady tenants split the rest.
+    let light_n = (total / 50).clamp(20, 2_000);
+    let flood_n = total / 5;
+    let steady_n = (total - flood_n - light_n) / 2;
+
+    section(&format!(
+        "soak: {total} requests over TCP (2 steady + flood + light tenants)"
+    ));
+
+    let config = FlowConfig {
+        power_samples: 2,
+        lane_width: LaneWidth::W64,
+        ..FlowConfig::default()
+    };
+    let set = ServeSet::boot(&["pendulum", "spring_mass"], config, None)?;
+    let pendulum_ports = set.handle_at(0).design().num_inputs();
+    let spring_ports = set.handle_at(1).design().num_inputs();
+
+    let admission = AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("steady-a", "pendulum").with_queue_cap(4096),
+            TenantSpec::new("steady-b", "spring_mass").with_queue_cap(4096),
+            TenantSpec::new("flood", "spring_mass")
+                .with_rate(500.0, 32.0)
+                .with_queue_cap(64),
+            TenantSpec::new("light", "pendulum").with_queue_cap(4096),
+        ],
+        default_deadline: Duration::from_secs(60),
+    };
+    let engine = Arc::new(TrafficEngine::start(
+        &set,
+        admission,
+        EngineConfig { activations: 2, max_batch: 0 },
+        FaultPlan::none(),
+    )?);
+    let server = NetServer::start(engine, "127.0.0.1:0")?;
+    let addr = server.local_addr().to_string();
+
+    let drivers = vec![
+        DriverConfig {
+            requests: steady_n,
+            window: 64,
+            seed: 0x50A0 ^ 0xA,
+            power_ratio: 0.05,
+            ..DriverConfig::new("steady-a", pendulum_ports)
+        },
+        DriverConfig {
+            requests: steady_n,
+            window: 64,
+            seed: 0x50A0 ^ 0xB,
+            power_ratio: 0.05,
+            ..DriverConfig::new("steady-b", spring_ports)
+        },
+        DriverConfig {
+            requests: flood_n,
+            window: 128,
+            seed: 0x50A0 ^ 0xC,
+            power_ratio: 0.05,
+            ..DriverConfig::new("flood", spring_ports)
+        },
+        // Trickled requests: a tenant this light must never be shed or
+        // starved no matter what its neighbours do.
+        DriverConfig {
+            requests: light_n,
+            window: 1,
+            seed: 0x50A0 ^ 0xD,
+            power_ratio: 0.0,
+            gap: Duration::from_micros(200),
+            ..DriverConfig::new("light", pendulum_ports)
+        },
+    ];
+
+    let t = Instant::now();
+    let joins: Vec<_> = drivers
+        .into_iter()
+        .map(|cfg| {
+            let addr = addr.clone();
+            std::thread::spawn(move || (cfg.tenant.clone(), run_driver(&addr, &cfg).unwrap()))
+        })
+        .collect();
+    let mut reports = std::collections::HashMap::<String, DriverReport>::new();
+    for j in joins {
+        let (tenant, report) = j.join().expect("driver thread");
+        reports.insert(tenant, report);
+    }
+    let wall = t.elapsed().max(Duration::from_nanos(1));
+
+    let sent: u64 = reports.values().map(|r| r.sent).sum();
+    let rps = sent as f64 / wall.as_secs_f64();
+    println!("replayed {sent} requests in {} ({rps:.0} req/s)", fmt_duration(wall));
+    for name in ["steady-a", "steady-b", "flood", "light"] {
+        let r = &reports[name];
+        println!(
+            "{name:<9} sent {:>8}  ok {:>8}  shed {:>8}  µs p50 {:>7} p99 {:>7} p999 {:>7}",
+            r.sent,
+            r.ok,
+            r.shed,
+            r.latency.percentile_us(0.50),
+            r.latency.percentile_us(0.99),
+            r.latency.percentile_us(0.999),
+        );
+    }
+
+    // -- invariants that hold at every soak size -----------------------
+    for (name, r) in &reports {
+        assert_eq!(r.answered(), r.sent, "{name}: a request went unanswered: {r:?}");
+        assert_eq!(r.panicked + r.protocol + r.tenant_unknown, 0, "{name}: {r:?}");
+    }
+    let flood = &reports["flood"];
+    assert!(flood.shed > 0, "flood must be shed, not absorbed: {flood:?}");
+    let light = &reports["light"];
+    assert_eq!(light.shed, 0, "light tenant must never be shed: {light:?}");
+    assert_eq!(light.ok, light.sent, "light tenant must be fully served: {light:?}");
+    for name in ["steady-a", "steady-b"] {
+        let r = &reports[name];
+        assert_eq!(r.ok, r.sent, "{name} is self-clocked, nothing may shed: {r:?}");
+    }
+
+    let report = server.shutdown();
+    assert!(!report.engine_panicked);
+    for t in &report.tenants {
+        assert_eq!(
+            t.counters.terminal(),
+            t.counters.admitted,
+            "tenant `{}` drained dirty: {:?}",
+            t.tenant,
+            t.counters
+        );
+        assert_eq!(t.queue_depth, 0, "tenant `{}` queue not drained", t.tenant);
+    }
+
+    // -- tail gates (opt-in: wall-clock on shared runners is noisy) ----
+    let steady_p99 = ["steady-a", "steady-b"]
+        .iter()
+        .map(|n| reports[*n].latency.percentile_us(0.99))
+        .max()
+        .unwrap_or(0);
+    let light_p99 = light.latency.percentile_us(0.99);
+    if require_tail {
+        assert!(
+            steady_p99 <= p99_budget_us,
+            "steady p99 {steady_p99} µs blew the {p99_budget_us} µs budget"
+        );
+        assert!(
+            light_p99 <= p99_budget_us,
+            "light p99 {light_p99} µs blew the {p99_budget_us} µs budget"
+        );
+        println!("tail gate: p99 {steady_p99} µs (steady) / {light_p99} µs (light) within {p99_budget_us} µs");
+    }
+
+    write_metrics_json(
+        "BENCH_soak.json",
+        &[("driver", "net-soak"), ("systems", "pendulum+spring_mass")],
+        &[
+            ("requests", sent as f64),
+            ("wall_s", wall.as_secs_f64()),
+            ("req_per_s", rps),
+            ("steady_p50_us", reports["steady-a"].latency.percentile_us(0.50) as f64),
+            ("steady_p99_us", steady_p99 as f64),
+            ("steady_p999_us", ["steady-a", "steady-b"]
+                .iter()
+                .map(|n| reports[*n].latency.percentile_us(0.999))
+                .max()
+                .unwrap_or(0) as f64),
+            ("light_p99_us", light_p99 as f64),
+            ("flood_shed", flood.shed as f64),
+            ("flood_served", flood.ok as f64),
+            ("light_shed", light.shed as f64),
+            ("tail_gated", if require_tail { 1.0 } else { 0.0 }),
+            ("p99_budget_us", p99_budget_us as f64),
+        ],
+    )?;
+    println!("wrote BENCH_soak.json");
+    Ok(())
+}

@@ -1,0 +1,501 @@
+//! Per-tenant admission control: token-bucket rate limits, bounded
+//! per-tenant queues, request deadlines, and fair (round-robin) batch
+//! collection — the discipline that keeps one flooding tenant from
+//! starving everyone else behind the shared serving substrate.
+//!
+//! The shape follows production serving frontends: every tenant owns a
+//! private bounded queue and a private token bucket, so overload
+//! backpressures the tenant that caused it. A request is either
+//! *admitted* (it will receive exactly one response, served or typed
+//! error) or *rejected at the door* with a [`Rejection`] carrying a
+//! retry-after hint computed from real queue pressure — never silently
+//! dropped. Dispatch pulls batches round-robin across tenants
+//! ([`TenantQueues::collect_fair`]): one item per non-empty tenant per
+//! sweep, so a tenant with 10 000 queued requests and a tenant with 1
+//! both make progress every round.
+//!
+//! Deadlines ride on every queued item ([`Deadline`]); expired work is
+//! dropped *at dequeue* by the dispatcher (answered with
+//! `DeadlineExceeded`, not computed) — queue time counts against the
+//! budget, which is what bounds tail latency under overload.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// An absolute expiry instant carried by every enqueued request.
+///
+/// Constructed from a relative budget at admission
+/// ([`Deadline::after`]); checked at dequeue so queueing time counts
+/// against the budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline {
+    expires_at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { expires_at: Instant::now() + budget }
+    }
+
+    /// A deadline at an explicit instant (tests, replay harnesses).
+    pub fn at(expires_at: Instant) -> Deadline {
+        Deadline { expires_at }
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.expires_at
+    }
+
+    /// Time left before expiry (zero when already expired).
+    pub fn remaining(&self) -> Duration {
+        self.expires_at.saturating_duration_since(Instant::now())
+    }
+}
+
+/// One tenant's admission policy: identity, which system of the serve
+/// set it targets, its token-bucket rate limit, and its queue bound.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant identity presented on the wire.
+    pub name: String,
+    /// System (by serve-set id) this tenant's requests run against.
+    pub system: String,
+    /// Sustained admission rate (requests/second). `f64::INFINITY`
+    /// disables rate limiting for this tenant.
+    pub rate_per_sec: f64,
+    /// Token-bucket burst capacity (requests admitted back-to-back from
+    /// a full bucket).
+    pub burst: f64,
+    /// Bounded queue depth; an arrival beyond this is shed.
+    pub queue_cap: usize,
+}
+
+impl TenantSpec {
+    /// A tenant with permissive defaults: no rate limit, burst 64, a
+    /// 1024-deep queue.
+    pub fn new(name: &str, system: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            system: system.to_string(),
+            rate_per_sec: f64::INFINITY,
+            burst: 64.0,
+            queue_cap: 1024,
+        }
+    }
+
+    /// Set the token-bucket rate and burst.
+    pub fn with_rate(mut self, rate_per_sec: f64, burst: f64) -> TenantSpec {
+        self.rate_per_sec = rate_per_sec;
+        self.burst = burst;
+        self
+    }
+
+    /// Set the bounded queue depth.
+    pub fn with_queue_cap(mut self, cap: usize) -> TenantSpec {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// The admission policy of a whole deployment: the registered tenants
+/// plus the deadline applied to requests that do not carry their own.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    pub tenants: Vec<TenantSpec>,
+    /// Deadline budget for requests that carry none (wire `deadline_us
+    /// == 0`).
+    pub default_deadline: Duration,
+}
+
+impl AdmissionConfig {
+    /// One permissive tenant per system, named after it — the shape
+    /// `serve --listen` boots with by default.
+    pub fn one_tenant_per_system(systems: &[&str]) -> AdmissionConfig {
+        AdmissionConfig {
+            tenants: systems.iter().map(|s| TenantSpec::new(s, s)).collect(),
+            default_deadline: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Why admission refused a request. Maps onto
+/// [`ServeError::Shed`](super::error::ServeError::Shed) at the serving
+/// boundary; kept separate so the queue layer stays transport-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejection {
+    /// Token bucket empty; retry once it has refilled one token.
+    RateLimited { retry_after: Duration },
+    /// Bounded queue full; retry-after is the oldest entry's age (a
+    /// live estimate of drain time — real queue pressure, not a
+    /// constant).
+    QueueFull { retry_after: Duration },
+    /// The server is draining; nothing new is admitted.
+    Draining,
+}
+
+impl Rejection {
+    /// The retry-after hint in milliseconds, clamped to [1, 60000].
+    /// Draining reports 0: "do not retry here".
+    pub fn retry_after_ms(&self) -> u32 {
+        match self {
+            Rejection::RateLimited { retry_after } | Rejection::QueueFull { retry_after } => {
+                (retry_after.as_millis() as u64).clamp(1, 60_000) as u32
+            }
+            Rejection::Draining => 0,
+        }
+    }
+}
+
+/// A deterministic token bucket: `burst` capacity, `rate` tokens/second
+/// refill, explicitly clocked (callers pass `now`) so tests drive it
+/// with synthetic time.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_sec: f64, burst: f64, now: Instant) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { tokens: burst, rate: rate_per_sec.max(0.0), burst, last: now }
+    }
+
+    /// Take one token at `now`, or report how long until one refills.
+    /// An infinite rate always succeeds.
+    pub fn try_take_at(&mut self, now: Instant) -> Result<(), Duration> {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        if self.rate <= 0.0 {
+            // A zero-rate tenant can never refill; report a long hold.
+            return Err(Duration::from_secs(60));
+        }
+        Err(Duration::from_secs_f64((1.0 - self.tokens) / self.rate))
+    }
+}
+
+/// One tenant's private lane: bounded FIFO (items timestamped at
+/// enqueue, so oldest-entry age is observable) plus its token bucket
+/// and a monotone per-tenant admission sequence number (deterministic
+/// fault-injection keys on it).
+struct Lane<T> {
+    queue: VecDeque<(Instant, T)>,
+    bucket: TokenBucket,
+    cap: usize,
+    admitted: u64,
+}
+
+struct QueuesState<T> {
+    lanes: Vec<Lane<T>>,
+    /// Round-robin position of the next collection sweep.
+    cursor: usize,
+    closing: bool,
+}
+
+/// Outcome of one fair collection.
+pub enum FairBatch<T> {
+    /// A non-empty batch; the server keeps running.
+    Batch(Vec<T>),
+    /// The queues are draining: these are queued leftovers (process
+    /// them, then call again). An **empty** `Closing` batch means fully
+    /// drained — exit.
+    Closing(Vec<T>),
+}
+
+/// Per-tenant bounded queues behind one lock, with fair round-robin
+/// collection (see module docs). Generic over the queued item so the
+/// dispatch engine owns its request type.
+pub struct TenantQueues<T> {
+    state: Mutex<QueuesState<T>>,
+    ready: Condvar,
+}
+
+/// Lock, surviving poisoning: a panicking peer must not take the whole
+/// serving path down with it (panics are contained per-request by the
+/// dispatcher; the queue state itself is never left mid-mutation).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T> TenantQueues<T> {
+    /// Queues for `specs.len()` tenants (index space = spec order).
+    pub fn new(specs: &[TenantSpec]) -> TenantQueues<T> {
+        let now = Instant::now();
+        TenantQueues {
+            state: Mutex::new(QueuesState {
+                lanes: specs
+                    .iter()
+                    .map(|s| Lane {
+                        queue: VecDeque::new(),
+                        bucket: TokenBucket::new(s.rate_per_sec, s.burst, now),
+                        cap: s.queue_cap.max(1),
+                        admitted: 0,
+                    })
+                    .collect(),
+                cursor: 0,
+                closing: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Admit one item for `tenant` (an index into the spec order), or
+    /// reject with a retry hint. `build` receives the tenant's
+    /// admission sequence number (0-based, assigned atomically with the
+    /// enqueue) and constructs the queued item. Bucket take, cap check,
+    /// sequence assignment, and enqueue are one atomic step.
+    pub fn try_admit_with(
+        &self,
+        tenant: usize,
+        build: impl FnOnce(u64) -> T,
+    ) -> Result<u64, Rejection> {
+        let now = Instant::now();
+        let mut st = lock(&self.state);
+        if st.closing {
+            return Err(Rejection::Draining);
+        }
+        let lane = &mut st.lanes[tenant];
+        if lane.queue.len() >= lane.cap {
+            let oldest = lane
+                .queue
+                .front()
+                .map(|(t, _)| now.saturating_duration_since(*t))
+                .unwrap_or_default();
+            return Err(Rejection::QueueFull {
+                retry_after: oldest.max(Duration::from_millis(1)),
+            });
+        }
+        lane.bucket
+            .try_take_at(now)
+            .map_err(|retry_after| Rejection::RateLimited { retry_after })?;
+        let seq = lane.admitted;
+        lane.admitted += 1;
+        lane.queue.push_back((now, build(seq)));
+        drop(st);
+        self.ready.notify_one();
+        Ok(seq)
+    }
+
+    /// Collect up to `max` items, round-robin across tenants: each
+    /// sweep takes at most one item per tenant, so no tenant can occupy
+    /// more than its share of a contended batch. Blocks while every
+    /// queue is empty (idle dispatch burns no CPU); once the queues are
+    /// closing it never blocks — leftovers come back as
+    /// [`FairBatch::Closing`] until an empty one signals full drain.
+    pub fn collect_fair(&self, max: usize) -> FairBatch<T> {
+        let mut st = lock(&self.state);
+        loop {
+            if st.lanes.iter().any(|l| !l.queue.is_empty()) {
+                break;
+            }
+            if st.closing {
+                return FairBatch::Closing(Vec::new());
+            }
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        let n = st.lanes.len();
+        let mut out = Vec::new();
+        'fill: loop {
+            let mut took_any = false;
+            for k in 0..n {
+                let i = (st.cursor + k) % n;
+                if let Some((_, item)) = st.lanes[i].queue.pop_front() {
+                    out.push(item);
+                    took_any = true;
+                    if out.len() >= max {
+                        st.cursor = (i + 1) % n;
+                        break 'fill;
+                    }
+                }
+            }
+            if !took_any {
+                break;
+            }
+        }
+        if st.closing {
+            FairBatch::Closing(out)
+        } else {
+            FairBatch::Batch(out)
+        }
+    }
+
+    /// Stop admitting; wake the dispatcher so it drains and exits.
+    pub fn close(&self) {
+        lock(&self.state).closing = true;
+        self.ready.notify_all();
+    }
+
+    /// Live pressure of one tenant's lane: queue depth and oldest-entry
+    /// age (None when empty).
+    pub fn pressure(&self, tenant: usize) -> (usize, Option<Duration>) {
+        let st = lock(&self.state);
+        let lane = &st.lanes[tenant];
+        let now = Instant::now();
+        (
+            lane.queue.len(),
+            lane.queue.front().map(|(t, _)| now.saturating_duration_since(*t)),
+        )
+    }
+
+    /// Total queued items across all tenants.
+    pub fn total_depth(&self) -> usize {
+        lock(&self.state).lanes.iter().map(|l| l.queue.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(n: usize) -> Vec<TenantSpec> {
+        (0..n).map(|i| TenantSpec::new(&format!("t{i}"), "pendulum")).collect()
+    }
+
+    #[test]
+    fn token_bucket_is_deterministic_under_synthetic_time() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0, t0);
+        // Burst of 2 from a full bucket, then rate-limited.
+        assert!(b.try_take_at(t0).is_ok());
+        assert!(b.try_take_at(t0).is_ok());
+        let wait = b.try_take_at(t0).unwrap_err();
+        // Refill at 10/s: one token in 100 ms.
+        assert!((wait.as_secs_f64() - 0.1).abs() < 1e-9, "{wait:?}");
+        // 150 ms later one token has refilled (capped below burst).
+        assert!(b.try_take_at(t0 + Duration::from_millis(150)).is_ok());
+        assert!(b.try_take_at(t0 + Duration::from_millis(150)).is_err());
+        // A long idle period refills only to burst, never beyond.
+        let later = t0 + Duration::from_secs(3600);
+        assert!(b.try_take_at(later).is_ok());
+        assert!(b.try_take_at(later).is_ok());
+        assert!(b.try_take_at(later).is_err());
+    }
+
+    #[test]
+    fn infinite_rate_never_limits_and_zero_rate_never_refills() {
+        let t0 = Instant::now();
+        let mut inf = TokenBucket::new(f64::INFINITY, 1.0, t0);
+        for _ in 0..10_000 {
+            assert!(inf.try_take_at(t0).is_ok());
+        }
+        let mut zero = TokenBucket::new(0.0, 1.0, t0);
+        assert!(zero.try_take_at(t0).is_ok());
+        let wait = zero.try_take_at(t0 + Duration::from_secs(100)).unwrap_err();
+        assert!(wait >= Duration::from_secs(60));
+    }
+
+    #[test]
+    fn queue_cap_sheds_with_pressure_derived_hint() {
+        let q: TenantQueues<u32> = TenantQueues::new(&[TenantSpec::new("a", "s")
+            .with_queue_cap(2)
+            .with_rate(f64::INFINITY, 1.0)]);
+        assert_eq!(q.try_admit_with(0, |_| 1).unwrap(), 0);
+        assert_eq!(q.try_admit_with(0, |_| 2).unwrap(), 1);
+        match q.try_admit_with(0, |_| 3) {
+            Err(Rejection::QueueFull { retry_after }) => {
+                assert!(retry_after >= Duration::from_millis(1));
+            }
+            other => panic!("expected QueueFull, got {:?}", other.map(|_| ())),
+        }
+        let (depth, oldest) = q.pressure(0);
+        assert_eq!(depth, 2);
+        assert!(oldest.is_some());
+    }
+
+    #[test]
+    fn collect_fair_interleaves_tenants_round_robin() {
+        let q: TenantQueues<(usize, u64)> = TenantQueues::new(&specs(3));
+        // Tenant 0 floods; tenants 1 and 2 each queue a couple.
+        for _ in 0..100 {
+            q.try_admit_with(0, |seq| (0, seq)).unwrap();
+        }
+        for t in [1usize, 2] {
+            for _ in 0..2 {
+                q.try_admit_with(t, |seq| (t, seq)).unwrap();
+            }
+        }
+        let batch = match q.collect_fair(6) {
+            FairBatch::Batch(b) => b,
+            FairBatch::Closing(_) => panic!("not closing"),
+        };
+        // Two full sweeps: every tenant appears twice, in rotation — the
+        // flooder cannot occupy the whole batch.
+        let owners: Vec<usize> = batch.iter().map(|&(t, _)| t).collect();
+        assert_eq!(owners, vec![0, 1, 2, 0, 1, 2]);
+        // Within a tenant, FIFO order (sequence numbers ascend).
+        assert_eq!(batch[0].1, 0);
+        assert_eq!(batch[3].1, 1);
+        // The flooder's backlog is intact minus its fair share.
+        assert_eq!(q.total_depth(), 100 - 2);
+    }
+
+    #[test]
+    fn cursor_rotates_between_batches() {
+        let q: TenantQueues<usize> = TenantQueues::new(&specs(2));
+        for _ in 0..4 {
+            q.try_admit_with(0, |_| 0).unwrap();
+            q.try_admit_with(1, |_| 1).unwrap();
+        }
+        // A max-1 batch takes from one tenant and advances the cursor,
+        // so the next batch starts at the other tenant.
+        let first = match q.collect_fair(1) {
+            FairBatch::Batch(b) => b[0],
+            _ => panic!(),
+        };
+        let second = match q.collect_fair(1) {
+            FairBatch::Batch(b) => b[0],
+            _ => panic!(),
+        };
+        assert_ne!(first, second, "consecutive 1-item batches must rotate tenants");
+    }
+
+    #[test]
+    fn closing_drains_then_signals_done_and_rejects_new_work() {
+        let q: TenantQueues<u64> = TenantQueues::new(&specs(1));
+        q.try_admit_with(0, |seq| seq).unwrap();
+        q.try_admit_with(0, |seq| seq).unwrap();
+        q.close();
+        assert!(matches!(q.try_admit_with(0, |seq| seq), Err(Rejection::Draining)));
+        match q.collect_fair(16) {
+            FairBatch::Closing(v) => assert_eq!(v, vec![0, 1]),
+            FairBatch::Batch(_) => panic!("closing queues must report Closing"),
+        }
+        match q.collect_fair(16) {
+            FairBatch::Closing(v) => assert!(v.is_empty(), "fully drained"),
+            FairBatch::Batch(_) => panic!("closing queues must report Closing"),
+        }
+    }
+
+    #[test]
+    fn rejection_hints_clamp_to_sane_milliseconds() {
+        assert_eq!(
+            Rejection::RateLimited { retry_after: Duration::from_micros(10) }.retry_after_ms(),
+            1
+        );
+        assert_eq!(
+            Rejection::QueueFull { retry_after: Duration::from_secs(3600) }.retry_after_ms(),
+            60_000
+        );
+        assert_eq!(Rejection::Draining.retry_after_ms(), 0);
+    }
+
+    #[test]
+    fn deadline_expiry_and_remaining() {
+        let d = Deadline::after(Duration::from_secs(3600));
+        assert!(!d.expired());
+        assert!(d.remaining() > Duration::from_secs(3599));
+        let past = Deadline::at(Instant::now() - Duration::from_secs(1));
+        assert!(past.expired());
+        assert_eq!(past.remaining(), Duration::ZERO);
+    }
+}

@@ -3,7 +3,54 @@
 //! latency/throughput knob of serving systems, applied to sensor samples.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Observable queue pressure for a channel-fed batcher: depth and
+/// oldest-entry age, maintained by the enqueue/dequeue sites around the
+/// opaque `mpsc` channel (which exposes neither). Admission control and
+/// metrics read *real* pressure from this instead of guessing.
+///
+/// The gauge tracks enqueue timestamps in FIFO order; `on_dequeue(n)`
+/// retires the `n` oldest. Both sides are O(1) amortized behind one
+/// short-lived lock, so the gauge adds no contention to the hot path.
+#[derive(Debug, Default)]
+pub struct QueueGauge {
+    inner: Mutex<std::collections::VecDeque<Instant>>,
+}
+
+impl QueueGauge {
+    pub fn new() -> QueueGauge {
+        QueueGauge::default()
+    }
+
+    /// Record one item entering the queue (call at the send site).
+    pub fn on_enqueue(&self) {
+        self.lock().push_back(Instant::now());
+    }
+
+    /// Record `n` items leaving the queue (call at the collect site).
+    pub fn on_dequeue(&self, n: usize) {
+        let mut q = self.lock();
+        for _ in 0..n.min(q.len()) {
+            q.pop_front();
+        }
+    }
+
+    /// Items currently queued.
+    pub fn depth(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Age of the oldest queued item; `None` when the queue is empty.
+    pub fn oldest_age(&self) -> Option<Duration> {
+        self.lock().front().map(Instant::elapsed)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, std::collections::VecDeque<Instant>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
 
 /// Outcome of one batch collection.
 pub enum BatchOutcome<T> {
@@ -110,6 +157,49 @@ mod tests {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
         assert!(matches!(collect(&rx, 4, Duration::from_millis(5)), BatchOutcome::Closed(_)));
+    }
+
+    #[test]
+    fn gauge_tracks_depth_and_oldest_age_fifo() {
+        let g = QueueGauge::new();
+        assert_eq!(g.depth(), 0);
+        assert_eq!(g.oldest_age(), None);
+        g.on_enqueue();
+        std::thread::sleep(Duration::from_millis(2));
+        g.on_enqueue();
+        assert_eq!(g.depth(), 2);
+        let oldest = g.oldest_age().unwrap();
+        assert!(oldest >= Duration::from_millis(2), "{oldest:?}");
+        // FIFO retire: after one dequeue the younger entry remains.
+        g.on_dequeue(1);
+        assert_eq!(g.depth(), 1);
+        assert!(g.oldest_age().unwrap() < oldest);
+        // Over-dequeue is clamped, not a panic.
+        g.on_dequeue(10);
+        assert_eq!(g.depth(), 0);
+        assert_eq!(g.oldest_age(), None);
+    }
+
+    /// Regression (PR 5 semantics): wiring a gauge around `collect` must
+    /// not change zero-linger drain behavior — ready items still come
+    /// back as one whole batch, and the gauge sees them retire together.
+    #[test]
+    fn gauged_zero_linger_drain_is_unchanged() {
+        let g = QueueGauge::new();
+        let (tx, rx) = mpsc::channel();
+        for i in 0..6 {
+            tx.send(i).unwrap();
+            g.on_enqueue();
+        }
+        assert_eq!(g.depth(), 6);
+        match collect(&rx, 8, Duration::ZERO) {
+            BatchOutcome::Batch(b) => {
+                g.on_dequeue(b.len());
+                assert_eq!(b, vec![0, 1, 2, 3, 4, 5], "zero linger must still drain whole");
+            }
+            _ => panic!("expected a batch"),
+        }
+        assert_eq!(g.depth(), 0);
     }
 
     #[test]

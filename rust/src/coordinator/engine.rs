@@ -1,0 +1,819 @@
+//! The traffic dispatch engine: admission-controlled, deadline-aware,
+//! panic-containing request dispatch over one warm [`ServeSet`].
+//!
+//! This is the layer between the network frontend
+//! ([`super::net`]) and the compute substrate: requests from any
+//! transport are [`TrafficEngine::submit`]ted with a tenant identity, a
+//! payload, and a deadline; they pass per-tenant admission control
+//! ([`super::admission`]) and land in bounded per-tenant queues; one
+//! dispatcher thread collects fair round-robin batches, drops expired
+//! work *at dequeue* (answered `DeadlineExceeded`, never computed),
+//! executes Π inference batches per system through the cycle-accurate
+//! RTL simulator and power requests through the cross-system grouped
+//! dispatch, and answers every admitted request with exactly one
+//! [`TrafficReply`] — including when the computation panics
+//! (`catch_unwind` → [`ServeError::WorkerPanicked`], the engine keeps
+//! serving other tenants).
+//!
+//! Fault injection ([`super::faults::FaultPlan`]) hooks in at compute
+//! time, so the e2e harness and soak bench exercise exactly these
+//! containment paths deterministically.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::admission::{AdmissionConfig, Deadline, FairBatch, TenantQueues, TenantSpec};
+use super::error::ServeError;
+use super::faults::{FaultAction, FaultPlan};
+use super::metrics::{LatencyHistogram, TenantTraffic, TrafficCounters, TrafficReport};
+use super::pipeline::{
+    estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
+};
+use super::serveset::{ServeSet, SystemHandle};
+use crate::rtl::{self, PiModuleDesign};
+use crate::synth::{LaneWidth, Netlist};
+
+/// What a traffic request asks the engine to compute.
+#[derive(Clone, Debug)]
+pub enum RequestPayload {
+    /// Π inference on one quantized observation (port-order Q16.15 raw
+    /// values), computed by the cycle-accurate RTL simulation of the
+    /// tenant's synthesized hardware.
+    Pi { values_q: Vec<i64> },
+    /// Power estimation under one stimulus seed + clock frequency.
+    Power(PowerRequest),
+}
+
+/// The engine's answer to one [`RequestPayload`].
+#[derive(Clone, Debug)]
+pub enum TrafficResponse {
+    /// Π products plus the hardware cycles one activation costs.
+    Pi { pis: Vec<i64>, hw_cycles: u64 },
+    Power(PowerEstimate),
+    /// Free-form text (stats/health introspection).
+    Text(String),
+}
+
+/// Exactly one of these answers every submitted request.
+#[derive(Clone, Debug)]
+pub struct TrafficReply {
+    /// Caller-chosen correlation id, echoed verbatim.
+    pub id: u64,
+    pub result: Result<TrafficResponse, ServeError>,
+}
+
+/// Engine tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Activations per power estimate (gate-sim stimulus length).
+    pub activations: u32,
+    /// Max requests per fair dispatch batch; 0 = `lanes × systems`.
+    pub max_batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { activations: 4, max_batch: 0 }
+    }
+}
+
+/// One admitted request waiting in its tenant's queue.
+struct Item {
+    tenant: usize,
+    seq: u64,
+    deadline: Deadline,
+    payload: RequestPayload,
+    id: u64,
+    reply: Sender<TrafficReply>,
+    /// Admission instant — served latency is queue-to-answer.
+    t0: Instant,
+}
+
+struct MetricsState {
+    tenants: Vec<(TrafficCounters, LatencyHistogram)>,
+    tenant_unknown: u64,
+    disconnects: u64,
+    undelivered: u64,
+}
+
+/// Everything the submit path and the dispatcher share.
+struct Inner {
+    specs: Vec<TenantSpec>,
+    /// tenant name → index into `specs` (= queue lane index).
+    tenant_idx: HashMap<String, usize>,
+    /// tenant index → serve-set system index.
+    tenant_system: Vec<usize>,
+    handles: Vec<SystemHandle>,
+    width: LaneWidth,
+    queues: TenantQueues<Item>,
+    metrics: Mutex<MetricsState>,
+    faults: FaultPlan,
+    default_deadline: Duration,
+    activations: u32,
+}
+
+/// The running engine: admission + queues + one dispatcher thread.
+pub struct TrafficEngine {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    started: Instant,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn panic_reason(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+impl TrafficEngine {
+    /// Validate the tenant roster against the serve set and start the
+    /// dispatcher. Tenant names must be unique; every tenant's `system`
+    /// must be served by `set`.
+    pub fn start(
+        set: &ServeSet,
+        admission: AdmissionConfig,
+        config: EngineConfig,
+        faults: FaultPlan,
+    ) -> anyhow::Result<TrafficEngine> {
+        anyhow::ensure!(!admission.tenants.is_empty(), "traffic engine needs at least one tenant");
+        let mut tenant_idx = HashMap::new();
+        let mut tenant_system = Vec::with_capacity(admission.tenants.len());
+        for (i, spec) in admission.tenants.iter().enumerate() {
+            anyhow::ensure!(
+                tenant_idx.insert(spec.name.clone(), i).is_none(),
+                "duplicate tenant `{}`",
+                spec.name
+            );
+            let sys = set.system_index(&spec.system).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "tenant `{}` targets system `{}`, which this serve set does not serve",
+                    spec.name,
+                    spec.system
+                )
+            })?;
+            tenant_system.push(sys);
+        }
+        let handles: Vec<SystemHandle> =
+            (0..set.len()).map(|i| set.handle_at(i).clone()).collect();
+        let max_batch = if config.max_batch == 0 {
+            set.lane_width().lanes() * handles.len()
+        } else {
+            config.max_batch
+        };
+        let inner = Arc::new(Inner {
+            queues: TenantQueues::new(&admission.tenants),
+            metrics: Mutex::new(MetricsState {
+                tenants: admission
+                    .tenants
+                    .iter()
+                    .map(|_| (TrafficCounters::default(), LatencyHistogram::new()))
+                    .collect(),
+                tenant_unknown: 0,
+                disconnects: 0,
+                undelivered: 0,
+            }),
+            specs: admission.tenants,
+            tenant_idx,
+            tenant_system,
+            handles,
+            width: set.lane_width(),
+            faults,
+            default_deadline: admission.default_deadline,
+            activations: config.activations,
+        });
+        let worker = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("dimsynth-traffic".to_string())
+                .spawn(move || dispatch_loop(&inner, max_batch))?
+        };
+        Ok(TrafficEngine {
+            inner,
+            worker: Mutex::new(Some(worker)),
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one request on behalf of `tenant`. On success the request
+    /// is queued and **will** be answered with exactly one
+    /// [`TrafficReply`] on `reply`; the returned value is the tenant's
+    /// admission sequence number (what [`FaultPlan`] keys on). On
+    /// `Err`, nothing was queued and **no** reply will be sent — the
+    /// caller owns surfacing the error (the net frontend encodes it
+    /// straight onto the wire).
+    pub fn submit(
+        &self,
+        tenant: &str,
+        payload: RequestPayload,
+        deadline: Option<Duration>,
+        id: u64,
+        reply: Sender<TrafficReply>,
+    ) -> Result<u64, ServeError> {
+        let inner = &self.inner;
+        let Some(&t) = inner.tenant_idx.get(tenant) else {
+            lock(&inner.metrics).tenant_unknown += 1;
+            return Err(ServeError::TenantUnknown { tenant: tenant.to_string() });
+        };
+        if let Err(e) = validate(inner, t, &payload) {
+            lock(&inner.metrics).tenants[t].0.protocol_errors += 1;
+            return Err(e);
+        }
+        let budget = deadline.unwrap_or(inner.default_deadline);
+        let admitted = inner.queues.try_admit_with(t, |seq| Item {
+            tenant: t,
+            seq,
+            deadline: Deadline::after(budget),
+            payload,
+            id,
+            reply,
+            t0: Instant::now(),
+        });
+        match admitted {
+            Ok(seq) => {
+                lock(&inner.metrics).tenants[t].0.admitted += 1;
+                Ok(seq)
+            }
+            Err(rejection) => {
+                lock(&inner.metrics).tenants[t].0.shed += 1;
+                Err(ServeError::Shed { retry_after_ms: rejection.retry_after_ms() })
+            }
+        }
+    }
+
+    /// Count a connection that dropped mid-request (net layer).
+    pub fn note_disconnect(&self) {
+        lock(&self.inner.metrics).disconnects += 1;
+    }
+
+    /// Count answers that could not be delivered (net layer).
+    pub fn note_undelivered(&self, n: u64) {
+        lock(&self.inner.metrics).undelivered += n;
+    }
+
+    /// Live pressure of one tenant's queue (depth, oldest age).
+    pub fn pressure(&self, tenant: &str) -> Option<(usize, Option<Duration>)> {
+        self.inner.tenant_idx.get(tenant).map(|&t| self.inner.queues.pressure(t))
+    }
+
+    /// Live snapshot of counters, latency, and queue pressure.
+    pub fn report(&self) -> TrafficReport {
+        self.snapshot(false)
+    }
+
+    fn snapshot(&self, engine_panicked: bool) -> TrafficReport {
+        let inner = &self.inner;
+        let m = lock(&inner.metrics);
+        let tenants = inner
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let (depth, oldest) = inner.queues.pressure(i);
+                TenantTraffic {
+                    tenant: spec.name.clone(),
+                    counters: m.tenants[i].0.clone(),
+                    latency: m.tenants[i].1.clone(),
+                    queue_depth: depth,
+                    queue_oldest_ms: oldest.map(|d| d.as_millis() as u64).unwrap_or(0),
+                }
+            })
+            .collect();
+        TrafficReport {
+            tenants,
+            tenant_unknown: m.tenant_unknown,
+            disconnects: m.disconnects,
+            undelivered: m.undelivered,
+            wall: self.started.elapsed(),
+            engine_panicked,
+        }
+    }
+
+    /// The live report, rendered (wire `stats` requests).
+    pub fn stats_text(&self) -> String {
+        self.report().to_string()
+    }
+
+    /// One-line liveness summary (wire `health` requests).
+    pub fn health_text(&self) -> String {
+        format!(
+            "ok: {} systems, {} tenants, {} queued, up {:.1} s",
+            self.inner.handles.len(),
+            self.inner.specs.len(),
+            self.inner.queues.total_depth(),
+            self.started.elapsed().as_secs_f64()
+        )
+    }
+
+    /// Graceful drain: stop admitting, let the dispatcher answer
+    /// everything still queued, join it, and return the final report.
+    /// If the dispatcher itself died by panic, leftover queued requests
+    /// are answered `WorkerPanicked` here (the no-silent-drop invariant
+    /// holds even then) and the report says so loudly.
+    pub fn shutdown(&self) -> TrafficReport {
+        self.inner.queues.close();
+        let engine_panicked =
+            matches!(lock(&self.worker).take().map(JoinHandle::join), Some(Err(_)));
+        if engine_panicked {
+            // Janitor sweep: the dispatcher died mid-flight, so its
+            // queues may still hold admitted-but-unanswered work.
+            loop {
+                let batch = match self.inner.queues.collect_fair(usize::MAX) {
+                    FairBatch::Closing(b) | FairBatch::Batch(b) => b,
+                };
+                if batch.is_empty() {
+                    break;
+                }
+                for item in batch {
+                    finish(
+                        &self.inner,
+                        item,
+                        Err(ServeError::WorkerPanicked {
+                            reason: "dispatch engine panicked".to_string(),
+                        }),
+                    );
+                }
+            }
+        }
+        self.snapshot(engine_panicked)
+    }
+}
+
+/// Reject malformed payloads before they are admitted: wrong port
+/// count or a non-physical clock can never compute, so they are
+/// answered `Protocol` at the door instead of poisoning a batch.
+fn validate(inner: &Inner, tenant: usize, payload: &RequestPayload) -> Result<(), ServeError> {
+    let handle = &inner.handles[inner.tenant_system[tenant]];
+    match payload {
+        RequestPayload::Pi { values_q } => {
+            let want = handle.design().num_inputs();
+            if values_q.len() != want {
+                return Err(ServeError::Protocol {
+                    detail: format!(
+                        "system `{}` has {} ports, request carries {} values",
+                        handle.system(),
+                        want,
+                        values_q.len()
+                    ),
+                });
+            }
+        }
+        RequestPayload::Power(r) => {
+            if !r.f_hz.is_finite() || r.f_hz <= 0.0 {
+                return Err(ServeError::Protocol {
+                    detail: format!("clock frequency {} Hz is not physical", r.f_hz),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Record the outcome and deliver the reply (exactly once per admitted
+/// item). A receiver that has gone away is counted, not an error.
+fn finish(inner: &Inner, item: Item, result: Result<TrafficResponse, ServeError>) {
+    {
+        let mut m = lock(&inner.metrics);
+        let (counters, latency) = &mut m.tenants[item.tenant];
+        match &result {
+            Ok(_) => {
+                counters.served += 1;
+                latency.record(item.t0.elapsed());
+            }
+            Err(ServeError::DeadlineExceeded) => counters.deadline_expired += 1,
+            Err(ServeError::WorkerPanicked { .. }) => counters.panicked += 1,
+            // Post-admission items only fail in the two ways above.
+            Err(_) => {}
+        }
+    }
+    if item.reply.send(TrafficReply { id: item.id, result }).is_err() {
+        lock(&inner.metrics).undelivered += 1;
+    }
+}
+
+fn dispatch_loop(inner: &Inner, max_batch: usize) {
+    loop {
+        let batch = match inner.queues.collect_fair(max_batch) {
+            FairBatch::Batch(b) => b,
+            // Draining: process leftovers until the empty batch that
+            // signals full drain.
+            FairBatch::Closing(b) => {
+                if b.is_empty() {
+                    return;
+                }
+                b
+            }
+        };
+        process_batch(inner, batch);
+    }
+}
+
+fn process_batch(inner: &Inner, batch: Vec<Item>) {
+    // Partition at dequeue: expired work is answered, never computed;
+    // fault-flagged work computes individually so an injected panic
+    // takes down exactly one request; the rest batches per kind.
+    let mut pi_by_system: HashMap<usize, Vec<Item>> = HashMap::new();
+    let mut power_items: Vec<Item> = Vec::new();
+    for item in batch {
+        if item.deadline.expired() {
+            finish(inner, item, Err(ServeError::DeadlineExceeded));
+            continue;
+        }
+        let tenant_name = &inner.specs[item.tenant].name;
+        if let Some(action) = inner.faults.action(tenant_name, item.seq) {
+            compute_faulted(inner, item, action);
+            continue;
+        }
+        match item.payload {
+            RequestPayload::Pi { .. } => pi_by_system
+                .entry(inner.tenant_system[item.tenant])
+                .or_default()
+                .push(item),
+            RequestPayload::Power(_) => power_items.push(item),
+        }
+    }
+
+    // Π inference: one cycle-accurate batch per target system.
+    let mut systems: Vec<usize> = pi_by_system.keys().copied().collect();
+    systems.sort_unstable(); // deterministic dispatch order
+    for sys in systems {
+        let items = pi_by_system.remove(&sys).unwrap();
+        let design = inner.handles[sys].design();
+        let samples: Vec<&[i64]> = items
+            .iter()
+            .map(|i| match &i.payload {
+                RequestPayload::Pi { values_q } => values_q.as_slice(),
+                RequestPayload::Power(_) => unreachable!("partitioned above"),
+            })
+            .collect();
+        let outcome = catch_unwind(AssertUnwindSafe(|| rtl::run_batch(design, &samples)));
+        match outcome {
+            Ok(result) => {
+                for (item, pis) in items.into_iter().zip(result.outputs) {
+                    finish(
+                        inner,
+                        item,
+                        Ok(TrafficResponse::Pi { pis, hw_cycles: result.cycles_per_sample }),
+                    );
+                }
+            }
+            Err(e) => {
+                let reason = panic_reason(e);
+                for item in items {
+                    finish(
+                        inner,
+                        item,
+                        Err(ServeError::WorkerPanicked { reason: reason.clone() }),
+                    );
+                }
+            }
+        }
+    }
+
+    // Power estimation: one cross-system grouped dispatch for the whole
+    // batch (the lane-packing path the shared frontend exists for).
+    if !power_items.is_empty() {
+        let targets: Vec<(&Netlist, &PiModuleDesign)> =
+            inner.handles.iter().map(|h| (h.netlist(), h.design())).collect();
+        let tagged: Vec<SystemPowerRequest> = power_items
+            .iter()
+            .map(|i| match &i.payload {
+                RequestPayload::Power(r) => SystemPowerRequest {
+                    system: inner.tenant_system[i.tenant],
+                    request: *r,
+                },
+                RequestPayload::Pi { .. } => unreachable!("partitioned above"),
+            })
+            .collect();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            estimate_power_requests_grouped(&targets, &tagged, inner.activations, inner.width)
+        }));
+        match outcome {
+            Ok(estimates) => {
+                for (item, est) in power_items.into_iter().zip(estimates) {
+                    finish(inner, item, Ok(TrafficResponse::Power(est)));
+                }
+            }
+            Err(e) => {
+                let reason = panic_reason(e);
+                for item in power_items {
+                    finish(
+                        inner,
+                        item,
+                        Err(ServeError::WorkerPanicked { reason: reason.clone() }),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Compute one fault-flagged request in isolation. A `Delay` sleeps
+/// first (the slow-tenant injection) and re-checks the deadline after —
+/// still "dropped before compute". A `Panic` fires inside the same
+/// containment the real compute runs under.
+fn compute_faulted(inner: &Inner, item: Item, action: FaultAction) {
+    if let FaultAction::Delay(d) = action {
+        std::thread::sleep(d);
+        if item.deadline.expired() {
+            finish(inner, item, Err(ServeError::DeadlineExceeded));
+            return;
+        }
+    }
+    let sys = inner.tenant_system[item.tenant];
+    let handle = &inner.handles[sys];
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if action == FaultAction::Panic {
+            panic!(
+                "injected fault: tenant `{}` request {}",
+                inner.specs[item.tenant].name, item.seq
+            );
+        }
+        match &item.payload {
+            RequestPayload::Pi { values_q } => {
+                let result = rtl::run_batch(handle.design(), &[values_q.as_slice()]);
+                TrafficResponse::Pi {
+                    pis: result.outputs.into_iter().next().unwrap_or_default(),
+                    hw_cycles: result.cycles_per_sample,
+                }
+            }
+            RequestPayload::Power(r) => {
+                let targets = [(handle.netlist(), handle.design())];
+                let tagged = [SystemPowerRequest { system: 0, request: *r }];
+                let est =
+                    estimate_power_requests_grouped(&targets, &tagged, inner.activations, inner.width)
+                        .into_iter()
+                        .next()
+                        .expect("one estimate per request");
+                TrafficResponse::Power(est)
+            }
+        }
+    }));
+    match outcome {
+        Ok(resp) => finish(inner, item, Ok(resp)),
+        Err(e) => {
+            finish(inner, item, Err(ServeError::WorkerPanicked { reason: panic_reason(e) }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::Q16_15;
+    use crate::flow::FlowConfig;
+    use std::sync::mpsc;
+
+    fn boot_engine(
+        tenants: Vec<TenantSpec>,
+        faults: FaultPlan,
+    ) -> (ServeSet, TrafficEngine) {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let engine = TrafficEngine::start(
+            &set,
+            AdmissionConfig { tenants, default_deadline: Duration::from_secs(5) },
+            EngineConfig::default(),
+            faults,
+        )
+        .unwrap();
+        (set, engine)
+    }
+
+    fn pi_payload(set: &ServeSet) -> RequestPayload {
+        let n = set.handle_at(0).design().num_inputs();
+        RequestPayload::Pi {
+            values_q: (0..n).map(|i| Q16_15.from_f64(0.75 + 0.5 * i as f64)).collect(),
+        }
+    }
+
+    #[test]
+    fn start_rejects_bad_rosters() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let err = TrafficEngine::start(
+            &set,
+            AdmissionConfig { tenants: vec![], default_deadline: Duration::from_secs(1) },
+            EngineConfig::default(),
+            FaultPlan::none(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("at least one tenant"), "{err}");
+        let dup = AdmissionConfig {
+            tenants: vec![TenantSpec::new("a", "pendulum"), TenantSpec::new("a", "pendulum")],
+            default_deadline: Duration::from_secs(1),
+        };
+        let err = TrafficEngine::start(&set, dup, EngineConfig::default(), FaultPlan::none())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate tenant"), "{err}");
+        let missing = AdmissionConfig {
+            tenants: vec![TenantSpec::new("a", "beam")],
+            default_deadline: Duration::from_secs(1),
+        };
+        let err =
+            TrafficEngine::start(&set, missing, EngineConfig::default(), FaultPlan::none())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("beam"), "{err}");
+    }
+
+    #[test]
+    fn serves_pi_and_power_with_typed_refusals() {
+        let (set, engine) =
+            boot_engine(vec![TenantSpec::new("t", "pendulum")], FaultPlan::none());
+        let (tx, rx) = mpsc::channel();
+
+        // Unknown tenant: typed, no reply promised.
+        let err = engine
+            .submit("ghost", pi_payload(&set), None, 1, tx.clone())
+            .unwrap_err();
+        assert!(matches!(err, ServeError::TenantUnknown { .. }));
+
+        // Malformed Π request: wrong port count.
+        let err = engine
+            .submit("t", RequestPayload::Pi { values_q: vec![1] }, None, 2, tx.clone())
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Protocol { .. }));
+
+        // Malformed power request: non-physical clock.
+        let err = engine
+            .submit(
+                "t",
+                RequestPayload::Power(PowerRequest { seed: 1, f_hz: f64::NAN }),
+                None,
+                3,
+                tx.clone(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Protocol { .. }));
+
+        // A well-formed Π request is served with hardware cycles.
+        engine.submit("t", pi_payload(&set), None, 10, tx.clone()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(reply.id, 10);
+        match reply.result.unwrap() {
+            TrafficResponse::Pi { pis, hw_cycles } => {
+                assert_eq!(pis.len(), set.handle_at(0).design().num_outputs());
+                assert!(hw_cycles > 0);
+            }
+            other => panic!("expected Pi, got {other:?}"),
+        }
+
+        // A power request runs through the grouped dispatch.
+        engine
+            .submit(
+                "t",
+                RequestPayload::Power(PowerRequest { seed: 7, f_hz: 6.0e6 }),
+                None,
+                11,
+                tx,
+            )
+            .unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match reply.result.unwrap() {
+            TrafficResponse::Power(est) => {
+                assert!(est.mw > 0.0);
+                assert!(est.cycles > 0);
+            }
+            other => panic!("expected Power, got {other:?}"),
+        }
+
+        let report = engine.shutdown();
+        assert!(!report.engine_panicked);
+        let t = report.tenant("t").unwrap();
+        assert_eq!(t.counters.served, 2);
+        assert_eq!(t.counters.admitted, 2);
+        assert_eq!(t.counters.protocol_errors, 2);
+        assert_eq!(t.counters.terminal(), t.counters.admitted);
+        assert_eq!(report.tenant_unknown, 1);
+    }
+
+    #[test]
+    fn injected_panic_is_contained_and_typed() {
+        let (set, engine) = boot_engine(
+            vec![TenantSpec::new("t", "pendulum")],
+            FaultPlan::none().panic_at("t", 1),
+        );
+        let (tx, rx) = mpsc::channel();
+        for id in 0..3u64 {
+            engine.submit("t", pi_payload(&set), None, id, tx.clone()).unwrap();
+        }
+        let mut ok = 0;
+        let mut panicked = 0;
+        for _ in 0..3 {
+            let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            match reply.result {
+                Ok(_) => ok += 1,
+                Err(ServeError::WorkerPanicked { reason }) => {
+                    assert!(reason.contains("injected fault"), "{reason}");
+                    assert_eq!(reply.id, 1, "the fault keys on admission seq 1");
+                    panicked += 1;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!((ok, panicked), (2, 1));
+        // The engine survived: it still serves after the panic.
+        engine.submit("t", pi_payload(&set), None, 99, tx).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(30)).unwrap().result.is_ok());
+        let report = engine.shutdown();
+        assert!(!report.engine_panicked);
+        assert_eq!(report.tenant("t").unwrap().counters.panicked, 1);
+    }
+
+    #[test]
+    fn expired_work_is_dropped_at_dequeue_not_computed() {
+        // A 3 ms tenant-wide delay against a 1 ms budget: the first
+        // request's sleep expires its own deadline, and everything
+        // queued behind it ages out too.
+        let (set, engine) = boot_engine(
+            vec![TenantSpec::new("t", "pendulum")],
+            FaultPlan::none().delay_all("t", Duration::from_millis(3)),
+        );
+        let (tx, rx) = mpsc::channel();
+        for id in 0..4u64 {
+            engine
+                .submit("t", pi_payload(&set), Some(Duration::from_millis(1)), id, tx.clone())
+                .unwrap();
+        }
+        for _ in 0..4 {
+            let reply = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(reply.result.unwrap_err(), ServeError::DeadlineExceeded);
+        }
+        let report = engine.shutdown();
+        let t = report.tenant("t").unwrap();
+        assert_eq!(t.counters.deadline_expired, 4);
+        assert_eq!(t.counters.terminal(), t.counters.admitted);
+    }
+
+    #[test]
+    fn queue_cap_sheds_and_drain_answers_everything() {
+        let (set, engine) = boot_engine(
+            vec![TenantSpec::new("t", "pendulum")
+                .with_queue_cap(2)
+                .with_rate(f64::INFINITY, 1.0)],
+            // Slow every request down so the queue actually fills.
+            FaultPlan::none().delay_all("t", Duration::from_millis(20)),
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut admitted = 0u64;
+        let mut shed = 0u64;
+        for id in 0..40u64 {
+            match engine.submit("t", pi_payload(&set), None, id, tx.clone()) {
+                Ok(_) => admitted += 1,
+                Err(ServeError::Shed { retry_after_ms }) => {
+                    assert!(retry_after_ms >= 1);
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(shed > 0, "40 instant submits against a cap-2 queue must shed");
+        // Graceful drain: every admitted request still gets its answer.
+        let report = engine.shutdown();
+        let mut answered = 0;
+        while rx.try_recv().is_ok() {
+            answered += 1;
+        }
+        assert_eq!(answered, admitted);
+        let t = report.tenant("t").unwrap();
+        assert_eq!(t.counters.admitted, admitted);
+        assert_eq!(t.counters.shed, shed);
+        assert_eq!(t.counters.terminal(), admitted);
+        assert_eq!(t.queue_depth, 0, "drain leaves nothing queued");
+    }
+
+    #[test]
+    fn draining_engine_sheds_new_work_with_zero_hint() {
+        let (set, engine) =
+            boot_engine(vec![TenantSpec::new("t", "pendulum")], FaultPlan::none());
+        engine.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        match engine.submit("t", pi_payload(&set), None, 1, tx) {
+            Err(ServeError::Shed { retry_after_ms }) => assert_eq!(retry_after_ms, 0),
+            other => panic!("expected Shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_and_stats_are_live() {
+        let (_set, engine) =
+            boot_engine(vec![TenantSpec::new("t", "pendulum")], FaultPlan::none());
+        assert!(engine.health_text().starts_with("ok:"));
+        assert!(engine.stats_text().contains("admitted"));
+        assert_eq!(engine.pressure("t").unwrap().0, 0);
+        assert!(engine.pressure("ghost").is_none());
+        engine.shutdown();
+    }
+}

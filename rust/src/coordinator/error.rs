@@ -1,0 +1,117 @@
+//! Typed serving-path errors: every way the traffic layer can refuse or
+//! fail a request, as an enum that maps 1:1 onto wire response codes.
+//!
+//! The serving path deliberately does **not** funnel these through
+//! `anyhow` — a network frontend needs to tell a shed apart from a
+//! deadline miss apart from a crashed worker *in machine-readable form*,
+//! because clients react differently to each (back off and retry,
+//! tighten the budget, page an operator). [`ServeError::code`] is the
+//! wire status byte ([`crate::coordinator::net`] encodes/decodes the
+//! per-variant payload around it); `0` on the wire means success and is
+//! never a `ServeError`.
+
+use std::fmt;
+
+/// Wire status code of a successful response (never a `ServeError`).
+pub const CODE_OK: u8 = 0;
+/// Wire status code of [`ServeError::Shed`].
+pub const CODE_SHED: u8 = 1;
+/// Wire status code of [`ServeError::DeadlineExceeded`].
+pub const CODE_DEADLINE: u8 = 2;
+/// Wire status code of [`ServeError::TenantUnknown`].
+pub const CODE_TENANT_UNKNOWN: u8 = 3;
+/// Wire status code of [`ServeError::WorkerPanicked`].
+pub const CODE_WORKER_PANICKED: u8 = 4;
+/// Wire status code of [`ServeError::Protocol`].
+pub const CODE_PROTOCOL: u8 = 5;
+
+/// A typed refusal or failure on the serving path. Every submitted
+/// request is answered with exactly one `Ok` response or exactly one of
+/// these — never a hang, never a silent drop.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Overload: admission control refused the request (token bucket
+    /// empty, per-tenant queue full, or the server is draining). The
+    /// hint tells a well-behaved client how long to back off before
+    /// retrying; it is derived from real queue pressure (oldest-entry
+    /// age / refill time), not a constant.
+    Shed { retry_after_ms: u32 },
+    /// The request's deadline expired before a worker got to it; the
+    /// work was dropped at dequeue, not computed.
+    DeadlineExceeded,
+    /// The named tenant is not registered with this serve set.
+    TenantUnknown { tenant: String },
+    /// The worker computing this request panicked; the panic was
+    /// contained and the request answered with the panic message.
+    WorkerPanicked { reason: String },
+    /// The request could not be decoded or failed validation (bad
+    /// frame, wrong port count, non-finite frequency, ...).
+    Protocol { detail: String },
+}
+
+impl ServeError {
+    /// The wire status byte this variant encodes to (1:1, stable).
+    pub fn code(&self) -> u8 {
+        match self {
+            ServeError::Shed { .. } => CODE_SHED,
+            ServeError::DeadlineExceeded => CODE_DEADLINE,
+            ServeError::TenantUnknown { .. } => CODE_TENANT_UNKNOWN,
+            ServeError::WorkerPanicked { .. } => CODE_WORKER_PANICKED,
+            ServeError::Protocol { .. } => CODE_PROTOCOL,
+        }
+    }
+
+    /// Short stable name of the variant, for logs and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Shed { .. } => "shed",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::TenantUnknown { .. } => "tenant_unknown",
+            ServeError::WorkerPanicked { .. } => "worker_panicked",
+            ServeError::Protocol { .. } => "protocol",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Shed { retry_after_ms } => {
+                write!(f, "shed by admission control (retry after {retry_after_ms} ms)")
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before dispatch"),
+            ServeError::TenantUnknown { tenant } => write!(f, "unknown tenant `{tenant}`"),
+            ServeError::WorkerPanicked { reason } => write!(f, "worker panicked: {reason}"),
+            ServeError::Protocol { detail } => write!(f, "protocol error: {detail}"),
+        }
+    }
+}
+
+impl From<ServeError> for anyhow::Error {
+    fn from(e: ServeError) -> anyhow::Error {
+        anyhow::anyhow!("{e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_distinct_and_stable() {
+        let all = [
+            ServeError::Shed { retry_after_ms: 5 },
+            ServeError::DeadlineExceeded,
+            ServeError::TenantUnknown { tenant: "x".into() },
+            ServeError::WorkerPanicked { reason: "r".into() },
+            ServeError::Protocol { detail: "d".into() },
+        ];
+        let codes: Vec<u8> = all.iter().map(ServeError::code).collect();
+        assert_eq!(codes, vec![1, 2, 3, 4, 5]);
+        for e in &all {
+            assert_ne!(e.code(), CODE_OK, "{e}");
+            assert!(!e.kind().is_empty());
+            assert!(!e.to_string().is_empty());
+        }
+    }
+}

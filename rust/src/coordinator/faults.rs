@@ -1,0 +1,117 @@
+//! Deterministic fault injection for the traffic layer.
+//!
+//! A serving stack's robustness claims are only as good as the worst
+//! traffic it has demonstrably survived, so the e2e harness and the
+//! soak bench drive the engine with *planned* hostility: a
+//! [`FaultPlan`] names exactly which requests are sabotaged and how,
+//! keyed on `(tenant, admission sequence)` — the per-tenant sequence
+//! number assigned atomically at admission
+//! ([`super::admission::TenantQueues::try_admit_with`]). Because a
+//! tenant's requests are admitted in submission order on one
+//! connection, the same plan + the same driver seed reproduces the same
+//! fault on the same request, run after run — no wall-clock races in
+//! the trigger.
+//!
+//! Faults fire *inside* the dispatch engine, at the point the request
+//! would compute: [`FaultAction::Panic`] panics on the worker (the
+//! containment path under test answers `WorkerPanicked`),
+//! [`FaultAction::Delay`] sleeps first (a slow tenant, for deadline and
+//! fairness tests). Mid-request disconnects are driven from the client
+//! side (drop the socket after reading a prefix of the responses) —
+//! the server-side behavior under test is counting the disconnect and
+//! absorbing the undeliverable answers.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// What to do to a sabotaged request at compute time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic on the dispatch worker while computing this request.
+    Panic,
+    /// Sleep this long before computing (a slow tenant / slow backend).
+    Delay(Duration),
+}
+
+/// A deterministic sabotage schedule for one engine run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Faults firing on one specific request: keyed by tenant name and
+    /// per-tenant admission sequence (0-based).
+    per_request: HashMap<(String, u64), FaultAction>,
+    /// Faults firing on *every* request of a tenant.
+    per_tenant: HashMap<String, FaultAction>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Panic while computing `tenant`'s request number `seq`.
+    pub fn panic_at(mut self, tenant: &str, seq: u64) -> FaultPlan {
+        self.per_request.insert((tenant.to_string(), seq), FaultAction::Panic);
+        self
+    }
+
+    /// Delay `tenant`'s request number `seq` by `d`.
+    pub fn delay_at(mut self, tenant: &str, seq: u64, d: Duration) -> FaultPlan {
+        self.per_request.insert((tenant.to_string(), seq), FaultAction::Delay(d));
+        self
+    }
+
+    /// Delay every request of `tenant` by `d` (a persistently slow
+    /// tenant).
+    pub fn delay_all(mut self, tenant: &str, d: Duration) -> FaultPlan {
+        self.per_tenant.insert(tenant.to_string(), FaultAction::Delay(d));
+        self
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.per_request.is_empty() && self.per_tenant.is_empty()
+    }
+
+    /// The fault (if any) for `tenant`'s request `seq`. Request-specific
+    /// faults shadow tenant-wide ones.
+    pub fn action(&self, tenant: &str, seq: u64) -> Option<FaultAction> {
+        self.per_request
+            .get(&(tenant.to_string(), seq))
+            .or_else(|| self.per_tenant.get(tenant))
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.action("anyone", 0), None);
+    }
+
+    #[test]
+    fn per_request_faults_key_on_tenant_and_sequence() {
+        let p = FaultPlan::none()
+            .panic_at("good", 17)
+            .delay_at("good", 3, Duration::from_millis(5));
+        assert!(!p.is_empty());
+        assert_eq!(p.action("good", 17), Some(FaultAction::Panic));
+        assert_eq!(p.action("good", 3), Some(FaultAction::Delay(Duration::from_millis(5))));
+        assert_eq!(p.action("good", 16), None);
+        assert_eq!(p.action("other", 17), None);
+    }
+
+    #[test]
+    fn tenant_wide_faults_apply_everywhere_but_yield_to_specific() {
+        let d = Duration::from_millis(2);
+        let p = FaultPlan::none().delay_all("slow", d).panic_at("slow", 9);
+        assert_eq!(p.action("slow", 0), Some(FaultAction::Delay(d)));
+        assert_eq!(p.action("slow", 1_000_000), Some(FaultAction::Delay(d)));
+        assert_eq!(p.action("slow", 9), Some(FaultAction::Panic), "specific shadows tenant-wide");
+    }
+}

@@ -26,9 +26,11 @@ impl LatencyHistogram {
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros() as u64;
         let b = (64 - us.max(1).leading_zeros() as u64).min(31) as usize;
-        self.buckets[b] += 1;
-        self.count += 1;
-        self.sum_us += us;
+        // Saturating: a histogram that has seen u64::MAX samples must
+        // degrade (pin at the ceiling), not abort the serving path.
+        self.buckets[b] = self.buckets[b].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum_us = self.sum_us.saturating_add(us);
         self.max_us = self.max_us.max(us);
     }
 
@@ -66,11 +68,134 @@ impl LatencyHistogram {
 
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
-        self.count += other.count;
-        self.sum_us += other.sum_us;
+        self.count = self.count.saturating_add(other.count);
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
         self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Outcome counters of the traffic layer, per tenant. Every admitted
+/// request lands in exactly one of `served`, `deadline_expired`, or
+/// `panicked`; `shed`/`protocol_errors` count requests refused at the
+/// door (answered but never admitted).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TrafficCounters {
+    /// Admitted into the tenant's queue (will get a terminal answer).
+    pub admitted: u64,
+    /// Computed and answered `Ok`.
+    pub served: u64,
+    /// Refused at admission (rate-limited, queue full, or draining).
+    pub shed: u64,
+    /// Dropped at dequeue because the deadline had already passed.
+    pub deadline_expired: u64,
+    /// Worker panicked while computing; answered `WorkerPanicked`.
+    pub panicked: u64,
+    /// Malformed or invalid requests (answered `Protocol`).
+    pub protocol_errors: u64,
+}
+
+impl TrafficCounters {
+    /// Terminal answers owed to admitted requests. Equal to `admitted`
+    /// once the server has drained — the no-silent-drop invariant.
+    pub fn terminal(&self) -> u64 {
+        self.served + self.deadline_expired + self.panicked
+    }
+
+    pub fn merge(&mut self, o: &TrafficCounters) {
+        self.admitted += o.admitted;
+        self.served += o.served;
+        self.shed += o.shed;
+        self.deadline_expired += o.deadline_expired;
+        self.panicked += o.panicked;
+        self.protocol_errors += o.protocol_errors;
+    }
+}
+
+/// One tenant's slice of a [`TrafficReport`]: counters, served-request
+/// latency, and the queue pressure observed at snapshot time.
+#[derive(Clone, Debug)]
+pub struct TenantTraffic {
+    pub tenant: String,
+    pub counters: TrafficCounters,
+    /// Queue-to-answer latency of served requests.
+    pub latency: LatencyHistogram,
+    /// Queue depth at snapshot time.
+    pub queue_depth: usize,
+    /// Age of the oldest queued entry at snapshot time (ms), 0 if empty.
+    pub queue_oldest_ms: u64,
+}
+
+/// Snapshot of the whole traffic layer: per-tenant slices plus the
+/// global counters that have no tenant to charge.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficReport {
+    pub tenants: Vec<TenantTraffic>,
+    /// Requests naming a tenant nobody registered.
+    pub tenant_unknown: u64,
+    /// Connections that dropped mid-request (their answers, if any,
+    /// were undeliverable).
+    pub disconnects: u64,
+    /// Computed answers that could not be delivered (receiver gone).
+    pub undelivered: u64,
+    pub wall: Duration,
+    /// The dispatch engine itself died by panic — per-tenant numbers
+    /// below are partial, not a clean record.
+    pub engine_panicked: bool,
+}
+
+impl TrafficReport {
+    /// Counters summed over all tenants.
+    pub fn totals(&self) -> TrafficCounters {
+        let mut t = TrafficCounters::default();
+        for s in &self.tenants {
+            t.merge(&s.counters);
+        }
+        t
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantTraffic> {
+        self.tenants.iter().find(|t| t.tenant == name)
+    }
+}
+
+impl std::fmt::Display for TrafficReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.engine_panicked {
+            writeln!(f, "engine:      PANICKED (counters below are partial)")?;
+        }
+        let tot = self.totals();
+        writeln!(
+            f,
+            "traffic:     {} admitted, {} served, {} shed, {} deadline-expired, {} panicked",
+            tot.admitted, tot.served, tot.shed, tot.deadline_expired, tot.panicked
+        )?;
+        writeln!(
+            f,
+            "errors:      {} protocol, {} unknown-tenant, {} disconnects, {} undelivered",
+            tot.protocol_errors, self.tenant_unknown, self.disconnects, self.undelivered
+        )?;
+        if !self.wall.is_zero() {
+            writeln!(f, "wall:        {:.3} s", self.wall.as_secs_f64())?;
+        }
+        for t in &self.tenants {
+            writeln!(
+                f,
+                "{:<12} {} served / {} admitted, {} shed · latency µs p50 {} p99 {} p999 {} max {} · queue {} (oldest {} ms)",
+                t.tenant,
+                t.counters.served,
+                t.counters.admitted,
+                t.counters.shed,
+                t.latency.percentile_us(0.50),
+                t.latency.percentile_us(0.99),
+                t.latency.percentile_us(0.999),
+                t.latency.max_us(),
+                t.queue_depth,
+                t.queue_oldest_ms
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -180,5 +305,129 @@ mod tests {
         let s = ServeStats { worker_panicked: true, ..ServeStats::default() };
         assert!(s.to_string().contains("PANICKED"));
         assert!(!ServeStats::default().worker_panicked);
+    }
+
+    #[test]
+    fn empty_window_every_percentile_is_zero() {
+        let h = LatencyHistogram::new();
+        for p in [0.0, 0.5, 0.95, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile_us(p), 0);
+        }
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_us(), 0);
+    }
+
+    #[test]
+    fn single_sample_pins_every_percentile() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(137));
+        // With one sample every percentile is that sample (clamped to
+        // the observed max, not the bucket's upper bound of 256).
+        for p in [0.5, 0.99, 0.999] {
+            assert_eq!(h.percentile_us(p), 137);
+        }
+        assert_eq!(h.mean_us(), 137.0);
+        assert_eq!(h.max_us(), 137);
+    }
+
+    #[test]
+    fn saturating_counts_never_wrap() {
+        let mut h = LatencyHistogram::new();
+        h.count = u64::MAX;
+        h.sum_us = u64::MAX - 1;
+        h.buckets[5] = u64::MAX;
+        h.record(Duration::from_micros(40)); // bucket 5: [32, 64)
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.sum_us, u64::MAX);
+        assert_eq!(h.buckets[5], u64::MAX);
+        // Merge saturates the same way.
+        let mut other = LatencyHistogram::new();
+        other.record(Duration::from_micros(40));
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.buckets[5], u64::MAX);
+    }
+
+    #[test]
+    fn percentiles_monotone_under_randomized_inserts() {
+        // Repo-standard deterministic PRNG; no rand crate.
+        let mut rng = crate::stim::Lfsr32::new(0x51_AB_2026);
+        for trial in 0..20 {
+            let mut h = LatencyHistogram::new();
+            let n = 1 + (rng.below(4000) as usize);
+            for _ in 0..n {
+                // Spread over ~6 decades of microseconds.
+                let us = 1u64 << rng.below(21);
+                h.record(Duration::from_micros(us + rng.below(us.min(1 << 20) as u32) as u64));
+            }
+            let p50 = h.percentile_us(0.50);
+            let p99 = h.percentile_us(0.99);
+            let p999 = h.percentile_us(0.999);
+            assert!(
+                p50 <= p99 && p99 <= p999,
+                "trial {trial}: p50 {p50} p99 {p99} p999 {p999} not monotone"
+            );
+            assert!(p999 <= h.max_us().max(1), "p999 exceeds observed max");
+        }
+    }
+
+    #[test]
+    fn traffic_counters_terminal_invariant_and_merge() {
+        let a = TrafficCounters {
+            admitted: 10,
+            served: 7,
+            deadline_expired: 2,
+            panicked: 1,
+            shed: 4,
+            protocol_errors: 3,
+        };
+        assert_eq!(a.terminal(), a.admitted);
+        let mut b = a.clone();
+        b.merge(&a);
+        assert_eq!(b.admitted, 20);
+        assert_eq!(b.terminal(), 20);
+        assert_eq!(b.shed, 8);
+    }
+
+    #[test]
+    fn traffic_report_totals_and_display() {
+        let mut lat = LatencyHistogram::new();
+        lat.record(Duration::from_micros(300));
+        let report = TrafficReport {
+            tenants: vec![
+                TenantTraffic {
+                    tenant: "good".into(),
+                    counters: TrafficCounters { admitted: 5, served: 5, ..Default::default() },
+                    latency: lat,
+                    queue_depth: 0,
+                    queue_oldest_ms: 0,
+                },
+                TenantTraffic {
+                    tenant: "flood".into(),
+                    counters: TrafficCounters {
+                        admitted: 3,
+                        served: 3,
+                        shed: 9,
+                        ..Default::default()
+                    },
+                    latency: LatencyHistogram::new(),
+                    queue_depth: 2,
+                    queue_oldest_ms: 12,
+                },
+            ],
+            tenant_unknown: 1,
+            ..Default::default()
+        };
+        let tot = report.totals();
+        assert_eq!(tot.admitted, 8);
+        assert_eq!(tot.shed, 9);
+        assert_eq!(report.tenant("flood").unwrap().queue_depth, 2);
+        assert!(report.tenant("nope").is_none());
+        let txt = report.to_string();
+        assert!(txt.contains("8 admitted"));
+        assert!(txt.contains("p999"));
+        assert!(!txt.contains("PANICKED"));
+        let loud = TrafficReport { engine_panicked: true, ..Default::default() };
+        assert!(loud.to_string().contains("PANICKED"));
     }
 }

@@ -15,13 +15,30 @@
 //! run through one global width-aware [`PowerBatcher`] that packs
 //! word-parallel lanes across systems.
 
+//! Network deployments add three layers in front of the engine:
+//! [`net`] (TCP framing + per-connection threads) → [`admission`]
+//! (per-tenant token buckets, bounded queues, deadlines) →
+//! [`engine`] (fair dispatch with typed [`error::ServeError`] outcomes
+//! and panic containment), with [`faults`] providing deterministic
+//! sabotage for the e2e/soak harnesses.
+
+pub mod admission;
 pub mod batcher;
+pub mod engine;
+pub mod error;
+pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod pipeline;
 pub mod server;
 pub mod serveset;
 
-pub use metrics::{LatencyHistogram, ServeStats};
+pub use admission::{AdmissionConfig, Deadline, TenantSpec};
+pub use engine::{EngineConfig, RequestPayload, TrafficEngine, TrafficReply, TrafficResponse};
+pub use error::ServeError;
+pub use faults::{FaultAction, FaultPlan};
+pub use metrics::{LatencyHistogram, ServeStats, TrafficCounters, TrafficReport};
+pub use net::{DriverConfig, DriverReport, NetClient, NetServer};
 pub use pipeline::{
     estimate_power_requests, estimate_power_requests_grouped, DatasetStats, Pipeline, PiPath,
     PowerEstimate, PowerRequest, Prediction, SensorInput, SystemPowerRequest,
@@ -113,6 +130,91 @@ pub fn serve_synthetic(
     out.push_str(&format!("mean |rel. target error| online: {:.3}%\n", 100.0 * mean_rel));
     out.push_str(&stats.to_string());
     Ok(out)
+}
+
+/// Admission-policy knobs of a [`serve_listen`] deployment, applied to
+/// every tenant (the default roster is one tenant per served system,
+/// named after it).
+#[derive(Clone, Copy, Debug)]
+pub struct ListenConfig {
+    /// Token-bucket sustained rate per tenant (requests/second;
+    /// `f64::INFINITY` disables rate limiting).
+    pub rate_per_sec: f64,
+    /// Token-bucket burst per tenant.
+    pub burst: f64,
+    /// Bounded queue depth per tenant.
+    pub queue_cap: usize,
+    /// Default request deadline (requests may carry their own).
+    pub deadline_ms: u64,
+}
+
+impl Default for ListenConfig {
+    fn default() -> Self {
+        ListenConfig {
+            rate_per_sec: f64::INFINITY,
+            burst: 64.0,
+            queue_cap: 1024,
+            deadline_ms: 1000,
+        }
+    }
+}
+
+/// A live network deployment from [`serve_listen`]: shut it down with
+/// `handle.server.shutdown()` once the caller decides to stop (e.g. on
+/// stdin EOF).
+pub struct ListenHandle {
+    pub server: NetServer,
+    /// Human-readable boot summary (systems, cache telemetry, address).
+    pub boot: String,
+    pub counts: StageCounts,
+}
+
+/// Boot a multi-system [`ServeSet`] and put the full serving stack —
+/// TCP frontend, per-tenant admission control, fair dispatch — in front
+/// of it: what `dimsynth serve --systems a,b --listen ADDR` runs. One
+/// tenant per system is registered, named after the system, with
+/// `listen_config`'s admission policy.
+pub fn serve_listen(
+    systems: &[&str],
+    listen: &str,
+    config: FlowConfig,
+    store: Option<Arc<ArtifactStore>>,
+    listen_config: ListenConfig,
+) -> anyhow::Result<ListenHandle> {
+    let activations = config.power_samples;
+    let t0 = Instant::now();
+    let set = ServeSet::boot(systems, config, store)?;
+    let boot_time = t0.elapsed();
+    let counts = set.total_counts();
+    let mut admission = AdmissionConfig::one_tenant_per_system(&set.systems());
+    admission.default_deadline = Duration::from_millis(listen_config.deadline_ms);
+    for tenant in &mut admission.tenants {
+        tenant.rate_per_sec = listen_config.rate_per_sec;
+        tenant.burst = listen_config.burst;
+        tenant.queue_cap = listen_config.queue_cap;
+    }
+    let engine = Arc::new(TrafficEngine::start(
+        &set,
+        admission,
+        EngineConfig { activations, max_batch: 0 },
+        FaultPlan::none(),
+    )?);
+    let server = NetServer::start(engine, listen)?;
+    let mut boot = String::new();
+    boot.push_str(&format!(
+        "serve set:   {} systems ({}) on one warm FlowSet\n",
+        set.len(),
+        set.systems().join(", ")
+    ));
+    boot.push_str(&format!(
+        "boot:        {:.1} ms ({} recomputes, {} disk hits, {} lanes/pass)\n",
+        boot_time.as_secs_f64() * 1e3,
+        counts.recomputes(),
+        counts.disk_hits,
+        set.lane_width().lanes()
+    ));
+    boot.push_str(&format!("listening:   {} (net → admission → dispatch)\n", server.local_addr()));
+    Ok(ListenHandle { server, boot, counts })
 }
 
 /// Multi-system synthetic serve on one warm [`ServeSet`] — what

@@ -1,0 +1,988 @@
+//! The std-only TCP front end: a small length-prefixed binary protocol
+//! over blocking sockets, feeding [`super::engine::TrafficEngine`].
+//!
+//! # Wire protocol
+//!
+//! Every message — request or response, both directions — is one frame:
+//!
+//! ```text
+//! ┌──────────┬─────────┬──────────────────────┐
+//! │ len: u32 │ kind:u8 │ payload (len-1 bytes)│   all integers little-endian
+//! └──────────┴─────────┴──────────────────────┘
+//! ```
+//!
+//! `len` counts the kind byte plus the payload and must be in
+//! `1..=MAX_FRAME`. Request kinds: `0x01` Π inference, `0x02` power
+//! estimate, `0x03` stats, `0x04` health. A response echoes its
+//! request's kind with the high bit set (`kind | 0x80`).
+//!
+//! Request payloads:
+//!
+//! ```text
+//! pi:     req_id:u32  deadline_us:u32  tlen:u8 tenant[tlen]  nvals:u16  vals[nvals]:i64
+//! power:  req_id:u32  deadline_us:u32  tlen:u8 tenant[tlen]  seed:u32   f_hz:f64
+//! stats:  req_id:u32
+//! health: req_id:u32
+//! ```
+//!
+//! `deadline_us == 0` means "use the server's default deadline".
+//!
+//! Response payloads start with `req_id:u32 status:u8`, where `status`
+//! is [`CODE_OK`](super::error::CODE_OK) or a
+//! [`ServeError`](super::error::ServeError) wire code, then:
+//!
+//! ```text
+//! ok pi:            hw_cycles:u64  n:u16  pis[n]:i64
+//! ok power:         mw:f64  toggles_per_cycle:f64  cycles:u64
+//! ok stats/health:  len:u32  utf8[len]
+//! shed:             retry_after_ms:u32
+//! deadline:         (empty)
+//! unknown/panic/protocol: len:u32  utf8-detail[len]
+//! ```
+//!
+//! # Threading
+//!
+//! One blocking accept loop; per connection, one reader thread (decodes
+//! frames, submits to the engine — admission rejections are answered
+//! immediately with the typed error) and one writer thread (drains a
+//! reply channel onto the socket; responses may arrive out of request
+//! order, correlated by `req_id`). Graceful shutdown half-closes each
+//! connection's read side, drains the engine so every admitted request
+//! is answered, then joins everything.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::engine::{RequestPayload, TrafficEngine, TrafficReply, TrafficResponse};
+use super::error::{
+    ServeError, CODE_DEADLINE, CODE_OK, CODE_PROTOCOL, CODE_SHED, CODE_TENANT_UNKNOWN,
+    CODE_WORKER_PANICKED,
+};
+use super::metrics::{LatencyHistogram, TrafficReport};
+use super::pipeline::{PowerEstimate, PowerRequest};
+use crate::fixedpoint::Q16_15;
+use crate::stim::Lfsr32;
+
+/// Largest accepted frame (kind + payload), either direction.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Request kind: Π inference.
+pub const KIND_PI: u8 = 0x01;
+/// Request kind: power estimate.
+pub const KIND_POWER: u8 = 0x02;
+/// Request kind: serving statistics (rendered [`TrafficReport`]).
+pub const KIND_STATS: u8 = 0x03;
+/// Request kind: one-line liveness check.
+pub const KIND_HEALTH: u8 = 0x04;
+/// A response's kind is its request's kind with this bit set.
+pub const RESPONSE_BIT: u8 = 0x80;
+
+/// Correlate a reply back to its response kind + request id: the engine
+/// echoes the 64-bit id verbatim, so the writer thread recovers both.
+fn pack_id(kind: u8, req_id: u32) -> u64 {
+    (u64::from(kind) << 32) | u64::from(req_id)
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// Read one frame. `Ok(None)` is a clean EOF *between* frames (the
+/// peer finished); EOF inside a frame is an error (mid-request
+/// disconnect).
+fn read_frame(r: &mut impl Read) -> io::Result<Option<(u8, Vec<u8>)>> {
+    let mut len4 = [0u8; 4];
+    // First byte read manually so a between-frames EOF is clean.
+    match r.read(&mut len4[..1])? {
+        0 => return Ok(None),
+        _ => r.read_exact(&mut len4[1..])?,
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} outside 1..={MAX_FRAME}"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let payload = buf.split_off(1);
+    Ok(Some((buf[0], payload)))
+}
+
+fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = 1 + payload.len();
+    assert!(len <= MAX_FRAME, "oversized outbound frame");
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)
+}
+
+/// Bounds-checked little-endian reader over a request/response payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn utf8(&mut self, n: usize) -> Result<String, String> {
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| e.to_string())
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request codec
+// ---------------------------------------------------------------------
+
+/// A decoded inbound request.
+enum DecodedRequest {
+    Traffic {
+        req_id: u32,
+        tenant: String,
+        deadline: Option<Duration>,
+        payload: RequestPayload,
+    },
+    Stats { req_id: u32 },
+    Health { req_id: u32 },
+}
+
+/// Decode one request frame; on failure, the best-known `req_id` (0 if
+/// the header itself was bad) rides with the `Protocol` error so the
+/// client can still correlate the refusal.
+fn decode_request(kind: u8, payload: &[u8]) -> Result<DecodedRequest, (u32, ServeError)> {
+    let mut c = Cursor::new(payload);
+    let req_id = c
+        .u32()
+        .map_err(|detail| (0, ServeError::Protocol { detail }))?;
+    decode_request_body(kind, req_id, &mut c)
+        .map_err(|detail| (req_id, ServeError::Protocol { detail }))
+}
+
+fn decode_request_body(
+    kind: u8,
+    req_id: u32,
+    c: &mut Cursor<'_>,
+) -> Result<DecodedRequest, String> {
+    match kind {
+        KIND_STATS => {
+            c.done()?;
+            Ok(DecodedRequest::Stats { req_id })
+        }
+        KIND_HEALTH => {
+            c.done()?;
+            Ok(DecodedRequest::Health { req_id })
+        }
+        KIND_PI | KIND_POWER => {
+            let deadline_us = c.u32()?;
+            let tlen = c.u8()? as usize;
+            let tenant = c.utf8(tlen)?;
+            let payload = if kind == KIND_PI {
+                let nvals = c.u16()? as usize;
+                let mut values_q = Vec::with_capacity(nvals);
+                for _ in 0..nvals {
+                    values_q.push(c.i64()?);
+                }
+                RequestPayload::Pi { values_q }
+            } else {
+                let seed = c.u32()?;
+                let f_hz = c.f64()?;
+                RequestPayload::Power(PowerRequest { seed, f_hz })
+            };
+            c.done()?;
+            let deadline = if deadline_us == 0 {
+                None
+            } else {
+                Some(Duration::from_micros(u64::from(deadline_us)))
+            };
+            Ok(DecodedRequest::Traffic { req_id, tenant, deadline, payload })
+        }
+        other => Err(format!("unknown request kind 0x{other:02x}")),
+    }
+}
+
+fn encode_request_header(out: &mut Vec<u8>, req_id: u32, deadline_us: u32, tenant: &str) {
+    out.extend_from_slice(&req_id.to_le_bytes());
+    out.extend_from_slice(&deadline_us.to_le_bytes());
+    assert!(tenant.len() <= u8::MAX as usize, "tenant name too long for the wire");
+    out.push(tenant.len() as u8);
+    out.extend_from_slice(tenant.as_bytes());
+}
+
+// ---------------------------------------------------------------------
+// Response codec
+// ---------------------------------------------------------------------
+
+fn encode_response(reply: &TrafficReply) -> (u8, Vec<u8>) {
+    let kind = ((reply.id >> 32) as u8) | RESPONSE_BIT;
+    let mut out = Vec::new();
+    out.extend_from_slice(&(reply.id as u32).to_le_bytes());
+    match &reply.result {
+        Ok(TrafficResponse::Pi { pis, hw_cycles }) => {
+            out.push(CODE_OK);
+            out.extend_from_slice(&hw_cycles.to_le_bytes());
+            out.extend_from_slice(&(pis.len() as u16).to_le_bytes());
+            for v in pis {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(TrafficResponse::Power(est)) => {
+            out.push(CODE_OK);
+            out.extend_from_slice(&est.mw.to_le_bytes());
+            out.extend_from_slice(&est.toggles_per_cycle.to_le_bytes());
+            out.extend_from_slice(&est.cycles.to_le_bytes());
+        }
+        Ok(TrafficResponse::Text(s)) => {
+            out.push(CODE_OK);
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        Err(e) => {
+            out.push(e.code());
+            match e {
+                ServeError::Shed { retry_after_ms } => {
+                    out.extend_from_slice(&retry_after_ms.to_le_bytes());
+                }
+                ServeError::DeadlineExceeded => {}
+                ServeError::TenantUnknown { tenant } => {
+                    out.extend_from_slice(&(tenant.len() as u32).to_le_bytes());
+                    out.extend_from_slice(tenant.as_bytes());
+                }
+                ServeError::WorkerPanicked { reason } => {
+                    out.extend_from_slice(&(reason.len() as u32).to_le_bytes());
+                    out.extend_from_slice(reason.as_bytes());
+                }
+                ServeError::Protocol { detail } => {
+                    out.extend_from_slice(&(detail.len() as u32).to_le_bytes());
+                    out.extend_from_slice(detail.as_bytes());
+                }
+            }
+        }
+    }
+    (kind, out)
+}
+
+/// A decoded response, as the client sees it.
+pub struct NetResponse {
+    /// The *request* kind this answers (high bit stripped).
+    pub kind: u8,
+    pub req_id: u32,
+    pub result: Result<TrafficResponse, ServeError>,
+}
+
+fn decode_response(wire_kind: u8, payload: &[u8]) -> anyhow::Result<NetResponse> {
+    anyhow::ensure!(
+        wire_kind & RESPONSE_BIT != 0,
+        "expected a response frame, got request kind 0x{wire_kind:02x}"
+    );
+    let kind = wire_kind & !RESPONSE_BIT;
+    let mut c = Cursor::new(payload);
+    let mut parse = || -> Result<NetResponse, String> {
+        let req_id = c.u32()?;
+        let status = c.u8()?;
+        let result = match status {
+            CODE_OK => Ok(match kind {
+                KIND_PI => {
+                    let hw_cycles = c.u64()?;
+                    let n = c.u16()? as usize;
+                    let mut pis = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        pis.push(c.i64()?);
+                    }
+                    TrafficResponse::Pi { pis, hw_cycles }
+                }
+                KIND_POWER => TrafficResponse::Power(PowerEstimate {
+                    mw: c.f64()?,
+                    toggles_per_cycle: c.f64()?,
+                    cycles: c.u64()?,
+                }),
+                KIND_STATS | KIND_HEALTH => {
+                    let n = c.u32()? as usize;
+                    TrafficResponse::Text(c.utf8(n)?)
+                }
+                other => return Err(format!("unknown response kind 0x{other:02x}")),
+            }),
+            CODE_SHED => Err(ServeError::Shed { retry_after_ms: c.u32()? }),
+            CODE_DEADLINE => Err(ServeError::DeadlineExceeded),
+            CODE_TENANT_UNKNOWN => {
+                let n = c.u32()? as usize;
+                Err(ServeError::TenantUnknown { tenant: c.utf8(n)? })
+            }
+            CODE_WORKER_PANICKED => {
+                let n = c.u32()? as usize;
+                Err(ServeError::WorkerPanicked { reason: c.utf8(n)? })
+            }
+            CODE_PROTOCOL => {
+                let n = c.u32()? as usize;
+                Err(ServeError::Protocol { detail: c.utf8(n)? })
+            }
+            other => return Err(format!("unknown status code {other}")),
+        };
+        c.done()?;
+        Ok(NetResponse { kind, req_id, result })
+    };
+    parse().map_err(|e| anyhow::anyhow!("malformed response: {e}"))
+}
+
+// ---------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------
+
+/// The running TCP front end: accept loop + per-connection threads,
+/// all feeding one [`TrafficEngine`].
+pub struct NetServer {
+    engine: Arc<TrafficEngine>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0`) and start accepting.
+    pub fn start(engine: Arc<TrafficEngine>, listen: &str) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("cannot bind `{listen}`: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let engine = engine.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("dimsynth-net-accept".to_string())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let _ = stream.set_nodelay(true);
+                        let Ok(reader_stream) = stream.try_clone() else { continue };
+                        let engine = engine.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("dimsynth-net-conn".to_string())
+                            .spawn(move || conn_loop(reader_stream, &engine))
+                            .expect("spawn connection thread");
+                        conns
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .push((stream, handle));
+                    }
+                })?
+        };
+        Ok(NetServer { engine, local_addr, stop, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop accepting, half-close every connection's
+    /// read side (in-flight answers still flow out), drain the engine
+    /// so every admitted request is answered, join all threads, and
+    /// return the final report.
+    pub fn shutdown(mut self) -> TrafficReport {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap_or_else(|e| e.into_inner()));
+        for (stream, _) in &conns {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        // Engine drain answers everything still queued; the per-conn
+        // writers deliver those answers before their channels close.
+        let drained = self.engine.shutdown();
+        for (_, handle) in conns {
+            let _ = handle.join();
+        }
+        // Re-snapshot so late writer-side counters (undelivered,
+        // disconnects) are included; the drain verdict is authoritative.
+        let mut report = self.engine.report();
+        report.engine_panicked = drained.engine_panicked;
+        report
+    }
+}
+
+fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
+    let (tx, rx) = mpsc::channel::<TrafficReply>();
+    let Ok(writer_stream) = stream.try_clone() else { return };
+    let writer = {
+        let engine = engine.clone();
+        std::thread::Builder::new()
+            .name("dimsynth-net-write".to_string())
+            .spawn(move || writer_loop(writer_stream, &rx, &engine))
+            .expect("spawn writer thread")
+    };
+    let mut r = BufReader::new(stream);
+    let mut clean = false;
+    loop {
+        match read_frame(&mut r) {
+            Ok(None) => {
+                clean = true;
+                break;
+            }
+            Ok(Some((kind, payload))) => {
+                if !handle_frame(kind, &payload, engine, &tx) {
+                    // Unrecoverable protocol error: the refusal is on
+                    // its way out; stop trusting this byte stream.
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if !clean {
+        engine.note_disconnect();
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Dispatch one decoded frame. Returns `false` when the connection
+/// should close (undecodable input).
+fn handle_frame(
+    kind: u8,
+    payload: &[u8],
+    engine: &Arc<TrafficEngine>,
+    tx: &Sender<TrafficReply>,
+) -> bool {
+    match decode_request(kind, payload) {
+        Ok(DecodedRequest::Stats { req_id }) => {
+            let _ = tx.send(TrafficReply {
+                id: pack_id(KIND_STATS, req_id),
+                result: Ok(TrafficResponse::Text(engine.stats_text())),
+            });
+            true
+        }
+        Ok(DecodedRequest::Health { req_id }) => {
+            let _ = tx.send(TrafficReply {
+                id: pack_id(KIND_HEALTH, req_id),
+                result: Ok(TrafficResponse::Text(engine.health_text())),
+            });
+            true
+        }
+        Ok(DecodedRequest::Traffic { req_id, tenant, deadline, payload }) => {
+            let id = pack_id(kind, req_id);
+            if let Err(e) = engine.submit(&tenant, payload, deadline, id, tx.clone()) {
+                // Refused at the door: the engine sends nothing, so the
+                // frontend answers with the typed error itself.
+                let _ = tx.send(TrafficReply { id, result: Err(e) });
+            }
+            true
+        }
+        Err((req_id, e)) => {
+            let _ = tx.send(TrafficReply {
+                id: pack_id(kind & !RESPONSE_BIT, req_id),
+                result: Err(e),
+            });
+            false
+        }
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: &Receiver<TrafficReply>, engine: &Arc<TrafficEngine>) {
+    let mut w = BufWriter::new(stream);
+    let mut broken = false;
+    while let Ok(first) = rx.recv() {
+        // Batch everything already queued behind one flush.
+        let mut pending = vec![first];
+        while let Ok(more) = rx.try_recv() {
+            pending.push(more);
+        }
+        for reply in pending {
+            if broken {
+                engine.note_undelivered(1);
+                continue;
+            }
+            let (kind, payload) = encode_response(&reply);
+            if write_frame(&mut w, kind, &payload).is_err() {
+                // Peer went away mid-request; absorb the rest.
+                engine.note_disconnect();
+                engine.note_undelivered(1);
+                broken = true;
+            }
+        }
+        if !broken && w.flush().is_err() {
+            engine.note_disconnect();
+            broken = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A blocking client for the wire protocol. Send and receive are
+/// decoupled: responses arrive in completion order, correlated by
+/// `req_id`, so callers can pipeline a window of requests.
+pub struct NetClient {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> anyhow::Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect `{addr}`: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        // A hung server must fail a test, not wedge it.
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let r = BufReader::new(stream.try_clone()?);
+        Ok(NetClient { w: stream, r })
+    }
+
+    fn send(&mut self, kind: u8, payload: &[u8]) -> anyhow::Result<()> {
+        write_frame(&mut self.w, kind, payload)?;
+        Ok(())
+    }
+
+    /// Submit a Π inference request (`deadline_us == 0` = server default).
+    pub fn send_pi(
+        &mut self,
+        req_id: u32,
+        tenant: &str,
+        deadline_us: u32,
+        values_q: &[i64],
+    ) -> anyhow::Result<()> {
+        let mut p = Vec::new();
+        encode_request_header(&mut p, req_id, deadline_us, tenant);
+        p.extend_from_slice(&(values_q.len() as u16).to_le_bytes());
+        for v in values_q {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send(KIND_PI, &p)
+    }
+
+    /// Submit a power-estimation request.
+    pub fn send_power(
+        &mut self,
+        req_id: u32,
+        tenant: &str,
+        deadline_us: u32,
+        seed: u32,
+        f_hz: f64,
+    ) -> anyhow::Result<()> {
+        let mut p = Vec::new();
+        encode_request_header(&mut p, req_id, deadline_us, tenant);
+        p.extend_from_slice(&seed.to_le_bytes());
+        p.extend_from_slice(&f_hz.to_le_bytes());
+        self.send(KIND_POWER, &p)
+    }
+
+    pub fn send_stats(&mut self, req_id: u32) -> anyhow::Result<()> {
+        self.send(KIND_STATS, &req_id.to_le_bytes())
+    }
+
+    pub fn send_health(&mut self, req_id: u32) -> anyhow::Result<()> {
+        self.send(KIND_HEALTH, &req_id.to_le_bytes())
+    }
+
+    /// Block for the next response frame.
+    pub fn recv(&mut self) -> anyhow::Result<NetResponse> {
+        match read_frame(&mut self.r)? {
+            Some((kind, payload)) => decode_response(kind, &payload),
+            None => anyhow::bail!("server closed the connection"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Traffic drivers (e2e harness + soak bench)
+// ---------------------------------------------------------------------
+
+/// One synthetic tenant's client behavior: a seeded mixed Π/power
+/// request stream with windowed pipelining.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    pub tenant: String,
+    /// Port count of the tenant's system (Π request width).
+    pub ports: usize,
+    pub requests: usize,
+    /// Max in-flight requests before the driver reads a response.
+    pub window: usize,
+    pub seed: u32,
+    /// Fraction of requests that are power estimates (rest are Π).
+    pub power_ratio: f64,
+    /// Per-request deadline on the wire; 0 = server default.
+    pub deadline_us: u32,
+    /// Pause between sends (shapes offered load).
+    pub gap: Duration,
+    /// Drop the connection after reading this many responses, leaving
+    /// the rest in flight (the mid-request-disconnect injection).
+    pub disconnect_after_reads: Option<usize>,
+}
+
+impl DriverConfig {
+    pub fn new(tenant: &str, ports: usize) -> DriverConfig {
+        DriverConfig {
+            tenant: tenant.to_string(),
+            ports,
+            requests: 100,
+            window: 16,
+            seed: 1,
+            power_ratio: 0.25,
+            deadline_us: 0,
+            gap: Duration::ZERO,
+            disconnect_after_reads: None,
+        }
+    }
+}
+
+/// What one driver observed, by typed outcome. When the driver was not
+/// configured to disconnect, `sent` equals the sum of the outcome
+/// counters — exactly one response per request.
+#[derive(Clone, Debug, Default)]
+pub struct DriverReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub panicked: u64,
+    pub protocol: u64,
+    pub tenant_unknown: u64,
+    /// Client-observed round-trip latency of `ok` responses.
+    pub latency: LatencyHistogram,
+    /// The driver dropped the connection on purpose.
+    pub disconnected: bool,
+}
+
+impl DriverReport {
+    /// Responses received, by any outcome.
+    pub fn answered(&self) -> u64 {
+        self.ok + self.shed + self.deadline_exceeded + self.panicked + self.protocol
+            + self.tenant_unknown
+    }
+
+    fn count(&mut self, resp: &NetResponse, inflight: &mut HashMap<u32, Instant>) {
+        let t0 = inflight.remove(&resp.req_id);
+        match &resp.result {
+            Ok(_) => {
+                self.ok += 1;
+                if let Some(t0) = t0 {
+                    self.latency.record(t0.elapsed());
+                }
+            }
+            Err(ServeError::Shed { .. }) => self.shed += 1,
+            Err(ServeError::DeadlineExceeded) => self.deadline_exceeded += 1,
+            Err(ServeError::WorkerPanicked { .. }) => self.panicked += 1,
+            Err(ServeError::Protocol { .. }) => self.protocol += 1,
+            Err(ServeError::TenantUnknown { .. }) => self.tenant_unknown += 1,
+        }
+    }
+}
+
+/// Run one tenant's traffic against a serving address and tally every
+/// typed outcome. Deterministic for a fixed config: the request mix,
+/// values, and seeds all derive from `cfg.seed`.
+pub fn run_driver(addr: &str, cfg: &DriverConfig) -> anyhow::Result<DriverReport> {
+    let mut client = NetClient::connect(addr)?;
+    let mut rng = Lfsr32::new(cfg.seed);
+    let mut report = DriverReport::default();
+    let mut inflight: HashMap<u32, Instant> = HashMap::new();
+    let mut reads = 0usize;
+    let window = cfg.window.max(1);
+    let disconnect_now =
+        |reads: usize| cfg.disconnect_after_reads.is_some_and(|limit| reads >= limit);
+    for i in 0..cfg.requests {
+        while inflight.len() >= window {
+            let resp = client.recv()?;
+            report.count(&resp, &mut inflight);
+            reads += 1;
+            if disconnect_now(reads) {
+                report.disconnected = true;
+                return Ok(report);
+            }
+        }
+        let req_id = i as u32;
+        if rng.next_f64() < cfg.power_ratio {
+            let f_hz = if rng.next_u32() & 1 == 0 { 6.0e6 } else { 12.0e6 };
+            client.send_power(req_id, &cfg.tenant, cfg.deadline_us, rng.next_u32(), f_hz)?;
+        } else {
+            // Physical-range stimulus, like the synthetic serve driver.
+            let values_q: Vec<i64> = (0..cfg.ports)
+                .map(|_| Q16_15.from_f64(0.5 + 3.0 * rng.next_f64()))
+                .collect();
+            client.send_pi(req_id, &cfg.tenant, cfg.deadline_us, &values_q)?;
+        }
+        inflight.insert(req_id, Instant::now());
+        report.sent += 1;
+        if !cfg.gap.is_zero() {
+            std::thread::sleep(cfg.gap);
+        }
+    }
+    while !inflight.is_empty() {
+        let resp = client.recv()?;
+        report.count(&resp, &mut inflight);
+        reads += 1;
+        if disconnect_now(reads) {
+            report.disconnected = true;
+            return Ok(report);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::{AdmissionConfig, TenantSpec};
+    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::faults::FaultPlan;
+    use crate::coordinator::serveset::ServeSet;
+    use crate::flow::FlowConfig;
+
+    #[test]
+    fn frame_roundtrip_and_limits() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, KIND_PI, &[1, 2, 3]).unwrap();
+        let (kind, payload) = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!((kind, payload.as_slice()), (KIND_PI, &[1u8, 2, 3][..]));
+        // Clean EOF between frames.
+        assert!(read_frame(&mut [].as_slice()).unwrap().is_none());
+        // EOF inside a frame is an error.
+        assert!(read_frame(&mut &buf[..3]).is_err());
+        // Zero-length and oversized frames are rejected.
+        assert!(read_frame(&mut 0u32.to_le_bytes().as_slice()).is_err());
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame(&mut huge.as_slice()).is_err());
+    }
+
+    #[test]
+    fn request_codec_roundtrip() {
+        let mut p = Vec::new();
+        encode_request_header(&mut p, 42, 1500, "tenant-a");
+        p.extend_from_slice(&2u16.to_le_bytes());
+        p.extend_from_slice(&123i64.to_le_bytes());
+        p.extend_from_slice(&(-7i64).to_le_bytes());
+        match decode_request(KIND_PI, &p).unwrap() {
+            DecodedRequest::Traffic { req_id, tenant, deadline, payload } => {
+                assert_eq!(req_id, 42);
+                assert_eq!(tenant, "tenant-a");
+                assert_eq!(deadline, Some(Duration::from_micros(1500)));
+                match payload {
+                    RequestPayload::Pi { values_q } => assert_eq!(values_q, vec![123, -7]),
+                    other => panic!("expected Pi, got {other:?}"),
+                }
+            }
+            _ => panic!("expected Traffic"),
+        }
+
+        let mut p = Vec::new();
+        encode_request_header(&mut p, 7, 0, "t");
+        p.extend_from_slice(&0xBEEFu32.to_le_bytes());
+        p.extend_from_slice(&6.0e6f64.to_le_bytes());
+        match decode_request(KIND_POWER, &p).unwrap() {
+            DecodedRequest::Traffic { deadline, payload, .. } => {
+                assert_eq!(deadline, None, "0 µs = server default");
+                match payload {
+                    RequestPayload::Power(r) => {
+                        assert_eq!(r.seed, 0xBEEF);
+                        assert_eq!(r.f_hz, 6.0e6);
+                    }
+                    other => panic!("expected Power, got {other:?}"),
+                }
+            }
+            _ => panic!("expected Traffic"),
+        }
+
+        match decode_request(KIND_HEALTH, &9u32.to_le_bytes()).unwrap() {
+            DecodedRequest::Health { req_id } => assert_eq!(req_id, 9),
+            _ => panic!("expected Health"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_fail_typed_with_best_known_req_id() {
+        // Truncated header: no req_id recovered.
+        let (req_id, e) = decode_request(KIND_PI, &[1, 2]).unwrap_err();
+        assert_eq!(req_id, 0);
+        assert!(matches!(e, ServeError::Protocol { .. }));
+        // Bad body after a good header: req_id recovered.
+        let mut p = Vec::new();
+        encode_request_header(&mut p, 31, 0, "t");
+        p.push(0xFF); // garbage instead of nvals:u16
+        let (req_id, e) = decode_request(KIND_PI, &p).unwrap_err();
+        assert_eq!(req_id, 31);
+        assert!(matches!(e, ServeError::Protocol { .. }));
+        // Unknown kind.
+        let (_, e) = decode_request(0x77, &5u32.to_le_bytes()).unwrap_err();
+        assert!(e.to_string().contains("0x77"), "{e}");
+        // Trailing bytes are rejected, not ignored.
+        let mut p = 9u32.to_le_bytes().to_vec();
+        p.push(0);
+        assert!(decode_request(KIND_STATS, &p).is_err());
+    }
+
+    #[test]
+    fn response_codec_roundtrip_every_status() {
+        let cases: Vec<(u8, Result<TrafficResponse, ServeError>)> = vec![
+            (KIND_PI, Ok(TrafficResponse::Pi { pis: vec![1, -2, 3], hw_cycles: 99 })),
+            (
+                KIND_POWER,
+                Ok(TrafficResponse::Power(PowerEstimate {
+                    mw: 1.25,
+                    toggles_per_cycle: 0.5,
+                    cycles: 1024,
+                })),
+            ),
+            (KIND_STATS, Ok(TrafficResponse::Text("report".to_string()))),
+            (KIND_PI, Err(ServeError::Shed { retry_after_ms: 17 })),
+            (KIND_POWER, Err(ServeError::DeadlineExceeded)),
+            (KIND_PI, Err(ServeError::TenantUnknown { tenant: "ghost".into() })),
+            (KIND_PI, Err(ServeError::WorkerPanicked { reason: "injected".into() })),
+            (KIND_POWER, Err(ServeError::Protocol { detail: "bad frame".into() })),
+        ];
+        for (i, (kind, result)) in cases.into_iter().enumerate() {
+            let reply = TrafficReply { id: pack_id(kind, 1000 + i as u32), result };
+            let (wire_kind, payload) = encode_response(&reply);
+            assert_eq!(wire_kind, kind | RESPONSE_BIT);
+            let back = decode_response(wire_kind, &payload).unwrap();
+            assert_eq!(back.kind, kind);
+            assert_eq!(back.req_id, 1000 + i as u32);
+            match (&reply.result, &back.result) {
+                (Ok(TrafficResponse::Pi { pis: a, hw_cycles: ca }),
+                    Ok(TrafficResponse::Pi { pis: b, hw_cycles: cb })) => {
+                    assert_eq!(a, b);
+                    assert_eq!(ca, cb);
+                }
+                (Ok(TrafficResponse::Power(a)), Ok(TrafficResponse::Power(b))) => {
+                    assert_eq!(a.mw, b.mw);
+                    assert_eq!(a.toggles_per_cycle, b.toggles_per_cycle);
+                    assert_eq!(a.cycles, b.cycles);
+                }
+                (Ok(TrafficResponse::Text(a)), Ok(TrafficResponse::Text(b))) => {
+                    assert_eq!(a, b);
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (a, b) => panic!("variant mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_serves_pi_power_stats_health() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let ports = set.handle_at(0).design().num_inputs();
+        let engine = Arc::new(
+            TrafficEngine::start(
+                &set,
+                AdmissionConfig::one_tenant_per_system(&["pendulum"]),
+                EngineConfig::default(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        let server = NetServer::start(engine, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+
+        let report = run_driver(&addr, &DriverConfig {
+            requests: 24,
+            window: 8,
+            seed: 0xA11CE,
+            ..DriverConfig::new("pendulum", ports)
+        })
+        .unwrap();
+        assert_eq!(report.sent, 24);
+        assert_eq!(report.ok, 24, "{report:?}");
+        assert_eq!(report.answered(), report.sent);
+        assert!(report.latency.count() > 0);
+
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.send_health(1).unwrap();
+        client.send_stats(2).unwrap();
+        let mut saw_health = false;
+        let mut saw_stats = false;
+        for _ in 0..2 {
+            let resp = client.recv().unwrap();
+            match (resp.kind, resp.result.unwrap()) {
+                (KIND_HEALTH, TrafficResponse::Text(s)) => {
+                    assert!(s.starts_with("ok:"), "{s}");
+                    saw_health = true;
+                }
+                (KIND_STATS, TrafficResponse::Text(s)) => {
+                    assert!(s.contains("admitted"), "{s}");
+                    saw_stats = true;
+                }
+                other => panic!("unexpected {:?}", other.0),
+            }
+        }
+        assert!(saw_health && saw_stats);
+
+        // Unknown tenant over the wire comes back typed.
+        client.send_pi(3, "ghost", 0, &vec![0i64; ports]).unwrap();
+        match client.recv().unwrap().result.unwrap_err() {
+            ServeError::TenantUnknown { tenant } => assert_eq!(tenant, "ghost"),
+            other => panic!("expected TenantUnknown, got {other}"),
+        }
+        drop(client);
+
+        let final_report = server.shutdown();
+        assert!(!final_report.engine_panicked);
+        let t = final_report.tenant("pendulum").unwrap();
+        assert_eq!(t.counters.served, 24);
+        assert_eq!(t.counters.terminal(), t.counters.admitted);
+        assert_eq!(final_report.tenant_unknown, 1);
+    }
+}

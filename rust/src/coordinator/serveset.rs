@@ -27,7 +27,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::batcher::{self, BatchOutcome};
+use super::batcher::{self, BatchOutcome, QueueGauge};
 use super::pipeline::{
     estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
 };
@@ -50,17 +50,16 @@ pub struct SystemHandle {
 
 impl SystemHandle {
     /// Snapshot a flow's design + netlist (compiling or cache-loading
-    /// them on demand) into a shareable handle.
+    /// them on demand) into a shareable handle. The handle holds the
+    /// *same* `Arc` allocations the flow's stage LRUs do — one resident
+    /// copy per artifact no matter how many endpoints serve it, not a
+    /// deep clone per handle (single residency, tested below).
     pub fn from_flow(flow: &mut Flow) -> anyhow::Result<SystemHandle> {
         let system = flow.id().to_string();
         let lane_width = flow.config().lane_width;
-        let (design, mapped) = flow.rtl_and_netlist()?;
-        Ok(SystemHandle {
-            system,
-            design: Arc::new(design.clone()),
-            mapped: Arc::new(mapped.clone()),
-            lane_width,
-        })
+        let design = flow.rtl_shared()?;
+        let mapped = flow.netlist_shared()?;
+        Ok(SystemHandle { system, design, mapped, lane_width })
     }
 
     /// The corpus system this handle serves.
@@ -209,11 +208,17 @@ impl ServeSet {
         let width = self.lane_width;
         let max_batch = width.lanes() * handles.len();
         let (tx, rx) = mpsc::channel::<PowerJob>();
-        let worker = std::thread::Builder::new()
-            .name("dimsynth-power-batcher".to_string())
-            .spawn(move || batcher_loop(&handles, width, max_batch, linger, activations, rx))
-            .expect("spawn power batcher");
-        PowerBatcher { tx: Some(tx), worker: Some(worker) }
+        let gauge = Arc::new(QueueGauge::new());
+        let worker = {
+            let gauge = gauge.clone();
+            std::thread::Builder::new()
+                .name("dimsynth-power-batcher".to_string())
+                .spawn(move || {
+                    batcher_loop(&handles, width, max_batch, linger, activations, rx, &gauge)
+                })
+                .expect("spawn power batcher")
+        };
+        PowerBatcher { tx: Some(tx), worker: Some(worker), gauge }
     }
 }
 
@@ -254,6 +259,9 @@ impl FloodStats {
 pub struct PowerBatcher {
     tx: Option<Sender<PowerJob>>,
     worker: Option<JoinHandle<FloodStats>>,
+    /// Real queue pressure of the submit channel — admission control
+    /// and metrics read this instead of guessing.
+    gauge: Arc<QueueGauge>,
 }
 
 impl PowerBatcher {
@@ -267,9 +275,21 @@ impl PowerBatcher {
     ) -> Receiver<anyhow::Result<PowerEstimate>> {
         let (tx, rx) = mpsc::channel();
         if let Some(q) = &self.tx {
+            self.gauge.on_enqueue();
             let _ = q.send(PowerJob { system, request, resp: tx });
         }
         rx
+    }
+
+    /// Requests submitted but not yet collected into a batch.
+    pub fn queue_depth(&self) -> usize {
+        self.gauge.depth()
+    }
+
+    /// Age of the oldest uncollected request (`None` when the queue is
+    /// empty) — the live drain-time estimate behind retry-after hints.
+    pub fn queue_oldest_age(&self) -> Option<Duration> {
+        self.gauge.oldest_age()
     }
 
     /// Close the queue and collect final statistics; a panicked worker
@@ -291,6 +311,7 @@ fn batcher_loop(
     linger: Duration,
     activations: u32,
     rx: Receiver<PowerJob>,
+    gauge: &QueueGauge,
 ) -> FloodStats {
     let targets: Vec<(&Netlist, &PiModuleDesign)> =
         handles.iter().map(|h| (h.netlist(), h.design())).collect();
@@ -300,6 +321,7 @@ fn batcher_loop(
             BatchOutcome::Batch(b) => (b, false),
             BatchOutcome::Closed(b) => (b, true),
         };
+        gauge.on_dequeue(batch.len());
         let mut jobs = Vec::with_capacity(batch.len());
         for job in batch {
             if job.system >= targets.len() {
@@ -370,6 +392,56 @@ mod tests {
         // caller.
         let again = set.handle("pendulum").unwrap();
         assert!(Arc::ptr_eq(&h.mapped, &again.mapped));
+    }
+
+    #[test]
+    fn handles_share_single_resident_artifacts_with_the_flow() {
+        // Regression for the double-resident memory bug: `from_flow`
+        // used to deep-clone the design and netlist out of the stage
+        // LRUs, so every serve set kept a second copy of each artifact
+        // resident. The handle must hold the *same* allocation the
+        // flow's cache does.
+        let mut set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let h = set.handle("pendulum").unwrap();
+        let h2 = set.handle("pendulum").unwrap();
+        assert!(Arc::ptr_eq(&h.design, &h2.design));
+        assert!(Arc::ptr_eq(&h.mapped, &h2.mapped));
+        let flow = &mut set.flows_mut()[0];
+        let counts_before = flow.counts();
+        let design = flow.rtl_shared().unwrap();
+        let mapped = flow.netlist_shared().unwrap();
+        assert!(
+            Arc::ptr_eq(&h.design, &design),
+            "handle design must be the flow's cached allocation, not a clone"
+        );
+        assert!(
+            Arc::ptr_eq(&h.mapped, &mapped),
+            "handle netlist must be the flow's cached allocation, not a clone"
+        );
+        assert_eq!(
+            flow.counts().recomputes(),
+            counts_before.recomputes(),
+            "shared lookups must not recompute"
+        );
+    }
+
+    #[test]
+    fn batcher_gauge_reports_real_queue_pressure() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let batcher = set.power_batcher(Duration::ZERO, 1);
+        assert_eq!(batcher.queue_depth(), 0);
+        assert!(batcher.queue_oldest_age().is_none());
+        let pending: Vec<_> = (0..8)
+            .map(|i| batcher.submit(0, PowerRequest { seed: i + 1, f_hz: 6.0e6 }))
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        // Everything answered ⇒ everything collected ⇒ gauge drained.
+        assert_eq!(batcher.queue_depth(), 0);
+        assert!(batcher.queue_oldest_age().is_none());
+        let stats = batcher.shutdown();
+        assert_eq!(stats.requests, 8);
     }
 
     #[test]

@@ -186,8 +186,13 @@ pub struct Flow {
     store: Option<Arc<ArtifactStore>>,
     parsed: Lru<SystemModel>,
     pis: Lru<PiAnalysis>,
-    rtl: Lru<PiModuleDesign>,
-    netlist: Lru<MappedDesign>,
+    /// The design and netlist stages cache `Arc`-wrapped artifacts:
+    /// serving consumers ([`Flow::rtl_shared`], [`Flow::netlist_shared`])
+    /// hold the *same* allocation the LRU does, so a multi-endpoint
+    /// deployment keeps exactly one resident copy per artifact instead
+    /// of a deep clone per endpoint.
+    rtl: Lru<Arc<PiModuleDesign>>,
+    netlist: Lru<Arc<MappedDesign>>,
     timing: Lru<TimingReport>,
     power: Lru<PowerReport>,
     verilog: Lru<String>,
@@ -430,13 +435,13 @@ impl Flow {
             LruHit::Miss => {
                 if let Some(design) = self.load_artifact::<PiModuleDesign>(fp) {
                     self.counts.disk_hits += 1;
-                    self.rtl.insert(fp, design);
+                    self.rtl.insert(fp, Arc::new(design));
                 } else {
                     self.ensure_pis()?;
                     let design = rtl::build(self.pis.value(), self.config.qformat);
                     self.counts.rtl += 1;
                     self.save_artifact(fp, &design);
-                    self.rtl.insert(fp, design);
+                    self.rtl.insert(fp, Arc::new(design));
                 }
             }
         }
@@ -451,13 +456,13 @@ impl Flow {
             LruHit::Miss => {
                 if let Some(mapped) = self.load_artifact::<MappedDesign>(fp) {
                     self.counts.disk_hits += 1;
-                    self.netlist.insert(fp, mapped);
+                    self.netlist.insert(fp, Arc::new(mapped));
                 } else {
                     self.ensure_rtl()?;
                     let mapped = synth::map_design(self.rtl.value());
                     self.counts.netlist += 1;
                     self.save_artifact(fp, &mapped);
-                    self.netlist.insert(fp, mapped);
+                    self.netlist.insert(fp, Arc::new(mapped));
                 }
             }
         }
@@ -602,6 +607,25 @@ impl Flow {
         self.ensure_rtl()?;
         self.ensure_netlist()?;
         Ok((self.rtl.value(), self.netlist.value()))
+    }
+
+    /// Shared handle to the RTL stage artifact: the returned `Arc` is
+    /// **the same allocation** the stage LRU holds, so any number of
+    /// serving endpoints share one resident copy (single residency —
+    /// tested in [`crate::coordinator::serveset`]).
+    pub fn rtl_shared(&mut self) -> anyhow::Result<Arc<PiModuleDesign>> {
+        self.ensure_rtl()?;
+        Ok(Arc::clone(self.rtl.value()))
+    }
+
+    /// Shared handle to the mapped-netlist stage artifact (see
+    /// [`Flow::rtl_shared`]). Ensures the RTL stage too, so the pair is
+    /// from one consistent cache generation like
+    /// [`Flow::rtl_and_netlist`].
+    pub fn netlist_shared(&mut self) -> anyhow::Result<Arc<MappedDesign>> {
+        self.ensure_rtl()?;
+        self.ensure_netlist()?;
+        Ok(Arc::clone(self.netlist.value()))
     }
 
     /// Static timing of the mapped netlist under the configured library.

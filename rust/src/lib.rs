@@ -66,6 +66,19 @@
 //!   of its compiled state and batching power-request floods **across
 //!   systems** at the configured SIMD lane width), [`train`]
 //!   (offline/in-situ Φ calibration).
+//! * **Serving front end** — the network-facing slice of
+//!   [`coordinator`], layered **net → admission → ServeSet → flow**:
+//!   [`coordinator::net`] speaks a length-prefixed binary wire protocol
+//!   over TCP (blocking accept loop, one reader thread per connection),
+//!   [`coordinator::admission`] applies per-tenant token buckets,
+//!   bounded queues, and end-to-end deadlines in front of the
+//!   fair-dispatch [`coordinator::engine`], every refusal is a typed
+//!   [`coordinator::ServeError`] on the wire (shed with a retry-after
+//!   hint, deadline-exceeded, contained worker panics — never a hang or
+//!   a silent drop), and [`coordinator::metrics`] keeps per-tenant
+//!   p50/p99/p999 latency histograms and outcome counters;
+//!   [`coordinator::faults`] injects deterministic panics/delays for
+//!   the e2e and soak harnesses (CLI: `serve --listen ADDR`).
 
 pub mod bench_util;
 pub mod coordinator;

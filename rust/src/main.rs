@@ -15,6 +15,8 @@
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
 //! dimsynth serve <system> [--samples N] [--batch B] [--artifacts DIR]
 //! dimsynth serve --systems a,b,c [--cache-dir DIR] [--lanes N] [--power-flood N]
+//! dimsynth serve --systems a,b,c --listen ADDR [--rate R] [--burst B]
+//!                [--queue-cap N] [--deadline-ms D]
 //! dimsynth list
 //! ```
 //!
@@ -23,6 +25,13 @@
 //! `--cache-dir` a restarted serve process boots with `recomputes=0`,
 //! and power-request floods batch **across systems** through one
 //! width-aware batcher.
+//!
+//! `serve --listen ADDR` puts the warm serve set behind a TCP front end
+//! (`coordinator::net`): length-prefixed binary frames, one admission
+//! tenant per served system (token bucket + bounded queue, tuned by
+//! `--rate`/`--burst`/`--queue-cap`/`--deadline-ms`), typed shed and
+//! deadline refusals on the wire, and a graceful drain on stdin EOF
+//! that answers everything still queued before the report prints.
 //!
 //! `--cache-dir DIR` attaches the persistent artifact store: compiled
 //! stage artifacts are written to (and served from) `DIR`, so a second
@@ -139,6 +148,11 @@ const SUBCOMMANDS: &[SubSpec] = &[
             flag("cache-dir", "DIR", "multi-system: boot the FlowSet warm from this store"),
             flag("lanes", "N", "multi-system: SIMD lane width of power batches (64 or 256)"),
             flag("power-flood", "N", "multi-system: cross-system power requests (default 256)"),
+            flag("listen", "ADDR", "multi-system: serve over TCP at ADDR until stdin closes"),
+            flag("rate", "R", "listen: per-tenant token-bucket rate, req/s (default unlimited)"),
+            flag("burst", "B", "listen: per-tenant token-bucket burst (default 64)"),
+            flag("queue-cap", "N", "listen: per-tenant bounded queue depth (default 1024)"),
+            flag("deadline-ms", "D", "listen: default request deadline (default 1000)"),
         ],
     },
     SubSpec {
@@ -530,6 +544,42 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
             flags.get("power-flood").map(|s| s.parse()).transpose()?.unwrap_or(256);
         let config = FlowConfig { lane_width, ..FlowConfig::default() };
         let store = open_store(flags)?;
+
+        // Network mode: put the full serving stack (TCP frontend →
+        // admission control → fair dispatch) in front of the warm set
+        // and run until stdin closes (the conventional daemon idiom —
+        // `dimsynth serve ... --listen ADDR < /dev/null` exits after
+        // draining).
+        if let Some(listen) = flags.get("listen") {
+            let listen_config = coordinator::ListenConfig {
+                rate_per_sec: flags
+                    .get("rate")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?
+                    .unwrap_or(f64::INFINITY),
+                burst: flags.get("burst").map(|s| s.parse()).transpose()?.unwrap_or(64.0),
+                queue_cap: flags.get("queue-cap").map(|s| s.parse()).transpose()?.unwrap_or(1024),
+                deadline_ms: flags
+                    .get("deadline-ms")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(1000),
+            };
+            let handle =
+                coordinator::serve_listen(&systems, listen, config, store, listen_config)?;
+            print!("{}", handle.boot);
+            if flags.contains_key("cache-dir") {
+                print_cache_line(handle.counts);
+            }
+            // Block until the controlling stream closes, then drain.
+            let mut sink = String::new();
+            let _ = std::io::Read::read_to_string(&mut std::io::stdin(), &mut sink);
+            let report = handle.server.shutdown();
+            print!("{report}");
+            anyhow::ensure!(!report.engine_panicked, "traffic engine panicked");
+            return Ok(());
+        }
+
         let (report, counts) =
             coordinator::serve_multi(&artifacts, &systems, samples, batch, flood, config, store)?;
         print!("{report}");
@@ -539,7 +589,17 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
         return Ok(());
     }
 
-    for multi_only in ["cache-dir", "lanes", "power-flood"] {
+    let multi_only_flags = [
+        "cache-dir",
+        "lanes",
+        "power-flood",
+        "listen",
+        "rate",
+        "burst",
+        "queue-cap",
+        "deadline-ms",
+    ];
+    for multi_only in multi_only_flags {
         anyhow::ensure!(
             !flags.contains_key(multi_only),
             "--{multi_only} requires --systems (multi-system serving)"

@@ -1,0 +1,180 @@
+//! Fault-injection e2e for the network serving layer: four tenants with
+//! hostile traffic shapes run against one real TCP front end
+//! (`coordinator::net`) over one warm [`ServeSet`], deterministically
+//! seeded:
+//!
+//! - `good`   — well-behaved stream; one injected worker panic (seq 17).
+//! - `flood`  — rate-limited far below its offered load; must be shed
+//!   with typed `Shed` refusals, never hangs.
+//! - `slow`   — every request gets an injected 3 ms compute delay but
+//!   carries a 1 ms deadline; must be dropped as `DeadlineExceeded`
+//!   without burning compute on dead work.
+//! - `flaky`  — drops its connection mid-stream with a window of
+//!   requests still in flight.
+//!
+//! The contract under all of that, checked from both sides of the wire:
+//! every request the client sent gets exactly one typed response (served
+//! / shed / deadline-exceeded / worker-panicked) unless the client
+//! itself hung up; the well-behaved tenant's p99 stays bounded; the
+//! engine survives the panic and the disconnects; and graceful drain
+//! leaves zero admitted requests unanswered (`terminal == admitted`,
+//! empty queues) — no hangs, no silent drops.
+
+use dimsynth::coordinator::net::run_driver;
+use dimsynth::coordinator::{
+    AdmissionConfig, DriverConfig, DriverReport, EngineConfig, FaultPlan, NetServer,
+    ServeSet, TenantSpec, TrafficEngine,
+};
+use dimsynth::flow::FlowConfig;
+use dimsynth::synth::LaneWidth;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn hostile_traffic_mix_is_fully_answered_and_contained() {
+    let config = FlowConfig {
+        power_samples: 2,
+        lane_width: LaneWidth::W64,
+        ..FlowConfig::default()
+    };
+    let set = ServeSet::boot(&["pendulum", "spring_mass"], config, None).unwrap();
+    let pendulum_ports = set.handle_at(0).design().num_inputs();
+    let spring_ports = set.handle_at(1).design().num_inputs();
+
+    let admission = AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("good", "pendulum").with_queue_cap(4096),
+            // Far below the flood's offered load: most of it must shed.
+            TenantSpec::new("flood", "spring_mass")
+                .with_rate(200.0, 8.0)
+                .with_queue_cap(32),
+            TenantSpec::new("slow", "spring_mass").with_queue_cap(4096),
+            TenantSpec::new("flaky", "pendulum").with_queue_cap(4096),
+        ],
+        default_deadline: Duration::from_secs(10),
+    };
+    // Deterministic faults, keyed on (tenant, admission seq): tenant
+    // `good`'s 18th admitted request panics inside the worker; every
+    // `slow` request is delayed past its own deadline.
+    let faults = FaultPlan::none()
+        .panic_at("good", 17)
+        .delay_all("slow", Duration::from_millis(3));
+
+    let engine = Arc::new(
+        TrafficEngine::start(
+            &set,
+            admission,
+            EngineConfig { activations: 2, max_batch: 16 },
+            faults,
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(engine, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Generous wire deadlines for the tenants whose outcome should be
+    // decided by admission, not the clock — only `slow` carries the
+    // deliberately impossible 1 ms budget.
+    let drivers = vec![
+        DriverConfig {
+            requests: 120,
+            window: 8,
+            seed: 0x600D,
+            deadline_us: 10_000_000,
+            ..DriverConfig::new("good", pendulum_ports)
+        },
+        DriverConfig {
+            requests: 200,
+            window: 16,
+            seed: 0xF100D,
+            deadline_us: 10_000_000,
+            ..DriverConfig::new("flood", spring_ports)
+        },
+        DriverConfig {
+            requests: 40,
+            window: 8,
+            seed: 0x510,
+            deadline_us: 1_000,
+            ..DriverConfig::new("slow", spring_ports)
+        },
+        DriverConfig {
+            requests: 60,
+            window: 16,
+            seed: 0xF1A2,
+            disconnect_after_reads: Some(10),
+            ..DriverConfig::new("flaky", pendulum_ports)
+        },
+    ];
+    let joins: Vec<_> = drivers
+        .into_iter()
+        .map(|cfg| {
+            let addr = addr.clone();
+            std::thread::spawn(move || (cfg.tenant.clone(), run_driver(&addr, &cfg).unwrap()))
+        })
+        .collect();
+    let mut reports = std::collections::HashMap::<String, DriverReport>::new();
+    for j in joins {
+        let (tenant, report) = j.join().unwrap();
+        reports.insert(tenant, report);
+    }
+
+    // -- client side: exactly one typed response per request ------------
+    let good = &reports["good"];
+    assert_eq!(good.sent, 120);
+    assert_eq!(good.answered(), good.sent, "{good:?}");
+    assert_eq!(good.panicked, 1, "exactly the injected panic: {good:?}");
+    assert_eq!(good.ok, good.sent - 1, "{good:?}");
+    // Bounded tail for the well-behaved tenant despite flood + slow +
+    // panic sharing the server (its own deadline allowed 10 s).
+    let p99 = good.latency.percentile_us(0.99);
+    assert!(p99 < 2_000_000, "good p99 {p99} µs not bounded");
+
+    let flood = &reports["flood"];
+    assert_eq!(flood.sent, 200);
+    assert_eq!(flood.answered(), flood.sent, "no hangs, no silent drops: {flood:?}");
+    assert!(flood.shed > 0, "rate limit must shed: {flood:?}");
+    assert!(flood.ok >= 1, "burst capacity must admit some: {flood:?}");
+    assert_eq!(flood.ok + flood.shed + flood.deadline_exceeded, flood.sent, "{flood:?}");
+
+    let slow = &reports["slow"];
+    assert_eq!(slow.sent, 40);
+    assert_eq!(slow.answered(), slow.sent, "{slow:?}");
+    assert_eq!(slow.ok, 0, "3 ms injected delay > 1 ms budget: {slow:?}");
+    assert!(slow.deadline_exceeded > 0, "{slow:?}");
+
+    let flaky = &reports["flaky"];
+    assert!(flaky.disconnected, "driver must have hung up mid-stream");
+    assert!(flaky.sent > flaky.answered(), "disconnect left work in flight: {flaky:?}");
+
+    // -- server side: graceful drain, nothing admitted goes unanswered --
+    let report = server.shutdown();
+    assert!(!report.engine_panicked, "injected panic must be contained");
+    for t in &report.tenants {
+        assert_eq!(
+            t.counters.terminal(),
+            t.counters.admitted,
+            "tenant `{}` drain left work unanswered: {:?}",
+            t.tenant,
+            t.counters
+        );
+        assert_eq!(t.queue_depth, 0, "tenant `{}` queue not drained", t.tenant);
+        assert_eq!(t.queue_oldest_ms, 0, "tenant `{}` queue not drained", t.tenant);
+    }
+    let g = &report.tenant("good").unwrap().counters;
+    assert_eq!(g.panicked, 1, "{g:?}");
+    assert_eq!(g.served + 1, g.admitted, "{g:?}");
+    let f = &report.tenant("flood").unwrap().counters;
+    assert!(f.shed > 0, "{f:?}");
+    let s = &report.tenant("slow").unwrap().counters;
+    assert!(s.deadline_expired > 0, "{s:?}");
+    // The flaky client's in-flight work was still answered; the server
+    // noticed the dead connection (reader error or undeliverable write).
+    let fl = &report.tenant("flaky").unwrap().counters;
+    assert_eq!(fl.terminal(), fl.admitted, "{fl:?}");
+    assert!(
+        report.disconnects >= 1 || report.undelivered >= 1,
+        "server must notice the mid-stream disconnect: {report}"
+    );
+    let totals = report.totals();
+    assert_eq!(totals.terminal(), totals.admitted, "global drain invariant: {totals:?}");
+}
