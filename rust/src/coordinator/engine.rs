@@ -33,9 +33,9 @@ use super::metrics::{LatencyHistogram, TenantTraffic, TrafficCounters, TrafficRe
 use super::pipeline::{
     estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
 };
-use super::serveset::{ServeSet, SystemHandle};
-use crate::rtl::{self, PiModuleDesign};
-use crate::synth::{LaneWidth, Netlist};
+use super::serveset::{dispatch_flood, FusedPlan, ServeSet, SystemHandle};
+use crate::rtl;
+use crate::synth::LaneWidth;
 
 /// What a traffic request asks the engine to compute.
 #[derive(Clone, Debug)]
@@ -108,6 +108,10 @@ struct Inner {
     /// tenant index → serve-set system index.
     tenant_system: Vec<usize>,
     handles: Vec<SystemHandle>,
+    /// The serve set's fused evaluation state at engine start: when
+    /// present, power batches run as one sharded fused evaluation
+    /// instead of per-netlist grouping (bit-identical results).
+    fused: Option<Arc<FusedPlan>>,
     width: LaneWidth,
     queues: TenantQueues<Item>,
     metrics: Mutex<MetricsState>,
@@ -188,6 +192,7 @@ impl TrafficEngine {
             tenant_idx,
             tenant_system,
             handles,
+            fused: set.fusion_shared(),
             width: set.lane_width(),
             faults,
             default_deadline: admission.default_deadline,
@@ -303,6 +308,12 @@ impl TrafficEngine {
     /// The live report, rendered (wire `stats` requests).
     pub fn stats_text(&self) -> String {
         self.report().to_string()
+    }
+
+    /// The live report, machine-readable (wire `stats` requests with
+    /// the JSON format flag).
+    pub fn stats_json(&self) -> String {
+        self.report().to_json()
     }
 
     /// One-line liveness summary (wire `health` requests).
@@ -481,11 +492,11 @@ fn process_batch(inner: &Inner, batch: Vec<Item>) {
         }
     }
 
-    // Power estimation: one cross-system grouped dispatch for the whole
-    // batch (the lane-packing path the shared frontend exists for).
+    // Power estimation: one cross-system dispatch for the whole batch —
+    // the sharded fused evaluation when the serve set enabled fusion,
+    // else per-netlist grouping (the lane-packing path the shared
+    // frontend exists for). The two are bit-identical.
     if !power_items.is_empty() {
-        let targets: Vec<(&Netlist, &PiModuleDesign)> =
-            inner.handles.iter().map(|h| (h.netlist(), h.design())).collect();
         let tagged: Vec<SystemPowerRequest> = power_items
             .iter()
             .map(|i| match &i.payload {
@@ -497,7 +508,13 @@ fn process_batch(inner: &Inner, batch: Vec<Item>) {
             })
             .collect();
         let outcome = catch_unwind(AssertUnwindSafe(|| {
-            estimate_power_requests_grouped(&targets, &tagged, inner.activations, inner.width)
+            dispatch_flood(
+                &inner.handles,
+                inner.fused.as_deref(),
+                &tagged,
+                inner.activations,
+                inner.width,
+            )
         }));
         match outcome {
             Ok(estimates) => {
@@ -804,6 +821,57 @@ mod tests {
             Err(ServeError::Shed { retry_after_ms }) => assert_eq!(retry_after_ms, 0),
             other => panic!("expected Shed, got {other:?}"),
         }
+    }
+
+    /// An engine started on a fusion-enabled set must answer power
+    /// requests through the sharded fused evaluation with estimates
+    /// bit-identical to the grouped path.
+    #[test]
+    fn fused_engine_power_matches_grouped_engine_power() {
+        let mut answers = Vec::new();
+        for fuse in [false, true] {
+            let mut set =
+                ServeSet::boot(&["pendulum", "spring_mass"], FlowConfig::default(), None)
+                    .unwrap();
+            if fuse {
+                set.enable_fusion(2);
+            }
+            let engine = TrafficEngine::start(
+                &set,
+                AdmissionConfig::one_tenant_per_system(&set.systems()),
+                EngineConfig::default(),
+                FaultPlan::none(),
+            )
+            .unwrap();
+            let (tx, rx) = mpsc::channel();
+            for (id, tenant) in [(0u64, "pendulum"), (1, "spring_mass"), (2, "pendulum")] {
+                engine
+                    .submit(
+                        tenant,
+                        RequestPayload::Power(PowerRequest {
+                            seed: 0xCAFE + id as u32,
+                            f_hz: 6.0e6,
+                        }),
+                        None,
+                        id,
+                        tx.clone(),
+                    )
+                    .unwrap();
+            }
+            let mut got: Vec<(u64, f64, u64)> = (0..3)
+                .map(|_| {
+                    let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                    match reply.result.unwrap() {
+                        TrafficResponse::Power(est) => (reply.id, est.mw, est.cycles),
+                        other => panic!("expected Power, got {other:?}"),
+                    }
+                })
+                .collect();
+            got.sort_by_key(|&(id, ..)| id);
+            answers.push(got);
+            engine.shutdown();
+        }
+        assert_eq!(answers[0], answers[1], "fused engine must match grouped engine");
     }
 
     #[test]

@@ -145,6 +145,28 @@ pub struct TrafficReport {
     pub engine_panicked: bool,
 }
 
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// tenant names are the only free-form strings on the export path.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn counters_json(c: &TrafficCounters) -> String {
+    format!(
+        "{{\"admitted\":{},\"served\":{},\"shed\":{},\"deadline_expired\":{},\"panicked\":{},\"protocol_errors\":{}}}",
+        c.admitted, c.served, c.shed, c.deadline_expired, c.panicked, c.protocol_errors
+    )
+}
+
 impl TrafficReport {
     /// Counters summed over all tenants.
     pub fn totals(&self) -> TrafficCounters {
@@ -157,6 +179,42 @@ impl TrafficReport {
 
     pub fn tenant(&self, name: &str) -> Option<&TenantTraffic> {
         self.tenants.iter().find(|t| t.tenant == name)
+    }
+
+    /// Machine-readable rendering of the snapshot — the JSON variant of
+    /// the wire `stats` operation. Hand-rolled (no serde in-tree):
+    /// `totals` precedes `tenants`, so flat key scans find the global
+    /// counters first.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"engine_panicked\":{},", self.engine_panicked));
+        out.push_str(&format!("\"wall_s\":{:.6},", self.wall.as_secs_f64()));
+        out.push_str(&format!("\"totals\":{},", counters_json(&self.totals())));
+        out.push_str(&format!(
+            "\"tenant_unknown\":{},\"disconnects\":{},\"undelivered\":{},",
+            self.tenant_unknown, self.disconnects, self.undelivered
+        ));
+        out.push_str("\"tenants\":[");
+        for (i, t) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"tenant\":\"{}\",\"counters\":{},\"latency_us\":{{\"count\":{},\"mean\":{:.1},\"p50\":{},\"p99\":{},\"p999\":{},\"max\":{}}},\"queue_depth\":{},\"queue_oldest_ms\":{}}}",
+                json_escape(&t.tenant),
+                counters_json(&t.counters),
+                t.latency.count(),
+                t.latency.mean_us(),
+                t.latency.percentile_us(0.50),
+                t.latency.percentile_us(0.99),
+                t.latency.percentile_us(0.999),
+                t.latency.max_us(),
+                t.queue_depth,
+                t.queue_oldest_ms
+            ));
+        }
+        out.push_str("]}");
+        out
     }
 }
 
@@ -369,6 +427,39 @@ mod tests {
             );
             assert!(p999 <= h.max_us().max(1), "p999 exceeds observed max");
         }
+    }
+
+    #[test]
+    fn report_json_is_balanced_and_escaped() {
+        let mut lat = LatencyHistogram::new();
+        lat.record(Duration::from_micros(42));
+        let report = TrafficReport {
+            tenants: vec![TenantTraffic {
+                tenant: "we\"ird\\name".into(),
+                counters: TrafficCounters { admitted: 3, served: 2, shed: 1, ..Default::default() },
+                latency: lat,
+                queue_depth: 1,
+                queue_oldest_ms: 7,
+            }],
+            tenant_unknown: 2,
+            disconnects: 1,
+            undelivered: 0,
+            wall: Duration::from_millis(1500),
+            engine_panicked: false,
+        };
+        let json = report.to_json();
+        // Structurally balanced and free of raw control characters.
+        let opens = json.matches(['{', '[']).count();
+        let closes = json.matches(['}', ']']).count();
+        assert_eq!(opens, closes, "{json}");
+        assert!(!json.chars().any(|c| (c as u32) < 0x20), "{json}");
+        // Totals precede tenants so flat key scans hit globals first.
+        assert!(json.find("\"totals\"").unwrap() < json.find("\"tenants\"").unwrap());
+        assert!(json.contains("\"admitted\":3"), "{json}");
+        assert!(json.contains("\"tenant_unknown\":2"), "{json}");
+        assert!(json.contains("we\\\"ird\\\\name"), "{json}");
+        assert!(json.contains("\"p99\":"), "{json}");
+        assert!(json.starts_with('{') && json.ends_with('}'));
     }
 
     #[test]

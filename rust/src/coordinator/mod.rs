@@ -13,7 +13,10 @@
 //! hands each per-system [`InferenceServer`] a [`SystemHandle`] view of
 //! its compiled state, and [`PowerRequest`] floods from every system
 //! run through one global width-aware [`PowerBatcher`] that packs
-//! word-parallel lanes across systems.
+//! word-parallel lanes across systems — or, with fusion enabled
+//! ([`ServeSet::enable_fusion`]), through one sharded evaluation of the
+//! fused multi-system netlist ([`crate::shard`]), bit-identical either
+//! way.
 
 //! Network deployments add three layers in front of the engine:
 //! [`net`] (TCP framing + per-connection threads) → [`admission`]
@@ -38,13 +41,14 @@ pub use engine::{EngineConfig, RequestPayload, TrafficEngine, TrafficReply, Traf
 pub use error::ServeError;
 pub use faults::{FaultAction, FaultPlan};
 pub use metrics::{LatencyHistogram, ServeStats, TrafficCounters, TrafficReport};
-pub use net::{DriverConfig, DriverReport, NetClient, NetServer};
+pub use net::{DriverConfig, DriverReport, NetClient, NetServer, StatsProbe};
 pub use pipeline::{
-    estimate_power_requests, estimate_power_requests_grouped, DatasetStats, Pipeline, PiPath,
-    PowerEstimate, PowerRequest, Prediction, SensorInput, SystemPowerRequest,
+    estimate_power_requests, estimate_power_requests_fused, estimate_power_requests_grouped,
+    DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest, Prediction, SensorInput,
+    SystemPowerRequest,
 };
 pub use server::{InferenceServer, Request, ServerConfig};
-pub use serveset::{FloodStats, PowerBatcher, ServeSet, SystemHandle};
+pub use serveset::{FloodStats, FusedPlan, PowerBatcher, ServeSet, SystemHandle};
 
 use crate::fixedpoint::Q16_15;
 use crate::flow::{ArtifactStore, FlowConfig, StageCounts};
@@ -146,6 +150,13 @@ pub struct ListenConfig {
     pub queue_cap: usize,
     /// Default request deadline (requests may carry their own).
     pub deadline_ms: u64,
+    /// Cap on concurrent TCP connections (0 = unlimited); accepts over
+    /// the cap get a typed shed handshake and a clean close.
+    pub max_conns: usize,
+    /// Fuse every served system's netlist into one module partitioned
+    /// into this many shards and route power floods through the sharded
+    /// evaluation (0 = per-netlist grouped dispatch).
+    pub fuse_shards: usize,
 }
 
 impl Default for ListenConfig {
@@ -155,6 +166,8 @@ impl Default for ListenConfig {
             burst: 64.0,
             queue_cap: 1024,
             deadline_ms: 1000,
+            max_conns: 0,
+            fuse_shards: 0,
         }
     }
 }
@@ -183,7 +196,11 @@ pub fn serve_listen(
 ) -> anyhow::Result<ListenHandle> {
     let activations = config.power_samples;
     let t0 = Instant::now();
-    let set = ServeSet::boot(systems, config, store)?;
+    let mut set = ServeSet::boot(systems, config, store)?;
+    if listen_config.fuse_shards > 0 {
+        // Before the engine starts: it snapshots the fusion state.
+        set.enable_fusion(listen_config.fuse_shards);
+    }
     let boot_time = t0.elapsed();
     let counts = set.total_counts();
     let mut admission = AdmissionConfig::one_tenant_per_system(&set.systems());
@@ -199,7 +216,7 @@ pub fn serve_listen(
         EngineConfig { activations, max_batch: 0 },
         FaultPlan::none(),
     )?);
-    let server = NetServer::start(engine, listen)?;
+    let server = NetServer::start_capped(engine, listen, listen_config.max_conns)?;
     let mut boot = String::new();
     boot.push_str(&format!(
         "serve set:   {} systems ({}) on one warm FlowSet\n",
@@ -213,6 +230,16 @@ pub fn serve_listen(
         counts.disk_hits,
         set.lane_width().lanes()
     ));
+    if let Some(f) = set.fusion() {
+        boot.push_str(&format!(
+            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts)\n",
+            f.artifact.fused.netlist.len(),
+            f.artifact.fused.member_count(),
+            f.plan.shards,
+            f.plan.cuts.comb_cuts.len(),
+            f.plan.cuts.reg_cuts.len()
+        ));
+    }
     boot.push_str(&format!("listening:   {} (net → admission → dispatch)\n", server.local_addr()));
     Ok(ListenHandle { server, boot, counts })
 }
@@ -224,21 +251,31 @@ pub fn serve_listen(
 /// the cross-system [`PowerBatcher`] with `flood` requests spread
 /// round-robin over the systems, and — when the AOT artifacts exist and
 /// `samples > 0` — trains and serves a synthetic stream per system
-/// through [`InferenceServer::start_shared`]. Returns the report text
-/// and the set's stage-cache telemetry (`recomputes() == 0` on a warm
-/// reboot — the acceptance gate CI greps for).
+/// through [`InferenceServer::start_shared`]. With `fuse_shards > 0`
+/// the set's netlists are fused into one module partitioned that many
+/// ways and the flood runs through the sharded evaluation
+/// ([`ServeSet::enable_fusion`]) — bit-identical estimates, one fused
+/// pass per lane round. Returns the report text and the set's
+/// stage-cache telemetry (`recomputes() == 0` on a warm reboot — the
+/// acceptance gate CI greps for).
+#[allow(clippy::too_many_arguments)]
 pub fn serve_multi(
     artifacts: &str,
     systems: &[&str],
     samples: usize,
     max_batch: usize,
     flood: usize,
+    fuse_shards: usize,
     config: FlowConfig,
     store: Option<Arc<ArtifactStore>>,
 ) -> anyhow::Result<(String, StageCounts)> {
     let activations = config.power_samples;
     let t0 = Instant::now();
-    let set = ServeSet::boot(systems, config, store)?;
+    let mut set = ServeSet::boot(systems, config, store)?;
+    if fuse_shards > 0 {
+        // Before the batcher spawns: it snapshots the fusion state.
+        set.enable_fusion(fuse_shards);
+    }
     let boot = t0.elapsed();
     let counts = set.total_counts();
 
@@ -255,6 +292,16 @@ pub fn serve_multi(
         counts.disk_hits,
         set.lane_width().lanes()
     ));
+    if let Some(f) = set.fusion() {
+        out.push_str(&format!(
+            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts)\n",
+            f.artifact.fused.netlist.len(),
+            f.artifact.fused.member_count(),
+            f.plan.shards,
+            f.plan.cuts.comb_cuts.len(),
+            f.plan.cuts.reg_cuts.len()
+        ));
+    }
 
     if flood > 0 {
         // Mixed-system power-request flood through the global batcher:

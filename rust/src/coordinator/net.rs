@@ -21,11 +21,15 @@
 //! ```text
 //! pi:     req_id:u32  deadline_us:u32  tlen:u8 tenant[tlen]  nvals:u16  vals[nvals]:i64
 //! power:  req_id:u32  deadline_us:u32  tlen:u8 tenant[tlen]  seed:u32   f_hz:f64
-//! stats:  req_id:u32
+//! stats:  req_id:u32  [format:u8]
 //! health: req_id:u32
 //! ```
 //!
-//! `deadline_us == 0` means "use the server's default deadline".
+//! `deadline_us == 0` means "use the server's default deadline". A
+//! `stats` request may carry a trailing format byte: `0` (or absent —
+//! the pre-flag wire form) renders the report as text, `1` as the
+//! machine-readable JSON of [`TrafficReport::to_json`]; any other value
+//! is a protocol error.
 //!
 //! Response payloads start with `req_id:u32 status:u8`, where `status`
 //! is [`CODE_OK`](super::error::CODE_OK) or a
@@ -40,6 +44,12 @@
 //! unknown/panic/protocol: len:u32  utf8-detail[len]
 //! ```
 //!
+//! One frame originates server-side without a request: a connection
+//! accepted over the [`NetServer::start_capped`] concurrency cap is
+//! answered with a `kind 0x05 | 0x80` handshake frame carrying
+//! `req_id 0, status shed, retry_after_ms:u32`, then closed (FIN) —
+//! a typed refusal, never a silent hang.
+//!
 //! # Threading
 //!
 //! One blocking accept loop; per connection, one reader thread (decodes
@@ -53,7 +63,7 @@
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -80,8 +90,14 @@ pub const KIND_POWER: u8 = 0x02;
 pub const KIND_STATS: u8 = 0x03;
 /// Request kind: one-line liveness check.
 pub const KIND_HEALTH: u8 = 0x04;
+/// Connection-level control: the server's over-capacity refusal
+/// handshake (response direction only — clients never send it).
+pub const KIND_CONN: u8 = 0x05;
 /// A response's kind is its request's kind with this bit set.
 pub const RESPONSE_BIT: u8 = 0x80;
+
+/// Retry hint carried by the over-capacity connection handshake.
+const CONN_SHED_RETRY_MS: u32 = 50;
 
 /// Correlate a reply back to its response kind + request id: the engine
 /// echoes the 64-bit id verbatim, so the writer thread recovers both.
@@ -176,8 +192,12 @@ impl<'a> Cursor<'a> {
         String::from_utf8(self.take(n)?.to_vec()).map_err(|e| e.to_string())
     }
 
+    fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
     fn done(&self) -> Result<(), String> {
-        if self.pos == self.buf.len() {
+        if self.at_end() {
             Ok(())
         } else {
             Err(format!("{} trailing bytes after payload", self.buf.len() - self.pos))
@@ -197,7 +217,11 @@ enum DecodedRequest {
         deadline: Option<Duration>,
         payload: RequestPayload,
     },
-    Stats { req_id: u32 },
+    Stats {
+        req_id: u32,
+        /// Render the report as JSON instead of text.
+        json: bool,
+    },
     Health { req_id: u32 },
 }
 
@@ -220,8 +244,19 @@ fn decode_request_body(
 ) -> Result<DecodedRequest, String> {
     match kind {
         KIND_STATS => {
+            // Optional trailing format byte; its absence is the
+            // pre-flag wire form and means text.
+            let json = if c.at_end() {
+                false
+            } else {
+                match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => return Err(format!("unknown stats format {other} (0=text, 1=json)")),
+                }
+            };
             c.done()?;
-            Ok(DecodedRequest::Stats { req_id })
+            Ok(DecodedRequest::Stats { req_id, json })
         }
         KIND_HEALTH => {
             c.done()?;
@@ -390,21 +425,44 @@ pub struct NetServer {
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+    /// Connections currently inside `conn_loop` (the `max_conns` gauge).
+    live: Arc<AtomicUsize>,
+    /// Connections refused with the over-capacity handshake.
+    conn_shed: Arc<AtomicU64>,
 }
 
 impl NetServer {
-    /// Bind `listen` (e.g. `127.0.0.1:0`) and start accepting.
+    /// Bind `listen` (e.g. `127.0.0.1:0`) and start accepting, with no
+    /// concurrency cap.
     pub fn start(engine: Arc<TrafficEngine>, listen: &str) -> anyhow::Result<NetServer> {
+        NetServer::start_capped(engine, listen, 0)
+    }
+
+    /// Bind `listen` and start accepting at most `max_conns` concurrent
+    /// connections (`0` = unlimited). A connection accepted over the
+    /// cap is answered with one typed handshake frame — `kind`
+    /// [`KIND_CONN`]` | `[`RESPONSE_BIT`], `req_id 0`, status shed with
+    /// a retry hint — and closed cleanly (FIN), never silently hung or
+    /// dropped. The slot frees when a live connection's reader exits.
+    pub fn start_capped(
+        engine: Arc<TrafficEngine>,
+        listen: &str,
+        max_conns: usize,
+    ) -> anyhow::Result<NetServer> {
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("cannot bind `{listen}`: {e}"))?;
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
+        let live = Arc::new(AtomicUsize::new(0));
+        let conn_shed = Arc::new(AtomicU64::new(0));
         let accept = {
             let engine = engine.clone();
             let stop = stop.clone();
             let conns = conns.clone();
+            let live = live.clone();
+            let conn_shed = conn_shed.clone();
             std::thread::Builder::new()
                 .name("dimsynth-net-accept".to_string())
                 .spawn(move || {
@@ -414,11 +472,28 @@ impl NetServer {
                         }
                         let Ok(stream) = incoming else { continue };
                         let _ = stream.set_nodelay(true);
+                        if max_conns > 0 && live.load(Ordering::SeqCst) >= max_conns {
+                            conn_shed.fetch_add(1, Ordering::SeqCst);
+                            shed_connection(&stream);
+                            continue;
+                        }
                         let Ok(reader_stream) = stream.try_clone() else { continue };
+                        live.fetch_add(1, Ordering::SeqCst);
                         let engine = engine.clone();
+                        let conn_live = live.clone();
                         let handle = std::thread::Builder::new()
                             .name("dimsynth-net-conn".to_string())
-                            .spawn(move || conn_loop(reader_stream, &engine))
+                            .spawn(move || {
+                                // Frees the slot however the loop exits.
+                                struct Slot(Arc<AtomicUsize>);
+                                impl Drop for Slot {
+                                    fn drop(&mut self) {
+                                        self.0.fetch_sub(1, Ordering::SeqCst);
+                                    }
+                                }
+                                let _slot = Slot(conn_live);
+                                conn_loop(reader_stream, &engine);
+                            })
                             .expect("spawn connection thread");
                         conns
                             .lock()
@@ -427,12 +502,30 @@ impl NetServer {
                     }
                 })?
         };
-        Ok(NetServer { engine, local_addr, stop, accept: Some(accept), conns })
+        Ok(NetServer {
+            engine,
+            local_addr,
+            stop,
+            accept: Some(accept),
+            conns,
+            live,
+            conn_shed,
+        })
     }
 
     /// The bound address (resolves `:0` to the real port).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Connections currently being served.
+    pub fn live_connections(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Connections refused with the over-capacity handshake so far.
+    pub fn connections_shed(&self) -> u64 {
+        self.conn_shed.load(Ordering::SeqCst)
     }
 
     /// Graceful drain: stop accepting, half-close every connection's
@@ -462,6 +555,19 @@ impl NetServer {
         report.engine_panicked = drained.engine_panicked;
         report
     }
+}
+
+/// Refuse one over-capacity connection: write the typed shed handshake
+/// and half-close the write side (FIN). Best-effort — a peer that
+/// vanished mid-handshake is already gone.
+fn shed_connection(stream: &TcpStream) {
+    let reply = TrafficReply {
+        id: pack_id(KIND_CONN, 0),
+        result: Err(ServeError::Shed { retry_after_ms: CONN_SHED_RETRY_MS }),
+    };
+    let (kind, payload) = encode_response(&reply);
+    let _ = write_frame(&mut &*stream, kind, &payload);
+    let _ = stream.shutdown(Shutdown::Write);
 }
 
 fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
@@ -508,10 +614,11 @@ fn handle_frame(
     tx: &Sender<TrafficReply>,
 ) -> bool {
     match decode_request(kind, payload) {
-        Ok(DecodedRequest::Stats { req_id }) => {
+        Ok(DecodedRequest::Stats { req_id, json }) => {
+            let body = if json { engine.stats_json() } else { engine.stats_text() };
             let _ = tx.send(TrafficReply {
                 id: pack_id(KIND_STATS, req_id),
-                result: Ok(TrafficResponse::Text(engine.stats_text())),
+                result: Ok(TrafficResponse::Text(body)),
             });
             true
         }
@@ -635,6 +742,15 @@ impl NetClient {
         self.send(KIND_STATS, &req_id.to_le_bytes())
     }
 
+    /// Submit a stats request with the machine-readable format flag:
+    /// the response text is the JSON of
+    /// [`TrafficReport::to_json`](super::metrics::TrafficReport::to_json).
+    pub fn send_stats_json(&mut self, req_id: u32) -> anyhow::Result<()> {
+        let mut p = req_id.to_le_bytes().to_vec();
+        p.push(1);
+        self.send(KIND_STATS, &p)
+    }
+
     pub fn send_health(&mut self, req_id: u32) -> anyhow::Result<()> {
         self.send(KIND_HEALTH, &req_id.to_le_bytes())
     }
@@ -672,6 +788,10 @@ pub struct DriverConfig {
     /// Drop the connection after reading this many responses, leaving
     /// the rest in flight (the mid-request-disconnect injection).
     pub disconnect_after_reads: Option<usize>,
+    /// After the stream drains, fetch the server's stats in the JSON
+    /// wire format and parse the global counters into
+    /// [`DriverReport::server_stats`].
+    pub probe_stats_json: bool,
 }
 
 impl DriverConfig {
@@ -686,7 +806,41 @@ impl DriverConfig {
             deadline_us: 0,
             gap: Duration::ZERO,
             disconnect_after_reads: None,
+            probe_stats_json: false,
         }
+    }
+}
+
+/// Global counters parsed by the driver from the JSON `stats` wire
+/// variant — the machine-readable view of what the server recorded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsProbe {
+    pub admitted: u64,
+    pub served: u64,
+    pub shed: u64,
+}
+
+/// Scan `json` for `"key":<digits>` and parse the first match — enough
+/// for the global counters, because [`TrafficReport::to_json`] emits
+/// `totals` before any per-tenant object.
+///
+/// [`TrafficReport::to_json`]: super::metrics::TrafficReport::to_json
+fn json_counter(json: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\":");
+    let at = json.find(&needle)? + needle.len();
+    let rest = &json[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+impl StatsProbe {
+    /// Parse the global counters out of a JSON stats response.
+    pub fn parse(json: &str) -> Option<StatsProbe> {
+        Some(StatsProbe {
+            admitted: json_counter(json, "admitted")?,
+            served: json_counter(json, "served")?,
+            shed: json_counter(json, "shed")?,
+        })
     }
 }
 
@@ -706,6 +860,8 @@ pub struct DriverReport {
     pub latency: LatencyHistogram,
     /// The driver dropped the connection on purpose.
     pub disconnected: bool,
+    /// Parsed JSON stats, when [`DriverConfig::probe_stats_json`] ran.
+    pub server_stats: Option<StatsProbe>,
 }
 
 impl DriverReport {
@@ -779,6 +935,21 @@ pub fn run_driver(addr: &str, cfg: &DriverConfig) -> anyhow::Result<DriverReport
         if disconnect_now(reads) {
             report.disconnected = true;
             return Ok(report);
+        }
+    }
+    if cfg.probe_stats_json {
+        // The stream is drained, so the next frame is this answer.
+        client.send_stats_json(u32::MAX)?;
+        let resp = client.recv()?;
+        anyhow::ensure!(resp.kind == KIND_STATS, "expected a stats response");
+        match resp.result {
+            Ok(TrafficResponse::Text(json)) => {
+                report.server_stats = Some(
+                    StatsProbe::parse(&json)
+                        .ok_or_else(|| anyhow::anyhow!("unparseable stats JSON: {json}"))?,
+                );
+            }
+            other => anyhow::bail!("stats probe failed: {other:?}"),
         }
     }
     Ok(report)
@@ -872,7 +1043,49 @@ mod tests {
         // Trailing bytes are rejected, not ignored.
         let mut p = 9u32.to_le_bytes().to_vec();
         p.push(0);
+        assert!(decode_request(KIND_HEALTH, &p).is_err());
+        // Stats tolerates exactly one trailing byte (the format flag);
+        // anything beyond is still trailing garbage.
+        let mut p = 9u32.to_le_bytes().to_vec();
+        p.extend_from_slice(&[1, 0]);
         assert!(decode_request(KIND_STATS, &p).is_err());
+    }
+
+    #[test]
+    fn stats_format_flag_selects_rendering() {
+        // Bare request (pre-flag wire form): text.
+        match decode_request(KIND_STATS, &9u32.to_le_bytes()).unwrap() {
+            DecodedRequest::Stats { req_id, json } => {
+                assert_eq!(req_id, 9);
+                assert!(!json);
+            }
+            _ => panic!("expected Stats"),
+        }
+        for (flag, want) in [(0u8, false), (1, true)] {
+            let mut p = 9u32.to_le_bytes().to_vec();
+            p.push(flag);
+            match decode_request(KIND_STATS, &p).unwrap() {
+                DecodedRequest::Stats { json, .. } => assert_eq!(json, want),
+                _ => panic!("expected Stats"),
+            }
+        }
+        // Unknown flag values refuse typed, with the req_id recovered.
+        let mut p = 9u32.to_le_bytes().to_vec();
+        p.push(7);
+        let (req_id, e) = decode_request(KIND_STATS, &p).unwrap_err();
+        assert_eq!(req_id, 9);
+        assert!(e.to_string().contains("stats format"), "{e}");
+    }
+
+    #[test]
+    fn stats_probe_parses_the_json_wire_variant() {
+        assert_eq!(
+            StatsProbe::parse("{\"totals\":{\"admitted\":8,\"served\":7,\"shed\":1}}"),
+            Some(StatsProbe { admitted: 8, served: 7, shed: 1 })
+        );
+        assert_eq!(StatsProbe::parse("not json"), None);
+        assert_eq!(json_counter("{\"served\":12,", "served"), Some(12));
+        assert_eq!(json_counter("{\"served\":}", "served"), None);
     }
 
     #[test]
@@ -984,5 +1197,113 @@ mod tests {
         assert_eq!(t.counters.served, 24);
         assert_eq!(t.counters.terminal(), t.counters.admitted);
         assert_eq!(final_report.tenant_unknown, 1);
+    }
+
+    fn boot_pendulum_server(max_conns: usize) -> (NetServer, String, usize) {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let ports = set.handle_at(0).design().num_inputs();
+        let engine = Arc::new(
+            TrafficEngine::start(
+                &set,
+                AdmissionConfig::one_tenant_per_system(&["pendulum"]),
+                EngineConfig::default(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        let server = NetServer::start_capped(engine, "127.0.0.1:0", max_conns).unwrap();
+        let addr = server.local_addr().to_string();
+        (server, addr, ports)
+    }
+
+    #[test]
+    fn stats_json_wire_variant_and_driver_probe() {
+        let (server, addr, ports) = boot_pendulum_server(0);
+
+        // The traffic driver fetches and parses the JSON variant.
+        let report = run_driver(&addr, &DriverConfig {
+            requests: 8,
+            window: 4,
+            seed: 0xBEE,
+            probe_stats_json: true,
+            ..DriverConfig::new("pendulum", ports)
+        })
+        .unwrap();
+        assert_eq!(report.ok, 8, "{report:?}");
+        let probe = report.server_stats.expect("probe parsed");
+        assert!(probe.served >= 8, "{probe:?}");
+        assert!(probe.admitted >= probe.served, "{probe:?}");
+
+        // Raw client: both renderings from the same connection.
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.send_stats(1).unwrap();
+        match client.recv().unwrap().result.unwrap() {
+            TrafficResponse::Text(s) => {
+                assert!(s.contains("admitted") && !s.starts_with('{'), "{s}")
+            }
+            other => panic!("expected Text, got {other:?}"),
+        }
+        client.send_stats_json(2).unwrap();
+        match client.recv().unwrap().result.unwrap() {
+            TrafficResponse::Text(s) => {
+                assert!(s.starts_with('{') && s.contains("\"totals\""), "{s}");
+                assert!(StatsProbe::parse(&s).is_some(), "{s}");
+            }
+            other => panic!("expected Text, got {other:?}"),
+        }
+        // A bad format flag refuses typed, then the server stops
+        // trusting the byte stream.
+        let mut p = 3u32.to_le_bytes().to_vec();
+        p.push(9);
+        client.send(KIND_STATS, &p).unwrap();
+        match client.recv().unwrap().result.unwrap_err() {
+            ServeError::Protocol { detail } => assert!(detail.contains("stats format"), "{detail}"),
+            other => panic!("expected Protocol, got {other}"),
+        }
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn conn_cap_sheds_typed_handshake_and_frees_slots() {
+        let (server, addr, _ports) = boot_pendulum_server(1);
+
+        // First connection owns the only slot (a served round trip
+        // proves the accept loop registered it).
+        let mut c1 = NetClient::connect(&addr).unwrap();
+        c1.send_health(1).unwrap();
+        assert!(c1.recv().unwrap().result.is_ok());
+        assert_eq!(server.live_connections(), 1);
+
+        // Over the cap: one typed handshake frame, then a clean close.
+        let mut c2 = NetClient::connect(&addr).unwrap();
+        let resp = c2.recv().unwrap();
+        assert_eq!((resp.kind, resp.req_id), (KIND_CONN, 0));
+        match resp.result.unwrap_err() {
+            ServeError::Shed { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected Shed, got {other}"),
+        }
+        let closed = c2.recv().unwrap_err().to_string();
+        assert!(closed.contains("closed"), "{closed}");
+        assert_eq!(server.connections_shed(), 1);
+        drop(c2);
+
+        // Freeing the slot re-admits: once c1's reader notices the EOF,
+        // a fresh connection serves again.
+        drop(c1);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let mut c3 = NetClient::connect(&addr).unwrap();
+            c3.send_health(9).unwrap();
+            match c3.recv().unwrap().result {
+                Ok(_) => break,
+                Err(ServeError::Shed { .. }) => {
+                    assert!(Instant::now() < deadline, "cap slot never freed");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(other) => panic!("unexpected {other}"),
+            }
+        }
+        server.shutdown();
     }
 }

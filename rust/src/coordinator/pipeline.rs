@@ -336,6 +336,9 @@ pub fn estimate_power_requests_grouped(
         synth::LaneWidth::W256 => {
             estimate_power_requests_grouped_w::<synth::W256>(targets, requests, activations)
         }
+        synth::LaneWidth::W512 => {
+            estimate_power_requests_grouped_w::<synth::W512>(targets, requests, activations)
+        }
     }
 }
 
@@ -400,6 +403,127 @@ fn estimate_power_requests_grouped_w<W: synth::LaneWord>(
         vec![PowerEstimate { mw: 0.0, toggles_per_cycle: 0.0, cycles: 0 }; requests.len()];
     for (pos, estimate) in answers {
         out[pos as usize] = estimate;
+    }
+    out
+}
+
+/// Dispatch a mixed-system flood through **one fused sharded
+/// evaluation** per round instead of one simulation pass per system per
+/// chunk: requests are grouped and chunked exactly like
+/// [`estimate_power_requests_grouped`], but round `j` — the `j`-th
+/// lane-width chunk of *every* system — runs as a single
+/// [`ShardSim`](crate::shard::ShardSim) pass over the fused netlist,
+/// its K persistent shard workers sweeping all member systems at once.
+///
+/// Chunking, lane packing, and padding seeds are identical to the
+/// grouped dispatch, and fusion keeps member state disjoint, so every
+/// estimate is **bit-identical** to grouped (and per-system, and
+/// sequential) dispatch of the same requests — tested below.
+///
+/// `designs` is the per-member design list in fuse (= boot) order;
+/// `plan` must partition `fused`. Panics on a request with an
+/// out-of-range system index (like the grouped dispatch; serving
+/// frontends validate at the submission boundary).
+pub fn estimate_power_requests_fused(
+    fused: &crate::shard::FusedNetlist,
+    plan: &crate::shard::ShardPlan,
+    designs: &[&PiModuleDesign],
+    requests: &[SystemPowerRequest],
+    activations: u32,
+    width: synth::LaneWidth,
+) -> Vec<PowerEstimate> {
+    match width {
+        synth::LaneWidth::W64 => {
+            estimate_power_requests_fused_w::<u64>(fused, plan, designs, requests, activations)
+        }
+        synth::LaneWidth::W256 => estimate_power_requests_fused_w::<synth::W256>(
+            fused, plan, designs, requests, activations,
+        ),
+        synth::LaneWidth::W512 => estimate_power_requests_fused_w::<synth::W512>(
+            fused, plan, designs, requests, activations,
+        ),
+    }
+}
+
+/// Monomorphized core of [`estimate_power_requests_fused`].
+fn estimate_power_requests_fused_w<W: synth::LaneWord>(
+    fused: &crate::shard::FusedNetlist,
+    plan: &crate::shard::ShardPlan,
+    designs: &[&PiModuleDesign],
+    requests: &[SystemPowerRequest],
+    activations: u32,
+) -> Vec<PowerEstimate> {
+    use crate::shard::{measure_fused_activity, MemberStim, ShardSim};
+
+    assert_eq!(
+        designs.len(),
+        fused.member_count(),
+        "one design per fused member, in fuse order"
+    );
+    // Same grouping and chunk geometry as the grouped dispatch: group
+    // request positions by system in arrival order, cut each group into
+    // lane-width chunks.
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); designs.len()];
+    for (pos, r) in requests.iter().enumerate() {
+        assert!(
+            r.system < designs.len(),
+            "request {pos} targets system {} of {}",
+            r.system,
+            designs.len()
+        );
+        groups[r.system].push(pos as u32);
+    }
+    let rounds = groups
+        .iter()
+        .map(|g| g.len().div_ceil(W::LANES))
+        .max()
+        .unwrap_or(0);
+    let mut out =
+        vec![PowerEstimate { mw: 0.0, toggles_per_cycle: 0.0, cycles: 0 }; requests.len()];
+    // Round j packs the j-th chunk of every system into one fused pass:
+    // a fresh sharded simulator (member state must start from reset,
+    // exactly like a fresh solo pass) drives all members' schedules at
+    // once, and each member's per-lane report scatters to its chunk.
+    for round in 0..rounds {
+        let mut sim: ShardSim<'_, W> = ShardSim::new(fused, plan);
+        let stims: Vec<MemberStim<'_>> = designs
+            .iter()
+            .enumerate()
+            .map(|(m, &design)| {
+                let group = &groups[m];
+                let start = round * W::LANES;
+                let chunk = &group[group.len().min(start)..group.len().min(start + W::LANES)];
+                let mut seeds = vec![0u32; W::LANES];
+                for (lane, slot) in seeds.iter_mut().enumerate() {
+                    *slot = match chunk.get(lane) {
+                        Some(&p) => requests[p as usize].request.seed,
+                        // Padding lanes: same seeds as the grouped
+                        // dispatch; results are dropped.
+                        None => 0x9E37_79B9 ^ lane as u32,
+                    };
+                }
+                MemberStim {
+                    design,
+                    activations: if chunk.is_empty() { 0 } else { activations },
+                    seeds,
+                }
+            })
+            .collect();
+        let reports = measure_fused_activity(&mut sim, &stims);
+        for (m, report) in reports.iter().enumerate() {
+            let group = &groups[m];
+            let start = round * W::LANES;
+            let chunk = &group[group.len().min(start)..group.len().min(start + W::LANES)];
+            for (lane, &p) in chunk.iter().enumerate() {
+                let lane_act = report.lane(lane);
+                let f_hz = requests[p as usize].request.f_hz;
+                out[p as usize] = PowerEstimate {
+                    mw: power::average_power_mw(&power::ICE40, &lane_act, f_hz),
+                    toggles_per_cycle: lane_act.toggles_per_cycle,
+                    cycles: report.cycles,
+                };
+            }
+        }
     }
     out
 }
@@ -519,6 +643,54 @@ mod tests {
                 assert_eq!(a.mw, b.mw, "system {sys} request {i}");
                 assert_eq!(a.toggles_per_cycle, b.toggles_per_cycle, "system {sys} request {i}");
                 assert_eq!(a.cycles, b.cycles, "system {sys} request {i}");
+            }
+        }
+    }
+
+    /// The fused sharded dispatch must answer a skewed mixed-system
+    /// flood bit-identically to the grouped per-system dispatch, at
+    /// every shard count — including K=1 (fusion alone) and K large
+    /// enough to force member splits with per-level sync.
+    #[test]
+    fn fused_dispatch_matches_grouped_dispatch() {
+        use crate::shard::{FusedNetlist, ShardPlan};
+
+        let mut pendulum = pendulum_flow();
+        let mut spring = Flow::for_system("spring_mass", FlowConfig::default()).unwrap();
+        let p_design = pendulum.rtl().unwrap().clone();
+        let s_design = spring.rtl().unwrap().clone();
+        let p_netlist = pendulum.netlist().unwrap().netlist.clone();
+        let s_netlist = spring.netlist().unwrap().netlist.clone();
+        let targets: Vec<(&crate::synth::Netlist, &PiModuleDesign)> =
+            vec![(&p_netlist, &p_design), (&s_netlist, &s_design)];
+
+        // Skewed 2:1 across systems, spilling into a second padded
+        // round for system 0.
+        let requests: Vec<SystemPowerRequest> = (0..70u32)
+            .map(|i| SystemPowerRequest {
+                system: (i % 3 == 2) as usize,
+                request: PowerRequest { seed: 0x7000 + i, f_hz: 6.0e6 + 2.0e6 * (i % 2) as f64 },
+            })
+            .collect();
+        let grouped =
+            estimate_power_requests_grouped(&targets, &requests, 2, synth::LaneWidth::W64);
+
+        let fused = FusedNetlist::fuse_refs(&[&p_netlist, &s_netlist]);
+        for k in [1usize, 2, 4] {
+            let plan = ShardPlan::partition(&fused, k);
+            let got = estimate_power_requests_fused(
+                &fused,
+                &plan,
+                &[&p_design, &s_design],
+                &requests,
+                2,
+                synth::LaneWidth::W64,
+            );
+            assert_eq!(got.len(), grouped.len());
+            for (i, (f, g)) in got.iter().zip(&grouped).enumerate() {
+                assert_eq!(f.mw, g.mw, "K={k} request {i}");
+                assert_eq!(f.toggles_per_cycle, g.toggles_per_cycle, "K={k} request {i}");
+                assert_eq!(f.cycles, g.cycles, "K={k} request {i}");
             }
         }
     }

@@ -29,10 +29,12 @@ use std::time::Duration;
 
 use super::batcher::{self, BatchOutcome, QueueGauge};
 use super::pipeline::{
-    estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
+    estimate_power_requests_fused, estimate_power_requests_grouped, PowerEstimate, PowerRequest,
+    SystemPowerRequest,
 };
-use crate::flow::{ArtifactStore, Flow, FlowConfig, FlowSet, StageCounts};
+use crate::flow::{ensure_fused, ArtifactStore, Flow, FlowConfig, FlowSet, StageCounts};
 use crate::rtl::PiModuleDesign;
+use crate::shard::ShardPlan;
 use crate::synth::techmap::MappedDesign;
 use crate::synth::{LaneWidth, Netlist};
 
@@ -46,6 +48,9 @@ pub struct SystemHandle {
     design: Arc<PiModuleDesign>,
     mapped: Arc<MappedDesign>,
     lane_width: LaneWidth,
+    /// The owning flow's netlist-stage fingerprint — the member key of
+    /// the cross-system fused stage ([`crate::flow::ensure_fused`]).
+    netlist_fp: u64,
 }
 
 impl SystemHandle {
@@ -57,9 +62,10 @@ impl SystemHandle {
     pub fn from_flow(flow: &mut Flow) -> anyhow::Result<SystemHandle> {
         let system = flow.id().to_string();
         let lane_width = flow.config().lane_width;
+        let netlist_fp = flow.netlist_fingerprint();
         let design = flow.rtl_shared()?;
         let mapped = flow.netlist_shared()?;
-        Ok(SystemHandle { system, design, mapped, lane_width })
+        Ok(SystemHandle { system, design, mapped, lane_width, netlist_fp })
     }
 
     /// The corpus system this handle serves.
@@ -86,6 +92,23 @@ impl SystemHandle {
     pub fn lane_width(&self) -> LaneWidth {
         self.lane_width
     }
+
+    /// The owning flow's netlist-stage fingerprint (fused-stage member
+    /// key).
+    pub fn netlist_fp(&self) -> u64 {
+        self.netlist_fp
+    }
+}
+
+/// The serve set's fused evaluation state: the fused netlist of every
+/// served system (in boot order) plus its K-way shard plan. Built once
+/// by [`ServeSet::enable_fusion`], shared (`Arc`) with the power
+/// batcher's worker thread.
+pub struct FusedPlan {
+    /// The cached fused artifact (netlist + member metadata + keys).
+    pub artifact: crate::flow::FusedArtifact,
+    /// The K-way partition the sharded simulator runs.
+    pub plan: ShardPlan,
 }
 
 /// The shared serving substrate: one warm [`FlowSet`] fronting every
@@ -94,6 +117,11 @@ pub struct ServeSet {
     set: FlowSet,
     handles: Vec<SystemHandle>,
     lane_width: LaneWidth,
+    /// Shared persistent store (also attached to `set`) — consulted by
+    /// the fused stage.
+    store: Option<Arc<ArtifactStore>>,
+    /// Fused evaluation state when [`ServeSet::enable_fusion`] ran.
+    fused: Option<Arc<FusedPlan>>,
 }
 
 impl ServeSet {
@@ -116,14 +144,14 @@ impl ServeSet {
         }
         let lane_width = config.lane_width;
         let mut set = FlowSet::for_systems(systems, config)?;
-        if let Some(store) = store {
-            set = set.with_store(store);
+        if let Some(store) = &store {
+            set = set.with_store(Arc::clone(store));
         }
         let handles = set
             .run_parallel(SystemHandle::from_flow)
             .into_iter()
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(ServeSet { set, handles, lane_width })
+        Ok(ServeSet { set, handles, lane_width, store, fused: None })
     }
 
     /// Number of served systems.
@@ -161,6 +189,37 @@ impl ServeSet {
         self.lane_width
     }
 
+    /// Fuse every served system's netlist into one module and partition
+    /// it into `shards` shards: cross-system power floods then run as
+    /// **one sharded evaluation** per lane-width round instead of one
+    /// simulation pass per system per chunk
+    /// ([`estimate_power_requests_fused`]), with results bit-identical
+    /// to the grouped dispatch. The fused netlist is cached in the
+    /// attached store under the member netlist fingerprints + K, so a
+    /// warm restart skips re-fusing.
+    pub fn enable_fusion(&mut self, shards: usize) {
+        let members: Vec<(u64, &Netlist)> = self
+            .handles
+            .iter()
+            .map(|h| (h.netlist_fp(), h.netlist()))
+            .collect();
+        let artifact = ensure_fused(self.store.as_deref(), &members, shards);
+        let plan = ShardPlan::partition(&artifact.fused, shards);
+        self.fused = Some(Arc::new(FusedPlan { artifact, plan }));
+    }
+
+    /// The fused evaluation state, when fusion is enabled.
+    pub fn fusion(&self) -> Option<&FusedPlan> {
+        self.fused.as_deref()
+    }
+
+    /// Shared handle to the fused plan, for consumers that outlive this
+    /// borrow (the traffic engine snapshots it at start, like the
+    /// batcher does at spawn).
+    pub(crate) fn fusion_shared(&self) -> Option<Arc<FusedPlan>> {
+        self.fused.clone()
+    }
+
     /// Aggregated stage-cache telemetry across all sessions — after a
     /// warm boot from a populated `--cache-dir`, `recomputes()` is 0.
     pub fn total_counts(&self) -> StageCounts {
@@ -192,9 +251,13 @@ impl ServeSet {
                 self.handles.len()
             );
         }
-        let targets: Vec<(&Netlist, &PiModuleDesign)> =
-            self.handles.iter().map(|h| (h.netlist(), h.design())).collect();
-        Ok(estimate_power_requests_grouped(&targets, requests, activations, self.lane_width))
+        Ok(dispatch_flood(
+            &self.handles,
+            self.fused.as_deref(),
+            requests,
+            activations,
+            self.lane_width,
+        ))
     }
 
     /// Start the global power batcher: a worker thread that collects
@@ -205,6 +268,7 @@ impl ServeSet {
     /// only (zero linger still drains ready floods whole).
     pub fn power_batcher(&self, linger: Duration, activations: u32) -> PowerBatcher {
         let handles = self.handles.clone();
+        let fused = self.fused.clone();
         let width = self.lane_width;
         let max_batch = width.lanes() * handles.len();
         let (tx, rx) = mpsc::channel::<PowerJob>();
@@ -214,7 +278,16 @@ impl ServeSet {
             std::thread::Builder::new()
                 .name("dimsynth-power-batcher".to_string())
                 .spawn(move || {
-                    batcher_loop(&handles, width, max_batch, linger, activations, rx, &gauge)
+                    batcher_loop(
+                        &handles,
+                        fused.as_deref(),
+                        width,
+                        max_batch,
+                        linger,
+                        activations,
+                        rx,
+                        &gauge,
+                    )
                 })
                 .expect("spawn power batcher")
         };
@@ -304,8 +377,40 @@ impl PowerBatcher {
     }
 }
 
+/// Route one validated flood through the fused sharded evaluation when
+/// enabled, else the grouped per-system dispatch — the two produce
+/// bit-identical estimates ([`estimate_power_requests_fused`]).
+pub(crate) fn dispatch_flood(
+    handles: &[SystemHandle],
+    fused: Option<&FusedPlan>,
+    requests: &[SystemPowerRequest],
+    activations: u32,
+    width: LaneWidth,
+) -> Vec<PowerEstimate> {
+    match fused {
+        Some(f) => {
+            let designs: Vec<&PiModuleDesign> = handles.iter().map(|h| h.design()).collect();
+            estimate_power_requests_fused(
+                &f.artifact.fused,
+                &f.plan,
+                &designs,
+                requests,
+                activations,
+                width,
+            )
+        }
+        None => {
+            let targets: Vec<(&Netlist, &PiModuleDesign)> =
+                handles.iter().map(|h| (h.netlist(), h.design())).collect();
+            estimate_power_requests_grouped(&targets, requests, activations, width)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     handles: &[SystemHandle],
+    fused: Option<&FusedPlan>,
     width: LaneWidth,
     max_batch: usize,
     linger: Duration,
@@ -313,8 +418,7 @@ fn batcher_loop(
     rx: Receiver<PowerJob>,
     gauge: &QueueGauge,
 ) -> FloodStats {
-    let targets: Vec<(&Netlist, &PiModuleDesign)> =
-        handles.iter().map(|h| (h.netlist(), h.design())).collect();
+    let n_systems = handles.len();
     let mut stats = FloodStats::default();
     loop {
         let (batch, closing) = match batcher::collect(&rx, max_batch, linger) {
@@ -324,11 +428,11 @@ fn batcher_loop(
         gauge.on_dequeue(batch.len());
         let mut jobs = Vec::with_capacity(batch.len());
         for job in batch {
-            if job.system >= targets.len() {
+            if job.system >= n_systems {
                 let _ = job.resp.send(Err(anyhow::anyhow!(
                     "no system index {} in this serve set ({} systems)",
                     job.system,
-                    targets.len()
+                    n_systems
                 )));
             } else {
                 jobs.push(job);
@@ -344,8 +448,7 @@ fn batcher_loop(
                 .iter()
                 .map(|j| SystemPowerRequest { system: j.system, request: j.request })
                 .collect();
-            let estimates =
-                estimate_power_requests_grouped(&targets, &tagged, activations, width);
+            let estimates = dispatch_flood(handles, fused, &tagged, activations, width);
             for (job, estimate) in jobs.into_iter().zip(estimates) {
                 let _ = job.resp.send(Ok(estimate));
             }
@@ -442,6 +545,40 @@ mod tests {
         assert!(batcher.queue_oldest_age().is_none());
         let stats = batcher.shutdown();
         assert_eq!(stats.requests, 8);
+    }
+
+    /// Enabling fusion must leave every flood answer bit-identical to
+    /// the grouped dispatch — same requests, same estimates — while the
+    /// batcher keeps working through the fused path.
+    #[test]
+    fn fused_flood_matches_grouped_flood() {
+        let mut set =
+            ServeSet::boot(&["pendulum", "spring_mass"], FlowConfig::default(), None).unwrap();
+        let requests: Vec<SystemPowerRequest> = (0..9u32)
+            .map(|i| SystemPowerRequest {
+                system: (i % 2) as usize,
+                request: PowerRequest { seed: 0x100 + i, f_hz: 6.0e6 },
+            })
+            .collect();
+        let grouped = set.estimate_power_flood(&requests, 1).unwrap();
+        assert!(set.fusion().is_none());
+        set.enable_fusion(2);
+        let fp = set.fusion().expect("fusion enabled");
+        assert_eq!(fp.artifact.fused.member_count(), 2);
+        assert_eq!(fp.plan.shards, 2);
+        let fused = set.estimate_power_flood(&requests, 1).unwrap();
+        for (i, (g, f)) in grouped.iter().zip(&fused).enumerate() {
+            assert_eq!(g.mw, f.mw, "request {i}");
+            assert_eq!(g.toggles_per_cycle, f.toggles_per_cycle, "request {i}");
+            assert_eq!(g.cycles, f.cycles, "request {i}");
+        }
+        // The batcher inherits the fused path at spawn.
+        let batcher = set.power_batcher(Duration::ZERO, 1);
+        let rx = batcher.submit(1, requests[1].request);
+        let est = rx.recv().unwrap().unwrap();
+        assert_eq!(est.mw, grouped[1].mw);
+        let stats = batcher.shutdown();
+        assert_eq!(stats.requests, 1);
     }
 
     #[test]

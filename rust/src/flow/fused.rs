@@ -1,0 +1,136 @@
+//! The cross-system `fused` stage: cache one [`FusedNetlist`] per
+//! *set* of member netlists and shard count.
+//!
+//! Unlike the seven per-system stages, the fused artifact is derived
+//! from N flows at once, so it hangs off the [`ArtifactStore`] directly
+//! rather than any single [`super::Flow`]'s LRU chain. Its fingerprint
+//! hashes the member netlist fingerprints **sorted** plus the shard
+//! count: membership keys the entry, not boot order. Net numbering does
+//! depend on fuse order, though, so [`ensure_fused`] checks the loaded
+//! artifact's recorded fuse order against the requested one and
+//! recomputes (then overwrites) on mismatch — a reordered deployment is
+//! a clean miss, never a scrambled scatter index.
+
+use super::config::StableHasher;
+use super::session::TAG_FUSED;
+use super::store::{ArtifactStore, FusedArtifact};
+use crate::shard::FusedNetlist;
+use crate::synth::Netlist;
+
+/// Store key of a fused artifact: the member netlist fingerprints
+/// (sorted — order-insensitive membership) mixed with the shard count
+/// under the fused stage tag.
+pub fn fused_fingerprint(member_fps: &[u64], shards: usize) -> u64 {
+    let mut sorted = member_fps.to_vec();
+    sorted.sort_unstable();
+    let mut h = StableHasher::new().u64(sorted.len() as u64);
+    for fp in sorted {
+        h = h.u64(fp);
+    }
+    super::config::mix(TAG_FUSED, h.finish(), shards as u64)
+}
+
+/// Ensure the fused artifact for `members` — `(netlist fingerprint,
+/// netlist)` pairs in fuse order — keyed under `shards`. Lookup order
+/// matches the per-system stages: disk store (when attached) → compute
+/// with best-effort write-back. A stored entry whose recorded fuse
+/// order differs from the requested one is treated as a miss.
+pub fn ensure_fused(
+    store: Option<&ArtifactStore>,
+    members: &[(u64, &Netlist)],
+    shards: usize,
+) -> FusedArtifact {
+    let member_fps: Vec<u64> = members.iter().map(|(fp, _)| *fp).collect();
+    let fp = fused_fingerprint(&member_fps, shards);
+    if let Some(store) = store {
+        if let Some(art) = store.load::<FusedArtifact>(fp) {
+            if art.member_fps == member_fps && art.shards == shards {
+                return art;
+            }
+        }
+    }
+    let refs: Vec<&Netlist> = members.iter().map(|(_, nl)| *nl).collect();
+    let art = FusedArtifact {
+        fused: FusedNetlist::fuse_refs(&refs),
+        member_fps,
+        shards,
+    };
+    if let Some(store) = store {
+        if let Err(e) = store.save(fp, &art) {
+            eprintln!("warning: flow store write failed for stage `fused`: {e}");
+        }
+    }
+    art
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::NetId;
+    use std::path::PathBuf;
+
+    fn counter(bits: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        let q: Vec<NetId> = (0..bits).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q);
+        nl
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dimsynth-fused-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn fingerprint_is_order_insensitive_but_shard_sensitive() {
+        let ab = fused_fingerprint(&[1, 2], 4);
+        let ba = fused_fingerprint(&[2, 1], 4);
+        assert_eq!(ab, ba, "membership keys the entry, not order");
+        assert_ne!(ab, fused_fingerprint(&[1, 2], 2));
+        assert_ne!(ab, fused_fingerprint(&[1, 2, 3], 4));
+    }
+
+    #[test]
+    fn ensure_fused_roundtrips_and_rejects_reordered_loads() {
+        let dir = tmpdir("roundtrip");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let a = counter(4);
+        let b = counter(7);
+        let fresh = ensure_fused(Some(&store), &[(10, &a), (20, &b)], 2);
+        assert_eq!(fresh.fused.member_count(), 2);
+        assert_eq!(fresh.member_fps, vec![10, 20]);
+
+        // Same order: the stored entry serves, structurally identical.
+        let warm = ensure_fused(Some(&store), &[(10, &a), (20, &b)], 2);
+        assert_eq!(warm.member_fps, fresh.member_fps);
+        assert_eq!(warm.fused.netlist.len(), fresh.fused.netlist.len());
+        assert_eq!(warm.fused.members, fresh.fused.members);
+
+        // Reversed order hits the same store key but must recompute:
+        // member 0's range now holds the 7-bit counter.
+        let rev = ensure_fused(Some(&store), &[(20, &b), (10, &a)], 2);
+        assert_eq!(rev.member_fps, vec![20, 10]);
+        assert_eq!(rev.fused.members[0].net_range.1 as usize, b.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ensure_fused_works_without_a_store() {
+        let a = counter(3);
+        let art = ensure_fused(None, &[(1, &a)], 1);
+        assert_eq!(art.fused.member_count(), 1);
+        assert_eq!(art.shards, 1);
+    }
+}

@@ -68,12 +68,14 @@
 //! ```
 
 pub mod config;
+pub mod fused;
 pub mod session;
 pub mod set;
 pub mod store;
 pub mod worker;
 
 pub use config::FlowConfig;
+pub use fused::{ensure_fused, fused_fingerprint};
 pub use session::{Flow, PowerReport, StageCounts};
 pub use set::FlowSet;
-pub use store::{ArtifactStore, GcReport, StageStats, StoreStats, STORE_FORMAT_VERSION};
+pub use store::{ArtifactStore, FusedArtifact, GcReport, StageStats, StoreStats, STORE_FORMAT_VERSION};

@@ -17,7 +17,7 @@ use crate::newton::{self, CorpusEntry, SystemModel};
 use crate::pisearch::{self, CostModel, PiAnalysis};
 use crate::power::{self, ActivityReport, ActivitySpread, PowerModel};
 use crate::stim::LfsrBank;
-use crate::synth::{self, LaneWidth, MappedDesign, W256};
+use crate::synth::{self, LaneWidth, MappedDesign, W256, W512};
 use crate::timing::{self, TimingReport};
 use crate::rtl::{self, PiModuleDesign};
 
@@ -30,6 +30,9 @@ const TAG_NETLIST: u64 = 0x04;
 const TAG_TIMING: u64 = 0x05;
 const TAG_POWER: u64 = 0x06;
 const TAG_VERILOG: u64 = 0x07;
+/// The cross-system fused stage ([`super::fused`]) — not part of any
+/// single `Flow`'s chain, but its tag must stay disjoint from these.
+pub(crate) const TAG_FUSED: u64 = 0x08;
 
 /// Depth of each per-stage in-memory LRU: deep enough that an A/B sweep
 /// like the width sweep (5 formats) returns to warm entries instead of
@@ -361,6 +364,13 @@ impl Flow {
         mix(TAG_NETLIST, self.fp_rtl(), 0)
     }
 
+    /// The netlist stage's fingerprint — the per-member key the
+    /// cross-system fused stage ([`super::fused`]) is derived from.
+    /// Purely config-derived, so it never forces a compute.
+    pub fn netlist_fingerprint(&self) -> u64 {
+        self.fp_netlist()
+    }
+
     fn fp_timing(&self) -> u64 {
         mix(TAG_TIMING, self.fp_netlist(), self.config.timing_inputs_fp())
     }
@@ -526,6 +536,13 @@ impl Flow {
                             let mut seeds = LfsrBank::<W256>::lane_seeds(seed);
                             seeds[0] = seed;
                             power::measure_activity_batch_wide::<W256>(
+                                netlist, design, samples, &seeds, None,
+                            )
+                        }
+                        LaneWidth::W512 => {
+                            let mut seeds = LfsrBank::<W512>::lane_seeds(seed);
+                            seeds[0] = seed;
+                            power::measure_activity_batch_wide::<W512>(
                                 netlist, design, samples, &seeds, None,
                             )
                         }

@@ -45,6 +45,7 @@ use crate::pisearch::{PiAnalysis, PiGroup};
 use crate::power::{ActivityReport, ActivitySpread, PowerModel};
 use crate::rational::Rational;
 use crate::rtl::{PiModuleDesign, PiUnit, Port};
+use crate::shard::{FusedMember, FusedNetlist};
 use crate::synth::{NetId, Netlist, Node};
 use crate::synth::techmap::MappedDesign;
 use crate::timing::TimingReport;
@@ -60,11 +61,16 @@ use crate::units::{Dimension, NUM_BASE_DIMS};
 /// (and its fingerprint the SIMD lane width, `FlowConfig::lane_width`),
 /// so v1 power entries have both a different payload layout and a
 /// narrower key domain.
-pub const STORE_FORMAT_VERSION: u32 = 2;
+///
+/// v3: added the `fused` stage ([`FusedArtifact`] — a fused multi-system
+/// netlist keyed on its members' netlist fingerprints and the shard
+/// count).
+pub const STORE_FORMAT_VERSION: u32 = 3;
 
 const MAGIC: &[u8; 8] = b"DSARTFT\0";
 
-/// The seven cached stages of a [`super::Flow`].
+/// The cached stages: the seven per-system stages of a [`super::Flow`]
+/// plus the cross-system `fused` stage ([`super::fused::ensure_fused`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum StageKind {
     Parsed,
@@ -74,10 +80,11 @@ pub enum StageKind {
     Timing,
     Power,
     Verilog,
+    Fused,
 }
 
 impl StageKind {
-    pub const ALL: [StageKind; 7] = [
+    pub const ALL: [StageKind; 8] = [
         StageKind::Parsed,
         StageKind::Pis,
         StageKind::Rtl,
@@ -85,6 +92,7 @@ impl StageKind {
         StageKind::Timing,
         StageKind::Power,
         StageKind::Verilog,
+        StageKind::Fused,
     ];
 
     /// Subdirectory (and header stage label) of this stage's entries.
@@ -97,6 +105,7 @@ impl StageKind {
             StageKind::Timing => "timing",
             StageKind::Power => "power",
             StageKind::Verilog => "verilog",
+            StageKind::Fused => "fused",
         }
     }
 }
@@ -685,6 +694,80 @@ impl Artifact for String {
 
     fn decode(r: &mut Reader<'_>) -> anyhow::Result<String> {
         r.take_str()
+    }
+}
+
+/// The cached cross-system `fused` stage: a [`FusedNetlist`] (one module
+/// merging N member netlists) together with the member netlist
+/// fingerprints it was fused **from, in fuse order**, and the shard
+/// count it was keyed under. The store key hashes the member
+/// fingerprints *sorted* (membership, not order), so a loader must check
+/// `member_fps` against its requested order — net numbering depends on
+/// it — and recompute on mismatch (see [`super::fused::ensure_fused`]).
+pub struct FusedArtifact {
+    /// The fused netlist with its per-member scatter index.
+    pub fused: FusedNetlist,
+    /// Netlist-stage fingerprints of the members, in fuse order.
+    pub member_fps: Vec<u64>,
+    /// Shard count the artifact was keyed under.
+    pub shards: usize,
+}
+
+impl Artifact for FusedArtifact {
+    const STAGE: StageKind = StageKind::Fused;
+
+    fn encode(&self, w: &mut Writer) {
+        put_netlist(w, &self.fused.netlist);
+        w.put_usize(self.fused.members.len());
+        for m in &self.fused.members {
+            w.put_str(&m.prefix);
+            w.put_u32(m.net_range.0);
+            w.put_u32(m.net_range.1);
+            w.put_usize(m.gates);
+        }
+        w.put_usize(self.member_fps.len());
+        for &fp in &self.member_fps {
+            w.put_u64(fp);
+        }
+        w.put_usize(self.shards);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<FusedArtifact> {
+        let netlist = take_netlist(r)?;
+        let n_members = r.take_len(8)?;
+        anyhow::ensure!(n_members >= 1, "fused artifact has no members");
+        anyhow::ensure!(n_members <= u16::MAX as usize, "member count {n_members} too large");
+        let mut members = Vec::with_capacity(n_members);
+        let mut expect = 0u32;
+        for _ in 0..n_members {
+            let prefix = r.take_str()?;
+            let lo = r.take_u32()?;
+            let hi = r.take_u32()?;
+            let gates = r.take_usize()?;
+            // Ranges must tile [0, len) contiguously — the invariant
+            // `FusedNetlist::from_parts` asserts; validate here so a
+            // corrupt entry is a miss, not a panic.
+            anyhow::ensure!(lo == expect && hi >= lo, "member range [{lo},{hi}) does not tile");
+            expect = hi;
+            members.push(FusedMember { prefix, net_range: (lo, hi), gates });
+        }
+        anyhow::ensure!(
+            expect as usize == netlist.len(),
+            "member ranges cover {expect} of {} nets",
+            netlist.len()
+        );
+        let n_fps = r.take_len(8)?;
+        anyhow::ensure!(n_fps == n_members, "fingerprint count mismatch");
+        let mut member_fps = Vec::with_capacity(n_fps);
+        for _ in 0..n_fps {
+            member_fps.push(r.take_u64()?);
+        }
+        let shards = r.take_usize()?;
+        Ok(FusedArtifact {
+            fused: FusedNetlist::from_parts(netlist, members),
+            member_fps,
+            shards,
+        })
     }
 }
 

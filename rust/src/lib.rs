@@ -51,13 +51,23 @@
 //! * **Implementation flow** — [`synth`] (gate netlist, optimization,
 //!   LUT4 technology mapping, scalar + bit-parallel gate-level
 //!   simulation generic over the SIMD lane word: [`synth::LaneWord`]
-//!   with `u64` = 64 and [`synth::W256`] = 256 stimulus streams per
-//!   pass, plus opt-in intra-level parallel evaluation of wide
-//!   combinational levels across worker threads), [`timing`] (STA →
-//!   Fmax), [`power`] (switching-activity power model, one estimate per
-//!   lane per simulation pass at the configured
+//!   with `u64` = 64, [`synth::W256`] = 256 and [`synth::W512`] = 512
+//!   stimulus streams per pass, plus opt-in intra-level parallel
+//!   evaluation of wide combinational levels across worker threads),
+//!   [`timing`] (STA → Fmax), [`power`] (switching-activity power
+//!   model, one estimate per lane per simulation pass at the configured
 //!   [`synth::LaneWidth`]), [`stim`] (LFSR stimulus, scalar and
-//!   lane-bank [`stim::LfsrBank`] at either width).
+//!   lane-bank [`stim::LfsrBank`] at any width).
+//! * **Multi-system sharding** — [`shard`]: fuse → partition →
+//!   [`shard::ShardSim`]. [`shard::FusedNetlist`] merges N systems'
+//!   netlists into one wide module (namespaced nets, concatenated PI/PO
+//!   maps, per-member scatter index); [`shard::ShardPlan`] cuts it at
+//!   register/level boundaries into K gate-balanced shards with an
+//!   explicit cut-signal interface ([`shard::CutMap`]); `ShardSim` runs
+//!   one shard per persistent worker with a per-cycle (per-level when
+//!   combinational cuts exist) cut-signal exchange, bit-identical to
+//!   solo evaluation. Cached as the `fused` flow stage and routed to by
+//!   the coordinator's cross-system power batcher.
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
 //!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine;
 //!   multi-system deployments front the [`flow`] layer through one warm
@@ -91,6 +101,7 @@ pub mod rational;
 pub mod report;
 pub mod rtl;
 pub mod runtime;
+pub mod shard;
 pub mod stim;
 pub mod synth;
 pub mod train;

@@ -9,14 +9,16 @@
 //! ```text
 //! dimsynth compile <system|file.nt> [--target SYM] [--format Qi.f] [--lanes N]
 //!                  [-o DIR] [--vcd] [--cache-dir DIR]
+//! dimsynth compile <a,b,c> --fuse [--shards K] [--cache-dir DIR]
 //! dimsynth table1 [--samples N] [--sequential] [--cache-dir DIR]
 //! dimsynth cache <stats|gc|clear> --cache-dir DIR [--max-bytes N]
 //! dimsynth export-pisearch
 //! dimsynth train <system> [--steps N] [--features pi|raw] [--artifacts DIR]
 //! dimsynth serve <system> [--samples N] [--batch B] [--artifacts DIR]
 //! dimsynth serve --systems a,b,c [--cache-dir DIR] [--lanes N] [--power-flood N]
+//!                [--fuse] [--shards K]
 //! dimsynth serve --systems a,b,c --listen ADDR [--rate R] [--burst B]
-//!                [--queue-cap N] [--deadline-ms D]
+//!                [--queue-cap N] [--deadline-ms D] [--max-conns N]
 //! dimsynth list
 //! ```
 //!
@@ -40,18 +42,26 @@
 //! stdout reports stay byte-identical between cold and warm runs.
 //! `cache gc --max-bytes N` prunes the store oldest-first to a byte cap.
 //!
-//! `--lanes <64|256>` selects the SIMD lane width of word-parallel
+//! `--lanes <64|256|512>` selects the SIMD lane width of word-parallel
 //! simulation passes (see `synth::LaneWidth`); it enters the flow
 //! config, and with it the power-stage cache fingerprint.
+//!
+//! `compile --fuse a,b,c` fuses the named corpus systems' netlists into
+//! one module ([`dimsynth::shard`]) and reports the shard plan: member
+//! namespaces and net ranges, per-shard gate balance, and cut-signal
+//! counts. `serve --systems … --fuse` routes cross-system power floods
+//! through one sharded evaluation of that fused module — bit-identical
+//! to per-system dispatch, verified by the differential test suite.
 //!
 //! Every compilation subcommand drives the pipeline through the
 //! [`dimsynth::flow`] session API; no stage-to-stage wiring lives here.
 
 use dimsynth::fixedpoint::{QFormat, Q16_15};
-use dimsynth::flow::{ArtifactStore, Flow, FlowConfig, StageCounts, STORE_FORMAT_VERSION};
+use dimsynth::flow::{ensure_fused, ArtifactStore, Flow, FlowConfig, StageCounts, STORE_FORMAT_VERSION};
 use dimsynth::newton::{self, corpus};
 use dimsynth::report;
-use dimsynth::synth::{self, LaneWidth};
+use dimsynth::shard::ShardPlan;
+use dimsynth::synth::{self, LaneWidth, Netlist};
 use dimsynth::{coordinator, train};
 
 use std::collections::HashMap;
@@ -94,11 +104,13 @@ const SUBCOMMANDS: &[SubSpec] = &[
         flags: &[
             flag("target", "SYM", "target-symbol override (mandatory for .nt files)"),
             flag("format", "Qi.f", "fixed-point format, e.g. Q16.15"),
-            flag("lanes", "N", "SIMD lane width for word-parallel simulation (64 or 256)"),
+            flag("lanes", "N", "SIMD lane width for word-parallel simulation (64, 256, or 512)"),
             flag("o", "DIR", "write Verilog + self-checking testbench to DIR"),
             flag("out", "DIR", "alias of -o"),
             switch("vcd", "also record a gate-level waveform (needs -o)"),
             flag("cache-dir", "DIR", "attach the persistent artifact store at DIR"),
+            switch("fuse", "positional is a,b,c corpus ids: fuse netlists, report the shard plan"),
+            flag("shards", "K", "fuse: partition into K shards (default: cores, capped at 8)"),
         ],
     },
     SubSpec {
@@ -146,13 +158,16 @@ const SUBCOMMANDS: &[SubSpec] = &[
             flag("artifacts", "DIR", "AOT artifact directory (default artifacts)"),
             flag("systems", "a,b,c", "serve many systems from one warm FlowSet (no positional)"),
             flag("cache-dir", "DIR", "multi-system: boot the FlowSet warm from this store"),
-            flag("lanes", "N", "multi-system: SIMD lane width of power batches (64 or 256)"),
+            flag("lanes", "N", "multi-system: SIMD lane width of power batches (64, 256, or 512)"),
             flag("power-flood", "N", "multi-system: cross-system power requests (default 256)"),
+            switch("fuse", "multi-system: power floods run on the fused multi-system netlist"),
+            flag("shards", "K", "fuse: shard count for the fused evaluation (default: cores, capped at 8)"),
             flag("listen", "ADDR", "multi-system: serve over TCP at ADDR until stdin closes"),
             flag("rate", "R", "listen: per-tenant token-bucket rate, req/s (default unlimited)"),
             flag("burst", "B", "listen: per-tenant token-bucket burst (default 64)"),
             flag("queue-cap", "N", "listen: per-tenant bounded queue depth (default 1024)"),
             flag("deadline-ms", "D", "listen: default request deadline (default 1000)"),
+            flag("max-conns", "N", "listen: cap concurrent connections; over-cap accepts get a typed shed"),
         ],
     },
     SubSpec {
@@ -309,7 +324,85 @@ fn cmd_list() {
     }
 }
 
+/// Default shard count for `--fuse`: one per core, capped at 8 (the
+/// per-level cut-signal exchange outgrows the parallel win beyond that
+/// on corpus-sized members).
+fn default_shards() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
+}
+
+/// `compile --fuse a,b,c`: compile each corpus member through its own
+/// flow, fuse the mapped netlists into one module, partition it, and
+/// report the shard plan (member namespaces, gate balance, cut counts).
+fn cmd_compile_fused(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let what = pos.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: dimsynth compile <a,b,c> --fuse [--shards K] [--cache-dir DIR]")
+    })?;
+    // Fused mode reports the shard plan; the solo-compile emission flags
+    // have no fused counterpart and would otherwise be silently ignored.
+    for incompatible in ["target", "o", "out", "vcd"] {
+        anyhow::ensure!(
+            !flags.contains_key(incompatible),
+            "--{incompatible} does not combine with --fuse (corpus defaults apply)"
+        );
+    }
+    let systems: Vec<&str> = what.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(!systems.is_empty(), "--fuse needs at least one corpus system id");
+    let q = flags.get("format").map(|s| parse_format(s)).transpose()?.unwrap_or(Q16_15);
+    let lane_width =
+        flags.get("lanes").map(|s| LaneWidth::parse(s)).transpose()?.unwrap_or_default();
+    let shards: usize =
+        flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or_else(default_shards);
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    let store = open_store(flags)?;
+
+    // One flow per member; the mapped designs stay alive as Arcs so the
+    // fuse step can borrow every netlist at once.
+    let mut counts = StageCounts::default();
+    let mut compiled = Vec::new();
+    for sys in &systems {
+        let e = newton::by_id(sys).ok_or_else(|| {
+            anyhow::anyhow!("unknown corpus system `{sys}` (--fuse takes corpus ids; see dimsynth list)")
+        })?;
+        let config = FlowConfig { qformat: q, lane_width, ..FlowConfig::default() };
+        let mut flow = Flow::for_entry(e, config);
+        if let Some(store) = &store {
+            flow.set_store(Arc::clone(store));
+        }
+        let design = flow.netlist_shared()?;
+        counts = counts + flow.counts();
+        compiled.push((flow.netlist_fingerprint(), design));
+    }
+    let members: Vec<(u64, &Netlist)> =
+        compiled.iter().map(|(fp, m)| (*fp, &m.netlist)).collect();
+    let art = ensure_fused(store.as_deref(), &members, shards);
+    let plan = ShardPlan::partition(&art.fused, shards);
+
+    println!("fused {} systems into one module", art.fused.member_count());
+    println!("{:<8} {:<24} {:>8} {:>16}", "prefix", "system", "gates", "nets");
+    for (m, sys) in art.fused.members.iter().zip(&systems) {
+        let (lo, hi) = m.net_range;
+        println!("{:<8} {:<24} {:>8} {:>16}", m.prefix, sys, m.gates, format!("{lo}..{hi}"));
+    }
+    println!("nets:        {}", art.fused.netlist.len());
+    println!("shards:      {} (gates per shard: {:?})", plan.shards, plan.shard_gates);
+    println!(
+        "cuts:        {} comb, {} reg, {} dff",
+        plan.cuts.comb_cuts.len(),
+        plan.cuts.reg_cuts.len(),
+        plan.cuts.dff_cuts.len()
+    );
+    if flags.contains_key("cache-dir") {
+        print_cache_line(counts);
+    }
+    Ok(())
+}
+
 fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if flags.contains_key("fuse") {
+        return cmd_compile_fused(pos, flags);
+    }
+    anyhow::ensure!(!flags.contains_key("shards"), "--shards requires --fuse");
     let what = pos
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: {}", usage_line(spec_of("compile").unwrap())))?;
@@ -542,6 +635,18 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
             .unwrap_or_default();
         let flood: usize =
             flags.get("power-flood").map(|s| s.parse()).transpose()?.unwrap_or(256);
+        let fuse_shards: usize = if flags.contains_key("fuse") {
+            let k = flags
+                .get("shards")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or_else(default_shards);
+            anyhow::ensure!(k >= 1, "--shards must be at least 1");
+            k
+        } else {
+            anyhow::ensure!(!flags.contains_key("shards"), "--shards requires --fuse");
+            0
+        };
         let config = FlowConfig { lane_width, ..FlowConfig::default() };
         let store = open_store(flags)?;
 
@@ -564,6 +669,12 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
                     .map(|s| s.parse())
                     .transpose()?
                     .unwrap_or(1000),
+                max_conns: flags
+                    .get("max-conns")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(0),
+                fuse_shards,
             };
             let handle =
                 coordinator::serve_listen(&systems, listen, config, store, listen_config)?;
@@ -580,8 +691,13 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
             return Ok(());
         }
 
-        let (report, counts) =
-            coordinator::serve_multi(&artifacts, &systems, samples, batch, flood, config, store)?;
+        anyhow::ensure!(
+            !flags.contains_key("max-conns"),
+            "--max-conns requires --listen (it caps TCP connections)"
+        );
+        let (report, counts) = coordinator::serve_multi(
+            &artifacts, &systems, samples, batch, flood, fuse_shards, config, store,
+        )?;
         print!("{report}");
         if flags.contains_key("cache-dir") {
             print_cache_line(counts);
@@ -593,11 +709,14 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
         "cache-dir",
         "lanes",
         "power-flood",
+        "fuse",
+        "shards",
         "listen",
         "rate",
         "burst",
         "queue-cap",
         "deadline-ms",
+        "max-conns",
     ];
     for multi_only in multi_only_flags {
         anyhow::ensure!(

@@ -19,7 +19,7 @@
 use crate::fixedpoint::QFormat;
 use crate::rtl::ir::PiModuleDesign;
 use crate::stim::{Lfsr32, LfsrBank, LfsrBank64};
-use crate::synth::{Drive, GateSim, LaneWidth, LaneWord, Netlist, WordSim, W256};
+use crate::synth::{Drive, GateSim, LaneWidth, LaneWord, Netlist, WordSim, W256, W512};
 
 /// Power model constants.
 #[derive(Clone, Copy, Debug)]
@@ -198,6 +198,28 @@ impl ActivitySpread {
     }
 }
 
+/// Draw one activation's operands (per-lane LFSR draws over the
+/// mid-scale range, one draw per port bit in port order) and bind them
+/// to the `in_*` buses, optionally under a bus-name prefix. This is the
+/// single copy of the operand protocol: the solo activation loop below
+/// and the fused multi-system driver in [`crate::shard`] both call it,
+/// so a fused member sees exactly the operand stream its solo run sees.
+pub(crate) fn apply_activation_inputs<W: LaneWord>(
+    sim: &mut impl Drive<W>,
+    design: &PiModuleDesign,
+    bus_prefix: &str,
+    values: &mut [i64],
+    lfsrs: &mut [Lfsr32],
+    q: QFormat,
+) {
+    for p in &design.ports {
+        for (v, lfsr) in values.iter_mut().zip(lfsrs.iter_mut()) {
+            *v = q.from_f64(lfsr.range(0.25, 12.0));
+        }
+        sim.set_bus_lanes(&format!("{bus_prefix}in_{}", p.name), values);
+    }
+}
+
 /// The activation loop of the batched measurement: per-lane LFSR operand
 /// draws, start pulse, run to `done`. Generic over the public
 /// [`Drive`] surface, so the same loop serves the plain word simulator
@@ -212,12 +234,7 @@ fn drive_activations<W: LaneWord>(
     let mut cycles = 0u64;
     let mut values = vec![0i64; W::LANES];
     for _ in 0..activations {
-        for p in &design.ports {
-            for (v, lfsr) in values.iter_mut().zip(lfsrs.iter_mut()) {
-                *v = q.from_f64(lfsr.range(0.25, 12.0));
-            }
-            sim.set_bus_lanes(&format!("in_{}", p.name), &values);
-        }
+        apply_activation_inputs(sim, design, "", &mut values, lfsrs, q);
         sim.set_bus("start", 1);
         sim.step();
         cycles += 1;
@@ -336,6 +353,13 @@ pub fn measure_activity_spread_width(
             design,
             activations,
             &LfsrBank::<W256>::lane_seeds(seed),
+            level_par_threshold,
+        ),
+        LaneWidth::W512 => measure_activity_batch_wide::<W512>(
+            netlist,
+            design,
+            activations,
+            &LfsrBank::<W512>::lane_seeds(seed),
             level_par_threshold,
         ),
     }

@@ -1,0 +1,221 @@
+//! Netlist fusion: merge N member netlists into one wide module.
+//!
+//! Fusion is a pure renumbering — member m's nets are copied in order
+//! at a fixed base offset, so member state in the fused module evolves
+//! exactly as it does solo. Nothing is deduplicated across members
+//! (two members' identical constant nodes stay distinct nets): the
+//! per-member net ranges must remain disjoint and contiguous for the
+//! scatter index and the per-member toggle accounting to be exact.
+
+use std::sync::Arc;
+
+use crate::synth::{NetId, Netlist, Node};
+
+/// One member system inside a [`FusedNetlist`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusedMember {
+    /// Bus-name namespace prefix (`s0`, `s1`, …); member bus `b` is
+    /// fused bus `{prefix}/b`.
+    pub prefix: String,
+    /// Half-open net-id range `[start, end)` of this member's nodes in
+    /// the fused netlist. `start` is also the id offset applied to the
+    /// member's own net ids.
+    pub net_range: (NetId, NetId),
+    /// LUT count — the partitioner's balance weight.
+    pub gates: usize,
+}
+
+/// N member netlists merged into one module with namespaced PI/PO maps
+/// and a per-member index for exact result scatter.
+#[derive(Clone)]
+pub struct FusedNetlist {
+    /// The merged netlist.
+    pub netlist: Netlist,
+    /// Per-member metadata, in fusion (= boot) order.
+    pub members: Vec<FusedMember>,
+    /// Owning member per net (dense inverse of the member ranges).
+    net_member: Vec<u16>,
+}
+
+impl FusedNetlist {
+    /// Fuse member netlists, in order. Member `m` keeps its internal
+    /// structure verbatim; its net ids shift by the running base and
+    /// its bus names gain the `s{m}/` prefix.
+    pub fn fuse(members: &[Arc<Netlist>]) -> FusedNetlist {
+        let refs: Vec<&Netlist> = members.iter().map(|m| m.as_ref()).collect();
+        FusedNetlist::fuse_refs(&refs)
+    }
+
+    /// [`FusedNetlist::fuse`] over plain references.
+    pub fn fuse_refs(members: &[&Netlist]) -> FusedNetlist {
+        assert!(!members.is_empty(), "fuse needs at least one member netlist");
+        assert!(
+            members.len() <= usize::from(u16::MAX),
+            "too many members for the u16 member index"
+        );
+        let total: usize = members.iter().map(|m| m.len()).sum();
+        assert!(total <= NetId::MAX as usize, "fused netlist exceeds NetId range");
+        let mut nodes = Vec::with_capacity(total);
+        let mut outputs = Vec::new();
+        let mut input_buses = Vec::new();
+        let mut meta = Vec::with_capacity(members.len());
+        for (m, nl) in members.iter().enumerate() {
+            let base = nodes.len() as NetId;
+            let prefix = format!("s{m}");
+            for (_, node) in nl.nodes() {
+                nodes.push(match node {
+                    Node::Const(b) => Node::Const(*b),
+                    Node::Input(name) => Node::Input(format!("{prefix}/{name}")),
+                    Node::Lut { ins, tt } => Node::Lut {
+                        ins: ins.iter().map(|&i| i + base).collect(),
+                        tt: *tt,
+                    },
+                    Node::Dff { d, init } => Node::Dff { d: *d + base, init: *init },
+                });
+            }
+            for (name, bits) in nl.outputs() {
+                outputs.push((
+                    format!("{prefix}/{name}"),
+                    bits.iter().map(|&b| b + base).collect(),
+                ));
+            }
+            for (name, bits) in &nl.input_buses {
+                input_buses.push((
+                    format!("{prefix}/{name}"),
+                    bits.iter().map(|&b| b + base).collect(),
+                ));
+            }
+            meta.push(FusedMember {
+                prefix,
+                net_range: (base, nodes.len() as NetId),
+                gates: nl.count_luts(),
+            });
+        }
+        let netlist = Netlist::from_parts(nodes, outputs, input_buses);
+        FusedNetlist::from_parts(netlist, meta)
+    }
+
+    /// Rebuild from a merged netlist plus member metadata (the store
+    /// decode path). The member ranges must tile the netlist exactly.
+    pub fn from_parts(netlist: Netlist, members: Vec<FusedMember>) -> FusedNetlist {
+        assert!(!members.is_empty(), "fused netlist without members");
+        let mut net_member = Vec::with_capacity(netlist.len());
+        let mut cursor = 0 as NetId;
+        for (m, fm) in members.iter().enumerate() {
+            let (s, e) = fm.net_range;
+            assert_eq!(s, cursor, "member {m} range does not tile the netlist");
+            assert!(s <= e, "member {m} range inverted");
+            net_member.extend(std::iter::repeat(m as u16).take((e - s) as usize));
+            cursor = e;
+        }
+        assert_eq!(
+            cursor as usize,
+            netlist.len(),
+            "member ranges do not cover the fused netlist"
+        );
+        FusedNetlist { netlist, members, net_member }
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The member owning a fused net id.
+    #[inline(always)]
+    pub fn member_of(&self, net: NetId) -> u16 {
+        self.net_member[net as usize]
+    }
+
+    /// Fused bus name for member `m`'s bus `name` (`s{m}/name`).
+    pub fn bus_name(&self, member: usize, name: &str) -> String {
+        format!("{}/{}", self.members[member].prefix, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4-bit counter with q outputs (mirrors the wordsim test netlist).
+    fn counter() -> Netlist {
+        let mut nl = Netlist::new();
+        let q: Vec<NetId> = (0..4).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q);
+        nl
+    }
+
+    #[test]
+    fn fusion_offsets_and_namespaces() {
+        let a = counter();
+        let b = counter();
+        let fused = FusedNetlist::fuse_refs(&[&a, &b]);
+        assert_eq!(fused.member_count(), 2);
+        assert_eq!(fused.netlist.len(), a.len() + b.len());
+        assert_eq!(fused.members[0].net_range, (0, a.len() as NetId));
+        assert_eq!(
+            fused.members[1].net_range,
+            (a.len() as NetId, (a.len() + b.len()) as NetId)
+        );
+        assert_eq!(fused.members[0].gates, a.count_luts());
+        // Namespaced outputs resolve; originals are gone.
+        assert!(fused.netlist.output_bits("s0/q").is_some());
+        assert!(fused.netlist.output_bits("s1/q").is_some());
+        assert!(fused.netlist.output_bits("q").is_none());
+        // Member index matches the ranges.
+        assert_eq!(fused.member_of(0), 0);
+        assert_eq!(fused.member_of(a.len() as NetId), 1);
+        // Member 1's structure is member 0's, shifted.
+        let base = a.len() as NetId;
+        for (id, node) in a.nodes() {
+            match (node, fused.netlist.node(id + base)) {
+                (Node::Lut { ins, tt }, Node::Lut { ins: fins, tt: ftt }) => {
+                    assert_eq!(tt, ftt);
+                    let shifted: Vec<NetId> = ins.iter().map(|&i| i + base).collect();
+                    assert_eq!(&shifted, fins);
+                }
+                (Node::Dff { d, init }, Node::Dff { d: fd, init: finit }) => {
+                    assert_eq!((d + base, init), (*fd, finit));
+                }
+                (Node::Const(x), Node::Const(y)) => assert_eq!(x, y),
+                (Node::Input(_), Node::Input(n)) => {
+                    assert!(n.starts_with("s1/"), "{n}");
+                }
+                (a, b) => panic!("node kind changed: {a:?} vs {b:?}"),
+            }
+        }
+        // The fused module levelizes (topological invariant preserved).
+        let lv = fused.netlist.levelize();
+        assert_eq!(lv.depth(), a.levelize().depth());
+    }
+
+    #[test]
+    fn from_parts_validates_tiling() {
+        let a = counter();
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let meta = fused.members.clone();
+        // Round-trips.
+        let rebuilt = FusedNetlist::from_parts(fused.netlist.clone(), meta);
+        assert_eq!(rebuilt.member_count(), 1);
+        assert_eq!(rebuilt.member_of(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "do not cover")]
+    fn from_parts_rejects_short_ranges() {
+        let a = counter();
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let mut meta = fused.members.clone();
+        meta[0].net_range.1 -= 1;
+        FusedNetlist::from_parts(fused.netlist.clone(), meta);
+    }
+}

@@ -1,0 +1,67 @@
+//! Fused multi-system netlists and register-boundary sharding.
+//!
+//! The paper's circuits are tiny (1.2–1.7k gates), so one system rarely
+//! has enough width to keep even a single core busy, let alone many.
+//! This subsystem goes the other way: instead of splitting one small
+//! netlist across threads, it *fuses* many systems into one wide module
+//! and partitions that across persistent workers.
+//!
+//! Three layers:
+//!
+//! 1. **Fusion** ([`fusion::FusedNetlist`]) — merge N member netlists
+//!    into one module. Member net ids are offset into disjoint,
+//!    contiguous ranges; input/output bus names are namespaced
+//!    (`s{m}/…`); a per-member index records each member's net range so
+//!    results scatter back exactly.
+//! 2. **Partitioning** ([`partition::ShardPlan`]) — cut the fused
+//!    netlist into K shards along register/level boundaries, balancing
+//!    LUT count per shard (LPT over whole members, splitting the
+//!    largest member at a level boundary when shards would otherwise
+//!    sit empty). The cross-shard dependencies are reified as an
+//!    explicit cut-signal interface ([`partition::CutMap`]).
+//! 3. **Sharded evaluation** ([`shardsim::ShardSim`]) — one persistent
+//!    worker per shard, driving the same packed-LUT word-parallel
+//!    engine as [`crate::synth::WordSim`], with results (values,
+//!    per-net toggles, per-member per-lane toggle totals, cycle counts)
+//!    bit-identical to running every member solo.
+//!
+//! # Cut-signal exchange protocol
+//!
+//! A cut is a net owned by one shard and read by another. The simulator
+//! exchanges cut values through the shared value array itself — the
+//! "mailbox" is the value word of the cut net — under the same
+//! monotonic spin-phase protocol as [`crate::synth::ParSession`]:
+//!
+//! * **Register cuts** (`CutMap::reg_cuts`): the cut net is level-0
+//!   (primary input, constant, or DFF q). Its value only changes
+//!   *between* evaluation phases — inputs are bound by the driving
+//!   thread outside any phase, and DFF commits happen in the driving
+//!   thread's clock-edge phase after all workers joined. Readers can
+//!   never observe a half-updated cycle, so these cuts need no extra
+//!   synchronization beyond the per-cycle barrier.
+//! * **DFF cuts** (`CutMap::dff_cuts`): a combinational net feeding a
+//!   DFF d-input owned by another shard. The driving thread samples
+//!   every d after the last evaluation phase of the cycle joined, so
+//!   the per-cycle barrier again suffices.
+//! * **Combinational cuts** (`CutMap::comb_cuts`): a LUT output read by
+//!   a cross-shard LUT in the *same* cycle. These force per-level
+//!   phasing: every level becomes one phase, all shards evaluate their
+//!   slice of the level, and the Release/Acquire pair on the phase and
+//!   done counters publishes level-L cut values before any shard starts
+//!   level L+1. A plan with no combinational cuts (the whole-member
+//!   common case) collapses to one phase per cycle.
+//!
+//! Toggle accounting follows [`crate::synth::WordSim`] exactly, but the
+//! per-lane carry-save accumulator is kept *per member*, so each
+//! member's per-lane toggle totals (and hence its power figures) can be
+//! read back individually and match its solo run bit for bit.
+
+pub mod fusion;
+pub mod partition;
+pub mod power;
+pub mod shardsim;
+
+pub use fusion::{FusedMember, FusedNetlist};
+pub use partition::{Cut, CutMap, ShardPlan};
+pub use power::{measure_fused_activity, MemberStim};
+pub use shardsim::{ShardDrive, ShardSim};

@@ -1,0 +1,338 @@
+//! Levelization-aware partitioning of a fused netlist into K shards.
+//!
+//! The partitioner works at the granularity of *segments* — a run of
+//! consecutive combinational levels of one member. Initially every
+//! member is one segment (all its levels); segments are bin-packed onto
+//! shards largest-first (LPT). When K exceeds the member count some
+//! shards would sit empty, so the largest splittable segment is cut at
+//! the level boundary closest to halving its gate count and the tail
+//! moves to an empty shard. Cutting at level boundaries keeps the cut
+//! interface small and classifiable (see [`CutMap`] and the exchange
+//! protocol in [`crate::shard`]).
+
+use std::collections::HashSet;
+
+use super::fusion::FusedNetlist;
+use crate::synth::{NetId, Node};
+
+/// One cut signal: net `net` is owned (written) by shard `from` and
+/// read by shard `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Cut {
+    pub net: NetId,
+    pub from: u16,
+    pub to: u16,
+}
+
+/// The explicit cut-signal interface of a [`ShardPlan`], split by
+/// synchronization class (full protocol in the [`crate::shard`] module
+/// docs).
+#[derive(Clone, Debug, Default)]
+pub struct CutMap {
+    /// LUT outputs read by a cross-shard LUT in the same cycle; these
+    /// force per-level phasing.
+    pub comb_cuts: Vec<Cut>,
+    /// Level-0 nets (inputs, constants, DFF q) read cross-shard;
+    /// satisfied by the per-cycle barrier.
+    pub reg_cuts: Vec<Cut>,
+    /// Combinational nets feeding cross-shard DFF d-inputs; satisfied
+    /// by the clock-edge sample after the last evaluation phase.
+    pub dff_cuts: Vec<Cut>,
+}
+
+impl CutMap {
+    /// Total cut signals of all classes.
+    pub fn len(&self) -> usize {
+        self.comb_cuts.len() + self.reg_cuts.len() + self.dff_cuts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A K-way partition of a fused netlist: per-net shard ownership, the
+/// per-shard gate loads, and the cut-signal interface between shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Shard count K (≥ 1).
+    pub shards: usize,
+    /// Owning shard per fused net.
+    pub owner: Vec<u16>,
+    /// LUTs per shard (the balance the partitioner optimized).
+    pub shard_gates: Vec<usize>,
+    /// Cross-shard signal interface.
+    pub cuts: CutMap,
+}
+
+/// A run of consecutive levels `[lo, hi]` (1-based, inclusive) of one
+/// member, with its LUT count.
+#[derive(Clone, Debug)]
+struct Segment {
+    member: usize,
+    lo: u32,
+    hi: u32,
+    gates: usize,
+}
+
+impl ShardPlan {
+    /// Partition `fused` into `shards` shards (clamped to ≥ 1).
+    /// Deterministic in its inputs: the same fused netlist and K always
+    /// produce the same plan.
+    pub fn partition(fused: &FusedNetlist, shards: usize) -> ShardPlan {
+        let k = shards.max(1);
+        let nl = &fused.netlist;
+        let lv = nl.levelize();
+        let depth = lv.depth();
+        // Per-member per-level LUT counts (level 1..=depth).
+        let n_members = fused.member_count();
+        let mut mlg = vec![vec![0usize; depth as usize + 1]; n_members];
+        for level in 1..=depth {
+            for &id in lv.level_luts(level) {
+                mlg[fused.member_of(id) as usize][level as usize] += 1;
+            }
+        }
+
+        // Seed: one whole-member segment each; LPT largest-first onto
+        // the least-loaded shard. Ties break on lower shard index (and
+        // on member order among equal-sized members), keeping the plan
+        // deterministic.
+        let mut segments: Vec<Segment> = (0..n_members)
+            .map(|m| Segment {
+                member: m,
+                lo: 1,
+                hi: depth,
+                gates: fused.members[m].gates,
+            })
+            .collect();
+        segments.sort_by(|a, b| b.gates.cmp(&a.gates).then(a.member.cmp(&b.member)));
+        let mut bins: Vec<Vec<Segment>> = vec![Vec::new(); k];
+        let mut load = vec![0usize; k];
+        for seg in segments {
+            let bin = (0..k).min_by_key(|&b| (load[b], b)).unwrap();
+            load[bin] += seg.gates;
+            bins[bin].push(seg);
+        }
+
+        // Fill empty shards by splitting the largest splittable segment
+        // at the level boundary nearest its gate-count midpoint.
+        while let Some(empty) = load.iter().position(|&l| l == 0) {
+            let mut best: Option<(usize, usize, usize)> = None; // (bin, idx, gates)
+            for (b, bin) in bins.iter().enumerate() {
+                for (i, seg) in bin.iter().enumerate() {
+                    let spans = (seg.lo..=seg.hi)
+                        .filter(|&l| mlg[seg.member][l as usize] > 0)
+                        .count();
+                    if spans >= 2 && best.map_or(true, |(_, _, g)| seg.gates > g) {
+                        best = Some((b, i, seg.gates));
+                    }
+                }
+            }
+            let Some((b, i, _)) = best else { break };
+            let seg = bins[b].remove(i);
+            let half = seg.gates / 2;
+            let (mut split, mut run, mut best_diff) = (seg.lo, 0usize, usize::MAX);
+            // Split after level `l` ∈ [lo, hi): head = [lo, l].
+            for l in seg.lo..seg.hi {
+                run += mlg[seg.member][l as usize];
+                let diff = run.abs_diff(half);
+                if run > 0 && run < seg.gates && diff < best_diff {
+                    best_diff = diff;
+                    split = l;
+                }
+            }
+            let head_gates: usize =
+                (seg.lo..=split).map(|l| mlg[seg.member][l as usize]).sum();
+            let tail = Segment {
+                member: seg.member,
+                lo: split + 1,
+                hi: seg.hi,
+                gates: seg.gates - head_gates,
+            };
+            let head = Segment { lo: seg.lo, hi: split, gates: head_gates, ..seg };
+            load[b] -= tail.gates;
+            load[empty] += tail.gates;
+            bins[b].push(head);
+            bins[empty].push(tail);
+        }
+
+        // Ownership: LUTs by their segment; level-0 nets (inputs,
+        // constants, DFF q) by the member's head segment — their values
+        // only move at cycle boundaries, so placement only affects cut
+        // classification, not correctness.
+        let mut owner = vec![0u16; nl.len()];
+        let mut head_shard = vec![0u16; n_members];
+        let mut head_lo = vec![u32::MAX; n_members];
+        for (b, bin) in bins.iter().enumerate() {
+            for seg in bin {
+                if seg.lo < head_lo[seg.member] {
+                    head_lo[seg.member] = seg.lo;
+                    head_shard[seg.member] = b as u16;
+                }
+            }
+        }
+        for (m, fm) in fused.members.iter().enumerate() {
+            for id in fm.net_range.0..fm.net_range.1 {
+                owner[id as usize] = head_shard[m];
+            }
+        }
+        for (b, bin) in bins.iter().enumerate() {
+            for seg in bin {
+                for level in seg.lo..=seg.hi {
+                    for &id in lv.level_luts(level) {
+                        if fused.member_of(id) as usize == seg.member {
+                            owner[id as usize] = b as u16;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Cut extraction: every cross-shard read, classified by the
+        // kind of the net being read.
+        let mut cuts = CutMap::default();
+        let mut seen: HashSet<Cut> = HashSet::new();
+        for (id, node) in nl.nodes() {
+            match node {
+                Node::Lut { ins, .. } => {
+                    let to = owner[id as usize];
+                    for &i in ins {
+                        let from = owner[i as usize];
+                        if from == to {
+                            continue;
+                        }
+                        let cut = Cut { net: i, from, to };
+                        if !seen.insert(cut) {
+                            continue;
+                        }
+                        match nl.node(i) {
+                            Node::Lut { .. } => cuts.comb_cuts.push(cut),
+                            _ => cuts.reg_cuts.push(cut),
+                        }
+                    }
+                }
+                Node::Dff { d, .. } => {
+                    let to = owner[id as usize];
+                    let from = owner[*d as usize];
+                    if from == to {
+                        continue;
+                    }
+                    let cut = Cut { net: *d, from, to };
+                    if !seen.insert(cut) {
+                        continue;
+                    }
+                    match nl.node(*d) {
+                        Node::Lut { .. } => cuts.dff_cuts.push(cut),
+                        _ => cuts.reg_cuts.push(cut),
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        ShardPlan { shards: k, owner, shard_gates: load, cuts }
+    }
+
+    /// Whether evaluation must synchronize every level (true iff the
+    /// plan has same-cycle combinational cuts; whole-member plans run
+    /// one phase per cycle).
+    pub fn per_level_sync(&self) -> bool {
+        !self.cuts.comb_cuts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::Netlist;
+
+    fn counter(bits: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        let q: Vec<NetId> = (0..bits).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q);
+        nl
+    }
+
+    #[test]
+    fn whole_member_partition_has_no_comb_cuts() {
+        let a = counter(4);
+        let b = counter(6);
+        let c = counter(8);
+        let fused = FusedNetlist::fuse_refs(&[&a, &b, &c]);
+        let plan = ShardPlan::partition(&fused, 2);
+        assert_eq!(plan.shards, 2);
+        assert!(plan.cuts.comb_cuts.is_empty());
+        assert!(plan.cuts.reg_cuts.is_empty());
+        assert!(plan.cuts.dff_cuts.is_empty());
+        assert!(!plan.per_level_sync());
+        // Every shard got work, and loads sum to the total gate count.
+        assert!(plan.shard_gates.iter().all(|&g| g > 0));
+        assert_eq!(
+            plan.shard_gates.iter().sum::<usize>(),
+            fused.netlist.count_luts()
+        );
+        // LPT: the biggest member sits alone on one shard.
+        let owners: HashSet<u16> = (fused.members[2].net_range.0
+            ..fused.members[2].net_range.1)
+            .map(|id| plan.owner[id as usize])
+            .collect();
+        assert_eq!(owners.len(), 1);
+    }
+
+    #[test]
+    fn oversubscribed_partition_splits_at_level_boundary() {
+        // One member, two shards: the member must split, producing
+        // cross-level cuts and per-level sync.
+        let a = counter(16);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let plan = ShardPlan::partition(&fused, 2);
+        assert!(plan.shard_gates.iter().all(|&g| g > 0), "{:?}", plan.shard_gates);
+        assert!(!plan.cuts.is_empty());
+        assert!(plan.per_level_sync());
+        // Split shards stay balanced within the widest level's worth.
+        let diff = plan.shard_gates[0].abs_diff(plan.shard_gates[1]);
+        assert!(diff < fused.netlist.count_luts(), "degenerate split");
+        // Cut ownership is consistent: each cut's net really is owned
+        // by `from` and ≠ `to`.
+        for cut in plan
+            .cuts
+            .comb_cuts
+            .iter()
+            .chain(&plan.cuts.reg_cuts)
+            .chain(&plan.cuts.dff_cuts)
+        {
+            assert_eq!(plan.owner[cut.net as usize], cut.from);
+            assert_ne!(cut.from, cut.to);
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let a = counter(5);
+        let b = counter(5);
+        let fused = FusedNetlist::fuse_refs(&[&a, &b]);
+        let p1 = ShardPlan::partition(&fused, 4);
+        let p2 = ShardPlan::partition(&fused, 4);
+        assert_eq!(p1.owner, p2.owner);
+        assert_eq!(p1.shard_gates, p2.shard_gates);
+    }
+
+    #[test]
+    fn k1_owns_everything() {
+        let a = counter(4);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let plan = ShardPlan::partition(&fused, 1);
+        assert!(plan.owner.iter().all(|&o| o == 0));
+        assert!(plan.cuts.is_empty());
+    }
+}

@@ -1,0 +1,154 @@
+//! Fused activity measurement: every member's activation schedule,
+//! driven through one sharded simulation pass.
+//!
+//! The driver is an exact linearization of the solo activation loop
+//! (`power::model::drive_activations`): each member advances its own
+//! schedule — operand draws, start pulse, run to `done`, next
+//! activation — against the shared global step. Because fusion keeps
+//! member state disjoint and the operand protocol is the shared
+//! `apply_activation_inputs`, member m's nets see exactly the cycle
+//! sequence of its solo run, so outputs, toggle counts, cycle counts
+//! and the power figures derived from them are bit-identical. A
+//! member's per-lane toggles are snapshotted the moment its schedule
+//! completes; whatever its FSM does while slower members finish is
+//! discarded.
+
+use crate::power::model::apply_activation_inputs;
+use crate::power::LaneActivityReport;
+use crate::rtl::ir::PiModuleDesign;
+use crate::stim::Lfsr32;
+use crate::synth::{Drive, LaneWord};
+
+use super::shardsim::ShardSim;
+
+/// One member's stimulus schedule for a fused measurement pass.
+pub struct MemberStim<'a> {
+    /// The member's RTL design (port list + fixed-point format).
+    pub design: &'a PiModuleDesign,
+    /// Activations to run (0 = member idles; it reports zero activity).
+    pub activations: u32,
+    /// Per-lane LFSR seeds, `W::LANES` entries.
+    pub seeds: Vec<u32>,
+}
+
+struct MemberState {
+    lfsrs: Vec<Lfsr32>,
+    remaining: u32,
+    guard: u32,
+    started: bool,
+    finished: bool,
+}
+
+/// Drive every member's activation schedule through `sim` (which must
+/// be fresh) and return one [`LaneActivityReport`] per member, each
+/// bit-identical to [`crate::power::measure_activity_batch_wide`] run
+/// solo on that member with the same activations and seeds.
+pub fn measure_fused_activity<W: LaneWord>(
+    sim: &mut ShardSim<'_, W>,
+    stims: &[MemberStim<'_>],
+) -> Vec<LaneActivityReport> {
+    let fused = sim.fused();
+    assert_eq!(
+        stims.len(),
+        fused.member_count(),
+        "one stimulus schedule per fused member"
+    );
+    assert_eq!(sim.cycles(), 0, "fused measurement needs a fresh simulator");
+    for stim in stims {
+        assert_eq!(stim.seeds.len(), W::LANES, "expected one seed per lane");
+    }
+    let start_bus: Vec<String> =
+        (0..stims.len()).map(|m| fused.bus_name(m, "start")).collect();
+    let done_bus: Vec<String> =
+        (0..stims.len()).map(|m| fused.bus_name(m, "done")).collect();
+    let in_prefix: Vec<String> =
+        (0..stims.len()).map(|m| format!("{}/", fused.members[m].prefix)).collect();
+    sim.session(|d| {
+        let mut values = vec![0i64; W::LANES];
+        let mut reports: Vec<Option<LaneActivityReport>> = (0..stims.len())
+            .map(|_| None)
+            .collect();
+        let mut states: Vec<MemberState> = stims
+            .iter()
+            .map(|s| MemberState {
+                lfsrs: s.seeds.iter().map(|&sd| Lfsr32::new(sd)).collect(),
+                remaining: s.activations,
+                guard: 0,
+                started: false,
+                finished: false,
+            })
+            .collect();
+        let mut active = 0usize;
+        for (m, stim) in stims.iter().enumerate() {
+            if stim.activations == 0 {
+                states[m].finished = true;
+                reports[m] = Some(LaneActivityReport {
+                    lanes: vec![0.0; W::LANES],
+                    cycles: 0,
+                    activations: 0,
+                });
+                continue;
+            }
+            apply_activation_inputs(
+                d, stim.design, &in_prefix[m], &mut values, &mut states[m].lfsrs,
+                stim.design.q,
+            );
+            d.set_bus(&start_bus[m], 1);
+            states[m].started = true;
+            active += 1;
+        }
+        while active > 0 {
+            d.step();
+            for m in 0..stims.len() {
+                if states[m].finished {
+                    continue;
+                }
+                if states[m].started {
+                    d.set_bus(&start_bus[m], 0);
+                    states[m].started = false;
+                    states[m].guard = 0;
+                }
+                let done = d.get_bit_word(&done_bus[m]);
+                if done == W::ones() {
+                    states[m].remaining -= 1;
+                    if states[m].remaining == 0 {
+                        states[m].finished = true;
+                        active -= 1;
+                        // Snapshot at finish: the member consumed every
+                        // global step so far, so the global cycle count
+                        // is exactly its solo cycle count.
+                        let cycles = d.cycles();
+                        let lanes = d
+                            .member_lane_toggles(m)
+                            .iter()
+                            .map(|&t| t as f64 / cycles.max(1) as f64)
+                            .collect();
+                        reports[m] = Some(LaneActivityReport {
+                            lanes,
+                            cycles,
+                            activations: stims[m].activations,
+                        });
+                    } else {
+                        apply_activation_inputs(
+                            d, stims[m].design, &in_prefix[m], &mut values,
+                            &mut states[m].lfsrs, stims[m].design.q,
+                        );
+                        d.set_bus(&start_bus[m], 1);
+                        states[m].started = true;
+                    }
+                } else {
+                    // Mirrors the solo loop's lockstep check: the FSMs
+                    // have data-independent latency, so a member's lanes
+                    // must finish together.
+                    assert!(
+                        done.is_zero(),
+                        "lanes diverged on `done` (data-dependent latency?)"
+                    );
+                    states[m].guard += 1;
+                    assert!(states[m].guard < 5_000, "activation did not finish");
+                }
+            }
+        }
+        reports.into_iter().map(|r| r.expect("member left unreported")).collect()
+    })
+}

@@ -1,0 +1,667 @@
+//! Sharded word-parallel evaluation of a fused netlist.
+//!
+//! One persistent worker per shard, driven by the same monotonic
+//! spin-phase protocol as [`crate::synth::ParSession`] — but where a
+//! parallel session fans each *level* of one netlist across threads,
+//! a shard session fans the *shards* of a fused netlist: worker `w`
+//! owns shard `w`'s packed LUTs for the whole session (the driving
+//! thread doubles as shard 0's worker). Cut-signal values travel
+//! through the shared value array under the phase barrier (see the
+//! exchange protocol in [`crate::shard`]).
+//!
+//! Phase granularity follows the plan: with no combinational cuts
+//! (whole-member partitions) every worker sweeps all its levels in one
+//! phase per cycle; with combinational cuts every level is a phase, so
+//! cross-shard same-cycle signals are published before their readers
+//! run. Either way, results are bit-identical to evaluating every
+//! member solo with [`crate::synth::WordSim`]: identical output words,
+//! per-net toggles, and per-member per-lane toggle totals.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::fusion::FusedNetlist;
+use super::partition::ShardPlan;
+use crate::synth::wordsim::{
+    compile_tt, eval_chunk, flush_planes_into, plane_accumulate, wait_phase, PackedWordLut,
+    ParCtrl, RawSlice, PHASE_STOP, PLANES,
+};
+use crate::synth::{Drive, LaneWord, NetId, Netlist, Node};
+
+/// Flush every member's bit-plane accumulator into its per-lane totals.
+fn flush_members<W: LaneWord>(
+    member_planes: &mut [[W; PLANES]],
+    member_flushed: &mut [Vec<u64>],
+    plane_adds: &mut u64,
+) {
+    for (planes, flushed) in member_planes.iter_mut().zip(member_flushed.iter_mut()) {
+        flush_planes_into(planes, flushed, plane_adds);
+    }
+    *plane_adds = 0;
+}
+
+/// Word-parallel simulation state for a fused netlist partitioned by a
+/// [`ShardPlan`]. Construction packs the combinational plan level-major
+/// and shard-grouped within each level; [`ShardSim::session`] spawns
+/// the shard workers and hands out a [`ShardDrive`].
+pub struct ShardSim<'n, W: LaneWord = u64> {
+    fused: &'n FusedNetlist,
+    /// Current value word of every net.
+    vals: Vec<W>,
+    /// Per-net toggle counters, summed across lanes.
+    toggles: Vec<u64>,
+    /// Per-member bit-plane accumulators of per-lane toggle totals.
+    member_planes: Vec<[W; PLANES]>,
+    /// Per-member flushed per-lane toggle totals.
+    member_flushed: Vec<Vec<u64>>,
+    /// Accumulator adds since the last flush (overflow guard, shared by
+    /// all members — conservative, since each member sees at most this
+    /// many adds).
+    plane_adds: u64,
+    flush_threshold: u64,
+    cycles: u64,
+    bus: HashMap<String, Vec<NetId>>,
+    /// Packed plan: level-major, grouped by owning shard within each
+    /// level.
+    luts: Vec<PackedWordLut>,
+    /// Per level, per shard: half-open range into `luts`.
+    level_shard_bounds: Vec<Vec<(u32, u32)>>,
+    /// Per level: the whole level's range (all shards).
+    level_bounds: Vec<(u32, u32)>,
+    /// Per shard: its non-empty per-level ranges, level-ascending (the
+    /// single-phase sweep order).
+    shard_levels: Vec<Vec<(u32, u32)>>,
+    dffs: Vec<(u32, u32)>,
+    scratch: Vec<W>,
+    per_level: bool,
+    workers: usize,
+}
+
+impl<'n, W: LaneWord> ShardSim<'n, W> {
+    pub fn new(fused: &'n FusedNetlist, plan: &ShardPlan) -> ShardSim<'n, W> {
+        let nl: &Netlist = &fused.netlist;
+        assert_eq!(plan.owner.len(), nl.len(), "plan does not match netlist");
+        let k = plan.shards.max(1);
+        let lv = nl.levelize();
+        let mut vals = vec![W::zero(); nl.len()];
+        let mut dffs = Vec::new();
+        for (id, node) in nl.nodes() {
+            match node {
+                Node::Const(true) => vals[id as usize] = W::ones(),
+                Node::Dff { d, init } => {
+                    if *init {
+                        vals[id as usize] = W::ones();
+                    }
+                    dffs.push((id, *d));
+                }
+                _ => {}
+            }
+        }
+        let mut luts = Vec::with_capacity(lv.order.len());
+        let mut level_shard_bounds = Vec::with_capacity(lv.depth() as usize);
+        let mut level_bounds = Vec::with_capacity(lv.depth() as usize);
+        let mut shard_levels = vec![Vec::new(); k];
+        for level in 1..=lv.depth() {
+            let ls = luts.len() as u32;
+            let mut per_shard = Vec::with_capacity(k);
+            for shard in 0..k as u16 {
+                let s = luts.len() as u32;
+                for &id in lv.level_luts(level) {
+                    if plan.owner[id as usize] != shard {
+                        continue;
+                    }
+                    let Node::Lut { ins, tt } = nl.node(id) else {
+                        unreachable!("levelization order contains only LUTs")
+                    };
+                    let mut packed = [ins[0]; 4];
+                    for (j, &i) in ins.iter().enumerate() {
+                        packed[j] = i;
+                    }
+                    let (sel, inv) = compile_tt(*tt, ins.len());
+                    luts.push(PackedWordLut { out: id, ins: packed, sel, inv });
+                }
+                let e = luts.len() as u32;
+                per_shard.push((s, e));
+                if e > s {
+                    shard_levels[shard as usize].push((s, e));
+                }
+            }
+            level_shard_bounds.push(per_shard);
+            level_bounds.push((ls, luts.len() as u32));
+        }
+        let n_members = fused.member_count();
+        let scratch = vec![W::zero(); dffs.len()];
+        ShardSim {
+            fused,
+            vals,
+            toggles: vec![0; nl.len()],
+            member_planes: vec![[W::zero(); PLANES]; n_members],
+            member_flushed: vec![vec![0u64; W::LANES]; n_members],
+            plane_adds: 0,
+            flush_threshold: u64::from(u32::MAX),
+            cycles: 0,
+            bus: nl.input_buses.iter().map(|(n, b)| (n.clone(), b.clone())).collect(),
+            luts,
+            level_shard_bounds,
+            level_bounds,
+            shard_levels,
+            dffs,
+            scratch,
+            per_level: plan.per_level_sync(),
+            workers: k,
+        }
+    }
+
+    /// Lower the bit-plane flush threshold (test hook; see
+    /// [`crate::synth::WordSim::with_plane_flush_threshold`]).
+    pub fn with_plane_flush_threshold(mut self, adds: u64) -> ShardSim<'n, W> {
+        self.flush_threshold = adds.min(u64::from(u32::MAX));
+        self
+    }
+
+    /// The fused netlist this simulator evaluates.
+    pub fn fused(&self) -> &'n FusedNetlist {
+        self.fused
+    }
+
+    /// Shard workers that a session would spawn in addition to the
+    /// driving thread.
+    pub fn extra_workers(&self) -> usize {
+        self.workers - 1
+    }
+
+    /// Whether sessions synchronize per level (combinational cuts) or
+    /// once per cycle.
+    pub fn per_level_sync(&self) -> bool {
+        self.per_level
+    }
+
+    /// Run `f` against a [`ShardDrive`] over this simulator: one
+    /// persistent worker per shard beyond shard 0 (the driving
+    /// thread's), spawned once for the whole session. All counters
+    /// survive the session; results are bit-identical to solo
+    /// evaluation of every member.
+    pub fn session<R>(&mut self, f: impl FnOnce(&mut ShardDrive<'_, W>) -> R) -> R {
+        let fused = self.fused;
+        let nets = fused.netlist.len();
+        let per_level = self.per_level;
+        let workers = self.workers;
+        let depth = self.level_bounds.len();
+        let ShardSim {
+            vals,
+            toggles,
+            member_planes,
+            member_flushed,
+            plane_adds,
+            flush_threshold,
+            cycles,
+            bus,
+            luts,
+            level_shard_bounds,
+            level_bounds,
+            shard_levels,
+            dffs,
+            scratch,
+            ..
+        } = self;
+        let mut tword = vec![W::zero(); luts.len()];
+        // Shared raw views under the phase protocol, as in
+        // `WordSim::parallel_session`.
+        let vals_raw = RawSlice::new(vals.as_mut_slice());
+        let toggles_raw = RawSlice::new(toggles.as_mut_slice());
+        let tword_raw = RawSlice::new(tword.as_mut_slice());
+        let ctrl = ParCtrl { phase: AtomicUsize::new(0), done: AtomicUsize::new(0) };
+        let luts: &[PackedWordLut] = luts;
+        let lsb: &[Vec<(u32, u32)>] = level_shard_bounds;
+        let slv: &[Vec<(u32, u32)>] = shard_levels;
+        let ctrl_ref = &ctrl;
+        std::thread::scope(|s| {
+            for w in 1..workers {
+                s.spawn(move || {
+                    let mut last = 0usize;
+                    loop {
+                        let p = wait_phase(ctrl_ref, last);
+                        if p == PHASE_STOP {
+                            break;
+                        }
+                        last = p;
+                        // Safety: this shard owns its LUTs' out nets and
+                        // tword slots exclusively (the owner map is a
+                        // partition); reads are either same-shard
+                        // earlier levels, cut nets published by the
+                        // previous phase (comb cuts, per-level mode), or
+                        // level-0 nets that only move between phases.
+                        if per_level {
+                            let (cs, ce) = lsb[(p - 1) % depth][w];
+                            unsafe {
+                                eval_chunk(
+                                    luts, vals_raw, toggles_raw, tword_raw,
+                                    cs as usize, ce as usize,
+                                );
+                            }
+                        } else {
+                            for &(cs, ce) in &slv[w] {
+                                unsafe {
+                                    eval_chunk(
+                                        luts, vals_raw, toggles_raw, tword_raw,
+                                        cs as usize, ce as usize,
+                                    );
+                                }
+                            }
+                        }
+                        ctrl_ref.done.fetch_add(1, Ordering::Release);
+                    }
+                });
+            }
+            // Release the workers on return and unwind alike.
+            struct StopGuard<'c>(&'c ParCtrl);
+            impl Drop for StopGuard<'_> {
+                fn drop(&mut self) {
+                    self.0.phase.store(PHASE_STOP, Ordering::Release);
+                }
+            }
+            let _stop = StopGuard(ctrl_ref);
+            let mut drive = ShardDrive {
+                fused,
+                nets,
+                vals: vals_raw,
+                toggles: toggles_raw,
+                tword: tword_raw,
+                member_planes,
+                member_flushed,
+                plane_adds,
+                flush_threshold: *flush_threshold,
+                cycles,
+                bus,
+                luts,
+                level_shard_bounds: lsb,
+                level_bounds,
+                shard0_levels: slv[0].as_slice(),
+                dffs,
+                scratch,
+                per_level,
+                workers,
+                ctrl: ctrl_ref,
+                next_phase: 1,
+                expected_done: 0,
+            };
+            f(&mut drive)
+        })
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Per-net toggle counts of the whole fused module.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    /// Per-net toggle counts of one member (its slice of the fused
+    /// module, indexed by the member's own net ids).
+    pub fn member_net_toggles(&self, member: usize) -> &[u64] {
+        let (s, e) = self.fused.members[member].net_range;
+        &self.toggles[s as usize..e as usize]
+    }
+
+    /// Per-lane toggle totals of one member (flushes accumulators).
+    pub fn member_lane_toggles(&mut self, member: usize) -> Vec<u64> {
+        flush_members(&mut self.member_planes, &mut self.member_flushed, &mut self.plane_adds);
+        self.member_flushed[member].clone()
+    }
+}
+
+/// The driving handle of a shard session: the full [`Drive`] surface
+/// (namespaced bus names, e.g. `s0/in_x`, `s0/start`, `s0/done`) plus
+/// per-member toggle readback, so fused activity measurement can
+/// snapshot a member the moment its activation schedule completes.
+pub struct ShardDrive<'a, W: LaneWord> {
+    fused: &'a FusedNetlist,
+    nets: usize,
+    vals: RawSlice<W>,
+    toggles: RawSlice<u64>,
+    tword: RawSlice<W>,
+    member_planes: &'a mut Vec<[W; PLANES]>,
+    member_flushed: &'a mut Vec<Vec<u64>>,
+    plane_adds: &'a mut u64,
+    flush_threshold: u64,
+    cycles: &'a mut u64,
+    bus: &'a HashMap<String, Vec<NetId>>,
+    luts: &'a [PackedWordLut],
+    level_shard_bounds: &'a [Vec<(u32, u32)>],
+    level_bounds: &'a [(u32, u32)],
+    shard0_levels: &'a [(u32, u32)],
+    dffs: &'a [(u32, u32)],
+    scratch: &'a mut Vec<W>,
+    per_level: bool,
+    workers: usize,
+    ctrl: &'a ParCtrl,
+    next_phase: usize,
+    expected_done: usize,
+}
+
+impl<'a, W: LaneWord> ShardDrive<'a, W> {
+    /// Compare-bump-store one input word (driving thread, outside any
+    /// phase).
+    #[inline]
+    fn write_input_word(&mut self, idx: usize, w: W) {
+        // Safety: outside a phase the driving thread has exclusive
+        // access to every shared buffer.
+        unsafe {
+            let t = self.vals.get(idx) ^ w;
+            if !t.is_zero() {
+                self.bump(idx, t);
+                self.vals.set(idx, w);
+            }
+        }
+    }
+
+    /// Full toggle accounting for one net.
+    #[inline]
+    unsafe fn bump(&mut self, idx: usize, t: W) {
+        self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        self.bump_planes(idx, t);
+    }
+
+    /// Per-member plane half of toggle accounting.
+    #[inline]
+    fn bump_planes(&mut self, idx: usize, t: W) {
+        *self.plane_adds += 1;
+        let m = self.fused.member_of(idx as NetId) as usize;
+        let carry = plane_accumulate(&mut self.member_planes[m], t);
+        debug_assert!(carry.is_zero(), "lane-toggle accumulator overflow");
+    }
+
+    /// Walk the toggle words of packed slots `[s, e)` (workers joined).
+    fn account_planes(&mut self, s: usize, e: usize) {
+        for i in s..e {
+            // Safety: workers are joined (or never ran); exclusive.
+            let t = unsafe { self.tword.get(i) };
+            if !t.is_zero() {
+                let idx = self.luts[i].out as usize;
+                self.bump_planes(idx, t);
+            }
+        }
+    }
+
+    fn flush_all(&mut self) {
+        flush_members(self.member_planes, self.member_flushed, self.plane_adds);
+    }
+
+    fn join(&self) {
+        let mut spins = 0u32;
+        while self.ctrl.done.load(Ordering::Acquire) < self.expected_done {
+            spins = spins.wrapping_add(1);
+            if spins % 4096 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    fn input_bits(&self, name: &str) -> &'a [NetId] {
+        self.bus.get(name).unwrap_or_else(|| panic!("no input bus `{name}`"))
+    }
+
+    pub fn cycles(&self) -> u64 {
+        *self.cycles
+    }
+
+    /// Per-lane toggle totals of one member so far (flushes
+    /// accumulators; callable mid-session, outside a phase).
+    pub fn member_lane_toggles(&mut self, member: usize) -> Vec<u64> {
+        self.flush_all();
+        self.member_flushed[member].clone()
+    }
+
+    /// Per-net toggle counts of one member so far.
+    pub fn member_net_toggles(&self, member: usize) -> Vec<u64> {
+        let (s, e) = self.fused.members[member].net_range;
+        // Safety: outside a phase; driving thread exclusive.
+        (s..e).map(|i| unsafe { self.toggles.get(i as usize) }).collect()
+    }
+}
+
+impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
+    fn set_bus_lanes(&mut self, name: &str, values: &[i64]) {
+        assert_eq!(values.len(), W::LANES, "expected one value per lane");
+        let bits = self.input_bits(name);
+        for i in 0..bits.len() {
+            let bit = bits[i];
+            let mut w = W::zero();
+            for (lane, v) in values.iter().enumerate() {
+                w.set_lane(lane, (*v >> i) & 1 == 1);
+            }
+            self.write_input_word(bit as usize, w);
+        }
+    }
+
+    fn set_bus(&mut self, name: &str, value: i64) {
+        let bits = self.input_bits(name);
+        for i in 0..bits.len() {
+            let bit = bits[i];
+            let w = W::splat((value >> i) & 1 == 1);
+            self.write_input_word(bit as usize, w);
+        }
+    }
+
+    fn set_bit_word(&mut self, name: &str, word: W) {
+        let bits = self.input_bits(name);
+        let bit = bits[0];
+        self.write_input_word(bit as usize, word);
+    }
+
+    fn get_bit_word(&self, name: &str) -> W {
+        let bits = self
+            .fused
+            .netlist
+            .output_bits(name)
+            .unwrap_or_else(|| panic!("no output bus `{name}`"));
+        // Safety: read outside any phase; driving thread exclusive.
+        unsafe { self.vals.get(bits[0] as usize) }
+    }
+
+    /// One clock cycle for all lanes across all shards.
+    fn step(&mut self) {
+        *self.cycles += 1;
+        if *self.plane_adds + 2 * self.nets as u64 >= self.flush_threshold {
+            self.flush_all();
+        }
+        let fan = self.workers > 1;
+        if self.per_level {
+            // Per-level phasing: every level is one barrier, publishing
+            // combinational cut values before their readers run.
+            for lvl in 0..self.level_bounds.len() {
+                if fan {
+                    self.ctrl.phase.store(self.next_phase, Ordering::Release);
+                    self.next_phase += 1;
+                }
+                let (cs, ce) = self.level_shard_bounds[lvl][0];
+                // Safety: shard 0's slice of the level; see the
+                // worker-side comment.
+                unsafe {
+                    eval_chunk(
+                        self.luts, self.vals, self.toggles, self.tword,
+                        cs as usize, ce as usize,
+                    );
+                }
+                if fan {
+                    self.expected_done += self.workers - 1;
+                    self.join();
+                }
+                let (ls, le) = self.level_bounds[lvl];
+                self.account_planes(ls as usize, le as usize);
+            }
+        } else {
+            // Whole-member partition: one phase per cycle; every worker
+            // sweeps its levels in ascending order.
+            if fan {
+                self.ctrl.phase.store(self.next_phase, Ordering::Release);
+                self.next_phase += 1;
+            }
+            for i in 0..self.shard0_levels.len() {
+                let (cs, ce) = self.shard0_levels[i];
+                // Safety: shard 0's chunks; cross-shard reads are
+                // level-0 only (no comb cuts), frozen during the phase.
+                unsafe {
+                    eval_chunk(
+                        self.luts, self.vals, self.toggles, self.tword,
+                        cs as usize, ce as usize,
+                    );
+                }
+            }
+            if fan {
+                self.expected_done += self.workers - 1;
+                self.join();
+            }
+            self.account_planes(0, self.luts.len());
+        }
+        // Clock edge: sample every D first, then commit (driving
+        // thread; all workers joined).
+        for (i, &(_, d)) in self.dffs.iter().enumerate() {
+            // Safety: exclusive outside phases.
+            self.scratch[i] = unsafe { self.vals.get(d as usize) };
+        }
+        for i in 0..self.dffs.len() {
+            let (q, _) = self.dffs[i];
+            let idx = q as usize;
+            let sampled = self.scratch[i];
+            unsafe {
+                let t = self.vals.get(idx) ^ sampled;
+                if !t.is_zero() {
+                    self.bump(idx, t);
+                    self.vals.set(idx, sampled);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::partition::ShardPlan;
+    use crate::synth::{WordSim, W256};
+
+    fn counter(bits: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        let q: Vec<NetId> = (0..bits).map(|_| nl.dff(0, false)).collect();
+        let mut carry = nl.constant(true);
+        let mut next = Vec::new();
+        for &qb in &q {
+            let s = nl.xor2(qb, carry);
+            carry = nl.and2(qb, carry);
+            next.push(s);
+        }
+        for (d, n) in q.iter().zip(&next) {
+            nl.set_dff_input(*d, *n);
+        }
+        nl.add_output("q", q);
+        nl
+    }
+
+    fn fused_matches_solo_impl<W: LaneWord>(k: usize, steps: u64) {
+        let members = [counter(4), counter(6), counter(9)];
+        let refs: Vec<&Netlist> = members.iter().collect();
+        let fused = FusedNetlist::fuse_refs(&refs);
+        let plan = ShardPlan::partition(&fused, k);
+        let mut sharded = ShardSim::<W>::new(&fused, &plan);
+        let mut solos: Vec<WordSim<W>> = members.iter().map(WordSim::new).collect();
+        sharded.session(|d| {
+            for _ in 0..steps {
+                d.step();
+                for solo in solos.iter_mut() {
+                    solo.step();
+                }
+                for (m, solo) in solos.iter().enumerate() {
+                    let name = fused.bus_name(m, "q");
+                    assert_eq!(
+                        d.get_bit_word(&name),
+                        solo.get_bit_word("q"),
+                        "member {m} q[0] diverged at K={k}"
+                    );
+                }
+            }
+            for (m, solo) in solos.iter_mut().enumerate() {
+                assert_eq!(
+                    d.member_net_toggles(m),
+                    solo.toggles(),
+                    "member {m} per-net toggles at K={k}"
+                );
+                assert_eq!(
+                    d.member_lane_toggles(m),
+                    solo.lane_total_toggles(),
+                    "member {m} per-lane toggles at K={k}"
+                );
+            }
+        });
+        assert_eq!(sharded.cycles(), steps);
+    }
+
+    #[test]
+    fn fused_matches_solo_counters_k1() {
+        fused_matches_solo_impl::<u64>(1, 40);
+    }
+
+    #[test]
+    fn fused_matches_solo_counters_k2() {
+        fused_matches_solo_impl::<u64>(2, 40);
+    }
+
+    #[test]
+    fn fused_matches_solo_counters_k4_oversubscribed() {
+        // K exceeds the member count: the partitioner splits the
+        // largest member, forcing per-level sync with live comb cuts.
+        fused_matches_solo_impl::<u64>(4, 40);
+    }
+
+    #[test]
+    fn fused_matches_solo_counters_wide() {
+        fused_matches_solo_impl::<W256>(2, 40);
+    }
+
+    #[test]
+    fn split_single_member_uses_per_level_sync() {
+        let a = counter(16);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let plan = ShardPlan::partition(&fused, 2);
+        assert!(plan.per_level_sync());
+        let mut sharded = ShardSim::<u64>::new(&fused, &plan);
+        assert!(sharded.per_level_sync());
+        let mut solo = WordSim::<u64>::new(&a);
+        sharded.session(|d| {
+            for _ in 0..50 {
+                d.step();
+                solo.step();
+                assert_eq!(d.get_bit_word("s0/q"), solo.get_bit_word("q"));
+            }
+        });
+        assert_eq!(sharded.member_net_toggles(0), solo.toggles());
+        assert_eq!(sharded.member_lane_toggles(0), solo.lane_total_toggles());
+    }
+
+    #[test]
+    fn overflow_flush_preserves_member_totals() {
+        let members = [counter(4), counter(7)];
+        let refs: Vec<&Netlist> = members.iter().collect();
+        let fused = FusedNetlist::fuse_refs(&refs);
+        let plan = ShardPlan::partition(&fused, 2);
+        let mut eager = ShardSim::<u64>::new(&fused, &plan).with_plane_flush_threshold(1);
+        let mut lazy = ShardSim::<u64>::new(&fused, &plan);
+        eager.session(|d| {
+            for _ in 0..30 {
+                d.step();
+            }
+        });
+        lazy.session(|d| {
+            for _ in 0..30 {
+                d.step();
+            }
+        });
+        for m in 0..2 {
+            assert_eq!(eager.member_lane_toggles(m), lazy.member_lane_toggles(m));
+        }
+    }
+}

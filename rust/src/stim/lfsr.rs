@@ -6,7 +6,7 @@
 //! power-analysis stimulus, simulation inputs, and as the repo-wide
 //! deterministic PRNG (no external `rand` dependency).
 
-use crate::synth::lane::{LaneWord, W256};
+use crate::synth::lane::{LaneWord, W256, W512};
 
 /// 32-bit maximal-length Fibonacci LFSR (taps 32, 22, 2, 1).
 #[derive(Clone, Debug)]
@@ -85,6 +85,9 @@ pub type LfsrBank64 = LfsrBank<u64>;
 
 /// The 256-lane bank feeding the `WordSim<W256>` engine.
 pub type LfsrBank256 = LfsrBank<W256>;
+
+/// The 512-lane bank feeding the `WordSim<W512>` engine.
+pub type LfsrBank512 = LfsrBank<W512>;
 
 impl<W: LaneWord> LfsrBank<W> {
     /// The nonzero replacement state for a zero-seeded lane.
@@ -312,6 +315,8 @@ mod tests {
         let narrow = LfsrBank64::lane_seeds(0x5EED);
         let wide = LfsrBank256::lane_seeds(0x5EED);
         assert_eq!(&wide[..64], &narrow[..]);
+        let wider = LfsrBank512::lane_seeds(0x5EED);
+        assert_eq!(&wider[..256], &wide[..]);
     }
 
     #[test]

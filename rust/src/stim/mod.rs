@@ -5,5 +5,5 @@
 pub mod lfsr;
 pub mod traces;
 
-pub use lfsr::{Lfsr32, LfsrBank, LfsrBank256, LfsrBank64};
+pub use lfsr::{Lfsr32, LfsrBank, LfsrBank256, LfsrBank512, LfsrBank64};
 pub use traces::{sample, sample_noisy, samples, Sample, G};

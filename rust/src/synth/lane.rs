@@ -11,7 +11,10 @@
 //!   its operations are straight-line per-element array ops with no
 //!   branches or cross-element dependencies, exactly the shape LLVM
 //!   auto-vectorizes to one AVX2 op (or two SSE2/NEON ops) per logical
-//!   word op, so the 4× lane count costs far less than 4× the time.
+//!   word op, so the 4× lane count costs far less than 4× the time;
+//! * **[`W512`]** — eight `u64`s as one 512-lane value, the same
+//!   straight-line shape at AVX-512 width (or two AVX2 ops per logical
+//!   word op on narrower machines).
 //!
 //! The hot mux-tree evaluation in `wordsim` is already pure
 //! and/or/xor/not over whole words, so widening the engine is a type
@@ -228,6 +231,119 @@ impl LaneWord for W256 {
     }
 }
 
+/// A 512-lane SIMD word: eight `u64`s treated as one 512-bit value
+/// (element *k* holds lanes `64k..64k+63`). Like [`W256`], every
+/// operator is a straight-line per-element array op — one AVX-512 op
+/// (or two AVX2 ops) per logical word op on release builds.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct W512(pub [u64; 8]);
+
+impl BitAnd for W512 {
+    type Output = W512;
+
+    #[inline(always)]
+    fn bitand(self, o: W512) -> W512 {
+        let mut out = [0u64; 8];
+        for k in 0..8 {
+            out[k] = self.0[k] & o.0[k];
+        }
+        W512(out)
+    }
+}
+
+impl BitOr for W512 {
+    type Output = W512;
+
+    #[inline(always)]
+    fn bitor(self, o: W512) -> W512 {
+        let mut out = [0u64; 8];
+        for k in 0..8 {
+            out[k] = self.0[k] | o.0[k];
+        }
+        W512(out)
+    }
+}
+
+impl BitXor for W512 {
+    type Output = W512;
+
+    #[inline(always)]
+    fn bitxor(self, o: W512) -> W512 {
+        let mut out = [0u64; 8];
+        for k in 0..8 {
+            out[k] = self.0[k] ^ o.0[k];
+        }
+        W512(out)
+    }
+}
+
+impl Not for W512 {
+    type Output = W512;
+
+    #[inline(always)]
+    fn not(self) -> W512 {
+        let mut out = [0u64; 8];
+        for k in 0..8 {
+            out[k] = !self.0[k];
+        }
+        W512(out)
+    }
+}
+
+impl LaneWord for W512 {
+    const LANES: usize = 512;
+
+    #[inline(always)]
+    fn zero() -> W512 {
+        W512([0; 8])
+    }
+
+    #[inline(always)]
+    fn ones() -> W512 {
+        W512([!0; 8])
+    }
+
+    #[inline(always)]
+    fn count_ones(self) -> u32 {
+        let mut n = 0u32;
+        for k in 0..8 {
+            n += self.0[k].count_ones();
+        }
+        n
+    }
+
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        let a = self.0;
+        (a[0] | a[1] | a[2] | a[3] | a[4] | a[5] | a[6] | a[7]) == 0
+    }
+
+    #[inline(always)]
+    fn lane(self, lane: usize) -> bool {
+        debug_assert!(lane < 512);
+        self.0[lane >> 6] >> (lane & 63) & 1 == 1
+    }
+
+    #[inline(always)]
+    fn set_lane(&mut self, lane: usize, v: bool) {
+        debug_assert!(lane < 512);
+        let w = &mut self.0[lane >> 6];
+        let bit = lane & 63;
+        *w = (*w & !(1u64 << bit)) | (u64::from(v) << bit);
+    }
+
+    #[inline]
+    fn for_each_set_lane(self, mut f: impl FnMut(usize)) {
+        for (k, &word) in self.0.iter().enumerate() {
+            let mut rest = word;
+            while rest != 0 {
+                f((k << 6) + rest.trailing_zeros() as usize);
+                rest &= rest - 1;
+            }
+        }
+    }
+}
+
 /// Runtime lane-width selector for code paths that dispatch between the
 /// monomorphized engines (CLI `--lanes`, `flow::FlowConfig::lane_width`,
 /// the coordinator's power-request chunking).
@@ -238,6 +354,8 @@ pub enum LaneWidth {
     W64,
     /// One [`W256`] per net value: 256 streams per pass.
     W256,
+    /// One [`W512`] per net value: 512 streams per pass.
+    W512,
 }
 
 impl LaneWidth {
@@ -246,15 +364,19 @@ impl LaneWidth {
         match self {
             LaneWidth::W64 => 64,
             LaneWidth::W256 => 256,
+            LaneWidth::W512 => 512,
         }
     }
 
-    /// Parse a `--lanes` value (`"64"` or `"256"`).
+    /// Parse a `--lanes` value (`"64"`, `"256"`, or `"512"`).
     pub fn parse(s: &str) -> anyhow::Result<LaneWidth> {
         match s.trim() {
             "64" => Ok(LaneWidth::W64),
             "256" => Ok(LaneWidth::W256),
-            other => Err(anyhow::anyhow!("unsupported lane width `{other}` (use 64 or 256)")),
+            "512" => Ok(LaneWidth::W512),
+            other => {
+                Err(anyhow::anyhow!("unsupported lane width `{other}` (use 64, 256, or 512)"))
+            }
         }
     }
 }
@@ -325,6 +447,35 @@ mod tests {
     }
 
     #[test]
+    fn w512_lane_word_contract() {
+        check_word_ops::<W512>();
+    }
+
+    #[test]
+    fn w512_matches_eight_u64s() {
+        // W512 ops must equal the same op applied element-wise on u64.
+        let mut xs = [0u64; 8];
+        let mut ys = [0u64; 8];
+        for k in 0..8 {
+            xs[k] = 0x0123_4567_89AB_CDEFu64.rotate_left(7 * k as u32) ^ k as u64;
+            ys[k] = 0xDEAD_BEEF_F00D_5EEDu64.rotate_right(11 * k as u32) | 1 << k;
+        }
+        let a = W512(xs);
+        let b = W512(ys);
+        for k in 0..8 {
+            assert_eq!((a & b).0[k], xs[k] & ys[k]);
+            assert_eq!((a | b).0[k], xs[k] | ys[k]);
+            assert_eq!((a ^ b).0[k], xs[k] ^ ys[k]);
+            assert_eq!((!a).0[k], !xs[k]);
+        }
+        assert_eq!(a.count_ones(), xs.iter().map(|w| w.count_ones()).sum::<u32>());
+        // Lane indexing crosses every element boundary correctly.
+        for lane in [0usize, 63, 64, 255, 256, 319, 448, 511] {
+            assert_eq!(a.lane(lane), xs[lane >> 6] >> (lane & 63) & 1 == 1, "lane {lane}");
+        }
+    }
+
+    #[test]
     fn w256_matches_four_u64s() {
         // W256 ops must equal the same op applied element-wise on u64.
         let xs = [0x0123_4567_89AB_CDEFu64, !0, 0, 0xDEAD_BEEF_F00D_5EED];
@@ -351,10 +502,13 @@ mod tests {
     fn lane_width_parse_and_display() {
         assert_eq!(LaneWidth::parse("64").unwrap(), LaneWidth::W64);
         assert_eq!(LaneWidth::parse(" 256 ").unwrap(), LaneWidth::W256);
+        assert_eq!(LaneWidth::parse("512").unwrap(), LaneWidth::W512);
         assert!(LaneWidth::parse("128").is_err());
         assert_eq!(LaneWidth::W64.to_string(), "64");
         assert_eq!(LaneWidth::W256.to_string(), "256");
+        assert_eq!(LaneWidth::W512.to_string(), "512");
         assert_eq!(LaneWidth::default(), LaneWidth::W64);
         assert_eq!(LaneWidth::W256.lanes(), 256);
+        assert_eq!(LaneWidth::W512.lanes(), 512);
     }
 }

@@ -14,7 +14,7 @@ pub mod word;
 pub mod wordsim;
 
 pub use gatesim::GateSim;
-pub use lane::{LaneWidth, LaneWord, W256};
+pub use lane::{LaneWidth, LaneWord, W256, W512};
 pub use lower::lower;
 pub use netlist::{Levelization, NetId, Netlist, Node};
 pub use techmap::{map_design, MappedDesign};

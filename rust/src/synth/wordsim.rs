@@ -64,26 +64,28 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 pub const LANES: usize = 64;
 
 /// Bit-planes of the per-lane toggle accumulator (counts up to 2³² − 1
-/// toggles per lane between flushes).
-const PLANES: usize = 32;
+/// toggles per lane between flushes). Shared with [`crate::shard`]'s
+/// per-member accumulators.
+pub(crate) const PLANES: usize = 32;
 
 /// Default minimum level width (packed LUTs in one combinational level)
 /// for fanning a level out across worker threads; below it the
 /// synchronization costs more than the evaluation.
 pub const LEVEL_PAR_THRESHOLD: usize = 128;
 
-/// One LUT in the packed word-parallel evaluation plan.
+/// One LUT in the packed word-parallel evaluation plan (also the plan
+/// unit of the sharded evaluator, [`crate::shard::ShardSim`]).
 #[derive(Clone, Copy)]
-struct PackedWordLut {
+pub(crate) struct PackedWordLut {
     /// Output net index.
-    out: u32,
+    pub(crate) out: u32,
     /// Input net indices (unused slots repeat input 0; the truth-table
     /// expansion makes them don't-cares).
-    ins: [u32; 4],
+    pub(crate) ins: [u32; 4],
     /// Leaf-select mask: bit j set ⇒ leaf j depends on input 0.
-    sel: u8,
+    pub(crate) sel: u8,
     /// Leaf-invert mask: bit j set ⇒ leaf j is complemented.
-    inv: u8,
+    pub(crate) inv: u8,
 }
 
 /// All-ones word if bit `i` of `byte` is set, else zero (branch-free).
@@ -115,7 +117,7 @@ fn eval_lut<W: LaneWord>(sel: u8, inv: u8, a: W, b: W, c: W, d: W) -> W {
 
 /// Expand a truth table of the given arity to 4 inputs (index bits beyond
 /// the arity are don't-cares), then derive the 8 mux-tree leaf masks.
-fn compile_tt(tt: u16, arity: usize) -> (u8, u8) {
+pub(crate) fn compile_tt(tt: u16, arity: usize) -> (u8, u8) {
     let mask = (1usize << arity) - 1;
     let mut tt4 = 0u16;
     for idx in 0..16usize {
@@ -141,7 +143,7 @@ fn compile_tt(tt: u16, arity: usize) -> (u8, u8) {
 /// Carry-save add of toggle word `t` into the bit-plane accumulator.
 /// Returns the leftover carry (must be zero below the flush threshold).
 #[inline(always)]
-fn plane_accumulate<W: LaneWord>(planes: &mut [W; PLANES], t: W) -> W {
+pub(crate) fn plane_accumulate<W: LaneWord>(planes: &mut [W; PLANES], t: W) -> W {
     let mut carry = t;
     for p in planes.iter_mut() {
         if carry.is_zero() {
@@ -156,7 +158,11 @@ fn plane_accumulate<W: LaneWord>(planes: &mut [W; PLANES], t: W) -> W {
 }
 
 /// Move a bit-plane accumulator into flushed per-lane totals.
-fn flush_planes_into<W: LaneWord>(planes: &mut [W; PLANES], flushed: &mut [u64], adds: &mut u64) {
+pub(crate) fn flush_planes_into<W: LaneWord>(
+    planes: &mut [W; PLANES],
+    flushed: &mut [u64],
+    adds: &mut u64,
+) {
     for (lane, total) in flushed.iter_mut().enumerate() {
         let mut acc = 0u64;
         for (k, plane) in planes.iter().enumerate() {
@@ -777,14 +783,15 @@ impl<W: LaneWord> Drive<W> for WordSim<'_, W> {
 
 // ---- intra-level parallel session ----------------------------------------
 
-const PHASE_STOP: usize = usize::MAX;
+pub(crate) const PHASE_STOP: usize = usize::MAX;
 
 /// Spin-phase control shared between the driving thread and the level
-/// workers. `phase` increments once per fanned-out level (monotonic
-/// across steps); `done` counts worker completions.
-struct ParCtrl {
-    phase: AtomicUsize,
-    done: AtomicUsize,
+/// workers (reused shard-per-worker by [`crate::shard::ShardSim`]).
+/// `phase` increments once per fanned-out level (monotonic across
+/// steps); `done` counts worker completions.
+pub(crate) struct ParCtrl {
+    pub(crate) phase: AtomicUsize,
+    pub(crate) done: AtomicUsize,
 }
 
 /// Spin until `phase` moves past `last`, with escalating backoff: pure
@@ -793,7 +800,7 @@ struct ParCtrl {
 /// don't burn whole cores while the driving thread is in a long
 /// sequential stretch (stimulus packing, narrow levels, inter-step
 /// work).
-fn wait_phase(ctrl: &ParCtrl, last: usize) -> usize {
+pub(crate) fn wait_phase(ctrl: &ParCtrl, last: usize) -> usize {
     let mut spins = 0u32;
     loop {
         let p = ctrl.phase.load(Ordering::Acquire);
@@ -814,14 +821,14 @@ fn wait_phase(ctrl: &ParCtrl, last: usize) -> usize {
 /// A raw shared view of a slice, for the phase-protocol fork-join. All
 /// accesses are `unsafe`; callers uphold disjointness + ordering (see
 /// [`WordSim::parallel_session`]).
-struct RawSlice<T> {
+pub(crate) struct RawSlice<T> {
     ptr: *mut T,
     #[cfg(debug_assertions)]
     len: usize,
 }
 
 impl<T: Copy> RawSlice<T> {
-    fn new(s: &mut [T]) -> RawSlice<T> {
+    pub(crate) fn new(s: &mut [T]) -> RawSlice<T> {
         RawSlice {
             ptr: s.as_mut_ptr(),
             #[cfg(debug_assertions)]
@@ -830,14 +837,14 @@ impl<T: Copy> RawSlice<T> {
     }
 
     #[inline(always)]
-    unsafe fn get(&self, i: usize) -> T {
+    pub(crate) unsafe fn get(&self, i: usize) -> T {
         #[cfg(debug_assertions)]
         assert!(i < self.len);
         *self.ptr.add(i)
     }
 
     #[inline(always)]
-    unsafe fn set(&self, i: usize, v: T) {
+    pub(crate) unsafe fn set(&self, i: usize, v: T) {
         #[cfg(debug_assertions)]
         assert!(i < self.len);
         *self.ptr.add(i) = v;
@@ -865,7 +872,7 @@ unsafe impl<T: Send> Sync for RawSlice<T> {}
 /// and `tword` slots in the range for the duration of the call, and (b)
 /// that every input net read is not concurrently written (levelization:
 /// inputs live in strictly earlier levels).
-unsafe fn eval_chunk<W: LaneWord>(
+pub(crate) unsafe fn eval_chunk<W: LaneWord>(
     luts: &[PackedWordLut],
     vals: RawSlice<W>,
     toggles: RawSlice<u64>,

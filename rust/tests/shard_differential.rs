@@ -1,0 +1,151 @@
+//! Corpus-wide differential: the fused + sharded evaluation path
+//! ([`dimsynth::shard`]) against the per-system word-parallel reference
+//! ([`power::measure_activity_batch_wide`]), across shard counts and
+//! lane widths.
+//!
+//! All corpus systems are fused into one module; each member runs its
+//! own activation schedule (counts deliberately skewed so members
+//! finish at different global steps) with its own per-lane LFSR seeds.
+//! For K ∈ {1, 2, 4} and lanes ∈ {64, 256} every member's report must
+//! be **bit-identical** to its solo run: cycle count, per-lane mean
+//! toggle rates, and the power figures derived from them. Equality is
+//! exact (`==` on the f64s) — the fused driver is a linearization of
+//! the solo activation loop, not an approximation of it.
+
+use dimsynth::flow::{ensure_fused, Flow, FlowConfig};
+use dimsynth::newton::corpus;
+use dimsynth::power::{self, LaneActivityReport, ICE40};
+use dimsynth::rtl::PiModuleDesign;
+use dimsynth::shard::{measure_fused_activity, MemberStim, ShardPlan, ShardSim};
+use dimsynth::stim::LfsrBank;
+use dimsynth::synth::{LaneWord, Netlist, W256};
+
+/// Skewed activation schedule: members finish at different global
+/// steps, exercising the mid-run member-snapshot path.
+fn activations_of(member: usize) -> u32 {
+    1 + (member % 3) as u32
+}
+
+/// Per-member seed bank: every member drives distinct lane streams, so
+/// a cross-member scatter bug cannot cancel out.
+fn seeds_of<W: LaneWord>(member: usize) -> Vec<u32> {
+    LfsrBank::<W>::lane_seeds(0xC0FE ^ (member as u32).wrapping_mul(0x9E37_79B9))
+}
+
+fn fused_sharded_matches_solo_impl<W: LaneWord>(shard_counts: &[usize]) {
+    // Compile the whole corpus once; both sides reuse the same mapped
+    // netlists and designs.
+    let mut designs: Vec<PiModuleDesign> = Vec::new();
+    let mut mapped = Vec::new();
+    let mut ids: Vec<&str> = Vec::new();
+    for e in corpus::corpus() {
+        let mut flow = Flow::for_entry(e.clone(), FlowConfig::default());
+        designs.push(flow.rtl().unwrap().clone());
+        mapped.push((flow.netlist_fingerprint(), flow.netlist_shared().unwrap()));
+        ids.push(e.id);
+    }
+
+    // Solo references, one run per member.
+    let solo: Vec<LaneActivityReport> = (0..designs.len())
+        .map(|m| {
+            power::measure_activity_batch_wide::<W>(
+                &mapped[m].1.netlist,
+                &designs[m],
+                activations_of(m),
+                &seeds_of::<W>(m),
+                None,
+            )
+        })
+        .collect();
+
+    let members: Vec<(u64, &Netlist)> =
+        mapped.iter().map(|(fp, m)| (*fp, &m.netlist)).collect();
+    for &k in shard_counts {
+        let art = ensure_fused(None, &members, k);
+        let plan = ShardPlan::partition(&art.fused, k);
+        let mut sim = ShardSim::<W>::new(&art.fused, &plan);
+        let stims: Vec<MemberStim<'_>> = (0..designs.len())
+            .map(|m| MemberStim {
+                design: &designs[m],
+                activations: activations_of(m),
+                seeds: seeds_of::<W>(m),
+            })
+            .collect();
+        let reports = measure_fused_activity(&mut sim, &stims);
+        assert_eq!(reports.len(), solo.len());
+        for (m, (got, want)) in reports.iter().zip(&solo).enumerate() {
+            assert_eq!(got.cycles, want.cycles, "{}: K={k} cycle count", ids[m]);
+            assert_eq!(got.activations, want.activations, "{}: K={k} activations", ids[m]);
+            assert_eq!(got.lanes, want.lanes, "{}: K={k} per-lane toggle rates", ids[m]);
+            // The power figures the serving path reports are derived
+            // from these reports; spot-check the derivation end to end.
+            for lane in [0, W::LANES / 2, W::LANES - 1] {
+                for f_hz in [6.0e6, 12.0e6] {
+                    assert_eq!(
+                        power::average_power_mw(&ICE40, &got.lane(lane), f_hz),
+                        power::average_power_mw(&ICE40, &want.lane(lane), f_hz),
+                        "{}: K={k} lane {lane} power at {f_hz} Hz",
+                        ids[m]
+                    );
+                }
+            }
+        }
+        eprintln!(
+            "K={k} x {} lanes: {} members bit-identical to solo ({} comb cuts, {} reg cuts)",
+            W::LANES,
+            solo.len(),
+            plan.cuts.comb_cuts.len(),
+            plan.cuts.reg_cuts.len()
+        );
+    }
+}
+
+#[test]
+fn fused_sharded_matches_solo_64_lanes() {
+    fused_sharded_matches_solo_impl::<u64>(&[1, 2, 4]);
+}
+
+#[test]
+fn fused_sharded_matches_solo_256_lanes() {
+    fused_sharded_matches_solo_impl::<W256>(&[1, 2, 4]);
+}
+
+#[test]
+fn idle_member_reports_zero_and_does_not_perturb_others() {
+    // A member with zero activations idles: it must report zero
+    // activity, and the busy member's report must still be its solo run
+    // verbatim (the idle member's nets never toggle into the cuts).
+    let mut busy = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+    let busy_design = busy.rtl().unwrap().clone();
+    let busy_fp = busy.netlist_fingerprint();
+    let busy_mapped = busy.netlist_shared().unwrap();
+    let mut idle = Flow::for_system("spring_mass", FlowConfig::default()).unwrap();
+    let idle_design = idle.rtl().unwrap().clone();
+    let idle_fp = idle.netlist_fingerprint();
+    let idle_mapped = idle.netlist_shared().unwrap();
+
+    let solo = power::measure_activity_batch_wide::<u64>(
+        &busy_mapped.netlist,
+        &busy_design,
+        3,
+        &seeds_of::<u64>(0),
+        None,
+    );
+
+    let members: Vec<(u64, &Netlist)> =
+        vec![(busy_fp, &busy_mapped.netlist), (idle_fp, &idle_mapped.netlist)];
+    let art = ensure_fused(None, &members, 2);
+    let plan = ShardPlan::partition(&art.fused, 2);
+    let mut sim = ShardSim::<u64>::new(&art.fused, &plan);
+    let stims = vec![
+        MemberStim { design: &busy_design, activations: 3, seeds: seeds_of::<u64>(0) },
+        MemberStim { design: &idle_design, activations: 0, seeds: seeds_of::<u64>(1) },
+    ];
+    let reports = measure_fused_activity(&mut sim, &stims);
+
+    assert_eq!(reports[0].cycles, solo.cycles, "busy member cycle count");
+    assert_eq!(reports[0].lanes, solo.lanes, "busy member toggle rates");
+    assert_eq!(reports[1].cycles, 0, "idle member cycles");
+    assert_eq!(reports[1].activations, 0, "idle member activations");
+    assert!(reports[1].lanes.iter().all(|&r| r == 0.0), "idle member activity");
+}

@@ -1,7 +1,7 @@
 //! Differential validation of the bit-parallel gate-level engine
 //! ([`dimsynth::synth::WordSim`]) against the scalar reference oracle
-//! ([`dimsynth::synth::GateSim`]), at **both lane widths** (`u64` = 64
-//! lanes, [`W256`] = 256 lanes).
+//! ([`dimsynth::synth::GateSim`]), at **every lane width** (`u64` = 64
+//! lanes, [`W256`] = 256 lanes, [`W512`] = 512 lanes).
 //!
 //! For every corpus design, one word-parallel run carrying independent
 //! LFSR stimulus streams (≥10k simulated cycles) is checked against the
@@ -27,7 +27,7 @@ use dimsynth::newton::corpus;
 use dimsynth::power;
 use dimsynth::rtl::PiModuleDesign;
 use dimsynth::stim::{Lfsr32, LfsrBank};
-use dimsynth::synth::{GateSim, LaneWord, Netlist, WordSim, W256};
+use dimsynth::synth::{GateSim, LaneWord, Netlist, WordSim, W256, W512};
 
 /// Minimum simulated cycles per design (per lane).
 const MIN_CYCLES: u64 = 10_000;
@@ -225,6 +225,57 @@ fn word256_engine_matches_narrow_engine_and_scalar_oracle() {
     }
 }
 
+#[test]
+fn word512_engine_matches_mid_engine_and_scalar_oracle() {
+    // The widest lane word anchors both ways: its first 256 lanes must
+    // be the 256-lane engine's run verbatim (same seed prefix — that
+    // engine is itself corpus-proven against the scalar oracle above),
+    // and sampled upper lanes (element boundaries and interiors of the
+    // four u64 elements no narrower engine reaches) replay directly
+    // through the scalar oracle. One design keeps the 512-wide scalar
+    // replays from dominating the suite; the width-specific code path
+    // is per-word, not per-design.
+    const UPPER_LANES: [usize; 5] = [256, 257, 383, 448, 511];
+    let mut flow = Flow::for_system("pendulum", FlowConfig::default()).unwrap();
+    let design = flow.rtl().unwrap().clone();
+    let mapped = flow.netlist().unwrap();
+    let nl = &mapped.netlist;
+    let seeds = LfsrBank::<W512>::lane_seeds(0xD1FF);
+
+    let (mut wide, wide_outputs) = word_run::<W512>(nl, &design, &seeds, MIN_CYCLES, None);
+    let (mut mid, mid_outputs) = word_run::<W256>(nl, &design, &seeds[..256], MIN_CYCLES, None);
+
+    assert_eq!(wide.cycles(), mid.cycles(), "cycle count");
+    assert_eq!(wide_outputs.len(), mid_outputs.len(), "activations");
+    for (act, (w_outs, m_outs)) in wide_outputs.iter().zip(&mid_outputs).enumerate() {
+        for (u, (w_lanes, m_lanes)) in w_outs.iter().zip(m_outs).enumerate() {
+            assert_eq!(
+                &w_lanes[..256],
+                &m_lanes[..],
+                "activation {act} output pi_{u} lanes 0..256"
+            );
+        }
+    }
+    for lane in 0..256 {
+        assert_eq!(
+            wide.lane_net_toggles(lane),
+            mid.lane_net_toggles(lane),
+            "lane {lane} exact toggles"
+        );
+    }
+    let wide_totals = wide.lane_total_toggles();
+    let mid_totals = mid.lane_total_toggles();
+    assert_eq!(&wide_totals[..256], &mid_totals[..], "per-lane totals");
+
+    for &lane in &UPPER_LANES {
+        assert_lane_matches_scalar(
+            "pendulum", nl, &design, &wide, &wide_outputs, seeds[lane], lane,
+        );
+    }
+    let total: u64 = wide.lane_total_toggles().iter().sum();
+    assert_eq!(total, wide.total_toggles(), "total toggles");
+}
+
 fn aggregates_match_scalar_sums_impl<W: LaneWord>() {
     // Cross-check the word-parallel aggregate counters (popcount per-net
     // totals and the bit-plane per-lane totals) against scalar sums on
@@ -281,6 +332,7 @@ fn aggregates_match_scalar_sums_impl<W: LaneWord>() {
 fn word_engine_aggregates_match_scalar_sums() {
     aggregates_match_scalar_sums_impl::<u64>();
     aggregates_match_scalar_sums_impl::<W256>();
+    aggregates_match_scalar_sums_impl::<W512>();
 }
 
 fn overflow_flush_impl<W: LaneWord>() {
@@ -316,6 +368,7 @@ fn overflow_flush_impl<W: LaneWord>() {
 fn plane_overflow_flush_is_invisible_in_all_counters() {
     overflow_flush_impl::<u64>();
     overflow_flush_impl::<W256>();
+    overflow_flush_impl::<W512>();
 }
 
 #[test]
