@@ -1,0 +1,189 @@
+//! Dispatch-lane scaling bench: replay the same Π-heavy four-tenant
+//! workload through the real TCP serving stack at K = 1, 2, and
+//! one-lane-per-core, tenants pinned round-robin across the K dispatch
+//! lanes, and report aggregate throughput plus the worst per-tenant p99
+//! at each K. Emits `BENCH_dispatch.json`.
+//!
+//! Always asserted, any size: every request gets exactly one typed
+//! answer, nothing is shed (the tenants are unlimited and self-clocked),
+//! and graceful drain leaves `terminal == admitted` at every K.
+//!
+//! ```text
+//! cargo bench --bench dispatch                        # full sweep
+//! DISPATCH_REQUESTS=8000 cargo bench --bench dispatch # scaled smoke
+//! DISPATCH_REQUIRE_LANE_SPEEDUP=1 ...                 # gate K>1 beats K=1
+//! ```
+//!
+//! The speedup gate is opt-in because it needs real parallel cores: on
+//! a single-core runner the lanes time-slice and the sweep only checks
+//! the invariants.
+
+use dimsynth::bench_util::{fmt_duration, section, write_metrics_json};
+use dimsynth::coordinator::net::run_driver;
+use dimsynth::coordinator::{
+    AdmissionConfig, DriverConfig, DriverReport, EngineConfig, FaultPlan, NetServer,
+    ServeSet, TenantSpec, TrafficEngine,
+};
+use dimsynth::flow::FlowConfig;
+use dimsynth::synth::LaneWidth;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+const TENANTS: usize = 4;
+const SYSTEMS: [&str; TENANTS] = ["pendulum", "spring_mass", "pendulum", "spring_mass"];
+
+struct LaneRun {
+    /// Requested dispatcher count (the engine may clamp to the tenant
+    /// count; `lanes` is what actually ran).
+    k: usize,
+    lanes: usize,
+    rps: f64,
+    worst_p99_us: u64,
+}
+
+/// One sweep point: boot a fresh engine at `k` dispatch lanes over the
+/// shared warm `set`, replay `per_tenant` Π requests from each of the
+/// four pinned tenants concurrently, check the serving invariants, and
+/// measure aggregate throughput.
+fn run_at(set: &ServeSet, k: usize, per_tenant: usize) -> anyhow::Result<LaneRun> {
+    let tenants: Vec<TenantSpec> = (0..TENANTS)
+        .map(|i| {
+            TenantSpec::new(&format!("t{i}"), SYSTEMS[i])
+                .with_queue_cap(8192)
+                .with_lane(i % k)
+        })
+        .collect();
+    let admission =
+        AdmissionConfig { tenants, default_deadline: Duration::from_secs(60) };
+    let engine = Arc::new(TrafficEngine::start(
+        set,
+        admission,
+        EngineConfig { activations: 2, max_batch: 16, dispatchers: k },
+        FaultPlan::none(),
+    )?);
+    let lanes = engine.lane_count();
+    let server = NetServer::start(engine, "127.0.0.1:0")?;
+    let addr = server.local_addr().to_string();
+
+    let t = Instant::now();
+    let joins: Vec<_> = (0..TENANTS)
+        .map(|i| {
+            let addr = addr.clone();
+            let sys = set.system_index(SYSTEMS[i]).expect("corpus system");
+            let ports = set.handle_at(sys).design().num_inputs();
+            let cfg = DriverConfig {
+                requests: per_tenant,
+                window: 32,
+                seed: 0xD15 ^ (i as u32 + 1),
+                // Π-heavy on purpose: power floods serialize on the
+                // shared flood gate, Π batches are where lanes scale.
+                power_ratio: 0.0,
+                deadline_us: 60_000_000,
+                ..DriverConfig::new(&format!("t{i}"), ports)
+            };
+            std::thread::spawn(move || run_driver(&addr, &cfg).unwrap())
+        })
+        .collect();
+    let reports: Vec<DriverReport> =
+        joins.into_iter().map(|j| j.join().expect("driver thread")).collect();
+    let wall = t.elapsed().max(Duration::from_nanos(1));
+
+    let sent: u64 = reports.iter().map(|r| r.sent).sum();
+    let mut worst_p99_us = 0;
+    for (i, r) in reports.iter().enumerate() {
+        assert_eq!(r.answered(), r.sent, "t{i}: a request went unanswered: {r:?}");
+        assert_eq!(r.ok, r.sent, "t{i} is unlimited and self-clocked: {r:?}");
+        worst_p99_us = worst_p99_us.max(r.latency.percentile_us(0.99));
+    }
+
+    let report = server.shutdown();
+    assert!(!report.engine_panicked);
+    assert_eq!(report.lanes.len(), lanes);
+    for tn in &report.tenants {
+        assert_eq!(
+            tn.counters.terminal(),
+            tn.counters.admitted,
+            "tenant `{}` drained dirty at K={k}: {:?}",
+            tn.tenant,
+            tn.counters
+        );
+        assert_eq!(tn.queue_depth, 0, "tenant `{}` queue not drained", tn.tenant);
+    }
+
+    let rps = sent as f64 / wall.as_secs_f64();
+    println!(
+        "K={k} ({lanes} lane{}) replayed {sent} requests in {} ({rps:.0} req/s, worst p99 {worst_p99_us} µs)",
+        if lanes == 1 { "" } else { "s" },
+        fmt_duration(wall)
+    );
+    Ok(LaneRun { k, lanes, rps, worst_p99_us })
+}
+
+fn main() -> anyhow::Result<()> {
+    let total = env_u64("DISPATCH_REQUESTS", 40_000) as usize;
+    let per_tenant = (total / TENANTS).max(50);
+    let require_speedup =
+        std::env::var("DISPATCH_REQUIRE_LANE_SPEEDUP").is_ok_and(|v| v == "1");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+
+    let mut ks = vec![1, 2, cores.max(2)];
+    ks.sort_unstable();
+    ks.dedup();
+
+    section(&format!(
+        "dispatch sweep: {} Π requests x {TENANTS} tenants at K = {ks:?}",
+        per_tenant * TENANTS
+    ));
+
+    // One warm ServeSet shared by every sweep point: the sweep measures
+    // dispatch, not compilation.
+    let config = FlowConfig {
+        power_samples: 2,
+        lane_width: LaneWidth::W64,
+        ..FlowConfig::default()
+    };
+    let set = ServeSet::boot(&["pendulum", "spring_mass"], config, None)?;
+
+    let mut runs = Vec::new();
+    for &k in &ks {
+        runs.push(run_at(&set, k, per_tenant)?);
+    }
+
+    let k1 = runs.iter().find(|r| r.k == 1).expect("K=1 baseline").rps;
+    let best_multi =
+        runs.iter().filter(|r| r.k > 1).map(|r| r.rps).fold(0.0_f64, f64::max);
+    let speedup = best_multi / k1;
+    println!("best multi-lane speedup over K=1: {speedup:.2}x");
+    if require_speedup {
+        assert!(
+            best_multi > k1,
+            "lane speedup gate: best multi-lane {best_multi:.0} req/s \
+             does not beat K=1 {k1:.0} req/s"
+        );
+        println!("lane speedup gate: passed ({speedup:.2}x)");
+    }
+
+    let mut metrics: Vec<(String, f64)> = vec![
+        ("requests_per_k".to_string(), (per_tenant * TENANTS) as f64),
+        ("tenants".to_string(), TENANTS as f64),
+        ("speedup_best_vs_k1".to_string(), speedup),
+        ("speedup_gated".to_string(), if require_speedup { 1.0 } else { 0.0 }),
+    ];
+    for r in &runs {
+        metrics.push((format!("req_per_s_k{}", r.k), r.rps));
+        metrics.push((format!("worst_p99_us_k{}", r.k), r.worst_p99_us as f64));
+        metrics.push((format!("lanes_k{}", r.k), r.lanes as f64));
+    }
+    let entries: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_metrics_json(
+        "BENCH_dispatch.json",
+        &[("driver", "net-dispatch"), ("systems", "pendulum+spring_mass")],
+        &entries,
+    )?;
+    println!("wrote BENCH_dispatch.json");
+    Ok(())
+}

@@ -1,8 +1,9 @@
 //! Soak bench: replay ~1M mixed Π/power requests from concurrent
 //! tenants — two steady streams, one flooder, one light tenant —
-//! through the real TCP serving stack (net → admission → dispatch) on
-//! one warm [`ServeSet`], and gate the things a soak exists to catch:
-//! tail-latency collapse and starvation. Emits `BENCH_soak.json`.
+//! through the real TCP serving stack (net → admission → two dispatch
+//! lanes) on one warm [`ServeSet`], and gate the things a soak exists
+//! to catch: tail-latency collapse and starvation. Emits
+//! `BENCH_soak.json`. (`benches/dispatch.rs` sweeps the lane count.)
 //!
 //! Always asserted, any size: every request gets exactly one typed
 //! answer, the flooder is shed (not hung), the light tenant sees zero
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let engine = Arc::new(TrafficEngine::start(
         &set,
         admission,
-        EngineConfig { activations: 2, max_batch: 0 },
+        EngineConfig { activations: 2, max_batch: 0, dispatchers: 2 },
         FaultPlan::none(),
     )?);
     let server = NetServer::start(engine, "127.0.0.1:0")?;

@@ -14,6 +14,19 @@
 //! sweep, so a tenant with 10 000 queued requests and a tenant with 1
 //! both make progress every round.
 //!
+//! # Lane topology
+//!
+//! The queue registry is sharded into `K` **dispatch lanes** so `K`
+//! dispatcher threads can collect concurrently without contending on
+//! one lock. Every tenant lives in exactly one lane — by default the
+//! stable FNV-1a hash of its name modulo `K` ([`TenantQueues::lane_for`]),
+//! or pinned explicitly via [`TenantSpec::with_lane`]. Each lane group
+//! owns a private mutex + condvar and its own round-robin cursor, so
+//! fairness is arbitrated *within* a lane and lanes never block each
+//! other. Token buckets and queue caps stay attached to the tenant
+//! (which is in exactly one lane), so rate limits remain tenant-scoped
+//! — sharding never splits or multiplies a tenant's budget.
+//!
 //! Deadlines ride on every queued item ([`Deadline`]); expired work is
 //! dropped *at dequeue* by the dispatcher (answered with
 //! `DeadlineExceeded`, not computed) — queue time counts against the
@@ -22,6 +35,8 @@
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+use crate::flow::config::StableHasher;
 
 /// An absolute expiry instant carried by every enqueued request.
 ///
@@ -56,7 +71,8 @@ impl Deadline {
 }
 
 /// One tenant's admission policy: identity, which system of the serve
-/// set it targets, its token-bucket rate limit, and its queue bound.
+/// set it targets, its token-bucket rate limit, its queue bound, and an
+/// optional explicit dispatch-lane pin.
 #[derive(Clone, Debug)]
 pub struct TenantSpec {
     /// Tenant identity presented on the wire.
@@ -71,11 +87,14 @@ pub struct TenantSpec {
     pub burst: f64,
     /// Bounded queue depth; an arrival beyond this is shed.
     pub queue_cap: usize,
+    /// Explicit dispatch-lane pin (`Some(l)` places the tenant in lane
+    /// `l % K`); `None` hash-shards by tenant name.
+    pub lane: Option<usize>,
 }
 
 impl TenantSpec {
     /// A tenant with permissive defaults: no rate limit, burst 64, a
-    /// 1024-deep queue.
+    /// 1024-deep queue, hash-sharded lane placement.
     pub fn new(name: &str, system: &str) -> TenantSpec {
         TenantSpec {
             name: name.to_string(),
@@ -83,6 +102,7 @@ impl TenantSpec {
             rate_per_sec: f64::INFINITY,
             burst: 64.0,
             queue_cap: 1024,
+            lane: None,
         }
     }
 
@@ -96,6 +116,14 @@ impl TenantSpec {
     /// Set the bounded queue depth.
     pub fn with_queue_cap(mut self, cap: usize) -> TenantSpec {
         self.queue_cap = cap;
+        self
+    }
+
+    /// Pin the tenant to dispatch lane `lane % K`, overriding the
+    /// default hash placement (fault drills, fairness tests, manual
+    /// load balancing).
+    pub fn with_lane(mut self, lane: usize) -> TenantSpec {
+        self.lane = Some(lane);
         self
     }
 }
@@ -184,22 +212,32 @@ impl TokenBucket {
     }
 }
 
-/// One tenant's private lane: bounded FIFO (items timestamped at
-/// enqueue, so oldest-entry age is observable) plus its token bucket
-/// and a monotone per-tenant admission sequence number (deterministic
-/// fault-injection keys on it).
-struct Lane<T> {
+/// One tenant's private slot inside its lane group: bounded FIFO (items
+/// timestamped at enqueue, so oldest-entry age is observable) plus its
+/// token bucket and a monotone per-tenant admission sequence number
+/// (deterministic fault-injection keys on it). The bucket lives here —
+/// with the tenant, not the lane — so rate limits stay tenant-scoped no
+/// matter how tenants are sharded.
+struct Slot<T> {
     queue: VecDeque<(Instant, T)>,
     bucket: TokenBucket,
     cap: usize,
     admitted: u64,
 }
 
-struct QueuesState<T> {
-    lanes: Vec<Lane<T>>,
-    /// Round-robin position of the next collection sweep.
+struct GroupState<T> {
+    slots: Vec<Slot<T>>,
+    /// Round-robin position of the next collection sweep (per lane —
+    /// fairness is arbitrated among the lane's own tenants).
     cursor: usize,
     closing: bool,
+}
+
+/// One dispatch lane's queue group: its tenants' slots behind a private
+/// lock, with a private condvar so its dispatcher blocks independently.
+struct LaneGroup<T> {
+    state: Mutex<GroupState<T>>,
+    ready: Condvar,
 }
 
 /// Outcome of one fair collection.
@@ -212,12 +250,16 @@ pub enum FairBatch<T> {
     Closing(Vec<T>),
 }
 
-/// Per-tenant bounded queues behind one lock, with fair round-robin
-/// collection (see module docs). Generic over the queued item so the
-/// dispatch engine owns its request type.
+/// Per-tenant bounded queues sharded across `K` dispatch lanes, each
+/// lane a private lock + condvar with fair round-robin collection over
+/// its own tenants (see module docs). Generic over the queued item so
+/// the dispatch engine owns its request type.
 pub struct TenantQueues<T> {
-    state: Mutex<QueuesState<T>>,
-    ready: Condvar,
+    groups: Vec<LaneGroup<T>>,
+    /// Global tenant index → (lane, slot-within-lane).
+    route: Vec<(usize, usize)>,
+    /// Lane → global tenant indices resident in it (spec order).
+    members: Vec<Vec<usize>>,
 }
 
 /// Lock, surviving poisoning: a panicking peer must not take the whole
@@ -228,45 +270,86 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 }
 
 impl<T> TenantQueues<T> {
-    /// Queues for `specs.len()` tenants (index space = spec order).
-    pub fn new(specs: &[TenantSpec]) -> TenantQueues<T> {
-        let now = Instant::now();
-        TenantQueues {
-            state: Mutex::new(QueuesState {
-                lanes: specs
-                    .iter()
-                    .map(|s| Lane {
-                        queue: VecDeque::new(),
-                        bucket: TokenBucket::new(s.rate_per_sec, s.burst, now),
-                        cap: s.queue_cap.max(1),
-                        admitted: 0,
-                    })
-                    .collect(),
-                cursor: 0,
-                closing: false,
-            }),
-            ready: Condvar::new(),
+    /// The lane a spec lands in among `lanes` total: the explicit pin
+    /// modulo `lanes` when set, else stable FNV-1a of the tenant name
+    /// modulo `lanes` — deterministic across processes and restarts.
+    pub fn lane_for(spec: &TenantSpec, lanes: usize) -> usize {
+        let lanes = lanes.max(1);
+        match spec.lane {
+            Some(l) => l % lanes,
+            None => (StableHasher::new().str(&spec.name).finish() % lanes as u64) as usize,
         }
+    }
+
+    /// Queues for `specs.len()` tenants (index space = spec order),
+    /// sharded across `lanes.max(1)` dispatch lanes.
+    pub fn new(specs: &[TenantSpec], lanes: usize) -> TenantQueues<T> {
+        let now = Instant::now();
+        let k = lanes.max(1);
+        let mut groups: Vec<Vec<Slot<T>>> = (0..k).map(|_| Vec::new()).collect();
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        let mut route = Vec::with_capacity(specs.len());
+        for (tenant, s) in specs.iter().enumerate() {
+            let lane = Self::lane_for(s, k);
+            route.push((lane, groups[lane].len()));
+            members[lane].push(tenant);
+            groups[lane].push(Slot {
+                queue: VecDeque::new(),
+                bucket: TokenBucket::new(s.rate_per_sec, s.burst, now),
+                cap: s.queue_cap.max(1),
+                admitted: 0,
+            });
+        }
+        TenantQueues {
+            groups: groups
+                .into_iter()
+                .map(|slots| LaneGroup {
+                    state: Mutex::new(GroupState { slots, cursor: 0, closing: false }),
+                    ready: Condvar::new(),
+                })
+                .collect(),
+            route,
+            members,
+        }
+    }
+
+    /// Number of dispatch lanes.
+    pub fn lane_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The lane tenant `tenant` (spec-order index) is resident in.
+    pub fn lane_of(&self, tenant: usize) -> usize {
+        self.route[tenant].0
+    }
+
+    /// Global tenant indices resident in `lane`, in spec order.
+    pub fn lane_members(&self, lane: usize) -> &[usize] {
+        &self.members[lane]
     }
 
     /// Admit one item for `tenant` (an index into the spec order), or
     /// reject with a retry hint. `build` receives the tenant's
     /// admission sequence number (0-based, assigned atomically with the
     /// enqueue) and constructs the queued item. Bucket take, cap check,
-    /// sequence assignment, and enqueue are one atomic step.
+    /// sequence assignment, and enqueue are one atomic step — under the
+    /// tenant's lane lock only, so admissions to different lanes never
+    /// contend.
     pub fn try_admit_with(
         &self,
         tenant: usize,
         build: impl FnOnce(u64) -> T,
     ) -> Result<u64, Rejection> {
         let now = Instant::now();
-        let mut st = lock(&self.state);
+        let (lane, slot) = self.route[tenant];
+        let group = &self.groups[lane];
+        let mut st = lock(&group.state);
         if st.closing {
             return Err(Rejection::Draining);
         }
-        let lane = &mut st.lanes[tenant];
-        if lane.queue.len() >= lane.cap {
-            let oldest = lane
+        let slot = &mut st.slots[slot];
+        if slot.queue.len() >= slot.cap {
+            let oldest = slot
                 .queue
                 .front()
                 .map(|(t, _)| now.saturating_duration_since(*t))
@@ -275,41 +358,43 @@ impl<T> TenantQueues<T> {
                 retry_after: oldest.max(Duration::from_millis(1)),
             });
         }
-        lane.bucket
+        slot.bucket
             .try_take_at(now)
             .map_err(|retry_after| Rejection::RateLimited { retry_after })?;
-        let seq = lane.admitted;
-        lane.admitted += 1;
-        lane.queue.push_back((now, build(seq)));
+        let seq = slot.admitted;
+        slot.admitted += 1;
+        slot.queue.push_back((now, build(seq)));
         drop(st);
-        self.ready.notify_one();
+        group.ready.notify_one();
         Ok(seq)
     }
 
-    /// Collect up to `max` items, round-robin across tenants: each
-    /// sweep takes at most one item per tenant, so no tenant can occupy
-    /// more than its share of a contended batch. Blocks while every
-    /// queue is empty (idle dispatch burns no CPU); once the queues are
-    /// closing it never blocks — leftovers come back as
-    /// [`FairBatch::Closing`] until an empty one signals full drain.
-    pub fn collect_fair(&self, max: usize) -> FairBatch<T> {
-        let mut st = lock(&self.state);
+    /// Collect up to `max` items from one lane, round-robin across the
+    /// lane's tenants: each sweep takes at most one item per tenant, so
+    /// no tenant can occupy more than its share of a contended batch.
+    /// Blocks while every queue in the lane is empty (idle dispatch
+    /// burns no CPU); once the queues are closing it never blocks —
+    /// leftovers come back as [`FairBatch::Closing`] until an empty one
+    /// signals full drain.
+    pub fn collect_fair(&self, lane: usize, max: usize) -> FairBatch<T> {
+        let group = &self.groups[lane];
+        let mut st = lock(&group.state);
         loop {
-            if st.lanes.iter().any(|l| !l.queue.is_empty()) {
+            if st.slots.iter().any(|l| !l.queue.is_empty()) {
                 break;
             }
             if st.closing {
                 return FairBatch::Closing(Vec::new());
             }
-            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+            st = group.ready.wait(st).unwrap_or_else(|e| e.into_inner());
         }
-        let n = st.lanes.len();
+        let n = st.slots.len();
         let mut out = Vec::new();
         'fill: loop {
             let mut took_any = false;
             for k in 0..n {
                 let i = (st.cursor + k) % n;
-                if let Some((_, item)) = st.lanes[i].queue.pop_front() {
+                if let Some((_, item)) = st.slots[i].queue.pop_front() {
                     out.push(item);
                     took_any = true;
                     if out.len() >= max {
@@ -329,27 +414,34 @@ impl<T> TenantQueues<T> {
         }
     }
 
-    /// Stop admitting; wake the dispatcher so it drains and exits.
+    /// Stop admitting on every lane; wake all dispatchers so they drain
+    /// and exit.
     pub fn close(&self) {
-        lock(&self.state).closing = true;
-        self.ready.notify_all();
+        for group in &self.groups {
+            lock(&group.state).closing = true;
+            group.ready.notify_all();
+        }
     }
 
-    /// Live pressure of one tenant's lane: queue depth and oldest-entry
-    /// age (None when empty).
+    /// Live pressure of one tenant's queue: depth and oldest-entry age
+    /// (None when empty).
     pub fn pressure(&self, tenant: usize) -> (usize, Option<Duration>) {
-        let st = lock(&self.state);
-        let lane = &st.lanes[tenant];
+        let (lane, slot) = self.route[tenant];
+        let st = lock(&self.groups[lane].state);
+        let slot = &st.slots[slot];
         let now = Instant::now();
         (
-            lane.queue.len(),
-            lane.queue.front().map(|(t, _)| now.saturating_duration_since(*t)),
+            slot.queue.len(),
+            slot.queue.front().map(|(t, _)| now.saturating_duration_since(*t)),
         )
     }
 
-    /// Total queued items across all tenants.
+    /// Total queued items across all tenants and lanes.
     pub fn total_depth(&self) -> usize {
-        lock(&self.state).lanes.iter().map(|l| l.queue.len()).sum()
+        self.groups
+            .iter()
+            .map(|g| lock(&g.state).slots.iter().map(|l| l.queue.len()).sum::<usize>())
+            .sum()
     }
 }
 
@@ -396,9 +488,10 @@ mod tests {
 
     #[test]
     fn queue_cap_sheds_with_pressure_derived_hint() {
-        let q: TenantQueues<u32> = TenantQueues::new(&[TenantSpec::new("a", "s")
-            .with_queue_cap(2)
-            .with_rate(f64::INFINITY, 1.0)]);
+        let q: TenantQueues<u32> = TenantQueues::new(
+            &[TenantSpec::new("a", "s").with_queue_cap(2).with_rate(f64::INFINITY, 1.0)],
+            1,
+        );
         assert_eq!(q.try_admit_with(0, |_| 1).unwrap(), 0);
         assert_eq!(q.try_admit_with(0, |_| 2).unwrap(), 1);
         match q.try_admit_with(0, |_| 3) {
@@ -414,7 +507,7 @@ mod tests {
 
     #[test]
     fn collect_fair_interleaves_tenants_round_robin() {
-        let q: TenantQueues<(usize, u64)> = TenantQueues::new(&specs(3));
+        let q: TenantQueues<(usize, u64)> = TenantQueues::new(&specs(3), 1);
         // Tenant 0 floods; tenants 1 and 2 each queue a couple.
         for _ in 0..100 {
             q.try_admit_with(0, |seq| (0, seq)).unwrap();
@@ -424,7 +517,7 @@ mod tests {
                 q.try_admit_with(t, |seq| (t, seq)).unwrap();
             }
         }
-        let batch = match q.collect_fair(6) {
+        let batch = match q.collect_fair(0, 6) {
             FairBatch::Batch(b) => b,
             FairBatch::Closing(_) => panic!("not closing"),
         };
@@ -441,18 +534,18 @@ mod tests {
 
     #[test]
     fn cursor_rotates_between_batches() {
-        let q: TenantQueues<usize> = TenantQueues::new(&specs(2));
+        let q: TenantQueues<usize> = TenantQueues::new(&specs(2), 1);
         for _ in 0..4 {
             q.try_admit_with(0, |_| 0).unwrap();
             q.try_admit_with(1, |_| 1).unwrap();
         }
         // A max-1 batch takes from one tenant and advances the cursor,
         // so the next batch starts at the other tenant.
-        let first = match q.collect_fair(1) {
+        let first = match q.collect_fair(0, 1) {
             FairBatch::Batch(b) => b[0],
             _ => panic!(),
         };
-        let second = match q.collect_fair(1) {
+        let second = match q.collect_fair(0, 1) {
             FairBatch::Batch(b) => b[0],
             _ => panic!(),
         };
@@ -461,16 +554,16 @@ mod tests {
 
     #[test]
     fn closing_drains_then_signals_done_and_rejects_new_work() {
-        let q: TenantQueues<u64> = TenantQueues::new(&specs(1));
+        let q: TenantQueues<u64> = TenantQueues::new(&specs(1), 1);
         q.try_admit_with(0, |seq| seq).unwrap();
         q.try_admit_with(0, |seq| seq).unwrap();
         q.close();
         assert!(matches!(q.try_admit_with(0, |seq| seq), Err(Rejection::Draining)));
-        match q.collect_fair(16) {
+        match q.collect_fair(0, 16) {
             FairBatch::Closing(v) => assert_eq!(v, vec![0, 1]),
             FairBatch::Batch(_) => panic!("closing queues must report Closing"),
         }
-        match q.collect_fair(16) {
+        match q.collect_fair(0, 16) {
             FairBatch::Closing(v) => assert!(v.is_empty(), "fully drained"),
             FairBatch::Batch(_) => panic!("closing queues must report Closing"),
         }
@@ -497,5 +590,95 @@ mod tests {
         let past = Deadline::at(Instant::now() - Duration::from_secs(1));
         assert!(past.expired());
         assert_eq!(past.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn lane_assignment_is_deterministic_and_pins_override_hash() {
+        // Hash placement is a pure function of the name: two queue sets
+        // built from the same specs agree, and every lane index is in
+        // range.
+        let s = specs(8);
+        let a: TenantQueues<u8> = TenantQueues::new(&s, 3);
+        let b: TenantQueues<u8> = TenantQueues::new(&s, 3);
+        for t in 0..s.len() {
+            assert_eq!(a.lane_of(t), b.lane_of(t));
+            assert!(a.lane_of(t) < 3);
+        }
+        // Explicit pins win over the hash, modulo the lane count.
+        let pinned = vec![
+            TenantSpec::new("x", "s").with_lane(1),
+            TenantSpec::new("y", "s").with_lane(5), // 5 % 3 == 2
+        ];
+        let q: TenantQueues<u8> = TenantQueues::new(&pinned, 3);
+        assert_eq!(q.lane_of(0), 1);
+        assert_eq!(q.lane_of(1), 2);
+        assert_eq!(q.lane_count(), 3);
+        assert_eq!(q.lane_members(1), &[0]);
+        assert_eq!(q.lane_members(2), &[1]);
+        assert!(q.lane_members(0).is_empty());
+    }
+
+    #[test]
+    fn lanes_collect_independently_with_per_lane_fairness() {
+        // Four tenants pinned two per lane. Each lane's collection sees
+        // only its own tenants, round-robin among them; the other
+        // lane's backlog is untouched.
+        let s = vec![
+            TenantSpec::new("a0", "s").with_lane(0),
+            TenantSpec::new("a1", "s").with_lane(0),
+            TenantSpec::new("b0", "s").with_lane(1),
+            TenantSpec::new("b1", "s").with_lane(1),
+        ];
+        let q: TenantQueues<usize> = TenantQueues::new(&s, 2);
+        for t in 0..4 {
+            for _ in 0..3 {
+                q.try_admit_with(t, |_| t).unwrap();
+            }
+        }
+        let lane0 = match q.collect_fair(0, 4) {
+            FairBatch::Batch(b) => b,
+            _ => panic!("not closing"),
+        };
+        assert_eq!(lane0, vec![0, 1, 0, 1], "lane 0 interleaves only its tenants");
+        assert_eq!(q.total_depth(), 8, "lane 1 backlog untouched");
+        let lane1 = match q.collect_fair(1, usize::MAX) {
+            FairBatch::Batch(b) => b,
+            _ => panic!("not closing"),
+        };
+        assert_eq!(lane1, vec![2, 3, 2, 3, 2, 3]);
+        // Draining: close() wakes every lane; both report Closing.
+        q.close();
+        match q.collect_fair(0, 16) {
+            FairBatch::Closing(v) => assert_eq!(v, vec![0, 1]),
+            FairBatch::Batch(_) => panic!("closing queues must report Closing"),
+        }
+        match q.collect_fair(1, 16) {
+            FairBatch::Closing(v) => assert!(v.is_empty()),
+            FairBatch::Batch(_) => panic!("closing queues must report Closing"),
+        }
+    }
+
+    #[test]
+    fn rate_limits_stay_tenant_scoped_across_lanes() {
+        // One rate-limited tenant sharded among unlimited neighbors in
+        // other lanes: its bucket is private to it, so its budget is
+        // neither split by sharding nor shared with lane peers.
+        let s = vec![
+            TenantSpec::new("limited", "s").with_lane(0).with_rate(1.0, 2.0),
+            TenantSpec::new("free-same-lane", "s").with_lane(0),
+            TenantSpec::new("free-other-lane", "s").with_lane(1),
+        ];
+        let q: TenantQueues<u8> = TenantQueues::new(&s, 2);
+        assert!(q.try_admit_with(0, |_| 0).is_ok());
+        assert!(q.try_admit_with(0, |_| 0).is_ok());
+        assert!(matches!(
+            q.try_admit_with(0, |_| 0),
+            Err(Rejection::RateLimited { .. })
+        ));
+        // Neighbors (same lane and different lane) are unaffected.
+        for _ in 0..100 {
+            assert!(q.try_admit_with(1, |_| 0).is_ok());
+            assert!(q.try_admit_with(2, |_| 0).is_ok());
+        }
     }
 }

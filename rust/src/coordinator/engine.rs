@@ -1,26 +1,44 @@
 //! The traffic dispatch engine: admission-controlled, deadline-aware,
-//! panic-containing request dispatch over one warm [`ServeSet`].
+//! panic-containing request dispatch over one warm [`ServeSet`],
+//! parallelized across `K` dispatch lanes.
 //!
 //! This is the layer between the network frontend
 //! ([`super::net`]) and the compute substrate: requests from any
 //! transport are [`TrafficEngine::submit`]ted with a tenant identity, a
 //! payload, and a deadline; they pass per-tenant admission control
-//! ([`super::admission`]) and land in bounded per-tenant queues; one
-//! dispatcher thread collects fair round-robin batches, drops expired
-//! work *at dequeue* (answered `DeadlineExceeded`, never computed),
-//! executes Π inference batches per system through the cycle-accurate
-//! RTL simulator and power requests through the cross-system grouped
-//! dispatch, and answers every admitted request with exactly one
+//! ([`super::admission`]) and land in bounded per-tenant queues. The
+//! queues are sharded across `K` **dispatch lanes**
+//! ([`EngineConfig::dispatchers`]); each lane runs its own dispatcher
+//! thread with a private fair round-robin cursor over only its
+//! tenants' queues, so Π compute for different lanes proceeds on
+//! different cores. Each dispatcher drops expired work *at dequeue*
+//! (answered `DeadlineExceeded`, never computed), executes Π inference
+//! batches per system through the cycle-accurate RTL simulator, and
+//! routes power requests through the cross-system flood dispatch —
+//! power floods already fan out over every core, so concurrent lanes
+//! arbitrate them through the serve set's shared
+//! [`FloodGate`](super::serveset::FloodGate) instead of oversubscribing
+//! the machine.
+//!
+//! Every admitted request is answered with exactly one
 //! [`TrafficReply`] — including when the computation panics
 //! (`catch_unwind` → [`ServeError::WorkerPanicked`], the engine keeps
-//! serving other tenants).
+//! serving other tenants), and including when a whole dispatcher
+//! thread dies: each lane publishes its in-flight batch into a
+//! holding cell ([`BatchGuard`]) before computing, so an uncaught
+//! panic strands nothing silently — the per-lane janitor in
+//! [`TrafficEngine::shutdown`] sweeps the dead lane's in-flight and
+//! queued work (answering `WorkerPanicked`) without disturbing live
+//! lanes.
 //!
 //! Fault injection ([`super::faults::FaultPlan`]) hooks in at compute
-//! time, so the e2e harness and soak bench exercise exactly these
-//! containment paths deterministically.
+//! time — and, for lane kills, at batch-collect time — so the e2e
+//! harness and soak bench exercise exactly these containment paths
+//! deterministically.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -29,11 +47,13 @@ use std::time::{Duration, Instant};
 use super::admission::{AdmissionConfig, Deadline, FairBatch, TenantQueues, TenantSpec};
 use super::error::ServeError;
 use super::faults::{FaultAction, FaultPlan};
-use super::metrics::{LatencyHistogram, TenantTraffic, TrafficCounters, TrafficReport};
+use super::metrics::{
+    AtomicLatencyHistogram, AtomicTrafficCounters, LaneTraffic, TenantTraffic, TrafficReport,
+};
 use super::pipeline::{
     estimate_power_requests_grouped, PowerEstimate, PowerRequest, SystemPowerRequest,
 };
-use super::serveset::{dispatch_flood, FusedPlan, ServeSet, SystemHandle};
+use super::serveset::{dispatch_flood, FloodGate, FusedPlan, ServeSet, SystemHandle};
 use crate::rtl;
 use crate::synth::LaneWidth;
 
@@ -71,13 +91,18 @@ pub struct TrafficReply {
 pub struct EngineConfig {
     /// Activations per power estimate (gate-sim stimulus length).
     pub activations: u32,
-    /// Max requests per fair dispatch batch; 0 = `lanes × systems`.
+    /// Max requests per fair dispatch batch (per lane); 0 = `lanes ×
+    /// systems`.
     pub max_batch: usize,
+    /// Dispatch lanes (dispatcher threads); clamped to `[1, tenants]`.
+    /// Tenants are hash-sharded across lanes unless pinned
+    /// ([`TenantSpec::with_lane`]).
+    pub dispatchers: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { activations: 4, max_batch: 0 }
+        EngineConfig { activations: 4, max_batch: 0, dispatchers: 1 }
     }
 }
 
@@ -93,17 +118,34 @@ struct Item {
     t0: Instant,
 }
 
-struct MetricsState {
-    tenants: Vec<(TrafficCounters, LatencyHistogram)>,
-    tenant_unknown: u64,
-    disconnects: u64,
-    undelivered: u64,
+/// One tenant's lock-free metrics shard. A tenant lives in exactly one
+/// lane, so its shard is written by one dispatcher plus the submit
+/// path; the scrape folds shards into a [`TrafficReport`] without ever
+/// blocking the hot path.
+struct TenantShard {
+    counters: AtomicTrafficCounters,
+    latency: AtomicLatencyHistogram,
 }
 
-/// Everything the submit path and the dispatcher share.
+/// One dispatch lane's runtime state shared between its dispatcher, the
+/// submit path, and the shutdown janitor.
+struct LaneState {
+    /// In-flight items stranded by an uncaught dispatcher panic
+    /// ([`BatchGuard`] moves them here on unwind). Swept by the
+    /// per-lane janitor after the lane's thread is joined.
+    orphans: Mutex<Vec<Item>>,
+    /// Batches this lane's dispatcher has collected.
+    batches: AtomicU64,
+    /// Items dequeued into those batches.
+    items: AtomicU64,
+    /// The lane's dispatcher died by panic.
+    panicked: AtomicBool,
+}
+
+/// Everything the submit path and the dispatchers share.
 struct Inner {
     specs: Vec<TenantSpec>,
-    /// tenant name → index into `specs` (= queue lane index).
+    /// tenant name → index into `specs` (= queue index).
     tenant_idx: HashMap<String, usize>,
     /// tenant index → serve-set system index.
     tenant_system: Vec<usize>,
@@ -114,16 +156,26 @@ struct Inner {
     fused: Option<Arc<FusedPlan>>,
     width: LaneWidth,
     queues: TenantQueues<Item>,
-    metrics: Mutex<MetricsState>,
+    tenant_shards: Vec<TenantShard>,
+    lane_states: Vec<LaneState>,
+    tenant_unknown: AtomicU64,
+    disconnects: AtomicU64,
+    undelivered: AtomicU64,
+    /// Whole-machine power floods serialize across lanes through the
+    /// serve set's shared gate (each flood already fans over all
+    /// cores); Π batches run un-gated, which is where lane parallelism
+    /// pays.
+    flood_gate: Arc<FloodGate>,
     faults: FaultPlan,
     default_deadline: Duration,
     activations: u32,
 }
 
-/// The running engine: admission + queues + one dispatcher thread.
+/// The running engine: admission + sharded queues + K dispatcher
+/// threads.
 pub struct TrafficEngine {
     inner: Arc<Inner>,
-    worker: Mutex<Option<JoinHandle<()>>>,
+    workers: Mutex<Vec<Option<JoinHandle<()>>>>,
     started: Instant,
 }
 
@@ -141,10 +193,25 @@ fn panic_reason(e: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Marks its lane panicked if the dispatcher thread unwinds — dropped
+/// on every exit path, but only a panicking exit sets the flag.
+struct LanePanicSentinel {
+    inner: Arc<Inner>,
+    lane: usize,
+}
+
+impl Drop for LanePanicSentinel {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.inner.lane_states[self.lane].panicked.store(true, SeqCst);
+        }
+    }
+}
+
 impl TrafficEngine {
     /// Validate the tenant roster against the serve set and start the
-    /// dispatcher. Tenant names must be unique; every tenant's `system`
-    /// must be served by `set`.
+    /// dispatch lanes. Tenant names must be unique; every tenant's
+    /// `system` must be served by `set`.
     pub fn start(
         set: &ServeSet,
         admission: AdmissionConfig,
@@ -176,39 +243,64 @@ impl TrafficEngine {
         } else {
             config.max_batch
         };
+        // More lanes than tenants would leave dispatchers with nothing
+        // to ever collect; fewer than one is meaningless.
+        let k = config.dispatchers.clamp(1, admission.tenants.len());
         let inner = Arc::new(Inner {
-            queues: TenantQueues::new(&admission.tenants),
-            metrics: Mutex::new(MetricsState {
-                tenants: admission
-                    .tenants
-                    .iter()
-                    .map(|_| (TrafficCounters::default(), LatencyHistogram::new()))
-                    .collect(),
-                tenant_unknown: 0,
-                disconnects: 0,
-                undelivered: 0,
-            }),
+            queues: TenantQueues::new(&admission.tenants, k),
+            tenant_shards: admission
+                .tenants
+                .iter()
+                .map(|_| TenantShard {
+                    counters: AtomicTrafficCounters::new(),
+                    latency: AtomicLatencyHistogram::new(),
+                })
+                .collect(),
+            lane_states: (0..k)
+                .map(|_| LaneState {
+                    orphans: Mutex::new(Vec::new()),
+                    batches: AtomicU64::new(0),
+                    items: AtomicU64::new(0),
+                    panicked: AtomicBool::new(false),
+                })
+                .collect(),
+            tenant_unknown: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            undelivered: AtomicU64::new(0),
             specs: admission.tenants,
             tenant_idx,
             tenant_system,
             handles,
             fused: set.fusion_shared(),
             width: set.lane_width(),
+            flood_gate: set.flood_gate(),
             faults,
             default_deadline: admission.default_deadline,
             activations: config.activations,
         });
-        let worker = {
+        let mut workers = Vec::with_capacity(k);
+        for lane in 0..k {
             let inner = inner.clone();
-            std::thread::Builder::new()
-                .name("dimsynth-traffic".to_string())
-                .spawn(move || dispatch_loop(&inner, max_batch))?
-        };
+            workers.push(Some(
+                std::thread::Builder::new()
+                    .name(format!("dimsynth-dispatch-{lane}"))
+                    .spawn(move || {
+                        let _sentinel =
+                            LanePanicSentinel { inner: inner.clone(), lane };
+                        dispatch_loop(&inner, lane, max_batch);
+                    })?,
+            ));
+        }
         Ok(TrafficEngine {
             inner,
-            worker: Mutex::new(Some(worker)),
+            workers: Mutex::new(workers),
             started: Instant::now(),
         })
+    }
+
+    /// Number of dispatch lanes this engine runs.
+    pub fn lane_count(&self) -> usize {
+        self.inner.queues.lane_count()
     }
 
     /// Submit one request on behalf of `tenant`. On success the request
@@ -228,11 +320,11 @@ impl TrafficEngine {
     ) -> Result<u64, ServeError> {
         let inner = &self.inner;
         let Some(&t) = inner.tenant_idx.get(tenant) else {
-            lock(&inner.metrics).tenant_unknown += 1;
+            inner.tenant_unknown.fetch_add(1, Relaxed);
             return Err(ServeError::TenantUnknown { tenant: tenant.to_string() });
         };
         if let Err(e) = validate(inner, t, &payload) {
-            lock(&inner.metrics).tenants[t].0.protocol_errors += 1;
+            inner.tenant_shards[t].counters.protocol_errors.fetch_add(1, Relaxed);
             return Err(e);
         }
         let budget = deadline.unwrap_or(inner.default_deadline);
@@ -247,11 +339,11 @@ impl TrafficEngine {
         });
         match admitted {
             Ok(seq) => {
-                lock(&inner.metrics).tenants[t].0.admitted += 1;
+                inner.tenant_shards[t].counters.admitted.fetch_add(1, Relaxed);
                 Ok(seq)
             }
             Err(rejection) => {
-                lock(&inner.metrics).tenants[t].0.shed += 1;
+                inner.tenant_shards[t].counters.shed.fetch_add(1, Relaxed);
                 Err(ServeError::Shed { retry_after_ms: rejection.retry_after_ms() })
             }
         }
@@ -259,12 +351,12 @@ impl TrafficEngine {
 
     /// Count a connection that dropped mid-request (net layer).
     pub fn note_disconnect(&self) {
-        lock(&self.inner.metrics).disconnects += 1;
+        self.inner.disconnects.fetch_add(1, Relaxed);
     }
 
     /// Count answers that could not be delivered (net layer).
     pub fn note_undelivered(&self, n: u64) {
-        lock(&self.inner.metrics).undelivered += n;
+        self.inner.undelivered.fetch_add(n, Relaxed);
     }
 
     /// Live pressure of one tenant's queue (depth, oldest age).
@@ -272,14 +364,14 @@ impl TrafficEngine {
         self.inner.tenant_idx.get(tenant).map(|&t| self.inner.queues.pressure(t))
     }
 
-    /// Live snapshot of counters, latency, and queue pressure.
+    /// Live snapshot of counters, latency, queue pressure, and lane
+    /// activity — folds the lock-free shards, blocks no dispatcher.
     pub fn report(&self) -> TrafficReport {
-        self.snapshot(false)
+        self.snapshot()
     }
 
-    fn snapshot(&self, engine_panicked: bool) -> TrafficReport {
+    fn snapshot(&self) -> TrafficReport {
         let inner = &self.inner;
-        let m = lock(&inner.metrics);
         let tenants = inner
             .specs
             .iter()
@@ -288,18 +380,37 @@ impl TrafficEngine {
                 let (depth, oldest) = inner.queues.pressure(i);
                 TenantTraffic {
                     tenant: spec.name.clone(),
-                    counters: m.tenants[i].0.clone(),
-                    latency: m.tenants[i].1.clone(),
+                    counters: inner.tenant_shards[i].counters.snapshot(),
+                    latency: inner.tenant_shards[i].latency.snapshot(),
                     queue_depth: depth,
                     queue_oldest_ms: oldest.map(|d| d.as_millis() as u64).unwrap_or(0),
                 }
             })
             .collect();
+        let lanes: Vec<LaneTraffic> = inner
+            .lane_states
+            .iter()
+            .enumerate()
+            .map(|(l, s)| LaneTraffic {
+                lane: l,
+                tenants: inner
+                    .queues
+                    .lane_members(l)
+                    .iter()
+                    .map(|&t| inner.specs[t].name.clone())
+                    .collect(),
+                batches: s.batches.load(Relaxed),
+                items: s.items.load(Relaxed),
+                panicked: s.panicked.load(SeqCst),
+            })
+            .collect();
+        let engine_panicked = lanes.iter().any(|l| l.panicked);
         TrafficReport {
             tenants,
-            tenant_unknown: m.tenant_unknown,
-            disconnects: m.disconnects,
-            undelivered: m.undelivered,
+            lanes,
+            tenant_unknown: inner.tenant_unknown.load(Relaxed),
+            disconnects: inner.disconnects.load(Relaxed),
+            undelivered: inner.undelivered.load(Relaxed),
             wall: self.started.elapsed(),
             engine_panicked,
         }
@@ -319,45 +430,65 @@ impl TrafficEngine {
     /// One-line liveness summary (wire `health` requests).
     pub fn health_text(&self) -> String {
         format!(
-            "ok: {} systems, {} tenants, {} queued, up {:.1} s",
+            "ok: {} systems, {} tenants, {} lanes, {} queued, up {:.1} s",
             self.inner.handles.len(),
             self.inner.specs.len(),
+            self.inner.queues.lane_count(),
             self.inner.queues.total_depth(),
             self.started.elapsed().as_secs_f64()
         )
     }
 
-    /// Graceful drain: stop admitting, let the dispatcher answer
-    /// everything still queued, join it, and return the final report.
-    /// If the dispatcher itself died by panic, leftover queued requests
-    /// are answered `WorkerPanicked` here (the no-silent-drop invariant
-    /// holds even then) and the report says so loudly.
+    /// Graceful drain: stop admitting, let every lane's dispatcher
+    /// answer what is still queued, join them, and return the final
+    /// report. Lanes have independent lifecycles: each is joined and
+    /// then janitor-swept on its own — a lane whose dispatcher died by
+    /// panic has its in-flight batch (stranded in the lane's holding
+    /// cell) and queued leftovers answered `WorkerPanicked` here, while
+    /// live lanes drain themselves undisturbed. The no-silent-drop
+    /// invariant holds per lane, not just globally.
     pub fn shutdown(&self) -> TrafficReport {
         self.inner.queues.close();
-        let engine_panicked =
-            matches!(lock(&self.worker).take().map(JoinHandle::join), Some(Err(_)));
-        if engine_panicked {
-            // Janitor sweep: the dispatcher died mid-flight, so its
-            // queues may still hold admitted-but-unanswered work.
-            loop {
-                let batch = match self.inner.queues.collect_fair(usize::MAX) {
-                    FairBatch::Closing(b) | FairBatch::Batch(b) => b,
-                };
-                if batch.is_empty() {
-                    break;
-                }
-                for item in batch {
-                    finish(
-                        &self.inner,
-                        item,
-                        Err(ServeError::WorkerPanicked {
-                            reason: "dispatch engine panicked".to_string(),
-                        }),
-                    );
-                }
+        let handles: Vec<Option<JoinHandle<()>>> = {
+            let mut w = lock(&self.workers);
+            w.iter_mut().map(Option::take).collect()
+        };
+        for (lane, handle) in handles.into_iter().enumerate() {
+            if matches!(handle.map(JoinHandle::join), Some(Err(_))) {
+                // Redundant with the sentinel, but keeps the flag
+                // truthful even if the unwind skipped it.
+                self.inner.lane_states[lane].panicked.store(true, SeqCst);
             }
+            // Per-lane janitor. Runs strictly after this lane's join,
+            // so it can never race the dispatcher into a double answer;
+            // for a cleanly drained lane both sweeps are no-ops.
+            sweep_lane(&self.inner, lane);
         }
-        self.snapshot(engine_panicked)
+        self.snapshot()
+    }
+}
+
+/// Answer everything a dead lane left behind: first the in-flight batch
+/// its [`BatchGuard`] moved to the holding cell, then whatever was
+/// still queued. Only this lane's queues are touched.
+fn sweep_lane(inner: &Inner, lane: usize) {
+    let reason = || ServeError::WorkerPanicked {
+        reason: format!("dispatch lane {lane} panicked"),
+    };
+    let orphans: Vec<Item> = std::mem::take(&mut *lock(&inner.lane_states[lane].orphans));
+    for item in orphans {
+        finish(inner, item, Err(reason()));
+    }
+    loop {
+        let batch = match inner.queues.collect_fair(lane, usize::MAX) {
+            FairBatch::Closing(b) | FairBatch::Batch(b) => b,
+        };
+        if batch.is_empty() {
+            break;
+        }
+        for item in batch {
+            finish(inner, item, Err(reason()));
+        }
     }
 }
 
@@ -394,28 +525,77 @@ fn validate(inner: &Inner, tenant: usize, payload: &RequestPayload) -> Result<()
 /// Record the outcome and deliver the reply (exactly once per admitted
 /// item). A receiver that has gone away is counted, not an error.
 fn finish(inner: &Inner, item: Item, result: Result<TrafficResponse, ServeError>) {
-    {
-        let mut m = lock(&inner.metrics);
-        let (counters, latency) = &mut m.tenants[item.tenant];
-        match &result {
-            Ok(_) => {
-                counters.served += 1;
-                latency.record(item.t0.elapsed());
-            }
-            Err(ServeError::DeadlineExceeded) => counters.deadline_expired += 1,
-            Err(ServeError::WorkerPanicked { .. }) => counters.panicked += 1,
-            // Post-admission items only fail in the two ways above.
-            Err(_) => {}
+    let shard = &inner.tenant_shards[item.tenant];
+    match &result {
+        Ok(_) => {
+            shard.counters.served.fetch_add(1, Relaxed);
+            shard.latency.record(item.t0.elapsed());
         }
+        Err(ServeError::DeadlineExceeded) => {
+            shard.counters.deadline_expired.fetch_add(1, Relaxed);
+        }
+        Err(ServeError::WorkerPanicked { .. }) => {
+            shard.counters.panicked.fetch_add(1, Relaxed);
+        }
+        // Post-admission items only fail in the two ways above.
+        Err(_) => {}
     }
     if item.reply.send(TrafficReply { id: item.id, result }).is_err() {
-        lock(&inner.metrics).undelivered += 1;
+        inner.undelivered.fetch_add(1, Relaxed);
     }
 }
 
-fn dispatch_loop(inner: &Inner, max_batch: usize) {
+/// The collected batch, published for crash recovery while it is in
+/// flight. Items leave through [`BatchGuard::finish`]/[`take`] exactly
+/// once; anything still inside when the guard drops *during an unwind*
+/// is moved to the lane's orphan cell for the shutdown janitor — an
+/// uncaught dispatcher panic can strand work, never lose it. (On a
+/// clean exit the guard is empty and the drop is a no-op.)
+struct BatchGuard<'a> {
+    inner: &'a Inner,
+    lane: usize,
+    items: Vec<Option<Item>>,
+}
+
+impl<'a> BatchGuard<'a> {
+    fn new(inner: &'a Inner, lane: usize, batch: Vec<Item>) -> BatchGuard<'a> {
+        BatchGuard { inner, lane, items: batch.into_iter().map(Some).collect() }
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Borrow item `i` (must not have been finished or taken yet).
+    fn get(&self, i: usize) -> &Item {
+        self.items[i].as_ref().expect("item already finished")
+    }
+
+    /// Remove item `i` for individually-contained processing.
+    fn take(&mut self, i: usize) -> Item {
+        self.items[i].take().expect("item already finished")
+    }
+
+    /// Answer item `i` and release it from the guard.
+    fn finish(&mut self, i: usize, result: Result<TrafficResponse, ServeError>) {
+        let item = self.take(i);
+        finish(self.inner, item, result);
+    }
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        let leftovers: Vec<Item> = self.items.drain(..).flatten().collect();
+        if !leftovers.is_empty() {
+            lock(&self.inner.lane_states[self.lane].orphans).extend(leftovers);
+        }
+    }
+}
+
+fn dispatch_loop(inner: &Inner, lane: usize, max_batch: usize) {
+    let mut batch_no: u64 = 0;
     loop {
-        let batch = match inner.queues.collect_fair(max_batch) {
+        let batch = match inner.queues.collect_fair(lane, max_batch) {
             FairBatch::Batch(b) => b,
             // Draining: process leftovers until the empty batch that
             // signals full drain.
@@ -426,67 +606,99 @@ fn dispatch_loop(inner: &Inner, max_batch: usize) {
                 b
             }
         };
-        process_batch(inner, batch);
+        let state = &inner.lane_states[lane];
+        state.batches.fetch_add(1, Relaxed);
+        state.items.fetch_add(batch.len() as u64, Relaxed);
+        // Publish before computing: from here on an uncaught panic
+        // strands the items in the orphan cell instead of losing them.
+        let guard = BatchGuard::new(inner, lane, batch);
+        if inner.faults.lane_kill(lane, batch_no) {
+            // Deliberately uncontained — this is the dispatcher-death
+            // drill the per-lane janitor exists for.
+            panic!("injected lane fault: lane {lane} killed on batch {batch_no}");
+        }
+        batch_no += 1;
+        process_batch(inner, guard);
     }
 }
 
-fn process_batch(inner: &Inner, batch: Vec<Item>) {
+fn process_batch(inner: &Inner, mut g: BatchGuard<'_>) {
     // Partition at dequeue: expired work is answered, never computed;
     // fault-flagged work computes individually so an injected panic
     // takes down exactly one request; the rest batches per kind.
-    let mut pi_by_system: HashMap<usize, Vec<Item>> = HashMap::new();
-    let mut power_items: Vec<Item> = Vec::new();
-    for item in batch {
-        if item.deadline.expired() {
-            finish(inner, item, Err(ServeError::DeadlineExceeded));
+    let mut pi_by_system: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut power_idx: Vec<usize> = Vec::new();
+    for i in 0..g.len() {
+        if g.get(i).deadline.expired() {
+            g.finish(i, Err(ServeError::DeadlineExceeded));
             continue;
         }
+        let item = g.get(i);
         let tenant_name = &inner.specs[item.tenant].name;
         if let Some(action) = inner.faults.action(tenant_name, item.seq) {
+            let item = g.take(i);
             compute_faulted(inner, item, action);
             continue;
         }
-        match item.payload {
+        match g.get(i).payload {
             RequestPayload::Pi { .. } => pi_by_system
-                .entry(inner.tenant_system[item.tenant])
+                .entry(inner.tenant_system[g.get(i).tenant])
                 .or_default()
-                .push(item),
-            RequestPayload::Power(_) => power_items.push(item),
+                .push(i),
+            RequestPayload::Power(_) => power_idx.push(i),
         }
     }
 
-    // Π inference: one cycle-accurate batch per target system.
+    // Π inference: one cycle-accurate batch per target system. Runs
+    // un-gated — each batch is single-threaded, so concurrent lanes
+    // genuinely parallelize here.
     let mut systems: Vec<usize> = pi_by_system.keys().copied().collect();
     systems.sort_unstable(); // deterministic dispatch order
     for sys in systems {
-        let items = pi_by_system.remove(&sys).unwrap();
-        let design = inner.handles[sys].design();
-        let samples: Vec<&[i64]> = items
-            .iter()
-            .map(|i| match &i.payload {
-                RequestPayload::Pi { values_q } => values_q.as_slice(),
-                RequestPayload::Power(_) => unreachable!("partitioned above"),
-            })
-            .collect();
-        let outcome = catch_unwind(AssertUnwindSafe(|| rtl::run_batch(design, &samples)));
+        let idxs = pi_by_system.remove(&sys).unwrap();
+        let outcome = {
+            let design = inner.handles[sys].design();
+            let samples: Vec<&[i64]> = idxs
+                .iter()
+                .map(|&i| match &g.get(i).payload {
+                    RequestPayload::Pi { values_q } => values_q.as_slice(),
+                    RequestPayload::Power(_) => unreachable!("partitioned above"),
+                })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| rtl::run_batch(design, &samples)))
+        };
         match outcome {
             Ok(result) => {
-                for (item, pis) in items.into_iter().zip(result.outputs) {
-                    finish(
-                        inner,
-                        item,
-                        Ok(TrafficResponse::Pi { pis, hw_cycles: result.cycles_per_sample }),
+                if result.outputs.len() == idxs.len() {
+                    for (&i, pis) in idxs.iter().zip(result.outputs) {
+                        g.finish(
+                            i,
+                            Ok(TrafficResponse::Pi {
+                                pis,
+                                hw_cycles: result.cycles_per_sample,
+                            }),
+                        );
+                    }
+                } else {
+                    // A short scatter must answer every request, not
+                    // silently drop the tail.
+                    let reason = format!(
+                        "Π batch returned {} outputs for {} requests",
+                        result.outputs.len(),
+                        idxs.len()
                     );
+                    for &i in &idxs {
+                        g.finish(
+                            i,
+                            Err(ServeError::WorkerPanicked { reason: reason.clone() }),
+                        );
+                    }
                 }
             }
             Err(e) => {
                 let reason = panic_reason(e);
-                for item in items {
-                    finish(
-                        inner,
-                        item,
-                        Err(ServeError::WorkerPanicked { reason: reason.clone() }),
-                    );
+                for &i in &idxs {
+                    g.finish(i, Err(ServeError::WorkerPanicked { reason: reason.clone() }));
                 }
             }
         }
@@ -494,42 +706,57 @@ fn process_batch(inner: &Inner, batch: Vec<Item>) {
 
     // Power estimation: one cross-system dispatch for the whole batch —
     // the sharded fused evaluation when the serve set enabled fusion,
-    // else per-netlist grouping (the lane-packing path the shared
-    // frontend exists for). The two are bit-identical.
-    if !power_items.is_empty() {
-        let tagged: Vec<SystemPowerRequest> = power_items
-            .iter()
-            .map(|i| match &i.payload {
-                RequestPayload::Power(r) => SystemPowerRequest {
-                    system: inner.tenant_system[i.tenant],
-                    request: *r,
-                },
-                RequestPayload::Pi { .. } => unreachable!("partitioned above"),
-            })
-            .collect();
-        let outcome = catch_unwind(AssertUnwindSafe(|| {
-            dispatch_flood(
-                &inner.handles,
-                inner.fused.as_deref(),
-                &tagged,
-                inner.activations,
-                inner.width,
-            )
-        }));
+    // else per-netlist grouping. Either way one flood fans out over
+    // every core, so concurrent lanes take the serve set's flood gate
+    // (held only around the flood — Π work never waits on it).
+    if !power_idx.is_empty() {
+        let outcome = {
+            let tagged: Vec<SystemPowerRequest> = power_idx
+                .iter()
+                .map(|&i| match &g.get(i).payload {
+                    RequestPayload::Power(r) => SystemPowerRequest {
+                        system: inner.tenant_system[g.get(i).tenant],
+                        request: *r,
+                    },
+                    RequestPayload::Pi { .. } => unreachable!("partitioned above"),
+                })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| {
+                inner.flood_gate.run(|| {
+                    dispatch_flood(
+                        &inner.handles,
+                        inner.fused.as_deref(),
+                        &tagged,
+                        inner.activations,
+                        inner.width,
+                    )
+                })
+            }))
+        };
         match outcome {
             Ok(estimates) => {
-                for (item, est) in power_items.into_iter().zip(estimates) {
-                    finish(inner, item, Ok(TrafficResponse::Power(est)));
+                if estimates.len() == power_idx.len() {
+                    for (&i, est) in power_idx.iter().zip(estimates) {
+                        g.finish(i, Ok(TrafficResponse::Power(est)));
+                    }
+                } else {
+                    let reason = format!(
+                        "power flood returned {} estimates for {} requests",
+                        estimates.len(),
+                        power_idx.len()
+                    );
+                    for &i in &power_idx {
+                        g.finish(
+                            i,
+                            Err(ServeError::WorkerPanicked { reason: reason.clone() }),
+                        );
+                    }
                 }
             }
             Err(e) => {
                 let reason = panic_reason(e);
-                for item in power_items {
-                    finish(
-                        inner,
-                        item,
-                        Err(ServeError::WorkerPanicked { reason: reason.clone() }),
-                    );
+                for &i in &power_idx {
+                    g.finish(i, Err(ServeError::WorkerPanicked { reason: reason.clone() }));
                 }
             }
         }
@@ -568,11 +795,17 @@ fn compute_faulted(inner: &Inner, item: Item, action: FaultAction) {
             RequestPayload::Power(r) => {
                 let targets = [(handle.netlist(), handle.design())];
                 let tagged = [SystemPowerRequest { system: 0, request: *r }];
-                let est =
-                    estimate_power_requests_grouped(&targets, &tagged, inner.activations, inner.width)
-                        .into_iter()
-                        .next()
-                        .expect("one estimate per request");
+                let est = inner.flood_gate.run(|| {
+                    estimate_power_requests_grouped(
+                        &targets,
+                        &tagged,
+                        inner.activations,
+                        inner.width,
+                    )
+                })
+                .into_iter()
+                .next()
+                .expect("one estimate per request");
                 TrafficResponse::Power(est)
             }
         }
@@ -883,5 +1116,133 @@ mod tests {
         assert_eq!(engine.pressure("t").unwrap().0, 0);
         assert!(engine.pressure("ghost").is_none());
         engine.shutdown();
+    }
+
+    /// Two lanes, both busy: requests for tenants pinned to different
+    /// lanes are all served, and the report shows both lanes moving
+    /// work with the right tenant residency.
+    #[test]
+    fn tenants_shard_across_lanes_and_all_serve() {
+        let set =
+            ServeSet::boot(&["pendulum", "spring_mass"], FlowConfig::default(), None).unwrap();
+        let tenants = vec![
+            TenantSpec::new("a0", "pendulum").with_lane(0),
+            TenantSpec::new("a1", "spring_mass").with_lane(0),
+            TenantSpec::new("b0", "pendulum").with_lane(1),
+            TenantSpec::new("b1", "spring_mass").with_lane(1),
+        ];
+        let engine = TrafficEngine::start(
+            &set,
+            AdmissionConfig { tenants, default_deadline: Duration::from_secs(30) },
+            EngineConfig { dispatchers: 2, ..EngineConfig::default() },
+            FaultPlan::none(),
+        )
+        .unwrap();
+        assert_eq!(engine.lane_count(), 2);
+        let (tx, rx) = mpsc::channel();
+        let per_tenant = 8u64;
+        let systems = ["pendulum", "spring_mass", "pendulum", "spring_mass"];
+        for (t, name) in ["a0", "a1", "b0", "b1"].iter().enumerate() {
+            let sys = set.system_index(systems[t]).unwrap();
+            let n = set.handle_at(sys).design().num_inputs();
+            for id in 0..per_tenant {
+                engine
+                    .submit(
+                        name,
+                        RequestPayload::Pi {
+                            values_q: (0..n)
+                                .map(|i| Q16_15.from_f64(0.8 + 0.25 * i as f64))
+                                .collect(),
+                        },
+                        None,
+                        (t as u64) << 32 | id,
+                        tx.clone(),
+                    )
+                    .unwrap();
+            }
+        }
+        for _ in 0..(4 * per_tenant) {
+            let reply = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(reply.result.is_ok(), "{:?}", reply.result.err());
+        }
+        let report = engine.shutdown();
+        assert!(!report.engine_panicked);
+        assert_eq!(report.lanes.len(), 2);
+        for lane in &report.lanes {
+            assert!(!lane.panicked);
+            assert!(lane.batches > 0, "lane {} collected nothing", lane.lane);
+            assert!(lane.items > 0);
+        }
+        assert_eq!(report.lanes[0].tenants, vec!["a0", "a1"]);
+        assert_eq!(report.lanes[1].tenants, vec!["b0", "b1"]);
+        for name in ["a0", "a1", "b0", "b1"] {
+            let t = report.tenant(name).unwrap();
+            assert_eq!(t.counters.served, per_tenant);
+            assert_eq!(t.counters.terminal(), t.counters.admitted);
+        }
+    }
+
+    /// The satellite-3 regression: a dispatcher that dies *mid-batch*
+    /// (uncontained panic after collecting work) must not lose the
+    /// in-flight items or double-answer anything, and must not disturb
+    /// the other lane. Before the holding-cell guard, the collected
+    /// batch was simply dropped on unwind — admitted requests vanished
+    /// without a reply.
+    #[test]
+    fn killed_lane_is_swept_without_disturbing_live_lanes() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let tenants = vec![
+            TenantSpec::new("doomed", "pendulum").with_lane(0),
+            TenantSpec::new("healthy", "pendulum").with_lane(1),
+        ];
+        let engine = TrafficEngine::start(
+            &set,
+            AdmissionConfig { tenants, default_deadline: Duration::from_secs(60) },
+            EngineConfig { dispatchers: 2, ..EngineConfig::default() },
+            // Lane 0 dies on its very first batch, with items in hand.
+            FaultPlan::none().kill_lane_at(0, 0),
+        )
+        .unwrap();
+        let (dtx, drx) = mpsc::channel();
+        let (htx, hrx) = mpsc::channel();
+        let n = set.handle_at(0).design().num_inputs();
+        let payload = || RequestPayload::Pi {
+            values_q: (0..n).map(|i| Q16_15.from_f64(0.9 + 0.1 * i as f64)).collect(),
+        };
+        let doomed_n = 6u64;
+        for id in 0..doomed_n {
+            engine.submit("doomed", payload(), None, id, dtx.clone()).unwrap();
+        }
+        // The healthy lane keeps serving while lane 0 is dead.
+        for id in 0..4u64 {
+            engine.submit("healthy", payload(), None, 100 + id, htx.clone()).unwrap();
+            let reply = hrx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(reply.result.is_ok(), "healthy lane must serve: {:?}", reply.result.err());
+        }
+        let report = engine.shutdown();
+        // Exactly one typed answer per admitted doomed request — the
+        // in-flight batch came back from the orphan cell, the queued
+        // remainder from the per-lane queue sweep, nothing twice.
+        let mut doomed_replies = 0u64;
+        while let Ok(reply) = drx.try_recv() {
+            match reply.result {
+                Err(ServeError::WorkerPanicked { reason }) => {
+                    assert!(reason.contains("lane 0"), "{reason}");
+                }
+                other => panic!("doomed requests must be WorkerPanicked, got {other:?}"),
+            }
+            doomed_replies += 1;
+        }
+        assert_eq!(doomed_replies, doomed_n, "no lost or duplicated answers");
+        assert!(report.engine_panicked, "a dead lane is loud");
+        assert!(report.lanes[0].panicked);
+        assert!(!report.lanes[1].panicked, "live lane undisturbed");
+        let doomed = report.tenant("doomed").unwrap();
+        assert_eq!(doomed.counters.panicked, doomed_n);
+        assert_eq!(doomed.counters.terminal(), doomed.counters.admitted);
+        assert_eq!(doomed.queue_depth, 0, "janitor leaves nothing queued");
+        let healthy = report.tenant("healthy").unwrap();
+        assert_eq!(healthy.counters.served, 4);
+        assert_eq!(healthy.counters.panicked, 0);
     }
 }

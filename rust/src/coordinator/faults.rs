@@ -20,6 +20,14 @@
 //! side (drop the socket after reading a prefix of the responses) —
 //! the server-side behavior under test is counting the disconnect and
 //! absorbing the undeliverable answers.
+//!
+//! Lane faults ([`FaultPlan::kill_lane_at`]) target a whole dispatch
+//! lane instead of one request: the lane's dispatcher thread panics
+//! *outside* per-request containment on its `nth` collected batch,
+//! after the batch is in flight — the exact shape of the
+//! lost-answer hazard the per-lane janitor exists for. Keyed on the
+//! lane's own batch counter, so the trigger is deterministic under any
+//! interleaving of the other lanes.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -41,6 +49,9 @@ pub struct FaultPlan {
     per_request: HashMap<(String, u64), FaultAction>,
     /// Faults firing on *every* request of a tenant.
     per_tenant: HashMap<String, FaultAction>,
+    /// Lane kills: dispatch lane → the (0-based) batch number on which
+    /// its dispatcher panics uncontained.
+    lane_kills: HashMap<usize, u64>,
 }
 
 impl FaultPlan {
@@ -68,9 +79,21 @@ impl FaultPlan {
         self
     }
 
+    /// Kill dispatch lane `lane`'s dispatcher (uncontained panic) on
+    /// its batch number `batch` (0-based, counted per lane).
+    pub fn kill_lane_at(mut self, lane: usize, batch: u64) -> FaultPlan {
+        self.lane_kills.insert(lane, batch);
+        self
+    }
+
     /// True when the plan injects nothing.
     pub fn is_empty(&self) -> bool {
-        self.per_request.is_empty() && self.per_tenant.is_empty()
+        self.per_request.is_empty() && self.per_tenant.is_empty() && self.lane_kills.is_empty()
+    }
+
+    /// Should `lane`'s dispatcher die on its batch number `batch`?
+    pub fn lane_kill(&self, lane: usize, batch: u64) -> bool {
+        self.lane_kills.get(&lane) == Some(&batch)
     }
 
     /// The fault (if any) for `tenant`'s request `seq`. Request-specific
@@ -113,5 +136,15 @@ mod tests {
         assert_eq!(p.action("slow", 0), Some(FaultAction::Delay(d)));
         assert_eq!(p.action("slow", 1_000_000), Some(FaultAction::Delay(d)));
         assert_eq!(p.action("slow", 9), Some(FaultAction::Panic), "specific shadows tenant-wide");
+    }
+
+    #[test]
+    fn lane_kills_key_on_lane_and_batch_number() {
+        let p = FaultPlan::none().kill_lane_at(1, 3);
+        assert!(!p.is_empty());
+        assert!(p.lane_kill(1, 3));
+        assert!(!p.lane_kill(1, 2), "only the named batch triggers");
+        assert!(!p.lane_kill(0, 3), "other lanes unaffected");
+        assert_eq!(p.action("anyone", 3), None, "lane kills are not request faults");
     }
 }

@@ -1,5 +1,18 @@
 //! Serving metrics: latency histogram + throughput counters.
+//!
+//! Two representations live here. The plain [`LatencyHistogram`] /
+//! [`TrafficCounters`] are owned snapshots used in reports and tests.
+//! Their atomic twins ([`AtomicLatencyHistogram`],
+//! [`AtomicTrafficCounters`]) are the hot-path shards the
+//! multi-dispatcher engine writes through shared references — every
+//! record is a handful of relaxed atomic ops, no lock — and are folded
+//! into plain values only at scrape time via `snapshot()`. Each tenant
+//! lives in exactly one dispatch lane, so a tenant's shard is written
+//! by one dispatcher (plus the submit path for admission counters);
+//! the atomics make the cross-thread scrape safe without ever making
+//! the dispatchers wait on each other.
 
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::time::Duration;
 
 /// Log-bucketed latency histogram (microseconds, power-of-two buckets).
@@ -76,6 +89,47 @@ impl LatencyHistogram {
     }
 }
 
+/// Lock-free twin of [`LatencyHistogram`]: shared-reference recording
+/// through relaxed atomics, folded into a plain histogram at scrape
+/// time. The dispatch hot path must never block on a metrics lock.
+#[derive(Debug, Default)]
+pub struct AtomicLatencyHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl AtomicLatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample. Same bucketing as
+    /// [`LatencyHistogram::record`]; wrapping `fetch_add` instead of
+    /// saturating (a u64 of samples outlives any deployment, and a
+    /// lock-free saturating add would cost a CAS loop per record).
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let b = (64 - us.max(1).leading_zeros() as u64).min(31) as usize;
+        self.buckets[b].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+        self.max_us.fetch_max(us, Relaxed);
+    }
+
+    /// Fold into an owned histogram (scrape time). Relaxed loads: the
+    /// scrape is a statistical snapshot, not a linearization point.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum_us: self.sum_us.load(Relaxed),
+            max_us: self.max_us.load(Relaxed),
+        }
+    }
+}
+
 /// Outcome counters of the traffic layer, per tenant. Every admitted
 /// request lands in exactly one of `served`, `deadline_expired`, or
 /// `panicked`; `shed`/`protocol_errors` count requests refused at the
@@ -113,6 +167,36 @@ impl TrafficCounters {
     }
 }
 
+/// Lock-free twin of [`TrafficCounters`]: one atomic per outcome,
+/// incremented from the submit path and the tenant's dispatch lane,
+/// snapshotted at scrape time.
+#[derive(Debug, Default)]
+pub struct AtomicTrafficCounters {
+    pub admitted: AtomicU64,
+    pub served: AtomicU64,
+    pub shed: AtomicU64,
+    pub deadline_expired: AtomicU64,
+    pub panicked: AtomicU64,
+    pub protocol_errors: AtomicU64,
+}
+
+impl AtomicTrafficCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> TrafficCounters {
+        TrafficCounters {
+            admitted: self.admitted.load(Relaxed),
+            served: self.served.load(Relaxed),
+            shed: self.shed.load(Relaxed),
+            deadline_expired: self.deadline_expired.load(Relaxed),
+            panicked: self.panicked.load(Relaxed),
+            protocol_errors: self.protocol_errors.load(Relaxed),
+        }
+    }
+}
+
 /// One tenant's slice of a [`TrafficReport`]: counters, served-request
 /// latency, and the queue pressure observed at snapshot time.
 #[derive(Clone, Debug)]
@@ -127,11 +211,30 @@ pub struct TenantTraffic {
     pub queue_oldest_ms: u64,
 }
 
+/// One dispatch lane's slice of a [`TrafficReport`]: which tenants it
+/// hosts, how much work it moved, and whether its dispatcher died.
+#[derive(Clone, Debug, Default)]
+pub struct LaneTraffic {
+    pub lane: usize,
+    /// Tenant names resident in this lane (spec order).
+    pub tenants: Vec<String>,
+    /// Batches collected by this lane's dispatcher.
+    pub batches: u64,
+    /// Items dequeued into those batches.
+    pub items: u64,
+    /// This lane's dispatcher died by panic (its work was swept by the
+    /// per-lane janitor; other lanes were undisturbed).
+    pub panicked: bool,
+}
+
 /// Snapshot of the whole traffic layer: per-tenant slices plus the
 /// global counters that have no tenant to charge.
 #[derive(Clone, Debug, Default)]
 pub struct TrafficReport {
     pub tenants: Vec<TenantTraffic>,
+    /// Per-dispatch-lane activity (empty for pre-lane callers that
+    /// assemble reports by hand).
+    pub lanes: Vec<LaneTraffic>,
     /// Requests naming a tenant nobody registered.
     pub tenant_unknown: u64,
     /// Connections that dropped mid-request (their answers, if any,
@@ -213,6 +316,22 @@ impl TrafficReport {
                 t.queue_oldest_ms
             ));
         }
+        out.push_str("],\"lanes\":[");
+        for (i, l) in self.lanes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let tenants = l
+                .tenants
+                .iter()
+                .map(|t| format!("\"{}\"", json_escape(t)))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "{{\"lane\":{},\"tenants\":[{}],\"batches\":{},\"items\":{},\"panicked\":{}}}",
+                l.lane, tenants, l.batches, l.items, l.panicked
+            ));
+        }
         out.push_str("]}");
         out
     }
@@ -236,6 +355,17 @@ impl std::fmt::Display for TrafficReport {
         )?;
         if !self.wall.is_zero() {
             writeln!(f, "wall:        {:.3} s", self.wall.as_secs_f64())?;
+        }
+        for l in &self.lanes {
+            writeln!(
+                f,
+                "lane {:<7} {} batches / {} items · tenants [{}]{}",
+                l.lane,
+                l.batches,
+                l.items,
+                l.tenants.join(", "),
+                if l.panicked { " · PANICKED" } else { "" }
+            )?;
         }
         for t in &self.tenants {
             writeln!(
@@ -441,6 +571,13 @@ mod tests {
                 queue_depth: 1,
                 queue_oldest_ms: 7,
             }],
+            lanes: vec![LaneTraffic {
+                lane: 0,
+                tenants: vec!["we\"ird\\name".into()],
+                batches: 4,
+                items: 9,
+                panicked: true,
+            }],
             tenant_unknown: 2,
             disconnects: 1,
             undelivered: 0,
@@ -459,7 +596,44 @@ mod tests {
         assert!(json.contains("\"tenant_unknown\":2"), "{json}");
         assert!(json.contains("we\\\"ird\\\\name"), "{json}");
         assert!(json.contains("\"p99\":"), "{json}");
+        assert!(json.contains("\"lanes\":[{\"lane\":0,"), "{json}");
+        assert!(json.contains("\"batches\":4,\"items\":9,\"panicked\":true"), "{json}");
         assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+
+    #[test]
+    fn atomic_histogram_snapshot_matches_plain_twin() {
+        // Same samples through both representations must agree exactly:
+        // counts, buckets (via percentiles), mean, and max.
+        let atomic = AtomicLatencyHistogram::new();
+        let mut plain = LatencyHistogram::new();
+        let mut rng = crate::stim::Lfsr32::new(0xD15A_7C42);
+        for _ in 0..2000 {
+            let us = 1u64 + rng.below(1 << 20) as u64;
+            atomic.record(Duration::from_micros(us));
+            plain.record(Duration::from_micros(us));
+        }
+        let snap = atomic.snapshot();
+        assert_eq!(snap.count(), plain.count());
+        assert_eq!(snap.max_us(), plain.max_us());
+        assert_eq!(snap.mean_us(), plain.mean_us());
+        for p in [0.5, 0.95, 0.99, 0.999] {
+            assert_eq!(snap.percentile_us(p), plain.percentile_us(p));
+        }
+    }
+
+    #[test]
+    fn atomic_counters_snapshot_roundtrip() {
+        let c = AtomicTrafficCounters::new();
+        c.admitted.fetch_add(10, Relaxed);
+        c.served.fetch_add(7, Relaxed);
+        c.deadline_expired.fetch_add(2, Relaxed);
+        c.panicked.fetch_add(1, Relaxed);
+        c.shed.fetch_add(4, Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap.terminal(), snap.admitted);
+        assert_eq!(snap.shed, 4);
+        assert_eq!(snap.protocol_errors, 0);
     }
 
     #[test]

@@ -19,11 +19,14 @@
 //! way.
 
 //! Network deployments add three layers in front of the engine:
-//! [`net`] (TCP framing + per-connection threads) → [`admission`]
-//! (per-tenant token buckets, bounded queues, deadlines) →
-//! [`engine`] (fair dispatch with typed [`error::ServeError`] outcomes
-//! and panic containment), with [`faults`] providing deterministic
-//! sabotage for the e2e/soak harnesses.
+//! [`net`] (TCP framing, per-connection threads, per-connection rate
+//! limits, and the HTTP metrics scrape endpoint) → [`admission`]
+//! (per-tenant token buckets, bounded queues, deadlines, sharded into
+//! per-lane queue groups) → [`engine`] (K parallel dispatch lanes, each
+//! running fair round-robin collection over its own tenants, with typed
+//! [`error::ServeError`] outcomes and per-lane panic containment), with
+//! [`faults`] providing deterministic sabotage — including lane kills —
+//! for the e2e/soak harnesses.
 
 pub mod admission;
 pub mod batcher;
@@ -40,8 +43,8 @@ pub use admission::{AdmissionConfig, Deadline, TenantSpec};
 pub use engine::{EngineConfig, RequestPayload, TrafficEngine, TrafficReply, TrafficResponse};
 pub use error::ServeError;
 pub use faults::{FaultAction, FaultPlan};
-pub use metrics::{LatencyHistogram, ServeStats, TrafficCounters, TrafficReport};
-pub use net::{DriverConfig, DriverReport, NetClient, NetServer, StatsProbe};
+pub use metrics::{LaneTraffic, LatencyHistogram, ServeStats, TrafficCounters, TrafficReport};
+pub use net::{DriverConfig, DriverReport, NetClient, NetConfig, NetServer, ScrapeServer, StatsProbe};
 pub use pipeline::{
     estimate_power_requests, estimate_power_requests_fused, estimate_power_requests_grouped,
     DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest, Prediction, SensorInput,
@@ -139,7 +142,7 @@ pub fn serve_synthetic(
 /// Admission-policy knobs of a [`serve_listen`] deployment, applied to
 /// every tenant (the default roster is one tenant per served system,
 /// named after it).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ListenConfig {
     /// Token-bucket sustained rate per tenant (requests/second;
     /// `f64::INFINITY` disables rate limiting).
@@ -157,6 +160,17 @@ pub struct ListenConfig {
     /// into this many shards and route power floods through the sharded
     /// evaluation (0 = per-netlist grouped dispatch).
     pub fuse_shards: usize,
+    /// Parallel dispatch lanes (dispatcher threads); 0 = auto:
+    /// `min(cores/2, tenants)`, at least 1. Tenants are hash-sharded
+    /// across lanes by name.
+    pub dispatchers: usize,
+    /// Per-connection token-bucket rate (requests/second ahead of
+    /// tenant admission; `f64::INFINITY` disables). Over-rate frames
+    /// are answered with a typed shed carrying a retry hint.
+    pub conn_rate: f64,
+    /// Optional HTTP metrics scrape address (`GET` returns the traffic
+    /// report as JSON, Prometheus-collector friendly).
+    pub scrape_addr: Option<String>,
 }
 
 impl Default for ListenConfig {
@@ -168,6 +182,9 @@ impl Default for ListenConfig {
             deadline_ms: 1000,
             max_conns: 0,
             fuse_shards: 0,
+            dispatchers: 0,
+            conn_rate: f64::INFINITY,
+            scrape_addr: None,
         }
     }
 }
@@ -177,6 +194,8 @@ impl Default for ListenConfig {
 /// stdin EOF).
 pub struct ListenHandle {
     pub server: NetServer,
+    /// The HTTP metrics endpoint, when `scrape_addr` was configured.
+    pub scrape: Option<net::ScrapeServer>,
     /// Human-readable boot summary (systems, cache telemetry, address).
     pub boot: String,
     pub counts: StageCounts,
@@ -210,13 +229,33 @@ pub fn serve_listen(
         tenant.burst = listen_config.burst;
         tenant.queue_cap = listen_config.queue_cap;
     }
+    // Auto lane count: half the cores (the other half serves the Π/power
+    // compute itself), never more lanes than tenants, never zero.
+    let dispatchers = if listen_config.dispatchers == 0 {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        (cores / 2).clamp(1, set.len())
+    } else {
+        listen_config.dispatchers
+    };
     let engine = Arc::new(TrafficEngine::start(
         &set,
         admission,
-        EngineConfig { activations, max_batch: 0 },
+        EngineConfig { activations, max_batch: 0, dispatchers },
         FaultPlan::none(),
     )?);
-    let server = NetServer::start_capped(engine, listen, listen_config.max_conns)?;
+    let lanes = engine.lane_count();
+    let server = NetServer::start_with(
+        engine.clone(),
+        listen,
+        net::NetConfig {
+            max_conns: listen_config.max_conns,
+            conn_rate: listen_config.conn_rate,
+        },
+    )?;
+    let scrape = match &listen_config.scrape_addr {
+        Some(addr) => Some(net::ScrapeServer::start(engine, addr)?),
+        None => None,
+    };
     let mut boot = String::new();
     boot.push_str(&format!(
         "serve set:   {} systems ({}) on one warm FlowSet\n",
@@ -240,8 +279,16 @@ pub fn serve_listen(
             f.plan.cuts.reg_cuts.len()
         ));
     }
-    boot.push_str(&format!("listening:   {} (net → admission → dispatch)\n", server.local_addr()));
-    Ok(ListenHandle { server, boot, counts })
+    boot.push_str(&format!(
+        "listening:   {} (net → admission → {} dispatch lane{})\n",
+        server.local_addr(),
+        lanes,
+        if lanes == 1 { "" } else { "s" }
+    ));
+    if let Some(s) = &scrape {
+        boot.push_str(&format!("scrape:      http://{} (GET → traffic report JSON)\n", s.local_addr()));
+    }
+    Ok(ListenHandle { server, scrape, boot, counts })
 }
 
 /// Multi-system synthetic serve on one warm [`ServeSet`] — what

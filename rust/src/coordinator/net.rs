@@ -59,9 +59,27 @@
 //! order, correlated by `req_id`). Graceful shutdown half-closes each
 //! connection's read side, drains the engine so every admitted request
 //! is answered, then joins everything.
+//!
+//! # Per-connection rate limits
+//!
+//! [`NetConfig::conn_rate`] puts a token bucket on each connection
+//! *ahead of* tenant admission: an over-rate Π/power frame is answered
+//! with a typed `Shed { retry_after_ms }` for its own `req_id` and
+//! never reaches the engine, so one hot socket cannot spend a whole
+//! tenant's admission budget. Stats/health frames are control plane and
+//! exempt. The bucket is private to the connection — it neither splits
+//! a tenant's budget nor shares state across sockets.
+//!
+//! # Metrics scrape endpoint
+//!
+//! [`ScrapeServer`] is a deliberately minimal HTTP/1.1 responder for
+//! Prometheus-style collectors: any `GET` returns `200` with the live
+//! [`TrafficReport::to_json`] body; anything else is `405`. One request
+//! per connection (`Connection: close`), std-only, no TLS, no routing —
+//! point it at loopback or a scrape-only interface.
 
 use std::collections::HashMap;
-use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -69,6 +87,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::admission::TokenBucket;
 use super::engine::{RequestPayload, TrafficEngine, TrafficReply, TrafficResponse};
 use super::error::{
     ServeError, CODE_DEADLINE, CODE_OK, CODE_PROTOCOL, CODE_SHED, CODE_TENANT_UNKNOWN,
@@ -417,6 +436,26 @@ fn decode_response(wire_kind: u8, payload: &[u8]) -> anyhow::Result<NetResponse>
 // Server
 // ---------------------------------------------------------------------
 
+/// Frontend policy knobs of a [`NetServer`], applied per connection.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Cap on concurrent connections (`0` = unlimited); accepts over
+    /// the cap get the typed over-capacity handshake and a clean close.
+    pub max_conns: usize,
+    /// Per-connection token-bucket rate for Π/power frames
+    /// (requests/second; `f64::INFINITY` disables). Burst is one
+    /// second's worth of tokens, at least 1. Over-rate frames are
+    /// answered `Shed` with a refill-derived retry hint, ahead of
+    /// tenant admission.
+    pub conn_rate: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_conns: 0, conn_rate: f64::INFINITY }
+    }
+}
+
 /// The running TCP front end: accept loop + per-connection threads,
 /// all feeding one [`TrafficEngine`].
 pub struct NetServer {
@@ -433,9 +472,9 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `listen` (e.g. `127.0.0.1:0`) and start accepting, with no
-    /// concurrency cap.
+    /// concurrency cap and no per-connection rate limit.
     pub fn start(engine: Arc<TrafficEngine>, listen: &str) -> anyhow::Result<NetServer> {
-        NetServer::start_capped(engine, listen, 0)
+        NetServer::start_with(engine, listen, NetConfig::default())
     }
 
     /// Bind `listen` and start accepting at most `max_conns` concurrent
@@ -449,6 +488,17 @@ impl NetServer {
         listen: &str,
         max_conns: usize,
     ) -> anyhow::Result<NetServer> {
+        NetServer::start_with(engine, listen, NetConfig { max_conns, ..NetConfig::default() })
+    }
+
+    /// Bind `listen` and start accepting under the full frontend policy
+    /// ([`NetConfig`]): connection cap plus per-connection rate limit.
+    pub fn start_with(
+        engine: Arc<TrafficEngine>,
+        listen: &str,
+        config: NetConfig,
+    ) -> anyhow::Result<NetServer> {
+        let NetConfig { max_conns, conn_rate } = config;
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("cannot bind `{listen}`: {e}"))?;
         let local_addr = listener.local_addr()?;
@@ -492,7 +542,7 @@ impl NetServer {
                                     }
                                 }
                                 let _slot = Slot(conn_live);
-                                conn_loop(reader_stream, &engine);
+                                conn_loop(reader_stream, &engine, conn_rate);
                             })
                             .expect("spawn connection thread");
                         conns
@@ -570,7 +620,107 @@ fn shed_connection(stream: &TcpStream) {
     let _ = stream.shutdown(Shutdown::Write);
 }
 
-fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
+// ---------------------------------------------------------------------
+// Metrics scrape endpoint
+// ---------------------------------------------------------------------
+
+/// Minimal HTTP metrics endpoint (see module docs): `GET` → `200` with
+/// the live traffic report JSON; anything else → `405`. One thread, one
+/// request per connection, std-only.
+pub struct ScrapeServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ScrapeServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start answering scrapes
+    /// from the engine's live [`TrafficReport`].
+    pub fn start(engine: Arc<TrafficEngine>, addr: &str) -> anyhow::Result<ScrapeServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind scrape address `{addr}`: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("dimsynth-scrape".to_string())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        // A stalled collector must not wedge the
+                        // endpoint; scrapes are tiny.
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                        serve_scrape(&stream, &engine);
+                    }
+                })?
+        };
+        Ok(ScrapeServer { local_addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    fn stop_now(&mut self) {
+        if let Some(h) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(self.local_addr);
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting and join the endpoint thread.
+    pub fn shutdown(mut self) {
+        self.stop_now();
+    }
+}
+
+impl Drop for ScrapeServer {
+    fn drop(&mut self) {
+        // A dropped handle must not leak a thread blocked in accept.
+        self.stop_now();
+    }
+}
+
+/// Answer one HTTP exchange: read the request head, write the report.
+fn serve_scrape(stream: &TcpStream, engine: &TrafficEngine) {
+    let mut r = BufReader::new(stream);
+    let mut request_line = String::new();
+    if r.read_line(&mut request_line).is_err() || request_line.is_empty() {
+        return;
+    }
+    // Drain the header block; the body (none expected) is ignored.
+    loop {
+        let mut header = String::new();
+        match r.read_line(&mut header) {
+            Ok(0) => break,
+            Ok(_) if header == "\r\n" || header == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+    let (status, body) = if request_line.starts_with("GET ") {
+        ("200 OK", engine.stats_json())
+    } else {
+        ("405 Method Not Allowed", "{\"error\":\"GET only\"}".to_string())
+    };
+    let mut w = BufWriter::new(stream);
+    let _ = write!(
+        w,
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = w.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>, conn_rate: f64) {
     let (tx, rx) = mpsc::channel::<TrafficReply>();
     let Ok(writer_stream) = stream.try_clone() else { return };
     let writer = {
@@ -580,6 +730,11 @@ fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
             .spawn(move || writer_loop(writer_stream, &rx, &engine))
             .expect("spawn writer thread")
     };
+    // Per-connection admission throttle: burst = one second of tokens
+    // (at least 1), so a compliant client never notices it.
+    let mut bucket = conn_rate
+        .is_finite()
+        .then(|| TokenBucket::new(conn_rate, conn_rate.max(1.0), Instant::now()));
     let mut r = BufReader::new(stream);
     let mut clean = false;
     loop {
@@ -589,7 +744,7 @@ fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
                 break;
             }
             Ok(Some((kind, payload))) => {
-                if !handle_frame(kind, &payload, engine, &tx) {
+                if !handle_frame(kind, &payload, engine, &tx, bucket.as_mut()) {
                     // Unrecoverable protocol error: the refusal is on
                     // its way out; stop trusting this byte stream.
                     break;
@@ -606,12 +761,14 @@ fn conn_loop(stream: TcpStream, engine: &Arc<TrafficEngine>) {
 }
 
 /// Dispatch one decoded frame. Returns `false` when the connection
-/// should close (undecodable input).
+/// should close (undecodable input). `bucket`, when present, is the
+/// connection's private rate limiter for traffic (Π/power) frames.
 fn handle_frame(
     kind: u8,
     payload: &[u8],
     engine: &Arc<TrafficEngine>,
     tx: &Sender<TrafficReply>,
+    bucket: Option<&mut TokenBucket>,
 ) -> bool {
     match decode_request(kind, payload) {
         Ok(DecodedRequest::Stats { req_id, json }) => {
@@ -631,6 +788,18 @@ fn handle_frame(
         }
         Ok(DecodedRequest::Traffic { req_id, tenant, deadline, payload }) => {
             let id = pack_id(kind, req_id);
+            if let Some(b) = bucket {
+                if let Err(refill) = b.try_take_at(Instant::now()) {
+                    // Over the connection's rate, ahead of tenant
+                    // admission: typed shed with the refill hint.
+                    let retry_after_ms = (refill.as_millis() as u64).clamp(1, 60_000) as u32;
+                    let _ = tx.send(TrafficReply {
+                        id,
+                        result: Err(ServeError::Shed { retry_after_ms }),
+                    });
+                    return true;
+                }
+            }
             if let Err(e) = engine.submit(&tenant, payload, deadline, id, tx.clone()) {
                 // Refused at the door: the engine sends nothing, so the
                 // frontend answers with the typed error itself.
@@ -1305,5 +1474,97 @@ mod tests {
             }
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn per_connection_rate_limit_sheds_typed_ahead_of_admission() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let ports = set.handle_at(0).design().num_inputs();
+        let engine = Arc::new(
+            TrafficEngine::start(
+                &set,
+                AdmissionConfig::one_tenant_per_system(&["pendulum"]),
+                EngineConfig::default(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        // Burst 1 and a refill that takes ~11 days: the second traffic
+        // frame on a connection is over-rate deterministically.
+        let server = NetServer::start_with(
+            engine,
+            "127.0.0.1:0",
+            NetConfig { max_conns: 0, conn_rate: 1e-6 },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let values: Vec<i64> = vec![Q16_15.from_f64(1.0); ports];
+
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.send_pi(1, "pendulum", 0, &values).unwrap();
+        assert!(client.recv().unwrap().result.is_ok(), "burst token serves");
+        client.send_pi(2, "pendulum", 0, &values).unwrap();
+        let resp = client.recv().unwrap();
+        assert_eq!(resp.req_id, 2);
+        match resp.result.unwrap_err() {
+            ServeError::Shed { retry_after_ms } => {
+                assert!(retry_after_ms >= 1, "refill-derived hint");
+            }
+            other => panic!("expected Shed, got {other}"),
+        }
+        // Control plane is exempt from the connection bucket.
+        client.send_health(3).unwrap();
+        assert!(client.recv().unwrap().result.is_ok());
+        // Buckets are per connection, not shared across sockets.
+        let mut c2 = NetClient::connect(&addr).unwrap();
+        c2.send_pi(9, "pendulum", 0, &values).unwrap();
+        assert!(c2.recv().unwrap().result.is_ok());
+        drop(client);
+        drop(c2);
+
+        let report = server.shutdown();
+        let t = report.tenant("pendulum").unwrap();
+        assert_eq!(t.counters.admitted, 2, "the over-rate frame never reached admission");
+        assert_eq!(t.counters.shed, 0, "the shed happened at the net layer, not the tenant");
+    }
+
+    #[test]
+    fn scrape_endpoint_serves_report_json_over_http() {
+        let set = ServeSet::boot(&["pendulum"], FlowConfig::default(), None).unwrap();
+        let engine = Arc::new(
+            TrafficEngine::start(
+                &set,
+                AdmissionConfig::one_tenant_per_system(&["pendulum"]),
+                EngineConfig::default(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        let scrape = ScrapeServer::start(engine.clone(), "127.0.0.1:0").unwrap();
+        let addr = scrape.local_addr();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(stream, "GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+        assert!(response.contains("Content-Type: application/json"), "{response}");
+        let body = response.split("\r\n\r\n").nth(1).expect("header/body split");
+        assert!(body.starts_with('{') && body.ends_with('}'), "{body}");
+        assert!(body.contains("\"totals\"") && body.contains("\"lanes\""), "{body}");
+        assert!(StatsProbe::parse(body).is_some(), "{body}");
+
+        // Anything but GET is a 405, still a well-formed HTTP answer.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(stream, "POST /metrics HTTP/1.1\r\nHost: test\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let mut response = String::new();
+        stream.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 405"), "{response}");
+
+        scrape.shutdown();
+        engine.shutdown();
     }
 }

@@ -23,7 +23,7 @@
 //!   dispatch — each lane's stimulus depends only on its own seed.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -100,6 +100,32 @@ impl SystemHandle {
     }
 }
 
+/// Arbitrates whole-machine power floods between concurrent consumers
+/// (the traffic engine's dispatch lanes, the power batcher, synchronous
+/// callers): one flood already fans out over every core through the
+/// worker pool, so running two at once oversubscribes the machine
+/// without adding throughput — they queue here instead. Π inference
+/// batches are single-threaded per batch and never take this gate;
+/// that is where lane parallelism pays.
+#[derive(Debug, Default)]
+pub struct FloodGate {
+    gate: Mutex<()>,
+}
+
+impl FloodGate {
+    pub fn new() -> FloodGate {
+        FloodGate::default()
+    }
+
+    /// Run `f` while holding the gate. Poison-tolerant: a panic inside
+    /// one flood (contained by its caller) must not wedge every
+    /// subsequent flood behind a poisoned lock.
+    pub fn run<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _held = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        f()
+    }
+}
+
 /// The serve set's fused evaluation state: the fused netlist of every
 /// served system (in boot order) plus its K-way shard plan. Built once
 /// by [`ServeSet::enable_fusion`], shared (`Arc`) with the power
@@ -122,6 +148,9 @@ pub struct ServeSet {
     store: Option<Arc<ArtifactStore>>,
     /// Fused evaluation state when [`ServeSet::enable_fusion`] ran.
     fused: Option<Arc<FusedPlan>>,
+    /// Shared flood arbiter (see [`FloodGate`]): every consumer of this
+    /// set's power path holds the same gate.
+    flood_gate: Arc<FloodGate>,
 }
 
 impl ServeSet {
@@ -151,7 +180,14 @@ impl ServeSet {
             .run_parallel(SystemHandle::from_flow)
             .into_iter()
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(ServeSet { set, handles, lane_width, store, fused: None })
+        Ok(ServeSet {
+            set,
+            handles,
+            lane_width,
+            store,
+            fused: None,
+            flood_gate: Arc::new(FloodGate::new()),
+        })
     }
 
     /// Number of served systems.
@@ -213,6 +249,13 @@ impl ServeSet {
         self.fused.as_deref()
     }
 
+    /// The shared flood arbiter. Every consumer that dispatches power
+    /// floods against this set (engine lanes, batcher, sync callers)
+    /// must run them through this gate.
+    pub(crate) fn flood_gate(&self) -> Arc<FloodGate> {
+        self.flood_gate.clone()
+    }
+
     /// Shared handle to the fused plan, for consumers that outlive this
     /// borrow (the traffic engine snapshots it at start, like the
     /// batcher does at spawn).
@@ -251,13 +294,15 @@ impl ServeSet {
                 self.handles.len()
             );
         }
-        Ok(dispatch_flood(
-            &self.handles,
-            self.fused.as_deref(),
-            requests,
-            activations,
-            self.lane_width,
-        ))
+        Ok(self.flood_gate.run(|| {
+            dispatch_flood(
+                &self.handles,
+                self.fused.as_deref(),
+                requests,
+                activations,
+                self.lane_width,
+            )
+        }))
     }
 
     /// Start the global power batcher: a worker thread that collects
@@ -269,6 +314,7 @@ impl ServeSet {
     pub fn power_batcher(&self, linger: Duration, activations: u32) -> PowerBatcher {
         let handles = self.handles.clone();
         let fused = self.fused.clone();
+        let gate = self.flood_gate.clone();
         let width = self.lane_width;
         let max_batch = width.lanes() * handles.len();
         let (tx, rx) = mpsc::channel::<PowerJob>();
@@ -281,6 +327,7 @@ impl ServeSet {
                     batcher_loop(
                         &handles,
                         fused.as_deref(),
+                        &gate,
                         width,
                         max_batch,
                         linger,
@@ -411,6 +458,7 @@ pub(crate) fn dispatch_flood(
 fn batcher_loop(
     handles: &[SystemHandle],
     fused: Option<&FusedPlan>,
+    gate: &FloodGate,
     width: LaneWidth,
     max_batch: usize,
     linger: Duration,
@@ -448,7 +496,8 @@ fn batcher_loop(
                 .iter()
                 .map(|j| SystemPowerRequest { system: j.system, request: j.request })
                 .collect();
-            let estimates = dispatch_flood(handles, fused, &tagged, activations, width);
+            let estimates =
+                gate.run(|| dispatch_flood(handles, fused, &tagged, activations, width));
             for (job, estimate) in jobs.into_iter().zip(estimates) {
                 let _ = job.resp.send(Ok(estimate));
             }
@@ -579,6 +628,18 @@ mod tests {
         assert_eq!(est.mw, grouped[1].mw);
         let stats = batcher.shutdown();
         assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn flood_gate_is_reusable_after_a_contained_panic() {
+        let gate = FloodGate::new();
+        assert_eq!(gate.run(|| 41 + 1), 42);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            gate.run(|| panic!("boom"))
+        }));
+        assert!(outcome.is_err());
+        // Poison tolerance: a panicked flood must not wedge the next.
+        assert_eq!(gate.run(|| 7), 7);
     }
 
     #[test]

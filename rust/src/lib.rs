@@ -77,18 +77,27 @@
 //!   systems** at the configured SIMD lane width), [`train`]
 //!   (offline/in-situ Φ calibration).
 //! * **Serving front end** — the network-facing slice of
-//!   [`coordinator`], layered **net → admission → ServeSet → flow**:
-//!   [`coordinator::net`] speaks a length-prefixed binary wire protocol
-//!   over TCP (blocking accept loop, one reader thread per connection),
+//!   [`coordinator`], layered **net → admission → K dispatch lanes →
+//!   ServeSet → flow/shard**: [`coordinator::net`] speaks a
+//!   length-prefixed binary wire protocol over TCP (blocking accept
+//!   loop, one reader thread per connection, optional per-connection
+//!   rate limit and an HTTP metrics scrape endpoint),
 //!   [`coordinator::admission`] applies per-tenant token buckets,
-//!   bounded queues, and end-to-end deadlines in front of the
-//!   fair-dispatch [`coordinator::engine`], every refusal is a typed
-//!   [`coordinator::ServeError`] on the wire (shed with a retry-after
-//!   hint, deadline-exceeded, contained worker panics — never a hang or
-//!   a silent drop), and [`coordinator::metrics`] keeps per-tenant
-//!   p50/p99/p999 latency histograms and outcome counters;
-//!   [`coordinator::faults`] injects deterministic panics/delays for
-//!   the e2e and soak harnesses (CLI: `serve --listen ADDR`).
+//!   bounded queues, and end-to-end deadlines, and shards tenants
+//!   across the parallel dispatch lanes of [`coordinator::engine`] —
+//!   each lane an independent fair-dispatch thread over only its
+//!   tenants' queues (CLI: `serve --dispatchers K`), all lanes sharing
+//!   the warm `ServeSet` (Π batches run concurrently, power floods
+//!   serialize on a flood gate since one flood already fans across all
+//!   cores). Every refusal is a typed [`coordinator::ServeError`] on
+//!   the wire (shed with a retry-after hint, deadline-exceeded,
+//!   contained worker panics — never a hang or a silent drop); a
+//!   panicked lane is swept at drain with typed answers while live
+//!   lanes keep serving; and [`coordinator::metrics`] keeps lock-free
+//!   per-tenant p50/p99/p999 latency histograms, outcome counters, and
+//!   per-lane dispatch counters merged into one report;
+//!   [`coordinator::faults`] injects deterministic panics/delays/lane
+//!   kills for the e2e and soak harnesses (CLI: `serve --listen ADDR`).
 
 pub mod bench_util;
 pub mod coordinator;

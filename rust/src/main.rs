@@ -19,6 +19,7 @@
 //!                [--fuse] [--shards K]
 //! dimsynth serve --systems a,b,c --listen ADDR [--rate R] [--burst B]
 //!                [--queue-cap N] [--deadline-ms D] [--max-conns N]
+//!                [--dispatchers K] [--conn-rate R] [--scrape-addr ADDR]
 //! dimsynth list
 //! ```
 //!
@@ -34,6 +35,11 @@
 //! `--rate`/`--burst`/`--queue-cap`/`--deadline-ms`), typed shed and
 //! deadline refusals on the wire, and a graceful drain on stdin EOF
 //! that answers everything still queued before the report prints.
+//! Admitted work is sharded across `--dispatchers K` parallel dispatch
+//! lanes (default: half the cores, capped at the tenant count);
+//! `--conn-rate R` adds a per-connection token bucket ahead of tenant
+//! admission, and `--scrape-addr ADDR` exposes the live traffic report
+//! as JSON over a one-shot HTTP GET endpoint.
 //!
 //! `--cache-dir DIR` attaches the persistent artifact store: compiled
 //! stage artifacts are written to (and served from) `DIR`, so a second
@@ -168,6 +174,9 @@ const SUBCOMMANDS: &[SubSpec] = &[
             flag("queue-cap", "N", "listen: per-tenant bounded queue depth (default 1024)"),
             flag("deadline-ms", "D", "listen: default request deadline (default 1000)"),
             flag("max-conns", "N", "listen: cap concurrent connections; over-cap accepts get a typed shed"),
+            flag("dispatchers", "K", "listen: parallel dispatch lanes (default: cores/2, capped at tenants)"),
+            flag("conn-rate", "R", "listen: per-connection frame rate, req/s; over-rate frames get a typed shed"),
+            flag("scrape-addr", "ADDR", "listen: serve the traffic report as JSON over HTTP GET at ADDR"),
         ],
     },
     SubSpec {
@@ -675,6 +684,17 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
                     .transpose()?
                     .unwrap_or(0),
                 fuse_shards,
+                dispatchers: flags
+                    .get("dispatchers")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(0),
+                conn_rate: flags
+                    .get("conn-rate")
+                    .map(|s| s.parse::<f64>())
+                    .transpose()?
+                    .unwrap_or(f64::INFINITY),
+                scrape_addr: flags.get("scrape-addr").cloned(),
             };
             let handle =
                 coordinator::serve_listen(&systems, listen, config, store, listen_config)?;
@@ -685,6 +705,11 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
             // Block until the controlling stream closes, then drain.
             let mut sink = String::new();
             let _ = std::io::Read::read_to_string(&mut std::io::stdin(), &mut sink);
+            // Stop answering scrapes before the drain so the endpoint
+            // never serves a half-drained report.
+            if let Some(scrape) = handle.scrape {
+                scrape.shutdown();
+            }
             let report = handle.server.shutdown();
             print!("{report}");
             anyhow::ensure!(!report.engine_panicked, "traffic engine panicked");
@@ -695,6 +720,12 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
             !flags.contains_key("max-conns"),
             "--max-conns requires --listen (it caps TCP connections)"
         );
+        for listen_only in ["dispatchers", "conn-rate", "scrape-addr"] {
+            anyhow::ensure!(
+                !flags.contains_key(listen_only),
+                "--{listen_only} requires --listen (it configures the TCP serving stack)"
+            );
+        }
         let (report, counts) = coordinator::serve_multi(
             &artifacts, &systems, samples, batch, flood, fuse_shards, config, store,
         )?;
@@ -717,6 +748,9 @@ fn cmd_serve(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<
         "queue-cap",
         "deadline-ms",
         "max-conns",
+        "dispatchers",
+        "conn-rate",
+        "scrape-addr",
     ];
     for multi_only in multi_only_flags {
         anyhow::ensure!(

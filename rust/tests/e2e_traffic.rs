@@ -19,16 +19,26 @@
 //! engine survives the panic and the disconnects; and graceful drain
 //! leaves zero admitted requests unanswered (`terminal == admitted`,
 //! empty queues) — no hangs, no silent drops.
+//!
+//! The hostile mix runs on **two dispatch lanes** so every invariant
+//! above is exercised under hash-sharded multi-lane dispatch, and the
+//! lane-topology tests below pin tenants to lanes explicitly: a flooder
+//! and a light tenant must coexist fairly whether they share a lane
+//! (round-robin within the lane) or sit on different lanes (isolation),
+//! and a lane killed by an injected uncontained dispatcher panic must
+//! be swept at drain with typed answers while the other lane keeps
+//! serving live.
 
 use dimsynth::coordinator::net::run_driver;
 use dimsynth::coordinator::{
-    AdmissionConfig, DriverConfig, DriverReport, EngineConfig, FaultPlan, NetServer,
-    ServeSet, TenantSpec, TrafficEngine,
+    AdmissionConfig, DriverConfig, DriverReport, EngineConfig, FaultPlan, NetClient,
+    NetServer, ServeError, ServeSet, TenantSpec, TrafficEngine, TrafficReport,
 };
+use dimsynth::fixedpoint::Q16_15;
 use dimsynth::flow::FlowConfig;
 use dimsynth::synth::LaneWidth;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[test]
 fn hostile_traffic_mix_is_fully_answered_and_contained() {
@@ -64,7 +74,7 @@ fn hostile_traffic_mix_is_fully_answered_and_contained() {
         TrafficEngine::start(
             &set,
             admission,
-            EngineConfig { activations: 2, max_batch: 16 },
+            EngineConfig { activations: 2, max_batch: 16, dispatchers: 2 },
             faults,
         )
         .unwrap(),
@@ -177,4 +187,211 @@ fn hostile_traffic_mix_is_fully_answered_and_contained() {
     );
     let totals = report.totals();
     assert_eq!(totals.terminal(), totals.admitted, "global drain invariant: {totals:?}");
+}
+
+/// Boot a two-lane engine with a flooding tenant pinned to lane 0 and a
+/// light tenant pinned to `light_lane`, run both driver shapes
+/// concurrently against the TCP front end, and return (light report,
+/// flooder report, drained server report).
+fn run_flood_vs_light(light_lane: usize) -> (DriverReport, DriverReport, TrafficReport) {
+    let config = FlowConfig {
+        power_samples: 2,
+        lane_width: LaneWidth::W64,
+        ..FlowConfig::default()
+    };
+    let set = ServeSet::boot(&["pendulum"], config, None).unwrap();
+    let ports = set.handle_at(0).design().num_inputs();
+
+    // No rate limit on the flooder: the pressure it exerts is real
+    // queued compute, so any fairness the light tenant sees comes from
+    // the dispatcher's per-lane round-robin, not from admission shed.
+    let admission = AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("flooder", "pendulum").with_queue_cap(4096).with_lane(0),
+            TenantSpec::new("light", "pendulum").with_queue_cap(4096).with_lane(light_lane),
+        ],
+        default_deadline: Duration::from_secs(30),
+    };
+    let engine = Arc::new(
+        TrafficEngine::start(
+            &set,
+            admission,
+            EngineConfig { activations: 2, max_batch: 16, dispatchers: 2 },
+            FaultPlan::none(),
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(engine, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let drivers = vec![
+        DriverConfig {
+            requests: 300,
+            window: 32,
+            seed: 0xF100D,
+            deadline_us: 20_000_000,
+            ..DriverConfig::new("flooder", ports)
+        },
+        DriverConfig {
+            requests: 40,
+            window: 2,
+            seed: 0x116_87,
+            deadline_us: 20_000_000,
+            ..DriverConfig::new("light", ports)
+        },
+    ];
+    let joins: Vec<_> = drivers
+        .into_iter()
+        .map(|cfg| {
+            let addr = addr.clone();
+            std::thread::spawn(move || (cfg.tenant.clone(), run_driver(&addr, &cfg).unwrap()))
+        })
+        .collect();
+    let mut reports = std::collections::HashMap::<String, DriverReport>::new();
+    for j in joins {
+        let (tenant, report) = j.join().unwrap();
+        reports.insert(tenant, report);
+    }
+    let server_report = server.shutdown();
+    (reports.remove("light").unwrap(), reports.remove("flooder").unwrap(), server_report)
+}
+
+/// Shared assertions for both lane placements: the light tenant is
+/// never starved, never shed, and keeps a bounded tail; the flooder is
+/// fully answered; drain leaves nothing unanswered on either lane.
+fn assert_flood_vs_light(light: &DriverReport, flooder: &DriverReport, report: &TrafficReport) {
+    assert_eq!(light.sent, 40);
+    assert_eq!(light.answered(), light.sent, "{light:?}");
+    assert_eq!(light.ok, light.sent, "zero starvation for the light tenant: {light:?}");
+    let p99 = light.latency.percentile_us(0.99);
+    assert!(p99 < 2_000_000, "light p99 {p99} µs not bounded next to a flooder");
+
+    assert_eq!(flooder.sent, 300);
+    assert_eq!(flooder.answered(), flooder.sent, "{flooder:?}");
+
+    assert!(!report.engine_panicked);
+    assert_eq!(report.lanes.len(), 2, "{report}");
+    for t in &report.tenants {
+        assert_eq!(t.counters.terminal(), t.counters.admitted, "tenant `{}`", t.tenant);
+        assert_eq!(t.queue_depth, 0, "tenant `{}` queue not drained", t.tenant);
+    }
+    assert_eq!(report.tenant("light").unwrap().counters.served, 40);
+}
+
+#[test]
+fn light_tenant_is_fairly_served_sharing_a_lane_with_a_flooder() {
+    let (light, flooder, report) = run_flood_vs_light(0);
+    // Both tenants really landed on lane 0; lane 1 idled.
+    let lane0 = &report.lanes[0];
+    assert_eq!(lane0.tenants, vec!["flooder".to_string(), "light".to_string()], "{report}");
+    assert_eq!(report.lanes[1].items, 0, "pinning must leave lane 1 empty: {report}");
+    assert_flood_vs_light(&light, &flooder, &report);
+}
+
+#[test]
+fn light_tenant_is_isolated_from_a_flooder_on_another_lane() {
+    let (light, flooder, report) = run_flood_vs_light(1);
+    assert_eq!(report.lanes[0].tenants, vec!["flooder".to_string()], "{report}");
+    assert_eq!(report.lanes[1].tenants, vec!["light".to_string()], "{report}");
+    assert!(report.lanes[1].items >= 40, "light's lane must have carried its work: {report}");
+    assert_flood_vs_light(&light, &flooder, &report);
+}
+
+#[test]
+fn killed_lane_drains_typed_over_tcp_while_other_lane_serves_live() {
+    let config = FlowConfig {
+        power_samples: 2,
+        lane_width: LaneWidth::W64,
+        ..FlowConfig::default()
+    };
+    let set = ServeSet::boot(&["pendulum"], config, None).unwrap();
+    let ports = set.handle_at(0).design().num_inputs();
+
+    let admission = AdmissionConfig {
+        tenants: vec![
+            TenantSpec::new("doomed", "pendulum").with_queue_cap(4096).with_lane(0),
+            TenantSpec::new("steady", "pendulum").with_queue_cap(4096).with_lane(1),
+        ],
+        default_deadline: Duration::from_secs(30),
+    };
+    // Lane 0's dispatcher dies uncontained on its very first batch.
+    let faults = FaultPlan::none().kill_lane_at(0, 0);
+    let engine = Arc::new(
+        TrafficEngine::start(
+            &set,
+            admission,
+            EngineConfig { activations: 2, max_batch: 16, dispatchers: 2 },
+            faults,
+        )
+        .unwrap(),
+    );
+    let server = NetServer::start(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // The doomed client sends its whole window up front, then blocks
+    // reading: its answers can only arrive from the drain-time lane
+    // sweep, typed WorkerPanicked naming the dead lane.
+    const DOOMED: u32 = 6;
+    let doomed_addr = addr.clone();
+    let doomed = std::thread::spawn(move || {
+        let mut client = NetClient::connect(&doomed_addr).unwrap();
+        let values: Vec<i64> = vec![Q16_15.from_f64(1.0); ports];
+        for i in 0..DOOMED {
+            client.send_pi(i, "doomed", 0, &values).unwrap();
+        }
+        let mut panicked = 0;
+        for _ in 0..DOOMED {
+            let resp = client.recv().unwrap();
+            match resp.result.unwrap_err() {
+                ServeError::WorkerPanicked { reason } => {
+                    assert!(reason.contains("lane 0"), "{reason}");
+                    panicked += 1;
+                }
+                other => panic!("expected WorkerPanicked, got {other}"),
+            }
+        }
+        panicked
+    });
+
+    // Wait until every doomed frame is admitted (queued on the dead
+    // lane), so the drain sweep — not a racing dispatcher — answers it.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let admitted =
+            engine.report().tenant("doomed").map(|t| t.counters.admitted).unwrap_or(0);
+        if admitted == DOOMED as u64 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "doomed frames never admitted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Lane 1 keeps serving live while lane 0 is dead.
+    let steady = run_driver(
+        &addr,
+        &DriverConfig {
+            requests: 30,
+            window: 4,
+            seed: 0x57EAD,
+            deadline_us: 20_000_000,
+            ..DriverConfig::new("steady", ports)
+        },
+    )
+    .unwrap();
+    assert_eq!(steady.ok, 30, "live lane must be undisturbed: {steady:?}");
+
+    let report = server.shutdown();
+    assert_eq!(doomed.join().unwrap(), DOOMED, "every doomed request answered typed");
+
+    assert!(report.engine_panicked, "the lane kill must be visible in the report");
+    assert!(report.lanes[0].panicked, "{report}");
+    assert!(!report.lanes[1].panicked, "{report}");
+    let d = &report.tenant("doomed").unwrap().counters;
+    assert_eq!(d.panicked, DOOMED as u64, "{d:?}");
+    assert_eq!(d.terminal(), d.admitted, "{d:?}");
+    let s = &report.tenant("steady").unwrap().counters;
+    assert_eq!(s.served, 30, "{s:?}");
+    for t in &report.tenants {
+        assert_eq!(t.queue_depth, 0, "tenant `{}` queue not drained", t.tenant);
+    }
 }
