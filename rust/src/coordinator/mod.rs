@@ -46,9 +46,9 @@ pub use faults::{FaultAction, FaultPlan};
 pub use metrics::{LaneTraffic, LatencyHistogram, ServeStats, TrafficCounters, TrafficReport};
 pub use net::{DriverConfig, DriverReport, NetClient, NetConfig, NetServer, ScrapeServer, StatsProbe};
 pub use pipeline::{
-    estimate_power_requests, estimate_power_requests_fused, estimate_power_requests_grouped,
-    DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest, Prediction, SensorInput,
-    SystemPowerRequest,
+    estimate_power_requests, estimate_power_requests_fused, estimate_power_requests_fused_stats,
+    estimate_power_requests_grouped, DatasetStats, Pipeline, PiPath, PowerEstimate, PowerRequest,
+    Prediction, SensorInput, SystemPowerRequest,
 };
 pub use server::{InferenceServer, Request, ServerConfig};
 pub use serveset::{FloodStats, FusedPlan, PowerBatcher, ServeSet, SystemHandle};
@@ -271,12 +271,14 @@ pub fn serve_listen(
     ));
     if let Some(f) = set.fusion() {
         boot.push_str(&format!(
-            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts)\n",
+            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts; cut cost {}, refinement -{})\n",
             f.artifact.fused.netlist.len(),
             f.artifact.fused.member_count(),
             f.plan.shards,
             f.plan.cuts.comb_cuts.len(),
-            f.plan.cuts.reg_cuts.len()
+            f.plan.cuts.reg_cuts.len(),
+            f.plan.cut_cost(),
+            f.plan.refinement.removed()
         ));
     }
     boot.push_str(&format!(
@@ -341,12 +343,14 @@ pub fn serve_multi(
     ));
     if let Some(f) = set.fusion() {
         out.push_str(&format!(
-            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts)\n",
+            "fused:       {} nets over {} members, {} shards ({} comb cuts, {} reg cuts; cut cost {}, refinement -{})\n",
             f.artifact.fused.netlist.len(),
             f.artifact.fused.member_count(),
             f.plan.shards,
             f.plan.cuts.comb_cuts.len(),
-            f.plan.cuts.reg_cuts.len()
+            f.plan.cuts.reg_cuts.len(),
+            f.plan.cut_cost(),
+            f.plan.refinement.removed()
         ));
     }
 

@@ -432,6 +432,20 @@ pub fn estimate_power_requests_fused(
     activations: u32,
     width: synth::LaneWidth,
 ) -> Vec<PowerEstimate> {
+    estimate_power_requests_fused_stats(fused, plan, designs, requests, activations, width).0
+}
+
+/// [`estimate_power_requests_fused`] plus the cut-word exchange
+/// counters merged across every dispatch round — the benchmark and
+/// boot reports read words-published-per-cycle from these.
+pub fn estimate_power_requests_fused_stats(
+    fused: &crate::shard::FusedNetlist,
+    plan: &crate::shard::ShardPlan,
+    designs: &[&PiModuleDesign],
+    requests: &[SystemPowerRequest],
+    activations: u32,
+    width: synth::LaneWidth,
+) -> (Vec<PowerEstimate>, crate::shard::ExchangeStats) {
     match width {
         synth::LaneWidth::W64 => {
             estimate_power_requests_fused_w::<u64>(fused, plan, designs, requests, activations)
@@ -452,8 +466,8 @@ fn estimate_power_requests_fused_w<W: synth::LaneWord>(
     designs: &[&PiModuleDesign],
     requests: &[SystemPowerRequest],
     activations: u32,
-) -> Vec<PowerEstimate> {
-    use crate::shard::{measure_fused_activity, MemberStim, ShardSim};
+) -> (Vec<PowerEstimate>, crate::shard::ExchangeStats) {
+    use crate::shard::{measure_fused_activity, ExchangeStats, MemberStim, ShardSim};
 
     assert_eq!(
         designs.len(),
@@ -480,6 +494,7 @@ fn estimate_power_requests_fused_w<W: synth::LaneWord>(
         .unwrap_or(0);
     let mut out =
         vec![PowerEstimate { mw: 0.0, toggles_per_cycle: 0.0, cycles: 0 }; requests.len()];
+    let mut exchange = ExchangeStats::default();
     // Round j packs the j-th chunk of every system into one fused pass:
     // a fresh sharded simulator (member state must start from reset,
     // exactly like a fresh solo pass) drives all members' schedules at
@@ -510,6 +525,7 @@ fn estimate_power_requests_fused_w<W: synth::LaneWord>(
             })
             .collect();
         let reports = measure_fused_activity(&mut sim, &stims);
+        exchange.merge(&sim.exchange_stats());
         for (m, report) in reports.iter().enumerate() {
             let group = &groups[m];
             let start = round * W::LANES;
@@ -525,7 +541,7 @@ fn estimate_power_requests_fused_w<W: synth::LaneWord>(
             }
         }
     }
-    out
+    (out, exchange)
 }
 
 #[cfg(test)]
@@ -693,5 +709,64 @@ mod tests {
                 assert_eq!(f.cycles, g.cycles, "K={k} request {i}");
             }
         }
+    }
+
+    /// The stats-reporting dispatch variant merges exchange counters
+    /// across rounds without disturbing the estimates, and the merged
+    /// counters keep the per-shard opportunity accounting: every owned
+    /// cut word gets exactly one publication opportunity per simulated
+    /// cycle, summed over all rounds.
+    #[test]
+    fn fused_dispatch_reports_merged_exchange_stats() {
+        use crate::shard::{FusedNetlist, ShardPlan};
+
+        let mut pendulum = pendulum_flow();
+        let mut spring = Flow::for_system("spring_mass", FlowConfig::default()).unwrap();
+        let p_design = pendulum.rtl().unwrap().clone();
+        let s_design = spring.rtl().unwrap().clone();
+        let p_netlist = pendulum.netlist().unwrap().netlist.clone();
+        let s_netlist = spring.netlist().unwrap().netlist.clone();
+
+        // 70 requests over two members: two rounds at 64 lanes, so the
+        // merge path (fresh simulator per round) actually folds.
+        let requests: Vec<SystemPowerRequest> = (0..70u32)
+            .map(|i| SystemPowerRequest {
+                system: (i % 3 == 2) as usize,
+                request: PowerRequest { seed: 0x7100 + i, f_hz: 6.0e6 },
+            })
+            .collect();
+        let fused = FusedNetlist::fuse_refs(&[&p_netlist, &s_netlist]);
+        // K=4 over 2 members forces member splits, so cut words exist.
+        let plan = ShardPlan::partition(&fused, 4);
+        let plain = estimate_power_requests_fused(
+            &fused, &plan, &[&p_design, &s_design], &requests, 2, synth::LaneWidth::W64,
+        );
+        let (got, stats) = estimate_power_requests_fused_stats(
+            &fused, &plan, &[&p_design, &s_design], &requests, 2, synth::LaneWidth::W64,
+        );
+        assert_eq!(got.len(), plain.len());
+        for (i, (a, b)) in got.iter().zip(&plain).enumerate() {
+            assert_eq!(a.mw, b.mw, "request {i}: stats variant changed the estimate");
+            assert_eq!(a.toggles_per_cycle, b.toggles_per_cycle, "request {i}");
+            assert_eq!(a.cycles, b.cycles, "request {i}");
+        }
+
+        assert!(stats.cut_words > 0, "K=4 over 2 members must cut");
+        assert_eq!(stats.owner_cut_words.iter().sum::<u64>(), stats.cut_words as u64);
+        assert!(stats.total_published() > 0, "live stimulus exchanges words");
+        // Opportunity accounting survives the merge: the same total
+        // cycle count C applies to every shard's owned words.
+        let total = stats.total_published() + stats.total_skipped();
+        assert_eq!(total % stats.cut_words as u64, 0);
+        let cycles = total / stats.cut_words as u64;
+        assert!(cycles > 0);
+        for s in 0..plan.shards {
+            assert_eq!(
+                stats.published[s] + stats.skipped[s],
+                stats.owner_cut_words[s] * cycles,
+                "shard {s} opportunity accounting"
+            );
+        }
+        assert!(stats.total_published() <= stats.cut_words as u64 * stats.phases);
     }
 }

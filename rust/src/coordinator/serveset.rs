@@ -239,8 +239,11 @@ impl ServeSet {
             .iter()
             .map(|h| (h.netlist_fp(), h.netlist()))
             .collect();
+        // The artifact carries the refined shard plan (computed fresh or
+        // warm-loaded with the fused netlist; the store key includes the
+        // partitioner version, so a stale-algorithm plan cannot serve).
         let artifact = ensure_fused(self.store.as_deref(), &members, shards);
-        let plan = ShardPlan::partition(&artifact.fused, shards);
+        let plan = artifact.plan.clone();
         self.fused = Some(Arc::new(FusedPlan { artifact, plan }));
     }
 

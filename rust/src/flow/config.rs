@@ -66,8 +66,9 @@ pub struct FlowConfig {
     pub power_samples: u32,
     /// LFSR seed of the power-measurement stimulus stream.
     pub power_seed: u32,
-    /// SIMD lane width of word-parallel simulation passes (64 or 256
-    /// stimulus streams per pass). Enters the power-stage fingerprint:
+    /// SIMD lane width of word-parallel simulation passes (64, 256, or
+    /// 512 stimulus streams per pass; defaults to 256). Enters the
+    /// power-stage fingerprint:
     /// per-lane artifacts (activity spreads, batched power estimates)
     /// are width-shaped, so artifacts produced under one width must not
     /// serve a session configured for the other.
@@ -85,7 +86,7 @@ impl Default for FlowConfig {
             power: ICE40,
             power_samples: 4,
             power_seed: 0xACE1,
-            lane_width: LaneWidth::W64,
+            lane_width: LaneWidth::W256,
         }
     }
 }
@@ -289,7 +290,7 @@ mod tests {
 
         // Lane width shapes per-lane power artifacts: it must invalidate
         // the power stage and nothing upstream.
-        let w = FlowConfig { lane_width: LaneWidth::W256, ..FlowConfig::default() };
+        let w = FlowConfig { lane_width: LaneWidth::W64, ..FlowConfig::default() };
         assert_ne!(base.power_inputs_fp(), w.power_inputs_fp());
         assert_eq!(base.rtl_inputs_fp(), w.rtl_inputs_fp());
         assert_eq!(base.timing_inputs_fp(), w.timing_inputs_fp());

@@ -14,12 +14,14 @@
 use super::config::StableHasher;
 use super::session::TAG_FUSED;
 use super::store::{ArtifactStore, FusedArtifact};
-use crate::shard::FusedNetlist;
+use crate::shard::{FusedNetlist, ShardPlan, PARTITIONER_VERSION};
 use crate::synth::Netlist;
 
 /// Store key of a fused artifact: the member netlist fingerprints
 /// (sorted — order-insensitive membership) mixed with the shard count
-/// under the fused stage tag.
+/// and the partitioner version under the fused stage tag. The artifact
+/// carries the shard plan, so a partitioner algorithm change
+/// ([`PARTITIONER_VERSION`]) makes every cached plan a clean miss.
 pub fn fused_fingerprint(member_fps: &[u64], shards: usize) -> u64 {
     let mut sorted = member_fps.to_vec();
     sorted.sort_unstable();
@@ -27,7 +29,8 @@ pub fn fused_fingerprint(member_fps: &[u64], shards: usize) -> u64 {
     for fp in sorted {
         h = h.u64(fp);
     }
-    super::config::mix(TAG_FUSED, h.finish(), shards as u64)
+    let own = (shards as u64) ^ (u64::from(PARTITIONER_VERSION) << 48);
+    super::config::mix(TAG_FUSED, h.finish(), own)
 }
 
 /// Ensure the fused artifact for `members` — `(netlist fingerprint,
@@ -50,11 +53,9 @@ pub fn ensure_fused(
         }
     }
     let refs: Vec<&Netlist> = members.iter().map(|(_, nl)| *nl).collect();
-    let art = FusedArtifact {
-        fused: FusedNetlist::fuse_refs(&refs),
-        member_fps,
-        shards,
-    };
+    let fused = FusedNetlist::fuse_refs(&refs);
+    let plan = ShardPlan::partition(&fused, shards);
+    let art = FusedArtifact { fused, plan, member_fps, shards };
     if let Some(store) = store {
         if let Err(e) = store.save(fp, &art) {
             eprintln!("warning: flow store write failed for stage `fused`: {e}");
@@ -112,11 +113,16 @@ mod tests {
         assert_eq!(fresh.fused.member_count(), 2);
         assert_eq!(fresh.member_fps, vec![10, 20]);
 
-        // Same order: the stored entry serves, structurally identical.
+        // Same order: the stored entry serves, structurally identical —
+        // including the cached shard plan and its refinement report.
         let warm = ensure_fused(Some(&store), &[(10, &a), (20, &b)], 2);
         assert_eq!(warm.member_fps, fresh.member_fps);
         assert_eq!(warm.fused.netlist.len(), fresh.fused.netlist.len());
         assert_eq!(warm.fused.members, fresh.fused.members);
+        assert_eq!(warm.plan.owner, fresh.plan.owner);
+        assert_eq!(warm.plan.shard_gates, fresh.plan.shard_gates);
+        assert_eq!(warm.plan.cut_cost(), fresh.plan.cut_cost());
+        assert_eq!(warm.plan.refinement, fresh.plan.refinement);
 
         // Reversed order hits the same store key but must recompute:
         // member 0's range now holds the 7-bit counter.
@@ -132,5 +138,7 @@ mod tests {
         let art = ensure_fused(None, &[(1, &a)], 1);
         assert_eq!(art.fused.member_count(), 1);
         assert_eq!(art.shards, 1);
+        assert_eq!(art.plan.shards, 1);
+        assert!(art.plan.cuts.is_empty());
     }
 }

@@ -45,7 +45,7 @@ use crate::pisearch::{PiAnalysis, PiGroup};
 use crate::power::{ActivityReport, ActivitySpread, PowerModel};
 use crate::rational::Rational;
 use crate::rtl::{PiModuleDesign, PiUnit, Port};
-use crate::shard::{FusedMember, FusedNetlist};
+use crate::shard::{FusedMember, FusedNetlist, RefineReport, ShardPlan};
 use crate::synth::{NetId, Netlist, Node};
 use crate::synth::techmap::MappedDesign;
 use crate::timing::TimingReport;
@@ -65,7 +65,12 @@ use crate::units::{Dimension, NUM_BASE_DIMS};
 /// v3: added the `fused` stage ([`FusedArtifact`] — a fused multi-system
 /// netlist keyed on its members' netlist fingerprints and the shard
 /// count).
-pub const STORE_FORMAT_VERSION: u32 = 3;
+///
+/// v4: the fused artifact carries its [`crate::shard::ShardPlan`]
+/// (owner map + refinement report; cuts and loads are re-derived on
+/// decode), and the fused fingerprint mixes in
+/// [`crate::shard::PARTITIONER_VERSION`].
+pub const STORE_FORMAT_VERSION: u32 = 4;
 
 const MAGIC: &[u8; 8] = b"DSARTFT\0";
 
@@ -707,6 +712,11 @@ impl Artifact for String {
 pub struct FusedArtifact {
     /// The fused netlist with its per-member scatter index.
     pub fused: FusedNetlist,
+    /// The refined shard plan for `fused` at `shards` shards. Encoded
+    /// as the owner map plus the refinement report; cut lists and
+    /// per-shard loads are re-derived on decode, so a loaded plan is
+    /// always self-consistent with the netlist.
+    pub plan: ShardPlan,
     /// Netlist-stage fingerprints of the members, in fuse order.
     pub member_fps: Vec<u64>,
     /// Shard count the artifact was keyed under.
@@ -730,6 +740,16 @@ impl Artifact for FusedArtifact {
             w.put_u64(fp);
         }
         w.put_usize(self.shards);
+        w.put_usize(self.plan.shards);
+        w.put_usize(self.plan.owner.len());
+        for &o in &self.plan.owner {
+            w.put_u32(u32::from(o));
+        }
+        w.put_usize(self.plan.refinement.initial_cut_cost);
+        w.put_usize(self.plan.refinement.refined_cut_cost);
+        w.put_usize(self.plan.refinement.cluster_moves);
+        w.put_usize(self.plan.refinement.level0_moves);
+        w.put_usize(self.plan.refinement.sweeps);
     }
 
     fn decode(r: &mut Reader<'_>) -> anyhow::Result<FusedArtifact> {
@@ -763,11 +783,40 @@ impl Artifact for FusedArtifact {
             member_fps.push(r.take_u64()?);
         }
         let shards = r.take_usize()?;
-        Ok(FusedArtifact {
-            fused: FusedNetlist::from_parts(netlist, members),
-            member_fps,
-            shards,
-        })
+        let plan_shards = r.take_usize()?;
+        anyhow::ensure!(
+            plan_shards == shards.max(1),
+            "plan shard count {plan_shards} does not match artifact key {shards}"
+        );
+        let n_owner = r.take_len(4)?;
+        anyhow::ensure!(
+            n_owner == netlist.len(),
+            "owner map covers {n_owner} of {} nets",
+            netlist.len()
+        );
+        let mut owner = Vec::with_capacity(n_owner);
+        for _ in 0..n_owner {
+            let o = r.take_u32()?;
+            anyhow::ensure!(o < plan_shards as u32, "owner {o} out of range");
+            owner.push(o as u16);
+        }
+        let refinement = RefineReport {
+            initial_cut_cost: r.take_usize()?,
+            refined_cut_cost: r.take_usize()?,
+            cluster_moves: r.take_usize()?,
+            level0_moves: r.take_usize()?,
+            sweeps: r.take_usize()?,
+        };
+        let fused = FusedNetlist::from_parts(netlist, members);
+        // Re-derive cut lists and loads from the owner map: the loaded
+        // plan is self-consistent with the netlist by construction.
+        let mut plan = ShardPlan::from_owner(&fused, plan_shards, owner);
+        anyhow::ensure!(
+            plan.cut_cost() == refinement.refined_cut_cost,
+            "stored refinement report disagrees with re-derived cuts"
+        );
+        plan.refinement = refinement;
+        Ok(FusedArtifact { fused, plan, member_fps, shards })
     }
 }
 

@@ -61,12 +61,16 @@
 //! * **Multi-system sharding** — [`shard`]: fuse → partition →
 //!   [`shard::ShardSim`]. [`shard::FusedNetlist`] merges N systems'
 //!   netlists into one wide module (namespaced nets, concatenated PI/PO
-//!   maps, per-member scatter index); [`shard::ShardPlan`] cuts it at
-//!   register/level boundaries into K gate-balanced shards with an
-//!   explicit cut-signal interface ([`shard::CutMap`]); `ShardSim` runs
-//!   one shard per persistent worker with a per-cycle (per-level when
-//!   combinational cuts exist) cut-signal exchange, bit-identical to
-//!   solo evaluation. Cached as the `fused` flow stage and routed to by
+//!   maps, per-member scatter index); [`shard::ShardPlan`] seeds K
+//!   gate-balanced shards at register/level boundaries, then a
+//!   KL/FM-style refinement pass moves gate clusters between shards to
+//!   minimize the explicit cut-signal interface ([`shard::CutMap`],
+//!   reported per plan by [`shard::RefineReport`]); `ShardSim` runs one
+//!   shard per persistent worker with a dirty-word incremental cut
+//!   exchange (mirror words, per-cycle — per-level when combinational
+//!   cuts exist — publication of changed words only, counted by
+//!   [`shard::ExchangeStats`]), bit-identical to solo evaluation.
+//!   Cached (plan included) as the `fused` flow stage and routed to by
 //!   the coordinator's cross-system power batcher.
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
 //!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine;

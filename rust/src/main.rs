@@ -49,8 +49,8 @@
 //! `cache gc --max-bytes N` prunes the store oldest-first to a byte cap.
 //!
 //! `--lanes <64|256|512>` selects the SIMD lane width of word-parallel
-//! simulation passes (see `synth::LaneWidth`); it enters the flow
-//! config, and with it the power-stage cache fingerprint.
+//! simulation passes (see `synth::LaneWidth`; default 256); it enters
+//! the flow config, and with it the power-stage cache fingerprint.
 //!
 //! `compile --fuse a,b,c` fuses the named corpus systems' netlists into
 //! one module ([`dimsynth::shard`]) and reports the shard plan: member
@@ -66,7 +66,6 @@ use dimsynth::fixedpoint::{QFormat, Q16_15};
 use dimsynth::flow::{ensure_fused, ArtifactStore, Flow, FlowConfig, StageCounts, STORE_FORMAT_VERSION};
 use dimsynth::newton::{self, corpus};
 use dimsynth::report;
-use dimsynth::shard::ShardPlan;
 use dimsynth::synth::{self, LaneWidth, Netlist};
 use dimsynth::{coordinator, train};
 
@@ -110,7 +109,7 @@ const SUBCOMMANDS: &[SubSpec] = &[
         flags: &[
             flag("target", "SYM", "target-symbol override (mandatory for .nt files)"),
             flag("format", "Qi.f", "fixed-point format, e.g. Q16.15"),
-            flag("lanes", "N", "SIMD lane width for word-parallel simulation (64, 256, or 512)"),
+            flag("lanes", "N", "SIMD lane width for word-parallel simulation (64, 256, or 512; default 256)"),
             flag("o", "DIR", "write Verilog + self-checking testbench to DIR"),
             flag("out", "DIR", "alias of -o"),
             switch("vcd", "also record a gate-level waveform (needs -o)"),
@@ -164,7 +163,7 @@ const SUBCOMMANDS: &[SubSpec] = &[
             flag("artifacts", "DIR", "AOT artifact directory (default artifacts)"),
             flag("systems", "a,b,c", "serve many systems from one warm FlowSet (no positional)"),
             flag("cache-dir", "DIR", "multi-system: boot the FlowSet warm from this store"),
-            flag("lanes", "N", "multi-system: SIMD lane width of power batches (64, 256, or 512)"),
+            flag("lanes", "N", "multi-system: SIMD lane width of power batches (64, 256, or 512; default 256)"),
             flag("power-flood", "N", "multi-system: cross-system power requests (default 256)"),
             switch("fuse", "multi-system: power floods run on the fused multi-system netlist"),
             flag("shards", "K", "fuse: shard count for the fused evaluation (default: cores, capped at 8)"),
@@ -385,7 +384,7 @@ fn cmd_compile_fused(pos: &[String], flags: &HashMap<String, String>) -> anyhow:
     let members: Vec<(u64, &Netlist)> =
         compiled.iter().map(|(fp, m)| (*fp, &m.netlist)).collect();
     let art = ensure_fused(store.as_deref(), &members, shards);
-    let plan = ShardPlan::partition(&art.fused, shards);
+    let plan = &art.plan;
 
     println!("fused {} systems into one module", art.fused.member_count());
     println!("{:<8} {:<24} {:>8} {:>16}", "prefix", "system", "gates", "nets");
@@ -400,6 +399,14 @@ fn cmd_compile_fused(pos: &[String], flags: &HashMap<String, String>) -> anyhow:
         plan.cuts.comb_cuts.len(),
         plan.cuts.reg_cuts.len(),
         plan.cuts.dff_cuts.len()
+    );
+    println!(
+        "cut cost:    {} -> {} ({} cut words removed by {} refinement moves in {} sweeps)",
+        plan.refinement.initial_cut_cost,
+        plan.refinement.refined_cut_cost,
+        plan.refinement.removed(),
+        plan.refinement.cluster_moves + plan.refinement.level0_moves,
+        plan.refinement.sweeps
     );
     if flags.contains_key("cache-dir") {
         print_cache_line(counts);

@@ -140,7 +140,7 @@ impl LaneActivityReport {
 /// the stored artifact.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ActivitySpread {
-    /// Stimulus lanes measured (64 or 256).
+    /// Stimulus lanes measured (64, 256, or 512; 256 by default).
     pub lanes: u32,
     /// Mean toggles-per-cycle across lanes.
     pub mean_tpc: f64,

@@ -7,9 +7,10 @@
 //! per-member net ranges must remain disjoint and contiguous for the
 //! scatter index and the per-member toggle accounting to be exact.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::synth::{NetId, Netlist, Node};
+use crate::synth::{Levelization, NetId, Netlist, Node};
 
 /// One member system inside a [`FusedNetlist`].
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -130,6 +131,88 @@ impl FusedNetlist {
     pub fn bus_name(&self, member: usize, name: &str) -> String {
         format!("{}/{}", self.members[member].prefix, name)
     }
+
+    /// Build the refinement [`ClusterIndex`] of this module: one cluster
+    /// per non-empty (member, combinational level) cell, in level-major
+    /// deterministic order, each with its LUTs and its read adjacency.
+    /// `lv` must be this module's levelization.
+    pub fn cluster_index(&self, lv: &Levelization) -> ClusterIndex {
+        let depth = lv.depth() as usize;
+        let n_members = self.member_count();
+        // (member, level) -> cluster id, assigned in first-seen
+        // (level-major) order so the index is deterministic.
+        let mut cell = vec![u32::MAX; n_members * (depth + 1)];
+        let mut clusters: Vec<Cluster> = Vec::new();
+        for level in 1..=lv.depth() {
+            for &id in lv.level_luts(level) {
+                let m = self.member_of(id) as usize;
+                let key = m * (depth + 1) + level as usize;
+                let c = if cell[key] == u32::MAX {
+                    let c = clusters.len() as u32;
+                    cell[key] = c;
+                    clusters.push(Cluster {
+                        member: m,
+                        level,
+                        luts: Vec::new(),
+                        ins: Vec::new(),
+                        gates: 0,
+                    });
+                    c
+                } else {
+                    cell[key]
+                };
+                let cl = &mut clusters[c as usize];
+                cl.luts.push(id);
+                cl.gates += 1;
+            }
+        }
+        // Read adjacency with multiplicities. Same-level reads cannot
+        // exist (levelization), so a cluster never reads itself; the
+        // map is sorted by net id so the adjacency is deterministic.
+        for cl in &mut clusters {
+            let mut reads: HashMap<NetId, u32> = HashMap::new();
+            for &id in &cl.luts {
+                let Node::Lut { ins, .. } = self.netlist.node(id) else {
+                    unreachable!("level order contains only LUTs")
+                };
+                for &i in ins {
+                    *reads.entry(i).or_insert(0) += 1;
+                }
+            }
+            let mut ins: Vec<(NetId, u32)> = reads.into_iter().collect();
+            ins.sort_unstable_by_key(|&(n, _)| n);
+            cl.ins = ins;
+        }
+        ClusterIndex { clusters }
+    }
+}
+
+/// One refinement cluster: the LUTs of one member at one combinational
+/// level. The cut-minimizing partitioner
+/// ([`super::partition::ShardPlan`]) moves whole clusters between
+/// shards, so a cluster is the granularity at which the cut interface
+/// can change.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    /// Owning member index.
+    pub member: usize,
+    /// Combinational level (1-based) of every LUT in the cluster.
+    pub level: u32,
+    /// The cluster's LUT output nets, in levelization order.
+    pub luts: Vec<NetId>,
+    /// Read adjacency: every net the cluster's LUTs read, with pin
+    /// multiplicity, sorted by net id. Never contains the cluster's own
+    /// outputs (same-level reads are impossible).
+    pub ins: Vec<(NetId, u32)>,
+    /// LUT count (= `luts.len()`, the balance weight).
+    pub gates: usize,
+}
+
+/// The clusters of a fused module, in deterministic level-major order —
+/// the move units of the cut-minimizing refinement pass.
+#[derive(Clone, Debug)]
+pub struct ClusterIndex {
+    pub clusters: Vec<Cluster>,
 }
 
 #[cfg(test)]
@@ -207,6 +290,43 @@ mod tests {
         let rebuilt = FusedNetlist::from_parts(fused.netlist.clone(), meta);
         assert_eq!(rebuilt.member_count(), 1);
         assert_eq!(rebuilt.member_of(0), 0);
+    }
+
+    #[test]
+    fn cluster_index_tiles_the_luts() {
+        let a = counter();
+        let b = counter();
+        let fused = FusedNetlist::fuse_refs(&[&a, &b]);
+        let lv = fused.netlist.levelize();
+        let ci = fused.cluster_index(&lv);
+        // Every LUT is in exactly one cluster, and the cluster's member
+        // and level match the LUT's.
+        let total: usize = ci.clusters.iter().map(|c| c.gates).sum();
+        assert_eq!(total, fused.netlist.count_luts());
+        let mut seen = std::collections::HashSet::new();
+        for cl in &ci.clusters {
+            assert_eq!(cl.gates, cl.luts.len());
+            for &id in &cl.luts {
+                assert!(seen.insert(id), "LUT {id} in two clusters");
+                assert_eq!(fused.member_of(id) as usize, cl.member);
+            }
+            // Adjacency never contains the cluster's own outputs and is
+            // sorted (deterministic).
+            for w in cl.ins.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+            for &(n, m) in &cl.ins {
+                assert!(m >= 1);
+                assert!(!cl.luts.contains(&n), "self-read in cluster adjacency");
+            }
+        }
+        // Determinism: two builds agree exactly.
+        let ci2 = fused.cluster_index(&lv);
+        assert_eq!(ci.clusters.len(), ci2.clusters.len());
+        for (x, y) in ci.clusters.iter().zip(&ci2.clusters) {
+            assert_eq!(x.luts, y.luts);
+            assert_eq!(x.ins, y.ins);
+        }
     }
 
     #[test]

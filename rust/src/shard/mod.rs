@@ -14,42 +14,69 @@
 //!    (`s{m}/…`); a per-member index records each member's net range so
 //!    results scatter back exactly.
 //! 2. **Partitioning** ([`partition::ShardPlan`]) — cut the fused
-//!    netlist into K shards along register/level boundaries, balancing
-//!    LUT count per shard (LPT over whole members, splitting the
-//!    largest member at a level boundary when shards would otherwise
-//!    sit empty). The cross-shard dependencies are reified as an
-//!    explicit cut-signal interface ([`partition::CutMap`]).
+//!    netlist into K shards. A level-boundary LPT pass seeds the plan
+//!    (whole members largest-first, splitting the largest member at a
+//!    level boundary when shards would otherwise sit empty); a
+//!    KL/FM-style refinement pass then greedily moves gate clusters —
+//!    (member, level) tiles and level-0 nets — between shards, applying
+//!    only moves that strictly shrink the cut under a gate-balance
+//!    tolerance. Refinement is deterministic and monotone (the refined
+//!    cut cost never exceeds the seed's); [`partition::RefineReport`]
+//!    records the before/after cost and move counts, and
+//!    [`partition::PARTITIONER_VERSION`] enters the fused-artifact
+//!    fingerprint so cached plans are invalidated when the algorithm
+//!    changes. The cross-shard dependencies are reified as an explicit
+//!    cut-signal interface ([`partition::CutMap`]); its size
+//!    ([`partition::ShardPlan::cut_cost`]) is the communication cost
+//!    refinement minimizes.
 //! 3. **Sharded evaluation** ([`shardsim::ShardSim`]) — one persistent
 //!    worker per shard, driving the same packed-LUT word-parallel
 //!    engine as [`crate::synth::WordSim`], with results (values,
 //!    per-net toggles, per-member per-lane toggle totals, cycle counts)
 //!    bit-identical to running every member solo.
 //!
-//! # Cut-signal exchange protocol
+//! # Dirty-word cut exchange protocol
 //!
-//! A cut is a net owned by one shard and read by another. The simulator
-//! exchanges cut values through the shared value array itself — the
-//! "mailbox" is the value word of the cut net — under the same
+//! A cut is a net owned by one shard and read by another. Each distinct
+//! cut net gets a **mirror word** appended to the shared value array;
+//! cross-shard readers are remapped to mirrors at pack time, so the
+//! only writer of a cut net's home word is its owner and the only
+//! writer of a mirror is the exchange. Publication into the mirrors is
+//! **incremental**: a cut word is copied only when its value changed
+//! since the last publication, so a quiescent region of the module
+//! costs no exchange traffic. Because every change is published, a
+//! clean dirty bit implies mirror == source — skipping clean words can
+//! never be observed by a reader. Synchronization rides the same
 //! monotonic spin-phase protocol as [`crate::synth::ParSession`]:
 //!
 //! * **Register cuts** (`CutMap::reg_cuts`): the cut net is level-0
-//!   (primary input, constant, or DFF q). Its value only changes
-//!   *between* evaluation phases — inputs are bound by the driving
-//!   thread outside any phase, and DFF commits happen in the driving
-//!   thread's clock-edge phase after all workers joined. Readers can
-//!   never observe a half-updated cycle, so these cuts need no extra
-//!   synchronization beyond the per-cycle barrier.
+//!   (primary input, constant, or DFF q). The driving thread marks a
+//!   per-64-cut-word dirty-summary bitmask when it binds an input or
+//!   commits a DFF, and pumps only the flagged words into their mirrors
+//!   at the start of the next cycle, outside any phase — one summary
+//!   test skips 64 clean words at once. Mirrors are frozen while
+//!   workers run, so a mid-phase reader can never observe a
+//!   half-updated cycle.
 //! * **DFF cuts** (`CutMap::dff_cuts`): a combinational net feeding a
 //!   DFF d-input owned by another shard. The driving thread samples
 //!   every d after the last evaluation phase of the cycle joined, so
-//!   the per-cycle barrier again suffices.
+//!   the per-cycle barrier suffices (no mirror needed).
 //! * **Combinational cuts** (`CutMap::comb_cuts`): a LUT output read by
 //!   a cross-shard LUT in the *same* cycle. These force per-level
-//!   phasing: every level becomes one phase, all shards evaluate their
-//!   slice of the level, and the Release/Acquire pair on the phase and
-//!   done counters publishes level-L cut values before any shard starts
-//!   level L+1. A plan with no combinational cuts (the whole-member
-//!   common case) collapses to one phase per cycle.
+//!   phasing: every level becomes one phase, and the owning shard
+//!   publishes its dirty level-L cut words into the mirrors before
+//!   signalling the phase done — the Release/Acquire pair on the done
+//!   and phase counters makes them visible before any shard starts
+//!   level L+1. The dirty bit is free: the engine's per-net toggle word
+//!   is nonzero exactly when the value word changed this cycle. A plan
+//!   with no combinational cuts (the whole-member common case)
+//!   collapses to one phase per cycle.
+//!
+//! [`shardsim::ExchangeStats`] counts, per shard, the words actually
+//! published versus the publication opportunities skipped (each owned
+//! cut word has exactly one opportunity per cycle), plus the sync
+//! phases run — the shard bench gates on the dirty filter publishing
+//! strictly fewer words than full republication.
 //!
 //! Toggle accounting follows [`crate::synth::WordSim`] exactly, but the
 //! per-lane carry-save accumulator is kept *per member*, so each
@@ -61,7 +88,7 @@ pub mod partition;
 pub mod power;
 pub mod shardsim;
 
-pub use fusion::{FusedMember, FusedNetlist};
-pub use partition::{Cut, CutMap, ShardPlan};
+pub use fusion::{Cluster, ClusterIndex, FusedMember, FusedNetlist};
+pub use partition::{Cut, CutMap, RefineReport, ShardPlan, PARTITIONER_VERSION};
 pub use power::{measure_fused_activity, MemberStim};
-pub use shardsim::{ShardDrive, ShardSim};
+pub use shardsim::{ExchangeStats, ShardDrive, ShardSim};

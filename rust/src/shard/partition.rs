@@ -1,19 +1,37 @@
-//! Levelization-aware partitioning of a fused netlist into K shards.
+//! Cut-minimizing partitioning of a fused netlist into K shards.
 //!
-//! The partitioner works at the granularity of *segments* — a run of
-//! consecutive combinational levels of one member. Initially every
-//! member is one segment (all its levels); segments are bin-packed onto
-//! shards largest-first (LPT). When K exceeds the member count some
-//! shards would sit empty, so the largest splittable segment is cut at
-//! the level boundary closest to halving its gate count and the tail
-//! moves to an empty shard. Cutting at level boundaries keeps the cut
-//! interface small and classifiable (see [`CutMap`] and the exchange
-//! protocol in [`crate::shard`]).
+//! Partitioning runs in two passes. The **seed** pass works at the
+//! granularity of *segments* — a run of consecutive combinational
+//! levels of one member. Initially every member is one segment (all its
+//! levels); segments are bin-packed onto shards largest-first (LPT).
+//! When K exceeds the member count some shards would sit empty, so the
+//! largest splittable segment is cut at the level boundary closest to
+//! halving its gate count and the tail moves to an empty shard.
+//!
+//! The **refinement** pass ([`ShardPlan::partition`]) then minimizes
+//! the cut interface Kernighan–Lin/Fiduccia–Mattheyses-style: it
+//! greedily moves whole clusters ([`super::fusion::Cluster`] — the LUTs
+//! of one member at one level) between shards whenever the move
+//! strictly shrinks the [`CutMap`] and keeps the gate balance within a
+//! 12.5% tolerance of perfect, then re-homes level-0 nets (inputs,
+//! constants, DFF q) onto their reader shards. Every applied move
+//! strictly decreases the cut cost, so a refined plan never has more
+//! cuts than the seed plan — [`RefineReport`] records both sides. The
+//! whole pipeline is deterministic in its inputs: the same fused
+//! netlist and K always produce the same plan.
 
 use std::collections::HashSet;
 
-use super::fusion::FusedNetlist;
-use crate::synth::{NetId, Node};
+use super::fusion::{Cluster, FusedNetlist};
+use crate::synth::{Levelization, NetId, Netlist, Node};
+
+/// Version of the partitioning algorithm. Mixed into the fused-stage
+/// store fingerprint ([`crate::flow::fused_fingerprint`]) so plans
+/// cached by an older partitioner are a clean miss, never served stale.
+///
+/// v2: cut-minimizing cluster refinement + level-0 re-homing on top of
+/// the v1 level-boundary LPT seed.
+pub const PARTITIONER_VERSION: u32 = 2;
 
 /// One cut signal: net `net` is owned (written) by shard `from` and
 /// read by shard `to`.
@@ -41,13 +59,37 @@ pub struct CutMap {
 }
 
 impl CutMap {
-    /// Total cut signals of all classes.
+    /// Total cut signals of all classes — the cut cost the refinement
+    /// pass minimizes (one exchange word per entry per relevant period).
     pub fn len(&self) -> usize {
         self.comb_cuts.len() + self.reg_cuts.len() + self.dff_cuts.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+/// What the cut-minimizing refinement pass did to a plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefineReport {
+    /// Cut cost of the seed (level-boundary LPT) plan.
+    pub initial_cut_cost: usize,
+    /// Cut cost after refinement (= [`ShardPlan::cut_cost`]). Never
+    /// exceeds `initial_cut_cost`: only strictly improving moves apply.
+    pub refined_cut_cost: usize,
+    /// Cluster moves applied (whole member-level cells between shards).
+    pub cluster_moves: usize,
+    /// Level-0 nets re-homed onto a reader shard.
+    pub level0_moves: usize,
+    /// Greedy sweeps run before convergence (or the sweep cap).
+    pub sweeps: usize,
+}
+
+impl RefineReport {
+    /// Cut words removed by refinement.
+    pub fn removed(&self) -> usize {
+        self.initial_cut_cost - self.refined_cut_cost
     }
 }
 
@@ -63,6 +105,8 @@ pub struct ShardPlan {
     pub shard_gates: Vec<usize>,
     /// Cross-shard signal interface.
     pub cuts: CutMap,
+    /// What refinement did (seed vs refined cut cost, moves, sweeps).
+    pub refinement: RefineReport,
 }
 
 /// A run of consecutive levels `[lo, hi]` (1-based, inclusive) of one
@@ -75,162 +119,98 @@ struct Segment {
     gates: usize,
 }
 
+/// Greedy sweep caps: refinement is monotone (every applied move
+/// strictly reduces the cut cost), so these only bound the tail of
+/// convergence, not correctness.
+const MAX_CLUSTER_SWEEPS: usize = 8;
+const MAX_LEVEL0_SWEEPS: usize = 4;
+const MAX_REFINE_ROUNDS: usize = 2;
+
 impl ShardPlan {
-    /// Partition `fused` into `shards` shards (clamped to ≥ 1).
-    /// Deterministic in its inputs: the same fused netlist and K always
-    /// produce the same plan.
+    /// Partition `fused` into `shards` shards (clamped to ≥ 1): seed
+    /// LPT plan, then the cut-minimizing refinement pass. Deterministic
+    /// in its inputs: the same fused netlist and K always produce the
+    /// same plan.
     pub fn partition(fused: &FusedNetlist, shards: usize) -> ShardPlan {
+        ShardPlan::partition_opts(fused, shards, true)
+    }
+
+    /// The seed plan only (no refinement) — the PR 7 baseline, kept for
+    /// A/B comparison in benches and the refinement CI gate.
+    pub fn partition_unrefined(fused: &FusedNetlist, shards: usize) -> ShardPlan {
+        ShardPlan::partition_opts(fused, shards, false)
+    }
+
+    fn partition_opts(fused: &FusedNetlist, shards: usize, refine: bool) -> ShardPlan {
         let k = shards.max(1);
         let nl = &fused.netlist;
         let lv = nl.levelize();
-        let depth = lv.depth();
-        // Per-member per-level LUT counts (level 1..=depth).
-        let n_members = fused.member_count();
-        let mut mlg = vec![vec![0usize; depth as usize + 1]; n_members];
-        for level in 1..=depth {
-            for &id in lv.level_luts(level) {
-                mlg[fused.member_of(id) as usize][level as usize] += 1;
-            }
+        let (mut owner, mut load) = initial_partition(fused, &lv, k);
+        let initial_cut_cost = extract_cuts(nl, &owner).len();
+        let (cluster_moves, level0_moves, sweeps) = if refine {
+            refine_owner(fused, &lv, k, &mut owner, &mut load)
+        } else {
+            (0, 0, 0)
+        };
+        let cuts = extract_cuts(nl, &owner);
+        let refined_cut_cost = cuts.len();
+        debug_assert!(
+            refined_cut_cost <= initial_cut_cost,
+            "refinement increased the cut cost ({initial_cut_cost} -> {refined_cut_cost})"
+        );
+        ShardPlan {
+            shards: k,
+            owner,
+            shard_gates: load,
+            cuts,
+            refinement: RefineReport {
+                initial_cut_cost,
+                refined_cut_cost,
+                cluster_moves,
+                level0_moves,
+                sweeps,
+            },
         }
+    }
 
-        // Seed: one whole-member segment each; LPT largest-first onto
-        // the least-loaded shard. Ties break on lower shard index (and
-        // on member order among equal-sized members), keeping the plan
-        // deterministic.
-        let mut segments: Vec<Segment> = (0..n_members)
-            .map(|m| Segment {
-                member: m,
-                lo: 1,
-                hi: depth,
-                gates: fused.members[m].gates,
-            })
-            .collect();
-        segments.sort_by(|a, b| b.gates.cmp(&a.gates).then(a.member.cmp(&b.member)));
-        let mut bins: Vec<Vec<Segment>> = vec![Vec::new(); k];
+    /// Build a plan from an explicit owner map (shard per net): computes
+    /// the per-shard loads and extracts the cut interface. For tests
+    /// and external partitioners; no refinement runs.
+    pub fn from_owner(fused: &FusedNetlist, shards: usize, owner: Vec<u16>) -> ShardPlan {
+        let k = shards.max(1);
+        let nl = &fused.netlist;
+        assert_eq!(owner.len(), nl.len(), "owner map does not match netlist");
+        assert!(
+            owner.iter().all(|&o| (o as usize) < k),
+            "owner map references a shard >= {k}"
+        );
         let mut load = vec![0usize; k];
-        for seg in segments {
-            let bin = (0..k).min_by_key(|&b| (load[b], b)).unwrap();
-            load[bin] += seg.gates;
-            bins[bin].push(seg);
-        }
-
-        // Fill empty shards by splitting the largest splittable segment
-        // at the level boundary nearest its gate-count midpoint.
-        while let Some(empty) = load.iter().position(|&l| l == 0) {
-            let mut best: Option<(usize, usize, usize)> = None; // (bin, idx, gates)
-            for (b, bin) in bins.iter().enumerate() {
-                for (i, seg) in bin.iter().enumerate() {
-                    let spans = (seg.lo..=seg.hi)
-                        .filter(|&l| mlg[seg.member][l as usize] > 0)
-                        .count();
-                    if spans >= 2 && best.map_or(true, |(_, _, g)| seg.gates > g) {
-                        best = Some((b, i, seg.gates));
-                    }
-                }
-            }
-            let Some((b, i, _)) = best else { break };
-            let seg = bins[b].remove(i);
-            let half = seg.gates / 2;
-            let (mut split, mut run, mut best_diff) = (seg.lo, 0usize, usize::MAX);
-            // Split after level `l` ∈ [lo, hi): head = [lo, l].
-            for l in seg.lo..seg.hi {
-                run += mlg[seg.member][l as usize];
-                let diff = run.abs_diff(half);
-                if run > 0 && run < seg.gates && diff < best_diff {
-                    best_diff = diff;
-                    split = l;
-                }
-            }
-            let head_gates: usize =
-                (seg.lo..=split).map(|l| mlg[seg.member][l as usize]).sum();
-            let tail = Segment {
-                member: seg.member,
-                lo: split + 1,
-                hi: seg.hi,
-                gates: seg.gates - head_gates,
-            };
-            let head = Segment { lo: seg.lo, hi: split, gates: head_gates, ..seg };
-            load[b] -= tail.gates;
-            load[empty] += tail.gates;
-            bins[b].push(head);
-            bins[empty].push(tail);
-        }
-
-        // Ownership: LUTs by their segment; level-0 nets (inputs,
-        // constants, DFF q) by the member's head segment — their values
-        // only move at cycle boundaries, so placement only affects cut
-        // classification, not correctness.
-        let mut owner = vec![0u16; nl.len()];
-        let mut head_shard = vec![0u16; n_members];
-        let mut head_lo = vec![u32::MAX; n_members];
-        for (b, bin) in bins.iter().enumerate() {
-            for seg in bin {
-                if seg.lo < head_lo[seg.member] {
-                    head_lo[seg.member] = seg.lo;
-                    head_shard[seg.member] = b as u16;
-                }
-            }
-        }
-        for (m, fm) in fused.members.iter().enumerate() {
-            for id in fm.net_range.0..fm.net_range.1 {
-                owner[id as usize] = head_shard[m];
-            }
-        }
-        for (b, bin) in bins.iter().enumerate() {
-            for seg in bin {
-                for level in seg.lo..=seg.hi {
-                    for &id in lv.level_luts(level) {
-                        if fused.member_of(id) as usize == seg.member {
-                            owner[id as usize] = b as u16;
-                        }
-                    }
-                }
-            }
-        }
-
-        // Cut extraction: every cross-shard read, classified by the
-        // kind of the net being read.
-        let mut cuts = CutMap::default();
-        let mut seen: HashSet<Cut> = HashSet::new();
         for (id, node) in nl.nodes() {
-            match node {
-                Node::Lut { ins, .. } => {
-                    let to = owner[id as usize];
-                    for &i in ins {
-                        let from = owner[i as usize];
-                        if from == to {
-                            continue;
-                        }
-                        let cut = Cut { net: i, from, to };
-                        if !seen.insert(cut) {
-                            continue;
-                        }
-                        match nl.node(i) {
-                            Node::Lut { .. } => cuts.comb_cuts.push(cut),
-                            _ => cuts.reg_cuts.push(cut),
-                        }
-                    }
-                }
-                Node::Dff { d, .. } => {
-                    let to = owner[id as usize];
-                    let from = owner[*d as usize];
-                    if from == to {
-                        continue;
-                    }
-                    let cut = Cut { net: *d, from, to };
-                    if !seen.insert(cut) {
-                        continue;
-                    }
-                    match nl.node(*d) {
-                        Node::Lut { .. } => cuts.dff_cuts.push(cut),
-                        _ => cuts.reg_cuts.push(cut),
-                    }
-                }
-                _ => {}
+            if matches!(node, Node::Lut { .. }) {
+                load[owner[id as usize] as usize] += 1;
             }
         }
+        let cuts = extract_cuts(nl, &owner);
+        let cost = cuts.len();
+        ShardPlan {
+            shards: k,
+            owner,
+            shard_gates: load,
+            cuts,
+            refinement: RefineReport {
+                initial_cut_cost: cost,
+                refined_cut_cost: cost,
+                cluster_moves: 0,
+                level0_moves: 0,
+                sweeps: 0,
+            },
+        }
+    }
 
-        ShardPlan { shards: k, owner, shard_gates: load, cuts }
+    /// Total cut signals — the communication cost of the plan (one
+    /// exchange word per cut per relevant period).
+    pub fn cut_cost(&self) -> usize {
+        self.cuts.len()
     }
 
     /// Whether evaluation must synchronize every level (true iff the
@@ -239,6 +219,389 @@ impl ShardPlan {
     pub fn per_level_sync(&self) -> bool {
         !self.cuts.comb_cuts.is_empty()
     }
+}
+
+/// The seed plan: whole-member LPT, splitting the largest segment at a
+/// level boundary while shards would otherwise sit empty. Returns the
+/// per-net owner map and per-shard gate loads.
+fn initial_partition(
+    fused: &FusedNetlist,
+    lv: &Levelization,
+    k: usize,
+) -> (Vec<u16>, Vec<usize>) {
+    let nl = &fused.netlist;
+    let depth = lv.depth();
+    // Per-member per-level LUT counts (level 1..=depth).
+    let n_members = fused.member_count();
+    let mut mlg = vec![vec![0usize; depth as usize + 1]; n_members];
+    for level in 1..=depth {
+        for &id in lv.level_luts(level) {
+            mlg[fused.member_of(id) as usize][level as usize] += 1;
+        }
+    }
+
+    // Seed: one whole-member segment each; LPT largest-first onto
+    // the least-loaded shard. Ties break on lower shard index (and
+    // on member order among equal-sized members), keeping the plan
+    // deterministic.
+    let mut segments: Vec<Segment> = (0..n_members)
+        .map(|m| Segment {
+            member: m,
+            lo: 1,
+            hi: depth,
+            gates: fused.members[m].gates,
+        })
+        .collect();
+    segments.sort_by(|a, b| b.gates.cmp(&a.gates).then(a.member.cmp(&b.member)));
+    let mut bins: Vec<Vec<Segment>> = vec![Vec::new(); k];
+    let mut load = vec![0usize; k];
+    for seg in segments {
+        let bin = (0..k).min_by_key(|&b| (load[b], b)).unwrap();
+        load[bin] += seg.gates;
+        bins[bin].push(seg);
+    }
+
+    // Fill empty shards by splitting the largest splittable segment
+    // at the level boundary nearest its gate-count midpoint.
+    while let Some(empty) = load.iter().position(|&l| l == 0) {
+        let mut best: Option<(usize, usize, usize)> = None; // (bin, idx, gates)
+        for (b, bin) in bins.iter().enumerate() {
+            for (i, seg) in bin.iter().enumerate() {
+                let spans = (seg.lo..=seg.hi)
+                    .filter(|&l| mlg[seg.member][l as usize] > 0)
+                    .count();
+                if spans >= 2 && best.map_or(true, |(_, _, g)| seg.gates > g) {
+                    best = Some((b, i, seg.gates));
+                }
+            }
+        }
+        let Some((b, i, _)) = best else { break };
+        let seg = bins[b].remove(i);
+        let half = seg.gates / 2;
+        let (mut split, mut run, mut best_diff) = (seg.lo, 0usize, usize::MAX);
+        // Split after level `l` ∈ [lo, hi): head = [lo, l].
+        for l in seg.lo..seg.hi {
+            run += mlg[seg.member][l as usize];
+            let diff = run.abs_diff(half);
+            if run > 0 && run < seg.gates && diff < best_diff {
+                best_diff = diff;
+                split = l;
+            }
+        }
+        let head_gates: usize =
+            (seg.lo..=split).map(|l| mlg[seg.member][l as usize]).sum();
+        let tail = Segment {
+            member: seg.member,
+            lo: split + 1,
+            hi: seg.hi,
+            gates: seg.gates - head_gates,
+        };
+        let head = Segment { lo: seg.lo, hi: split, gates: head_gates, ..seg };
+        load[b] -= tail.gates;
+        load[empty] += tail.gates;
+        bins[b].push(head);
+        bins[empty].push(tail);
+    }
+
+    // Ownership: LUTs by their segment; level-0 nets (inputs,
+    // constants, DFF q) by the member's head segment — their values
+    // only move at cycle boundaries, so placement only affects cut
+    // classification, not correctness (refinement re-homes them).
+    let mut owner = vec![0u16; nl.len()];
+    let mut head_shard = vec![0u16; n_members];
+    let mut head_lo = vec![u32::MAX; n_members];
+    for (b, bin) in bins.iter().enumerate() {
+        for seg in bin {
+            if seg.lo < head_lo[seg.member] {
+                head_lo[seg.member] = seg.lo;
+                head_shard[seg.member] = b as u16;
+            }
+        }
+    }
+    for (m, fm) in fused.members.iter().enumerate() {
+        for id in fm.net_range.0..fm.net_range.1 {
+            owner[id as usize] = head_shard[m];
+        }
+    }
+    for (b, bin) in bins.iter().enumerate() {
+        for seg in bin {
+            for level in seg.lo..=seg.hi {
+                for &id in lv.level_luts(level) {
+                    if fused.member_of(id) as usize == seg.member {
+                        owner[id as usize] = b as u16;
+                    }
+                }
+            }
+        }
+    }
+    (owner, load)
+}
+
+/// Cut extraction: every cross-shard read, classified by the kind of
+/// the net being read. The total entry count is the cut cost — one
+/// entry per distinct `(net, from, to)` triple, shared across classes.
+fn extract_cuts(nl: &Netlist, owner: &[u16]) -> CutMap {
+    let mut cuts = CutMap::default();
+    let mut seen: HashSet<Cut> = HashSet::new();
+    for (id, node) in nl.nodes() {
+        match node {
+            Node::Lut { ins, .. } => {
+                let to = owner[id as usize];
+                for &i in ins {
+                    let from = owner[i as usize];
+                    if from == to {
+                        continue;
+                    }
+                    let cut = Cut { net: i, from, to };
+                    if !seen.insert(cut) {
+                        continue;
+                    }
+                    match nl.node(i) {
+                        Node::Lut { .. } => cuts.comb_cuts.push(cut),
+                        _ => cuts.reg_cuts.push(cut),
+                    }
+                }
+            }
+            Node::Dff { d, .. } => {
+                let to = owner[id as usize];
+                let from = owner[*d as usize];
+                if from == to {
+                    continue;
+                }
+                let cut = Cut { net: *d, from, to };
+                if !seen.insert(cut) {
+                    continue;
+                }
+                match nl.node(*d) {
+                    Node::Lut { .. } => cuts.dff_cuts.push(cut),
+                    _ => cuts.reg_cuts.push(cut),
+                }
+            }
+            _ => {}
+        }
+    }
+    cuts
+}
+
+/// Cut cost contributed by one net under candidate owner `ownr`: the
+/// number of distinct shards that read it from elsewhere.
+#[inline]
+fn cost_with(row: &[u32], ownr: usize) -> i64 {
+    let mut c = 0i64;
+    for (t, &r) in row.iter().enumerate() {
+        if r > 0 && t != ownr {
+            c += 1;
+        }
+    }
+    c
+}
+
+/// Exact cut-cost delta of moving cluster `cl` from shard `a` to `b`.
+/// Independent per move: a cluster never reads its own outputs
+/// (same-level reads are impossible), so output-owner flips and read
+/// transfers decompose per net.
+fn move_delta(
+    readers: &[u32],
+    owner: &[u16],
+    k: usize,
+    cl: &Cluster,
+    a: usize,
+    b: usize,
+) -> i64 {
+    let mut delta = 0i64;
+    for &o in &cl.luts {
+        let row = &readers[o as usize * k..o as usize * k + k];
+        delta += cost_with(row, b) - cost_with(row, a);
+    }
+    for &(i, m) in &cl.ins {
+        let n = i as usize;
+        let ow = owner[n] as usize;
+        let ra = readers[n * k + a];
+        let rb = readers[n * k + b];
+        debug_assert!(ra >= m, "reader accounting underflow");
+        let old = i64::from(ra > 0 && a != ow) + i64::from(rb > 0 && b != ow);
+        let new = i64::from(ra - m > 0 && a != ow) + i64::from(rb + m > 0 && b != ow);
+        delta += new - old;
+    }
+    delta
+}
+
+fn apply_move(
+    readers: &mut [u32],
+    owner: &mut [u16],
+    k: usize,
+    cl: &Cluster,
+    a: usize,
+    b: usize,
+) {
+    for &o in &cl.luts {
+        owner[o as usize] = b as u16;
+    }
+    for &(i, m) in &cl.ins {
+        let n = i as usize;
+        debug_assert!(readers[n * k + a] >= m);
+        readers[n * k + a] -= m;
+        readers[n * k + b] += m;
+    }
+}
+
+/// The FM-style refinement pass: greedy cluster moves (strictly
+/// cut-reducing, balance-bounded) alternated with level-0 re-homing,
+/// to convergence or the sweep caps. Returns
+/// `(cluster_moves, level0_moves, sweeps)`.
+fn refine_owner(
+    fused: &FusedNetlist,
+    lv: &Levelization,
+    k: usize,
+    owner: &mut [u16],
+    load: &mut [usize],
+) -> (usize, usize, usize) {
+    if k <= 1 {
+        return (0, 0, 0);
+    }
+    let nl = &fused.netlist;
+    let nets = nl.len();
+    let ci = fused.cluster_index(lv);
+
+    // Per-net per-shard read counts: LUT pins (by reading cluster's
+    // shard) plus DFF clock-edge samples (by the DFF q net's shard).
+    let mut readers = vec![0u32; nets * k];
+    let mut cluster_owner: Vec<u16> = Vec::with_capacity(ci.clusters.len());
+    for cl in &ci.clusters {
+        let sh = owner[cl.luts[0] as usize];
+        debug_assert!(
+            cl.luts.iter().all(|&g| owner[g as usize] == sh),
+            "seed plan split a (member, level) cell across shards"
+        );
+        cluster_owner.push(sh);
+        for &(i, m) in &cl.ins {
+            readers[i as usize * k + sh as usize] += m;
+        }
+    }
+    for (id, node) in nl.nodes() {
+        if let Node::Dff { d, .. } = node {
+            readers[*d as usize * k + owner[id as usize] as usize] += 1;
+        }
+    }
+
+    // Balance tolerance: 12.5% over perfect balance, rounded up. Moves
+    // may also land above the cap when they strictly improve balance
+    // (an oversized member can already sit above it).
+    let total: usize = load.iter().sum();
+    let cap = (total * 9 + 8 * k - 1) / (8 * k);
+
+    let mut cluster_moves = 0usize;
+    let mut level0_moves = 0usize;
+    let mut sweeps = 0usize;
+    for _round in 0..MAX_REFINE_ROUNDS {
+        let mut round_moves = 0usize;
+
+        // Cluster sweeps: deterministic cluster order, best strictly
+        // negative delta wins (tie: lowest target shard).
+        for _ in 0..MAX_CLUSTER_SWEEPS {
+            sweeps += 1;
+            let mut moved = false;
+            for (c, cl) in ci.clusters.iter().enumerate() {
+                let a = cluster_owner[c] as usize;
+                if load[a] <= cl.gates {
+                    continue; // the move would empty shard `a`
+                }
+                let mut best: Option<(i64, usize)> = None;
+                for b in 0..k {
+                    if b == a {
+                        continue;
+                    }
+                    if load[b] + cl.gates > cap && load[b] + cl.gates >= load[a] {
+                        continue; // breaks balance without improving it
+                    }
+                    let delta = move_delta(&readers, owner, k, cl, a, b);
+                    if delta < 0 && best.map_or(true, |(d, _)| delta < d) {
+                        best = Some((delta, b));
+                    }
+                }
+                if let Some((_, b)) = best {
+                    apply_move(&mut readers, owner, k, cl, a, b);
+                    load[a] -= cl.gates;
+                    load[b] += cl.gates;
+                    cluster_owner[c] = b as u16;
+                    cluster_moves += 1;
+                    round_moves += 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        // Level-0 re-homing: place inputs/constants/DFF q nets on a
+        // reader shard when that strictly shrinks the cut set. Gate
+        // loads are untouched (level-0 nets carry no LUTs). Moving a
+        // DFF q also moves the clock-edge sample of its d net, so that
+        // delta is part of the decision.
+        for _ in 0..MAX_LEVEL0_SWEEPS {
+            let mut moved = false;
+            for (id, node) in nl.nodes() {
+                let dff_d = match node {
+                    Node::Input(_) | Node::Const(_) => None,
+                    Node::Dff { d, .. } => {
+                        if *d == id {
+                            continue; // degenerate self-loop: nothing to gain
+                        }
+                        Some(*d as usize)
+                    }
+                    _ => continue,
+                };
+                let n = id as usize;
+                let ow = owner[n] as usize;
+                let mut best: Option<(i64, usize)> = None;
+                for s in 0..k {
+                    if s == ow {
+                        continue;
+                    }
+                    let reads_here = readers[n * k + s] > 0;
+                    let d_home = dff_d.map_or(false, |d| owner[d] as usize == s);
+                    if !reads_here && !d_home {
+                        continue; // can only add cost elsewhere
+                    }
+                    let row = &readers[n * k..n * k + k];
+                    let mut delta = cost_with(row, s) - cost_with(row, ow);
+                    if let Some(d) = dff_d {
+                        let od = owner[d] as usize;
+                        let rdo = readers[d * k + ow];
+                        let rds = readers[d * k + s];
+                        debug_assert!(rdo >= 1, "dff sample not in reader accounting");
+                        let old = i64::from(rdo > 0 && ow != od)
+                            + i64::from(rds > 0 && s != od);
+                        let new = i64::from(rdo - 1 > 0 && ow != od)
+                            + i64::from(rds + 1 > 0 && s != od);
+                        delta += new - old;
+                    }
+                    if delta < 0 && best.map_or(true, |(d, _)| delta < d) {
+                        best = Some((delta, s));
+                    }
+                }
+                if let Some((_, s)) = best {
+                    if let Some(d) = dff_d {
+                        readers[d * k + ow] -= 1;
+                        readers[d * k + s] += 1;
+                    }
+                    owner[n] = s as u16;
+                    level0_moves += 1;
+                    round_moves += 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+
+        if round_moves == 0 {
+            break;
+        }
+    }
+    (cluster_moves, level0_moves, sweeps)
 }
 
 #[cfg(test)]
@@ -263,6 +626,19 @@ mod tests {
         nl
     }
 
+    fn assert_cut_consistency(plan: &ShardPlan) {
+        for cut in plan
+            .cuts
+            .comb_cuts
+            .iter()
+            .chain(&plan.cuts.reg_cuts)
+            .chain(&plan.cuts.dff_cuts)
+        {
+            assert_eq!(plan.owner[cut.net as usize], cut.from);
+            assert_ne!(cut.from, cut.to);
+        }
+    }
+
     #[test]
     fn whole_member_partition_has_no_comb_cuts() {
         let a = counter(4);
@@ -275,6 +651,10 @@ mod tests {
         assert!(plan.cuts.reg_cuts.is_empty());
         assert!(plan.cuts.dff_cuts.is_empty());
         assert!(!plan.per_level_sync());
+        assert_eq!(plan.cut_cost(), 0);
+        // A zero-cut seed leaves refinement nothing to do.
+        assert_eq!(plan.refinement.initial_cut_cost, 0);
+        assert_eq!(plan.refinement.cluster_moves, 0);
         // Every shard got work, and loads sum to the total gate count.
         assert!(plan.shard_gates.iter().all(|&g| g > 0));
         assert_eq!(
@@ -304,16 +684,92 @@ mod tests {
         assert!(diff < fused.netlist.count_luts(), "degenerate split");
         // Cut ownership is consistent: each cut's net really is owned
         // by `from` and ≠ `to`.
-        for cut in plan
-            .cuts
-            .comb_cuts
-            .iter()
-            .chain(&plan.cuts.reg_cuts)
-            .chain(&plan.cuts.dff_cuts)
-        {
-            assert_eq!(plan.owner[cut.net as usize], cut.from);
-            assert_ne!(cut.from, cut.to);
+        assert_cut_consistency(&plan);
+    }
+
+    #[test]
+    fn refinement_never_exceeds_seed_cut_cost() {
+        // Oversubscribed fused modules at several K: the refined plan's
+        // cut cost must never exceed the unrefined seed's, the report
+        // must agree with both sides, and balance must hold.
+        let members = [counter(4), counter(9), counter(16)];
+        let refs: Vec<&Netlist> = members.iter().collect();
+        let fused = FusedNetlist::fuse_refs(&refs);
+        let total = fused.netlist.count_luts();
+        for k in [2usize, 4, 6, 8] {
+            let seed = ShardPlan::partition_unrefined(&fused, k);
+            let plan = ShardPlan::partition(&fused, k);
+            assert_eq!(
+                seed.cut_cost(),
+                plan.refinement.initial_cut_cost,
+                "K={k}: report initial vs unrefined plan"
+            );
+            assert!(
+                plan.cut_cost() <= seed.cut_cost(),
+                "K={k}: refined {} > seed {}",
+                plan.cut_cost(),
+                seed.cut_cost()
+            );
+            assert_eq!(plan.cut_cost(), plan.refinement.refined_cut_cost);
+            assert_eq!(plan.refinement.removed(), seed.cut_cost() - plan.cut_cost());
+            assert_cut_consistency(&plan);
+            // Loads: non-empty shards, exact total, tolerance respected
+            // (or no worse than the seed's own worst shard).
+            assert!(plan.shard_gates.iter().all(|&g| g > 0), "K={k} empty shard");
+            assert_eq!(plan.shard_gates.iter().sum::<usize>(), total);
+            let cap = (total * 9 + 8 * k - 1) / (8 * k);
+            let seed_max = *seed.shard_gates.iter().max().unwrap();
+            let max = *plan.shard_gates.iter().max().unwrap();
+            assert!(
+                max <= cap.max(seed_max),
+                "K={k}: refined max load {max} above cap {cap} and seed max {seed_max}"
+            );
         }
+    }
+
+    #[test]
+    fn refinement_finds_the_narrow_boundary() {
+        // A module with a deliberately narrow waist: wide fan-in cone ->
+        // 1-bit bottleneck -> deep fan-out chain. The seed splits at the
+        // gate-count midpoint, which lands one chain gate on the tree's
+        // shard (2 comb cuts); moving that single-gate cluster across is
+        // a strictly improving, balance-legal move, so refinement must
+        // find a strictly smaller cut than the seed.
+        let mut nl = Netlist::new();
+        let ins: Vec<NetId> = (0..16).map(|i| nl.input(format!("x{i}"))).collect();
+        // Reduction tree to one bit (15 LUTs over 4 levels).
+        let mut layer = ins.clone();
+        while layer.len() > 1 {
+            let mut next = Vec::new();
+            for pair in layer.chunks(2) {
+                next.push(nl.xor2(pair[0], pair[1]));
+            }
+            layer = next;
+        }
+        let waist = layer[0];
+        // Fan back out: an inverter then a nand chain re-reading the
+        // waist each step (nand2 never folds here: distinct inputs, no
+        // constants, both sensitive).
+        let mut outs = Vec::new();
+        let mut prev = nl.not(waist);
+        outs.push(prev);
+        for _ in 0..16 {
+            prev = nl.nand2(prev, waist);
+            outs.push(prev);
+        }
+        nl.add_output("y", outs);
+        let fused = FusedNetlist::fuse_refs(&[&nl]);
+        let seed = ShardPlan::partition_unrefined(&fused, 2);
+        let plan = ShardPlan::partition(&fused, 2);
+        assert!(
+            plan.cut_cost() < seed.cut_cost(),
+            "refined {} vs seed {}",
+            plan.cut_cost(),
+            seed.cut_cost()
+        );
+        assert!(plan.refinement.cluster_moves >= 1);
+        assert_cut_consistency(&plan);
+        assert!(plan.shard_gates.iter().all(|&g| g > 0));
     }
 
     #[test]
@@ -325,6 +781,10 @@ mod tests {
         let p2 = ShardPlan::partition(&fused, 4);
         assert_eq!(p1.owner, p2.owner);
         assert_eq!(p1.shard_gates, p2.shard_gates);
+        assert_eq!(p1.refinement, p2.refinement);
+        assert_eq!(p1.cuts.comb_cuts, p2.cuts.comb_cuts);
+        assert_eq!(p1.cuts.reg_cuts, p2.cuts.reg_cuts);
+        assert_eq!(p1.cuts.dff_cuts, p2.cuts.dff_cuts);
     }
 
     #[test]
@@ -334,5 +794,28 @@ mod tests {
         let plan = ShardPlan::partition(&fused, 1);
         assert!(plan.owner.iter().all(|&o| o == 0));
         assert!(plan.cuts.is_empty());
+        assert_eq!(plan.refinement, RefineReport::default());
+    }
+
+    #[test]
+    fn from_owner_matches_partition_extraction() {
+        let a = counter(16);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let plan = ShardPlan::partition(&fused, 2);
+        let rebuilt = ShardPlan::from_owner(&fused, 2, plan.owner.clone());
+        assert_eq!(rebuilt.shard_gates, plan.shard_gates);
+        assert_eq!(rebuilt.cuts.comb_cuts, plan.cuts.comb_cuts);
+        assert_eq!(rebuilt.cuts.reg_cuts, plan.cuts.reg_cuts);
+        assert_eq!(rebuilt.cuts.dff_cuts, plan.cuts.dff_cuts);
+        assert_eq!(rebuilt.cut_cost(), plan.cut_cost());
+        assert_eq!(rebuilt.refinement.cluster_moves, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "owner map does not match")]
+    fn from_owner_rejects_wrong_length() {
+        let a = counter(4);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        ShardPlan::from_owner(&fused, 2, vec![0u16; 3]);
     }
 }

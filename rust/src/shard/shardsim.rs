@@ -5,9 +5,18 @@
 //! parallel session fans each *level* of one netlist across threads,
 //! a shard session fans the *shards* of a fused netlist: worker `w`
 //! owns shard `w`'s packed LUTs for the whole session (the driving
-//! thread doubles as shard 0's worker). Cut-signal values travel
-//! through the shared value array under the phase barrier (see the
-//! exchange protocol in [`crate::shard`]).
+//! thread doubles as shard 0's worker).
+//!
+//! Cut-signal values travel through explicit *mirror words* appended to
+//! the value array — one per distinct exchanged net — and publication
+//! into a mirror is **incremental**: only cut words whose value changed
+//! since the last publication are copied (the dirty-word protocol in
+//! [`crate::shard`]). Register cuts are pumped by the driving thread at
+//! the start of each cycle from per-64-word dirty-summary bitmasks;
+//! combinational cuts are published by their owning shard inside the
+//! producing level's phase, using the evaluation toggle word as a free
+//! dirty bit. [`ExchangeStats`] counts words published and skipped per
+//! shard.
 //!
 //! Phase granularity follows the plan: with no combinational cuts
 //! (whole-member partitions) every worker sweeps all its levels in one
@@ -18,7 +27,7 @@
 //! per-net toggles, and per-member per-lane toggle totals.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::fusion::FusedNetlist;
 use super::partition::ShardPlan;
@@ -40,13 +49,72 @@ fn flush_members<W: LaneWord>(
     *plane_adds = 0;
 }
 
+/// Exchange counters of a [`ShardSim`]: how many cut words each shard
+/// actually copied into its mirror region versus how many publication
+/// opportunities it skipped because the word was clean.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// Per shard: cut words copied into mirrors (dirty at publication).
+    pub published: Vec<u64>,
+    /// Per shard: publication opportunities skipped (word was clean).
+    /// Every owned cut word has exactly one opportunity per cycle, so
+    /// `published[s] + skipped[s] == owner_cut_words[s] × cycles`.
+    pub skipped: Vec<u64>,
+    /// Per shard: cut words (mirror slots) this shard owns.
+    pub owner_cut_words: Vec<u64>,
+    /// Total mirror slots — distinct exchanged nets across all shards.
+    pub cut_words: usize,
+    /// Synchronization phases run (per-level plans: depth per cycle;
+    /// whole-member plans: one per cycle).
+    pub phases: u64,
+}
+
+impl ExchangeStats {
+    pub fn total_published(&self) -> u64 {
+        self.published.iter().sum()
+    }
+
+    pub fn total_skipped(&self) -> u64 {
+        self.skipped.iter().sum()
+    }
+
+    /// Fold another simulator's counters into this one. Both must come
+    /// from the same [`ShardPlan`] (identical cut-word geometry) —
+    /// dispatchers that build a fresh simulator per round use this to
+    /// report exchange totals across a whole batch. Merging into a
+    /// default (empty) accumulator adopts the other's geometry.
+    pub fn merge(&mut self, other: &ExchangeStats) {
+        if self.published.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            self.owner_cut_words, other.owner_cut_words,
+            "merging exchange stats from different shard plans"
+        );
+        for (a, b) in self.published.iter_mut().zip(&other.published) {
+            *a += b;
+        }
+        for (a, b) in self.skipped.iter_mut().zip(&other.skipped) {
+            *a += b;
+        }
+        self.phases += other.phases;
+    }
+}
+
 /// Word-parallel simulation state for a fused netlist partitioned by a
 /// [`ShardPlan`]. Construction packs the combinational plan level-major
-/// and shard-grouped within each level; [`ShardSim::session`] spawns
-/// the shard workers and hands out a [`ShardDrive`].
+/// and shard-grouped within each level — remapping every cross-shard
+/// LUT input to the cut net's mirror word — and panics on a stale plan
+/// (a cross-shard read with no matching cut entry).
+/// [`ShardSim::session`] spawns the shard workers and hands out a
+/// [`ShardDrive`].
 pub struct ShardSim<'n, W: LaneWord = u64> {
     fused: &'n FusedNetlist,
-    /// Current value word of every net.
+    /// Current value word of every net, followed by one mirror word per
+    /// distinct cut net (register cuts first, then combinational cuts).
+    /// Cross-shard readers are remapped to the mirrors at pack time;
+    /// only the owner writes a mirror, and only when the word is dirty.
     vals: Vec<W>,
     /// Per-net toggle counters, summed across lanes.
     toggles: Vec<u64>,
@@ -75,6 +143,29 @@ pub struct ShardSim<'n, W: LaneWord = u64> {
     scratch: Vec<W>,
     per_level: bool,
     workers: usize,
+    /// Register-cut publication list: `(net, mirror, owner)`, in
+    /// dirty-bit order (64 entries per summary word).
+    reg_pub: Vec<(u32, u32, u16)>,
+    /// Dirty-summary words over `reg_pub`: bit b of word w marks entry
+    /// `w*64 + b` as changed since its last publication. A zero summary
+    /// word lets the exchange pump skip 64 cut words with one test.
+    reg_dirty: Vec<u64>,
+    /// Net id → dirty-bit index into `reg_dirty` (`u32::MAX` = not a
+    /// register cut).
+    reg_bit: Vec<u32>,
+    /// Combinational-cut publication list: `(packed LUT slot, mirror)`,
+    /// grouped level-major then by owning shard (`comb_bounds`). The
+    /// slot's toggle word is the dirty bit.
+    comb_pub: Vec<(u32, u32)>,
+    /// Per level, per shard: half-open range into `comb_pub`.
+    comb_bounds: Vec<Vec<(u32, u32)>>,
+    /// Per shard: cut words published (written by the owner: workers
+    /// flush at session stop, the driving thread inline).
+    published: Vec<AtomicU64>,
+    /// Per shard: mirror slots it owns (skip counts derive from this).
+    owner_words: Vec<u64>,
+    /// Synchronization phases run across all sessions.
+    phases: u64,
 }
 
 impl<'n, W: LaneWord> ShardSim<'n, W> {
@@ -97,6 +188,65 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
                 _ => {}
             }
         }
+        // Mirror layout: one slot per distinct cut net, appended after
+        // the real nets — register cuts first (their dirty bits live in
+        // the `reg_dirty` summary words), then combinational cuts
+        // (their dirty bit is the producing slot's toggle word).
+        let nets = nl.len();
+        let mut reg_mirror = vec![u32::MAX; nets];
+        let mut comb_mirror = vec![u32::MAX; nets];
+        let mut reg_bit = vec![u32::MAX; nets];
+        let mut reg_pub: Vec<(u32, u32, u16)> = Vec::new();
+        let mut owner_words = vec![0u64; k];
+        let mut reg_nets: Vec<NetId> = plan.cuts.reg_cuts.iter().map(|c| c.net).collect();
+        reg_nets.sort_unstable();
+        reg_nets.dedup();
+        let mut comb_nets: Vec<NetId> = plan.cuts.comb_cuts.iter().map(|c| c.net).collect();
+        comb_nets.sort_unstable();
+        comb_nets.dedup();
+        let mut mirror_next = nets as u32;
+        for (b, &n) in reg_nets.iter().enumerate() {
+            reg_mirror[n as usize] = mirror_next;
+            reg_bit[n as usize] = b as u32;
+            let owner = plan.owner[n as usize];
+            reg_pub.push((n, mirror_next, owner));
+            owner_words[owner as usize] += 1;
+            mirror_next += 1;
+        }
+        for &n in &comb_nets {
+            comb_mirror[n as usize] = mirror_next;
+            owner_words[plan.owner[n as usize] as usize] += 1;
+            mirror_next += 1;
+        }
+        // Mirrors start in sync with their nets: publication happens on
+        // every change, so a clean dirty bit always means mirror == net.
+        for &n in reg_nets.iter().chain(&comb_nets) {
+            let v = vals[n as usize];
+            vals.push(v);
+        }
+        let reg_dirty = vec![0u64; (reg_nets.len() + 63) / 64];
+
+        // Cross-shard reads go through the cut net's mirror; a read the
+        // plan does not list as a cut has no mirror and cannot be
+        // published, so it would silently see stale values — fail fast.
+        let remap = |reader: u16, i: NetId| -> NetId {
+            let from = plan.owner[i as usize];
+            if from == reader {
+                return i;
+            }
+            let m = match nl.node(i) {
+                Node::Lut { .. } => comb_mirror[i as usize],
+                _ => reg_mirror[i as usize],
+            };
+            assert_ne!(
+                m,
+                u32::MAX,
+                "stale shard plan: net {i} (owner shard {from}) is read by \
+                 shard {reader} with no matching cut entry"
+            );
+            m
+        };
+
         let mut luts = Vec::with_capacity(lv.order.len());
         let mut level_shard_bounds = Vec::with_capacity(lv.depth() as usize);
         let mut level_bounds = Vec::with_capacity(lv.depth() as usize);
@@ -113,9 +263,9 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
                     let Node::Lut { ins, tt } = nl.node(id) else {
                         unreachable!("levelization order contains only LUTs")
                     };
-                    let mut packed = [ins[0]; 4];
+                    let mut packed = [remap(shard, ins[0]); 4];
                     for (j, &i) in ins.iter().enumerate() {
-                        packed[j] = i;
+                        packed[j] = remap(shard, i);
                     }
                     let (sel, inv) = compile_tt(*tt, ins.len());
                     luts.push(PackedWordLut { out: id, ins: packed, sel, inv });
@@ -129,6 +279,26 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
             level_shard_bounds.push(per_shard);
             level_bounds.push((ls, luts.len() as u32));
         }
+
+        // Combinational publication list, level-major then by shard —
+        // the owner walks its slice right after evaluating the level.
+        let mut comb_pub: Vec<(u32, u32)> = Vec::new();
+        let mut comb_bounds = Vec::with_capacity(level_shard_bounds.len());
+        for per_shard in &level_shard_bounds {
+            let mut row = Vec::with_capacity(k);
+            for &(cs, ce) in per_shard {
+                let s = comb_pub.len() as u32;
+                for slot in cs..ce {
+                    let out = luts[slot as usize].out as usize;
+                    if comb_mirror[out] != u32::MAX {
+                        comb_pub.push((slot, comb_mirror[out]));
+                    }
+                }
+                row.push((s, comb_pub.len() as u32));
+            }
+            comb_bounds.push(row);
+        }
+        debug_assert_eq!(comb_pub.len(), comb_nets.len());
         let n_members = fused.member_count();
         let scratch = vec![W::zero(); dffs.len()];
         ShardSim {
@@ -149,6 +319,39 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
             scratch,
             per_level: plan.per_level_sync(),
             workers: k,
+            reg_pub,
+            reg_dirty,
+            reg_bit,
+            comb_pub,
+            comb_bounds,
+            published: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            owner_words,
+            phases: 0,
+        }
+    }
+
+    /// Exchange counters so far (readable between sessions). Skip
+    /// counts are derived: every owned cut word has exactly one
+    /// publication opportunity per cycle — register cuts at the cycle's
+    /// start, combinational cuts at their producing level.
+    pub fn exchange_stats(&self) -> ExchangeStats {
+        let published: Vec<u64> =
+            self.published.iter().map(|p| p.load(Ordering::Relaxed)).collect();
+        let skipped: Vec<u64> = published
+            .iter()
+            .zip(&self.owner_words)
+            .map(|(&p, &w)| {
+                let opportunities = w * self.cycles;
+                debug_assert!(p <= opportunities, "published beyond opportunities");
+                opportunities - p
+            })
+            .collect();
+        ExchangeStats {
+            published,
+            skipped,
+            owner_cut_words: self.owner_words.clone(),
+            cut_words: self.reg_pub.len() + self.comb_pub.len(),
+            phases: self.phases,
         }
     }
 
@@ -202,6 +405,13 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
             shard_levels,
             dffs,
             scratch,
+            reg_pub,
+            reg_dirty,
+            reg_bit,
+            comb_pub,
+            comb_bounds,
+            published,
+            phases,
             ..
         } = self;
         let mut tword = vec![W::zero(); luts.len()];
@@ -214,30 +424,51 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
         let luts: &[PackedWordLut] = luts;
         let lsb: &[Vec<(u32, u32)>] = level_shard_bounds;
         let slv: &[Vec<(u32, u32)>] = shard_levels;
+        let cpb: &[(u32, u32)] = comb_pub;
+        let cbb: &[Vec<(u32, u32)>] = comb_bounds;
+        let rpb: &[(u32, u32, u16)] = reg_pub;
+        let rbit: &[u32] = reg_bit;
+        let published: &[AtomicU64] = published;
         let ctrl_ref = &ctrl;
         std::thread::scope(|s| {
             for w in 1..workers {
                 s.spawn(move || {
                     let mut last = 0usize;
+                    let mut local_pub = 0u64;
                     loop {
                         let p = wait_phase(ctrl_ref, last);
                         if p == PHASE_STOP {
                             break;
                         }
                         last = p;
-                        // Safety: this shard owns its LUTs' out nets and
-                        // tword slots exclusively (the owner map is a
-                        // partition); reads are either same-shard
-                        // earlier levels, cut nets published by the
-                        // previous phase (comb cuts, per-level mode), or
-                        // level-0 nets that only move between phases.
+                        // Safety: this shard owns its LUTs' out nets,
+                        // tword slots, and cut mirrors exclusively (the
+                        // owner map is a partition); reads are either
+                        // same-shard earlier levels, mirrors published
+                        // by an earlier phase, or level-0 nets that only
+                        // move between phases.
                         if per_level {
-                            let (cs, ce) = lsb[(p - 1) % depth][w];
+                            let lvl = (p - 1) % depth;
+                            let (cs, ce) = lsb[lvl][w];
                             unsafe {
                                 eval_chunk(
                                     luts, vals_raw, toggles_raw, tword_raw,
                                     cs as usize, ce as usize,
                                 );
+                            }
+                            // Publish this shard's dirty comb cuts of
+                            // the level before signalling done: the
+                            // toggle word is the dirty bit, and a clean
+                            // word means the mirror already matches.
+                            let (ps, pe) = cbb[lvl][w];
+                            for &(slot, mirror) in &cpb[ps as usize..pe as usize] {
+                                unsafe {
+                                    if !tword_raw.get(slot as usize).is_zero() {
+                                        let out = luts[slot as usize].out as usize;
+                                        vals_raw.set(mirror as usize, vals_raw.get(out));
+                                        local_pub += 1;
+                                    }
+                                }
                             }
                         } else {
                             for &(cs, ce) in &slv[w] {
@@ -251,6 +482,7 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
                         }
                         ctrl_ref.done.fetch_add(1, Ordering::Release);
                     }
+                    published[w].fetch_add(local_pub, Ordering::Relaxed);
                 });
             }
             // Release the workers on return and unwind alike.
@@ -281,6 +513,13 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
                 scratch,
                 per_level,
                 workers,
+                reg_pub: rpb,
+                reg_dirty,
+                reg_bit: rbit,
+                comb_pub: cpb,
+                comb_bounds: cbb,
+                published,
+                phases,
                 ctrl: ctrl_ref,
                 next_phase: 1,
                 expected_done: 0,
@@ -336,6 +575,13 @@ pub struct ShardDrive<'a, W: LaneWord> {
     scratch: &'a mut Vec<W>,
     per_level: bool,
     workers: usize,
+    reg_pub: &'a [(u32, u32, u16)],
+    reg_dirty: &'a mut Vec<u64>,
+    reg_bit: &'a [u32],
+    comb_pub: &'a [(u32, u32)],
+    comb_bounds: &'a [Vec<(u32, u32)>],
+    published: &'a [AtomicU64],
+    phases: &'a mut u64,
     ctrl: &'a ParCtrl,
     next_phase: usize,
     expected_done: usize,
@@ -353,7 +599,63 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
             if !t.is_zero() {
                 self.bump(idx, t);
                 self.vals.set(idx, w);
+                self.mark_reg_dirty(idx);
             }
+        }
+    }
+
+    /// Flag a changed level-0 net for the next register-cut exchange
+    /// (no-op for nets no other shard reads).
+    #[inline]
+    fn mark_reg_dirty(&mut self, idx: usize) {
+        let b = self.reg_bit[idx];
+        if b != u32::MAX {
+            self.reg_dirty[b as usize / 64] |= 1u64 << (b % 64);
+        }
+    }
+
+    /// Register-cut exchange pump (driving thread, outside any phase):
+    /// copy every dirty level-0 cut word into its mirror. Whole
+    /// 64-entry regions are skipped with one summary-word test.
+    fn publish_reg_cuts(&mut self) {
+        for w in 0..self.reg_dirty.len() {
+            let mut summary = self.reg_dirty[w];
+            if summary == 0 {
+                continue;
+            }
+            self.reg_dirty[w] = 0;
+            while summary != 0 {
+                let bit = summary.trailing_zeros() as usize;
+                summary &= summary - 1;
+                let (net, mirror, owner) = self.reg_pub[w * 64 + bit];
+                // Safety: outside a phase; driving thread exclusive.
+                unsafe {
+                    let v = self.vals.get(net as usize);
+                    self.vals.set(mirror as usize, v);
+                }
+                self.published[owner as usize].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Publish shard 0's dirty comb cuts of `lvl` (driving thread,
+    /// between its chunk evaluation and the next phase store). Workers
+    /// run the same loop for their own shard inside their phase.
+    fn publish_comb_cuts(&mut self, lvl: usize) {
+        let (ps, pe) = self.comb_bounds[lvl][0];
+        let mut n = 0u64;
+        for &(slot, mirror) in &self.comb_pub[ps as usize..pe as usize] {
+            // Safety: shard 0 owns these slots and mirrors.
+            unsafe {
+                if !self.tword.get(slot as usize).is_zero() {
+                    let out = self.luts[slot as usize].out as usize;
+                    self.vals.set(mirror as usize, self.vals.get(out));
+                    n += 1;
+                }
+            }
+        }
+        if n > 0 {
+            self.published[0].fetch_add(n, Ordering::Relaxed);
         }
     }
 
@@ -469,10 +771,19 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
         if *self.plane_adds + 2 * self.nets as u64 >= self.flush_threshold {
             self.flush_all();
         }
+        // Exchange dirty level-0 cut words (inputs bound since the last
+        // step, DFF commits from the previous clock edge) before any
+        // phase runs; the first phase store publishes the mirrors to
+        // every worker. Mid-phase the mirrors are frozen by
+        // construction: only the driving thread writes them, and only
+        // here.
+        self.publish_reg_cuts();
         let fan = self.workers > 1;
         if self.per_level {
-            // Per-level phasing: every level is one barrier, publishing
-            // combinational cut values before their readers run.
+            // Per-level phasing: every level is one barrier; each shard
+            // publishes its dirty comb cut words before signalling
+            // done, so readers at later levels see them after the
+            // barrier.
             for lvl in 0..self.level_bounds.len() {
                 if fan {
                     self.ctrl.phase.store(self.next_phase, Ordering::Release);
@@ -487,6 +798,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
                         cs as usize, ce as usize,
                     );
                 }
+                self.publish_comb_cuts(lvl);
                 if fan {
                     self.expected_done += self.workers - 1;
                     self.join();
@@ -494,6 +806,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
                 let (ls, le) = self.level_bounds[lvl];
                 self.account_planes(ls as usize, le as usize);
             }
+            *self.phases += self.level_bounds.len() as u64;
         } else {
             // Whole-member partition: one phase per cycle; every worker
             // sweeps its levels in ascending order.
@@ -503,8 +816,9 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
             }
             for i in 0..self.shard0_levels.len() {
                 let (cs, ce) = self.shard0_levels[i];
-                // Safety: shard 0's chunks; cross-shard reads are
-                // level-0 only (no comb cuts), frozen during the phase.
+                // Safety: shard 0's chunks; cross-shard reads go
+                // through register-cut mirrors, which only the driving
+                // thread writes, outside phases — frozen mid-phase.
                 unsafe {
                     eval_chunk(
                         self.luts, self.vals, self.toggles, self.tword,
@@ -517,9 +831,11 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
                 self.join();
             }
             self.account_planes(0, self.luts.len());
+            *self.phases += 1;
         }
         // Clock edge: sample every D first, then commit (driving
-        // thread; all workers joined).
+        // thread; all workers joined). A committed q that another shard
+        // reads is flagged for the next cycle's register-cut exchange.
         for (i, &(_, d)) in self.dffs.iter().enumerate() {
             // Safety: exclusive outside phases.
             self.scratch[i] = unsafe { self.vals.get(d as usize) };
@@ -533,6 +849,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
                 if !t.is_zero() {
                     self.bump(idx, t);
                     self.vals.set(idx, sampled);
+                    self.mark_reg_dirty(idx);
                 }
             }
         }
@@ -640,6 +957,137 @@ mod tests {
         });
         assert_eq!(sharded.member_net_toggles(0), solo.toggles());
         assert_eq!(sharded.member_lane_toggles(0), solo.lane_total_toggles());
+    }
+
+    /// A feed-forward chain `not(x)`, `nand(prev, x)` × (levels − 1):
+    /// one LUT per level, so an alternating owner map makes every
+    /// level boundary a comb cut.
+    fn chain(levels: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        let x = nl.input_bus("x", 1)[0];
+        let mut prev = nl.not(x);
+        for _ in 1..levels {
+            prev = nl.nand2(prev, x);
+        }
+        nl.add_output("y", vec![prev]);
+        nl
+    }
+
+    /// Alternate shard ownership level by level: net ids in `chain` are
+    /// construction-ordered (x = 0, LUT at level L has id L).
+    fn alternating_plan(fused: &FusedNetlist) -> ShardPlan {
+        let owner: Vec<u16> = (0..fused.netlist.len())
+            .map(|id| match fused.netlist.node(id as NetId) {
+                Node::Lut { .. } => (id % 2) as u16,
+                _ => 0,
+            })
+            .collect();
+        ShardPlan::from_owner(fused, 2, owner)
+    }
+
+    #[test]
+    fn exchange_counters_are_sane() {
+        let members = [counter(4), counter(6), counter(9)];
+        let refs: Vec<&Netlist> = members.iter().collect();
+        let fused = FusedNetlist::fuse_refs(&refs);
+        let plan = ShardPlan::partition(&fused, 4);
+        assert!(plan.per_level_sync(), "K=4 over 3 members must split");
+        let mut sharded = ShardSim::<u64>::new(&fused, &plan);
+        sharded.session(|d| {
+            for _ in 0..40 {
+                d.step();
+            }
+        });
+        let stats = sharded.exchange_stats();
+        assert!(stats.cut_words > 0);
+        assert_eq!(
+            stats.owner_cut_words.iter().sum::<u64>(),
+            stats.cut_words as u64
+        );
+        assert!(stats.total_published() > 0, "a live counter exchanges words");
+        for s in 0..4 {
+            assert_eq!(
+                stats.published[s] + stats.skipped[s],
+                stats.owner_cut_words[s] * 40,
+                "shard {s}: one publication opportunity per owned word per cycle"
+            );
+        }
+        assert!(stats.total_published() <= stats.cut_words as u64 * stats.phases);
+    }
+
+    #[test]
+    fn adversarial_alternating_plan_matches_wordsim() {
+        // Regression for the phase-barrier audit: comb cuts at *every*
+        // level — including the deepest — must be republished before
+        // their same-cycle consumers run, never read stale.
+        let nl = chain(9);
+        let fused = FusedNetlist::fuse_refs(&[&nl]);
+        let plan = alternating_plan(&fused);
+        assert!(plan.per_level_sync());
+        assert!(plan.cuts.comb_cuts.len() >= 8);
+        let mut sharded = ShardSim::<u64>::new(&fused, &plan);
+        let mut solo = WordSim::<u64>::new(&nl);
+        sharded.session(|d| {
+            let mut pat = 0x9e3779b97f4a7c15u64;
+            for _ in 0..40 {
+                d.set_bit_word("s0/x", pat);
+                solo.set_bit_word("x", pat);
+                d.step();
+                solo.step();
+                assert_eq!(d.get_bit_word("s0/y"), solo.get_bit_word("y"));
+                pat = pat.rotate_left(7) ^ 0xD1B5_4A32_D192_ED03;
+            }
+        });
+        assert_eq!(sharded.member_net_toggles(0), solo.toggles());
+        assert!(sharded.exchange_stats().total_published() > 0);
+    }
+
+    #[test]
+    fn quiescent_cut_words_are_skipped() {
+        // Inputs bound once: after the first cycle every cut word is
+        // clean, so the dirty exchange publishes at most one cycle's
+        // worth — strictly fewer than full republication.
+        let nl = chain(8);
+        let fused = FusedNetlist::fuse_refs(&[&nl]);
+        let plan = alternating_plan(&fused);
+        let mut sharded = ShardSim::<u64>::new(&fused, &plan);
+        let mut solo = WordSim::<u64>::new(&nl);
+        sharded.session(|d| {
+            d.set_bit_word("s0/x", 0xFF00_FF00_FF00_FF00);
+            solo.set_bit_word("x", 0xFF00_FF00_FF00_FF00);
+            for _ in 0..10 {
+                d.step();
+                solo.step();
+                assert_eq!(d.get_bit_word("s0/y"), solo.get_bit_word("y"));
+            }
+        });
+        let stats = sharded.exchange_stats();
+        let full = stats.cut_words as u64 * 10;
+        assert!(stats.total_published() > 0);
+        assert_eq!(stats.total_published() + stats.total_skipped(), full);
+        assert!(
+            stats.total_published() <= stats.cut_words as u64,
+            "published {} > one cycle's worth {}",
+            stats.total_published(),
+            stats.cut_words
+        );
+        // Per-level plan: every level is a phase, every cycle.
+        assert_eq!(stats.phases, 8 * 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale shard plan")]
+    fn stale_plan_without_cut_entries_panics() {
+        // A plan whose cut lists were emptied (the frozen-mid-phase
+        // hazard: a cross-shard read with no cut entry would silently
+        // read stale values in whole-member mode).
+        let a = counter(16);
+        let fused = FusedNetlist::fuse_refs(&[&a]);
+        let mut plan = ShardPlan::partition(&fused, 2);
+        assert!(plan.per_level_sync());
+        plan.cuts.comb_cuts.clear();
+        plan.cuts.reg_cuts.clear();
+        let _ = ShardSim::<u64>::new(&fused, &plan);
     }
 
     #[test]

@@ -12,20 +12,20 @@ fn small_config() -> FlowConfig {
 }
 
 /// Changing the lane width re-measures only the power stage, reshapes
-/// its spread (64 → 256 lanes), and leaves the headline figures —
-/// lane 0 carries the same `power_seed` stream at either width —
-/// bit-identical.
+/// its spread (256-lane default → 64 lanes), and leaves the headline
+/// figures — lane 0 carries the same `power_seed` stream at either
+/// width — bit-identical.
 #[test]
 fn lane_width_shapes_power_spread_but_not_headline_figures() {
     let mut flow = Flow::for_system("pendulum", small_config()).unwrap();
+    let p256 = flow.power().unwrap();
+    assert_eq!(p256.spread.lanes, 256, "default width is 256 lanes");
+    assert!(p256.spread.min_tpc <= p256.spread.mean_tpc);
+    assert!(p256.spread.mean_tpc <= p256.spread.max_tpc);
+
+    flow.set_lane_width(LaneWidth::W64);
     let p64 = flow.power().unwrap();
     assert_eq!(p64.spread.lanes, 64);
-    assert!(p64.spread.min_tpc <= p64.spread.mean_tpc);
-    assert!(p64.spread.mean_tpc <= p64.spread.max_tpc);
-
-    flow.set_lane_width(LaneWidth::W256);
-    let p256 = flow.power().unwrap();
-    assert_eq!(p256.spread.lanes, 256);
     assert_eq!(p64.activity.toggles_per_cycle, p256.activity.toggles_per_cycle);
     assert_eq!(p64.activity.cycles, p256.activity.cycles);
     assert_eq!(p64.mw_6mhz, p256.mw_6mhz);
@@ -39,10 +39,10 @@ fn lane_width_shapes_power_spread_but_not_headline_figures() {
         "width change must not invalidate upstream stages: {c:?}"
     );
 
-    // Return trip: the 64-lane artifact is still in the stage LRU.
-    flow.set_lane_width(LaneWidth::W64);
+    // Return trip: the 256-lane artifact is still in the stage LRU.
+    flow.set_lane_width(LaneWidth::W256);
     let back = flow.power().unwrap();
-    assert_eq!(back.spread.lanes, 64);
+    assert_eq!(back.spread.lanes, 256);
     assert_eq!(flow.counts().power, 2, "return trip must hit the LRU");
 }
 

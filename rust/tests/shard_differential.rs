@@ -6,11 +6,15 @@
 //! All corpus systems are fused into one module; each member runs its
 //! own activation schedule (counts deliberately skewed so members
 //! finish at different global steps) with its own per-lane LFSR seeds.
-//! For K ∈ {1, 2, 4} and lanes ∈ {64, 256} every member's report must
-//! be **bit-identical** to its solo run: cycle count, per-lane mean
-//! toggle rates, and the power figures derived from them. Equality is
-//! exact (`==` on the f64s) — the fused driver is a linearization of
-//! the solo activation loop, not an approximation of it.
+//! For K ∈ {1, 2, 4, 8} and lanes ∈ {64, 256, 512} every member's
+//! report must be **bit-identical** to its solo run: cycle count,
+//! per-lane mean toggle rates, and the power figures derived from
+//! them. Equality is exact (`==` on the f64s) — the fused driver is a
+//! linearization of the solo activation loop, not an approximation of
+//! it. Each run also checks the dirty-word exchange counters obey
+//! their accounting identity: one publication opportunity per owned
+//! cut word per cycle, never more publications than cut words × sync
+//! phases.
 
 use dimsynth::flow::{ensure_fused, Flow, FlowConfig};
 use dimsynth::newton::corpus;
@@ -18,7 +22,7 @@ use dimsynth::power::{self, LaneActivityReport, ICE40};
 use dimsynth::rtl::PiModuleDesign;
 use dimsynth::shard::{measure_fused_activity, MemberStim, ShardPlan, ShardSim};
 use dimsynth::stim::LfsrBank;
-use dimsynth::synth::{LaneWord, Netlist, W256};
+use dimsynth::synth::{LaneWord, Netlist, W256, W512};
 
 /// Skewed activation schedule: members finish at different global
 /// steps, exercising the mid-run member-snapshot path.
@@ -62,8 +66,8 @@ fn fused_sharded_matches_solo_impl<W: LaneWord>(shard_counts: &[usize]) {
         mapped.iter().map(|(fp, m)| (*fp, &m.netlist)).collect();
     for &k in shard_counts {
         let art = ensure_fused(None, &members, k);
-        let plan = ShardPlan::partition(&art.fused, k);
-        let mut sim = ShardSim::<W>::new(&art.fused, &plan);
+        let plan = &art.plan;
+        let mut sim = ShardSim::<W>::new(&art.fused, plan);
         let stims: Vec<MemberStim<'_>> = (0..designs.len())
             .map(|m| MemberStim {
                 design: &designs[m],
@@ -90,24 +94,66 @@ fn fused_sharded_matches_solo_impl<W: LaneWord>(shard_counts: &[usize]) {
                 }
             }
         }
+        // Exchange-counter sanity: every owned cut word gets exactly
+        // one publication opportunity per simulated cycle, and the
+        // dirty filter can never publish more than every cut word in
+        // every sync phase.
+        let stats = sim.exchange_stats();
+        let cycles = sim.cycles();
+        assert_eq!(
+            stats.owner_cut_words.iter().sum::<u64>(),
+            stats.cut_words as u64,
+            "K={k}: every cut word has exactly one owner"
+        );
+        for s in 0..plan.shards {
+            assert_eq!(
+                stats.published[s] + stats.skipped[s],
+                stats.owner_cut_words[s] * cycles,
+                "K={k} shard {s}: one publication opportunity per owned word per cycle"
+            );
+        }
+        assert!(
+            stats.total_published() <= stats.cut_words as u64 * stats.phases,
+            "K={k}: published {} exceeds cut words {} x phases {}",
+            stats.total_published(),
+            stats.cut_words,
+            stats.phases
+        );
+        if k > solo.len() {
+            // More shards than members forces member splits, so cut
+            // words must exist and live stimulus must exchange some.
+            assert!(stats.cut_words > 0, "K={k} over {} members must cut", solo.len());
+            assert!(stats.total_published() > 0, "K={k}: live members exchange words");
+        }
         eprintln!(
-            "K={k} x {} lanes: {} members bit-identical to solo ({} comb cuts, {} reg cuts)",
+            "K={k} x {} lanes: {} members bit-identical to solo ({} comb cuts, {} reg cuts, \
+             cut cost {} after -{} refinement, {}/{} cut words published over {} cycles)",
             W::LANES,
             solo.len(),
             plan.cuts.comb_cuts.len(),
-            plan.cuts.reg_cuts.len()
+            plan.cuts.reg_cuts.len(),
+            plan.cut_cost(),
+            plan.refinement.removed(),
+            stats.total_published(),
+            stats.cut_words as u64 * cycles,
+            cycles
         );
     }
 }
 
 #[test]
 fn fused_sharded_matches_solo_64_lanes() {
-    fused_sharded_matches_solo_impl::<u64>(&[1, 2, 4]);
+    fused_sharded_matches_solo_impl::<u64>(&[1, 2, 4, 8]);
 }
 
 #[test]
 fn fused_sharded_matches_solo_256_lanes() {
-    fused_sharded_matches_solo_impl::<W256>(&[1, 2, 4]);
+    fused_sharded_matches_solo_impl::<W256>(&[1, 2, 4, 8]);
+}
+
+#[test]
+fn fused_sharded_matches_solo_512_lanes() {
+    fused_sharded_matches_solo_impl::<W512>(&[1, 2, 4, 8]);
 }
 
 #[test]
