@@ -1,0 +1,191 @@
+//! Pass 3: dimensional re-check of Π units.
+//!
+//! The Π search promises that every emitted group is dimensionless —
+//! that promise is the paper's core claim, and everything downstream
+//! (the fixed-point envelope of pass 2 included) leans on it. This pass
+//! closes the loop *independently*: for every unit it recomputes
+//! `∏ dim(portᵖ)^eᵖ` from the system model's symbol dimensions and the
+//! unit's exponent vector using the [`crate::units::Dimension`] algebra,
+//! and asserts the product is dimensionless (`AN301` otherwise). It also
+//! re-derives the canonical serial schedule
+//! ([`crate::fixedpoint::monomial_ops`]) from the exponents and compares
+//! it with the stored microprogram (`AN302` on mismatch) — the stored
+//! ops, not the exponents, are what lowering turned into gates.
+
+use super::{DiagCode, Diagnostic, Locus};
+use crate::fixedpoint::monomial_ops;
+use crate::newton::SystemModel;
+use crate::rtl::PiModuleDesign;
+use crate::units::Dimension;
+
+/// Run the dimensional re-check. Returns every finding; empty when all
+/// units are provably dimensionless with canonical schedules.
+pub fn check_dimensions(system: &SystemModel, design: &PiModuleDesign) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    for (ui, unit) in design.units.iter().enumerate() {
+        if unit.exponents.len() != design.ports.len() {
+            diags.push(Diagnostic::new(
+                DiagCode::OpsMismatch,
+                Locus::Unit(ui),
+                format!(
+                    "unit {}: exponent vector has {} entries for {} ports",
+                    unit.name,
+                    unit.exponents.len(),
+                    design.ports.len()
+                ),
+            ));
+            continue;
+        }
+
+        let mut dim = Dimension::NONE;
+        let mut resolved = true;
+        for (p, port) in design.ports.iter().enumerate() {
+            match system.symbols.get(port.symbol_index) {
+                Some(sym) => dim = dim * sym.dimension.powi(unit.exponents[p]),
+                None => {
+                    diags.push(Diagnostic::new(
+                        DiagCode::NotDimensionless,
+                        Locus::Unit(ui),
+                        format!(
+                            "unit {}: port {} references symbol index {} \
+                             outside the system model ({} symbols)",
+                            unit.name,
+                            port.name,
+                            port.symbol_index,
+                            system.symbols.len()
+                        ),
+                    ));
+                    resolved = false;
+                }
+            }
+        }
+        if resolved && !dim.is_dimensionless() {
+            diags.push(Diagnostic::new(
+                DiagCode::NotDimensionless,
+                Locus::Unit(ui),
+                format!(
+                    "unit {} ({}) has residual dimension {}",
+                    unit.name,
+                    unit.expr,
+                    dim.formula()
+                ),
+            ));
+        }
+
+        if monomial_ops(&unit.exponents) != unit.ops {
+            diags.push(Diagnostic::new(
+                DiagCode::OpsMismatch,
+                Locus::Unit(ui),
+                format!(
+                    "unit {}: stored microprogram ({} ops) does not match the \
+                     canonical schedule of its exponent vector",
+                    unit.name,
+                    unit.ops.len()
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{MonOp, Q16_15};
+    use crate::newton::{Symbol, SymbolKind};
+    use crate::rtl::{PiUnit, Port};
+    use crate::units::BaseDim;
+
+    fn sym(name: &str, dimension: Dimension) -> Symbol {
+        Symbol { name: name.into(), dimension, kind: SymbolKind::Signal, value: None }
+    }
+
+    /// Pendulum-like toy: t [T], l [L], g [L T^-2]; Π = g t² / l.
+    fn toy(exps: Vec<i64>) -> (SystemModel, PiModuleDesign) {
+        let system = SystemModel {
+            name: "toy".into(),
+            symbols: vec![
+                sym("t", Dimension::base(BaseDim::Time)),
+                sym("l", Dimension::base(BaseDim::Length)),
+                sym(
+                    "g",
+                    Dimension::base(BaseDim::Length) / Dimension::base(BaseDim::Time).powi(2),
+                ),
+            ],
+            relations: Vec::new(),
+        };
+        let ports: Vec<Port> = system
+            .symbols
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Port { name: s.name.clone(), symbol_index: i })
+            .collect();
+        let design = PiModuleDesign {
+            name: "toy".into(),
+            system: "toy".into(),
+            q: Q16_15,
+            ports,
+            units: vec![PiUnit {
+                name: "pi_0".into(),
+                ops: monomial_ops(&exps),
+                expr: "g t^2 / l".into(),
+                exponents: exps,
+            }],
+            target_unit: 0,
+            dropped_symbols: Vec::new(),
+        };
+        (system, design)
+    }
+
+    #[test]
+    fn dimensionless_group_is_clean() {
+        let (sys, d) = toy(vec![2, -1, 1]);
+        assert!(check_dimensions(&sys, &d).is_empty());
+    }
+
+    #[test]
+    fn residual_dimension_reported() {
+        // Drop the 1/l factor: residual dimension L.
+        let (sys, d) = toy(vec![2, 0, 1]);
+        let diags = check_dimensions(&sys, &d);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DiagCode::NotDimensionless);
+        assert!(diags[0].message.contains('L'), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn corrupted_microprogram_reported() {
+        let (sys, mut d) = toy(vec![2, -1, 1]);
+        // Flip a Mul to a Div: exponents still dimensionless, but the
+        // schedule no longer computes the monomial.
+        d.units[0].ops = vec![
+            MonOp::Load(0),
+            MonOp::Div(0),
+            MonOp::Mul(2),
+            MonOp::Div(1),
+        ];
+        let diags = check_dimensions(&sys, &d);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DiagCode::OpsMismatch);
+    }
+
+    #[test]
+    fn out_of_range_symbol_reported() {
+        let (sys, mut d) = toy(vec![2, -1, 1]);
+        d.ports[2].symbol_index = 99;
+        let diags = check_dimensions(&sys, &d);
+        assert!(
+            diags.iter().any(|x| x.code == DiagCode::NotDimensionless),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn exponent_length_mismatch_reported() {
+        let (sys, mut d) = toy(vec![2, -1, 1]);
+        d.units[0].exponents.pop();
+        let diags = check_dimensions(&sys, &d);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DiagCode::OpsMismatch);
+    }
+}

@@ -1,0 +1,413 @@
+//! Multi-pass static verification of compiled artifacts.
+//!
+//! Everything upstream of this module *generates* — Π-search emits
+//! exponent vectors, the RTL builder emits microprograms, techmap emits
+//! packed netlists, the partitioner emits shard plans — and until now
+//! nothing independently *checked* those artifacts: correctness rested
+//! on runtime panics and differential simulation. This module closes the
+//! loop with four static passes, each re-deriving an invariant from
+//! first principles rather than trusting the producer's bookkeeping:
+//!
+//! 1. **Structural netlist lint** ([`netlist_lint`]) — multiple drivers,
+//!    dangling net references, combinational cycles (an explicit DFS
+//!    cycle reporter; never calls [`crate::synth::Netlist::levelize`],
+//!    which asserts on non-topological graphs), and dead gates
+//!    unreachable from any output.
+//! 2. **Q-format interval analysis** ([`qinterval`]) — abstract
+//!    interpretation of each Π unit's microprogram over fixed-point
+//!    magnitude intervals, flagging ops whose result can saturate the
+//!    configured [`crate::fixedpoint::QFormat`].
+//! 3. **Dimensional re-check** ([`dimcheck`]) — independently re-derives
+//!    the [`crate::units::Dimension`] of every Π unit from its port
+//!    dimensions and exponent vector and asserts it is dimensionless,
+//!    and re-derives the canonical microprogram from the exponents.
+//! 4. **Shard-plan pre-flight** ([`plan_preflight`]) — statically proves
+//!    [`crate::shard::CutMap`] completeness against an independent cut
+//!    re-derivation, scatter-index integrity, and refine-report
+//!    consistency, demoting the pack-time stale-plan panic in
+//!    [`crate::shard::shardsim`] to a never-fires backstop.
+//!
+//! # Diagnostics model
+//!
+//! Every finding is a [`Diagnostic`]: the [`Pass`] that produced it, a
+//! [`Severity`], a stable [`DiagCode`] (`AN1xx` structural, `AN2xx`
+//! numeric, `AN3xx` dimensional, `AN4xx` shard plan), a [`Locus`]
+//! naming the net / unit / shard it anchors to, and a human-readable
+//! message. Codes, severities, and the code→pass mapping are stable API:
+//! tests and CI gates match on them, and the flow stage persists them in
+//! the artifact store (`flow::store`, format v5). Error-level findings
+//! are *gating*: the `lint` CLI exits non-zero and
+//! [`crate::coordinator::ServeSet`] refuses to boot the system. Warnings
+//! are advisory unless the caller opts into `--deny warnings`.
+//!
+//! # Pass contracts
+//!
+//! Each pass is a pure function of its inputs and returns all findings
+//! it can prove (no early exit on the first defect, except where a
+//! defect makes further derivation meaningless — a malformed owner map
+//! stops cut re-derivation). On the pristine corpus every pass returns
+//! no diagnostics at all; each defect class injected by
+//! `rust/tests/analyze_verifier.rs` yields its expected code.
+
+use crate::newton::SystemModel;
+use crate::rtl::PiModuleDesign;
+use crate::synth::MappedDesign;
+use std::fmt;
+
+pub mod dimcheck;
+pub mod netlist_lint;
+pub mod plan_preflight;
+pub mod qinterval;
+
+pub use dimcheck::check_dimensions;
+pub use netlist_lint::lint_netlist;
+pub use plan_preflight::preflight_plan;
+pub use qinterval::check_qintervals;
+
+/// How serious a finding is. `Error` findings gate serving and fail the
+/// `lint` CLI; `Warning` findings are advisory (gating only under
+/// `--deny warnings`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// The verifier pass a diagnostic came from.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Pass {
+    NetlistLint,
+    QInterval,
+    DimCheck,
+    PlanPreflight,
+}
+
+impl Pass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::NetlistLint => "netlist-lint",
+            Pass::QInterval => "q-interval",
+            Pass::DimCheck => "dim-check",
+            Pass::PlanPreflight => "plan-preflight",
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Stable diagnostic codes. The numeric value (`AN` + wire id) is
+/// persisted by the artifact store and matched by tests and CI — codes
+/// must never be renumbered, only appended.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DiagCode {
+    /// AN101: a net has more than one driver (an input-bus binding
+    /// clobbers a logic driver, or two bus bits bind the same net).
+    MultiDriver,
+    /// AN102: a LUT input, DFF data input, or interface bus bit
+    /// references a net id outside the netlist.
+    DanglingRef,
+    /// AN103: a combinational cycle through LUT inputs.
+    CombLoop,
+    /// AN104: a LUT or DFF unreachable from any output (warning).
+    DeadGate,
+    /// AN201: an op's result interval can saturate the Q format
+    /// (warning).
+    QSaturation,
+    /// AN202: a divisor's interval includes zero (warning).
+    QDivByZero,
+    /// AN203: a constant symbol exceeds the representable range of the
+    /// Q format (warning).
+    QConstUnrepresentable,
+    /// AN301: a Π unit's re-derived dimension is not dimensionless.
+    NotDimensionless,
+    /// AN302: a Π unit's stored microprogram does not match the
+    /// canonical schedule re-derived from its exponent vector.
+    OpsMismatch,
+    /// AN401: the shard plan's owner map is malformed (wrong length, or
+    /// references a shard >= K).
+    OwnerMapMalformed,
+    /// AN402: a cross-shard read has no matching cut entry.
+    MissingCut,
+    /// AN403: the plan carries a cut entry no cross-shard read needs,
+    /// or a duplicated entry (warning).
+    StaleCut,
+    /// AN404: the fused scatter index is corrupt (member net ranges do
+    /// not tile the fused netlist bijectively).
+    ScatterCorrupt,
+    /// AN405: the plan's actual cut cost disagrees with its
+    /// `RefineReport`.
+    RefineMismatch,
+}
+
+impl DiagCode {
+    /// Every code, in wire-id order.
+    pub const ALL: [DiagCode; 14] = [
+        DiagCode::MultiDriver,
+        DiagCode::DanglingRef,
+        DiagCode::CombLoop,
+        DiagCode::DeadGate,
+        DiagCode::QSaturation,
+        DiagCode::QDivByZero,
+        DiagCode::QConstUnrepresentable,
+        DiagCode::NotDimensionless,
+        DiagCode::OpsMismatch,
+        DiagCode::OwnerMapMalformed,
+        DiagCode::MissingCut,
+        DiagCode::StaleCut,
+        DiagCode::ScatterCorrupt,
+        DiagCode::RefineMismatch,
+    ];
+
+    /// Stable numeric id, persisted by the artifact store.
+    pub fn wire(&self) -> u16 {
+        match self {
+            DiagCode::MultiDriver => 101,
+            DiagCode::DanglingRef => 102,
+            DiagCode::CombLoop => 103,
+            DiagCode::DeadGate => 104,
+            DiagCode::QSaturation => 201,
+            DiagCode::QDivByZero => 202,
+            DiagCode::QConstUnrepresentable => 203,
+            DiagCode::NotDimensionless => 301,
+            DiagCode::OpsMismatch => 302,
+            DiagCode::OwnerMapMalformed => 401,
+            DiagCode::MissingCut => 402,
+            DiagCode::StaleCut => 403,
+            DiagCode::ScatterCorrupt => 404,
+            DiagCode::RefineMismatch => 405,
+        }
+    }
+
+    /// Decode a persisted wire id.
+    pub fn from_wire(wire: u16) -> Option<DiagCode> {
+        DiagCode::ALL.iter().copied().find(|c| c.wire() == wire)
+    }
+
+    /// Printable form, e.g. `AN103`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiagCode::MultiDriver => "AN101",
+            DiagCode::DanglingRef => "AN102",
+            DiagCode::CombLoop => "AN103",
+            DiagCode::DeadGate => "AN104",
+            DiagCode::QSaturation => "AN201",
+            DiagCode::QDivByZero => "AN202",
+            DiagCode::QConstUnrepresentable => "AN203",
+            DiagCode::NotDimensionless => "AN301",
+            DiagCode::OpsMismatch => "AN302",
+            DiagCode::OwnerMapMalformed => "AN401",
+            DiagCode::MissingCut => "AN402",
+            DiagCode::StaleCut => "AN403",
+            DiagCode::ScatterCorrupt => "AN404",
+            DiagCode::RefineMismatch => "AN405",
+        }
+    }
+
+    /// The fixed severity of this code.
+    pub fn severity(&self) -> Severity {
+        match self {
+            DiagCode::DeadGate
+            | DiagCode::QSaturation
+            | DiagCode::QDivByZero
+            | DiagCode::QConstUnrepresentable
+            | DiagCode::StaleCut => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// The pass that emits this code.
+    pub fn pass(&self) -> Pass {
+        match self.wire() / 100 {
+            1 => Pass::NetlistLint,
+            2 => Pass::QInterval,
+            3 => Pass::DimCheck,
+            _ => Pass::PlanPreflight,
+        }
+    }
+}
+
+impl fmt::Display for DiagCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// What a diagnostic anchors to.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Locus {
+    /// The whole module / system.
+    Module,
+    /// A net of the (fused or per-system) netlist.
+    Net(u32),
+    /// A Π unit, by index into `PiModuleDesign::units`.
+    Unit(usize),
+    /// A shard of a `ShardPlan`.
+    Shard(u16),
+}
+
+impl fmt::Display for Locus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Locus::Module => write!(f, "module"),
+            Locus::Net(n) => write!(f, "net {n}"),
+            Locus::Unit(u) => write!(f, "unit {u}"),
+            Locus::Shard(s) => write!(f, "shard {s}"),
+        }
+    }
+}
+
+/// One verifier finding.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Diagnostic {
+    /// Pass that produced the finding (derived from `code`).
+    pub pass: Pass,
+    /// Severity (derived from `code`).
+    pub severity: Severity,
+    /// Stable code, e.g. [`DiagCode::CombLoop`].
+    pub code: DiagCode,
+    /// Net / unit / shard the finding anchors to.
+    pub locus: Locus,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic; pass and severity follow from the code.
+    pub fn new(code: DiagCode, locus: Locus, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            pass: code.pass(),
+            severity: code.severity(),
+            code,
+            locus,
+            message: message.into(),
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {}: {}: {}",
+            self.severity,
+            self.code.as_str(),
+            self.pass,
+            self.locus,
+            self.message
+        )
+    }
+}
+
+/// The verifier's output for one system: every finding of passes 1–3
+/// (the shard-plan pre-flight runs separately, per fused plan). Persisted
+/// as the `analyze` stage artifact.
+#[derive(Clone, PartialEq, Debug)]
+pub struct AnalysisReport {
+    /// System identifier the report describes.
+    pub system: String,
+    /// All findings, in pass order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// Number of error-level findings.
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-level findings.
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// Whether any finding gates serving.
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    /// Whether the report is entirely clean (no findings at any level).
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Run passes 1–3 over one system's compiled artifacts.
+pub fn analyze_design(
+    system: &SystemModel,
+    design: &PiModuleDesign,
+    mapped: &MappedDesign,
+) -> AnalysisReport {
+    let mut diagnostics = lint_netlist(&mapped.netlist);
+    diagnostics.extend(check_qintervals(system, design));
+    diagnostics.extend(check_dimensions(system, design));
+    AnalysisReport { system: design.system.clone(), diagnostics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_ids_roundtrip_and_are_stable() {
+        let expect: Vec<u16> =
+            vec![101, 102, 103, 104, 201, 202, 203, 301, 302, 401, 402, 403, 404, 405];
+        let got: Vec<u16> = DiagCode::ALL.iter().map(|c| c.wire()).collect();
+        assert_eq!(got, expect);
+        for c in DiagCode::ALL {
+            assert_eq!(DiagCode::from_wire(c.wire()), Some(c));
+            assert_eq!(c.as_str(), format!("AN{}", c.wire()));
+        }
+        assert_eq!(DiagCode::from_wire(0), None);
+        assert_eq!(DiagCode::from_wire(999), None);
+    }
+
+    #[test]
+    fn severities_and_passes_follow_codes() {
+        assert_eq!(DiagCode::CombLoop.severity(), Severity::Error);
+        assert_eq!(DiagCode::DeadGate.severity(), Severity::Warning);
+        assert_eq!(DiagCode::QSaturation.severity(), Severity::Warning);
+        assert_eq!(DiagCode::MissingCut.severity(), Severity::Error);
+        assert_eq!(DiagCode::StaleCut.severity(), Severity::Warning);
+        assert_eq!(DiagCode::CombLoop.pass(), Pass::NetlistLint);
+        assert_eq!(DiagCode::QDivByZero.pass(), Pass::QInterval);
+        assert_eq!(DiagCode::NotDimensionless.pass(), Pass::DimCheck);
+        assert_eq!(DiagCode::RefineMismatch.pass(), Pass::PlanPreflight);
+        assert!(Severity::Warning < Severity::Error);
+    }
+
+    #[test]
+    fn diagnostic_display_reads_well() {
+        let d = Diagnostic::new(DiagCode::CombLoop, Locus::Net(7), "cycle 5 -> 7 -> 5");
+        assert_eq!(d.pass, Pass::NetlistLint);
+        assert_eq!(d.severity, Severity::Error);
+        assert_eq!(d.to_string(), "error[AN103] netlist-lint: net 7: cycle 5 -> 7 -> 5");
+    }
+
+    #[test]
+    fn report_counts() {
+        let r = AnalysisReport {
+            system: "toy".into(),
+            diagnostics: vec![
+                Diagnostic::new(DiagCode::DeadGate, Locus::Net(1), "w"),
+                Diagnostic::new(DiagCode::CombLoop, Locus::Net(2), "e"),
+            ],
+        };
+        assert_eq!(r.warnings(), 1);
+        assert_eq!(r.errors(), 1);
+        assert!(r.has_errors());
+        assert!(!r.is_clean());
+    }
+}

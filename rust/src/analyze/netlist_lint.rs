@@ -1,0 +1,349 @@
+//! Pass 1: structural netlist lint.
+//!
+//! Four checks over a packed [`Netlist`], none of which trust the
+//! producer's bookkeeping:
+//!
+//! * **AN102 dangling references** — every LUT input, DFF data input,
+//!   and interface bus bit must name a net inside the netlist. Checked
+//!   first; the later checks skip out-of-range edges so one defect does
+//!   not cascade into panics.
+//! * **AN101 multiple drivers** — in the sea-of-nodes representation a
+//!   node *is* its net, so multi-drive can only enter through the
+//!   interface maps: an input-bus bit bound to a node that is not a
+//!   primary input (the binding would clobber a logic driver), or two
+//!   bus bits bound to the same net.
+//! * **AN103 combinational cycles** — an explicit iterative DFS cycle
+//!   reporter over LUT→input edges. DFF data edges are excluded: the
+//!   register boundary legally breaks cycles (a DFF's `d` may point
+//!   forward). This intentionally does not call
+//!   [`Netlist::levelize`], which `assert!`s topological order instead
+//!   of reporting the offending cycle.
+//! * **AN104 dead gates** (warning) — LUTs/DFFs unreachable from any
+//!   output, mirroring the liveness rule of [`crate::synth::opt::dce`]
+//!   (outputs are roots; reachability traces LUT inputs and DFF data;
+//!   primary inputs and constants are interface, not gates). Pipeline
+//!   netlists end in a DCE sweep, so any dead gate here means a
+//!   producer bug.
+
+use super::{DiagCode, Diagnostic, Locus};
+use crate::synth::{NetId, Netlist, Node};
+use std::collections::HashMap;
+
+fn node_kind(node: &Node) -> &'static str {
+    match node {
+        Node::Const(_) => "a constant",
+        Node::Input(_) => "a primary input",
+        Node::Lut { .. } => "a LUT",
+        Node::Dff { .. } => "a DFF",
+    }
+}
+
+/// Run the structural lint. Returns every finding; empty on a clean
+/// netlist.
+pub fn lint_netlist(nl: &Netlist) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n = nl.len();
+    let in_range = |id: NetId| (id as usize) < n;
+
+    // AN102: dangling references, before anything dereferences an edge.
+    for (id, node) in nl.nodes() {
+        match node {
+            Node::Lut { ins, .. } => {
+                for &i in ins {
+                    if !in_range(i) {
+                        diags.push(Diagnostic::new(
+                            DiagCode::DanglingRef,
+                            Locus::Net(id),
+                            format!("LUT {id} reads dangling net {i} (netlist has {n} nets)"),
+                        ));
+                    }
+                }
+            }
+            Node::Dff { d, .. } => {
+                if !in_range(*d) {
+                    diags.push(Diagnostic::new(
+                        DiagCode::DanglingRef,
+                        Locus::Net(id),
+                        format!("DFF {id} samples dangling net {d} (netlist has {n} nets)"),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    for (name, bits) in nl.outputs() {
+        for (k, &b) in bits.iter().enumerate() {
+            if !in_range(b) {
+                diags.push(Diagnostic::new(
+                    DiagCode::DanglingRef,
+                    Locus::Net(b),
+                    format!("output bus {name} bit {k} references dangling net {b}"),
+                ));
+            }
+        }
+    }
+    for (name, bits) in &nl.input_buses {
+        for (k, &b) in bits.iter().enumerate() {
+            if !in_range(b) {
+                diags.push(Diagnostic::new(
+                    DiagCode::DanglingRef,
+                    Locus::Net(b),
+                    format!("input bus {name} bit {k} references dangling net {b}"),
+                ));
+            }
+        }
+    }
+
+    // AN101: multiple drivers through the input-bus binding map.
+    let mut bound: HashMap<NetId, (&str, usize)> = HashMap::new();
+    for (name, bits) in &nl.input_buses {
+        for (k, &b) in bits.iter().enumerate() {
+            if !in_range(b) {
+                continue;
+            }
+            if let Some(&(prev_name, prev_k)) = bound.get(&b) {
+                diags.push(Diagnostic::new(
+                    DiagCode::MultiDriver,
+                    Locus::Net(b),
+                    format!(
+                        "net {b} is bound by input bus {name} bit {k} and \
+                         by input bus {prev_name} bit {prev_k}"
+                    ),
+                ));
+                continue;
+            }
+            bound.insert(b, (name.as_str(), k));
+            if !matches!(nl.node(b), Node::Input(_)) {
+                diags.push(Diagnostic::new(
+                    DiagCode::MultiDriver,
+                    Locus::Net(b),
+                    format!(
+                        "input bus {name} bit {k} binds net {b}, which is also driven by {}",
+                        node_kind(nl.node(b))
+                    ),
+                ));
+            }
+        }
+    }
+
+    // AN103: combinational cycles. Iterative DFS with an explicit gray
+    // path so the offending cycle is reported, not just detected.
+    let mut color = vec![0u8; n]; // 0 = white, 1 = gray, 2 = black
+    let mut path: Vec<NetId> = Vec::new();
+    let mut stack: Vec<(NetId, usize)> = Vec::new();
+    for (root, _) in nl.nodes() {
+        if color[root as usize] != 0 {
+            continue;
+        }
+        color[root as usize] = 1;
+        path.push(root);
+        stack.push((root, 0));
+        while let Some(&(id, ci)) = stack.last() {
+            let ins: &[NetId] = match nl.node(id) {
+                Node::Lut { ins, .. } => ins,
+                _ => &[],
+            };
+            if ci < ins.len() {
+                stack.last_mut().expect("nonempty DFS stack").1 += 1;
+                let child = ins[ci];
+                if !in_range(child) {
+                    continue; // dangling: already reported as AN102
+                }
+                match color[child as usize] {
+                    0 => {
+                        color[child as usize] = 1;
+                        path.push(child);
+                        stack.push((child, 0));
+                    }
+                    1 => {
+                        // Back edge: the cycle is the gray path from the
+                        // first occurrence of `child` down to `id`.
+                        let pos = path
+                            .iter()
+                            .position(|&p| p == child)
+                            .expect("gray net must be on the DFS path");
+                        let mut cycle: Vec<String> =
+                            path[pos..].iter().map(|p| p.to_string()).collect();
+                        cycle.push(child.to_string());
+                        diags.push(Diagnostic::new(
+                            DiagCode::CombLoop,
+                            Locus::Net(child),
+                            format!("combinational cycle through nets {}", cycle.join(" -> ")),
+                        ));
+                    }
+                    _ => {}
+                }
+            } else {
+                stack.pop();
+                color[id as usize] = 2;
+                path.pop();
+            }
+        }
+    }
+
+    // AN104: dead gates — backward reachability from the outputs,
+    // mirroring `opt::dce` liveness exactly.
+    let mut live = vec![false; n];
+    let mut work: Vec<NetId> = Vec::new();
+    for (_, bits) in nl.outputs() {
+        for &b in bits {
+            if in_range(b) && !live[b as usize] {
+                live[b as usize] = true;
+                work.push(b);
+            }
+        }
+    }
+    while let Some(id) = work.pop() {
+        match nl.node(id) {
+            Node::Lut { ins, .. } => {
+                for &i in ins {
+                    if in_range(i) && !live[i as usize] {
+                        live[i as usize] = true;
+                        work.push(i);
+                    }
+                }
+            }
+            Node::Dff { d, .. } => {
+                if in_range(*d) && !live[*d as usize] {
+                    live[*d as usize] = true;
+                    work.push(*d);
+                }
+            }
+            _ => {}
+        }
+    }
+    for (id, node) in nl.nodes() {
+        let kind = match node {
+            Node::Lut { .. } => "LUT",
+            Node::Dff { .. } => "DFF",
+            _ => continue,
+        };
+        if !live[id as usize] {
+            diags.push(Diagnostic::new(
+                DiagCode::DeadGate,
+                Locus::Net(id),
+                format!("{kind} {id} is unreachable from any output"),
+            ));
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::opt::dce;
+
+    fn codes(diags: &[Diagnostic]) -> Vec<DiagCode> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    fn clean_netlist() -> Netlist {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 2);
+        let b = nl.input_bus("b", 2);
+        let x = nl.xor2(a[0], b[0]);
+        let y = nl.and2(a[1], b[1]);
+        let q = nl.dff(0, false);
+        let z = nl.or2(y, q);
+        nl.set_dff_input(q, x);
+        nl.add_output("y", vec![x, z]);
+        nl
+    }
+
+    #[test]
+    fn clean_netlist_is_clean() {
+        let (nl, _) = dce(&clean_netlist());
+        assert!(lint_netlist(&nl).is_empty());
+    }
+
+    #[test]
+    fn dff_feedback_is_not_a_comb_loop() {
+        // q <= not q: legal cycle through the register boundary.
+        let mut nl = Netlist::new();
+        let q = nl.dff(0, false);
+        let nq = nl.not(q);
+        nl.set_dff_input(q, nq);
+        nl.add_output("q", vec![q]);
+        assert!(lint_netlist(&nl).is_empty());
+    }
+
+    #[test]
+    fn comb_loop_reported_with_path() {
+        // Two LUTs reading each other: built via from_parts, which does
+        // no validation (the builder API cannot express this).
+        let nodes = vec![
+            Node::Input("a".into()),
+            Node::Lut { ins: vec![0, 2], tt: 0b0110 },
+            Node::Lut { ins: vec![1], tt: 0b01 },
+        ];
+        let nl = Netlist::from_parts(
+            nodes,
+            vec![("y".into(), vec![1])],
+            vec![("a".into(), vec![0])],
+        );
+        let diags = lint_netlist(&nl);
+        let loops: Vec<_> =
+            diags.iter().filter(|d| d.code == DiagCode::CombLoop).collect();
+        assert_eq!(loops.len(), 1, "{diags:?}");
+        assert!(loops[0].message.contains("1 -> 2 -> 1"), "{}", loops[0].message);
+    }
+
+    #[test]
+    fn double_driven_net_reported() {
+        // Bus bit bound to a LUT output (a logic driver).
+        let nodes = vec![
+            Node::Input("a".into()),
+            Node::Lut { ins: vec![0], tt: 0b01 },
+        ];
+        let nl = Netlist::from_parts(
+            nodes,
+            vec![("y".into(), vec![1])],
+            vec![("a".into(), vec![0]), ("b".into(), vec![1])],
+        );
+        let diags = lint_netlist(&nl);
+        assert_eq!(codes(&diags), vec![DiagCode::MultiDriver], "{diags:?}");
+        assert!(diags[0].message.contains("driven by a LUT"), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn duplicate_bus_binding_reported() {
+        let nodes = vec![Node::Input("a".into())];
+        let nl = Netlist::from_parts(
+            nodes,
+            vec![],
+            vec![("a".into(), vec![0]), ("b".into(), vec![0])],
+        );
+        let diags = lint_netlist(&nl);
+        assert_eq!(codes(&diags), vec![DiagCode::MultiDriver], "{diags:?}");
+    }
+
+    #[test]
+    fn dangling_refs_reported_without_panicking() {
+        let nodes = vec![
+            Node::Input("a".into()),
+            Node::Lut { ins: vec![0, 99], tt: 0b0110 },
+            Node::Dff { d: 77, init: false },
+        ];
+        let nl = Netlist::from_parts(
+            nodes,
+            vec![("y".into(), vec![1, 55])],
+            vec![("a".into(), vec![0])],
+        );
+        let diags = lint_netlist(&nl);
+        let dangling = diags.iter().filter(|d| d.code == DiagCode::DanglingRef).count();
+        assert_eq!(dangling, 3, "{diags:?}");
+    }
+
+    #[test]
+    fn dead_gate_warned() {
+        let mut nl = clean_netlist(); // not DCE'd: or2/and2 feed z, but add a floater
+        let a = nl.input_bus("c", 1);
+        let _dead = nl.not(a[0]);
+        let diags = lint_netlist(&nl);
+        assert!(!diags.is_empty());
+        assert!(diags.iter().all(|d| d.code == DiagCode::DeadGate), "{diags:?}");
+        assert!(diags.iter().all(|d| d.severity == super::super::Severity::Warning));
+    }
+}

@@ -1,0 +1,346 @@
+//! Pass 4: shard-plan pre-flight.
+//!
+//! [`crate::shard::shardsim::ShardSim`] packs a fused netlist against a
+//! [`ShardPlan`] and, until this pass existed, the only defense against
+//! a stale or corrupted plan was a pack-time panic (any cross-shard
+//! read with no matching cut entry). This pass proves the same
+//! invariants *statically*, before anything packs or serves, demoting
+//! that panic to a never-fires backstop:
+//!
+//! * **AN401** — the owner map must have one entry per fused net, each
+//!   naming a shard `< K`. A malformed owner map stops the pass (cut
+//!   re-derivation against it would be meaningless).
+//! * **AN402 / AN403** — the plan's [`crate::shard::CutMap`] is compared
+//!   against an *independent* re-derivation of the required cut set
+//!   from the netlist structure and the owner map (mirroring the
+//!   partitioner's extraction rule: first-seen classification of each
+//!   distinct `(net, from, to)` crossing, LUT reads and DFF d-samples).
+//!   A required cut missing from the plan is an error (`AN402`: the
+//!   exchange would never publish a word a reader depends on); an entry
+//!   no crossing needs, a duplicated entry, or an entry filed under the
+//!   wrong synchronization class is a stale-plan warning (`AN403`,
+//!   paired with `AN402` when the entry also belongs elsewhere).
+//! * **AN404** — the fused scatter index must be a bijection: the
+//!   member net ranges must tile `[0, len)` exactly. Checked over the
+//!   raw `(netlist length, members)` data because
+//!   [`crate::shard::FusedNetlist::from_parts`] `assert!`s the same
+//!   property instead of reporting it.
+//! * **AN405** — the plan's actual cut cost must equal its
+//!   [`crate::shard::RefineReport::refined_cut_cost`]; a mismatch means
+//!   the plan and its provenance report were separated (e.g. a corrupt
+//!   or hand-edited artifact).
+
+use super::{DiagCode, Diagnostic, Locus};
+use crate::shard::{Cut, FusedMember, ShardPlan};
+use crate::synth::{NetId, Netlist, Node};
+use std::collections::HashSet;
+
+/// Statically verify a shard plan against the fused netlist and member
+/// index it was derived from. Returns every finding; empty for a plan
+/// the sharded evaluator can pack and run safely.
+pub fn preflight_plan(
+    nl: &Netlist,
+    members: &[FusedMember],
+    plan: &ShardPlan,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n = nl.len();
+
+    // AN404: scatter-index bijection over the raw member ranges.
+    let mut cursor: NetId = 0;
+    let mut tiled = true;
+    for (m, member) in members.iter().enumerate() {
+        let (lo, hi) = member.net_range;
+        if hi < lo {
+            diags.push(Diagnostic::new(
+                DiagCode::ScatterCorrupt,
+                Locus::Module,
+                format!("member {m} ({}) has inverted net range [{lo}, {hi})", member.prefix),
+            ));
+            tiled = false;
+        } else if lo != cursor {
+            diags.push(Diagnostic::new(
+                DiagCode::ScatterCorrupt,
+                Locus::Module,
+                format!(
+                    "member {m} ({}) starts at net {lo}, expected {cursor}: \
+                     member ranges do not tile the fused netlist",
+                    member.prefix
+                ),
+            ));
+            tiled = false;
+        }
+        cursor = cursor.max(hi);
+    }
+    if tiled && cursor as usize != n {
+        diags.push(Diagnostic::new(
+            DiagCode::ScatterCorrupt,
+            Locus::Module,
+            format!("member ranges cover {cursor} of {n} fused nets"),
+        ));
+    }
+
+    // AN401: owner-map shape. Malformed ⇒ stop (nothing below is
+    // derivable from a bad owner map).
+    if plan.owner.len() != n {
+        diags.push(Diagnostic::new(
+            DiagCode::OwnerMapMalformed,
+            Locus::Module,
+            format!("owner map has {} entries for {n} fused nets", plan.owner.len()),
+        ));
+        return diags;
+    }
+    let mut owner_ok = true;
+    for (i, &o) in plan.owner.iter().enumerate() {
+        if (o as usize) >= plan.shards {
+            diags.push(Diagnostic::new(
+                DiagCode::OwnerMapMalformed,
+                Locus::Net(i as NetId),
+                format!("net {i} is owned by shard {o}, but the plan has {} shards", plan.shards),
+            ));
+            owner_ok = false;
+        }
+    }
+    if !owner_ok {
+        return diags;
+    }
+
+    // Independent cut re-derivation, mirroring the partitioner's
+    // extraction rule: one shared first-seen set across classes.
+    let owner = &plan.owner;
+    let mut seen: HashSet<Cut> = HashSet::new();
+    let mut want_comb: Vec<Cut> = Vec::new();
+    let mut want_reg: Vec<Cut> = Vec::new();
+    let mut want_dff: Vec<Cut> = Vec::new();
+    for (id, node) in nl.nodes() {
+        match node {
+            Node::Lut { ins, .. } => {
+                let to = owner[id as usize];
+                for &i in ins {
+                    let Some(&from) = owner.get(i as usize) else {
+                        continue; // dangling ref: netlist lint territory
+                    };
+                    if from == to {
+                        continue;
+                    }
+                    let cut = Cut { net: i, from, to };
+                    if !seen.insert(cut) {
+                        continue;
+                    }
+                    match nl.node(i) {
+                        Node::Lut { .. } => want_comb.push(cut),
+                        _ => want_reg.push(cut),
+                    }
+                }
+            }
+            Node::Dff { d, .. } => {
+                let to = owner[id as usize];
+                let Some(&from) = owner.get(*d as usize) else {
+                    continue;
+                };
+                if from == to {
+                    continue;
+                }
+                let cut = Cut { net: *d, from, to };
+                if !seen.insert(cut) {
+                    continue;
+                }
+                match nl.node(*d) {
+                    Node::Lut { .. } => want_dff.push(cut),
+                    _ => want_reg.push(cut),
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // AN402 / AN403 per synchronization class.
+    compare_class(&mut diags, "comb_cuts", &want_comb, &plan.cuts.comb_cuts);
+    compare_class(&mut diags, "reg_cuts", &want_reg, &plan.cuts.reg_cuts);
+    compare_class(&mut diags, "dff_cuts", &want_dff, &plan.cuts.dff_cuts);
+
+    // AN405: refine-report consistency.
+    let cost = plan.cut_cost();
+    if cost != plan.refinement.refined_cut_cost {
+        diags.push(Diagnostic::new(
+            DiagCode::RefineMismatch,
+            Locus::Module,
+            format!(
+                "plan carries {cost} cut entries but its refine report claims {}",
+                plan.refinement.refined_cut_cost
+            ),
+        ));
+    }
+
+    diags
+}
+
+fn compare_class(diags: &mut Vec<Diagnostic>, class: &str, want: &[Cut], have: &[Cut]) {
+    let want_set: HashSet<Cut> = want.iter().copied().collect();
+    let have_set: HashSet<Cut> = have.iter().copied().collect();
+    for cut in want {
+        if !have_set.contains(cut) {
+            diags.push(Diagnostic::new(
+                DiagCode::MissingCut,
+                Locus::Net(cut.net),
+                format!(
+                    "net {} (owner shard {}) is read by shard {} but has no \
+                     {class} entry — the exchange would never publish it",
+                    cut.net, cut.from, cut.to
+                ),
+            ));
+        }
+    }
+    for cut in have {
+        if !want_set.contains(cut) {
+            diags.push(Diagnostic::new(
+                DiagCode::StaleCut,
+                Locus::Net(cut.net),
+                format!(
+                    "{class} entry (net {}, shard {} -> {}) matches no \
+                     cross-shard read",
+                    cut.net, cut.from, cut.to
+                ),
+            ));
+        }
+    }
+    if have.len() != have_set.len() {
+        diags.push(Diagnostic::new(
+            DiagCode::StaleCut,
+            Locus::Module,
+            format!(
+                "{class} carries {} duplicate entr{}",
+                have.len() - have_set.len(),
+                if have.len() - have_set.len() == 1 { "y" } else { "ies" }
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::FusedNetlist;
+
+    fn codes(diags: &[Diagnostic]) -> Vec<DiagCode> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    /// Two small members with real cross-shard traffic once split.
+    fn fused_pair() -> FusedNetlist {
+        let mut a = Netlist::new();
+        let ai = a.input_bus("x", 2);
+        let a1 = a.xor2(ai[0], ai[1]);
+        let a2 = a.and2(a1, ai[0]);
+        a.add_output("y", vec![a2]);
+
+        let mut b = Netlist::new();
+        let bi = b.input_bus("x", 2);
+        let q = b.dff(0, false);
+        let b1 = b.or2(bi[0], q);
+        let b2 = b.xor2(b1, bi[1]);
+        b.set_dff_input(q, b2);
+        b.add_output("y", vec![b2]);
+
+        FusedNetlist::fuse_refs(&[&a, &b])
+    }
+
+    /// A 2-shard plan that owns each member's nets on its own shard —
+    /// except member b's level-0 nets, moved to shard 0 to create
+    /// cross-shard register reads and a cross-shard DFF d-sample.
+    fn cross_plan(fused: &FusedNetlist) -> ShardPlan {
+        let mut owner: Vec<u16> = (0..fused.netlist.len())
+            .map(|i| fused.member_of(i as NetId))
+            .collect();
+        // Move every member-b level-0 net (inputs + DFF) to shard 0 so
+        // member b's LUTs read cross-shard.
+        let (blo, bhi) = fused.members[1].net_range;
+        for i in blo..bhi {
+            if matches!(
+                fused.netlist.node(i),
+                Node::Input(_) | Node::Dff { .. } | Node::Const(_)
+            ) {
+                owner[i as usize] = 0;
+            }
+        }
+        ShardPlan::from_owner(fused, 2, owner)
+    }
+
+    #[test]
+    fn pristine_plans_pass_at_all_k() {
+        let fused = fused_pair();
+        for k in [1usize, 2, 3] {
+            let plan = ShardPlan::partition(&fused, k);
+            let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+            assert!(diags.is_empty(), "K={k}: {diags:?}");
+        }
+        let plan = cross_plan(&fused);
+        assert!(plan.cut_cost() > 0, "fixture should have cross-shard traffic");
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn dropped_cut_entry_is_an_error() {
+        let fused = fused_pair();
+        let mut plan = cross_plan(&fused);
+        assert!(!plan.cuts.reg_cuts.is_empty());
+        let dropped = plan.cuts.reg_cuts.pop().unwrap();
+        // Keep the refine report consistent so only the drop is visible.
+        plan.refinement.refined_cut_cost = plan.cut_cost();
+        plan.refinement.initial_cut_cost = plan.cut_cost();
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert_eq!(codes(&diags), vec![DiagCode::MissingCut], "{diags:?}");
+        assert!(diags[0].message.contains(&format!("net {}", dropped.net)));
+    }
+
+    #[test]
+    fn stale_and_duplicate_entries_warn() {
+        let fused = fused_pair();
+        let mut plan = cross_plan(&fused);
+        let extra = Cut { net: 0, from: 1, to: 0 };
+        plan.cuts.reg_cuts.push(extra);
+        let dup = plan.cuts.reg_cuts[0];
+        plan.cuts.reg_cuts.push(dup);
+        plan.refinement.refined_cut_cost = plan.cut_cost();
+        plan.refinement.initial_cut_cost = plan.cut_cost();
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert!(!diags.is_empty());
+        assert!(diags.iter().all(|d| d.code == DiagCode::StaleCut), "{diags:?}");
+    }
+
+    #[test]
+    fn corrupt_scatter_index_is_an_error() {
+        let fused = fused_pair();
+        let plan = ShardPlan::partition(&fused, 2);
+        let mut members = fused.members.clone();
+        members[1].net_range.0 += 1; // gap between members
+        let diags = preflight_plan(&fused.netlist, &members, &plan);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::ScatterCorrupt),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn malformed_owner_map_is_an_error() {
+        let fused = fused_pair();
+        let mut plan = ShardPlan::partition(&fused, 2);
+        plan.owner[3] = 9; // shard >= K
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert_eq!(codes(&diags), vec![DiagCode::OwnerMapMalformed], "{diags:?}");
+
+        plan.owner.truncate(2);
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert_eq!(codes(&diags), vec![DiagCode::OwnerMapMalformed], "{diags:?}");
+    }
+
+    #[test]
+    fn refine_report_mismatch_is_an_error() {
+        let fused = fused_pair();
+        let mut plan = cross_plan(&fused);
+        plan.refinement.refined_cut_cost += 1;
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert_eq!(codes(&diags), vec![DiagCode::RefineMismatch], "{diags:?}");
+    }
+}

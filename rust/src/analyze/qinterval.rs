@@ -1,0 +1,277 @@
+//! Pass 2: Q-format interval analysis of Π microprograms.
+//!
+//! Abstract interpretation of each unit's serial op schedule
+//! ([`crate::fixedpoint::monomial_ops`]) over *magnitude intervals*
+//! `[lo, hi]` of raw fixed-point values (`0 <= lo <= hi`). Port
+//! intervals derive from the Newton system model: constants are point
+//! intervals at `|value|`; sensor signals get the normalized envelope
+//! `[`[`SIGNAL_LO`]`, `[`SIGNAL_HI`]`]` (the paper's premise is that
+//! signals are scaled near unity before entering the datapath —
+//! dimensionless Π products of near-unity inputs are themselves near
+//! unity, which is what makes the narrow Q format viable at all).
+//!
+//! The transfer functions are the *actual* fixed-point ops: the
+//! magnitude bound of a product/quotient is computed with the same
+//! rounding as [`crate::fixedpoint::mul`] / [`crate::fixedpoint::div`],
+//! via the pre-saturation wide forms [`crate::fixedpoint::mul_wide`] /
+//! [`crate::fixedpoint::div_wide`] — an op is flagged (`AN201`) exactly
+//! when its wide result exceeds `max_raw`, i.e. when the hardware would
+//! saturate. Signed operands round toward `+inf`, which can shift a
+//! mixed-sign magnitude by one LSB relative to these nonnegative
+//! envelopes; the bounds are advisory (all pass-2 findings are
+//! warnings), so that LSB does not affect gating.
+
+use super::{DiagCode, Diagnostic, Locus};
+use crate::fixedpoint::{div, div_wide, mul, mul_wide, MonOp};
+use crate::newton::{SymbolKind, SystemModel};
+use crate::rtl::PiModuleDesign;
+
+/// Lower magnitude of the assumed sensor-signal envelope (in units of
+/// the format's 1.0).
+pub const SIGNAL_LO: f64 = 0.5;
+/// Upper magnitude of the assumed sensor-signal envelope.
+pub const SIGNAL_HI: f64 = 2.0;
+
+/// A raw-magnitude interval: `0 <= lo <= hi`, in raw Q-format units.
+#[derive(Clone, Copy, Debug)]
+struct Interval {
+    lo: i64,
+    hi: i64,
+}
+
+fn port_name(design: &PiModuleDesign, p: usize) -> &str {
+    design.ports.get(p).map_or("?", |port| port.name.as_str())
+}
+
+/// Run the interval analysis. Returns every finding; empty when no op
+/// of any unit can saturate under the signal envelope.
+pub fn check_qintervals(system: &SystemModel, design: &PiModuleDesign) -> Vec<Diagnostic> {
+    let q = design.q;
+    let mut diags = Vec::new();
+
+    // Port intervals from the system model.
+    let mut ivs: Vec<Interval> = Vec::with_capacity(design.ports.len());
+    for port in &design.ports {
+        let iv = match system.symbols.get(port.symbol_index) {
+            Some(sym) if sym.kind == SymbolKind::Constant => {
+                let v = sym.value.unwrap_or(1.0).abs();
+                if v > q.max_value() {
+                    diags.push(Diagnostic::new(
+                        DiagCode::QConstUnrepresentable,
+                        Locus::Module,
+                        format!(
+                            "constant {} = {v} exceeds the {q} range (max {:.6})",
+                            sym.name,
+                            q.max_value()
+                        ),
+                    ));
+                    Interval { lo: q.max_raw(), hi: q.max_raw() }
+                } else {
+                    let raw = q.from_f64(v);
+                    Interval { lo: raw, hi: raw }
+                }
+            }
+            // Signals — and unresolvable symbol indices, which the
+            // dimensional re-check reports as errors — get the envelope.
+            _ => Interval { lo: q.from_f64(SIGNAL_LO), hi: q.from_f64(SIGNAL_HI) },
+        };
+        ivs.push(iv);
+    }
+
+    for (ui, unit) in design.units.iter().enumerate() {
+        let mut acc: Option<Interval> = None;
+        for (oi, op) in unit.ops.iter().enumerate() {
+            match *op {
+                MonOp::Load(p) => acc = ivs.get(p).copied(),
+                MonOp::LoadOne => acc = Some(Interval { lo: q.one(), hi: q.one() }),
+                MonOp::Mul(p) => {
+                    let (Some(a), Some(&b)) = (acc, ivs.get(p)) else {
+                        // Malformed schedule; pass 3 reports AN302.
+                        acc = None;
+                        continue;
+                    };
+                    let lo = mul(q, a.lo, b.lo);
+                    let hi_wide = mul_wide(q, a.hi, b.hi);
+                    let hi = if hi_wide > q.max_raw() as i128 {
+                        diags.push(Diagnostic::new(
+                            DiagCode::QSaturation,
+                            Locus::Unit(ui),
+                            format!(
+                                "unit {}: op {oi} (mul by port {}) can saturate {q}: \
+                                 |result| may reach {:.3}",
+                                unit.name,
+                                port_name(design, p),
+                                hi_wide as f64 / q.scale() as f64
+                            ),
+                        ));
+                        q.max_raw()
+                    } else {
+                        hi_wide as i64
+                    };
+                    acc = Some(Interval { lo, hi });
+                }
+                MonOp::Div(p) => {
+                    let (Some(a), Some(&b)) = (acc, ivs.get(p)) else {
+                        acc = None;
+                        continue;
+                    };
+                    if b.lo == 0 {
+                        diags.push(Diagnostic::new(
+                            DiagCode::QDivByZero,
+                            Locus::Unit(ui),
+                            format!(
+                                "unit {}: op {oi} divides by port {} whose magnitude \
+                                 interval includes zero (divide-by-zero saturates)",
+                                unit.name,
+                                port_name(design, p)
+                            ),
+                        ));
+                        acc = Some(Interval { lo: 0, hi: q.max_raw() });
+                        continue;
+                    }
+                    let hi_wide = div_wide(q, a.hi, b.lo);
+                    let hi = if hi_wide > q.max_raw() as i128 {
+                        diags.push(Diagnostic::new(
+                            DiagCode::QSaturation,
+                            Locus::Unit(ui),
+                            format!(
+                                "unit {}: op {oi} (div by port {}) can saturate {q}: \
+                                 |result| may reach {:.3}",
+                                unit.name,
+                                port_name(design, p),
+                                hi_wide as f64 / q.scale() as f64
+                            ),
+                        ));
+                        q.max_raw()
+                    } else {
+                        hi_wide as i64
+                    };
+                    let lo = div(q, a.lo, b.hi);
+                    acc = Some(Interval { lo, hi });
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::{monomial_ops, QFormat, Q16_15};
+    use crate::rtl::{PiUnit, Port};
+    use crate::units::Dimension;
+
+    fn sym(name: &str, kind: SymbolKind, value: Option<f64>) -> crate::newton::Symbol {
+        crate::newton::Symbol {
+            name: name.into(),
+            dimension: Dimension::NONE,
+            kind,
+            value,
+        }
+    }
+
+    fn toy(q: QFormat, symbols: Vec<crate::newton::Symbol>, exps: Vec<i64>) -> (SystemModel, PiModuleDesign) {
+        let system = SystemModel {
+            name: "toy".into(),
+            symbols,
+            relations: Vec::new(),
+        };
+        let ports: Vec<Port> = system
+            .symbols
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Port { name: s.name.clone(), symbol_index: i })
+            .collect();
+        let design = PiModuleDesign {
+            name: "toy".into(),
+            system: "toy".into(),
+            q,
+            ports,
+            units: vec![PiUnit {
+                name: "pi_0".into(),
+                ops: monomial_ops(&exps),
+                expr: String::new(),
+                exponents: exps,
+            }],
+            target_unit: 0,
+            dropped_symbols: Vec::new(),
+        };
+        (system, design)
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<DiagCode> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn balanced_signals_are_clean() {
+        let (sys, d) = toy(
+            Q16_15,
+            vec![
+                sym("a", SymbolKind::Signal, None),
+                sym("b", SymbolKind::Signal, None),
+                sym("g", SymbolKind::Constant, Some(9.80665)),
+            ],
+            vec![2, -1, 1],
+        );
+        assert!(check_qintervals(&sys, &d).is_empty());
+    }
+
+    #[test]
+    fn narrow_format_saturation_flagged() {
+        // Q3.2: max value 7.75. a^3 with a up to 2.0 stays at 8 > 7.75.
+        let (sys, d) = toy(
+            QFormat::new(3, 2),
+            vec![sym("a", SymbolKind::Signal, None)],
+            vec![3],
+        );
+        let diags = check_qintervals(&sys, &d);
+        assert_eq!(codes(&diags), vec![DiagCode::QSaturation], "{diags:?}");
+    }
+
+    #[test]
+    fn unrepresentable_constant_flagged() {
+        // g = 9.80665 does not fit Q3.2 (max 7.75).
+        let (sys, d) = toy(
+            QFormat::new(3, 2),
+            vec![
+                sym("a", SymbolKind::Signal, None),
+                sym("g", SymbolKind::Constant, Some(9.80665)),
+            ],
+            vec![1, -1],
+        );
+        let diags = check_qintervals(&sys, &d);
+        assert!(
+            codes(&diags).contains(&DiagCode::QConstUnrepresentable),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn zero_constant_divisor_flagged() {
+        let (sys, d) = toy(
+            Q16_15,
+            vec![
+                sym("a", SymbolKind::Signal, None),
+                sym("z", SymbolKind::Constant, Some(0.0)),
+            ],
+            vec![1, -1],
+        );
+        let diags = check_qintervals(&sys, &d);
+        assert_eq!(codes(&diags), vec![DiagCode::QDivByZero], "{diags:?}");
+    }
+
+    #[test]
+    fn division_blowup_flagged() {
+        // 1 / a^9 with a down to 0.5 reaches 512 > 255.99 in Q8.7.
+        let (sys, d) = toy(
+            QFormat::new(8, 7),
+            vec![sym("a", SymbolKind::Signal, None)],
+            vec![-9],
+        );
+        let diags = check_qintervals(&sys, &d);
+        assert!(codes(&diags).contains(&DiagCode::QSaturation), "{diags:?}");
+    }
+}

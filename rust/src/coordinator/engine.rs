@@ -1067,7 +1067,7 @@ mod tests {
                 ServeSet::boot(&["pendulum", "spring_mass"], FlowConfig::default(), None)
                     .unwrap();
             if fuse {
-                set.enable_fusion(2);
+                set.enable_fusion(2).unwrap();
             }
             let engine = TrafficEngine::start(
                 &set,

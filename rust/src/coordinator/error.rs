@@ -24,6 +24,8 @@ pub const CODE_TENANT_UNKNOWN: u8 = 3;
 pub const CODE_WORKER_PANICKED: u8 = 4;
 /// Wire status code of [`ServeError::Protocol`].
 pub const CODE_PROTOCOL: u8 = 5;
+/// Wire status code of [`ServeError::AnalysisRejected`].
+pub const CODE_ANALYSIS: u8 = 6;
 
 /// A typed refusal or failure on the serving path. Every submitted
 /// request is answered with exactly one `Ok` response or exactly one of
@@ -47,6 +49,11 @@ pub enum ServeError {
     /// The request could not be decoded or failed validation (bad
     /// frame, wrong port count, non-finite frequency, ...).
     Protocol { detail: String },
+    /// The static verifier ([`crate::analyze`]) found error-level
+    /// defects in this system's compiled artifacts, so the serve set
+    /// refused to boot it — serving a netlist with a combinational loop
+    /// or a non-dimensionless Π unit would answer requests with garbage.
+    AnalysisRejected { system: String, errors: usize },
 }
 
 impl ServeError {
@@ -58,6 +65,7 @@ impl ServeError {
             ServeError::TenantUnknown { .. } => CODE_TENANT_UNKNOWN,
             ServeError::WorkerPanicked { .. } => CODE_WORKER_PANICKED,
             ServeError::Protocol { .. } => CODE_PROTOCOL,
+            ServeError::AnalysisRejected { .. } => CODE_ANALYSIS,
         }
     }
 
@@ -69,6 +77,7 @@ impl ServeError {
             ServeError::TenantUnknown { .. } => "tenant_unknown",
             ServeError::WorkerPanicked { .. } => "worker_panicked",
             ServeError::Protocol { .. } => "protocol",
+            ServeError::AnalysisRejected { .. } => "analysis_rejected",
         }
     }
 }
@@ -83,6 +92,11 @@ impl fmt::Display for ServeError {
             ServeError::TenantUnknown { tenant } => write!(f, "unknown tenant `{tenant}`"),
             ServeError::WorkerPanicked { reason } => write!(f, "worker panicked: {reason}"),
             ServeError::Protocol { detail } => write!(f, "protocol error: {detail}"),
+            ServeError::AnalysisRejected { system, errors } => write!(
+                f,
+                "system `{system}` rejected by static analysis ({errors} error-level \
+                 finding(s); run `dimsynth lint {system}` for the report)"
+            ),
         }
     }
 }
@@ -105,9 +119,10 @@ mod tests {
             ServeError::TenantUnknown { tenant: "x".into() },
             ServeError::WorkerPanicked { reason: "r".into() },
             ServeError::Protocol { detail: "d".into() },
+            ServeError::AnalysisRejected { system: "s".into(), errors: 2 },
         ];
         let codes: Vec<u8> = all.iter().map(ServeError::code).collect();
-        assert_eq!(codes, vec![1, 2, 3, 4, 5]);
+        assert_eq!(codes, vec![1, 2, 3, 4, 5, 6]);
         for e in &all {
             assert_ne!(e.code(), CODE_OK, "{e}");
             assert!(!e.kind().is_empty());

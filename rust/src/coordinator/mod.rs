@@ -218,7 +218,7 @@ pub fn serve_listen(
     let mut set = ServeSet::boot(systems, config, store)?;
     if listen_config.fuse_shards > 0 {
         // Before the engine starts: it snapshots the fusion state.
-        set.enable_fusion(listen_config.fuse_shards);
+        set.enable_fusion(listen_config.fuse_shards)?;
     }
     let boot_time = t0.elapsed();
     let counts = set.total_counts();
@@ -323,7 +323,7 @@ pub fn serve_multi(
     let mut set = ServeSet::boot(systems, config, store)?;
     if fuse_shards > 0 {
         // Before the batcher spawns: it snapshots the fusion state.
-        set.enable_fusion(fuse_shards);
+        set.enable_fusion(fuse_shards)?;
     }
     let boot = t0.elapsed();
     let counts = set.total_counts();

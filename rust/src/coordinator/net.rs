@@ -42,6 +42,7 @@
 //! shed:             retry_after_ms:u32
 //! deadline:         (empty)
 //! unknown/panic/protocol: len:u32  utf8-detail[len]
+//! analysis:         len:u32  utf8-system[len]  errors:u32
 //! ```
 //!
 //! One frame originates server-side without a request: a connection
@@ -90,8 +91,8 @@ use std::time::{Duration, Instant};
 use super::admission::TokenBucket;
 use super::engine::{RequestPayload, TrafficEngine, TrafficReply, TrafficResponse};
 use super::error::{
-    ServeError, CODE_DEADLINE, CODE_OK, CODE_PROTOCOL, CODE_SHED, CODE_TENANT_UNKNOWN,
-    CODE_WORKER_PANICKED,
+    ServeError, CODE_ANALYSIS, CODE_DEADLINE, CODE_OK, CODE_PROTOCOL, CODE_SHED,
+    CODE_TENANT_UNKNOWN, CODE_WORKER_PANICKED,
 };
 use super::metrics::{LatencyHistogram, TrafficReport};
 use super::pipeline::{PowerEstimate, PowerRequest};
@@ -364,6 +365,11 @@ fn encode_response(reply: &TrafficReply) -> (u8, Vec<u8>) {
                     out.extend_from_slice(&(detail.len() as u32).to_le_bytes());
                     out.extend_from_slice(detail.as_bytes());
                 }
+                ServeError::AnalysisRejected { system, errors } => {
+                    out.extend_from_slice(&(system.len() as u32).to_le_bytes());
+                    out.extend_from_slice(system.as_bytes());
+                    out.extend_from_slice(&(*errors as u32).to_le_bytes());
+                }
             }
         }
     }
@@ -423,6 +429,11 @@ fn decode_response(wire_kind: u8, payload: &[u8]) -> anyhow::Result<NetResponse>
             CODE_PROTOCOL => {
                 let n = c.u32()? as usize;
                 Err(ServeError::Protocol { detail: c.utf8(n)? })
+            }
+            CODE_ANALYSIS => {
+                let n = c.u32()? as usize;
+                let system = c.utf8(n)?;
+                Err(ServeError::AnalysisRejected { system, errors: c.u32()? as usize })
             }
             other => return Err(format!("unknown status code {other}")),
         };
@@ -1054,6 +1065,10 @@ impl DriverReport {
             Err(ServeError::WorkerPanicked { .. }) => self.panicked += 1,
             Err(ServeError::Protocol { .. }) => self.protocol += 1,
             Err(ServeError::TenantUnknown { .. }) => self.tenant_unknown += 1,
+            // Boot-time refusal: a booted server never answers traffic
+            // with it, so a driver seeing one indicates a protocol-level
+            // disagreement.
+            Err(ServeError::AnalysisRejected { .. }) => self.protocol += 1,
         }
     }
 }
@@ -1275,6 +1290,10 @@ mod tests {
             (KIND_PI, Err(ServeError::TenantUnknown { tenant: "ghost".into() })),
             (KIND_PI, Err(ServeError::WorkerPanicked { reason: "injected".into() })),
             (KIND_POWER, Err(ServeError::Protocol { detail: "bad frame".into() })),
+            (
+                KIND_PI,
+                Err(ServeError::AnalysisRejected { system: "pendulum".into(), errors: 3 }),
+            ),
         ];
         for (i, (kind, result)) in cases.into_iter().enumerate() {
             let reply = TrafficReply { id: pack_id(kind, 1000 + i as u32), result };

@@ -28,10 +28,12 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::batcher::{self, BatchOutcome, QueueGauge};
+use super::error::ServeError;
 use super::pipeline::{
     estimate_power_requests_fused, estimate_power_requests_grouped, PowerEstimate, PowerRequest,
     SystemPowerRequest,
 };
+use crate::analyze::{preflight_plan, Severity};
 use crate::flow::{ensure_fused, ArtifactStore, Flow, FlowConfig, FlowSet, StageCounts};
 use crate::rtl::PiModuleDesign;
 use crate::shard::ShardPlan;
@@ -159,6 +161,12 @@ impl ServeSet {
     /// per system. Systems compile in parallel across all cores; the
     /// store is shared by every session, so a restarted serve process
     /// boots with zero recomputes ([`ServeSet::total_counts`]).
+    ///
+    /// Boot is gated by the static verifier: every system's memoized
+    /// [`Flow::analysis`] report must be free of error-level findings,
+    /// or boot refuses that system with a typed
+    /// [`ServeError::AnalysisRejected`] — a netlist with a combinational
+    /// loop or a non-dimensionless Π unit would serve garbage answers.
     pub fn boot(
         systems: &[&str],
         config: FlowConfig,
@@ -177,7 +185,17 @@ impl ServeSet {
             set = set.with_store(Arc::clone(store));
         }
         let handles = set
-            .run_parallel(SystemHandle::from_flow)
+            .run_parallel(|flow| {
+                let report = flow.analysis()?;
+                if report.has_errors() {
+                    return Err(ServeError::AnalysisRejected {
+                        system: flow.id().to_string(),
+                        errors: report.errors(),
+                    }
+                    .into());
+                }
+                SystemHandle::from_flow(flow)
+            })
             .into_iter()
             .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(ServeSet {
@@ -233,7 +251,14 @@ impl ServeSet {
     /// to the grouped dispatch. The fused netlist is cached in the
     /// attached store under the member netlist fingerprints + K, so a
     /// warm restart skips re-fusing.
-    pub fn enable_fusion(&mut self, shards: usize) {
+    ///
+    /// The fused artifact is pre-flighted by the static verifier
+    /// ([`preflight_plan`]) before it is installed: an incomplete cut
+    /// map, a corrupted scatter index, or a plan whose refine report
+    /// disagrees with its real cut cost refuses with a typed
+    /// [`ServeError::AnalysisRejected`] instead of arming the sharded
+    /// simulator with a plan that would trip its pack-time backstop.
+    pub fn enable_fusion(&mut self, shards: usize) -> anyhow::Result<()> {
         let members: Vec<(u64, &Netlist)> = self
             .handles
             .iter()
@@ -243,8 +268,25 @@ impl ServeSet {
         // warm-loaded with the fused netlist; the store key includes the
         // partitioner version, so a stale-algorithm plan cannot serve).
         let artifact = ensure_fused(self.store.as_deref(), &members, shards);
+        let findings = preflight_plan(
+            &artifact.fused.netlist,
+            &artifact.fused.members,
+            &artifact.plan,
+        );
+        let errors = findings.iter().filter(|d| d.severity == Severity::Error).count();
+        if errors > 0 {
+            for d in &findings {
+                eprintln!("{d}");
+            }
+            return Err(ServeError::AnalysisRejected {
+                system: format!("fused({} members, {} shards)", members.len(), shards),
+                errors,
+            }
+            .into());
+        }
         let plan = artifact.plan.clone();
         self.fused = Some(Arc::new(FusedPlan { artifact, plan }));
+        Ok(())
     }
 
     /// The fused evaluation state, when fusion is enabled.
@@ -542,7 +584,7 @@ mod tests {
         assert_eq!(h.system(), "pendulum");
         assert_eq!(h.design().system, "pendulum");
         assert!(h.mapped().lut4_cells > 0);
-        assert_eq!(h.lane_width(), LaneWidth::W64);
+        assert_eq!(h.lane_width(), LaneWidth::W256);
         // Handles are views of the same warm state, not copies per
         // caller.
         let again = set.handle("pendulum").unwrap();
@@ -614,7 +656,7 @@ mod tests {
             .collect();
         let grouped = set.estimate_power_flood(&requests, 1).unwrap();
         assert!(set.fusion().is_none());
-        set.enable_fusion(2);
+        set.enable_fusion(2).unwrap();
         let fp = set.fusion().expect("fusion enabled");
         assert_eq!(fp.artifact.fused.member_count(), 2);
         assert_eq!(fp.plan.shards, 2);
@@ -631,6 +673,42 @@ mod tests {
         assert_eq!(est.mw, grouped[1].mw);
         let stats = batcher.shutdown();
         assert_eq!(stats.requests, 1);
+    }
+
+    /// The serve-boot analysis gate, end to end through the store: a
+    /// stored analysis report carrying an error-level finding must make
+    /// [`ServeSet::boot`] refuse that system with the typed
+    /// `AnalysisRejected` message instead of serving it.
+    #[test]
+    fn boot_refuses_a_system_with_error_level_findings() {
+        use crate::analyze::{AnalysisReport, DiagCode, Diagnostic, Locus};
+        let dir = std::env::temp_dir()
+            .join(format!("dimsynth-serve-gate-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+        // The gate reads the memoized analyze artifact, so poisoning the
+        // store entry under the real stage fingerprint exercises the
+        // exact load path a warm production boot takes.
+        let fp = Flow::for_system("pendulum", FlowConfig::default())
+            .unwrap()
+            .analysis_fingerprint();
+        let poisoned = AnalysisReport {
+            system: "pendulum".into(),
+            diagnostics: vec![Diagnostic::new(
+                DiagCode::CombLoop,
+                Locus::Net(3),
+                "cycle 3 -> 3 (injected)",
+            )],
+        };
+        store.save(fp, &poisoned).unwrap();
+        let err = ServeSet::boot(&["pendulum"], FlowConfig::default(), Some(store))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("rejected by static analysis"), "{err}");
+        assert!(err.contains("pendulum"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        // The pristine corpus system boots clean without the poison.
+        assert!(ServeSet::boot(&["pendulum"], FlowConfig::default(), None).is_ok());
     }
 
     #[test]

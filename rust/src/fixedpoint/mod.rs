@@ -6,5 +6,5 @@
 pub mod ops;
 pub mod qformat;
 
-pub use ops::{div, eval_monomial, monomial_ops, mul, MonOp};
+pub use ops::{div, div_wide, eval_monomial, monomial_ops, mul, mul_wide, MonOp};
 pub use qformat::{QFormat, Q16_15};

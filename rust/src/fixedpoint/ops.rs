@@ -21,14 +21,24 @@
 
 use super::qformat::QFormat;
 
-/// Fixed-point multiply: `round((a*b) / 2^f)`, saturating.
-pub fn mul(q: QFormat, a: i64, b: i64) -> i64 {
+/// The pre-saturation wide product: `round((a*b) / 2^f)` as an `i128`.
+///
+/// This is [`mul`] without the final saturation — the exact value the
+/// hardware's rounding adder produces before the width clamp. The static
+/// range analysis ([`crate::analyze::qinterval`]) uses it to detect
+/// saturation (`mul_wide(..) > q.max_raw()`) instead of observing the
+/// already-clamped result.
+pub fn mul_wide(q: QFormat, a: i64, b: i64) -> i128 {
     let prod = (a as i128) * (b as i128);
     let round = 1i128 << (q.frac_bits - 1);
     // Arithmetic shift right after adding the rounding constant: this is
     // round-half-up (toward +inf at .5), identical to the RTL rounding adder.
-    let shifted = (prod + round) >> q.frac_bits;
-    q.saturate(shifted)
+    (prod + round) >> q.frac_bits
+}
+
+/// Fixed-point multiply: `round((a*b) / 2^f)`, saturating.
+pub fn mul(q: QFormat, a: i64, b: i64) -> i64 {
+    q.saturate(mul_wide(q, a, b))
 }
 
 /// Fixed-point divide: `trunc((a << f) / b)` in sign-magnitude, saturating.
@@ -40,11 +50,24 @@ pub fn div(q: QFormat, a: i64, b: i64) -> i64 {
     if b == 0 {
         return if a >= 0 { q.max_raw() } else { q.min_raw() };
     }
+    q.saturate(div_wide(q, a, b))
+}
+
+/// The pre-saturation wide quotient: `trunc((a << f) / b)` as an `i128`.
+///
+/// [`div`] without the zero-divisor special case and the final
+/// saturation; the caller must guarantee `b != 0`. Used by the static
+/// range analysis to detect quotient saturation exactly.
+pub fn div_wide(q: QFormat, a: i64, b: i64) -> i128 {
+    debug_assert!(b != 0, "div_wide requires a nonzero divisor");
     let na = (a as i128).unsigned_abs() << q.frac_bits;
     let nb = (b as i128).unsigned_abs();
     let quot = (na / nb) as i128;
-    let signed = if (a < 0) != (b < 0) { -quot } else { quot };
-    q.saturate(signed)
+    if (a < 0) != (b < 0) {
+        -quot
+    } else {
+        quot
+    }
 }
 
 /// One step of a monomial evaluation.
@@ -177,6 +200,24 @@ mod tests {
     #[test]
     fn div_saturates_on_overflow() {
         assert_eq!(div(Q16_15, q(30000.0), 1), Q16_15.max_raw());
+    }
+
+    #[test]
+    fn wide_forms_agree_with_saturating_forms() {
+        // In range, wide == saturating; out of range, wide carries the
+        // true magnitude while the narrow form clamps.
+        let big = q(30000.0);
+        assert_eq!(mul_wide(Q16_15, q(2.0), q(3.0)), q(6.0) as i128);
+        assert!(mul_wide(Q16_15, big, big) > Q16_15.max_raw() as i128);
+        assert_eq!(mul(Q16_15, big, big), Q16_15.max_raw());
+        assert_eq!(div_wide(Q16_15, q(6.0), q(3.0)), q(2.0) as i128);
+        assert_eq!(div_wide(Q16_15, q(-6.0), q(3.0)), q(-2.0) as i128);
+        assert!(div_wide(Q16_15, big, 1) > Q16_15.max_raw() as i128);
+        for (a, b) in [(2.5, 3.0), (-7.0, 0.125), (100.0, -0.5)] {
+            let (ra, rb) = (q(a), q(b));
+            assert_eq!(mul(Q16_15, ra, rb), Q16_15.saturate(mul_wide(Q16_15, ra, rb)));
+            assert_eq!(div(Q16_15, ra, rb), Q16_15.saturate(div_wide(Q16_15, ra, rb)));
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The cross-system `fused` stage: cache one [`FusedNetlist`] per
 //! *set* of member netlists and shard count.
 //!
-//! Unlike the seven per-system stages, the fused artifact is derived
+//! Unlike the eight per-system stages, the fused artifact is derived
 //! from N flows at once, so it hangs off the [`ArtifactStore`] directly
 //! rather than any single [`super::Flow`]'s LRU chain. Its fingerprint
 //! hashes the member netlist fingerprints **sorted** plus the shard

@@ -8,7 +8,8 @@
 //! * [`Flow`] — a compilation session for one system: a [`FlowConfig`]
 //!   plus a memoized artifact graph with typed stage handles
 //!   ([`Flow::parsed`], [`Flow::pis`], [`Flow::rtl`], [`Flow::netlist`],
-//!   [`Flow::timing`], [`Flow::power`], [`Flow::verilog`]). Each stage
+//!   [`Flow::timing`], [`Flow::power`], [`Flow::verilog`],
+//!   [`Flow::analysis`]). Each stage
 //!   computes on first demand and is cached keyed on the config and the
 //!   upstream stage fingerprints, so a config edit recomputes only the
 //!   stages downstream of the change.

@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use super::config::{mix, FlowConfig, StableHasher};
 use super::store::{Artifact, ArtifactStore, Lru, LruHit};
+use crate::analyze::AnalysisReport;
 use crate::newton::{self, CorpusEntry, SystemModel};
 use crate::pisearch::{self, CostModel, PiAnalysis};
 use crate::power::{self, ActivityReport, ActivitySpread, PowerModel};
@@ -33,6 +34,12 @@ const TAG_VERILOG: u64 = 0x07;
 /// The cross-system fused stage ([`super::fused`]) — not part of any
 /// single `Flow`'s chain, but its tag must stay disjoint from these.
 pub(crate) const TAG_FUSED: u64 = 0x08;
+const TAG_ANALYZE: u64 = 0x09;
+
+/// Version of the static verifier mixed into the analyze stage
+/// fingerprint: bump when a pass's findings change so stale clean
+/// reports cached on disk cannot mask newly detectable defects.
+const ANALYZE_VERSION: u64 = 1;
 
 /// Depth of each per-stage in-memory LRU: deep enough that an A/B sweep
 /// like the width sweep (5 formats) returns to warm entries instead of
@@ -106,6 +113,7 @@ pub struct StageCounts {
     pub timing: u32,
     pub power: u32,
     pub verilog: u32,
+    pub analyze: u32,
     /// Stage queries served by promoting a non-front LRU entry.
     pub memory_hits: u32,
     /// Stage artifacts loaded from the persistent on-disk store.
@@ -115,7 +123,14 @@ pub struct StageCounts {
 impl StageCounts {
     /// Total stage computations (cache misses) across all stages.
     pub fn recomputes(&self) -> u32 {
-        self.parsed + self.pis + self.rtl + self.netlist + self.timing + self.power + self.verilog
+        self.parsed
+            + self.pis
+            + self.rtl
+            + self.netlist
+            + self.timing
+            + self.power
+            + self.verilog
+            + self.analyze
     }
 }
 
@@ -131,6 +146,7 @@ impl std::ops::Add for StageCounts {
             timing: self.timing + rhs.timing,
             power: self.power + rhs.power,
             verilog: self.verilog + rhs.verilog,
+            analyze: self.analyze + rhs.analyze,
             memory_hits: self.memory_hits + rhs.memory_hits,
             disk_hits: self.disk_hits + rhs.disk_hits,
         }
@@ -199,6 +215,7 @@ pub struct Flow {
     timing: Lru<TimingReport>,
     power: Lru<PowerReport>,
     verilog: Lru<String>,
+    analyze: Lru<AnalysisReport>,
     counts: StageCounts,
 }
 
@@ -216,6 +233,7 @@ impl Flow {
             timing: Lru::new(STAGE_LRU_DEPTH),
             power: Lru::new(STAGE_LRU_DEPTH),
             verilog: Lru::new(STAGE_LRU_DEPTH),
+            analyze: Lru::new(STAGE_LRU_DEPTH),
             counts: StageCounts::default(),
         }
     }
@@ -371,6 +389,13 @@ impl Flow {
         self.fp_netlist()
     }
 
+    /// The analyze stage's fingerprint — the store key of this
+    /// session's [`AnalysisReport`]. Purely config-derived, so it never
+    /// forces a compute.
+    pub fn analysis_fingerprint(&self) -> u64 {
+        self.fp_analyze()
+    }
+
     fn fp_timing(&self) -> u64 {
         mix(TAG_TIMING, self.fp_netlist(), self.config.timing_inputs_fp())
     }
@@ -381,6 +406,13 @@ impl Flow {
 
     fn fp_verilog(&self) -> u64 {
         mix(TAG_VERILOG, self.fp_rtl(), 0)
+    }
+
+    fn fp_analyze(&self) -> u64 {
+        // Derived from the netlist fingerprint: the verifier reads the
+        // parsed model, the RTL design, and the mapped netlist, and the
+        // netlist fp already transitively keys all three.
+        mix(TAG_ANALYZE, self.fp_netlist(), ANALYZE_VERSION)
     }
 
     // ---- stage graph -----------------------------------------------------
@@ -587,6 +619,35 @@ impl Flow {
         Ok(fp)
     }
 
+    fn ensure_analyze(&mut self) -> anyhow::Result<u64> {
+        let fp = self.fp_analyze();
+        match self.analyze.promote(fp) {
+            LruHit::Fresh => {}
+            LruHit::Promoted => self.counts.memory_hits += 1,
+            LruHit::Miss => {
+                if let Some(report) = self.load_artifact::<AnalysisReport>(fp) {
+                    self.counts.disk_hits += 1;
+                    self.analyze.insert(fp, report);
+                } else {
+                    // The verifier cross-checks three layers against each
+                    // other; all three materialize on this compute path.
+                    self.ensure_parsed()?;
+                    self.ensure_rtl()?;
+                    self.ensure_netlist()?;
+                    let report = crate::analyze::analyze_design(
+                        self.parsed.value(),
+                        self.rtl.value(),
+                        self.netlist.value(),
+                    );
+                    self.counts.analyze += 1;
+                    self.save_artifact(fp, &report);
+                    self.analyze.insert(fp, report);
+                }
+            }
+        }
+        Ok(fp)
+    }
+
     // ---- typed stage handles ---------------------------------------------
 
     /// The dimension-checked system model (frontend stage).
@@ -661,6 +722,17 @@ impl Flow {
     pub fn verilog(&mut self) -> anyhow::Result<&str> {
         self.ensure_verilog()?;
         Ok(self.verilog.value().as_str())
+    }
+
+    /// The static verifier's report over the compiled artifacts (all
+    /// four [`crate::analyze`] passes except the shard-plan pre-flight,
+    /// which keys on a fused plan — see
+    /// [`super::fused::ensure_fused`] consumers). Memoized and persisted
+    /// like every other stage; query it before serving to gate on
+    /// [`AnalysisReport::has_errors`].
+    pub fn analysis(&mut self) -> anyhow::Result<AnalysisReport> {
+        self.ensure_analyze()?;
+        Ok(self.analyze.value().clone())
     }
 
     /// Module latency in cycles under the configured scheduling policy

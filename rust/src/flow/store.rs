@@ -39,6 +39,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::config::StableHasher;
 use super::session::PowerReport;
+use crate::analyze::{AnalysisReport, DiagCode, Diagnostic, Locus};
 use crate::fixedpoint::{MonOp, QFormat};
 use crate::newton::{Symbol, SymbolKind, SystemModel};
 use crate::pisearch::{PiAnalysis, PiGroup};
@@ -70,11 +71,16 @@ use crate::units::{Dimension, NUM_BASE_DIMS};
 /// (owner map + refinement report; cuts and loads are re-derived on
 /// decode), and the fused fingerprint mixes in
 /// [`crate::shard::PARTITIONER_VERSION`].
-pub const STORE_FORMAT_VERSION: u32 = 4;
+///
+/// v5: added the `analyze` stage ([`crate::analyze::AnalysisReport`] —
+/// the static verifier's findings, encoded as stable wire codes plus
+/// locus and message; the stage fingerprint mixes in the verifier
+/// version so pass changes invalidate cached reports).
+pub const STORE_FORMAT_VERSION: u32 = 5;
 
 const MAGIC: &[u8; 8] = b"DSARTFT\0";
 
-/// The cached stages: the seven per-system stages of a [`super::Flow`]
+/// The cached stages: the eight per-system stages of a [`super::Flow`]
 /// plus the cross-system `fused` stage ([`super::fused::ensure_fused`]).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum StageKind {
@@ -85,11 +91,12 @@ pub enum StageKind {
     Timing,
     Power,
     Verilog,
+    Analyze,
     Fused,
 }
 
 impl StageKind {
-    pub const ALL: [StageKind; 8] = [
+    pub const ALL: [StageKind; 9] = [
         StageKind::Parsed,
         StageKind::Pis,
         StageKind::Rtl,
@@ -97,6 +104,7 @@ impl StageKind {
         StageKind::Timing,
         StageKind::Power,
         StageKind::Verilog,
+        StageKind::Analyze,
         StageKind::Fused,
     ];
 
@@ -110,6 +118,7 @@ impl StageKind {
             StageKind::Timing => "timing",
             StageKind::Power => "power",
             StageKind::Verilog => "verilog",
+            StageKind::Analyze => "analyze",
             StageKind::Fused => "fused",
         }
     }
@@ -690,6 +699,57 @@ impl Artifact for PowerReport {
     }
 }
 
+impl Artifact for AnalysisReport {
+    const STAGE: StageKind = StageKind::Analyze;
+
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.system);
+        w.put_usize(self.diagnostics.len());
+        for d in &self.diagnostics {
+            // Pass and severity are derived from the code on decode, so
+            // only the stable wire id is stored.
+            w.put_u16(d.code.wire());
+            match d.locus {
+                Locus::Module => w.put_u8(0),
+                Locus::Net(n) => {
+                    w.put_u8(1);
+                    w.put_u32(n);
+                }
+                Locus::Unit(u) => {
+                    w.put_u8(2);
+                    w.put_usize(u);
+                }
+                Locus::Shard(s) => {
+                    w.put_u8(3);
+                    w.put_u16(s);
+                }
+            }
+            w.put_str(&d.message);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> anyhow::Result<AnalysisReport> {
+        let system = r.take_str()?;
+        let n = r.take_len(3)?;
+        let mut diagnostics = Vec::with_capacity(n);
+        for _ in 0..n {
+            let wire = r.take_u16()?;
+            let code = DiagCode::from_wire(wire)
+                .ok_or_else(|| anyhow::anyhow!("unknown diagnostic code {wire}"))?;
+            let locus = match r.take_u8()? {
+                0 => Locus::Module,
+                1 => Locus::Net(r.take_u32()?),
+                2 => Locus::Unit(r.take_usize()?),
+                3 => Locus::Shard(r.take_u16()?),
+                t => anyhow::bail!("bad locus tag {t}"),
+            };
+            let message = r.take_str()?;
+            diagnostics.push(Diagnostic::new(code, locus, message));
+        }
+        Ok(AnalysisReport { system, diagnostics })
+    }
+}
+
 impl Artifact for String {
     const STAGE: StageKind = StageKind::Verilog;
 
@@ -1193,6 +1253,29 @@ mod tests {
 
         fs::write(&path, &pristine).unwrap();
         assert_eq!(store.load::<String>(9).unwrap(), text);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn analysis_report_roundtrips_every_locus() {
+        let dir = tmpdir("analysis");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let report = AnalysisReport {
+            system: "pendulum".into(),
+            diagnostics: vec![
+                Diagnostic::new(DiagCode::CombLoop, Locus::Net(7), "cycle 5 -> 7 -> 5"),
+                Diagnostic::new(DiagCode::QSaturation, Locus::Unit(2), "pi_2 may saturate"),
+                Diagnostic::new(DiagCode::MissingCut, Locus::Shard(3), "net 9 uncovered"),
+                Diagnostic::new(DiagCode::OwnerMapMalformed, Locus::Module, "short owner map"),
+            ],
+        };
+        store.save(0xA11A, &report).unwrap();
+        let back: AnalysisReport = store.load(0xA11A).unwrap();
+        assert_eq!(back, report);
+        // A clean report (the common case) round-trips too.
+        let clean = AnalysisReport { system: "beam".into(), diagnostics: Vec::new() };
+        store.save(0xC1EA, &clean).unwrap();
+        assert_eq!(store.load::<AnalysisReport>(0xC1EA).unwrap(), clean);
         let _ = fs::remove_dir_all(&dir);
     }
 

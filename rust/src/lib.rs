@@ -72,6 +72,17 @@
 //!   [`shard::ExchangeStats`]), bit-identical to solo evaluation.
 //!   Cached (plan included) as the `fused` flow stage and routed to by
 //!   the coordinator's cross-system power batcher.
+//! * **Static verification** — [`analyze`]: a multi-pass verifier over
+//!   the compiled artifacts with a typed diagnostics model
+//!   ([`analyze::Diagnostic`], stable `AN…` codes): structural netlist
+//!   lint (multi-drivers, dangling refs, an explicit DFS combinational
+//!   cycle reporter, dead gates), Q-format interval analysis of every Π
+//!   microprogram, an independent dimensional re-check of every Π unit,
+//!   and a shard-plan pre-flight that proves [`shard::CutMap`]
+//!   completeness before anything packs. Memoized as the `analyze` flow
+//!   stage (persisted in the artifact store), surfaced by the `lint`
+//!   CLI subcommand, and gating: [`coordinator::ServeSet`] refuses to
+//!   boot a system whose analysis has error-level findings.
 //! * **Runtime** — [`runtime`] (PJRT executables compiled AOT from
 //!   JAX/Pallas), [`coordinator`] (threaded in-sensor inference engine;
 //!   multi-system deployments front the [`flow`] layer through one warm
@@ -103,6 +114,7 @@
 //!   [`coordinator::faults`] injects deterministic panics/delays/lane
 //!   kills for the e2e and soak harnesses (CLI: `serve --listen ADDR`).
 
+pub mod analyze;
 pub mod bench_util;
 pub mod coordinator;
 pub mod fixedpoint;

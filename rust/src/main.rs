@@ -10,6 +10,8 @@
 //! dimsynth compile <system|file.nt> [--target SYM] [--format Qi.f] [--lanes N]
 //!                  [-o DIR] [--vcd] [--cache-dir DIR]
 //! dimsynth compile <a,b,c> --fuse [--shards K] [--cache-dir DIR]
+//! dimsynth lint <system>|--all [--deny warnings] [--fuse --shards K]
+//!               [--json] [--cache-dir DIR]
 //! dimsynth table1 [--samples N] [--sequential] [--cache-dir DIR]
 //! dimsynth cache <stats|gc|clear> --cache-dir DIR [--max-bytes N]
 //! dimsynth export-pisearch
@@ -58,6 +60,15 @@
 //! counts. `serve --systems … --fuse` routes cross-system power floods
 //! through one sharded evaluation of that fused module — bit-identical
 //! to per-system dispatch, verified by the differential test suite.
+//!
+//! `lint <system>` (or `--all`) runs the multi-pass static verifier
+//! ([`dimsynth::analyze`]) over the compiled artifacts: netlist lint,
+//! Q-format interval analysis, dimensional re-check, and — with
+//! `--fuse` — the shard-plan pre-flight of the fused module. Findings
+//! print with stable `AN…` codes (`--json` for machine consumption);
+//! the exit code is nonzero on any error-level finding, or on warnings
+//! too under `--deny warnings`. The verifier is a memoized flow stage,
+//! so a warm `--cache-dir` lint recomputes nothing.
 //!
 //! Every compilation subcommand drives the pipeline through the
 //! [`dimsynth::flow`] session API; no stage-to-stage wiring lives here.
@@ -116,6 +127,20 @@ const SUBCOMMANDS: &[SubSpec] = &[
             flag("cache-dir", "DIR", "attach the persistent artifact store at DIR"),
             switch("fuse", "positional is a,b,c corpus ids: fuse netlists, report the shard plan"),
             flag("shards", "K", "fuse: partition into K shards (default: cores, capped at 8)"),
+        ],
+    },
+    SubSpec {
+        name: "lint",
+        args: "<system>",
+        summary: "run the static verifier (dimsynth::analyze) and report its findings",
+        flags: &[
+            switch("all", "lint every corpus system (no positional)"),
+            flag("deny", "warnings", "exit nonzero on warnings too (`--deny warnings`)"),
+            switch("fuse", "also pre-flight the fused shard plan of the linted systems"),
+            flag("shards", "K", "fuse: partition into K shards (default: cores, capped at 8)"),
+            switch("json", "emit the report as JSON on stdout"),
+            flag("format", "Qi.f", "fixed-point format, e.g. Q16.15"),
+            flag("cache-dir", "DIR", "attach the persistent artifact store at DIR"),
         ],
     },
     SubSpec {
@@ -537,6 +562,148 @@ fn cmd_compile(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Resul
     Ok(())
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `lint <system>` / `lint --all`: run the four-pass static verifier
+/// over the compiled artifacts and report every finding. With `--fuse`
+/// the shard-plan pre-flight additionally checks the fused plan the
+/// serving path would run on. Exit is nonzero on any error-level
+/// finding (and on warnings under `--deny warnings`), so CI can gate on
+/// a clean corpus.
+fn cmd_lint(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let deny_warnings = match flags.get("deny").map(String::as_str) {
+        None => false,
+        Some("warnings") => true,
+        Some(other) => anyhow::bail!("--deny takes `warnings` (got `{other}`)"),
+    };
+    let q = flags.get("format").map(|s| parse_format(s)).transpose()?.unwrap_or(Q16_15);
+    let entries = if flags.contains_key("all") {
+        anyhow::ensure!(pos.is_empty(), "--all replaces the positional system argument");
+        corpus()
+    } else {
+        let id = pos.first().ok_or_else(|| {
+            anyhow::anyhow!("usage: {}", usage_line(spec_of("lint").unwrap()))
+        })?;
+        let e = newton::by_id(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown system `{id}` (see dimsynth list)"))?;
+        vec![e]
+    };
+    let fuse = flags.contains_key("fuse");
+    let shards: usize = if fuse {
+        let k = flags
+            .get("shards")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or_else(default_shards);
+        anyhow::ensure!(k >= 1, "--shards must be at least 1");
+        k
+    } else {
+        anyhow::ensure!(!flags.contains_key("shards"), "--shards requires --fuse");
+        0
+    };
+    let store = open_store(flags)?;
+
+    let mut counts = StageCounts::default();
+    let mut reports = Vec::new();
+    // Fusing borrows every member netlist at once; the Arcs keep the
+    // mapped designs alive past their flows.
+    let mut compiled = Vec::new();
+    for e in &entries {
+        let config = FlowConfig { qformat: q, ..FlowConfig::default() };
+        let mut flow = Flow::for_entry(e.clone(), config);
+        if let Some(store) = &store {
+            flow.set_store(Arc::clone(store));
+        }
+        let report = flow.analysis()?;
+        if fuse {
+            compiled.push((flow.netlist_fingerprint(), flow.netlist_shared()?));
+        }
+        counts = counts + flow.counts();
+        reports.push(report);
+    }
+    if fuse {
+        let members: Vec<(u64, &Netlist)> =
+            compiled.iter().map(|(fp, m)| (*fp, &m.netlist)).collect();
+        let art = ensure_fused(store.as_deref(), &members, shards);
+        let diagnostics =
+            dimsynth::analyze::preflight_plan(&art.fused.netlist, &art.fused.members, &art.plan);
+        reports.push(dimsynth::analyze::AnalysisReport {
+            system: format!("fused({} members, {} shards)", entries.len(), art.plan.shards),
+            diagnostics,
+        });
+    }
+
+    let errors: usize = reports.iter().map(|r| r.errors()).sum();
+    let warnings: usize = reports.iter().map(|r| r.warnings()).sum();
+
+    if flags.contains_key("json") {
+        let mut systems = Vec::new();
+        for r in &reports {
+            let diags: Vec<String> = r
+                .diagnostics
+                .iter()
+                .map(|d| {
+                    format!(
+                        "{{\"code\":\"{}\",\"severity\":\"{}\",\"pass\":\"{}\",\
+                         \"locus\":\"{}\",\"message\":\"{}\"}}",
+                        d.code,
+                        d.severity,
+                        d.pass,
+                        json_escape(&d.locus.to_string()),
+                        json_escape(&d.message)
+                    )
+                })
+                .collect();
+            systems.push(format!(
+                "{{\"system\":\"{}\",\"diagnostics\":[{}]}}",
+                json_escape(&r.system),
+                diags.join(",")
+            ));
+        }
+        println!(
+            "{{\"systems\":[{}],\"errors\":{errors},\"warnings\":{warnings}}}",
+            systems.join(",")
+        );
+    } else {
+        for r in &reports {
+            if r.is_clean() {
+                println!("{}: clean", r.system);
+            } else {
+                println!("{}: {} error(s), {} warning(s)", r.system, r.errors(), r.warnings());
+                for d in &r.diagnostics {
+                    println!("  {d}");
+                }
+            }
+        }
+        println!("lint: {} target(s), {errors} error(s), {warnings} warning(s)", reports.len());
+    }
+    // Memoization telemetry on stderr (CI greps `analyze stage:
+    // recomputes=0` on the warm pass); the per-stage counter isolates
+    // the verifier from its upstream compiles.
+    eprintln!(
+        "analyze stage: recomputes={} disk_hits={} memory_hits={}",
+        counts.analyze, counts.disk_hits, counts.memory_hits
+    );
+    if errors > 0 {
+        anyhow::bail!("lint found {errors} error(s)");
+    }
+    if deny_warnings && warnings > 0 {
+        anyhow::bail!("lint found {warnings} warning(s) with --deny warnings");
+    }
+    Ok(())
+}
+
 fn cmd_table1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let samples: u32 = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let store = open_store(flags)?;
@@ -794,6 +961,7 @@ fn main() -> ExitCode {
                 Ok(())
             }
             "compile" => cmd_compile(&pos, &flags),
+            "lint" => cmd_lint(&pos, &flags),
             "table1" => cmd_table1(&flags),
             "cache" => cmd_cache(&pos, &flags),
             "export-pisearch" => cmd_export(),

@@ -26,6 +26,11 @@
 //! member solo with [`crate::synth::WordSim`]: identical output words,
 //! per-net toggles, and per-member per-lane toggle totals.
 
+// Every unsafe operation inside an `unsafe fn` must name its own proof
+// obligation in an explicit `unsafe { .. }` block — the audit discipline
+// shared with [`crate::synth::wordsim`].
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -224,11 +229,19 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
             let v = vals[n as usize];
             vals.push(v);
         }
+        debug_assert_eq!(
+            vals.len() as u32,
+            mirror_next,
+            "mirror slots must extend the net array contiguously"
+        );
         let reg_dirty = vec![0u64; (reg_nets.len() + 63) / 64];
 
         // Cross-shard reads go through the cut net's mirror; a read the
         // plan does not list as a cut has no mirror and cannot be
-        // published, so it would silently see stale values — fail fast.
+        // published, so it would silently see stale values. The static
+        // verifier ([`crate::analyze::preflight_plan`], AN402) rejects
+        // incomplete cut maps before a plan reaches any simulator; this
+        // pack-time assert is the never-fires backstop behind that gate.
         let remap = |reader: u16, i: NetId| -> NetId {
             let from = plan.owner[i as usize];
             if from == reader {
@@ -441,7 +454,7 @@ impl<'n, W: LaneWord> ShardSim<'n, W> {
                             break;
                         }
                         last = p;
-                        // Safety: this shard owns its LUTs' out nets,
+                        // SAFETY: this shard owns its LUTs' out nets,
                         // tword slots, and cut mirrors exclusively (the
                         // owner map is a partition); reads are either
                         // same-shard earlier levels, mirrors published
@@ -592,7 +605,7 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
     /// phase).
     #[inline]
     fn write_input_word(&mut self, idx: usize, w: W) {
-        // Safety: outside a phase the driving thread has exclusive
+        // SAFETY: outside a phase the driving thread has exclusive
         // access to every shared buffer.
         unsafe {
             let t = self.vals.get(idx) ^ w;
@@ -627,8 +640,12 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
             while summary != 0 {
                 let bit = summary.trailing_zeros() as usize;
                 summary &= summary - 1;
+                debug_assert!(
+                    w * 64 + bit < self.reg_pub.len(),
+                    "dirty bit beyond the publication list"
+                );
                 let (net, mirror, owner) = self.reg_pub[w * 64 + bit];
-                // Safety: outside a phase; driving thread exclusive.
+                // SAFETY: outside a phase; driving thread exclusive.
                 unsafe {
                     let v = self.vals.get(net as usize);
                     self.vals.set(mirror as usize, v);
@@ -645,7 +662,7 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
         let (ps, pe) = self.comb_bounds[lvl][0];
         let mut n = 0u64;
         for &(slot, mirror) in &self.comb_pub[ps as usize..pe as usize] {
-            // Safety: shard 0 owns these slots and mirrors.
+            // SAFETY: shard 0 owns these slots and mirrors.
             unsafe {
                 if !self.tword.get(slot as usize).is_zero() {
                     let out = self.luts[slot as usize].out as usize;
@@ -662,7 +679,11 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
     /// Full toggle accounting for one net.
     #[inline]
     unsafe fn bump(&mut self, idx: usize, t: W) {
-        self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        // SAFETY: the caller guarantees exclusive access to the shared
+        // buffers (driving thread, outside any phase).
+        unsafe {
+            self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        }
         self.bump_planes(idx, t);
     }
 
@@ -678,7 +699,7 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
     /// Walk the toggle words of packed slots `[s, e)` (workers joined).
     fn account_planes(&mut self, s: usize, e: usize) {
         for i in s..e {
-            // Safety: workers are joined (or never ran); exclusive.
+            // SAFETY: workers are joined (or never ran); exclusive.
             let t = unsafe { self.tword.get(i) };
             if !t.is_zero() {
                 let idx = self.luts[i].out as usize;
@@ -721,7 +742,7 @@ impl<'a, W: LaneWord> ShardDrive<'a, W> {
     /// Per-net toggle counts of one member so far.
     pub fn member_net_toggles(&self, member: usize) -> Vec<u64> {
         let (s, e) = self.fused.members[member].net_range;
-        // Safety: outside a phase; driving thread exclusive.
+        // SAFETY: outside a phase; driving thread exclusive.
         (s..e).map(|i| unsafe { self.toggles.get(i as usize) }).collect()
     }
 }
@@ -761,7 +782,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
             .netlist
             .output_bits(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"));
-        // Safety: read outside any phase; driving thread exclusive.
+        // SAFETY: read outside any phase; driving thread exclusive.
         unsafe { self.vals.get(bits[0] as usize) }
     }
 
@@ -790,7 +811,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
                     self.next_phase += 1;
                 }
                 let (cs, ce) = self.level_shard_bounds[lvl][0];
-                // Safety: shard 0's slice of the level; see the
+                // SAFETY: shard 0's slice of the level; see the
                 // worker-side comment.
                 unsafe {
                     eval_chunk(
@@ -816,7 +837,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
             }
             for i in 0..self.shard0_levels.len() {
                 let (cs, ce) = self.shard0_levels[i];
-                // Safety: shard 0's chunks; cross-shard reads go
+                // SAFETY: shard 0's chunks; cross-shard reads go
                 // through register-cut mirrors, which only the driving
                 // thread writes, outside phases — frozen mid-phase.
                 unsafe {
@@ -837,7 +858,7 @@ impl<W: LaneWord> Drive<W> for ShardDrive<'_, W> {
         // thread; all workers joined). A committed q that another shard
         // reads is flagged for the next cycle's register-cut exchange.
         for (i, &(_, d)) in self.dffs.iter().enumerate() {
-            // Safety: exclusive outside phases.
+            // SAFETY: exclusive outside phases.
             self.scratch[i] = unsafe { self.vals.get(d as usize) };
         }
         for i in 0..self.dffs.len() {

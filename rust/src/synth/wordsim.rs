@@ -54,6 +54,11 @@
 //! simulation pass yields `W::LANES` independent switching-activity
 //! estimates.
 
+// Every unsafe operation inside an `unsafe fn` must name its own proof
+// obligation in an explicit `unsafe { .. }` block — the `unsafe fn`
+// signature states the caller's contract, it does not discharge it.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use super::lane::LaneWord;
 use super::netlist::{NetId, Netlist, Node};
 use std::collections::HashMap;
@@ -676,7 +681,7 @@ impl<'n, W: LaneWord> WordSim<'n, W> {
                         }
                         last = p;
                         let (cs, ce) = plan_ref.par_splits[(p - 1) % n_par][w];
-                        // Safety: this worker's chunk owns its LUTs' out
+                        // SAFETY: this worker's chunk owns its LUTs' out
                         // nets and tword slots exclusively for the phase
                         // (chunks are disjoint); all reads target nets
                         // of earlier levels, finished in earlier phases
@@ -839,15 +844,21 @@ impl<T: Copy> RawSlice<T> {
     #[inline(always)]
     pub(crate) unsafe fn get(&self, i: usize) -> T {
         #[cfg(debug_assertions)]
-        assert!(i < self.len);
-        *self.ptr.add(i)
+        assert!(i < self.len, "RawSlice read out of bounds: {i} >= {}", self.len);
+        // SAFETY: `i` is in bounds of the slice this view was created
+        // from (debug-asserted above), and the caller guarantees no
+        // thread concurrently writes element `i` (phase protocol).
+        unsafe { *self.ptr.add(i) }
     }
 
     #[inline(always)]
     pub(crate) unsafe fn set(&self, i: usize, v: T) {
         #[cfg(debug_assertions)]
-        assert!(i < self.len);
-        *self.ptr.add(i) = v;
+        assert!(i < self.len, "RawSlice write out of bounds: {i} >= {}", self.len);
+        // SAFETY: `i` is in bounds (debug-asserted above), and the
+        // caller guarantees exclusive ownership of element `i` for the
+        // duration of the phase (no concurrent read or write).
+        unsafe { *self.ptr.add(i) = v }
     }
 }
 
@@ -859,7 +870,7 @@ impl<T> Clone for RawSlice<T> {
 
 impl<T> Copy for RawSlice<T> {}
 
-// Safety: the phase protocol serializes all conflicting accesses; the
+// SAFETY: the phase protocol serializes all conflicting accesses; the
 // wrapper itself only carries the pointer.
 unsafe impl<T: Send> Send for RawSlice<T> {}
 unsafe impl<T: Send> Sync for RawSlice<T> {}
@@ -868,7 +879,7 @@ unsafe impl<T: Send> Sync for RawSlice<T> {}
 /// counts, and the per-slot toggle word (consumed by the driving
 /// thread's plane accounting).
 ///
-/// Safety: the caller guarantees (a) exclusive ownership of the out nets
+/// SAFETY: the caller guarantees (a) exclusive ownership of the out nets
 /// and `tword` slots in the range for the duration of the call, and (b)
 /// that every input net read is not concurrently written (levelization:
 /// inputs live in strictly earlier levels).
@@ -881,17 +892,23 @@ pub(crate) unsafe fn eval_chunk<W: LaneWord>(
     e: usize,
 ) {
     for (i, l) in luts[s..e].iter().enumerate() {
-        let a = vals.get(l.ins[0] as usize);
-        let b = vals.get(l.ins[1] as usize);
-        let c = vals.get(l.ins[2] as usize);
-        let d = vals.get(l.ins[3] as usize);
-        let new = eval_lut(l.sel, l.inv, a, b, c, d);
-        let idx = l.out as usize;
-        let t = vals.get(idx) ^ new;
-        tword.set(s + i, t);
-        if !t.is_zero() {
-            vals.set(idx, new);
-            toggles.set(idx, toggles.get(idx) + u64::from(t.count_ones()));
+        // SAFETY: input nets live in strictly earlier levels, finished
+        // in earlier phases (caller contract (b)); the out net and
+        // tword slot `s + i` belong to this chunk exclusively (caller
+        // contract (a)) — chunks partition `[s, e)` slots and out nets.
+        unsafe {
+            let a = vals.get(l.ins[0] as usize);
+            let b = vals.get(l.ins[1] as usize);
+            let c = vals.get(l.ins[2] as usize);
+            let d = vals.get(l.ins[3] as usize);
+            let new = eval_lut(l.sel, l.inv, a, b, c, d);
+            let idx = l.out as usize;
+            let t = vals.get(idx) ^ new;
+            tword.set(s + i, t);
+            if !t.is_zero() {
+                vals.set(idx, new);
+                toggles.set(idx, toggles.get(idx) + u64::from(t.count_ones()));
+            }
         }
     }
 }
@@ -927,7 +944,7 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
     /// Compare-bump-store one input word (main thread; workers idle).
     #[inline]
     fn write_input_word(&mut self, idx: usize, w: W) {
-        // Safety: outside a phase the driving thread has exclusive
+        // SAFETY: outside a phase the driving thread has exclusive
         // access to every shared buffer.
         unsafe {
             let t = self.vals.get(idx) ^ w;
@@ -941,7 +958,11 @@ impl<'a, W: LaneWord> ParSession<'a, W> {
     /// Full toggle accounting for one net (counter + planes + exact).
     #[inline]
     unsafe fn bump(&mut self, idx: usize, t: W) {
-        self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        // SAFETY: the caller guarantees exclusive access to the shared
+        // buffers (drive surface, outside any phase).
+        unsafe {
+            self.toggles.set(idx, self.toggles.get(idx) + u64::from(t.count_ones()));
+        }
         self.bump_planes(idx, t);
     }
 
@@ -995,7 +1016,7 @@ impl<W: LaneWord> Drive<W> for ParSession<'_, W> {
             .nl
             .output_bits(name)
             .unwrap_or_else(|| panic!("no output bus `{name}`"));
-        // Safety: read outside any phase; main thread exclusive.
+        // SAFETY: read outside any phase; main thread exclusive.
         unsafe { self.vals.get(bits[0] as usize) }
     }
 
@@ -1017,7 +1038,7 @@ impl<W: LaneWord> Drive<W> for ParSession<'_, W> {
                     self.ctrl.phase.store(self.next_phase, Ordering::Release);
                     self.next_phase += 1;
                     let (cs, ce) = splits[0];
-                    // Safety: chunk 0 is the driving thread's; see the
+                    // SAFETY: chunk 0 is the driving thread's; see the
                     // worker-side comment for the disjointness argument.
                     unsafe {
                         eval_chunk(
@@ -1047,7 +1068,7 @@ impl<W: LaneWord> Drive<W> for ParSession<'_, W> {
             // Plane accounting for the level, on the driving thread, in
             // plan order — bit-identical to the sequential engine.
             for i in s..e {
-                // Safety: workers are joined (or never ran); exclusive.
+                // SAFETY: workers are joined (or never ran); exclusive.
                 let t = unsafe { self.tword.get(i) };
                 if !t.is_zero() {
                     let idx = self.luts[i].out as usize;
@@ -1057,7 +1078,7 @@ impl<W: LaneWord> Drive<W> for ParSession<'_, W> {
         }
         // Clock edge: sample every D first, then commit (main thread).
         for (i, &(_, d)) in self.dffs.iter().enumerate() {
-            // Safety: exclusive outside phases.
+            // SAFETY: exclusive outside phases.
             self.scratch[i] = unsafe { self.vals.get(d as usize) };
         }
         for (i, &(q, _)) in self.dffs.iter().enumerate() {

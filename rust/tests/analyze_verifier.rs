@@ -1,0 +1,209 @@
+//! Injected-defect fixtures for the static verifier (`analyze/`).
+//!
+//! Each test plants exactly one class of defect in an otherwise-valid
+//! artifact and asserts the verifier reports the *exact* diagnostic
+//! code for it — no panic, no cascade, no false neighbors:
+//!
+//! * combinational loop          → `AN103` (error)
+//! * double-driven net           → `AN101` (error)
+//! * dropped cut entry           → `AN402` (error)
+//! * corrupted scatter index     → `AN404` (error)
+//! * Q-format below proven range → `AN203` (warning)
+//!
+//! The pristine half: every corpus system must analyze clean at the
+//! default Q16.15 config (memoized — the report is computed once per
+//! session), and the fused whole-corpus shard plan must pass pre-flight
+//! at every K ∈ {1, 2, 4, 8}.
+
+use dimsynth::analyze::{lint_netlist, preflight_plan, DiagCode, Severity};
+use dimsynth::fixedpoint::QFormat;
+use dimsynth::flow::{Flow, FlowConfig};
+use dimsynth::newton::corpus;
+use dimsynth::shard::{FusedNetlist, ShardPlan};
+use dimsynth::synth::{Netlist, Node};
+
+/// Compile every corpus system down to its mapped netlist.
+fn corpus_netlists() -> Vec<Netlist> {
+    corpus()
+        .iter()
+        .map(|entry| {
+            let mut flow = Flow::for_system(entry.id, FlowConfig::default()).unwrap();
+            flow.netlist().unwrap().netlist.clone()
+        })
+        .collect()
+}
+
+fn fused_corpus() -> FusedNetlist {
+    let netlists = corpus_netlists();
+    let refs: Vec<&Netlist> = netlists.iter().collect();
+    FusedNetlist::fuse_refs(&refs)
+}
+
+// ---------------------------------------------------------------------
+// Injected structural defects (pass 1).
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_comb_loop_is_exactly_an103() {
+    // Three LUTs in a ring feeding a real output. The builder API cannot
+    // express this (construction is topological), so the fixture goes
+    // through `from_parts` — the same door a corrupt store artifact or a
+    // buggy optimization pass would use.
+    let nodes = vec![
+        Node::Input("a".into()),
+        Node::Lut { ins: vec![0, 2], tt: 0b0110 },
+        Node::Lut { ins: vec![3], tt: 0b01 },
+        Node::Lut { ins: vec![1], tt: 0b01 },
+    ];
+    let nl = Netlist::from_parts(
+        nodes,
+        vec![("y".into(), vec![3])],
+        vec![("a".into(), vec![0])],
+    );
+    let diags = lint_netlist(&nl);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    let d = &diags[0];
+    assert_eq!(d.code, DiagCode::CombLoop);
+    assert_eq!(d.code.as_str(), "AN103");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(
+        d.message.contains("1 -> 2 -> 3 -> 1"),
+        "cycle path should be spelled out: {}",
+        d.message
+    );
+}
+
+#[test]
+fn injected_double_driven_net_is_exactly_an101() {
+    // An input-bus bit bound onto a LUT output: the binding would
+    // clobber a logic driver every cycle.
+    let nodes = vec![
+        Node::Input("a".into()),
+        Node::Lut { ins: vec![0], tt: 0b01 },
+    ];
+    let nl = Netlist::from_parts(
+        nodes,
+        vec![("y".into(), vec![1])],
+        vec![("a".into(), vec![0]), ("b".into(), vec![1])],
+    );
+    let diags = lint_netlist(&nl);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    let d = &diags[0];
+    assert_eq!(d.code, DiagCode::MultiDriver);
+    assert_eq!(d.code.as_str(), "AN101");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(d.message.contains("driven by a LUT"), "{}", d.message);
+}
+
+// ---------------------------------------------------------------------
+// Injected plan defects (pass 4) — against the real fused corpus.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dropped_cut_entry_on_fused_corpus_is_exactly_an402() {
+    let fused = fused_corpus();
+    let mut plan = ShardPlan::partition(&fused, 4);
+    assert!(plan.cut_cost() > 0, "K=4 corpus plan should have cut traffic");
+
+    let dropped = if let Some(c) = plan.cuts.reg_cuts.pop() {
+        c
+    } else if let Some(c) = plan.cuts.comb_cuts.pop() {
+        c
+    } else {
+        plan.cuts.dff_cuts.pop().expect("plan with cut_cost > 0 has an entry")
+    };
+    // Keep the refine report consistent so the *only* defect visible is
+    // the missing entry — the test pins AN402, not AN405.
+    plan.refinement.refined_cut_cost = plan.cut_cost();
+
+    let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    let d = &diags[0];
+    assert_eq!(d.code, DiagCode::MissingCut);
+    assert_eq!(d.code.as_str(), "AN402");
+    assert_eq!(d.severity, Severity::Error);
+    assert!(
+        d.message.contains(&format!("net {}", dropped.net)),
+        "finding should name the dropped net: {}",
+        d.message
+    );
+}
+
+#[test]
+fn corrupted_scatter_index_on_fused_corpus_is_an404() {
+    let fused = fused_corpus();
+    let plan = ShardPlan::partition(&fused, 4);
+    let mut members = fused.members.clone();
+    members[1].net_range.0 += 1; // gap: member ranges no longer tile
+
+    let diags = preflight_plan(&fused.netlist, &members, &plan);
+    assert!(!diags.is_empty());
+    assert!(
+        diags.iter().all(|d| d.code == DiagCode::ScatterCorrupt),
+        "{diags:?}"
+    );
+    assert_eq!(diags[0].code.as_str(), "AN404");
+    assert_eq!(diags[0].severity, Severity::Error);
+}
+
+// ---------------------------------------------------------------------
+// Injected Q-format defect (pass 2) — through the real flow stage.
+// ---------------------------------------------------------------------
+
+#[test]
+fn shrunk_qformat_flags_unrepresentable_constant_an203() {
+    // Q3.2 tops out at 7.75; the pendulum's Newton model carries
+    // g = 9.80665 as a compiled-in constant, so the proven range of the
+    // constant no longer fits the format. A warning, not an error: the
+    // constant saturates deterministically, it does not corrupt state.
+    let config = FlowConfig { qformat: QFormat::new(3, 2), ..FlowConfig::default() };
+    let mut flow = Flow::for_system("pendulum", config).unwrap();
+    let report = flow.analysis().unwrap();
+    let hits: Vec<_> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.code == DiagCode::QConstUnrepresentable)
+        .collect();
+    assert!(!hits.is_empty(), "{:?}", report.diagnostics);
+    assert_eq!(hits[0].code.as_str(), "AN203");
+    assert_eq!(hits[0].severity, Severity::Warning);
+    assert!(
+        !report.has_errors(),
+        "interval findings are warnings; nothing here should block boot: {:?}",
+        report.diagnostics
+    );
+}
+
+// ---------------------------------------------------------------------
+// Pristine corpus: clean everywhere, computed once.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pristine_corpus_analyzes_clean_and_memoized() {
+    for entry in corpus() {
+        let mut flow = Flow::for_system(entry.id, FlowConfig::default()).unwrap();
+        let report = flow.analysis().unwrap();
+        assert!(
+            report.is_clean(),
+            "{}: pristine corpus must lint clean: {:?}",
+            entry.id,
+            report.diagnostics
+        );
+        assert_eq!(report.system, entry.id);
+        assert_eq!(flow.counts().analyze, 1, "{}", entry.id);
+        // Re-query is a memo hit, not a recompute.
+        let again = flow.analysis().unwrap();
+        assert!(again.is_clean());
+        assert_eq!(flow.counts().analyze, 1, "{}: analysis must be memoized", entry.id);
+    }
+}
+
+#[test]
+fn pristine_fused_corpus_preflights_clean_at_every_k() {
+    let fused = fused_corpus();
+    for k in [1usize, 2, 4, 8] {
+        let plan = ShardPlan::partition(&fused, k);
+        let diags = preflight_plan(&fused.netlist, &fused.members, &plan);
+        assert!(diags.is_empty(), "K={k}: {diags:?}");
+    }
+}

@@ -190,7 +190,8 @@ fn small_config(width: LaneWidth) -> FlowConfig {
 /// A restarted serve process pointed at the same `--cache-dir` must
 /// boot every previously compiled system warm: zero recomputes, and
 /// lazily — only the design + netlist artifacts each endpoint actually
-/// serves from are deserialized.
+/// serves from, plus the analysis report the boot gate reads, are
+/// deserialized.
 #[test]
 fn serveset_reboots_warm_with_zero_recomputes() {
     let dir = std::env::temp_dir()
@@ -211,11 +212,12 @@ fn serveset_reboots_warm_with_zero_recomputes() {
     let warm = ServeSet::boot(&systems, small_config(LaneWidth::W64), Some(store)).unwrap();
     let counts = warm.total_counts();
     assert_eq!(counts.recomputes(), 0, "warm serve boot must recompute nothing: {counts:?}");
-    // Lazy boot: exactly the rtl + netlist artifact per system, nothing
-    // upstream.
+    // Lazy boot: exactly the rtl + netlist artifacts each endpoint
+    // serves from plus the analysis report the boot gate checks —
+    // nothing upstream.
     assert_eq!(
         counts.disk_hits,
-        2 * systems.len() as u32,
+        3 * systems.len() as u32,
         "warm boot must load only what serving needs: {counts:?}"
     );
     let warm_cells: Vec<usize> =
